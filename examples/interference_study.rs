@@ -1,0 +1,64 @@
+//! Interference study: sweep every Table-1 scenario against every model
+//! and print how much of the peak throughput each policy sustains —
+//! a compact, single-scenario-at-a-time view of the paper's §4.2 story.
+//!
+//!   cargo run --release --example interference_study [-- --queries 2000]
+
+use anyhow::Result;
+use odin::cli::Command;
+use odin::coordinator::optimal_config;
+use odin::database::synth::synthesize;
+use odin::interference::{catalogue, Schedule};
+use odin::models;
+use odin::simulator::{simulate, Policy, SimConfig, SimSummary};
+
+fn main() -> Result<()> {
+    let cmd = Command::new("interference_study", "per-scenario policy comparison")
+        .flag("queries", "2000", "queries per window")
+        .flag("model", "vgg16", "model spec")
+        .flag("seed", "42", "rng seed");
+    let args = match cmd.parse(&std::env::args().skip(1).collect::<Vec<_>>()) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return Ok(());
+        }
+    };
+    let spec = models::build(args.get("model"), 64).expect("model");
+    let db = synthesize(&spec, args.u64("seed")?);
+    let queries = args.usize("queries")?;
+
+    println!(
+        "# sustained throughput (% of peak) under each scenario, pinned to EP 2"
+    );
+    println!(
+        "{:<16} {:>9} {:>9} {:>9} {:>9} {:>11}",
+        "scenario", "static", "lls", "odin_a2", "odin_a10", "constrained"
+    );
+    for s in catalogue() {
+        // scenario active on EP 2 for the whole window
+        let schedule = Schedule::from_events(4, queries, &[(0, 2, s.id, queries)]);
+        let sc = schedule.at(0).clone();
+        let (_, b) = optimal_config(&db, &sc, 4);
+        let mut row = format!("{:<16}", s.label());
+        for policy in [
+            Policy::Static,
+            Policy::Lls,
+            Policy::Odin { alpha: 2 },
+            Policy::Odin { alpha: 10 },
+        ] {
+            let r = simulate(&db, &schedule, &SimConfig::new(4, policy));
+            let su = SimSummary::of(&r);
+            row += &format!(" {:>8.1}%", 100.0 * su.throughput.p50 / r.peak_throughput);
+        }
+        let peak = {
+            let clean = vec![0usize; 4];
+            let (_, b0) = optimal_config(&db, &clean, 4);
+            1.0 / b0
+        };
+        row += &format!(" {:>10.1}%", 100.0 * (1.0 / b) / peak);
+        println!("{row}");
+    }
+    println!("# shape: odin tracks the constrained column; lls lags; static worst");
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Quickstart: load the AOT artifacts, verify kernel numerics against the
+//! python gold tensors, and run one end-to-end VGG16 inference through a
+//! 4-stage pipeline configuration.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use odin::coordinator::optimal_config;
+use odin::database::synth::synthesize;
+use odin::models;
+use odin::pipeline::PipelineConfig;
+use odin::runtime::{Manifest, ModelRuntime};
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load("artifacts")?;
+    println!("artifacts: spatial={} batch={}", manifest.spatial, manifest.batch);
+
+    let model = manifest.model("vgg16").expect("vgg16 artifacts missing");
+    println!("loading vgg16: {} units ...", model.units.len());
+    let rt = ModelRuntime::load(model)?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // 1. numerics: every gold-equipped unit must match the python oracle
+    let (checked, worst) = rt.verify_gold(1e-3)?;
+    println!("gold check: {checked} units verified, max |delta| = {worst:.2e}");
+
+    // 2. pick the balanced 4-stage configuration (interference-free optimum
+    //    from the synthetic database) and run one query through the stages
+    let spec = models::vgg16(manifest.spatial);
+    let db = synthesize(&spec, 7);
+    let (config, bottleneck) = optimal_config(&db, &vec![0usize; 4], 4);
+    println!(
+        "balanced config {config}  (est. bottleneck {:.2} ms, est. peak {:.1} q/s)",
+        bottleneck * 1e3,
+        1.0 / bottleneck
+    );
+
+    let mut act = rt.example_input();
+    let cfg: &PipelineConfig = &config;
+    let t0 = std::time::Instant::now();
+    for (s, (start, end)) in cfg.ranges().into_iter().enumerate() {
+        if start == end {
+            continue;
+        }
+        let st = std::time::Instant::now();
+        act = rt.run_range(start, end, &act)?;
+        println!(
+            "  stage {s}: units {start:>2}..{end:<2} -> {:?}  ({:.1} ms)",
+            act.shape,
+            st.elapsed().as_secs_f64() * 1e3
+        );
+    }
+    println!(
+        "end-to-end inference: {:.1} ms, logits[0..5] = {:?}",
+        t0.elapsed().as_secs_f64() * 1e3,
+        &act.data[..5.min(act.data.len())]
+    );
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Scalability study (Fig 10 interactive variant): ResNet-152 across EP
+//! counts, with per-EP latency/throughput and the oracle ceiling.
+//!
+//!   cargo run --release --example scalability [-- --queries 2000]
+
+use anyhow::Result;
+use odin::cli::Command;
+use odin::database::synth::synthesize;
+use odin::interference::{RandomInterference, Schedule};
+use odin::models;
+use odin::simulator::{simulate, Policy, SimConfig, SimSummary};
+
+fn main() -> Result<()> {
+    let cmd = Command::new("scalability", "ResNet-152 EP scaling study")
+        .flag("queries", "2000", "queries per window")
+        .flag("alpha", "10", "ODIN exploration budget")
+        .flag("seed", "42", "rng seed");
+    let args = match cmd.parse(&std::env::args().skip(1).collect::<Vec<_>>()) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return Ok(());
+        }
+    };
+    let spec = models::resnet152(64);
+    let db = synthesize(&spec, args.u64("seed")?);
+    let queries = args.usize("queries")?;
+    let alpha = args.usize("alpha")?;
+
+    println!("# ResNet-152 ({} units), interference period 10 / duration 10", spec.num_units());
+    println!(
+        "{:>4} {:>12} {:>12} {:>11} {:>11} {:>10}",
+        "EPs", "lat_mean(ms)", "lat_p99(ms)", "odin(q/s)", "oracle(q/s)", "peak(q/s)"
+    );
+    for eps in [4usize, 8, 13, 26, 39, 52] {
+        let schedule = Schedule::random(
+            eps,
+            queries,
+            RandomInterference {
+                period: 10,
+                duration: 10,
+                seed: args.u64("seed")? ^ eps as u64,
+                p_active: 1.0,
+            },
+        );
+        let r = simulate(&db, &schedule, &SimConfig::new(eps, Policy::Odin { alpha }));
+        let o = simulate(&db, &schedule, &SimConfig::new(eps, Policy::Oracle));
+        let s = SimSummary::of(&r);
+        let so = SimSummary::of(&o);
+        println!(
+            "{:>4} {:>12.2} {:>12.2} {:>11.2} {:>11.2} {:>10.2}",
+            eps,
+            s.latency.mean * 1e3,
+            s.latency.p99 * 1e3,
+            s.throughput.p50,
+            so.throughput.p50,
+            r.peak_throughput,
+        );
+    }
+    println!("# shape: latency flat-ish, throughput rises with EPs, odin tracks oracle");
+    Ok(())
+}

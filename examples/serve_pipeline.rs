@@ -1,0 +1,107 @@
+//! End-to-end serving driver — the full stack on a real workload:
+//!
+//!   AOT HLO artifacts (JAX+Pallas) → PJRT runtime → bind-to-stage
+//!   pipeline server → real co-located interference (iBench-style
+//!   stressors) → online ODIN rebalancing → latency/throughput report.
+//!
+//! Phases:
+//!   1. clean serving (baseline latency/throughput),
+//!   2. a CPU stressor co-locates mid-stream → monitor detects the
+//!      bottleneck inflation → ODIN rebalances live (serial probes),
+//!   3. stressor leaves → ODIN reclaims the configuration.
+//!
+//!   make artifacts && cargo run --release --example serve_pipeline
+//!
+//! Flags: --queries N (default 36), --model vgg16, --alpha K (default 2)
+
+use std::time::Instant;
+
+use anyhow::Result;
+use odin::cli::Command;
+use odin::coordinator::optimal_config;
+use odin::database::synth::synthesize;
+use odin::interference::{Scenario, StressKind, Placement, Stressor};
+use odin::models;
+use odin::runtime::{ExecService, Manifest, Tensor};
+use odin::serving::{PipelineServer, ServeReport, ServerOpts};
+
+fn main() -> Result<()> {
+    let cmd = Command::new("serve_pipeline", "end-to-end serving demo")
+        .flag("queries", "36", "queries per phase")
+        .flag("model", "vgg16", "model artifacts to serve")
+        .flag("alpha", "2", "ODIN exploration budget")
+        .flag("stress-threads", "4", "stressor thread count");
+    let args = match cmd.parse(&std::env::args().skip(1).collect::<Vec<_>>()) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return Ok(());
+        }
+    };
+    let queries = args.usize("queries")?;
+    let model_name = args.get("model").to_string();
+    let alpha = args.usize("alpha")?;
+
+    let manifest = Manifest::load("artifacts")?;
+    let model = manifest
+        .model(&model_name)
+        .unwrap_or_else(|| panic!("{model_name} not in artifacts"));
+    println!("== loading {model_name} ({} units) ==", model.units.len());
+    let service = ExecService::spawn(model.clone())?;
+
+    // initial balanced 4-stage config from the synthetic database
+    let spec = models::build(&model_name, manifest.spatial).unwrap();
+    let db = synthesize(&spec, 7);
+    let (config, _) = optimal_config(&db, &vec![0usize; 4], 4);
+    println!("initial config {config}");
+
+    let opts = ServerOpts { alpha, ..ServerOpts::default() };
+    let mut server = PipelineServer::new(service.handle(), config, opts);
+
+    let mk_inputs = |n: usize, seed: u64| -> Vec<Tensor> {
+        (0..n)
+            .map(|i| Tensor::random(&model.input_shape, seed + i as u64, 1.0))
+            .collect()
+    };
+
+    // ---- phase 1: clean -------------------------------------------------
+    println!("\n== phase 1: no interference ({queries} queries) ==");
+    let t0 = Instant::now();
+    let clean = server.serve(mk_inputs(queries, 1))?;
+    ServeReport::of(&clean, t0.elapsed().as_secs_f64()).print("clean   ");
+
+    // ---- phase 2: co-located stressor -----------------------------------
+    let scenario = Scenario {
+        id: 3,
+        kind: StressKind::Cpu,
+        threads: args.usize("stress-threads")?,
+        placement: Placement::SameCores,
+    };
+    println!(
+        "\n== phase 2: stressor {} colocated ({queries} queries) ==",
+        scenario.label()
+    );
+    let stress = Stressor::launch(scenario, None);
+    let t0 = Instant::now();
+    let dirty = server.serve(mk_inputs(queries, 1000))?;
+    ServeReport::of(&dirty, t0.elapsed().as_secs_f64()).print("interf  ");
+    let work = stress.stop();
+    println!("stressor iterations: {work}");
+
+    // ---- phase 3: interference gone -------------------------------------
+    println!("\n== phase 3: interference removed ({queries} queries) ==");
+    let t0 = Instant::now();
+    let after = server.serve(mk_inputs(queries, 2000))?;
+    ServeReport::of(&after, t0.elapsed().as_secs_f64()).print("restored");
+
+    println!("\nrebalancing episodes: {}", server.rebalance_log.len());
+    for ev in &server.rebalance_log {
+        println!(
+            "  at query {:>3}: {} -> {}  ({} serial probes)",
+            ev.at_query, ev.old_config, ev.new_config, ev.trials
+        );
+    }
+    println!("final config {}", server.config());
+    println!("\nserve_pipeline OK");
+    Ok(())
+}

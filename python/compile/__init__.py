@@ -1,0 +1,5 @@
+"""Build-time compile path (L1 Pallas kernels + L2 JAX models + AOT).
+
+Never imported at serving time — the rust binary only consumes the HLO text
+artifacts this package emits.
+"""

@@ -1,0 +1,179 @@
+"""AOT compile path: lower every model unit to HLO text + manifest.
+
+This is the ONLY python entrypoint in the system; it runs once at build time
+(`make artifacts`) and produces:
+
+  artifacts/manifest.json                     — machine-readable index
+  artifacts/<model>/uNN_<name>.hlo.txt        — one HLO module per unit
+  artifacts/<model>/gold/uNN.{in,out,pK}.bin  — f32 LE gold tensors for
+                                                small units (rust runtime
+                                                integration tests)
+
+HLO *text* is the interchange format, NOT `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import ModelDef, Unit, build
+
+# Units whose total tensor volume (input + output + params) is below this
+# many f32 elements get gold files dumped for the rust integration tests.
+GOLD_ELEM_BUDGET = 1_500_000
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the smoke-verified recipe)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_unit(unit: Unit) -> str:
+    specs = [jax.ShapeDtypeStruct(unit.in_shape, jnp.float32)] + [
+        jax.ShapeDtypeStruct(s, jnp.float32) for s in unit.param_shapes
+    ]
+    lowered = jax.jit(unit.apply).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def _dump_bin(path: str, arr: jax.Array) -> None:
+    np.asarray(arr, dtype="<f4").tofile(path)
+
+
+def export_model(
+    model: ModelDef, out_dir: str, *, seed: int, gold: bool, verbose: bool
+) -> dict:
+    mdir = os.path.join(out_dir, model.name)
+    gdir = os.path.join(mdir, "gold")
+    os.makedirs(mdir, exist_ok=True)
+    os.makedirs(gdir, exist_ok=True)
+
+    params = model.init_params(seed)
+    # Deterministic input for the gold chain.
+    x = jax.random.uniform(
+        jax.random.PRNGKey(seed), model.input_shape, jnp.float32
+    )
+
+    units_meta = []
+    for ui, unit in enumerate(model.units):
+        hlo_rel = f"{model.name}/u{ui:02d}_{unit.name}.hlo.txt"
+        hlo_path = os.path.join(out_dir, hlo_rel)
+        text = lower_unit(unit)
+        with open(hlo_path, "w") as f:
+            f.write(text)
+
+        y = unit.apply(x, *params[ui])
+        assert tuple(y.shape) == tuple(unit.out_shape), (
+            f"{model.name}/{unit.name}: traced out shape {y.shape} "
+            f"!= declared {unit.out_shape}"
+        )
+
+        volume = (
+            int(np.prod(unit.in_shape))
+            + int(np.prod(unit.out_shape))
+            + sum(int(np.prod(s)) for s in unit.param_shapes)
+        )
+        gold_meta = None
+        if gold and volume <= GOLD_ELEM_BUDGET:
+            gin = f"{model.name}/gold/u{ui:02d}.in.bin"
+            gout = f"{model.name}/gold/u{ui:02d}.out.bin"
+            _dump_bin(os.path.join(out_dir, gin), x)
+            _dump_bin(os.path.join(out_dir, gout), y)
+            gps = []
+            for pi, p in enumerate(params[ui]):
+                gp = f"{model.name}/gold/u{ui:02d}.p{pi}.bin"
+                _dump_bin(os.path.join(out_dir, gp), p)
+                gps.append(gp)
+            gold_meta = {"input": gin, "output": gout, "params": gps}
+
+        units_meta.append(
+            {
+                "index": ui,
+                "name": unit.name,
+                "kind": unit.kind,
+                "hlo": hlo_rel,
+                "in_shape": list(unit.in_shape),
+                "out_shape": list(unit.out_shape),
+                "param_shapes": [list(s) for s in unit.param_shapes],
+                "flops": unit.flops,
+                "gold": gold_meta,
+            }
+        )
+        if verbose:
+            print(
+                f"  [{model.name}] u{ui:02d} {unit.name:<12} "
+                f"{len(text):>8} chars  flops={unit.flops:.3e}"
+                + ("  +gold" if gold_meta else "")
+            )
+        x = y
+
+    return {
+        "name": model.name,
+        "input_shape": list(model.input_shape),
+        "num_units": model.num_units,
+        "seed": seed,
+        "units": units_meta,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="compile.aot", description=__doc__.splitlines()[0]
+    )
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--models",
+        default="vgg16,resnet50",
+        help="comma-separated: vgg16,resnet50,resnet152",
+    )
+    ap.add_argument("--spatial", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-gold", action="store_true")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {
+        "format": 1,
+        "spatial": args.spatial,
+        "batch": args.batch,
+        "models": {},
+    }
+    for name in args.models.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        model = build(name, spatial=args.spatial, batch=args.batch)
+        print(f"lowering {name}: {model.num_units} units ...")
+        manifest["models"][name] = export_model(
+            model,
+            args.out,
+            seed=args.seed,
+            gold=not args.no_gold,
+            verbose=not args.quiet,
+        )
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

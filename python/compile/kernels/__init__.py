@@ -1,0 +1,14 @@
+"""L1 Pallas kernels (build-time only; lowered into per-unit HLO)."""
+
+from .conv2d import conv2d, scale_shift
+from .matmul import linear, matmul
+from .pool import global_avgpool, maxpool2d
+
+__all__ = [
+    "conv2d",
+    "scale_shift",
+    "matmul",
+    "linear",
+    "maxpool2d",
+    "global_avgpool",
+]

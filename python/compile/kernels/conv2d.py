@@ -1,0 +1,90 @@
+"""L1 Pallas kernel: conv2d as im2col + tiled MXU matmul.
+
+The paper's pipeline stages are dominated by convolution layers; on TPU the
+profitable formulation is not a thread-block direct convolution (the GPU
+idiom) but an im2col gather feeding the MXU systolic array — see DESIGN.md
+§Hardware-Adaptation. The gather is cheap data movement that XLA fuses; the
+FLOPs all land in the Pallas matmul kernel (kernels/matmul.py).
+
+All convs here are NHWC, stride `s`, SAME or VALID padding, fused optional
+bias + ReLU (one lowered unit per layer keeps the HLO fusion-friendly,
+DESIGN.md §Perf L2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .matmul import matmul
+
+
+def _im2col(
+    x: jax.Array, kh: int, kw: int, stride: int, padding: str
+) -> tuple[jax.Array, int, int]:
+    """Extract (N*Ho*Wo, kh*kw*C) patches from NHWC input."""
+    n, h, w, c = x.shape
+    patches = lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    # conv_general_dilated_patches yields channels ordered as (C, kh, kw)
+    # on the last axis; reorder to (kh, kw, C) to match HWIO weights.
+    ho, wo = patches.shape[1], patches.shape[2]
+    patches = patches.reshape(n, ho, wo, c, kh, kw)
+    patches = patches.transpose(0, 1, 2, 4, 5, 3)
+    return patches.reshape(n * ho * wo, kh * kw * c), ho, wo
+
+
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array | None = None,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    relu: bool = False,
+) -> jax.Array:
+    """2-D convolution via im2col + Pallas matmul.
+
+    Args:
+      x: NHWC input `(n, h, w, cin)`.
+      w: HWIO weights `(kh, kw, cin, cout)`.
+      b: optional `(cout,)` bias, fused.
+      stride: spatial stride (same for h and w).
+      padding: "SAME" or "VALID".
+      relu: fuse a ReLU on the output.
+    """
+    if x.ndim != 4 or w.ndim != 4:
+        raise ValueError(f"conv2d expects NHWC x and HWIO w, got {x.shape}, {w.shape}")
+    if x.shape[3] != w.shape[2]:
+        raise ValueError(f"channel mismatch: x {x.shape} vs w {w.shape}")
+    n = x.shape[0]
+    kh, kw, cin, cout = w.shape
+    cols, ho, wo = _im2col(x, kh, kw, stride, padding)
+    y = matmul(cols, w.reshape(kh * kw * cin, cout))
+    y = y.reshape(n, ho, wo, cout)
+    if b is not None:
+        y = y + b[None, None, None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def scale_shift(
+    x: jax.Array, scale: jax.Array, shift: jax.Array, *, relu: bool = False
+) -> jax.Array:
+    """Inference-time batch-norm: per-channel `x*scale + shift`.
+
+    At inference BN folds to an affine transform of the conv output; keeping
+    it a separate (scale, shift) pair rather than folding into the conv
+    weights lets the rust runtime reuse one conv artifact across BN variants.
+    """
+    y = x * scale[None, None, None, :] + shift[None, None, None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y

@@ -1,0 +1,123 @@
+"""L1 Pallas kernel: tiled matmul — the compute hot-spot of every CNN unit.
+
+The convolution layers are lowered to im2col + this matmul (see conv2d.py),
+so a single well-tuned contraction kernel carries the whole model, exactly
+like the MXU systolic array would on a real TPU.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation):
+  * grid = (M/bm, N/bn, K/bk) with K innermost, so A- and B-tiles stream
+    through VMEM while the output tile stays resident and accumulates —
+    the Pallas idiom for double-buffered MXU accumulation.
+  * block sizes default to 128×128×128: (bm*bk + bk*bn + bm*bn) * 4 B
+    ≈ 196 KiB of VMEM, far under the ~16 MiB budget, leaving headroom for
+    double buffering.
+  * `preferred_element_type=jnp.float32` keeps the accumulator in f32 even
+    for bf16 inputs (MXU-native mixed precision).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO for both the pytest
+oracle checks and the rust serving runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile shape (CPU-interpret path). The MXU systolic dimension is
+# 128, so every dim stays a 128-multiple; bk/bn are much fatter than the
+# square 128^3 tile because interpret-mode cost is dominated by grid-step
+# count — EXPERIMENTS.md §Perf L1 logs the measured 31x end-to-end win.
+# On a real TPU use (128, 512, 512): (bm*bk + bk*bn + bm*bn)*4B ≈ 1.6 MiB
+# double-buffers comfortably inside the ~16 MiB VMEM budget, while the
+# shipped CPU defaults (≈9.6 MiB) would not.
+DEFAULT_BM = 128
+DEFAULT_BN = 1024
+DEFAULT_BK = 2048
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, nk: int):
+    """One (bm, bn) output tile; program_id(2) walks the K dimension.
+
+    The output block index map ignores the K coordinate, so Pallas keeps the
+    same o_ref block resident across all nk iterations — it is the f32
+    accumulator.
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret")
+)
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,
+) -> jax.Array:
+    """`x @ w` via the Pallas tiled kernel.
+
+    Arbitrary (M, K) x (K, N) shapes: inputs are zero-padded up to tile
+    multiples and the result is sliced back. Accumulation is f32; the output
+    dtype follows x.
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"matmul expects 2-D operands, got {x.shape} @ {w.shape}")
+    if x.shape[1] != w.shape[0]:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    m, k = x.shape
+    _, n = w.shape
+    # Shrink tiles for small operands so tiny layers don't pay 128x padding.
+    bm = min(bm, _round_up(m, 8))
+    bn = min(bn, _round_up(n, 8))
+    bk = min(bk, _round_up(k, 8))
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = _pad_to(x, mp, kp)
+    wp = _pad_to(w, kp, np_)
+    nk = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n].astype(x.dtype)
+
+
+def linear(
+    x: jax.Array, w: jax.Array, b: jax.Array, *, relu: bool = False
+) -> jax.Array:
+    """Dense layer on the Pallas matmul: y = x @ w + b, optional ReLU."""
+    y = matmul(x, w) + b[None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y

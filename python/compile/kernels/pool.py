@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: max pooling.
+
+Pooling is bandwidth- not FLOP-bound, so the TPU formulation keeps whole
+spatial tiles resident in VMEM and reduces over the (kh, kw) window with
+vector max ops — there is no MXU work here. One grid step per batch image;
+channels stay vectorized on the last (lane) axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _maxpool_kernel(x_ref, o_ref, *, k: int, stride: int, ho: int, wo: int):
+    x = x_ref[...]  # (1, h, w, c) block
+    # Strided window max: unrolled over the k*k window offsets (k is tiny,
+    # 2 or 3), each term a strided slice — pure VPU work, no gathers.
+    acc = None
+    for dy in range(k):
+        for dx in range(k):
+            sl = x[
+                :,
+                dy : dy + stride * ho : stride,
+                dx : dx + stride * wo : stride,
+                :,
+            ]
+            acc = sl if acc is None else jnp.maximum(acc, sl)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("k", "stride", "interpret"))
+def maxpool2d(
+    x: jax.Array, *, k: int = 2, stride: int = 2, interpret: bool = True
+) -> jax.Array:
+    """VALID max-pool over NHWC with a k×k window."""
+    if x.ndim != 4:
+        raise ValueError(f"maxpool2d expects NHWC, got {x.shape}")
+    n, h, w, c = x.shape
+    ho = (h - k) // stride + 1
+    wo = (w - k) // stride + 1
+    kern = functools.partial(_maxpool_kernel, k=k, stride=stride, ho=ho, wo=wo)
+    return pl.pallas_call(
+        kern,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, ho, wo, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, c), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def global_avgpool(x: jax.Array) -> jax.Array:
+    """Global average pool NHWC -> (N, C). Reduction, left to XLA to fuse."""
+    return jnp.mean(x, axis=(1, 2))

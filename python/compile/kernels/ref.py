@@ -1,0 +1,55 @@
+"""Pure-jnp correctness oracles for every Pallas kernel.
+
+These are the ground truth the pytest/hypothesis suite checks the kernels
+against (`assert_allclose`). No pallas imports here — plain jax.numpy and
+lax reference semantics only.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)).astype(x.dtype)
+
+
+def linear_ref(x, w, b, *, relu: bool = False):
+    y = matmul_ref(x, w) + b[None, :]
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def conv2d_ref(x, w, b=None, *, stride: int = 1, padding: str = "SAME",
+               relu: bool = False):
+    y = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if b is not None:
+        y = y + b[None, None, None, :]
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def scale_shift_ref(x, scale, shift, *, relu: bool = False):
+    y = x * scale[None, None, None, :] + shift[None, None, None, :]
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def maxpool2d_ref(x, *, k: int = 2, stride: int = 2):
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(1, k, k, 1),
+        window_strides=(1, stride, stride, 1),
+        padding="VALID",
+    )
+
+
+def global_avgpool_ref(x):
+    return jnp.mean(x, axis=(1, 2))

@@ -1,0 +1,333 @@
+"""L2 JAX model definitions: CNN inference pipelines as schedulable units.
+
+The paper schedules *network layers* onto pipeline stages. Here each model
+is a list of `Unit`s — the indivisible things the rust coordinator may group
+into stages:
+
+  * VGG16        → 16 units (13 conv[+pool] + 3 dense), as in the paper.
+  * ResNet-50    → 18 units (stem + 16 bottleneck blocks + classifier).
+  * ResNet-152   → 52 units (stem + 50 bottleneck blocks + classifier),
+                   matching the paper's "residual blocks as a single unit …
+                   maximum number of pipeline stages is 52".
+
+Each unit is a pure jax function `(x, *params) -> y` built on the L1 Pallas
+kernels, lowered *separately* to HLO text by aot.py so the rust runtime can
+execute any layer→stage grouping the rebalancer chooses.
+
+Everything here is build-time only; nothing imports this at serving time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d, global_avgpool, linear, maxpool2d, scale_shift
+
+
+@dataclasses.dataclass
+class Unit:
+    """One schedulable pipeline unit (a 'layer' in the paper's terms)."""
+
+    name: str
+    kind: str  # conv | conv_pool | dense | stem | block | classifier
+    apply: Callable  # (x, *params) -> y
+    param_shapes: list[tuple[int, ...]]
+    in_shape: tuple[int, ...]
+    out_shape: tuple[int, ...]
+    flops: int  # MAC-based FLOP estimate, drives the synthetic database
+
+
+@dataclasses.dataclass
+class ModelDef:
+    name: str
+    input_shape: tuple[int, ...]
+    units: list[Unit]
+
+    @property
+    def num_units(self) -> int:
+        return len(self.units)
+
+    def forward(self, x: jax.Array, params: Sequence[Sequence[jax.Array]]):
+        """Full-model forward: chain every unit (pytest oracle for AOT)."""
+        for unit, p in zip(self.units, params):
+            x = unit.apply(x, *p)
+        return x
+
+    def init_params(self, seed: int = 0) -> list[list[jax.Array]]:
+        """Deterministic He-style params for every unit.
+
+        The same (seed, unit, index) derivation is documented in the AOT
+        manifest so gold tensors are reproducible.
+        """
+        out = []
+        for ui, unit in enumerate(self.units):
+            key = jax.random.PRNGKey(seed * 7919 + ui)
+            ps = []
+            for pi, shape in enumerate(unit.param_shapes):
+                k = jax.random.fold_in(key, pi)
+                if len(shape) == 1:
+                    # biases / BN shifts start at 0, BN scales at 1 — encode
+                    # scale-vs-shift by parameter position (scale first).
+                    ps.append(
+                        jnp.ones(shape, jnp.float32)
+                        if _is_scale(unit, pi)
+                        else jnp.zeros(shape, jnp.float32)
+                    )
+                else:
+                    fan_in = 1
+                    for d in shape[:-1]:
+                        fan_in *= d
+                    std = (2.0 / fan_in) ** 0.5
+                    ps.append(std * jax.random.normal(k, shape, jnp.float32))
+            out.append(ps)
+        return out
+
+
+def _is_scale(unit: Unit, pi: int) -> bool:
+    """BN scale params are the even-positioned 1-D params in BN-ful units."""
+    if unit.kind not in ("stem", "block"):
+        return False
+    # param layout in BN units: (..., w, scale, shift, w, scale, shift, ...)
+    # → a 1-D param directly following a >=2-D param is a scale.
+    return pi > 0 and len(unit.param_shapes[pi]) == 1 and len(
+        unit.param_shapes[pi - 1]
+    ) > 1
+
+
+# ---------------------------------------------------------------------------
+# FLOP accounting (2 * MACs for convs/matmuls, elementwise ~1/elem)
+# ---------------------------------------------------------------------------
+
+
+def _conv_flops(out_shape, kh, kw, cin) -> int:
+    n, h, w, cout = out_shape
+    return 2 * n * h * w * cout * kh * kw * cin
+
+
+def _dense_flops(m, k, n) -> int:
+    return 2 * m * k * n
+
+
+# ---------------------------------------------------------------------------
+# VGG16
+# ---------------------------------------------------------------------------
+
+_VGG_PLAN = [
+    # (name, cout, pool_after)
+    ("conv1_1", 64, False),
+    ("conv1_2", 64, True),
+    ("conv2_1", 128, False),
+    ("conv2_2", 128, True),
+    ("conv3_1", 256, False),
+    ("conv3_2", 256, False),
+    ("conv3_3", 256, True),
+    ("conv4_1", 512, False),
+    ("conv4_2", 512, False),
+    ("conv4_3", 512, True),
+    ("conv5_1", 512, False),
+    ("conv5_2", 512, False),
+    ("conv5_3", 512, True),
+]
+
+
+def _conv_unit(pool: bool):
+    if pool:
+        def apply(x, w, b):
+            return maxpool2d(conv2d(x, w, b, relu=True), k=2, stride=2)
+    else:
+        def apply(x, w, b):
+            return conv2d(x, w, b, relu=True)
+    return apply
+
+
+def _dense_unit(relu: bool, flatten: bool):
+    def apply(x, w, b):
+        if flatten:
+            x = x.reshape(x.shape[0], -1)
+        return linear(x, w, b, relu=relu)
+    return apply
+
+
+def build_vgg16(
+    spatial: int = 64, num_classes: int = 1000, batch: int = 1,
+    fc_dim: int = 4096,
+) -> ModelDef:
+    """VGG16 as 16 schedulable units (the paper's 16 'layers').
+
+    `spatial` scales the input resolution (paper: 224; default 64 for the
+    single-core sandbox — see DESIGN.md substitutions). Pools fold into the
+    preceding conv unit, as standard for pipeline scheduling.
+    """
+    if spatial % 32 != 0:
+        raise ValueError(f"spatial must be a multiple of 32, got {spatial}")
+    units: list[Unit] = []
+    h = spatial
+    cin = 3
+    for name, cout, pool in _VGG_PLAN:
+        in_shape = (batch, h, h, cin)
+        out_h = h // 2 if pool else h
+        out_shape = (batch, out_h, out_h, cout)
+        units.append(
+            Unit(
+                name=name + ("_pool" if pool else ""),
+                kind="conv_pool" if pool else "conv",
+                apply=_conv_unit(pool),
+                param_shapes=[(3, 3, cin, cout), (cout,)],
+                in_shape=in_shape,
+                out_shape=out_shape,
+                flops=_conv_flops((batch, h, h, cout), 3, 3, cin),
+            )
+        )
+        h, cin = out_h, cout
+    flat = h * h * cin
+    dense_plan = [
+        ("fc1", flat, fc_dim, True, True),
+        ("fc2", fc_dim, fc_dim, True, False),
+        ("fc3", fc_dim, num_classes, False, False),
+    ]
+    for name, k, n, relu, flatten in dense_plan:
+        units.append(
+            Unit(
+                name=name,
+                kind="dense",
+                apply=_dense_unit(relu, flatten),
+                param_shapes=[(k, n), (n,)],
+                in_shape=(batch, h, h, cin) if flatten else (batch, k),
+                out_shape=(batch, n),
+                flops=_dense_flops(batch, k, n),
+            )
+        )
+    return ModelDef("vgg16", (batch, spatial, spatial, 3), units)
+
+
+# ---------------------------------------------------------------------------
+# ResNet-50 / ResNet-152 (bottleneck blocks as single units)
+# ---------------------------------------------------------------------------
+
+
+def _stem_apply(x, w, scale, shift):
+    y = conv2d(x, w, stride=2, padding="SAME")
+    y = scale_shift(y, scale, shift, relu=True)
+    return maxpool2d(y, k=2, stride=2)
+
+
+def _block_apply_proj(x, w1, s1, b1, w2, s2, b2, w3, s3, b3, wp, sp, bp,
+                      *, stride):
+    y = scale_shift(conv2d(x, w1), s1, b1, relu=True)
+    y = scale_shift(conv2d(y, w2, stride=stride), s2, b2, relu=True)
+    y = scale_shift(conv2d(y, w3), s3, b3)
+    sc = scale_shift(conv2d(x, wp, stride=stride), sp, bp)
+    return jnp.maximum(y + sc, 0.0)
+
+
+def _block_apply_id(x, w1, s1, b1, w2, s2, b2, w3, s3, b3):
+    y = scale_shift(conv2d(x, w1), s1, b1, relu=True)
+    y = scale_shift(conv2d(y, w2), s2, b2, relu=True)
+    y = scale_shift(conv2d(y, w3), s3, b3)
+    return jnp.maximum(y + x, 0.0)
+
+
+def _classifier_apply(x, w, b):
+    return linear(global_avgpool(x), w, b)
+
+
+def _build_resnet(
+    name: str, block_plan: list[int], spatial: int, num_classes: int,
+    batch: int,
+) -> ModelDef:
+    if spatial % 32 != 0:
+        raise ValueError(f"spatial must be a multiple of 32, got {spatial}")
+    units: list[Unit] = []
+    h = spatial // 4  # stem: /2 conv then /2 pool
+    units.append(
+        Unit(
+            name="stem",
+            kind="stem",
+            apply=_stem_apply,
+            param_shapes=[(7, 7, 3, 64), (64,), (64,)],
+            in_shape=(batch, spatial, spatial, 3),
+            out_shape=(batch, h, h, 64),
+            flops=_conv_flops((batch, spatial // 2, spatial // 2, 64), 7, 7, 3),
+        )
+    )
+    cin = 64
+    stage_width = [64, 128, 256, 512]
+    for si, nblocks in enumerate(block_plan):
+        width = stage_width[si]
+        cout = width * 4
+        for bi in range(nblocks):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            proj = bi == 0  # first block of every stage projects (or widens)
+            h_out = h // stride
+            shapes = [
+                (1, 1, cin, width), (width,), (width,),
+                (3, 3, width, width), (width,), (width,),
+                (1, 1, width, cout), (cout,), (cout,),
+            ]
+            flops = (
+                _conv_flops((batch, h, h, width), 1, 1, cin)
+                + _conv_flops((batch, h_out, h_out, width), 3, 3, width)
+                + _conv_flops((batch, h_out, h_out, cout), 1, 1, width)
+            )
+            if proj:
+                shapes += [(1, 1, cin, cout), (cout,), (cout,)]
+                flops += _conv_flops((batch, h_out, h_out, cout), 1, 1, cin)
+                apply = functools.partial(_block_apply_proj, stride=stride)
+            else:
+                apply = _block_apply_id
+            units.append(
+                Unit(
+                    name=f"b{si + 1}_{bi + 1}",
+                    kind="block",
+                    apply=apply,
+                    param_shapes=shapes,
+                    in_shape=(batch, h, h, cin),
+                    out_shape=(batch, h_out, h_out, cout),
+                    flops=flops,
+                )
+            )
+            h, cin = h_out, cout
+    units.append(
+        Unit(
+            name="classifier",
+            kind="classifier",
+            apply=_classifier_apply,
+            param_shapes=[(cin, num_classes), (num_classes,)],
+            in_shape=(batch, h, h, cin),
+            out_shape=(batch, num_classes),
+            flops=_dense_flops(batch, cin, num_classes),
+        )
+    )
+    return ModelDef(name, (batch, spatial, spatial, 3), units)
+
+
+def build_resnet50(spatial: int = 64, num_classes: int = 1000, batch: int = 1):
+    """ResNet-50 as 18 units: stem + [3,4,6,3] bottleneck blocks + classifier."""
+    return _build_resnet("resnet50", [3, 4, 6, 3], spatial, num_classes, batch)
+
+
+def build_resnet152(spatial: int = 64, num_classes: int = 1000, batch: int = 1):
+    """ResNet-152 as 52 units: stem + [3,8,36,3] blocks + classifier.
+
+    52 units exactly matches the paper's "maximum number of pipeline stages
+    ResNet152 could run with is 52".
+    """
+    return _build_resnet("resnet152", [3, 8, 36, 3], spatial, num_classes, batch)
+
+
+BUILDERS = {
+    "vgg16": build_vgg16,
+    "resnet50": build_resnet50,
+    "resnet152": build_resnet152,
+}
+
+
+def build(name: str, **kw) -> ModelDef:
+    if name not in BUILDERS:
+        raise KeyError(f"unknown model {name!r}; have {sorted(BUILDERS)}")
+    return BUILDERS[name](**kw)

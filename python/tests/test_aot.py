@@ -1,0 +1,133 @@
+"""AOT path tests: HLO text emission, manifest schema, gold tensors.
+
+These run the same lowering recipe `make artifacts` uses and parse the HLO
+text the way the rust loader's XLA parser will (entry computation,
+parameter count), so breakage shows up here before it hits rust.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import export_model, lower_unit, to_hlo_text
+from compile.model import build_vgg16, build_resnet50
+
+
+@pytest.fixture(scope="module")
+def tiny_vgg():
+    return build_vgg16(spatial=32, num_classes=8, fc_dim=32)
+
+
+def _entry_params(text: str) -> int:
+    """Count parameters of the ENTRY computation only (nested called
+    computations declare their own)."""
+    lines = text.splitlines()
+    start = next(i for i, l in enumerate(lines) if l.startswith("ENTRY"))
+    n = 0
+    for l in lines[start + 1 :]:
+        if l.startswith("}"):
+            break
+        if "parameter(" in l:
+            n += 1
+    return n
+
+
+def test_lower_unit_emits_hlo_text(tiny_vgg):
+    text = lower_unit(tiny_vgg.units[0])
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # one parameter per input: x + weight + bias
+    assert _entry_params(text) == 3
+
+
+def test_hlo_text_has_no_serialized_proto_markers(tiny_vgg):
+    """Interchange must be text — a proto blob would break xla 0.5.1."""
+    text = lower_unit(tiny_vgg.units[0])
+    assert text.isprintable() or "\n" in text
+    assert not text.startswith(b"\x08".decode("latin1"))
+
+
+def test_lowered_unit_is_tuple_rooted(tiny_vgg):
+    """return_tuple=True — the rust side unwraps with to_tuple1()."""
+    text = lower_unit(tiny_vgg.units[-1])
+    root_lines = [l for l in text.splitlines() if "ROOT" in l]
+    assert any("tuple(" in l for l in root_lines)
+
+
+def test_export_model_manifest_and_files(tiny_vgg, tmp_path):
+    meta = export_model(
+        tiny_vgg, str(tmp_path), seed=0, gold=True, verbose=False
+    )
+    assert meta["num_units"] == 16
+    for u in meta["units"]:
+        path = tmp_path / u["hlo"]
+        assert path.exists(), u["hlo"]
+        assert path.stat().st_size > 100
+        assert u["flops"] > 0
+        assert len(u["param_shapes"]) >= 2
+
+
+def test_export_gold_roundtrip(tiny_vgg, tmp_path):
+    """Gold tensors must reproduce the unit outputs exactly (bitwise f32)."""
+    meta = export_model(
+        tiny_vgg, str(tmp_path), seed=0, gold=True, verbose=False
+    )
+    checked = 0
+    for u in meta["units"]:
+        if u["gold"] is None:
+            continue
+        x = np.fromfile(tmp_path / u["gold"]["input"], "<f4").reshape(
+            u["in_shape"]
+        )
+        params = [
+            np.fromfile(tmp_path / p, "<f4").reshape(s)
+            for p, s in zip(u["gold"]["params"], u["param_shapes"])
+        ]
+        want = np.fromfile(tmp_path / u["gold"]["output"], "<f4").reshape(
+            u["out_shape"]
+        )
+        unit = tiny_vgg.units[u["index"]]
+        got = np.asarray(unit.apply(jnp.asarray(x), *map(jnp.asarray, params)))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+        checked += 1
+    assert checked >= 8  # most tiny-vgg units fit the gold budget
+
+
+def test_export_manifest_json_serializable(tiny_vgg, tmp_path):
+    meta = export_model(
+        tiny_vgg, str(tmp_path), seed=3, gold=False, verbose=False
+    )
+    blob = json.dumps(meta)
+    back = json.loads(blob)
+    assert back["seed"] == 3
+    assert all(u["gold"] is None for u in back["units"])
+
+
+def test_resnet_units_lower(tmp_path):
+    """Every distinct resnet unit kind lowers: stem, proj block, id block,
+    classifier."""
+    m = build_resnet50(spatial=32, num_classes=8)
+    for idx in (0, 1, 2, 17):
+        text = lower_unit(m.units[idx])
+        assert "HloModule" in text
+        nparams = 1 + len(m.units[idx].param_shapes)
+        assert _entry_params(text) == nparams
+
+
+def test_artifacts_dir_if_present_is_consistent():
+    """If `make artifacts` has run, validate the real manifest."""
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    mpath = os.path.join(root, "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    assert manifest["format"] == 1
+    for name, model in manifest["models"].items():
+        assert model["num_units"] == len(model["units"])
+        for u in model["units"]:
+            assert os.path.exists(os.path.join(root, u["hlo"])), u["hlo"]

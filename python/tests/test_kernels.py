@@ -1,0 +1,245 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracle.
+
+hypothesis sweeps shapes/dtypes; every property asserts allclose against
+ref.py. This is the core correctness signal for the compute layer — the
+same lowered code the rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d, linear, matmul, maxpool2d, scale_shift
+from compile.kernels import global_avgpool
+from compile.kernels.ref import (
+    conv2d_ref,
+    global_avgpool_ref,
+    linear_ref,
+    matmul_ref,
+    maxpool2d_ref,
+    scale_shift_ref,
+)
+
+SETTINGS = dict(deadline=None, max_examples=20)
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 200),
+    n=st.integers(1, 200),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    np.testing.assert_allclose(
+        matmul(x, w), matmul_ref(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 64),
+    n=st.integers(1, 64),
+    bm=st.sampled_from([8, 16, 32, 128]),
+    bn=st.sampled_from([8, 16, 32, 128]),
+    bk=st.sampled_from([8, 16, 32, 128]),
+)
+def test_matmul_block_shape_invariance(m, k, n, bm, bn, bk):
+    """Result must not depend on the tiling — only on the operands."""
+    x = _rand(7, (m, k))
+    w = _rand(8, (k, n))
+    got = matmul(x, w, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_bf16_inputs_f32_accumulate():
+    x = _rand(3, (64, 512), jnp.bfloat16)
+    w = _rand(4, (512, 64), jnp.bfloat16)
+    got = matmul(x, w).astype(jnp.float32)
+    want = jnp.dot(
+        x.astype(jnp.float32), w.astype(jnp.float32)
+    )
+    # bf16 inputs, f32 accumulation: tolerance set by input rounding only.
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-1)
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        matmul(jnp.zeros((2, 3)), jnp.zeros((4, 5)))
+    with pytest.raises(ValueError):
+        matmul(jnp.zeros((2, 3, 4)), jnp.zeros((4, 5)))
+
+
+def test_matmul_identity():
+    x = _rand(11, (32, 32))
+    np.testing.assert_allclose(
+        matmul(x, jnp.eye(32)), x, rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 48),
+    k=st.integers(1, 48),
+    n=st.integers(1, 48),
+    relu=st.booleans(),
+)
+def test_linear_matches_ref(m, k, n, relu):
+    x = _rand(1, (m, k))
+    w = _rand(2, (k, n))
+    b = _rand(3, (n,))
+    np.testing.assert_allclose(
+        linear(x, w, b, relu=relu),
+        linear_ref(x, w, b, relu=relu),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_linear_relu_clamps_negative():
+    x = -jnp.ones((4, 8))
+    w = jnp.eye(8)
+    b = jnp.zeros((8,))
+    assert (linear(x, w, b, relu=True) == 0.0).all()
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    h=st.integers(4, 24),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 16),
+    kk=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    padding=st.sampled_from(["SAME", "VALID"]),
+    relu=st.booleans(),
+)
+def test_conv2d_matches_ref(h, cin, cout, kk, stride, padding, relu):
+    if padding == "VALID" and h < kk:
+        return
+    x = _rand(1, (1, h, h, cin))
+    w = _rand(2, (kk, kk, cin, cout))
+    b = _rand(3, (cout,))
+    np.testing.assert_allclose(
+        conv2d(x, w, b, stride=stride, padding=padding, relu=relu),
+        conv2d_ref(x, w, b, stride=stride, padding=padding, relu=relu),
+        rtol=1e-3,
+        atol=1e-3,
+    )
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 3), h=st.sampled_from([8, 16]), seed=st.integers(0, 99))
+def test_conv2d_batched(n, h, seed):
+    x = _rand(seed, (n, h, h, 3))
+    w = _rand(seed + 1, (3, 3, 3, 4))
+    np.testing.assert_allclose(
+        conv2d(x, w), conv2d_ref(x, w), rtol=1e-3, atol=1e-3
+    )
+
+
+def test_conv2d_1x1_equals_pointwise_matmul():
+    """A 1x1 conv is exactly a per-pixel matmul — cross-kernel consistency."""
+    x = _rand(5, (1, 8, 8, 16))
+    w = _rand(6, (1, 1, 16, 32))
+    got = conv2d(x, w)
+    want = matmul_ref(x.reshape(64, 16), w.reshape(16, 32)).reshape(1, 8, 8, 32)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_rejects_mismatched_channels():
+    with pytest.raises(ValueError):
+        conv2d(jnp.zeros((1, 8, 8, 3)), jnp.zeros((3, 3, 4, 8)))
+
+
+def test_conv2d_same_padding_preserves_spatial():
+    x = _rand(1, (1, 13, 13, 2))
+    w = _rand(2, (3, 3, 2, 5))
+    assert conv2d(x, w).shape == (1, 13, 13, 5)
+
+
+# ---------------------------------------------------------------------------
+# scale_shift (inference BN)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(h=st.integers(1, 16), c=st.integers(1, 16), relu=st.booleans())
+def test_scale_shift_matches_ref(h, c, relu):
+    x = _rand(1, (1, h, h, c))
+    s = _rand(2, (c,))
+    t = _rand(3, (c,))
+    np.testing.assert_allclose(
+        scale_shift(x, s, t, relu=relu),
+        scale_shift_ref(x, s, t, relu=relu),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_scale_shift_identity():
+    x = _rand(9, (1, 4, 4, 8))
+    np.testing.assert_allclose(
+        scale_shift(x, jnp.ones(8), jnp.zeros(8)), x, rtol=0, atol=0
+    )
+
+
+# ---------------------------------------------------------------------------
+# pooling
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 2),
+    h=st.integers(4, 32),
+    c=st.integers(1, 8),
+    k=st.sampled_from([2, 3]),
+    stride=st.sampled_from([1, 2, 3]),
+)
+def test_maxpool_matches_ref(n, h, c, k, stride):
+    if h < k:
+        return
+    x = _rand(1, (n, h, h, c))
+    np.testing.assert_allclose(
+        maxpool2d(x, k=k, stride=stride),
+        maxpool2d_ref(x, k=k, stride=stride),
+        rtol=0,
+        atol=0,
+    )
+
+
+def test_maxpool_on_constant_is_constant():
+    x = jnp.full((1, 8, 8, 4), 3.5)
+    assert (maxpool2d(x) == 3.5).all()
+
+
+def test_maxpool_picks_single_max():
+    x = jnp.zeros((1, 4, 4, 1)).at[0, 1, 1, 0].set(9.0)
+    y = maxpool2d(x, k=2, stride=2)
+    assert y[0, 0, 0, 0] == 9.0
+
+
+def test_global_avgpool_matches_ref():
+    x = _rand(2, (2, 7, 7, 5))
+    np.testing.assert_allclose(
+        global_avgpool(x), global_avgpool_ref(x), rtol=1e-6, atol=1e-6
+    )

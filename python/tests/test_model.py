@@ -1,0 +1,133 @@
+"""L2 model tests: unit chaining, shapes, parameter specs, FLOP accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import build, build_resnet50, build_resnet152, build_vgg16
+from compile.kernels.ref import conv2d_ref, linear_ref, maxpool2d_ref
+
+
+# --------------------------------------------------------------------------
+# structure
+# --------------------------------------------------------------------------
+
+
+def test_vgg16_has_16_units():
+    assert build_vgg16(spatial=32).num_units == 16
+
+
+def test_resnet50_has_18_units():
+    assert build_resnet50(spatial=32).num_units == 18
+
+
+def test_resnet152_has_52_units():
+    """Paper: 'the maximum number of pipeline stages ResNet152 could run
+    with is 52' — stem + 50 blocks + classifier."""
+    assert build_resnet152(spatial=32).num_units == 52
+
+
+def test_unknown_model_rejected():
+    with pytest.raises(KeyError):
+        build("alexnet")
+
+
+def test_bad_spatial_rejected():
+    with pytest.raises(ValueError):
+        build_vgg16(spatial=50)
+
+
+@pytest.mark.parametrize("name", ["vgg16", "resnet50", "resnet152"])
+def test_unit_shapes_chain(name):
+    """out_shape of unit i must equal in_shape of unit i+1 (dense flatten
+    units declare the pre-flatten shape)."""
+    m = build(name, spatial=32)
+    for a, b in zip(m.units[:-1], m.units[1:]):
+        assert int(np.prod(a.out_shape)) == int(np.prod(b.in_shape)), (
+            f"{name}: {a.name} -> {b.name}"
+        )
+
+
+@pytest.mark.parametrize("name", ["vgg16", "resnet50", "resnet152"])
+def test_flops_positive_and_plausible(name):
+    m = build(name, spatial=32)
+    total = sum(u.flops for u in m.units)
+    assert all(u.flops > 0 for u in m.units)
+    # sanity band: 1e7 .. 1e12 FLOPs per inference at 32x32
+    assert 1e7 < total < 1e12
+
+
+def test_vgg16_spatial_scales_flops():
+    f32 = sum(u.flops for u in build_vgg16(spatial=32).units)
+    f64 = sum(u.flops for u in build_vgg16(spatial=64).units)
+    assert f64 > 3 * f32  # conv flops scale ~4x with spatial area
+
+
+# --------------------------------------------------------------------------
+# numerics: chained units == reference networks
+# --------------------------------------------------------------------------
+
+
+def test_vgg16_forward_matches_ref_chain():
+    """Chain the model's own units and an independently-written ref chain."""
+    m = build_vgg16(spatial=32, num_classes=10, fc_dim=64)
+    params = m.init_params(seed=1)
+    x = jax.random.uniform(jax.random.PRNGKey(42), m.input_shape)
+    got = m.forward(x, params)
+
+    # independent reference: hand-rolled VGG on ref kernels
+    y = x
+    for u, p in zip(m.units, params):
+        if u.kind in ("conv", "conv_pool"):
+            y = conv2d_ref(y, p[0], p[1], relu=True)
+            if u.kind == "conv_pool":
+                y = maxpool2d_ref(y)
+        else:
+            y = y.reshape(y.shape[0], -1) if y.ndim == 4 else y
+            y = linear_ref(y, p[0], p[1], relu=(u.name != "fc3"))
+    np.testing.assert_allclose(got, y, rtol=1e-3, atol=1e-3)
+    assert got.shape == (1, 10)
+
+
+def test_resnet50_forward_shape_and_finite():
+    m = build_resnet50(spatial=32, num_classes=10)
+    params = m.init_params(seed=2)
+    x = jax.random.uniform(jax.random.PRNGKey(0), m.input_shape)
+    y = m.forward(x, params)
+    assert y.shape == (1, 10)
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_resnet_block_identity_skip():
+    """With all-zero conv weights an identity block must return relu(x)."""
+    m = build_resnet50(spatial=32)
+    blk = m.units[2]  # b1_2, identity block
+    assert blk.kind == "block" and len(blk.param_shapes) == 9
+    x = jax.random.normal(jax.random.PRNGKey(3), blk.in_shape)
+    zeros = [jnp.zeros(s) for s in blk.param_shapes]
+    y = blk.apply(x, *zeros)
+    np.testing.assert_allclose(y, jnp.maximum(x, 0.0), rtol=0, atol=0)
+
+
+def test_init_params_deterministic():
+    m = build_vgg16(spatial=32)
+    a = m.init_params(seed=5)
+    b = m.init_params(seed=5)
+    for pa, pb in zip(a, b):
+        for x, y in zip(pa, pb):
+            np.testing.assert_array_equal(x, y)
+
+
+def test_init_params_bn_scales_are_one():
+    m = build_resnet50(spatial=32)
+    params = m.init_params(seed=0)
+    stem = params[0]
+    np.testing.assert_array_equal(stem[1], jnp.ones_like(stem[1]))  # scale
+    np.testing.assert_array_equal(stem[2], jnp.zeros_like(stem[2]))  # shift
+
+
+def test_batch_dimension_respected():
+    m = build_vgg16(spatial=32, batch=2)
+    assert m.input_shape[0] == 2
+    assert all(u.in_shape[0] == 2 for u in m.units)

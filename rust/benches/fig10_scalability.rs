@@ -1,0 +1,28 @@
+//! Bench for Fig 10: simulation cost and throughput as EP count scales
+//! (ResNet-152, 52 units).
+
+use odin::database::synth::synthesize;
+use odin::interference::{RandomInterference, Schedule};
+use odin::models;
+use odin::simulator::{simulate, Policy, SimConfig, SimSummary};
+use odin::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("fig10_scalability");
+    let db = synthesize(&models::resnet152(64), 42);
+    for eps in [4usize, 13, 52] {
+        let schedule = Schedule::random(
+            eps, 2000,
+            RandomInterference { period: 10, duration: 10, seed: 42, p_active: 1.0 },
+        );
+        b.run(&format!("sim2000_{eps}eps"), || {
+            black_box(simulate(&db, &schedule, &SimConfig::new(eps, Policy::Odin { alpha: 10 })));
+        });
+        let s = SimSummary::of(&simulate(
+            &db, &schedule, &SimConfig::new(eps, Policy::Odin { alpha: 10 }),
+        ));
+        b.report_metric(&format!("{eps}eps"), "tput_p50_qps", s.throughput.p50);
+        b.report_metric(&format!("{eps}eps"), "lat_mean_ms", s.latency.mean * 1e3);
+    }
+    b.finish();
+}

@@ -1,0 +1,29 @@
+//! Bench for Fig 1: cost of the exhaustive search (brute force) vs the DP
+//! oracle, plus the motivation-scenario throughput numbers as metrics.
+
+use odin::coordinator::{brute_force_optimal, optimal_config};
+use odin::database::synth::synthesize;
+use odin::models;
+use odin::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("fig1_motivation");
+    let db = synthesize(&models::vgg16(64), 42);
+    let dirty = vec![0usize, 0, 0, 9];
+
+    b.run("brute_force_4stage", || {
+        black_box(brute_force_optimal(&db, &dirty, 4));
+    });
+    b.run("dp_oracle_4stage", || {
+        black_box(optimal_config(&db, &dirty, 4));
+    });
+
+    let clean = vec![0usize; 4];
+    let (_, b0) = optimal_config(&db, &clean, 4);
+    let (_, b4) = optimal_config(&db, &dirty, 4);
+    let (_, b3) = optimal_config(&db, &vec![0usize; 3], 3);
+    b.report_metric("throughput", "peak_qps", 1.0 / b0);
+    b.report_metric("throughput", "rebalanced_qps", 1.0 / b4);
+    b.report_metric("throughput", "static3_qps", 1.0 / b3);
+    b.finish();
+}

@@ -1,0 +1,22 @@
+//! Bench for Fig 3: full timeline simulation (500 queries, 3 arrivals +
+//! 1 departure) and the recovery quality metrics.
+
+use odin::database::synth::synthesize;
+use odin::interference::Schedule;
+use odin::models;
+use odin::simulator::{simulate, Policy, SimConfig};
+use odin::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("fig3_timeline");
+    let db = synthesize(&models::vgg16(64), 42);
+    let events = [(100usize, 1usize, 3usize, 400usize), (200, 2, 9, 300), (300, 3, 6, 100)];
+    let schedule = Schedule::from_events(4, 500, &events);
+    b.run("timeline_sim_500q", || {
+        black_box(simulate(&db, &schedule, &SimConfig::new(4, Policy::Odin { alpha: 10 })));
+    });
+    let r = simulate(&db, &schedule, &SimConfig::new(4, Policy::Odin { alpha: 10 }));
+    b.report_metric("recovery", "rebalances", r.rebalances.len() as f64);
+    b.report_metric("recovery", "final_qps", *r.config_throughput.last().unwrap());
+    b.finish();
+}

@@ -1,0 +1,25 @@
+//! Bench for Fig 4: database synthesis cost + the slowdown band metrics.
+
+use odin::database::synth::synthesize;
+use odin::models;
+use odin::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("fig4_impact");
+    let vgg = models::vgg16(64);
+    let r152 = models::resnet152(64);
+    b.run("synthesize_vgg16", || {
+        black_box(synthesize(&vgg, 42));
+    });
+    b.run("synthesize_resnet152", || {
+        black_box(synthesize(&r152, 42));
+    });
+    let db = synthesize(&vgg, 42);
+    b.report_metric("slowdown", "max", db.max_slowdown());
+    let conv31 = 4;
+    let worst = (1..=12)
+        .map(|s| db.time(conv31, s) / db.base_time(conv31))
+        .fold(1.0f64, f64::max);
+    b.report_metric("slowdown", "conv3_1_worst", worst);
+    b.finish();
+}

@@ -1,0 +1,26 @@
+//! Bench for Fig 5: the 4000-query simulation per policy (latency grid
+//! generator) and the headline latency metrics.
+
+use odin::database::synth::synthesize;
+use odin::interference::{RandomInterference, Schedule};
+use odin::models;
+use odin::simulator::{simulate, Policy, SimConfig, SimSummary};
+use odin::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("fig5_latency");
+    let db = synthesize(&models::vgg16(64), 42);
+    let schedule = Schedule::random(
+        4, 4000,
+        RandomInterference { period: 10, duration: 10, seed: 42, p_active: 1.0 },
+    );
+    for policy in [Policy::Odin { alpha: 2 }, Policy::Odin { alpha: 10 }, Policy::Lls] {
+        b.run(&format!("sim4000_{}", policy.label()), || {
+            black_box(simulate(&db, &schedule, &SimConfig::new(4, policy)));
+        });
+        let s = SimSummary::of(&simulate(&db, &schedule, &SimConfig::new(4, policy)));
+        b.report_metric(&policy.label(), "lat_mean_ms", s.latency.mean * 1e3);
+        b.report_metric(&policy.label(), "lat_p99_ms", s.latency.p99 * 1e3);
+    }
+    b.finish();
+}

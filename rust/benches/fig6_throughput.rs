@@ -1,0 +1,25 @@
+//! Bench for Fig 6: throughput metrics of the grid's [10,10] cell.
+
+use odin::database::synth::synthesize;
+use odin::interference::{RandomInterference, Schedule};
+use odin::models;
+use odin::simulator::{simulate, Policy, SimConfig, SimSummary};
+use odin::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("fig6_throughput");
+    let db = synthesize(&models::resnet50(64), 42);
+    let schedule = Schedule::random(
+        4, 4000,
+        RandomInterference { period: 10, duration: 10, seed: 42, p_active: 1.0 },
+    );
+    for policy in [Policy::Odin { alpha: 2 }, Policy::Lls, Policy::Oracle] {
+        b.run(&format!("sim4000_{}", policy.label()), || {
+            black_box(simulate(&db, &schedule, &SimConfig::new(4, policy)));
+        });
+        let s = SimSummary::of(&simulate(&db, &schedule, &SimConfig::new(4, policy)));
+        b.report_metric(&policy.label(), "tput_p50_qps", s.throughput.p50);
+        b.report_metric(&policy.label(), "achieved_qps", s.achieved_throughput);
+    }
+    b.finish();
+}

@@ -1,0 +1,26 @@
+//! Bench for Fig 7: tail-latency extraction (percentile machinery) and
+//! the p99 metrics per policy.
+
+use odin::database::synth::synthesize;
+use odin::interference::{RandomInterference, Schedule};
+use odin::models;
+use odin::simulator::{simulate, Policy, SimConfig};
+use odin::util::bench::{black_box, Bench};
+use odin::util::stats::percentile;
+
+fn main() {
+    let mut b = Bench::new("fig7_tail");
+    let db = synthesize(&models::vgg16(64), 42);
+    let schedule = Schedule::random(
+        4, 4000,
+        RandomInterference { period: 10, duration: 100, seed: 42, p_active: 1.0 },
+    );
+    let odin = simulate(&db, &schedule, &SimConfig::new(4, Policy::Odin { alpha: 10 }));
+    let lls = simulate(&db, &schedule, &SimConfig::new(4, Policy::Lls));
+    b.run("p99_of_4000", || {
+        black_box(percentile(&odin.latencies, 99.0));
+    });
+    b.report_metric("tail", "odin_a10_p99_ms", percentile(&odin.latencies, 99.0) * 1e3);
+    b.report_metric("tail", "lls_p99_ms", percentile(&lls.latencies, 99.0) * 1e3);
+    b.finish();
+}

@@ -1,0 +1,29 @@
+//! Bench for Fig 8: rebalancing-overhead accounting across the frequency
+//! extremes.
+
+use odin::database::synth::synthesize;
+use odin::interference::{RandomInterference, Schedule};
+use odin::models;
+use odin::simulator::{simulate, Policy, SimConfig};
+use odin::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("fig8_overhead");
+    let db = synthesize(&models::vgg16(64), 42);
+    for (period, duration) in [(2usize, 2usize), (100, 100)] {
+        let schedule = Schedule::random(
+            4, 4000,
+            RandomInterference { period, duration, seed: 42, p_active: 1.0 },
+        );
+        b.run(&format!("sim4000_p{period}d{duration}"), || {
+            black_box(simulate(&db, &schedule, &SimConfig::new(4, Policy::Odin { alpha: 10 })));
+        });
+        let r = simulate(&db, &schedule, &SimConfig::new(4, Policy::Odin { alpha: 10 }));
+        b.report_metric(
+            &format!("p{period}d{duration}"),
+            "rebal_frac",
+            r.rebalance_fraction(),
+        );
+    }
+    b.finish();
+}

@@ -1,0 +1,31 @@
+//! Bench for Fig 9: SLO-violation accounting, incl. the memoized
+//! resource-constrained reference.
+
+use odin::database::synth::synthesize;
+use odin::interference::{RandomInterference, Schedule};
+use odin::models;
+use odin::simulator::slo::{slo_violations, slo_violations_constrained};
+use odin::simulator::{simulate, Policy, SimConfig};
+use odin::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("fig9_slo");
+    let db = synthesize(&models::vgg16(64), 42);
+    let schedule = Schedule::random(
+        4, 4000,
+        RandomInterference { period: 10, duration: 10, seed: 42, p_active: 1.0 },
+    );
+    let r = simulate(&db, &schedule, &SimConfig::new(4, Policy::Odin { alpha: 2 }));
+    b.run("slo_peak_level70", || {
+        black_box(slo_violations(&r, r.peak_throughput, 0.7));
+    });
+    b.run("slo_constrained_level70", || {
+        black_box(slo_violations_constrained(&r, &db, &schedule, 4, 0.7));
+    });
+    b.report_metric(
+        "violations",
+        "odin_a2_peak70",
+        slo_violations(&r, r.peak_throughput, 0.7).violation_rate(),
+    );
+    b.finish();
+}

@@ -1,0 +1,53 @@
+//! L3 hot-path micro-benchmarks: the operations on the per-query and
+//! per-rebalance critical paths. These are the §Perf L3 numbers.
+
+use odin::coordinator::{optimal_config, Lls, Odin, Rebalancer};
+use odin::database::synth::synthesize;
+use odin::interference::{RandomInterference, Schedule};
+use odin::models;
+use odin::pipeline::{stage_times_into, CostModel, PipelineConfig};
+use odin::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("micro_coordinator");
+    let db = synthesize(&models::vgg16(64), 42);
+    let db152 = synthesize(&models::resnet152(64), 42);
+    let sc = vec![0usize, 3, 0, 9];
+    let cfg = PipelineConfig::even(16, 4);
+
+    let mut buf = Vec::with_capacity(4);
+    b.run("stage_times_into_16u4s", || {
+        stage_times_into(&cfg, &db, &sc, &mut buf);
+        black_box(&buf);
+    });
+
+    let cost = CostModel::new(&db, &sc);
+    let odin = Odin::new(10);
+    b.run("odin_rebalance_a10", || {
+        black_box(odin.rebalance(&cfg, &cost));
+    });
+    let odin2 = Odin::new(2);
+    b.run("odin_rebalance_a2", || {
+        black_box(odin2.rebalance(&cfg, &cost));
+    });
+    let lls = Lls::new();
+    b.run("lls_rebalance", || {
+        black_box(lls.rebalance(&cfg, &cost));
+    });
+
+    b.run("dp_oracle_vgg16_4eps", || {
+        black_box(optimal_config(&db, &sc, 4));
+    });
+    let sc52 = vec![0usize; 52];
+    b.run("dp_oracle_resnet152_52eps", || {
+        black_box(optimal_config(&db152, &sc52, 52));
+    });
+
+    b.run("schedule_random_4000q", || {
+        black_box(Schedule::random(
+            4, 4000,
+            RandomInterference { period: 10, duration: 10, seed: 1, p_active: 1.0 },
+        ));
+    });
+    b.finish();
+}

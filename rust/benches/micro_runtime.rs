@@ -1,0 +1,36 @@
+//! PJRT runtime micro-benchmarks (needs `make artifacts`): per-unit and
+//! per-stage execution cost of the real serving hot path — §Perf L1/L2.
+
+use odin::runtime::{Manifest, ModelRuntime};
+use odin::util::bench::{black_box, Bench};
+
+fn main() {
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        println!("suite micro_runtime SKIPPED (run `make artifacts` first)");
+        return;
+    };
+    let mut b = Bench::new("micro_runtime");
+    let model = manifest.model("vgg16").expect("vgg16 artifacts");
+    let rt = ModelRuntime::load(model).expect("compile artifacts");
+    let input = rt.example_input();
+
+    // representative units: first conv, mid conv+pool, dense
+    for (u, name) in [(0usize, "conv1_1"), (6, "conv3_3_pool"), (14, "fc2")] {
+        // chain the input to unit u once
+        let mut act = input.clone();
+        for i in 0..u {
+            act = rt.run_unit(i, &act).unwrap();
+        }
+        b.run(&format!("unit_{name}"), || {
+            black_box(rt.run_unit(u, &act).unwrap());
+        });
+    }
+
+    b.run("stage_units0to4", || {
+        black_box(rt.run_range(0, 4, &input).unwrap());
+    });
+    b.run("full_model_16units", || {
+        black_box(rt.run_range(0, 16, &input).unwrap());
+    });
+    b.finish();
+}

@@ -1,0 +1,290 @@
+//! Hand-rolled CLI argument parser (clap is not in the offline vendor set).
+//!
+//! Declarative-ish: a `Command` declares flags (`--name <value>` /
+//! `--switch`) and positional args; `parse` validates, fills defaults, and
+//! renders `--help`. Subcommand dispatch lives in main.rs.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Clone, Debug)]
+pub struct Flag {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// None ⇒ boolean switch; Some(default) ⇒ value flag ("" = required).
+    pub default: Option<&'static str>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub flags: Vec<Flag>,
+    pub positionals: Vec<(&'static str, &'static str)>, // (name, help)
+}
+
+/// Parsed arguments with typed accessors.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    switches: Vec<String>,
+    positionals: Vec<String>,
+}
+
+#[derive(Debug)]
+pub enum CliError {
+    Unknown(String),
+    MissingValue(String),
+    MissingRequired(String),
+    BadValue { flag: String, value: String, want: &'static str },
+    HelpRequested(String),
+}
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Unknown(s) => write!(f, "unknown flag {s}"),
+            CliError::MissingValue(s) => write!(f, "flag {s} needs a value"),
+            CliError::MissingRequired(s) => write!(f, "missing required flag {s}"),
+            CliError::BadValue { flag, value, want } => {
+                write!(f, "flag {flag}: {value:?} is not a valid {want}")
+            }
+            CliError::HelpRequested(h) => write!(f, "{h}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Command {
+        Command { name, about, ..Default::default() }
+    }
+
+    pub fn flag(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.flags.push(Flag { name, help, default: Some(default) });
+        self
+    }
+
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(Flag { name, help, default: None });
+        self
+    }
+
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut h = String::new();
+        let _ = writeln!(h, "{} — {}", self.name, self.about);
+        let _ = write!(h, "\nusage: odin {}", self.name);
+        for (p, _) in &self.positionals {
+            let _ = write!(h, " <{p}>");
+        }
+        let _ = writeln!(h, " [flags]\n");
+        for (p, help) in &self.positionals {
+            let _ = writeln!(h, "  <{p:<18}> {help}");
+        }
+        for f in &self.flags {
+            match f.default {
+                None => {
+                    let _ = writeln!(h, "  --{:<20} {}", f.name, f.help);
+                }
+                Some("") => {
+                    let _ = writeln!(
+                        h,
+                        "  --{:<20} {} (required)",
+                        format!("{} <v>", f.name),
+                        f.help
+                    );
+                }
+                Some(d) => {
+                    let _ = writeln!(
+                        h,
+                        "  --{:<20} {} [default: {d}]",
+                        format!("{} <v>", f.name),
+                        f.help
+                    );
+                }
+            }
+        }
+        h
+    }
+
+    /// Parse raw argv (without the subcommand itself).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                return Err(CliError::HelpRequested(self.help_text()));
+            }
+            if let Some(name) = a.strip_prefix("--") {
+                // --name=value form
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let flag = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| CliError::Unknown(format!("--{name}")))?;
+                match flag.default {
+                    None => {
+                        args.switches.push(name.to_string());
+                    }
+                    Some(_) => {
+                        let v = match inline {
+                            Some(v) => v,
+                            None => it
+                                .next()
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(format!("--{name}")))?,
+                        };
+                        args.values.insert(name.to_string(), v);
+                    }
+                }
+            } else {
+                args.positionals.push(a.clone());
+            }
+        }
+        // defaults + required check
+        for f in &self.flags {
+            if let Some(d) = f.default {
+                if !args.values.contains_key(f.name) {
+                    if d.is_empty() {
+                        return Err(CliError::MissingRequired(format!("--{}", f.name)));
+                    }
+                    args.values.insert(f.name.to_string(), d.to_string());
+                }
+            }
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values.get(name).map(|s| s.as_str()).unwrap_or("")
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, CliError> {
+        self.get(name).parse().map_err(|_| CliError::BadValue {
+            flag: format!("--{name}"),
+            value: self.get(name).to_string(),
+            want: "integer",
+        })
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, CliError> {
+        self.get(name).parse().map_err(|_| CliError::BadValue {
+            flag: format!("--{name}"),
+            value: self.get(name).to_string(),
+            want: "number",
+        })
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, CliError> {
+        self.get(name).parse().map_err(|_| CliError::BadValue {
+            flag: format!("--{name}"),
+            value: self.get(name).to_string(),
+            want: "integer",
+        })
+    }
+
+    /// Comma-separated list flag.
+    pub fn list(&self, name: &str) -> Vec<String> {
+        self.get(name)
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("simulate", "run the simulator")
+            .flag("model", "vgg16", "model name")
+            .flag("queries", "4000", "number of queries")
+            .flag("seed", "", "rng seed")
+            .switch("verbose", "chatty output")
+            .positional("scenario", "interference scenario id")
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cmd().parse(&sv(&["--seed", "1", "--queries", "100"])).unwrap();
+        assert_eq!(a.get("model"), "vgg16");
+        assert_eq!(a.usize("queries").unwrap(), 100);
+        assert_eq!(a.u64("seed").unwrap(), 1);
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn equals_form_and_switch() {
+        let a = cmd()
+            .parse(&sv(&["--seed=9", "--verbose", "cpu_8"]))
+            .unwrap();
+        assert_eq!(a.get("seed"), "9");
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional(0), Some("cpu_8"));
+    }
+
+    #[test]
+    fn required_flag_enforced() {
+        let e = cmd().parse(&sv(&[])).unwrap_err();
+        assert!(matches!(e, CliError::MissingRequired(_)));
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let e = cmd().parse(&sv(&["--nope", "--seed", "1"])).unwrap_err();
+        assert!(matches!(e, CliError::Unknown(_)));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        let e = cmd().parse(&sv(&["--seed"])).unwrap_err();
+        assert!(matches!(e, CliError::MissingValue(_)));
+    }
+
+    #[test]
+    fn bad_int_rejected() {
+        let a = cmd().parse(&sv(&["--seed", "xyz"])).unwrap();
+        assert!(a.u64("seed").is_err());
+    }
+
+    #[test]
+    fn help_contains_flags() {
+        let e = cmd().parse(&sv(&["--help"])).unwrap_err();
+        let CliError::HelpRequested(h) = e else { panic!() };
+        assert!(h.contains("--queries"));
+        assert!(h.contains("scenario"));
+    }
+
+    #[test]
+    fn list_flag_splits() {
+        let c = Command::new("x", "y").flag("models", "a,b", "models");
+        let a = c.parse(&sv(&["--models", "vgg16, resnet50"])).unwrap();
+        assert_eq!(a.list("models"), vec!["vgg16", "resnet50"]);
+    }
+}

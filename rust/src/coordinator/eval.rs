@@ -1,0 +1,65 @@
+//! Stage-time evaluation abstraction.
+//!
+//! Algorithm 1 only needs one primitive: "what are the stage times of
+//! configuration C under the *current* conditions?". In simulation that is
+//! a database lookup ([`DbEval`]); on the live serving path it is a probe
+//! query processed serially through the trial configuration
+//! ([`crate::serving`]'s LiveEval) — which is precisely why the paper
+//! charges rebalancing trials as serially-processed queries.
+
+use crate::pipeline::{CostModel, PipelineConfig};
+
+/// Source of stage times for trial configurations.
+pub trait StageEval {
+    /// Stage execution times of `config` under current conditions.
+    /// Implementations may have side effects (live probes consume a real
+    /// query), hence `&mut self`.
+    fn stage_times(&mut self, config: &PipelineConfig, out: &mut Vec<f64>);
+
+    /// Number of evaluations performed so far (= serial queries charged).
+    fn probes(&self) -> usize;
+}
+
+/// Database-backed evaluation (the simulator's path).
+pub struct DbEval<'a> {
+    cost: &'a CostModel<'a>,
+    probes: usize,
+}
+
+impl<'a> DbEval<'a> {
+    pub fn new(cost: &'a CostModel<'a>) -> DbEval<'a> {
+        DbEval { cost, probes: 0 }
+    }
+}
+
+impl StageEval for DbEval<'_> {
+    fn stage_times(&mut self, config: &PipelineConfig, out: &mut Vec<f64>) {
+        self.probes += 1;
+        self.cost.stage_times_into(config, out);
+    }
+
+    fn probes(&self) -> usize {
+        self.probes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::database::synth::synthesize;
+    use crate::models;
+
+    #[test]
+    fn db_eval_counts_probes() {
+        let db = synthesize(&models::vgg16(64), 1);
+        let sc = vec![0usize; 4];
+        let cost = CostModel::new(&db, &sc);
+        let mut eval = DbEval::new(&cost);
+        let mut out = Vec::new();
+        let cfg = PipelineConfig::even(16, 4);
+        eval.stage_times(&cfg, &mut out);
+        eval.stage_times(&cfg, &mut out);
+        assert_eq!(eval.probes(), 2);
+        assert_eq!(out.len(), 4);
+    }
+}

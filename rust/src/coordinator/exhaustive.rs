@@ -1,0 +1,252 @@
+//! The exhaustive-search oracle: the true optimal pipeline configuration
+//! for a given interference state.
+//!
+//! The paper uses exhaustive search to define the *resource-constrained
+//! throughput* (the best a rebalancer could do under interference, Fig. 9)
+//! and reports it took 42.5 minutes for a 16-layer/4-stage pipeline
+//! (Fig. 1d) — which is exactly why ODIN exists. Enumerating compositions
+//! is exponential, but the underlying problem (partition a chain into ≤ N
+//! contiguous stages minimizing the max stage cost, with stage-dependent
+//! unit costs) has an O(N·m²) dynamic program, so we provide both:
+//!
+//! * [`optimal_config`] — the DP, used by experiments (Fig 1d, Fig 9);
+//! * [`brute_force_optimal`] — literal enumeration, used to cross-check
+//!   the DP in tests and to reproduce the paper's cost observation.
+
+use crate::database::TimingDb;
+use crate::interference::EpScenarios;
+use crate::pipeline::PipelineConfig;
+
+/// True optimum: configuration (counts, possibly with empty stages) that
+/// maximizes throughput = 1/max stage time, where stage `i` runs on EP `i`
+/// under `scenarios[i]`. Returns (config, bottleneck_seconds).
+pub fn optimal_config(
+    db: &TimingDb,
+    scenarios: &EpScenarios,
+    num_stages: usize,
+) -> (PipelineConfig, f64) {
+    let m = db.num_units();
+    let n = num_stages;
+    assert!(n >= 1);
+
+    // prefix[s][i] = sum of times of units 0..i under stage s's scenario
+    let mut prefix = vec![vec![0.0f64; m + 1]; n];
+    for (s, pre) in prefix.iter_mut().enumerate() {
+        let sc = scenarios.get(s).copied().unwrap_or(0);
+        for u in 0..m {
+            pre[u + 1] = pre[u] + db.time(u, sc);
+        }
+    }
+
+    // dp[s][i] = minimal possible bottleneck when units 0..i are assigned
+    // to stages 0..=s (stages may be empty). choice[s][i] = boundary k.
+    const INF: f64 = f64::INFINITY;
+    let mut dp = vec![vec![INF; m + 1]; n];
+    let mut choice = vec![vec![0usize; m + 1]; n];
+    for i in 0..=m {
+        dp[0][i] = prefix[0][i]; // all first i units on stage 0
+    }
+    for s in 1..n {
+        for i in 0..=m {
+            // units k..i go on stage s; 0..k handled by stages 0..s
+            let mut best = INF;
+            let mut best_k = 0;
+            // cost(k..i, s) = prefix[s][i] - prefix[s][k] decreases in k,
+            // dp[s-1][k] is nondecreasing in k, so the max is unimodal —
+            // but m is small (≤52); plain O(m) scan is already cheap.
+            for k in 0..=i {
+                let cost = prefix[s][i] - prefix[s][k];
+                let v = dp[s - 1][k].max(cost);
+                if v < best {
+                    best = v;
+                    best_k = k;
+                }
+            }
+            dp[s][i] = best;
+            choice[s][i] = best_k;
+        }
+    }
+
+    // reconstruct counts
+    let mut counts = vec![0usize; n];
+    let mut i = m;
+    for s in (1..n).rev() {
+        let k = choice[s][i];
+        counts[s] = i - k;
+        i = k;
+    }
+    counts[0] = i;
+    let cfg = PipelineConfig::new(counts);
+    (cfg, dp[n - 1][m])
+}
+
+/// Literal enumeration over all compositions of m units into n (possibly
+/// empty) stages: C(m+n-1, n-1) configurations. Exponential — only for
+/// tests and the Fig. 1 cost demonstration. Returns the best config, its
+/// bottleneck, and the number of configurations evaluated.
+pub fn brute_force_optimal(
+    db: &TimingDb,
+    scenarios: &EpScenarios,
+    num_stages: usize,
+) -> (PipelineConfig, f64, usize) {
+    let m = db.num_units();
+    let mut counts = vec![0usize; num_stages];
+    let mut best: Option<(Vec<usize>, f64)> = None;
+    let mut evaluated = 0usize;
+    let mut times = Vec::with_capacity(num_stages);
+    enumerate(m, 0, &mut counts, &mut |c| {
+        evaluated += 1;
+        let cfg = PipelineConfig::new(c.to_vec());
+        crate::pipeline::stage_times_into(&cfg, db, scenarios, &mut times);
+        let bottleneck = times.iter().copied().fold(0.0f64, f64::max);
+        if best.as_ref().is_none_or(|(_, b)| bottleneck < *b) {
+            best = Some((c.to_vec(), bottleneck));
+        }
+    });
+    let (counts, bottleneck) = best.unwrap();
+    (PipelineConfig::new(counts), bottleneck, evaluated)
+}
+
+fn enumerate(
+    remaining: usize,
+    stage: usize,
+    counts: &mut Vec<usize>,
+    f: &mut impl FnMut(&[usize]),
+) {
+    if stage == counts.len() - 1 {
+        counts[stage] = remaining;
+        f(counts);
+        return;
+    }
+    for take in 0..=remaining {
+        counts[stage] = take;
+        enumerate(remaining - take, stage + 1, counts, f);
+    }
+}
+
+/// Throughput of the optimal config — the paper's "resource-constrained
+/// throughput" when `scenarios` has interference, or the peak throughput
+/// when it is all zeros.
+pub fn optimal_throughput(
+    db: &TimingDb,
+    scenarios: &EpScenarios,
+    num_stages: usize,
+) -> f64 {
+    let (cfg, bottleneck) = optimal_config(db, scenarios, num_stages);
+    debug_assert!(cfg.check(db.num_units()).is_ok());
+    let _ = cfg;
+    1.0 / bottleneck
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::database::synth::synthesize;
+    use crate::models;
+    use crate::pipeline::stage_times;
+    use crate::util::proptest::Property;
+    use crate::util::Rng;
+
+    fn db() -> TimingDb {
+        synthesize(&models::vgg16(64), 1)
+    }
+
+    #[test]
+    fn dp_matches_brute_force_clean() {
+        let db = db();
+        let sc = vec![0usize; 4];
+        let (_, dp_b) = optimal_config(&db, &sc, 4);
+        let (_, bf_b, evaluated) = brute_force_optimal(&db, &sc, 4);
+        assert!((dp_b - bf_b).abs() < 1e-12);
+        // compositions of 16 into 4 parts (empties allowed): C(19,3) = 969
+        assert_eq!(evaluated, 969);
+    }
+
+    #[test]
+    fn dp_matches_brute_force_under_interference() {
+        let db = db();
+        for seed in 0..5u64 {
+            let mut rng = Rng::new(seed);
+            let sc: Vec<usize> = (0..4).map(|_| rng.below(13)).collect();
+            let (_, dp_b) = optimal_config(&db, &sc, 4);
+            let (_, bf_b, _) = brute_force_optimal(&db, &sc, 4);
+            assert!(
+                (dp_b - bf_b).abs() < 1e-12,
+                "seed {seed}: dp {dp_b} vs bf {bf_b}"
+            );
+        }
+    }
+
+    #[test]
+    fn optimal_bottleneck_is_attained() {
+        let db = db();
+        let sc = vec![0, 5, 0, 11];
+        let (cfg, bottleneck) = optimal_config(&db, &sc, 4);
+        let ts = stage_times(&cfg, &db, &sc);
+        let maxt = ts.iter().copied().fold(0.0f64, f64::max);
+        assert!((maxt - bottleneck).abs() < 1e-12);
+    }
+
+    #[test]
+    fn optimum_no_worse_than_even_split() {
+        let db = db();
+        let sc = vec![0, 0, 8, 0];
+        let even = PipelineConfig::even(16, 4);
+        let even_b = stage_times(&even, &db, &sc)
+            .iter()
+            .copied()
+            .fold(0.0f64, f64::max);
+        let (_, opt_b) = optimal_config(&db, &sc, 4);
+        assert!(opt_b <= even_b + 1e-12);
+    }
+
+    #[test]
+    fn single_stage_is_total_time() {
+        let db = db();
+        let sc = vec![0usize];
+        let (cfg, b) = optimal_config(&db, &sc, 1);
+        assert_eq!(cfg.counts(), &[16]);
+        assert!((b - db.total_base_time()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn more_stages_never_hurt() {
+        let db = db();
+        let mut prev = f64::INFINITY;
+        for n in 1..=8 {
+            let sc = vec![0usize; n];
+            let (_, b) = optimal_config(&db, &sc, n);
+            assert!(b <= prev + 1e-12, "n={n}: {b} > {prev}");
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn resnet152_52_stages_fast() {
+        // the scalability case: 52 units over 52 EPs must be instant
+        let db = synthesize(&models::resnet152(64), 2);
+        let sc = vec![0usize; 52];
+        let t0 = std::time::Instant::now();
+        let (cfg, b) = optimal_config(&db, &sc, 52);
+        assert!(t0.elapsed().as_millis() < 200, "DP too slow");
+        cfg.check(52).unwrap();
+        assert!(b > 0.0);
+    }
+
+    #[test]
+    fn prop_dp_equals_bruteforce_small() {
+        // random small instances: DP must equal brute force exactly
+        let p = Property::new(|r: &mut Rng| {
+            let n = r.range(1, 4);
+            let sc: Vec<usize> = (0..n).map(|_| r.below(13)).collect();
+            sc
+        });
+        let db = synthesize(&models::vgg16(32), 9);
+        p.check(0xE5A, 25, |sc| {
+            let n = sc.len();
+            let (_, dp_b) = optimal_config(&db, sc, n);
+            let (_, bf_b, _) = brute_force_optimal(&db, sc, n);
+            (dp_b - bf_b).abs() < 1e-12
+        });
+    }
+}

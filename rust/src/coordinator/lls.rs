@@ -1,0 +1,244 @@
+//! Least-loaded scheduling (LLS) — the paper's baseline (§3.3).
+//!
+//! LLS is the classic online interference-mitigation technique
+//! [Paragon, weighted-round-robin surveys]: estimate per-stage
+//! *utilization* and recursively move layers from the most- to the
+//! least-utilized stage until throughput starts decreasing.
+//!
+//! Utilization of stage i (paper's formula):
+//!
+//!   v_i = 1 − w_i / (w_i + t_i),   w_i = w_{i−1} + t_{i−1} − t_i,  w_0 = 0
+//!
+//! where t_i is the stage execution time and w_i its pipeline waiting
+//! time: a stage that waits little relative to its service time is highly
+//! utilized (the bottleneck has w = 0 ⇒ v = 1).
+
+use crate::pipeline::{CostModel, PipelineConfig};
+
+use super::eval::{DbEval, StageEval};
+
+use super::{RebalanceResult, Rebalancer};
+
+const MAX_TRIALS: usize = 200;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Lls;
+
+impl Lls {
+    pub fn new() -> Lls {
+        Lls
+    }
+
+    /// The paper's utilization vector.
+    pub fn utilization(times: &[f64]) -> Vec<f64> {
+        let mut out = Vec::with_capacity(times.len());
+        let mut w_prev = 0.0f64;
+        let mut t_prev = 0.0f64;
+        for (i, &t) in times.iter().enumerate() {
+            let w = if i == 0 { 0.0 } else { (w_prev + t_prev - t).max(0.0) };
+            let v = if w + t <= 0.0 { 0.0 } else { 1.0 - w / (w + t) };
+            out.push(v);
+            w_prev = w;
+            t_prev = t;
+        }
+        out
+    }
+}
+
+impl Rebalancer for Lls {
+    fn name(&self) -> &'static str {
+        "lls"
+    }
+
+    fn rebalance(
+        &self,
+        current: &PipelineConfig,
+        cost: &CostModel<'_>,
+    ) -> RebalanceResult {
+        let mut eval = DbEval::new(cost);
+        self.rebalance_with(current, &mut eval)
+    }
+}
+
+impl Lls {
+    /// LLS against any stage-time source (see Odin::rebalance_with).
+    pub fn rebalance_with(
+        &self,
+        current: &PipelineConfig,
+        eval: &mut dyn StageEval,
+    ) -> RebalanceResult {
+        let mut c = current.clone();
+        let mut times = Vec::with_capacity(c.num_stages());
+        eval.stage_times(&c, &mut times);
+        let mut best_t = throughput_of(&times);
+        let mut trials = 0usize;
+
+        if c.num_stages() < 2 {
+            return RebalanceResult { config: c, trials: 0, throughput: best_t };
+        }
+
+        loop {
+            if trials >= MAX_TRIALS {
+                break;
+            }
+            let util = Self::utilization(&times);
+            // most utilized stage that still has a layer to give
+            let Some(src) = (0..c.num_stages())
+                .filter(|&s| c.counts()[s] > 0)
+                .max_by(|&a, &b| util[a].partial_cmp(&util[b]).unwrap())
+            else {
+                break;
+            };
+            let Some(dst) = (0..c.num_stages())
+                .filter(|&s| s != src)
+                .min_by(|&a, &b| util[a].partial_cmp(&util[b]).unwrap())
+            else {
+                break;
+            };
+            let mut trial = c.clone();
+            if !trial.move_layers(src, dst, 1) {
+                break;
+            }
+            eval.stage_times(&trial, &mut times);
+            let t_new = throughput_of(&times);
+            trials += 1;
+            // "recursively until the throughput starts decreasing": the
+            // decrease is only observable after the move has been made,
+            // and an online least-loaded scheduler does not roll back —
+            // the degrading move is kept (this is what makes LLS cheap,
+            // ~1 serial query per rebalance, and weak: the paper's Fig 9
+            // shows LLS sinking below even a 35% SLO)
+            c = trial;
+            if t_new <= best_t * (1.0 + 1e-12) {
+                break;
+            }
+            best_t = t_new;
+        }
+
+        eval.stage_times(&c, &mut times);
+        RebalanceResult { config: c, trials, throughput: throughput_of(&times) }
+    }
+}
+
+fn throughput_of(times: &[f64]) -> f64 {
+    let bottleneck = times.iter().copied().fold(0.0f64, f64::max);
+    if bottleneck <= 0.0 {
+        0.0
+    } else {
+        1.0 / bottleneck
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::database::synth::synthesize;
+    use crate::database::TimingDb;
+    use crate::models;
+    use crate::util::proptest::Property;
+    use crate::util::Rng;
+
+    fn db() -> TimingDb {
+        synthesize(&models::vgg16(64), 1)
+    }
+
+    #[test]
+    fn utilization_bottleneck_is_one() {
+        // stage 0 has no waiting by definition; a later bottleneck stage
+        // also reaches v=1 (its wait underflows to 0)
+        let v = Lls::utilization(&[0.1, 0.5, 0.2]);
+        assert!((v[0] - 1.0).abs() < 1e-12);
+        assert!((v[1] - 1.0).abs() < 1e-12);
+        assert!(v[2] < 1.0);
+    }
+
+    #[test]
+    fn utilization_in_unit_interval() {
+        let v = Lls::utilization(&[0.4, 0.1, 0.3, 0.05]);
+        for x in v {
+            assert!((0.0..=1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn utilization_of_idle_stage_is_zero() {
+        let v = Lls::utilization(&[0.5, 0.0]);
+        assert_eq!(v[1], 0.0);
+    }
+
+    #[test]
+    fn improves_under_interference() {
+        let db = db();
+        let start = PipelineConfig::even(16, 4);
+        let sc = vec![0, 0, 0, 9];
+        let cost = CostModel::new(&db, &sc);
+        let before = cost.throughput(&start);
+        let r = Lls::new().rebalance(&start, &cost);
+        assert!(r.throughput >= before);
+        r.config.check(16).unwrap();
+    }
+
+    #[test]
+    fn stops_quickly() {
+        // the paper: LLS processes ~1 serial query per rebalance, i.e.
+        // it stops at the first non-improving trial
+        let db = db();
+        let sc = vec![0, 7, 0, 0];
+        let cost = CostModel::new(&db, &sc);
+        let r = Lls::new().rebalance(&PipelineConfig::even(16, 4), &cost);
+        assert!(r.trials <= 20, "lls ran {} trials", r.trials);
+    }
+
+    #[test]
+    fn single_stage_noop() {
+        let db = db();
+        let sc = vec![0];
+        let cost = CostModel::new(&db, &sc);
+        let r = Lls::new().rebalance(&PipelineConfig::new(vec![16]), &cost);
+        assert_eq!(r.trials, 0);
+    }
+
+    #[test]
+    fn prop_lls_valid_partition_and_bounded_regression() {
+        // LLS may KEEP a degrading move (paper semantics: "until the
+        // throughput starts decreasing" with no rollback), but the result
+        // is always a valid partition and only the LAST move may degrade
+        // — so the regression vs the best config seen is bounded by one
+        // layer move.
+        let p = Property::new(|r: &mut Rng| {
+            let n = r.range(2, 6);
+            let sc: Vec<usize> = (0..n).map(|_| r.below(13)).collect();
+            (n, sc, r.next_u64())
+        });
+        let db = db();
+        p.check(0x115, 60, |(n, sc, seed)| {
+            let mut rng = Rng::new(*seed);
+            let mut counts = vec![0usize; *n];
+            for _ in 0..16 {
+                counts[rng.below(*n)] += 1;
+            }
+            let start = PipelineConfig::new(counts);
+            let cost = CostModel::new(&db, sc);
+            let r = Lls::new().rebalance(&start, &cost);
+            // valid partition, bounded trial count, finite throughput
+            r.config.check(16).is_ok() && r.trials <= 200 && r.throughput > 0.0
+        });
+    }
+
+    #[test]
+    fn lls_keeps_the_degrading_move() {
+        // construct a case where the first utilization-guided move hurts:
+        // the resulting config must be one move away from the start and
+        // the reported throughput may be below the starting one
+        let db = db();
+        let sc = vec![0usize, 0, 0, 0];
+        let cost = CostModel::new(&db, &sc);
+        // start at the interference-free optimum: any move degrades
+        let start = crate::coordinator::exhaustive::optimal_config(&db, &sc, 4).0;
+        let before = cost.throughput(&start);
+        let r = Lls::new().rebalance(&start, &cost);
+        assert_eq!(r.trials, 1, "should stop after the first failing move");
+        assert!(r.throughput <= before + 1e-12);
+        assert_ne!(r.config.counts(), start.counts(), "move must be kept");
+    }
+}

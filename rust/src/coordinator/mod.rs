@@ -1,0 +1,49 @@
+//! The L3 coordination contribution of the paper: online pipeline-stage
+//! rebalancing under interference.
+//!
+//! * [`odin`] — the paper's Algorithm 1 heuristic.
+//! * [`lls`] — the least-loaded-scheduler baseline (§3.3).
+//! * [`exhaustive`] — the optimal-configuration oracle (DP + brute force),
+//!   the paper's "exhaustive search" used in Fig. 1d and Fig. 9.
+//! * [`monitor`] — the stage-time watcher that triggers rebalancing.
+
+pub mod eval;
+pub mod exhaustive;
+pub mod lls;
+pub mod monitor;
+pub mod odin;
+
+pub use eval::{DbEval, StageEval};
+pub use exhaustive::{brute_force_optimal, optimal_config};
+pub use lls::Lls;
+pub use monitor::{Monitor, Trigger};
+pub use odin::Odin;
+
+use crate::pipeline::{CostModel, PipelineConfig};
+
+/// Outcome of one rebalancing episode.
+#[derive(Clone, Debug)]
+pub struct RebalanceResult {
+    /// The configuration the rebalancer settled on.
+    pub config: PipelineConfig,
+    /// Number of trial configurations evaluated. During a rebalancing
+    /// phase the pipeline processes queries serially (paper §4.2
+    /// "Exploration overhead"), so the simulator charges one serial query
+    /// per trial.
+    pub trials: usize,
+    /// Throughput of `config` under the conditions given to `rebalance`.
+    pub throughput: f64,
+}
+
+/// A pipeline-stage rebalancer: given the current configuration and a cost
+/// model reflecting the *current* interference conditions, produce a new
+/// configuration.
+pub trait Rebalancer {
+    fn name(&self) -> &'static str;
+
+    fn rebalance(
+        &self,
+        current: &PipelineConfig,
+        cost: &CostModel<'_>,
+    ) -> RebalanceResult;
+}

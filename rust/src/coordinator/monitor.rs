@@ -1,0 +1,193 @@
+//! Online interference detection from observed stage execution times
+//! (paper §3.1: "At runtime, we monitor the execution time of pipeline
+//! stages, and scan for changes in the performance of the slowest
+//! pipeline stage").
+//!
+//! The monitor keeps the per-stage times of the configuration it last
+//! blessed. A relative increase of the bottleneck beyond the threshold
+//! means an interfering workload arrived (→ rebalance to shed work off
+//! the affected EP); a decrease of *any* loaded stage's time means
+//! interference receded somewhere (→ rebalance to reclaim the EP — the
+//! paper's step-20 reaction in Fig. 3).
+
+use crate::util::Welford;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Trigger {
+    /// Bottleneck grew: interference appeared (or got worse).
+    Degraded,
+    /// Some stage got faster: interference receded; resources reclaimable.
+    Improved,
+}
+
+#[derive(Clone, Debug)]
+pub struct Monitor {
+    /// Relative change in a stage time that triggers rebalancing
+    /// (e.g. 0.05 = 5%).
+    pub threshold: f64,
+    /// Blessed per-stage times of the current configuration.
+    baseline: Option<Vec<f64>>,
+    /// Noise tracker for the bottleneck since the last baseline.
+    noise: Welford,
+}
+
+impl Monitor {
+    pub fn new(threshold: f64) -> Monitor {
+        assert!(threshold > 0.0);
+        Monitor { threshold, baseline: None, noise: Welford::default() }
+    }
+
+    /// Bless a configuration's stage times as the new reference (called
+    /// after each rebalance and at startup).
+    pub fn set_baseline_times(&mut self, stage_times: &[f64]) {
+        self.baseline = Some(stage_times.to_vec());
+        self.noise = Welford::default();
+    }
+
+    /// Convenience for callers that only track the bottleneck.
+    pub fn set_baseline(&mut self, bottleneck: f64) {
+        self.baseline = Some(vec![bottleneck]);
+        self.noise = Welford::default();
+    }
+
+    /// Blessed bottleneck, if any.
+    pub fn baseline(&self) -> Option<f64> {
+        self.baseline
+            .as_ref()
+            .map(|b| b.iter().copied().fold(0.0f64, f64::max))
+    }
+
+    /// Feed the latest per-stage execution times.
+    ///
+    /// Degraded — the bottleneck grew beyond the threshold.
+    /// Improved — the bottleneck is not degraded AND some loaded stage's
+    /// time shrank beyond the threshold (vs its blessed value), so a
+    /// rebalance could reclaim the freed capacity.
+    pub fn observe(&mut self, stage_times: &[f64]) -> Option<Trigger> {
+        let bottleneck = stage_times.iter().copied().fold(0.0f64, f64::max);
+        if bottleneck <= 0.0 {
+            return None;
+        }
+        let Some(base) = &self.baseline else {
+            self.baseline = Some(stage_times.to_vec());
+            return None;
+        };
+        self.noise.push(bottleneck);
+        let base_bottleneck = base.iter().copied().fold(0.0f64, f64::max);
+        if bottleneck > base_bottleneck * (1.0 + self.threshold) {
+            return Some(Trigger::Degraded);
+        }
+        // per-stage improvement check (only comparable when the config —
+        // and thus the vector length — is unchanged)
+        if base.len() == stage_times.len() {
+            for (i, (&now, &was)) in
+                stage_times.iter().zip(base.iter()).enumerate()
+            {
+                let _ = i;
+                if was > 0.0 && now < was * (1.0 - self.threshold) {
+                    return Some(Trigger::Improved);
+                }
+            }
+        } else if bottleneck < base_bottleneck * (1.0 - self.threshold) {
+            return Some(Trigger::Improved);
+        }
+        None
+    }
+
+    /// Observed bottleneck noise (std / mean) since the last baseline —
+    /// real deployments can use this to auto-tune `threshold`.
+    pub fn noise_ratio(&self) -> f64 {
+        if self.noise.n() < 2 || self.noise.mean() <= 0.0 {
+            0.0
+        } else {
+            self.noise.std() / self.noise.mean()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_observation_sets_baseline() {
+        let mut m = Monitor::new(0.05);
+        assert_eq!(m.observe(&[0.1, 0.2]), None);
+        assert_eq!(m.baseline(), Some(0.2));
+    }
+
+    #[test]
+    fn detects_degradation() {
+        let mut m = Monitor::new(0.05);
+        m.set_baseline_times(&[0.1, 0.2]);
+        assert_eq!(m.observe(&[0.1, 0.2]), None); // unchanged
+        assert_eq!(m.observe(&[0.1, 0.25]), Some(Trigger::Degraded));
+    }
+
+    #[test]
+    fn detects_bottleneck_improvement() {
+        let mut m = Monitor::new(0.05);
+        m.set_baseline_times(&[0.1, 0.3]);
+        assert_eq!(m.observe(&[0.1, 0.15]), Some(Trigger::Improved));
+    }
+
+    #[test]
+    fn detects_non_bottleneck_improvement() {
+        // the Fig-3 step-20 case: a non-bottleneck stage gets faster
+        // (interference left its EP) while the bottleneck is unchanged
+        let mut m = Monitor::new(0.05);
+        m.set_baseline_times(&[0.28, 0.3, 0.25]);
+        assert_eq!(m.observe(&[0.28, 0.3, 0.15]), Some(Trigger::Improved));
+    }
+
+    #[test]
+    fn small_wobble_below_threshold_ignored() {
+        let mut m = Monitor::new(0.10);
+        m.set_baseline_times(&[0.2, 0.19]);
+        assert_eq!(m.observe(&[0.21, 0.19]), None);
+        assert_eq!(m.observe(&[0.19, 0.185]), None);
+    }
+
+    #[test]
+    fn rebless_resets_reference() {
+        let mut m = Monitor::new(0.05);
+        m.set_baseline_times(&[0.2]);
+        assert_eq!(m.observe(&[0.3]), Some(Trigger::Degraded));
+        m.set_baseline_times(&[0.3]);
+        assert_eq!(m.observe(&[0.3]), None);
+    }
+
+    #[test]
+    fn degraded_wins_over_improved() {
+        // one stage got slower beyond threshold, another faster:
+        // degradation is the actionable signal
+        let mut m = Monitor::new(0.05);
+        m.set_baseline_times(&[0.2, 0.2]);
+        assert_eq!(m.observe(&[0.3, 0.1]), Some(Trigger::Degraded));
+    }
+
+    #[test]
+    fn length_change_falls_back_to_bottleneck() {
+        let mut m = Monitor::new(0.05);
+        m.set_baseline_times(&[0.2, 0.2, 0.2]);
+        assert_eq!(m.observe(&[0.1, 0.15]), Some(Trigger::Improved));
+    }
+
+    #[test]
+    fn noise_ratio_accumulates() {
+        let mut m = Monitor::new(0.5);
+        m.set_baseline(1.0);
+        for t in [0.9, 1.1, 0.95, 1.05] {
+            m.observe(&[t]);
+        }
+        assert!(m.noise_ratio() > 0.0);
+    }
+
+    #[test]
+    fn empty_or_zero_times_ignored() {
+        let mut m = Monitor::new(0.05);
+        m.set_baseline(0.2);
+        assert_eq!(m.observe(&[]), None);
+        assert_eq!(m.observe(&[0.0, 0.0]), None);
+    }
+}

@@ -1,0 +1,356 @@
+//! ODIN's heuristic rebalancing — a faithful implementation of the
+//! paper's Algorithm 1.
+//!
+//! Given the current configuration C and tuning parameter α:
+//!
+//! 1. identify PS_affected = the slowest stage (it bounds throughput);
+//! 2. on the first trial, shed one layer off each end of PS_affected to
+//!    its neighbours (the algorithm cannot know *which* layers are hurt,
+//!    so it relieves both boundaries — paper lines 6–9);
+//! 3. pick the direction whose side has the smaller total time (lines
+//!    10–17), find the lightest stage on that side (line 18), and move
+//!    one layer from PS_affected toward it (lines 19–20);
+//! 4. keep any configuration that improves throughput (γ resets), count
+//!    failures otherwise; on a throughput *plateau* deliberately move one
+//!    more layer to escape the local optimum (lines 24–27, the paper's
+//!    heuristic 2);
+//! 5. stop after α consecutive non-improving trials and return the best
+//!    configuration seen.
+//!
+//! Boundary handling (the paper's pseudocode leaves implicit): when
+//! PS_affected is the first/last stage, the initial two-layer shed goes
+//! entirely to the single existing neighbour, and a direction with no
+//! stages falls back to the other side.
+
+use crate::pipeline::{CostModel, PipelineConfig};
+
+use super::eval::{DbEval, StageEval};
+
+use super::{RebalanceResult, Rebalancer};
+
+/// Relative tolerance for "throughput unchanged" (line 24's T_new = T);
+/// database-driven sums repeat exactly, so this only guards float noise.
+const EQ_TOL: f64 = 1e-9;
+
+/// Hard cap on trials, guarding pathological α / degenerate pipelines.
+const MAX_TRIALS: usize = 500;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Odin {
+    /// Exploration budget α: consecutive non-improving trials tolerated.
+    pub alpha: usize,
+}
+
+impl Odin {
+    pub fn new(alpha: usize) -> Odin {
+        assert!(alpha > 0, "alpha must be positive");
+        Odin { alpha }
+    }
+
+    /// argmax of stage time = PS_affected (line 5).
+    fn affected(times: &[f64]) -> usize {
+        let mut best = 0;
+        for (i, &t) in times.iter().enumerate() {
+            if t > times[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Lightest stage strictly on `left`/`right` side of `aff` (line 18).
+    /// Plain index scan — this sits on the rebalance hot loop and a boxed
+    /// iterator here costs an allocation per trial (§Perf L3 iteration 3).
+    fn lightest(times: &[f64], aff: usize, left: bool) -> Option<usize> {
+        let (lo, hi) = if left { (0, aff) } else { (aff + 1, times.len()) };
+        let mut best: Option<usize> = None;
+        for i in lo..hi {
+            if best.is_none_or(|b| times[i] < times[b]) {
+                best = Some(i);
+            }
+        }
+        best
+    }
+}
+
+impl Rebalancer for Odin {
+    fn name(&self) -> &'static str {
+        "odin"
+    }
+
+    fn rebalance(
+        &self,
+        current: &PipelineConfig,
+        cost: &CostModel<'_>,
+    ) -> RebalanceResult {
+        let mut eval = DbEval::new(cost);
+        self.rebalance_with(current, &mut eval)
+    }
+}
+
+impl Odin {
+    /// Algorithm 1 against any stage-time source (database lookups in
+    /// simulation, live serial probe queries on the serving path).
+    pub fn rebalance_with(
+        &self,
+        current: &PipelineConfig,
+        eval: &mut dyn StageEval,
+    ) -> RebalanceResult {
+        let n = current.num_stages();
+        let mut c = current.clone();
+        let mut times = Vec::with_capacity(n);
+
+        eval.stage_times(&c, &mut times);
+        let mut best_t = throughput_of(&times);
+        let mut c_opt = c.clone();
+        let mut gamma = 0usize;
+        let mut trials = 0usize;
+
+        if n < 2 {
+            return RebalanceResult { config: c_opt, trials: 0, throughput: best_t };
+        }
+
+        while gamma < self.alpha && trials < MAX_TRIALS {
+            eval.stage_times(&c, &mut times);
+            let aff = Self::affected(&times);
+
+            // Lines 6–9: first trial sheds one layer off each end.
+            if gamma == 0 && trials == 0 {
+                if aff + 1 < n && aff >= 1 {
+                    if c.counts()[aff] >= 2 {
+                        c.move_layers(aff, aff + 1, 1);
+                        c.move_layers(aff, aff - 1, 1);
+                    }
+                } else if aff + 1 < n {
+                    // affected is the first stage: both layers go right
+                    if c.counts()[aff] >= 2 {
+                        c.move_layers(aff, aff + 1, 2);
+                    }
+                } else if aff >= 1 && c.counts()[aff] >= 2 {
+                    c.move_layers(aff, aff - 1, 2);
+                }
+                eval.stage_times(&c, &mut times);
+            }
+
+            // Lines 10–17: pick the lighter side.
+            let aff = Self::affected(&times);
+            let s_left: f64 = times[..aff].iter().sum();
+            let s_right: f64 = times[aff + 1..].iter().sum();
+            let mut go_left = if aff == 0 {
+                false
+            } else if aff + 1 >= n {
+                true
+            } else {
+                s_left < s_right
+            };
+            // fall back when the chosen side has no stage at all
+            if Self::lightest(&times, aff, go_left).is_none() {
+                go_left = !go_left;
+            }
+
+            // Lines 18–20: move one layer toward the lightest stage.
+            let Some(light) = Self::lightest(&times, aff, go_left) else {
+                break; // single-stage pipeline: nothing to move
+            };
+            if !c.move_layers(aff, light, 1) {
+                // affected stage already empty — pipeline shrank; treat
+                // as a failed trial
+                gamma += 1;
+                trials += 1;
+                continue;
+            }
+
+            // Lines 21–32: evaluate.
+            eval.stage_times(&c, &mut times);
+            let t_new = throughput_of(&times);
+            trials += 1;
+            if t_new < best_t * (1.0 - EQ_TOL) {
+                gamma += 1;
+            } else if t_new <= best_t * (1.0 + EQ_TOL) {
+                // plateau: deliberately push one more layer the same way
+                // to escape the local optimum (lines 24–27)
+                c.move_layers(aff, light, 1);
+                gamma += 1;
+            } else {
+                gamma = 0;
+                best_t = t_new;
+                c_opt = c.clone();
+            }
+        }
+
+        RebalanceResult { config: c_opt, trials, throughput: best_t }
+    }
+}
+
+fn throughput_of(times: &[f64]) -> f64 {
+    let bottleneck = times.iter().copied().fold(0.0f64, f64::max);
+    if bottleneck <= 0.0 {
+        0.0
+    } else {
+        1.0 / bottleneck
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::exhaustive::optimal_config;
+    use crate::database::synth::synthesize;
+    use crate::database::TimingDb;
+    use crate::models;
+    use crate::util::proptest::Property;
+    use crate::util::Rng;
+
+    fn db() -> TimingDb {
+        synthesize(&models::vgg16(64), 1)
+    }
+
+    fn balanced(db: &TimingDb, n: usize) -> PipelineConfig {
+        let clean = vec![0usize; n];
+        optimal_config(db, &clean, n).0
+    }
+
+    #[test]
+    fn no_interference_keeps_config_near_optimal() {
+        let db = db();
+        let sc = vec![0usize; 4];
+        let cost = CostModel::new(&db, &sc);
+        let start = balanced(&db, 4);
+        let t0 = cost.throughput(&start);
+        let r = Odin::new(2).rebalance(&start, &cost);
+        assert!(r.throughput >= t0 * (1.0 - 1e-9));
+    }
+
+    #[test]
+    fn recovers_throughput_under_interference() {
+        let db = db();
+        let start = balanced(&db, 4);
+        // heavy interference on EP 2
+        let sc = vec![0, 0, 9, 0];
+        let cost = CostModel::new(&db, &sc);
+        let degraded = cost.throughput(&start);
+        let r = Odin::new(10).rebalance(&start, &cost);
+        assert!(
+            r.throughput > degraded * 1.05,
+            "odin failed to improve: {} -> {}",
+            degraded,
+            r.throughput
+        );
+        // compare against the oracle: ODIN should close most of the gap
+        let (opt_cfg, _) = optimal_config(&db, &sc, 4);
+        let opt = cost.throughput(&opt_cfg);
+        assert!(
+            r.throughput >= 0.8 * opt,
+            "odin {} far from optimal {opt}",
+            r.throughput
+        );
+    }
+
+    #[test]
+    fn result_is_valid_partition() {
+        let db = db();
+        let sc = vec![3, 0, 0, 11];
+        let cost = CostModel::new(&db, &sc);
+        let r = Odin::new(5).rebalance(&balanced(&db, 4), &cost);
+        r.config.check(16).unwrap();
+    }
+
+    #[test]
+    fn higher_alpha_explores_at_least_as_well() {
+        let db = db();
+        let start = balanced(&db, 4);
+        for scenario in [2usize, 5, 9, 12] {
+            let sc = vec![0, scenario, 0, 0];
+            let cost = CostModel::new(&db, &sc);
+            let r2 = Odin::new(2).rebalance(&start, &cost);
+            let r10 = Odin::new(10).rebalance(&start, &cost);
+            assert!(
+                r10.throughput >= r2.throughput * (1.0 - 1e-9),
+                "alpha=10 worse than alpha=2 under scenario {scenario}"
+            );
+        }
+    }
+
+    #[test]
+    fn trials_bounded_and_alpha_scales_them() {
+        let db = db();
+        let sc = vec![0, 0, 7, 0];
+        let cost = CostModel::new(&db, &sc);
+        let start = balanced(&db, 4);
+        let r2 = Odin::new(2).rebalance(&start, &cost);
+        let r10 = Odin::new(10).rebalance(&start, &cost);
+        assert!(r2.trials >= 1 && r2.trials <= MAX_TRIALS);
+        assert!(r10.trials >= r2.trials);
+    }
+
+    #[test]
+    fn single_stage_pipeline_is_noop() {
+        let db = db();
+        let sc = vec![5];
+        let cost = CostModel::new(&db, &sc);
+        let c = PipelineConfig::new(vec![16]);
+        let r = Odin::new(3).rebalance(&c, &cost);
+        assert_eq!(r.config.counts(), &[16]);
+        assert_eq!(r.trials, 0);
+    }
+
+    #[test]
+    fn interference_on_first_and_last_stage() {
+        let db = db();
+        let start = balanced(&db, 4);
+        for ep in [0usize, 3] {
+            let mut sc = vec![0usize; 4];
+            sc[ep] = 10;
+            let cost = CostModel::new(&db, &sc);
+            let degraded = cost.throughput(&start);
+            let r = Odin::new(10).rebalance(&start, &cost);
+            assert!(
+                r.throughput >= degraded,
+                "ep={ep}: {} < {degraded}",
+                r.throughput
+            );
+            r.config.check(16).unwrap();
+        }
+    }
+
+    #[test]
+    fn reclaims_resources_when_interference_clears() {
+        let db = db();
+        // start from a config skewed away from EP2 (as if it had been
+        // avoiding interference there), then run with no interference:
+        // ODIN should spread work back and beat the skewed throughput
+        let skewed = PipelineConfig::new(vec![6, 6, 1, 3]);
+        let sc = vec![0usize; 4];
+        let cost = CostModel::new(&db, &sc);
+        let before = cost.throughput(&skewed);
+        let r = Odin::new(10).rebalance(&skewed, &cost);
+        assert!(r.throughput > before, "{} !> {before}", r.throughput);
+    }
+
+    #[test]
+    fn prop_odin_never_worse_than_input_and_always_valid() {
+        let p = Property::new(|r: &mut Rng| {
+            let n = r.range(2, 6);
+            let sc: Vec<usize> = (0..n).map(|_| r.below(13)).collect();
+            let alpha = r.range(1, 12);
+            let seed = r.next_u64();
+            (n, sc, alpha, seed)
+        });
+        let db = db();
+        p.check(0x0D1A, 60, |(n, sc, alpha, seed)| {
+            let mut rng = Rng::new(*seed);
+            // random valid start config
+            let mut counts = vec![0usize; *n];
+            for _ in 0..16 {
+                counts[rng.below(*n)] += 1;
+            }
+            let start = PipelineConfig::new(counts);
+            let cost = CostModel::new(&db, sc);
+            let t0 = cost.throughput(&start);
+            let r = Odin::new(*alpha).rebalance(&start, &cost);
+            r.config.check(16).is_ok()
+                && r.throughput >= t0 * (1.0 - 1e-9)
+                && r.trials <= MAX_TRIALS
+        });
+    }
+}

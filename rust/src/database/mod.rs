@@ -1,0 +1,241 @@
+//! The per-layer timing database — the paper's §3.3 "Database Creation".
+//!
+//! The paper measures each of the m network layers alone and under n
+//! interference scenarios on one real execution place, stores the
+//! m×(n+1) matrix, and drives all simulation from lookups in it. We do
+//! the same, from two sources:
+//!
+//! * [`synth`] — a calibrated synthetic database derived from unit FLOPs /
+//!   byte volumes and the Table-1 scenario pressures (deterministic; the
+//!   default for experiments).
+//! * [`measure`] — real measurements of the AOT-compiled HLO units through
+//!   the PJRT runtime, alone and with [`crate::interference::Stressor`]s
+//!   running (`odin bench-db`; host-dependent).
+
+pub mod measure;
+pub mod synth;
+
+use crate::interference::NUM_SCENARIOS;
+use crate::json::{parse, to_string_pretty, Value};
+
+/// The m×(n+1) matrix: `times[unit][scenario]`, seconds per query;
+/// scenario 0 = interference-free.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimingDb {
+    pub model: String,
+    pub unit_names: Vec<String>,
+    pub times: Vec<Vec<f64>>,
+    /// Where the numbers came from ("synthetic" | "measured").
+    pub source: String,
+}
+
+impl TimingDb {
+    pub fn new(
+        model: impl Into<String>,
+        unit_names: Vec<String>,
+        times: Vec<Vec<f64>>,
+        source: impl Into<String>,
+    ) -> TimingDb {
+        let db = TimingDb {
+            model: model.into(),
+            unit_names,
+            times,
+            source: source.into(),
+        };
+        db.validate().expect("invalid TimingDb");
+        db
+    }
+
+    pub fn num_units(&self) -> usize {
+        self.times.len()
+    }
+
+    pub fn num_scenarios(&self) -> usize {
+        NUM_SCENARIOS
+    }
+
+    /// Execution time of `unit` under `scenario` (0 = none). This is THE
+    /// hot lookup of the whole simulator; callers index directly.
+    #[inline]
+    pub fn time(&self, unit: usize, scenario: usize) -> f64 {
+        self.times[unit][scenario]
+    }
+
+    /// Interference-free time of a unit.
+    #[inline]
+    pub fn base_time(&self, unit: usize) -> f64 {
+        self.times[unit][0]
+    }
+
+    /// Sum of interference-free unit times (serial latency floor).
+    pub fn total_base_time(&self) -> f64 {
+        (0..self.num_units()).map(|u| self.base_time(u)).sum()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.times.len() != self.unit_names.len() {
+            return Err(format!(
+                "{} rows vs {} names",
+                self.times.len(),
+                self.unit_names.len()
+            ));
+        }
+        if self.times.is_empty() {
+            return Err("empty database".into());
+        }
+        for (u, row) in self.times.iter().enumerate() {
+            if row.len() != NUM_SCENARIOS + 1 {
+                return Err(format!(
+                    "unit {u}: {} columns, want {}",
+                    row.len(),
+                    NUM_SCENARIOS + 1
+                ));
+            }
+            for (s, &t) in row.iter().enumerate() {
+                if !(t.is_finite() && t > 0.0) {
+                    return Err(format!("unit {u} scenario {s}: bad time {t}"));
+                }
+            }
+            for s in 1..row.len() {
+                if row[s] < row[0] * 0.98 {
+                    return Err(format!(
+                        "unit {u} scenario {s}: interference faster than \
+                         baseline ({} < {})",
+                        row[s], row[0]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Worst-case slowdown any scenario inflicts on any unit (Fig 4 max).
+    pub fn max_slowdown(&self) -> f64 {
+        self.times
+            .iter()
+            .flat_map(|row| row[1..].iter().map(move |&t| t / row[0]))
+            .fold(1.0, f64::max)
+    }
+
+    // -- persistence --------------------------------------------------
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("model", Value::from(self.model.clone())),
+            ("source", Value::from(self.source.clone())),
+            (
+                "unit_names",
+                Value::arr(
+                    self.unit_names.iter().map(|n| Value::from(n.clone())).collect(),
+                ),
+            ),
+            (
+                "times",
+                Value::arr(
+                    self.times
+                        .iter()
+                        .map(|row| {
+                            Value::arr(row.iter().map(|&t| Value::from(t)).collect())
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<TimingDb, String> {
+        let model = v.get("model").as_str().ok_or("missing model")?.to_string();
+        let source = v
+            .get("source")
+            .as_str()
+            .unwrap_or("unknown")
+            .to_string();
+        let unit_names = v
+            .get("unit_names")
+            .as_arr()
+            .ok_or("missing unit_names")?
+            .iter()
+            .map(|n| n.as_str().map(String::from).ok_or("bad unit name"))
+            .collect::<Result<Vec<_>, _>>()?;
+        let times = v
+            .get("times")
+            .as_arr()
+            .ok_or("missing times")?
+            .iter()
+            .map(|row| row.as_f64_vec().ok_or("bad times row"))
+            .collect::<Result<Vec<_>, _>>()?;
+        let db = TimingDb { model, unit_names, times, source };
+        db.validate()?;
+        Ok(db)
+    }
+
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, to_string_pretty(&self.to_json()))
+    }
+
+    pub fn load(path: &str) -> Result<TimingDb, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let v = parse(&text).map_err(|e| e.to_string())?;
+        TimingDb::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    fn tiny_db() -> TimingDb {
+        synth::synthesize(&models::vgg16(32), 7)
+    }
+
+    #[test]
+    fn validate_catches_shape_errors() {
+        let mut db = tiny_db();
+        db.times[3].pop();
+        assert!(db.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_negative_times() {
+        let mut db = tiny_db();
+        db.times[0][0] = -1.0;
+        assert!(db.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_fast_interference() {
+        let mut db = tiny_db();
+        db.times[0][3] = db.times[0][0] * 0.5;
+        assert!(db.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let db = tiny_db();
+        let back = TimingDb::from_json(&db.to_json()).unwrap();
+        assert_eq!(db, back);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let db = tiny_db();
+        let path = std::env::temp_dir().join("odin_db_test.json");
+        let path = path.to_str().unwrap();
+        db.save(path).unwrap();
+        let back = TimingDb::load(path).unwrap();
+        assert_eq!(db, back);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn max_slowdown_above_one() {
+        assert!(tiny_db().max_slowdown() > 1.0);
+    }
+
+    #[test]
+    fn base_lookup_is_column_zero() {
+        let db = tiny_db();
+        assert_eq!(db.base_time(2), db.time(2, 0));
+    }
+}

@@ -1,0 +1,138 @@
+//! Synthetic timing database, calibrated to the paper's observations.
+//!
+//! The base (interference-free) time of a unit follows a simple roofline:
+//! compute term (FLOPs / effective FLOP rate) + memory term (weight +
+//! activation bytes / effective bandwidth). Interference scales the two
+//! terms separately using the Table-1 scenario pressures:
+//!
+//!   t(u, s) = t_c(u) · (1 + A·cpu_press(s)) + t_m(u) · (1 + B·mem_press(s))
+//!
+//! with A, B calibrated so the per-layer slowdowns span the ≈1.1×–3×
+//! band of the paper's Fig. 4. A small deterministic per-(unit, scenario)
+//! jitter keeps rows from being exact multiples of each other (as real
+//! measurements never are) without breaking reproducibility.
+
+use crate::interference::{catalogue, NUM_SCENARIOS};
+use crate::models::ModelSpec;
+use crate::util::Rng;
+
+use super::TimingDb;
+
+/// Effective per-EP compute rate (FLOP/s). An 8-core EP of the paper's
+/// i9-12900K sustains a few hundred GFLOP/s on tuned f32 conv kernels;
+/// 50 GFLOP/s reflects the untuned single-stream path and only sets the
+/// absolute scale — every paper metric is relative.
+const EFF_FLOPS: f64 = 50e9;
+/// Effective memory bandwidth per EP (B/s).
+const EFF_BW: f64 = 12e9;
+/// CPU-pressure slowdown gain (calibrated to Fig. 4's upper band).
+const GAIN_CPU: f64 = 1.9;
+/// Memory-pressure slowdown gain.
+const GAIN_MEM: f64 = 2.1;
+/// Deterministic jitter amplitude (fraction of the scenario time).
+const JITTER: f64 = 0.04;
+
+/// Synthesize the m×(n+1) database for `model`.
+pub fn synthesize(model: &ModelSpec, seed: u64) -> TimingDb {
+    let mut rng = Rng::new(seed ^ 0x0D1);
+    let cat = catalogue();
+    let mut times = Vec::with_capacity(model.units.len());
+    for u in &model.units {
+        let w_c = u.kind.compute_intensity();
+        let bytes = 4.0 * (u.param_elems + u.act_elems) as f64;
+        // Split the base time into compute-bound and memory-bound parts.
+        let t_compute = u.flops as f64 / EFF_FLOPS;
+        let t_memory = bytes / EFF_BW;
+        let base = t_compute + t_memory;
+        let mut row = Vec::with_capacity(NUM_SCENARIOS + 1);
+        row.push(base);
+        for s in &cat {
+            let (cp, mp) = s.pressure();
+            // compute-heavy units feel CPU pressure more, memory-heavy
+            // units feel bandwidth pressure more
+            let t = t_compute * (1.0 + GAIN_CPU * cp * (0.5 + w_c))
+                + t_memory * (1.0 + GAIN_MEM * mp * (1.5 - w_c));
+            // deterministic positive jitter (never below baseline)
+            let jitter = 1.0 + JITTER * rng.f64();
+            row.push((t * jitter).max(base));
+        }
+        times.push(row);
+    }
+    TimingDb::new(
+        model.name.clone(),
+        model.units.iter().map(|u| u.name.clone()).collect(),
+        times,
+        "synthetic",
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn synthesize_is_deterministic() {
+        let m = models::vgg16(64);
+        assert_eq!(synthesize(&m, 1), synthesize(&m, 1));
+    }
+
+    #[test]
+    fn different_seed_changes_jitter_only_slightly() {
+        let m = models::vgg16(64);
+        let a = synthesize(&m, 1);
+        let b = synthesize(&m, 2);
+        for u in 0..a.num_units() {
+            // identical baselines
+            assert_eq!(a.base_time(u), b.base_time(u));
+            for s in 1..=NUM_SCENARIOS {
+                let ra = a.time(u, s) / a.base_time(u);
+                let rb = b.time(u, s) / b.base_time(u);
+                assert!((ra - rb).abs() / ra < 0.1, "u={u} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn slowdowns_in_fig4_band() {
+        // Fig 4: across the 12 scenarios a VGG16 layer sees roughly
+        // 1.05x .. 3x slowdowns. Check the synthetic band is comparable.
+        let db = synthesize(&models::vgg16(64), 7);
+        let max = db.max_slowdown();
+        assert!(max > 1.8 && max < 4.0, "max slowdown {max}");
+        // the mildest scenario must still slow things a little
+        for u in 0..db.num_units() {
+            let min = (1..=NUM_SCENARIOS)
+                .map(|s| db.time(u, s) / db.base_time(u))
+                .fold(f64::INFINITY, f64::min);
+            assert!(min >= 1.0, "u={u} min {min}");
+            assert!(min < 1.5, "u={u} mildest scenario too harsh: {min}");
+        }
+    }
+
+    #[test]
+    fn validates_for_all_models() {
+        for name in models::MODEL_NAMES {
+            let m = models::build(name, 64).unwrap();
+            let db = synthesize(&m, 3);
+            db.validate().unwrap();
+            assert_eq!(db.num_units(), m.num_units());
+        }
+    }
+
+    #[test]
+    fn dense_units_more_membw_sensitive_than_conv() {
+        let m = models::vgg16(64);
+        let db = synthesize(&m, 5);
+        // scenario 10 = membw 8 threads same cores (heaviest memory)
+        let membw_heavy = 6; // cpu rows are 1..=6, membw 7..=12; pick 3rd membw = id 9
+        let conv = 4; // conv3_1
+        let fc = 14; // fc2
+        let conv_ratio = db.time(conv, 6 + 3) / db.base_time(conv);
+        let fc_ratio = db.time(fc, 6 + 3) / db.base_time(fc);
+        assert!(
+            fc_ratio > conv_ratio,
+            "fc {fc_ratio} vs conv {conv_ratio} (scenario {membw_heavy})"
+        );
+    }
+}

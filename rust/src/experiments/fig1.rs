@@ -1,0 +1,84 @@
+//! Fig 1 — the motivating example: a balanced 4-stage VGG16 pipeline,
+//! interference on the 4th stage's EP, and the three responses:
+//! (b) do nothing, (c) static 3-EP repartition, (d) dynamic rebalance via
+//! exhaustive search. Also reproduces the exhaustive-search cost
+//! observation that motivates ODIN's heuristic.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::{brute_force_optimal, optimal_config};
+use crate::database::synth::synthesize;
+use crate::models;
+use crate::pipeline::stage_times;
+
+use super::{ExpCtx, Output};
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let mut out = Output::new(ctx, "fig1")?;
+    let spec = models::vgg16(ctx.spatial);
+    let db = synthesize(&spec, ctx.seed);
+
+    // (a) balanced 4-stage pipeline, no interference
+    let clean = vec![0usize; 4];
+    let (balanced, b0) = optimal_config(&db, &clean, 4);
+    let t0 = 1.0 / b0;
+    out.line("# Fig 1 — motivation (VGG16, 4 EPs; scenario 9 on EP 3)");
+    out.line(format!(
+        "(a) balanced config {balanced}: stage times {:?} -> throughput {:.2} q/s",
+        fmt_times(&stage_times(&balanced, &db, &clean)),
+        t0
+    ));
+
+    // (b) interference arrives on EP 3 (a heavy membw scenario)
+    let dirty = vec![0usize, 0, 0, 9];
+    let ts_dirty = stage_times(&balanced, &db, &dirty);
+    let t_dirty = 1.0 / ts_dirty.iter().copied().fold(0.0f64, f64::max);
+    out.line(format!(
+        "(b) same config under interference: stage times {:?} -> {:.2} q/s ({:.0}% drop; paper: 46%)",
+        fmt_times(&ts_dirty),
+        t_dirty,
+        100.0 * (1.0 - t_dirty / t0)
+    ));
+
+    // (c) static: abandon EP 3, rebalance over 3 EPs
+    let (static3, b3) = optimal_config(&db, &vec![0usize; 3], 3);
+    out.line(format!(
+        "(c) static 3-EP repartition {static3}: {:.2} q/s ({:.0}% of peak; suboptimal)",
+        1.0 / b3,
+        100.0 * (1.0 / b3) / t0
+    ));
+
+    // (d) dynamic: exhaustive search over the 4 EPs incl. the slowed one
+    let t_start = Instant::now();
+    let (rebalanced, b4) = optimal_config(&db, &dirty, 4);
+    let dp_time = t_start.elapsed();
+    out.line(format!(
+        "(d) dynamic rebalance (optimal) {rebalanced}: {:.2} q/s ({:.0}% of peak restored)",
+        1.0 / b4,
+        100.0 * (1.0 / b4) / t0
+    ));
+
+    // exhaustive-search cost: the paper reports 42.5 min on hardware;
+    // we report the enumeration size + measured brute-force time, vs the
+    // DP oracle that makes (d) cheap
+    let t_start = Instant::now();
+    let (_, bf, evaluated) = brute_force_optimal(&db, &dirty, 4);
+    let bf_time = t_start.elapsed();
+    assert!((bf - b4).abs() < 1e-12);
+    out.line(format!(
+        "exhaustive search: {evaluated} configurations, {:.1} ms here \
+         (paper: 42.5 min on hardware — each trial costs a serial query); \
+         DP oracle: {:.2} ms",
+        bf_time.as_secs_f64() * 1e3,
+        dp_time.as_secs_f64() * 1e3
+    ));
+    out.line("# shape check: (d) restores most of the loss, (c) stays suboptimal,");
+    out.line("#   and per-query exhaustive trial cost is what ODIN's heuristic avoids");
+    Ok(())
+}
+
+fn fmt_times(ts: &[f64]) -> Vec<String> {
+    ts.iter().map(|t| format!("{:.1}ms", t * 1e3)).collect()
+}

@@ -1,0 +1,67 @@
+//! Fig 10 — scalability: ResNet-152 (52 schedulable units) on 4 → 52
+//! execution places, interference period 10 / duration 10, 4000 queries.
+//!
+//! Paper shape: latency stays flat as EPs grow (ODIN keeps finding good
+//! configurations), throughput rises with EPs and approaches the peak.
+
+use anyhow::Result;
+
+use crate::database::synth::synthesize;
+use crate::interference::{RandomInterference, Schedule};
+use crate::models;
+use crate::simulator::{simulate, Policy, SimConfig, SimSummary};
+
+use super::{ExpCtx, Output};
+
+const EP_COUNTS: [usize; 6] = [4, 8, 13, 26, 39, 52];
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let mut out = Output::new(ctx, "fig10")?;
+    let spec = models::resnet152(ctx.spatial);
+    let db = synthesize(&spec, ctx.seed);
+    out.line("# Fig 10 — ODIN scalability (ResNet-152, 52 units, freq=10 dur=10)");
+    out.line(format!(
+        "{:>4} {:>12} {:>12} {:>12} {:>10} {:>10} {:>11}",
+        "EPs", "lat_mean(ms)", "lat_p99(ms)", "tput_p50", "achieved", "peak(q/s)", "rebalances"
+    ));
+    let mut rows = Vec::new();
+    for &eps in &EP_COUNTS {
+        let schedule = Schedule::random(
+            eps,
+            ctx.queries,
+            RandomInterference {
+                period: 10,
+                duration: 10,
+                seed: ctx.seed ^ eps as u64,
+                p_active: 1.0,
+            },
+        );
+        let r = simulate(
+            &db,
+            &schedule,
+            &SimConfig::new(eps, Policy::Odin { alpha: 10 }),
+        );
+        let s = SimSummary::of(&r);
+        out.line(format!(
+            "{:>4} {:>12.2} {:>12.2} {:>12.2} {:>10.2} {:>10.2} {:>11}",
+            eps,
+            s.latency.mean * 1e3,
+            s.latency.p99 * 1e3,
+            s.throughput.p50,
+            s.achieved_throughput,
+            r.peak_throughput,
+            s.num_rebalances,
+        ));
+        rows.push((eps, s, r.peak_throughput));
+    }
+    // shape checks the paper states
+    let t_first = rows.first().unwrap().1.throughput.p50;
+    let t_last = rows.last().unwrap().1.throughput.p50;
+    out.line(format!(
+        "# shape check: throughput rises with EPs ({t_first:.2} -> {t_last:.2} q/s) \
+         and at 52 EPs approaches peak ({:.0}% of {:.2} q/s)",
+        100.0 * t_last / rows.last().unwrap().2,
+        rows.last().unwrap().2
+    ));
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Fig 4 — performance impact of the 12 colocation scenarios on a single
+//! VGG16 layer (we use conv3_1, a mid-network conv, as the paper's
+//! representative layer).
+//!
+//! Prints the synthetic database's slowdowns; when a measured database
+//! (`odin bench-db`) exists at artifacts/db_measured.json, prints it side
+//! by side.
+
+use anyhow::Result;
+
+use crate::database::{synth::synthesize, TimingDb};
+use crate::interference::{catalogue, NUM_SCENARIOS};
+use crate::models;
+
+use super::{ExpCtx, Output};
+
+const LAYER: usize = 4; // conv3_1
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let mut out = Output::new(ctx, "fig4")?;
+    let spec = models::vgg16(ctx.spatial);
+    let db = synthesize(&spec, ctx.seed);
+    let measured = TimingDb::load("artifacts/db_measured.json").ok();
+
+    out.line(format!(
+        "# Fig 4 — slowdown of VGG16 layer '{}' under each scenario",
+        db.unit_names[LAYER]
+    ));
+    out.line("# paper shape: same-core scenarios harsher than same-socket;");
+    out.line("#   more stressor threads => larger slowdown; membw hurts convs less");
+    out.line(format!(
+        "{:<4} {:<16} {:>11} {:>12}",
+        "id", "scenario", "synthetic", "measured"
+    ));
+    for s in catalogue() {
+        let syn = db.time(LAYER, s.id) / db.base_time(LAYER);
+        let mea = measured
+            .as_ref()
+            .map(|m| format!("{:.2}x", m.time(LAYER, s.id) / m.base_time(LAYER)))
+            .unwrap_or_else(|| "-".into());
+        out.line(format!(
+            "{:<4} {:<16} {:>10.2}x {:>12}",
+            s.id,
+            s.label(),
+            syn,
+            mea
+        ));
+    }
+    // bar sketch of the synthetic slowdowns
+    let max = (1..=NUM_SCENARIOS)
+        .map(|s| db.time(LAYER, s) / db.base_time(LAYER))
+        .fold(1.0f64, f64::max);
+    out.line("#");
+    for s in catalogue() {
+        let v = db.time(LAYER, s.id) / db.base_time(LAYER);
+        let bars = ((v - 1.0) / (max - 1.0) * 40.0).round() as usize;
+        out.line(format!("# {:>2} |{}", s.id, "#".repeat(bars)));
+    }
+    Ok(())
+}

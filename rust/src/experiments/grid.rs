@@ -1,0 +1,199 @@
+//! The shared §4.2 experiment grid behind Figs 5–8: frequency period ×
+//! duration ∈ {2, 10, 100}², models {VGG16, ResNet-50}, policies
+//! {ODIN α=2, ODIN α=10, LLS}, 4000 queries, 4 EPs.
+
+use anyhow::Result;
+
+use crate::database::synth::synthesize;
+use crate::interference::{RandomInterference, Schedule};
+use crate::models;
+use crate::simulator::{simulate, Policy, SimConfig, SimSummary};
+
+use super::{ExpCtx, Output};
+
+pub const GRID_FREQS: [usize; 3] = [2, 10, 100];
+pub const GRID_DURS: [usize; 3] = [2, 10, 100];
+pub const GRID_MODELS: [&str; 2] = ["vgg16", "resnet50"];
+pub const GRID_POLICIES: [Policy; 3] = [
+    Policy::Odin { alpha: 2 },
+    Policy::Odin { alpha: 10 },
+    Policy::Lls,
+];
+const NUM_EPS: usize = 4;
+
+#[derive(Clone, Debug)]
+pub struct GridCell {
+    pub model: &'static str,
+    pub policy: Policy,
+    pub period: usize,
+    pub duration: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct GridResult {
+    pub cell: GridCell,
+    pub summary: SimSummary,
+}
+
+pub fn grid_cells() -> Vec<GridCell> {
+    let mut out = Vec::new();
+    for &model in &GRID_MODELS {
+        for &policy in &GRID_POLICIES {
+            for &period in &GRID_FREQS {
+                for &duration in &GRID_DURS {
+                    out.push(GridCell { model, policy, period, duration });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Run the full grid (all runs share the same interference schedule per
+/// (model, period, duration) so policies face identical conditions).
+pub fn run_grid(ctx: &ExpCtx) -> Result<Vec<GridResult>> {
+    let mut out = Vec::new();
+    for &model in &GRID_MODELS {
+        let spec = models::build(model, ctx.spatial).unwrap();
+        let db = synthesize(&spec, ctx.seed);
+        for &period in &GRID_FREQS {
+            for &duration in &GRID_DURS {
+                let schedule = Schedule::random(
+                    NUM_EPS,
+                    ctx.queries,
+                    RandomInterference {
+                        period,
+                        duration,
+                        seed: ctx.seed ^ (period as u64) << 8 ^ duration as u64,
+                        p_active: 1.0,
+                    },
+                );
+                for &policy in &GRID_POLICIES {
+                    let r = simulate(
+                        &db,
+                        &schedule,
+                        &SimConfig::new(NUM_EPS, policy),
+                    );
+                    out.push(GridResult {
+                        cell: GridCell { model, policy, period, duration },
+                        summary: SimSummary::of(&r),
+                    });
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Which figure to print from the grid data.
+#[derive(Clone, Copy, Debug)]
+pub enum Figure {
+    /// Fig 5: latency distributions (mean/p50/p99 per cell).
+    Latency,
+    /// Fig 6: throughput distributions.
+    Throughput,
+    /// Fig 7: tail-latency (p99) distribution per model/policy.
+    TailLatency,
+    /// Fig 8: % of time in rebalancing phases.
+    Overhead,
+}
+
+impl Figure {
+    fn id(self) -> &'static str {
+        match self {
+            Figure::Latency => "fig5",
+            Figure::Throughput => "fig6",
+            Figure::TailLatency => "fig7",
+            Figure::Overhead => "fig8",
+        }
+    }
+}
+
+pub fn run_figure(ctx: &ExpCtx, fig: Figure) -> Result<()> {
+    let mut out = Output::new(ctx, fig.id())?;
+    let results = run_grid(ctx)?;
+    match fig {
+        Figure::Latency => {
+            out.line("# Fig 5 — end-to-end latency (ms) per [period, duration] cell");
+            out.line("# paper shape: ODIN < LLS everywhere; high-frequency short");
+            out.line("#   interference is worst; alpha=10 <= alpha=2 latency mostly");
+            header(&mut out, "lat_mean  lat_p50   lat_p99");
+            for r in &results {
+                row(&mut out, r, format!(
+                    "{:>8.2}  {:>8.2}  {:>8.2}",
+                    r.summary.latency.mean * 1e3,
+                    r.summary.latency.p50 * 1e3,
+                    r.summary.latency.p99 * 1e3,
+                ));
+            }
+        }
+        Figure::Throughput => {
+            out.line("# Fig 6 — windowed throughput (q/s) per [period, duration] cell");
+            out.line("# paper shape: ODIN >= LLS in most cells; [100,100] comparable;");
+            out.line("#   rebalance phases appear as low-throughput outliers (w_min)");
+            header(&mut out, "tput_p50  w_p50   w_min  achieved");
+            for r in &results {
+                row(&mut out, r, format!(
+                    "{:>8.2} {:>6.2} {:>7.2}  {:>8.2}",
+                    r.summary.throughput.p50,
+                    r.summary.windowed.p50,
+                    r.summary.windowed.min,
+                    r.summary.achieved_throughput,
+                ));
+            }
+        }
+        Figure::TailLatency => {
+            out.line("# Fig 7 — tail (p99) latency distribution across grid cells (ms)");
+            out.line("# paper shape: ODIN tails significantly below LLS; ~14% lower avg");
+            for &model in &GRID_MODELS {
+                for &policy in &GRID_POLICIES {
+                    let tails: Vec<f64> = results
+                        .iter()
+                        .filter(|r| r.cell.model == model && r.cell.policy == policy)
+                        .map(|r| r.summary.tail_latency * 1e3)
+                        .collect();
+                    let s = crate::util::stats::Summary::of(&tails);
+                    out.line(format!(
+                        "{model:<9} {:<9} p99 across cells: min={:.2} mean={:.2} max={:.2} ms",
+                        policy.label(),
+                        s.min,
+                        s.mean,
+                        s.max
+                    ));
+                }
+            }
+        }
+        Figure::Overhead => {
+            out.line("# Fig 8 — % of time in rebalancing phases per cell");
+            out.line("# paper shape: highest at [2,2] (constant re-exploration),");
+            out.line("#   decreasing with longer frequency periods and durations");
+            header(&mut out, "rebal_%   episodes  serial/episode");
+            for r in &results {
+                row(&mut out, r, format!(
+                    "{:>7.2}%  {:>8}  {:>14.1}",
+                    r.summary.rebalance_fraction * 100.0,
+                    r.summary.num_rebalances,
+                    r.summary.serial_per_rebalance,
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn header(out: &mut Output, cols: &str) {
+    out.line(format!(
+        "{:<9} {:<9} {:>6} {:>8}  {cols}",
+        "model", "policy", "period", "duration"
+    ));
+}
+
+fn row(out: &mut Output, r: &GridResult, cols: String) {
+    out.line(format!(
+        "{:<9} {:<9} {:>6} {:>8}  {cols}",
+        r.cell.model,
+        r.cell.policy.label(),
+        r.cell.period,
+        r.cell.duration,
+    ));
+}

@@ -1,0 +1,113 @@
+//! Experiment runners: one per table/figure of the paper's evaluation.
+//!
+//! Every runner prints the rows/series the paper reports (and the paper's
+//! qualitative expectation alongside), and mirrors its output into
+//! `results/<id>.txt` when an output directory is set. All randomness is
+//! seeded — rows are bit-reproducible across runs.
+//!
+//! | id      | paper artifact                                        |
+//! |---------|-------------------------------------------------------|
+//! | table1  | the 12 colocation scenarios                           |
+//! | fig1    | motivation: interference vs static vs exhaustive      |
+//! | fig3    | ODIN reaction timeline                                |
+//! | fig4    | per-scenario slowdown of one VGG16 layer              |
+//! | fig5    | latency grid (freq × duration, 2 models, 3 policies)  |
+//! | fig6    | throughput grid                                       |
+//! | fig7    | tail-latency distribution                             |
+//! | fig8    | rebalancing overhead                                  |
+//! | fig9    | SLO violations vs SLO level                           |
+//! | fig10   | scalability (ResNet152, 4→52 EPs)                     |
+//! | summary | §4.2 headline averages (ODIN vs LLS)                  |
+//! | ablation| alpha / detection-threshold sweeps (extension)        |
+
+mod ablation;
+mod fig1;
+mod fig10;
+mod fig3;
+mod fig4;
+mod fig9;
+mod grid;
+mod summary;
+mod table1;
+
+use std::io::Write as _;
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+pub use grid::{grid_cells, run_grid, GridCell, GridResult, GRID_MODELS, GRID_POLICIES};
+
+/// Shared experiment context.
+#[derive(Clone, Debug)]
+pub struct ExpCtx {
+    /// Mirror output into `<out_dir>/<id>.txt` when set.
+    pub out_dir: Option<PathBuf>,
+    pub seed: u64,
+    /// Queries per simulation window (paper: 4000).
+    pub queries: usize,
+    /// Spatial resolution of the model specs (must match artifacts).
+    pub spatial: usize,
+}
+
+impl Default for ExpCtx {
+    fn default() -> Self {
+        ExpCtx { out_dir: None, seed: 42, queries: 4000, spatial: 64 }
+    }
+}
+
+/// Collects experiment output: stdout + optional file mirror.
+pub struct Output {
+    file: Option<std::fs::File>,
+}
+
+impl Output {
+    pub fn new(ctx: &ExpCtx, id: &str) -> Result<Output> {
+        let file = match &ctx.out_dir {
+            Some(dir) => {
+                std::fs::create_dir_all(dir)?;
+                Some(std::fs::File::create(dir.join(format!("{id}.txt")))?)
+            }
+            None => None,
+        };
+        Ok(Output { file })
+    }
+
+    pub fn line(&mut self, s: impl AsRef<str>) {
+        let s = s.as_ref();
+        println!("{s}");
+        if let Some(f) = &mut self.file {
+            let _ = writeln!(f, "{s}");
+        }
+    }
+}
+
+pub const ALL_IDS: [&str; 12] = [
+    "table1", "fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
+    "fig9", "fig10", "summary", "ablation",
+];
+
+/// Run one experiment (or `all`).
+pub fn run(id: &str, ctx: &ExpCtx) -> Result<()> {
+    match id {
+        "table1" => table1::run(ctx),
+        "fig1" => fig1::run(ctx),
+        "fig3" => fig3::run(ctx),
+        "fig4" => fig4::run(ctx),
+        "fig5" => grid::run_figure(ctx, grid::Figure::Latency),
+        "fig6" => grid::run_figure(ctx, grid::Figure::Throughput),
+        "fig7" => grid::run_figure(ctx, grid::Figure::TailLatency),
+        "fig8" => grid::run_figure(ctx, grid::Figure::Overhead),
+        "fig9" => fig9::run(ctx),
+        "fig10" => fig10::run(ctx),
+        "summary" => summary::run(ctx),
+        "ablation" => ablation::run(ctx),
+        "all" => {
+            for id in ALL_IDS {
+                println!("\n================ {id} ================");
+                run(id, ctx)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment {other:?}; have {ALL_IDS:?} or 'all'"),
+    }
+}

@@ -1,0 +1,90 @@
+//! §4.2 headline averages — the paper's quantitative claims, recomputed
+//! from the full grid:
+//!
+//! * ODIN latency vs LLS: −15.8% (α=10), −14.1% (α=2)
+//! * ODIN throughput vs LLS: ≈ +19% (any α)
+//! * ODIN tail latency vs LLS: −14%
+//! * serial queries per rebalance: LLS ≈ 1, ODIN ≈ 4 (α=2) / 12 (α=10)
+
+use anyhow::Result;
+
+use crate::simulator::Policy;
+
+use super::grid::{run_grid, GridResult, GRID_MODELS};
+use super::{ExpCtx, Output};
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let mut out = Output::new(ctx, "summary")?;
+    let results = run_grid(ctx)?;
+    out.line("# §4.2 headline averages over the 3x3 grid, both models");
+
+    let mean_of = |policy: Policy, f: &dyn Fn(&GridResult) -> f64| -> f64 {
+        let xs: Vec<f64> = results
+            .iter()
+            .filter(|r| r.cell.policy == policy)
+            .map(f)
+            .collect();
+        xs.iter().sum::<f64>() / xs.len() as f64
+    };
+
+    let lat = |r: &GridResult| r.summary.latency.mean;
+    let tput = |r: &GridResult| r.summary.throughput.p50;
+    let tail = |r: &GridResult| r.summary.tail_latency;
+    let serial = |r: &GridResult| r.summary.serial_per_rebalance;
+
+    let lls_lat = mean_of(Policy::Lls, &lat);
+    let lls_tput = mean_of(Policy::Lls, &tput);
+    let lls_tail = mean_of(Policy::Lls, &tail);
+
+    out.line(format!(
+        "{:<10} {:>11} {:>12} {:>11} {:>14}",
+        "policy", "lat(ms)", "tput(q/s)", "p99(ms)", "serial/rebal"
+    ));
+    for policy in [Policy::Odin { alpha: 2 }, Policy::Odin { alpha: 10 }, Policy::Lls] {
+        out.line(format!(
+            "{:<10} {:>11.2} {:>12.2} {:>11.2} {:>14.1}",
+            policy.label(),
+            mean_of(policy, &lat) * 1e3,
+            mean_of(policy, &tput),
+            mean_of(policy, &tail) * 1e3,
+            mean_of(policy, &serial),
+        ));
+    }
+    out.line("");
+    for (alpha, paper_lat) in [(2usize, 14.1f64), (10, 15.8)] {
+        let p = Policy::Odin { alpha };
+        out.line(format!(
+            "ODIN a={alpha}: latency {:+.1}% vs LLS (paper: -{paper_lat}%), \
+             throughput {:+.1}% (paper: +19%), tail {:+.1}% (paper: -14%)",
+            100.0 * (mean_of(p, &lat) - lls_lat) / lls_lat,
+            100.0 * (mean_of(p, &tput) - lls_tput) / lls_tput,
+            100.0 * (mean_of(p, &tail) - lls_tail) / lls_tail,
+        ));
+    }
+    out.line(format!(
+        "serial queries per rebalance: lls={:.1} (paper ~1), odin_a2={:.1} \
+         (paper ~4), odin_a10={:.1} (paper ~12)",
+        mean_of(Policy::Lls, &serial),
+        mean_of(Policy::Odin { alpha: 2 }, &serial),
+        mean_of(Policy::Odin { alpha: 10 }, &serial),
+    ));
+
+    // per-model deltas for the record
+    for &model in &GRID_MODELS {
+        let m_mean = |policy: Policy, f: &dyn Fn(&GridResult) -> f64| -> f64 {
+            let xs: Vec<f64> = results
+                .iter()
+                .filter(|r| r.cell.policy == policy && r.cell.model == model)
+                .map(f)
+                .collect();
+            xs.iter().sum::<f64>() / xs.len() as f64
+        };
+        let l = m_mean(Policy::Lls, &lat);
+        let o = m_mean(Policy::Odin { alpha: 10 }, &lat);
+        out.line(format!(
+            "{model}: ODIN a=10 latency {:+.1}% vs LLS",
+            100.0 * (o - l) / l
+        ));
+    }
+    Ok(())
+}

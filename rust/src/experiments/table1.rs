@@ -1,0 +1,32 @@
+//! Table 1: the colocation scenario catalogue.
+
+use anyhow::Result;
+
+use crate::interference::catalogue;
+
+use super::{ExpCtx, Output};
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let mut out = Output::new(ctx, "table1")?;
+    out.line("# Table 1 — interference colocation scenarios");
+    out.line("# (reconstructed from the paper's prose: iBench CPU/memBW ×");
+    out.line("#  threads {2,4,8} × placement {same cores, same socket})");
+    out.line(format!(
+        "{:<4} {:<16} {:<7} {:>8} {:<12} {:>9} {:>9}",
+        "id", "label", "kind", "threads", "placement", "cpu_press", "mem_press"
+    ));
+    for s in catalogue() {
+        let (cp, mp) = s.pressure();
+        out.line(format!(
+            "{:<4} {:<16} {:<7} {:>8} {:<12} {:>9.3} {:>9.3}",
+            s.id,
+            s.label(),
+            format!("{:?}", s.kind),
+            s.threads,
+            format!("{:?}", s.placement),
+            cp,
+            mp,
+        ));
+    }
+    Ok(())
+}

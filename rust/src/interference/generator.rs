@@ -1,0 +1,142 @@
+//! Real interference generators — an in-process reimplementation of the
+//! two iBench stressors the paper co-locates with pipeline stages.
+//!
+//! Used by `odin bench-db` to measure the per-layer timing database under
+//! genuine contention, and by examples/serve_pipeline.rs to disturb the
+//! live serving path. Threads are pinned to the victim EP's cores when the
+//! host has them (util::affinity degrades gracefully otherwise).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::util::affinity;
+
+use super::scenarios::{Scenario, StressKind};
+
+/// Working-set size of the memBW stressor: large enough to blow out any
+/// L2/L3 and hit DRAM (iBench memBW streams ~100s of MiB; 64 MiB keeps
+/// the sandbox friendly while still >> LLC).
+const MEMBW_WORKING_SET: usize = 64 << 20;
+
+/// A running stressor; dropping it stops and joins all threads.
+pub struct Stressor {
+    stop: Arc<AtomicBool>,
+    threads: Vec<JoinHandle<()>>,
+    /// Loop iterations completed — proves the stressor actually ran.
+    pub work_done: Arc<AtomicU64>,
+}
+
+impl Stressor {
+    /// Launch the stressor for `scenario`, pinning to `cores` when given.
+    pub fn launch(scenario: Scenario, cores: Option<Vec<usize>>) -> Stressor {
+        let stop = Arc::new(AtomicBool::new(false));
+        let work_done = Arc::new(AtomicU64::new(0));
+        let threads = (0..scenario.threads)
+            .map(|i| {
+                let stop = Arc::clone(&stop);
+                let work = Arc::clone(&work_done);
+                let cores = cores.clone();
+                let kind = scenario.kind;
+                std::thread::Builder::new()
+                    .name(format!("odin-stress-{i}"))
+                    .spawn(move || {
+                        if let Some(c) = cores {
+                            affinity::pin_current_thread(&c);
+                        }
+                        match kind {
+                            StressKind::Cpu => cpu_loop(&stop, &work),
+                            StressKind::MemBw => membw_loop(&stop, &work),
+                        }
+                    })
+                    .expect("spawn stressor")
+            })
+            .collect();
+        Stressor { stop, threads, work_done }
+    }
+
+    pub fn stop(mut self) -> u64 {
+        self.halt();
+        self.work_done.load(Ordering::Relaxed)
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Stressor {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+/// iBench CPU: dependent integer/float ALU chain, no memory traffic.
+fn cpu_loop(stop: &AtomicBool, work: &AtomicU64) {
+    let mut x: u64 = 0x9E3779B97F4A7C15;
+    let mut f: f64 = 1.000000001;
+    while !stop.load(Ordering::Acquire) {
+        for _ in 0..4096 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            f = (f * 1.0000001).sqrt() + 0.5;
+        }
+        std::hint::black_box((x, f));
+        work.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// iBench memBW: pointer-free streaming writes+reads over a >LLC buffer.
+fn membw_loop(stop: &AtomicBool, work: &AtomicU64) {
+    let words = MEMBW_WORKING_SET / 8;
+    let mut buf: Vec<u64> = vec![0; words];
+    let mut seed: u64 = 1;
+    while !stop.load(Ordering::Acquire) {
+        // stride of one cache line (8 words) touches every line with
+        // minimal ALU work — bandwidth-bound by construction
+        let mut i = 0;
+        while i < words {
+            buf[i] = buf[i].wrapping_add(seed);
+            i += 8;
+        }
+        seed = seed.wrapping_add(1);
+        std::hint::black_box(buf[seed as usize % words]);
+        work.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interference::scenarios::Placement;
+    use std::time::Duration;
+
+    fn scenario(kind: StressKind, threads: usize) -> Scenario {
+        Scenario { id: 1, kind, threads, placement: Placement::SameCores }
+    }
+
+    #[test]
+    fn cpu_stressor_does_work_and_stops() {
+        let s = Stressor::launch(scenario(StressKind::Cpu, 2), None);
+        std::thread::sleep(Duration::from_millis(50));
+        let done = s.stop();
+        assert!(done > 0, "cpu stressor made no progress");
+    }
+
+    #[test]
+    fn membw_stressor_does_work_and_stops() {
+        let s = Stressor::launch(scenario(StressKind::MemBw, 1), None);
+        std::thread::sleep(Duration::from_millis(120));
+        let done = s.stop();
+        assert!(done > 0, "membw stressor made no progress");
+    }
+
+    #[test]
+    fn drop_stops_threads() {
+        let s = Stressor::launch(scenario(StressKind::Cpu, 1), Some(vec![0]));
+        std::thread::sleep(Duration::from_millis(20));
+        drop(s); // must join, not leak a spinning thread
+    }
+}

@@ -1,0 +1,10 @@
+//! Interference machinery: the paper's Table-1 scenario catalogue, real
+//! iBench-style stress generators, and query-indexed schedules.
+
+pub mod generator;
+pub mod scenarios;
+pub mod schedule;
+
+pub use generator::Stressor;
+pub use scenarios::{catalogue, Placement, Scenario, StressKind, NUM_SCENARIOS};
+pub use schedule::{EpScenarios, RandomInterference, Schedule};

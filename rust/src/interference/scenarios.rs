@@ -1,0 +1,167 @@
+//! The colocation scenario catalogue (paper Table 1).
+//!
+//! The paper builds 12 scenarios from the iBench `CPU` and `memBW`
+//! stressors by varying thread count and core placement. The table itself
+//! is an image in the paper; this reconstruction follows its prose
+//! description exactly: two stressor kinds × thread counts {2, 4, 8} ×
+//! placements {same cores as the pipeline stage, other cores of the same
+//! socket} = 12 scenarios. Scenario 0 ("none") is the interference-free
+//! column of the m×(n+1) database.
+
+/// Stressor kind, mirroring the two iBench benchmarks the paper uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StressKind {
+    /// iBench `CPU`: saturates the ALUs / pipeline ports.
+    Cpu,
+    /// iBench `memBW`: streams a large working set, saturating memory
+    /// bandwidth and polluting the shared cache.
+    MemBw,
+}
+
+/// Where the stressor threads are pinned relative to the victim stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// Timeshares the exact cores of the pipeline stage (SMT siblings /
+    /// same physical cores) — the harshest setting.
+    SameCores,
+    /// Other cores of the same socket: contends only on shared resources
+    /// (LLC, memory controller).
+    SameSocket,
+}
+
+/// One row of Table 1.
+#[derive(Clone, Copy, Debug)]
+pub struct Scenario {
+    /// 1-based id; 0 is reserved for "no interference".
+    pub id: usize,
+    pub kind: StressKind,
+    pub threads: usize,
+    pub placement: Placement,
+}
+
+pub const NUM_SCENARIOS: usize = 12;
+
+/// The full catalogue, ids 1..=12.
+pub fn catalogue() -> Vec<Scenario> {
+    let mut out = Vec::with_capacity(NUM_SCENARIOS);
+    let mut id = 1;
+    for kind in [StressKind::Cpu, StressKind::MemBw] {
+        for placement in [Placement::SameCores, Placement::SameSocket] {
+            for threads in [2, 4, 8] {
+                out.push(Scenario { id, kind, threads, placement });
+                id += 1;
+            }
+        }
+    }
+    out
+}
+
+impl Scenario {
+    pub fn by_id(id: usize) -> Option<Scenario> {
+        if id == 0 || id > NUM_SCENARIOS {
+            return None;
+        }
+        Some(catalogue()[id - 1])
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "{}_{}t_{}",
+            match self.kind {
+                StressKind::Cpu => "cpu",
+                StressKind::MemBw => "membw",
+            },
+            self.threads,
+            match self.placement {
+                Placement::SameCores => "same",
+                Placement::SameSocket => "socket",
+            }
+        )
+    }
+
+    /// Normalized contention pressures in [0, 1]: (cpu, mem).
+    ///
+    /// Drives the *synthetic* database (database::synth). Calibrated so
+    /// the resulting slowdowns span the 1.1×–3× band the paper's Fig. 4
+    /// shows for a VGG16 layer across the 12 scenarios.
+    pub fn pressure(&self) -> (f64, f64) {
+        let occupancy = self.threads as f64 / 8.0; // EPs are 8 cores wide
+        let locality = match self.placement {
+            Placement::SameCores => 1.0,
+            Placement::SameSocket => 0.45,
+        };
+        match self.kind {
+            StressKind::Cpu => (occupancy * locality, 0.15 * occupancy * locality),
+            StressKind::MemBw => {
+                // memBW hurts even from other cores (shared controller);
+                // its cpu-port pressure is mild.
+                let mem_locality = match self.placement {
+                    Placement::SameCores => 1.0,
+                    Placement::SameSocket => 0.75,
+                };
+                (0.2 * occupancy * locality, occupancy * mem_locality)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twelve_scenarios_with_unique_ids() {
+        let cat = catalogue();
+        assert_eq!(cat.len(), NUM_SCENARIOS);
+        for (i, s) in cat.iter().enumerate() {
+            assert_eq!(s.id, i + 1);
+        }
+    }
+
+    #[test]
+    fn by_id_bounds() {
+        assert!(Scenario::by_id(0).is_none());
+        assert!(Scenario::by_id(13).is_none());
+        assert_eq!(Scenario::by_id(1).unwrap().id, 1);
+        assert_eq!(Scenario::by_id(12).unwrap().id, 12);
+    }
+
+    #[test]
+    fn labels_unique() {
+        let cat = catalogue();
+        let mut labels: Vec<String> = cat.iter().map(|s| s.label()).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), NUM_SCENARIOS);
+    }
+
+    #[test]
+    fn pressure_monotone_in_threads() {
+        let cat = catalogue();
+        for w in cat.chunks(3) {
+            // within a (kind, placement) group threads go 2,4,8
+            let p: Vec<f64> = w.iter().map(|s| s.pressure().0 + s.pressure().1).collect();
+            assert!(p[0] < p[1] && p[1] < p[2], "{w:?}");
+        }
+    }
+
+    #[test]
+    fn same_cores_harsher_than_socket() {
+        for kind in [StressKind::Cpu, StressKind::MemBw] {
+            let same = Scenario { id: 0, kind, threads: 8, placement: Placement::SameCores };
+            let sock = Scenario { id: 0, kind, threads: 8, placement: Placement::SameSocket };
+            let (c1, m1) = same.pressure();
+            let (c2, m2) = sock.pressure();
+            assert!(c1 + m1 > c2 + m2);
+        }
+    }
+
+    #[test]
+    fn pressures_bounded() {
+        for s in catalogue() {
+            let (c, m) = s.pressure();
+            assert!((0.0..=1.0).contains(&c), "{s:?}");
+            assert!((0.0..=1.0).contains(&m), "{s:?}");
+        }
+    }
+}

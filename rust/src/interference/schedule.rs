@@ -1,0 +1,232 @@
+//! Interference schedules: when, where, and which scenario.
+//!
+//! The paper's §4.2 grid: "frequency periods of 2, 10, and 100 queries and
+//! duration 2, 10, and 100 queries" over a 4000-query window, with random
+//! scenarios induced on random execution places. A schedule is expanded
+//! ahead of time into a per-query → per-EP scenario map so simulator runs
+//! are reproducible and O(1) per query.
+
+use crate::util::Rng;
+
+use super::scenarios::NUM_SCENARIOS;
+
+/// Scenario id active on each EP (0 = no interference).
+pub type EpScenarios = Vec<usize>;
+
+/// A fully-expanded schedule: `state[q][ep]` = scenario id while query q
+/// is being served.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub num_eps: usize,
+    states: Vec<EpScenarios>,
+    /// Query indices at which the EP-state vector changed (rebalancing
+    /// triggers are only possible here).
+    pub change_points: Vec<usize>,
+}
+
+/// Parameters of the paper's random interference process.
+#[derive(Clone, Copy, Debug)]
+pub struct RandomInterference {
+    /// A new interference event is drawn every `period` queries.
+    pub period: usize,
+    /// Each event keeps its scenario active for `duration` queries.
+    pub duration: usize,
+    /// Seed for the draw sequence.
+    pub seed: u64,
+    /// Probability that a draw actually places interference (the paper
+    /// always places one; keep 1.0 to match).
+    pub p_active: f64,
+}
+
+impl Schedule {
+    /// The interference-free schedule.
+    pub fn none(num_eps: usize, num_queries: usize) -> Schedule {
+        Schedule {
+            num_eps,
+            states: vec![vec![0; num_eps]; num_queries.max(1)],
+            change_points: Vec::new(),
+        }
+    }
+
+    /// Expand the paper's random process: every `period` queries pick a
+    /// random EP and a random scenario, active for `duration` queries
+    /// (overwriting that EP's previous state; other EPs keep theirs).
+    pub fn random(
+        num_eps: usize,
+        num_queries: usize,
+        params: RandomInterference,
+    ) -> Schedule {
+        assert!(num_eps > 0 && num_queries > 0);
+        assert!(params.period > 0 && params.duration > 0);
+        let mut rng = Rng::new(params.seed);
+        let mut states = Vec::with_capacity(num_queries);
+        // expiry[ep] = query index when the current scenario ends
+        let mut current = vec![0usize; num_eps];
+        let mut expiry = vec![0usize; num_eps];
+        let mut change_points = Vec::new();
+        let mut prev: Option<EpScenarios> = None;
+        for q in 0..num_queries {
+            // expire finished events
+            for ep in 0..num_eps {
+                if current[ep] != 0 && q >= expiry[ep] {
+                    current[ep] = 0;
+                }
+            }
+            // draw a new event at each period boundary
+            if q % params.period == 0 && rng.chance(params.p_active) {
+                let ep = rng.below(num_eps);
+                let scenario = 1 + rng.below(NUM_SCENARIOS);
+                current[ep] = scenario;
+                expiry[ep] = q + params.duration;
+            }
+            if prev.as_ref() != Some(&current) {
+                change_points.push(q);
+                prev = Some(current.clone());
+            }
+            states.push(current.clone());
+        }
+        // the very first entry is only a "change" if it has interference
+        if states[0].iter().all(|&s| s == 0) && change_points.first() == Some(&0) {
+            change_points.remove(0);
+        }
+        Schedule { num_eps, states, change_points }
+    }
+
+    /// Hand-built schedule from (start_query, ep, scenario_id, duration)
+    /// events — used by the Fig. 3 timeline experiment.
+    pub fn from_events(
+        num_eps: usize,
+        num_queries: usize,
+        events: &[(usize, usize, usize, usize)],
+    ) -> Schedule {
+        let mut states = vec![vec![0usize; num_eps]; num_queries];
+        for &(start, ep, scenario, duration) in events {
+            assert!(ep < num_eps, "event EP {ep} out of range");
+            assert!(scenario <= NUM_SCENARIOS);
+            for q in start..(start + duration).min(num_queries) {
+                states[q][ep] = scenario;
+            }
+        }
+        let mut change_points = Vec::new();
+        for q in 0..num_queries {
+            if q > 0 && states[q] != states[q - 1] {
+                change_points.push(q);
+            }
+        }
+        Schedule { num_eps, states, change_points }
+    }
+
+    pub fn num_queries(&self) -> usize {
+        self.states.len()
+    }
+
+    /// Scenario vector while query q is in flight (clamps past the end).
+    pub fn at(&self, q: usize) -> &EpScenarios {
+        &self.states[q.min(self.states.len() - 1)]
+    }
+
+    /// Fraction of (query, EP) slots that have interference — a sanity
+    /// metric printed by experiment runners.
+    pub fn interference_load(&self) -> f64 {
+        let total = (self.states.len() * self.num_eps) as f64;
+        let active: usize = self
+            .states
+            .iter()
+            .map(|s| s.iter().filter(|&&x| x != 0).count())
+            .sum();
+        active as f64 / total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(period: usize, duration: usize) -> RandomInterference {
+        RandomInterference { period, duration, seed: 42, p_active: 1.0 }
+    }
+
+    #[test]
+    fn none_schedule_is_clean() {
+        let s = Schedule::none(4, 100);
+        assert_eq!(s.interference_load(), 0.0);
+        assert!(s.change_points.is_empty());
+    }
+
+    #[test]
+    fn random_is_deterministic_per_seed() {
+        let a = Schedule::random(4, 500, params(10, 10));
+        let b = Schedule::random(4, 500, params(10, 10));
+        for q in 0..500 {
+            assert_eq!(a.at(q), b.at(q));
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = Schedule::random(4, 500, params(10, 10));
+        let mut p = params(10, 10);
+        p.seed = 43;
+        let b = Schedule::random(4, 500, p);
+        assert!((0..500).any(|q| a.at(q) != b.at(q)));
+    }
+
+    #[test]
+    fn duration_respected() {
+        // period 100, duration 2: interference lives exactly 2 queries
+        let s = Schedule::random(4, 400, params(100, 2));
+        for q in 0..400 {
+            let active = s.at(q).iter().any(|&x| x != 0);
+            let in_window = q % 100 < 2;
+            assert_eq!(active, in_window, "q={q}");
+        }
+    }
+
+    #[test]
+    fn long_duration_keeps_interference_on() {
+        // duration == period: interference is continuous on some EP
+        let s = Schedule::random(2, 300, params(10, 10));
+        let covered = (0..300)
+            .filter(|&q| s.at(q).iter().any(|&x| x != 0))
+            .count();
+        assert_eq!(covered, 300);
+    }
+
+    #[test]
+    fn scenario_ids_in_range() {
+        let s = Schedule::random(4, 1000, params(2, 10));
+        for q in 0..1000 {
+            for &sc in s.at(q) {
+                assert!(sc <= NUM_SCENARIOS);
+            }
+        }
+    }
+
+    #[test]
+    fn from_events_places_and_expires() {
+        let s = Schedule::from_events(4, 30, &[(5, 2, 7, 10)]);
+        assert_eq!(s.at(4)[2], 0);
+        assert_eq!(s.at(5)[2], 7);
+        assert_eq!(s.at(14)[2], 7);
+        assert_eq!(s.at(15)[2], 0);
+        assert_eq!(s.change_points, vec![5, 15]);
+    }
+
+    #[test]
+    fn change_points_match_state_transitions() {
+        let s = Schedule::random(4, 2000, params(10, 5));
+        for (i, &cp) in s.change_points.iter().enumerate() {
+            assert!(cp > 0 || i == 0);
+            if cp > 0 {
+                assert_ne!(s.at(cp), s.at(cp - 1), "cp={cp}");
+            }
+        }
+    }
+
+    #[test]
+    fn interference_load_scales_with_duration() {
+        let short = Schedule::random(4, 4000, params(100, 2));
+        let long = Schedule::random(4, 4000, params(100, 100));
+        assert!(long.interference_load() > short.interference_load());
+    }
+}

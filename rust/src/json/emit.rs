@@ -1,0 +1,137 @@
+//! JSON emission (pretty, deterministic key order via BTreeMap).
+
+use super::value::Value;
+
+/// Pretty-print with 1-space indent (matches the python manifest style).
+pub fn to_string_pretty(v: &Value) -> String {
+    let mut out = String::new();
+    emit(v, 0, &mut out);
+    out
+}
+
+fn emit(v: &Value, depth: usize, out: &mut String) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(true) => out.push_str("true"),
+        Value::Bool(false) => out.push_str("false"),
+        Value::Num(n) => emit_num(*n, out),
+        Value::Str(s) => emit_str(s, out),
+        Value::Arr(items) => {
+            if items.is_empty() {
+                out.push_str("[]");
+                return;
+            }
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push('\n');
+                indent(depth + 1, out);
+                emit(item, depth + 1, out);
+            }
+            out.push('\n');
+            indent(depth, out);
+            out.push(']');
+        }
+        Value::Obj(map) => {
+            if map.is_empty() {
+                out.push_str("{}");
+                return;
+            }
+            out.push('{');
+            for (i, (k, val)) in map.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push('\n');
+                indent(depth + 1, out);
+                emit_str(k, out);
+                out.push_str(": ");
+                emit(val, depth + 1, out);
+            }
+            out.push('\n');
+            indent(depth, out);
+            out.push('}');
+        }
+    }
+}
+
+fn indent(depth: usize, out: &mut String) {
+    for _ in 0..depth {
+        out.push(' ');
+    }
+}
+
+fn emit_num(n: f64, out: &mut String) {
+    if !n.is_finite() {
+        // JSON has no NaN/Inf; null is the least-bad representation.
+        out.push_str("null");
+    } else if n.fract() == 0.0 && n.abs() < 9.0e15 {
+        out.push_str(&format!("{}", n as i64));
+    } else {
+        out.push_str(&format!("{n}"));
+    }
+}
+
+fn emit_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse::parse;
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let src = Value::obj(vec![
+            ("nums", Value::arr(vec![Value::from(1usize), Value::from(2.5)])),
+            ("s", Value::from("a\nb\"c\\d")),
+            ("t", Value::from(true)),
+            ("nil", Value::Null),
+        ]);
+        let text = to_string_pretty(&src);
+        assert_eq!(parse(&text).unwrap(), src);
+    }
+
+    #[test]
+    fn integers_emit_without_decimal_point() {
+        assert_eq!(to_string_pretty(&Value::Num(42.0)), "42");
+        assert_eq!(to_string_pretty(&Value::Num(-3.0)), "-3");
+        assert_eq!(to_string_pretty(&Value::Num(2.5)), "2.5");
+    }
+
+    #[test]
+    fn nan_becomes_null() {
+        assert_eq!(to_string_pretty(&Value::Num(f64::NAN)), "null");
+    }
+
+    #[test]
+    fn deterministic_key_order() {
+        let v = Value::obj(vec![("b", Value::Null), ("a", Value::Null)]);
+        let text = to_string_pretty(&v);
+        assert!(text.find("\"a\"").unwrap() < text.find("\"b\"").unwrap());
+    }
+
+    #[test]
+    fn control_chars_escaped() {
+        let text = to_string_pretty(&Value::from("\u{1}"));
+        assert_eq!(text, "\"\\u0001\"");
+        assert_eq!(parse(&text).unwrap().as_str().unwrap(), "\u{1}");
+    }
+}

@@ -1,0 +1,11 @@
+//! Minimal JSON (RFC 8259) parser/emitter — serde is not in the offline
+//! vendor set. Consumed by: the AOT manifest loader (`runtime::artifact`),
+//! the timing-database files (`database`), experiment configs and results.
+
+mod emit;
+mod parse;
+mod value;
+
+pub use emit::to_string_pretty;
+pub use parse::{parse, ParseError};
+pub use value::Value;

@@ -1,0 +1,29 @@
+//! # ODIN — Overcoming Dynamic Interference in iNference pipelines
+//!
+//! Reproduction of Soomro, Papadopoulou & Pericàs (Euro-Par 2023) as a
+//! three-layer rust + JAX + Pallas serving stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: an online pipeline-
+//!   stage rebalancer ([`coordinator::odin`]) plus the serving runtime it
+//!   lives in: execution places, a bind-to-stage pipeline server
+//!   ([`serving`]), a PJRT artifact runtime ([`runtime`]), the
+//!   interference machinery ([`interference`]) and the discrete-event
+//!   simulator ([`simulator`]) that regenerates every figure of the paper.
+//! * **L2/L1 (python, build-time only)** — JAX CNN models whose units are
+//!   Pallas kernels, AOT-lowered to HLO text artifacts this crate loads.
+//!
+//! Entry points: the `odin` binary (`rust/src/main.rs`), the examples in
+//! `examples/`, and the per-figure benches in `rust/benches/`.
+
+pub mod cli;
+pub mod coordinator;
+pub mod database;
+pub mod experiments;
+pub mod interference;
+pub mod json;
+pub mod models;
+pub mod pipeline;
+pub mod runtime;
+pub mod serving;
+pub mod simulator;
+pub mod util;

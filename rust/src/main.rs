@@ -1,0 +1,266 @@
+//! `odin` — the leader binary.
+//!
+//! Subcommands:
+//!   simulate     run one simulation window and print its summary
+//!   experiment   regenerate paper tables/figures (table1, fig1..fig10,
+//!                summary, or `all`)
+//!   bench-db     measure the per-layer timing database on this host
+//!                through the PJRT runtime, under real stressors
+//!   verify       compile artifacts and check gold numerics
+//!   serve        run the live pipeline server on N random queries
+//!   models       list built-in model specs
+
+use anyhow::{anyhow, bail, Result};
+
+use odin::cli::{Args, CliError, Command};
+use odin::coordinator::optimal_config;
+use odin::database::measure::{measure, MeasureOpts};
+use odin::database::synth::synthesize;
+use odin::database::TimingDb;
+use odin::experiments::{self, ExpCtx};
+use odin::interference::{RandomInterference, Schedule};
+use odin::models;
+use odin::runtime::{ExecService, Manifest, ModelRuntime, RuntimeTimer, Tensor};
+use odin::serving::{PipelineServer, ServeReport, ServerOpts};
+use odin::simulator::{simulate, Policy, SimConfig, SimSummary};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dispatch(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            if let Some(cli) = e.downcast_ref::<CliError>() {
+                if matches!(cli, CliError::HelpRequested(_)) {
+                    println!("{cli}");
+                    0
+                } else {
+                    eprintln!("error: {cli}");
+                    2
+                }
+            } else {
+                eprintln!("error: {e:#}");
+                1
+            }
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> String {
+    "odin — ODIN inference-pipeline coordinator (paper reproduction)\n\n\
+     subcommands:\n\
+       simulate     one simulation window (policy, schedule, model)\n\
+       experiment   regenerate paper artifacts: table1 fig1 fig3..fig10 summary all\n\
+       bench-db     measure the per-layer timing database via PJRT\n\
+       verify       compile artifacts + gold numerics check\n\
+       serve        live pipeline server demo\n\
+       models       list model specs\n\n\
+     `odin <subcommand> --help` for flags"
+        .to_string()
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let Some(sub) = argv.first() else {
+        println!("{}", usage());
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match sub.as_str() {
+        "simulate" => cmd_simulate(rest),
+        "experiment" => cmd_experiment(rest),
+        "bench-db" => cmd_bench_db(rest),
+        "verify" => cmd_verify(rest),
+        "serve" => cmd_serve(rest),
+        "models" => cmd_models(rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}\n{}", usage()),
+    }
+}
+
+fn parse_policy(args: &Args) -> Result<Policy> {
+    Ok(match args.get("policy") {
+        "odin" => Policy::Odin { alpha: args.usize("alpha")? },
+        "lls" => Policy::Lls,
+        "oracle" => Policy::Oracle,
+        "static" => Policy::Static,
+        other => bail!("unknown policy {other:?} (odin|lls|oracle|static)"),
+    })
+}
+
+fn cmd_simulate(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("simulate", "run one simulation window")
+        .flag("model", "vgg16", "vgg16 | resnet50 | resnet152")
+        .flag("eps", "4", "number of execution places")
+        .flag("queries", "4000", "queries in the window")
+        .flag("policy", "odin", "odin | lls | oracle | static")
+        .flag("alpha", "10", "ODIN exploration budget")
+        .flag("period", "10", "interference frequency period (queries)")
+        .flag("duration", "10", "interference duration (queries)")
+        .flag("seed", "42", "rng seed")
+        .flag("spatial", "64", "model input resolution")
+        .flag("db", "", "timing database json (default: synthetic)")
+        .switch("no-interference", "run a clean window");
+    let args = cmd.parse(argv)?;
+    let spec = models::build(args.get("model"), args.usize("spatial")?)
+        .ok_or_else(|| anyhow!("unknown model {}", args.get("model")))?;
+    let db = if args.get("db").is_empty() {
+        synthesize(&spec, args.u64("seed")?)
+    } else {
+        TimingDb::load(args.get("db")).map_err(|e| anyhow!(e))?
+    };
+    let eps = args.usize("eps")?;
+    let queries = args.usize("queries")?;
+    let schedule = if args.has("no-interference") {
+        Schedule::none(eps, queries)
+    } else {
+        Schedule::random(
+            eps,
+            queries,
+            RandomInterference {
+                period: args.usize("period")?,
+                duration: args.usize("duration")?,
+                seed: args.u64("seed")?,
+                p_active: 1.0,
+            },
+        )
+    };
+    let policy = parse_policy(&args)?;
+    let r = simulate(&db, &schedule, &SimConfig::new(eps, policy));
+    let s = SimSummary::of(&r);
+    println!(
+        "{}",
+        s.row(&format!(
+            "{}/{}/p{}d{}",
+            args.get("model"),
+            policy.label(),
+            args.get("period"),
+            args.get("duration")
+        ))
+    );
+    println!(
+        "final config {}  peak {:.2} q/s  interference load {:.1}%",
+        r.final_config,
+        r.peak_throughput,
+        100.0 * schedule.interference_load()
+    );
+    Ok(())
+}
+
+fn cmd_experiment(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("experiment", "regenerate paper tables/figures")
+        .positional("id", "table1|fig1|fig3..fig10|summary|all")
+        .flag("out", "results", "output directory ('' = stdout only)")
+        .flag("queries", "4000", "queries per simulation window")
+        .flag("seed", "42", "rng seed")
+        .flag("spatial", "64", "model input resolution");
+    let args = cmd.parse(argv)?;
+    let id = args
+        .positional(0)
+        .ok_or_else(|| anyhow!("missing experiment id"))?;
+    let ctx = ExpCtx {
+        out_dir: (!args.get("out").is_empty()).then(|| args.get("out").into()),
+        seed: args.u64("seed")?,
+        queries: args.usize("queries")?,
+        spatial: args.usize("spatial")?,
+    };
+    experiments::run(id, &ctx)
+}
+
+fn cmd_bench_db(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("bench-db", "measure the per-layer timing database")
+        .flag("model", "vgg16", "model artifacts to measure")
+        .flag("out", "artifacts/db_measured.json", "output path")
+        .flag("reps", "5", "timed repetitions per (unit, scenario)")
+        .flag("artifacts", "artifacts", "artifact directory");
+    let args = cmd.parse(argv)?;
+    let manifest = Manifest::load(args.get("artifacts"))?;
+    let model = manifest
+        .model(args.get("model"))
+        .ok_or_else(|| anyhow!("{} not in artifacts", args.get("model")))?;
+    eprintln!("compiling {} ({} units) ...", model.name, model.units.len());
+    let rt = ModelRuntime::load(model)?;
+    let mut timer = RuntimeTimer::new(&rt)?;
+    eprintln!("measuring 13 columns x {} units ...", model.units.len());
+    let opts = MeasureOpts {
+        reps: args.usize("reps")?,
+        warmup: 1,
+        stress_cores: None,
+    };
+    let db = measure(&mut timer, &opts)?;
+    db.save(args.get("out"))?;
+    println!(
+        "wrote {} ({} units, max slowdown {:.2}x)",
+        args.get("out"),
+        db.num_units(),
+        db.max_slowdown()
+    );
+    Ok(())
+}
+
+fn cmd_verify(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("verify", "compile artifacts + gold numerics check")
+        .flag("artifacts", "artifacts", "artifact directory")
+        .flag("tol", "0.001", "max |delta| tolerance");
+    let args = cmd.parse(argv)?;
+    let manifest = Manifest::load(args.get("artifacts"))?;
+    for model in &manifest.models {
+        let rt = ModelRuntime::load(model)?;
+        let (checked, worst) = rt.verify_gold(args.f64("tol")?)?;
+        println!(
+            "{}: {} units compiled, {checked} gold-verified, max |delta| = {worst:.2e}",
+            model.name,
+            model.units.len()
+        );
+    }
+    println!("verify OK");
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("serve", "live pipeline server demo")
+        .flag("model", "vgg16", "model artifacts to serve")
+        .flag("queries", "24", "queries to serve")
+        .flag("eps", "4", "pipeline stages / execution places")
+        .flag("alpha", "2", "ODIN exploration budget")
+        .flag("artifacts", "artifacts", "artifact directory");
+    let args = cmd.parse(argv)?;
+    let manifest = Manifest::load(args.get("artifacts"))?;
+    let model = manifest
+        .model(args.get("model"))
+        .ok_or_else(|| anyhow!("{} not in artifacts", args.get("model")))?;
+    let eps = args.usize("eps")?;
+    let service = ExecService::spawn(model.clone())?;
+    let spec = models::build(&model.name, manifest.spatial).unwrap();
+    let db = synthesize(&spec, 7);
+    let (config, _) = optimal_config(&db, &vec![0usize; eps], eps);
+    let opts = ServerOpts {
+        num_eps: eps,
+        alpha: args.usize("alpha")?,
+        ..ServerOpts::default()
+    };
+    let mut server = PipelineServer::new(service.handle(), config, opts);
+    let n = args.usize("queries")?;
+    let inputs: Vec<Tensor> = (0..n)
+        .map(|i| Tensor::random(&model.input_shape, i as u64, 1.0))
+        .collect();
+    let t0 = std::time::Instant::now();
+    let done = server.serve(inputs)?;
+    ServeReport::of(&done, t0.elapsed().as_secs_f64()).print("serve");
+    println!("final config {}", server.config());
+    Ok(())
+}
+
+fn cmd_models(_argv: &[String]) -> Result<()> {
+    for name in models::MODEL_NAMES {
+        let m = models::build(name, 64).unwrap();
+        println!(
+            "{name:<10} {:>3} units  {:>7.2} GFLOP/query  (spatial 64)",
+            m.num_units(),
+            m.total_flops() as f64 / 1e9
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,168 @@
+//! CNN model metadata: the schedulable units of each inference pipeline.
+//!
+//! This mirrors `python/compile/model.py` — same unit decomposition, same
+//! FLOP formulas — so the simulator and the synthetic timing database work
+//! without artifacts, and the runtime can cross-check the AOT manifest
+//! against the expected structure.
+
+mod resnet;
+mod vgg;
+
+pub use resnet::{resnet152, resnet50};
+pub use vgg::vgg16;
+
+/// What a unit computes; drives the synthetic DB's interference
+/// sensitivity model (conv is compute-heavy, dense is memory-heavy, …).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnitKind {
+    Conv,
+    ConvPool,
+    Dense,
+    Stem,
+    Block,
+    Classifier,
+}
+
+impl UnitKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            UnitKind::Conv => "conv",
+            UnitKind::ConvPool => "conv_pool",
+            UnitKind::Dense => "dense",
+            UnitKind::Stem => "stem",
+            UnitKind::Block => "block",
+            UnitKind::Classifier => "classifier",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<UnitKind> {
+        Some(match s {
+            "conv" => UnitKind::Conv,
+            "conv_pool" => UnitKind::ConvPool,
+            "dense" => UnitKind::Dense,
+            "stem" => UnitKind::Stem,
+            "block" => UnitKind::Block,
+            "classifier" => UnitKind::Classifier,
+            _ => return None,
+        })
+    }
+
+    /// Arithmetic intensity class ∈ [0,1]: 1 = pure compute (convs),
+    /// 0 = pure memory streaming. Used to weight CPU-vs-memBW
+    /// interference sensitivity in the synthetic database.
+    pub fn compute_intensity(self) -> f64 {
+        match self {
+            UnitKind::Conv | UnitKind::ConvPool => 0.85,
+            UnitKind::Stem => 0.8,
+            UnitKind::Block => 0.75,
+            UnitKind::Dense => 0.35, // large weight streams, low reuse
+            UnitKind::Classifier => 0.4,
+        }
+    }
+}
+
+/// One schedulable pipeline unit (a "layer" in the paper's terminology).
+#[derive(Clone, Debug)]
+pub struct UnitSpec {
+    pub name: String,
+    pub kind: UnitKind,
+    /// MAC-based FLOP estimate (same formula as python model.py).
+    pub flops: u64,
+    /// Total parameter elements (weight streaming volume).
+    pub param_elems: u64,
+    /// Activation elements in + out (inter-stage transfer volume).
+    pub act_elems: u64,
+}
+
+/// A model = an ordered list of units; pipelines partition this list.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub spatial: usize,
+    pub units: Vec<UnitSpec>,
+}
+
+impl ModelSpec {
+    pub fn num_units(&self) -> usize {
+        self.units.len()
+    }
+
+    pub fn total_flops(&self) -> u64 {
+        self.units.iter().map(|u| u.flops).sum()
+    }
+}
+
+/// Look up a model by name at the given input resolution.
+pub fn build(name: &str, spatial: usize) -> Option<ModelSpec> {
+    match name {
+        "vgg16" => Some(vgg16(spatial)),
+        "resnet50" => Some(resnet50(spatial)),
+        "resnet152" => Some(resnet152(spatial)),
+        _ => None,
+    }
+}
+
+pub const MODEL_NAMES: [&str; 3] = ["vgg16", "resnet50", "resnet152"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_counts_match_paper() {
+        assert_eq!(vgg16(64).num_units(), 16);
+        assert_eq!(resnet50(64).num_units(), 18);
+        // paper: "maximum number of pipeline stages ResNet152 could run
+        // with is 52"
+        assert_eq!(resnet152(64).num_units(), 52);
+    }
+
+    #[test]
+    fn build_dispatches() {
+        for name in MODEL_NAMES {
+            assert!(build(name, 32).is_some());
+        }
+        assert!(build("alexnet", 32).is_none());
+    }
+
+    #[test]
+    fn flops_positive_everywhere() {
+        for name in MODEL_NAMES {
+            let m = build(name, 64).unwrap();
+            for u in &m.units {
+                assert!(u.flops > 0, "{}/{}", name, u.name);
+                assert!(u.act_elems > 0, "{}/{}", name, u.name);
+            }
+        }
+    }
+
+    #[test]
+    fn vgg_flops_match_python_formula() {
+        // conv1_1 at 64x64: 2 * 1*64*64*64 * 3*3*3 = 14,155,776
+        let m = vgg16(64);
+        assert_eq!(m.units[0].flops, 14_155_776);
+        // fc2: 2 * 4096 * 4096
+        let fc2 = &m.units[14];
+        assert_eq!(fc2.flops, 2 * 4096 * 4096);
+    }
+
+    #[test]
+    fn spatial_scaling() {
+        assert!(vgg16(64).total_flops() > 3 * vgg16(32).total_flops());
+    }
+
+    #[test]
+    fn kind_roundtrip() {
+        for k in [
+            UnitKind::Conv,
+            UnitKind::ConvPool,
+            UnitKind::Dense,
+            UnitKind::Stem,
+            UnitKind::Block,
+            UnitKind::Classifier,
+        ] {
+            assert_eq!(UnitKind::parse(k.as_str()), Some(k));
+        }
+        assert_eq!(UnitKind::parse("pool"), None);
+    }
+}

@@ -1,0 +1,105 @@
+//! ResNet-50 / ResNet-152 unit decompositions (bottleneck blocks as single
+//! units), mirroring python/compile/model.py `_build_resnet`.
+
+use super::{ModelSpec, UnitKind, UnitSpec};
+
+const STAGE_WIDTH: [u64; 4] = [64, 128, 256, 512];
+
+fn conv_flops(h: u64, cout: u64, k: u64, cin: u64) -> u64 {
+    2 * h * h * cout * k * k * cin
+}
+
+fn build(name: &str, plan: [u64; 4], spatial: usize) -> ModelSpec {
+    assert!(spatial % 32 == 0, "spatial must be a multiple of 32");
+    let s = spatial as u64;
+    let mut units = Vec::new();
+    // stem: 7x7/2 conv + BN + 3x3/2 pool
+    let mut h = s / 4;
+    units.push(UnitSpec {
+        name: "stem".to_string(),
+        kind: UnitKind::Stem,
+        flops: conv_flops(s / 2, 64, 7, 3),
+        param_elems: 7 * 7 * 3 * 64 + 2 * 64,
+        act_elems: s * s * 3 + h * h * 64,
+    });
+    let mut cin: u64 = 64;
+    for (si, &nblocks) in plan.iter().enumerate() {
+        let width = STAGE_WIDTH[si];
+        let cout = width * 4;
+        for bi in 0..nblocks {
+            let stride = if si > 0 && bi == 0 { 2 } else { 1 };
+            let proj = bi == 0;
+            let h_out = h / stride;
+            let mut flops = conv_flops(h, width, 1, cin)
+                + conv_flops(h_out, width, 3, width)
+                + conv_flops(h_out, cout, 1, width);
+            let mut params = cin * width
+                + 9 * width * width
+                + width * cout
+                + 2 * (2 * width + cout);
+            if proj {
+                flops += conv_flops(h_out, cout, 1, cin);
+                params += cin * cout + 2 * cout;
+            }
+            units.push(UnitSpec {
+                name: format!("b{}_{}", si + 1, bi + 1),
+                kind: UnitKind::Block,
+                flops,
+                param_elems: params,
+                act_elems: h * h * cin + h_out * h_out * cout,
+            });
+            h = h_out;
+            cin = cout;
+        }
+    }
+    units.push(UnitSpec {
+        name: "classifier".to_string(),
+        kind: UnitKind::Classifier,
+        flops: 2 * cin * 1000,
+        param_elems: cin * 1000 + 1000,
+        act_elems: h * h * cin + 1000,
+    });
+    ModelSpec { name: name.to_string(), spatial, units }
+}
+
+pub fn resnet50(spatial: usize) -> ModelSpec {
+    build("resnet50", [3, 4, 6, 3], spatial)
+}
+
+pub fn resnet152(spatial: usize) -> ModelSpec {
+    build("resnet152", [3, 8, 36, 3], spatial)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_counts() {
+        assert_eq!(resnet50(32).units.len(), 1 + 16 + 1);
+        assert_eq!(resnet152(32).units.len(), 1 + 50 + 1);
+    }
+
+    #[test]
+    fn projection_blocks_heavier_than_identity() {
+        let m = resnet50(64);
+        // b1_1 (proj) vs b1_2 (identity)
+        assert!(m.units[1].param_elems > m.units[2].param_elems);
+        assert!(m.units[1].flops > m.units[2].flops);
+    }
+
+    #[test]
+    fn downsampling_shrinks_activations() {
+        let m = resnet50(64);
+        let b2_1 = m.units.iter().find(|u| u.name == "b2_1").unwrap();
+        let b2_2 = m.units.iter().find(|u| u.name == "b2_2").unwrap();
+        assert!(b2_1.act_elems > b2_2.act_elems);
+    }
+
+    #[test]
+    fn resnet152_middle_stage_has_36_blocks() {
+        let m = resnet152(32);
+        let n3 = m.units.iter().filter(|u| u.name.starts_with("b3_")).count();
+        assert_eq!(n3, 36);
+    }
+}

@@ -1,0 +1,88 @@
+//! VGG16 unit decomposition (16 units: 13 conv[+pool] + 3 dense),
+//! mirroring python/compile/model.py `build_vgg16`.
+
+use super::{ModelSpec, UnitKind, UnitSpec};
+
+const PLAN: [(&str, u64, bool); 13] = [
+    ("conv1_1", 64, false),
+    ("conv1_2", 64, true),
+    ("conv2_1", 128, false),
+    ("conv2_2", 128, true),
+    ("conv3_1", 256, false),
+    ("conv3_2", 256, false),
+    ("conv3_3", 256, true),
+    ("conv4_1", 512, false),
+    ("conv4_2", 512, false),
+    ("conv4_3", 512, true),
+    ("conv5_1", 512, false),
+    ("conv5_2", 512, false),
+    ("conv5_3", 512, true),
+];
+
+pub fn vgg16(spatial: usize) -> ModelSpec {
+    vgg16_custom(spatial, 1000, 4096)
+}
+
+pub fn vgg16_custom(spatial: usize, num_classes: u64, fc_dim: u64) -> ModelSpec {
+    assert!(spatial % 32 == 0, "spatial must be a multiple of 32");
+    let mut units = Vec::with_capacity(16);
+    let mut h = spatial as u64;
+    let mut cin: u64 = 3;
+    for (name, cout, pool) in PLAN {
+        let out_h = if pool { h / 2 } else { h };
+        units.push(UnitSpec {
+            name: format!("{name}{}", if pool { "_pool" } else { "" }),
+            kind: if pool { UnitKind::ConvPool } else { UnitKind::Conv },
+            flops: 2 * h * h * cout * 9 * cin,
+            param_elems: 9 * cin * cout + cout,
+            act_elems: h * h * cin + out_h * out_h * cout,
+        });
+        h = out_h;
+        cin = cout;
+    }
+    let flat = h * h * cin;
+    let dense = [
+        ("fc1", flat, fc_dim),
+        ("fc2", fc_dim, fc_dim),
+        ("fc3", fc_dim, num_classes),
+    ];
+    for (name, k, n) in dense {
+        units.push(UnitSpec {
+            name: name.to_string(),
+            kind: UnitKind::Dense,
+            flops: 2 * k * n,
+            param_elems: k * n + n,
+            act_elems: k + n,
+        });
+    }
+    ModelSpec { name: "vgg16".to_string(), spatial, units }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_units_halve_spatial() {
+        let m = vgg16(64);
+        // conv1_2_pool activation: 64*64*64 in + 32*32*64 out
+        assert_eq!(m.units[1].act_elems, 64 * 64 * 64 + 32 * 32 * 64);
+    }
+
+    #[test]
+    fn dense_layers_dominate_params() {
+        // at 224x224 fc1 dominates; at small spatial fc2 (4096x4096)
+        // does — either way the parameter mass sits in the dense units
+        let m = vgg16(64);
+        let max_idx = (0..16)
+            .max_by_key(|&i| m.units[i].param_elems)
+            .unwrap();
+        assert!(max_idx >= 13, "max params in unit {max_idx}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_spatial_panics() {
+        vgg16(50);
+    }
+}

@@ -1,0 +1,180 @@
+//! Stage-time / throughput evaluation of a pipeline configuration against
+//! the timing database — the paper's throughput formula:
+//!
+//!   T = 1 / max_i Σ_{l ∈ stage i} D[l, k_i]
+//!
+//! where k_i is the interference scenario active on stage i's EP.
+//!
+//! This is the hot path of both the rebalancers (every trial config is
+//! evaluated here) and the simulator (every query advances by stage
+//! times), so there is an allocation-free `stage_times_into` variant.
+
+use crate::database::TimingDb;
+use crate::interference::EpScenarios;
+
+use super::PipelineConfig;
+
+/// Bundles the database + scenario state so rebalancers can evaluate
+/// configurations without carrying two refs everywhere.
+pub struct CostModel<'a> {
+    pub db: &'a TimingDb,
+    pub scenarios: &'a EpScenarios,
+}
+
+impl<'a> CostModel<'a> {
+    pub fn new(db: &'a TimingDb, scenarios: &'a EpScenarios) -> CostModel<'a> {
+        CostModel { db, scenarios }
+    }
+
+    /// Execution time of each stage under the current scenarios.
+    pub fn stage_times(&self, config: &PipelineConfig) -> Vec<f64> {
+        stage_times(config, self.db, self.scenarios)
+    }
+
+    pub fn stage_times_into(&self, config: &PipelineConfig, out: &mut Vec<f64>) {
+        stage_times_into(config, self.db, self.scenarios, out)
+    }
+
+    /// Pipeline throughput (queries/sec) = 1 / bottleneck stage time.
+    pub fn throughput(&self, config: &PipelineConfig) -> f64 {
+        let mut buf = Vec::with_capacity(config.num_stages());
+        self.stage_times_into(config, &mut buf);
+        throughput(&buf)
+    }
+
+    /// Steady-state single-query latency: sum of stage times.
+    pub fn latency(&self, config: &PipelineConfig) -> f64 {
+        self.stage_times(config).iter().sum()
+    }
+}
+
+/// `t_i = Σ D[l, scenario(EP_i)]` for each stage i. Stages beyond the
+/// scenario vector's length reuse scenario 0 (idle EPs can't happen in
+/// valid setups; defensive for shrunken pipelines).
+pub fn stage_times(
+    config: &PipelineConfig,
+    db: &TimingDb,
+    scenarios: &EpScenarios,
+) -> Vec<f64> {
+    let mut out = Vec::with_capacity(config.num_stages());
+    stage_times_into(config, db, scenarios, &mut out);
+    out
+}
+
+/// Allocation-free variant: writes into `out` (cleared first).
+pub fn stage_times_into(
+    config: &PipelineConfig,
+    db: &TimingDb,
+    scenarios: &EpScenarios,
+    out: &mut Vec<f64>,
+) {
+    debug_assert_eq!(
+        config.total_units(),
+        db.num_units(),
+        "config/model mismatch"
+    );
+    out.clear();
+    let mut unit = 0usize;
+    for (s, &count) in config.counts().iter().enumerate() {
+        let scenario = scenarios.get(s).copied().unwrap_or(0);
+        let mut t = 0.0;
+        for _ in 0..count {
+            t += db.time(unit, scenario);
+            unit += 1;
+        }
+        out.push(t);
+    }
+}
+
+/// 1 / bottleneck; empty stages (t=0) never dominate.
+pub fn throughput(stage_times: &[f64]) -> f64 {
+    let bottleneck = stage_times.iter().copied().fold(0.0f64, f64::max);
+    assert!(bottleneck > 0.0, "throughput of an empty pipeline");
+    1.0 / bottleneck
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::database::synth::synthesize;
+    use crate::models;
+
+    fn setup() -> (TimingDb, PipelineConfig) {
+        let m = models::vgg16(64);
+        (synthesize(&m, 1), PipelineConfig::even(16, 4))
+    }
+
+    #[test]
+    fn stage_times_sum_to_serial_time() {
+        let (db, cfg) = setup();
+        let sc = vec![0; 4];
+        let ts = stage_times(&cfg, &db, &sc);
+        let total: f64 = ts.iter().sum();
+        assert!((total - db.total_base_time()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput_is_inverse_bottleneck() {
+        let ts = vec![0.2, 0.5, 0.1];
+        assert!((throughput(&ts) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn throughput_empty_pipeline_panics() {
+        throughput(&[0.0, 0.0]);
+    }
+
+    #[test]
+    fn interference_slows_only_its_ep() {
+        let (db, cfg) = setup();
+        let clean = stage_times(&cfg, &db, &vec![0, 0, 0, 0]);
+        let dirty = stage_times(&cfg, &db, &vec![0, 0, 0, 7]);
+        assert_eq!(clean[0], dirty[0]);
+        assert_eq!(clean[1], dirty[1]);
+        assert_eq!(clean[2], dirty[2]);
+        assert!(dirty[3] > clean[3]);
+    }
+
+    #[test]
+    fn empty_stage_contributes_zero() {
+        let (db, _) = setup();
+        let cfg = PipelineConfig::new(vec![8, 0, 8, 0]);
+        let ts = stage_times(&cfg, &db, &vec![0; 4]);
+        assert_eq!(ts[1], 0.0);
+        assert_eq!(ts[3], 0.0);
+        assert!(ts[0] > 0.0 && ts[2] > 0.0);
+    }
+
+    #[test]
+    fn into_variant_matches_alloc_variant() {
+        let (db, cfg) = setup();
+        let sc = vec![3, 0, 9, 1];
+        let a = stage_times(&cfg, &db, &sc);
+        let mut b = vec![99.0; 2];
+        stage_times_into(&cfg, &db, &sc, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn cost_model_latency_vs_throughput() {
+        let (db, cfg) = setup();
+        let sc = vec![0; 4];
+        let cm = CostModel::new(&db, &sc);
+        // latency (sum) >= 1/throughput (max)
+        assert!(cm.latency(&cfg) >= 1.0 / cm.throughput(&cfg) - 1e-12);
+    }
+
+    #[test]
+    fn moving_work_off_bottleneck_helps() {
+        let (db, _) = setup();
+        // put everything on stage 0, then move half away: throughput
+        // must improve
+        let all = PipelineConfig::new(vec![16, 0, 0, 0]);
+        let mut half = all.clone();
+        half.move_layers(0, 1, 8);
+        let sc = vec![0; 4];
+        let cm = CostModel::new(&db, &sc);
+        assert!(cm.throughput(&half) > cm.throughput(&all));
+    }
+}

@@ -1,0 +1,245 @@
+//! Pipeline configurations: the object ODIN optimizes.
+//!
+//! A configuration `C` (paper Algorithm 1) is the vector of layer counts
+//! per pipeline stage. Stages hold *contiguous* unit ranges — the pipeline
+//! is linear — so the count vector plus its prefix sums fully determines
+//! the unit→stage assignment, and any count move is automatically a chain
+//! of boundary shifts that preserves contiguity (DESIGN.md §Key-decisions).
+//!
+//! Stage `i` is bound to execution place `i` ("bind-to-stage"); a stage
+//! with zero layers leaves its EP idle (the paper: "removing layers from
+//! the affected PS may reduce the length of the pipeline by 1").
+
+mod cost;
+
+pub use cost::{stage_times, stage_times_into, throughput, CostModel};
+
+/// Layer-counts-per-stage pipeline configuration.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PipelineConfig {
+    counts: Vec<usize>,
+}
+
+impl PipelineConfig {
+    /// Build from counts; `sum(counts)` must equal the model's unit count
+    /// (checked by the caller against its ModelSpec / TimingDb).
+    pub fn new(counts: Vec<usize>) -> PipelineConfig {
+        assert!(!counts.is_empty(), "pipeline needs >= 1 stage");
+        PipelineConfig { counts }
+    }
+
+    /// Evenly-balanced-by-count starting configuration (m units over n
+    /// stages; remainders spread over the leading stages).
+    pub fn even(m: usize, n: usize) -> PipelineConfig {
+        assert!(n > 0 && m >= 1);
+        let base = m / n;
+        let extra = m % n;
+        PipelineConfig {
+            counts: (0..n).map(|i| base + usize::from(i < extra)).collect(),
+        }
+    }
+
+    pub fn counts(&self) -> &[usize] {
+        &self.counts
+    }
+
+    pub fn num_stages(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Stages that actually hold layers.
+    pub fn active_stages(&self) -> usize {
+        self.counts.iter().filter(|&&c| c > 0).count()
+    }
+
+    pub fn total_units(&self) -> usize {
+        self.counts.iter().sum()
+    }
+
+    /// Unit range `[start, end)` of stage `s` (empty ranges for empty
+    /// stages).
+    pub fn stage_range(&self, s: usize) -> (usize, usize) {
+        let start: usize = self.counts[..s].iter().sum();
+        (start, start + self.counts[s])
+    }
+
+    /// All stage ranges at once (single prefix-sum pass).
+    pub fn ranges(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.counts.len());
+        let mut start = 0;
+        for &c in &self.counts {
+            out.push((start, start + c));
+            start += c;
+        }
+        out
+    }
+
+    /// The stage owning unit `u`, if any.
+    pub fn stage_of_unit(&self, u: usize) -> Option<usize> {
+        let mut start = 0;
+        for (s, &c) in self.counts.iter().enumerate() {
+            if u >= start && u < start + c {
+                return Some(s);
+            }
+            start += c;
+        }
+        None
+    }
+
+    /// Move `k` layers from stage `from` to stage `to` (boundary chain
+    /// shift). Returns false (config unchanged) when `from` lacks layers.
+    pub fn move_layers(&mut self, from: usize, to: usize, k: usize) -> bool {
+        if from == to || self.counts[from] < k {
+            return false;
+        }
+        self.counts[from] -= k;
+        self.counts[to] += k;
+        true
+    }
+
+    /// Invariant check used by tests and debug assertions.
+    pub fn check(&self, m: usize) -> Result<(), String> {
+        if self.total_units() != m {
+            return Err(format!(
+                "config {:?} holds {} units, model has {m}",
+                self.counts,
+                self.total_units()
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for PipelineConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[")?;
+        for (i, c) in self.counts.iter().enumerate() {
+            if i > 0 {
+                write!(f, " ")?;
+            }
+            write!(f, "{c}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::Property;
+    use crate::util::Rng;
+
+    #[test]
+    fn even_partition() {
+        assert_eq!(PipelineConfig::even(16, 4).counts(), &[4, 4, 4, 4]);
+        assert_eq!(PipelineConfig::even(18, 4).counts(), &[5, 5, 4, 4]);
+        assert_eq!(PipelineConfig::even(3, 4).counts(), &[1, 1, 1, 0]);
+    }
+
+    #[test]
+    fn ranges_are_contiguous_partition() {
+        let c = PipelineConfig::new(vec![5, 0, 4, 7]);
+        let r = c.ranges();
+        assert_eq!(r, vec![(0, 5), (5, 5), (5, 9), (9, 16)]);
+    }
+
+    #[test]
+    fn stage_of_unit_consistent_with_ranges() {
+        let c = PipelineConfig::new(vec![3, 2, 0, 5]);
+        assert_eq!(c.stage_of_unit(0), Some(0));
+        assert_eq!(c.stage_of_unit(2), Some(0));
+        assert_eq!(c.stage_of_unit(3), Some(1));
+        assert_eq!(c.stage_of_unit(5), Some(3));
+        assert_eq!(c.stage_of_unit(9), Some(3));
+        assert_eq!(c.stage_of_unit(10), None);
+    }
+
+    #[test]
+    fn move_layers_preserves_total() {
+        let mut c = PipelineConfig::new(vec![4, 4, 4, 4]);
+        assert!(c.move_layers(3, 1, 2));
+        assert_eq!(c.counts(), &[4, 6, 4, 2]);
+        assert_eq!(c.total_units(), 16);
+    }
+
+    #[test]
+    fn move_more_than_available_rejected() {
+        let mut c = PipelineConfig::new(vec![1, 3]);
+        assert!(!c.move_layers(0, 1, 2));
+        assert_eq!(c.counts(), &[1, 3]);
+    }
+
+    #[test]
+    fn move_to_self_rejected() {
+        let mut c = PipelineConfig::new(vec![2, 2]);
+        assert!(!c.move_layers(1, 1, 1));
+        assert_eq!(c.counts(), &[2, 2]);
+    }
+
+    #[test]
+    fn active_stages_skips_empty() {
+        let c = PipelineConfig::new(vec![4, 0, 4, 0]);
+        assert_eq!(c.active_stages(), 2);
+        assert_eq!(c.num_stages(), 4);
+    }
+
+    // -- property tests ----------------------------------------------
+
+    #[test]
+    fn prop_random_moves_keep_partition_valid() {
+        // any sequence of (from, to, k) moves keeps: total preserved,
+        // ranges a contiguous partition of 0..m
+        let p = Property::new(|r: &mut Rng| {
+            let n = r.range(1, 8);
+            let m = r.range(n, 64);
+            let moves: Vec<(usize, usize, usize)> = (0..r.below(50))
+                .map(|_| (r.below(n), r.below(n), r.below(4)))
+                .collect();
+            (m, n, moves)
+        });
+        p.check(0xC0FFEE, 300, |(m, n, moves)| {
+            let mut c = PipelineConfig::even(*m, *n);
+            for &(f, t, k) in moves {
+                c.move_layers(f, t, k);
+            }
+            if c.total_units() != *m {
+                return false;
+            }
+            let r = c.ranges();
+            let mut prev_end = 0;
+            for (s, e) in r {
+                if s != prev_end || e < s {
+                    return false;
+                }
+                prev_end = e;
+            }
+            prev_end == *m
+        });
+    }
+
+    #[test]
+    fn prop_stage_of_unit_total() {
+        // every unit belongs to exactly one stage and the count per stage
+        // matches counts()
+        let p = Property::new(|r: &mut Rng| {
+            let n = r.range(1, 10);
+            let counts: Vec<usize> = (0..n).map(|_| r.below(9)).collect();
+            counts
+        });
+        p.check(7, 200, |counts| {
+            if counts.iter().sum::<usize>() == 0 {
+                return true; // degenerate but legal container
+            }
+            let c = PipelineConfig::new(counts.clone());
+            let m = c.total_units();
+            let mut per_stage = vec![0usize; counts.len()];
+            for u in 0..m {
+                match c.stage_of_unit(u) {
+                    Some(s) => per_stage[s] += 1,
+                    None => return false,
+                }
+            }
+            per_stage == *counts
+        });
+    }
+}

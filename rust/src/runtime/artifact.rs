@@ -1,0 +1,201 @@
+//! AOT artifact manifest: the contract between `python/compile/aot.py`
+//! and the rust runtime.
+//!
+//! `artifacts/manifest.json` indexes, per model, one HLO-text module per
+//! schedulable unit plus optional gold tensors. This module parses and
+//! validates it (shapes chain, files exist) and cross-checks the unit
+//! structure against the rust-side [`crate::models`] metadata.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::{parse, Value};
+use crate::models::UnitKind;
+
+#[derive(Clone, Debug)]
+pub struct GoldFiles {
+    pub input: PathBuf,
+    pub output: PathBuf,
+    pub params: Vec<PathBuf>,
+}
+
+#[derive(Clone, Debug)]
+pub struct UnitArtifact {
+    pub index: usize,
+    pub name: String,
+    pub kind: UnitKind,
+    pub hlo_path: PathBuf,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub flops: u64,
+    pub gold: Option<GoldFiles>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelArtifacts {
+    pub name: String,
+    pub input_shape: Vec<usize>,
+    pub seed: u64,
+    pub units: Vec<UnitArtifact>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub spatial: usize,
+    pub batch: usize,
+    pub models: Vec<ModelArtifacts>,
+}
+
+impl Manifest {
+    /// Load and validate `<root>/manifest.json`.
+    pub fn load(root: impl AsRef<Path>) -> Result<Manifest> {
+        let root = root.as_ref().to_path_buf();
+        let mpath = root.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {} (run `make artifacts`)", mpath.display()))?;
+        let v = parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        if v.get("format").as_usize() != Some(1) {
+            bail!("unsupported manifest format {:?}", v.get("format"));
+        }
+        let spatial = v.get("spatial").as_usize().context("spatial")?;
+        let batch = v.get("batch").as_usize().context("batch")?;
+        let mut models = Vec::new();
+        for (name, mv) in v.get("models").as_obj().context("models")? {
+            models.push(parse_model(&root, name, mv)?);
+        }
+        models.sort_by(|a, b| a.name.cmp(&b.name));
+        let m = Manifest { root, spatial, batch, models };
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn model(&self, name: &str) -> Option<&ModelArtifacts> {
+        self.models.iter().find(|m| m.name == name)
+    }
+
+    fn validate(&self) -> Result<()> {
+        for m in &self.models {
+            if m.units.is_empty() {
+                bail!("{}: no units", m.name);
+            }
+            for u in &m.units {
+                if !u.hlo_path.exists() {
+                    bail!("{}/{}: missing {}", m.name, u.name, u.hlo_path.display());
+                }
+            }
+            // shapes must chain (element count preserved across the
+            // flatten boundary)
+            for w in m.units.windows(2) {
+                let out: usize = w[0].out_shape.iter().product();
+                let inp: usize = w[1].in_shape.iter().product();
+                if out != inp {
+                    bail!(
+                        "{}: {} -> {} shape break ({out} vs {inp})",
+                        m.name,
+                        w[0].name,
+                        w[1].name
+                    );
+                }
+            }
+            // cross-check against the rust model metadata when available
+            if let Some(spec) = crate::models::build(&m.name, self.spatial) {
+                if spec.num_units() != m.units.len() {
+                    bail!(
+                        "{}: manifest has {} units, models:: says {}",
+                        m.name,
+                        m.units.len(),
+                        spec.num_units()
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_model(root: &Path, name: &str, v: &Value) -> Result<ModelArtifacts> {
+    let units_v = v.get("units").as_arr().context("units")?;
+    let mut units = Vec::with_capacity(units_v.len());
+    for uv in units_v {
+        let gold = if uv.get("gold").is_null() {
+            None
+        } else {
+            let g = uv.get("gold");
+            Some(GoldFiles {
+                input: root.join(g.get("input").as_str().context("gold.input")?),
+                output: root.join(g.get("output").as_str().context("gold.output")?),
+                params: g
+                    .get("params")
+                    .as_arr()
+                    .context("gold.params")?
+                    .iter()
+                    .map(|p| Ok(root.join(p.as_str().context("gold param")?)))
+                    .collect::<Result<Vec<_>>>()?,
+            })
+        };
+        let kind_s = uv.get("kind").as_str().context("kind")?;
+        units.push(UnitArtifact {
+            index: uv.get("index").as_usize().context("index")?,
+            name: uv.get("name").as_str().context("name")?.to_string(),
+            kind: UnitKind::parse(kind_s)
+                .with_context(|| format!("unknown kind {kind_s}"))?,
+            hlo_path: root.join(uv.get("hlo").as_str().context("hlo")?),
+            in_shape: uv.get("in_shape").as_usize_vec().context("in_shape")?,
+            out_shape: uv.get("out_shape").as_usize_vec().context("out_shape")?,
+            param_shapes: uv
+                .get("param_shapes")
+                .as_arr()
+                .context("param_shapes")?
+                .iter()
+                .map(|s| s.as_usize_vec().context("param shape"))
+                .collect::<Result<Vec<_>>>()?,
+            flops: uv.get("flops").as_u64().context("flops")?,
+            gold,
+        })
+    }
+    units.sort_by_key(|u| u.index);
+    Ok(ModelArtifacts {
+        name: name.to_string(),
+        input_shape: v.get("input_shape").as_usize_vec().context("input_shape")?,
+        seed: v.get("seed").as_u64().unwrap_or(0),
+        units,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_root() -> Option<PathBuf> {
+        let p = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        p.join("manifest.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(root) = artifacts_root() else { return };
+        let m = Manifest::load(&root).unwrap();
+        assert!(m.model("vgg16").is_some());
+        let vgg = m.model("vgg16").unwrap();
+        assert_eq!(vgg.units.len(), 16);
+        assert_eq!(vgg.units[0].name, "conv1_1");
+        assert!(vgg.units[0].gold.is_some());
+        assert_eq!(vgg.units[0].param_shapes.len(), 2);
+    }
+
+    #[test]
+    fn resnet50_has_18_units() {
+        let Some(root) = artifacts_root() else { return };
+        let m = Manifest::load(&root).unwrap();
+        assert_eq!(m.model("resnet50").unwrap().units.len(), 18);
+    }
+
+    #[test]
+    fn missing_manifest_is_clear_error() {
+        let err = Manifest::load("/nonexistent/dir").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

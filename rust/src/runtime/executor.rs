@@ -1,0 +1,218 @@
+//! The PJRT model runtime: compile each unit's HLO text once, then execute
+//! units / unit-ranges from the serving hot path.
+//!
+//! Pattern from /opt/xla-example/load_hlo.rs: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute` → `to_tuple1` (AOT lowers with
+//! return_tuple=True).
+//!
+//! NOT Send (PjRtClient is Rc-based): multi-threaded callers go through
+//! [`super::service::ExecService`].
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::database::measure::UnitTimer;
+
+use super::artifact::{ModelArtifacts, UnitArtifact};
+use super::tensor::Tensor;
+
+struct CompiledUnit {
+    exe: xla::PjRtLoadedExecutable,
+    /// Parameter literals, kept device-ready so the hot path only uploads
+    /// the activation (weights don't change between queries).
+    params: Vec<xla::Literal>,
+}
+
+pub struct ModelRuntime {
+    client: xla::PjRtClient,
+    model: ModelArtifacts,
+    units: Vec<CompiledUnit>,
+}
+
+impl ModelRuntime {
+    /// Compile every unit of `model`. Parameters are loaded from gold
+    /// files where present, otherwise generated deterministically from
+    /// the manifest seed.
+    pub fn load(model: &ModelArtifacts) -> Result<ModelRuntime> {
+        let client = xla::PjRtClient::cpu()?;
+        let mut units = Vec::with_capacity(model.units.len());
+        for u in &model.units {
+            units.push(compile_unit(&client, model, u)?);
+        }
+        Ok(ModelRuntime { client, model: model.clone(), units })
+    }
+
+    pub fn model(&self) -> &ModelArtifacts {
+        &self.model
+    }
+
+    pub fn num_units(&self) -> usize {
+        self.units.len()
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute one unit on `input`, returning its output tensor.
+    pub fn run_unit(&self, u: usize, input: &Tensor) -> Result<Tensor> {
+        let spec = &self.model.units[u];
+        let cu = &self.units[u];
+        // reshape flat/NHWC inputs as the unit expects (dense units take
+        // the flattened activation of a conv unit)
+        let want: usize = spec.in_shape.iter().product();
+        if input.len() != want {
+            bail!(
+                "{}/{}: input has {} elements, unit wants {want}",
+                self.model.name,
+                spec.name,
+                input.len()
+            );
+        }
+        let x = Tensor::new(spec.in_shape.clone(), input.data.clone())?
+            .to_literal()?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + cu.params.len());
+        args.push(&x);
+        args.extend(cu.params.iter());
+        let result = cu.exe.execute::<&xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Tensor::from_literal(&out, spec.out_shape.clone())
+    }
+
+    /// Execute a contiguous unit range `[start, end)` (= one pipeline
+    /// stage), chaining activations.
+    pub fn run_range(&self, start: usize, end: usize, input: &Tensor) -> Result<Tensor> {
+        if start >= end || end > self.units.len() {
+            bail!("bad unit range {start}..{end}");
+        }
+        let mut act = self.run_unit(start, input)?;
+        for u in start + 1..end {
+            act = self.run_unit(u, &act)?;
+        }
+        Ok(act)
+    }
+
+    /// A deterministic model input (for probes/benches).
+    pub fn example_input(&self) -> Tensor {
+        Tensor::random(&self.model.input_shape, 0x1A7, 1.0)
+    }
+
+    /// Verify every unit that has gold tensors: run it on the gold input
+    /// with the gold params and compare. Returns (checked, max_abs_diff).
+    pub fn verify_gold(&self, tol: f64) -> Result<(usize, f64)> {
+        let mut checked = 0;
+        let mut worst = 0.0f64;
+        for (u, spec) in self.model.units.iter().enumerate() {
+            let Some(gold) = &spec.gold else { continue };
+            let input = Tensor::from_bin_file(
+                gold.input.to_str().unwrap(),
+                &spec.in_shape,
+            )?;
+            // gold params override the generated ones for this run
+            let params: Vec<xla::Literal> = gold
+                .params
+                .iter()
+                .zip(&spec.param_shapes)
+                .map(|(p, s)| {
+                    Tensor::from_bin_file(p.to_str().unwrap(), s)?.to_literal()
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let x = input.to_literal()?;
+            let mut args: Vec<&xla::Literal> = vec![&x];
+            args.extend(params.iter());
+            let result = self.units[u].exe.execute::<&xla::Literal>(&args)?[0][0]
+                .to_literal_sync()?;
+            let out = Tensor::from_literal(
+                &result.to_tuple1()?,
+                spec.out_shape.clone(),
+            )?;
+            let want = Tensor::from_bin_file(
+                gold.output.to_str().unwrap(),
+                &spec.out_shape,
+            )?;
+            let diff = out.max_abs_diff(&want);
+            worst = worst.max(diff);
+            if diff > tol {
+                bail!(
+                    "{}/{}: gold mismatch, max |Δ| = {diff:e} > {tol:e}",
+                    self.model.name,
+                    spec.name
+                );
+            }
+            checked += 1;
+        }
+        Ok((checked, worst))
+    }
+}
+
+fn compile_unit(
+    client: &xla::PjRtClient,
+    model: &ModelArtifacts,
+    u: &UnitArtifact,
+) -> Result<CompiledUnit> {
+    let proto = xla::HloModuleProto::from_text_file(&u.hlo_path)
+        .with_context(|| format!("parsing {}", u.hlo_path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client
+        .compile(&comp)
+        .with_context(|| format!("compiling {}/{}", model.name, u.name))?;
+    // deterministic params: unique seed per (model seed, unit, param)
+    let params = u
+        .param_shapes
+        .iter()
+        .enumerate()
+        .map(|(pi, shape)| {
+            let seed = model.seed
+                ^ (u.index as u64) << 16
+                ^ (pi as u64) << 40
+                ^ 0x9E37;
+            let scale = (2.0 / shape.iter().product::<usize>() as f32).sqrt();
+            Tensor::random(shape, seed, scale).to_literal()
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(CompiledUnit { exe, params })
+}
+
+/// `odin bench-db` measurement adapter.
+pub struct RuntimeTimer<'a> {
+    pub rt: &'a ModelRuntime,
+    inputs: Vec<Tensor>,
+}
+
+impl<'a> RuntimeTimer<'a> {
+    /// Precompute each unit's input by chaining the example input through
+    /// the model once (so per-unit timing excludes upstream compute).
+    pub fn new(rt: &'a ModelRuntime) -> Result<RuntimeTimer<'a>> {
+        let mut inputs = Vec::with_capacity(rt.num_units());
+        let mut act = rt.example_input();
+        for u in 0..rt.num_units() {
+            inputs.push(act.clone());
+            act = rt.run_unit(u, &act)?;
+        }
+        Ok(RuntimeTimer { rt, inputs })
+    }
+}
+
+impl UnitTimer for RuntimeTimer<'_> {
+    fn num_units(&self) -> usize {
+        self.rt.num_units()
+    }
+
+    fn unit_name(&self, u: usize) -> String {
+        self.rt.model.units[u].name.clone()
+    }
+
+    fn model_name(&self) -> String {
+        self.rt.model.name.clone()
+    }
+
+    fn time_unit(&mut self, u: usize) -> Result<f64> {
+        let t0 = Instant::now();
+        let out = self.rt.run_unit(u, &self.inputs[u])?;
+        std::hint::black_box(&out.data[0]);
+        Ok(t0.elapsed().as_secs_f64())
+    }
+}

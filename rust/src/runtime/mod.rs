@@ -1,0 +1,13 @@
+//! The AOT artifact runtime: load HLO-text units compiled by
+//! `python/compile/aot.py` and execute them via PJRT from the serving hot
+//! path. Python never runs here — the artifacts are self-contained.
+
+pub mod artifact;
+pub mod executor;
+pub mod service;
+pub mod tensor;
+
+pub use artifact::{Manifest, ModelArtifacts, UnitArtifact};
+pub use executor::{ModelRuntime, RuntimeTimer};
+pub use service::{ExecHandle, ExecService};
+pub use tensor::Tensor;

@@ -1,0 +1,109 @@
+//! Execution service: a dedicated thread owning the (non-Send, Rc-based)
+//! PJRT runtime, serving unit-range execution requests from the pipeline
+//! stage workers over channels.
+//!
+//! Stage workers each get a cloneable [`ExecHandle`]; calls block until
+//! the service thread replies. On the paper's multi-EP hardware each EP
+//! would own its own service (one PJRT client per EP); on this sandbox a
+//! single service models the shared substrate while preserving the exact
+//! bind-to-stage message flow.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::artifact::ModelArtifacts;
+use super::executor::ModelRuntime;
+use super::tensor::Tensor;
+
+enum Request {
+    /// Execute units [start, end) on input; reply with (output, seconds).
+    RunRange {
+        start: usize,
+        end: usize,
+        input: Tensor,
+        reply: Sender<Result<(Tensor, f64)>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle used by stage workers.
+#[derive(Clone)]
+pub struct ExecHandle {
+    tx: Sender<Request>,
+}
+
+// Sender is Send; the handle carries no XLA state.
+impl ExecHandle {
+    /// Execute a unit range; blocks until the service replies.
+    pub fn run_range(&self, start: usize, end: usize, input: Tensor) -> Result<(Tensor, f64)> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::RunRange { start, end, input, reply })
+            .map_err(|_| anyhow!("exec service gone"))?;
+        rx.recv().map_err(|_| anyhow!("exec service dropped reply"))?
+    }
+}
+
+/// The service thread wrapper.
+pub struct ExecService {
+    tx: Sender<Request>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl ExecService {
+    /// Spawn the service; compiles the model on the service thread (the
+    /// client must be created where it is used).
+    pub fn spawn(model: ModelArtifacts) -> Result<ExecService> {
+        let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let thread = std::thread::Builder::new()
+            .name("odin-exec".into())
+            .spawn(move || {
+                let rt = match ModelRuntime::load(&model) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                serve(rt, rx);
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("exec service died during load"))??;
+        Ok(ExecService { tx, thread: Some(thread) })
+    }
+
+    pub fn handle(&self) -> ExecHandle {
+        ExecHandle { tx: self.tx.clone() }
+    }
+}
+
+impl Drop for ExecService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn serve(rt: ModelRuntime, rx: Receiver<Request>) {
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::RunRange { start, end, input, reply } => {
+                let t0 = Instant::now();
+                let out = rt.run_range(start, end, &input);
+                let dt = t0.elapsed().as_secs_f64();
+                let _ = reply.send(out.map(|t| (t, dt)));
+            }
+        }
+    }
+}

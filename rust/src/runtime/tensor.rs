@@ -1,0 +1,124 @@
+//! Host tensors: plain `Vec<f32>` + shape, the Send-able currency between
+//! stage workers and the (single-threaded) XLA execution service.
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Deterministic pseudo-random fill in [-scale, scale] — the weight
+    /// generator for performance runs (timing is value-independent; gold
+    /// numerics use the AOT-dumped tensors instead).
+    pub fn random(shape: &[usize], seed: u64, scale: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        let mut rng = crate::util::Rng::new(seed);
+        let data = (0..n)
+            .map(|_| (rng.f64() as f32 * 2.0 - 1.0) * scale)
+            .collect();
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Load a raw little-endian f32 `.bin` (the AOT gold format).
+    pub fn from_bin_file(path: &str, shape: &[usize]) -> Result<Tensor> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+        if bytes.len() % 4 != 0 {
+            bail!("{path}: size {} not a multiple of 4", bytes.len());
+        }
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Tensor::new(shape.to_vec(), data).with_context(|| path.to_string())
+    }
+
+    /// Convert to an XLA literal of this shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    /// Build from an XLA literal (f32 only).
+    pub fn from_literal(lit: &xla::Literal, shape: Vec<usize>) -> Result<Tensor> {
+        let data = lit.to_vec::<f32>()?;
+        Tensor::new(shape, data)
+    }
+
+    /// Max absolute elementwise difference vs `other`.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f64 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_shape() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn random_is_deterministic_and_bounded() {
+        let a = Tensor::random(&[4, 4], 9, 0.5);
+        let b = Tensor::random(&[4, 4], 9, 0.5);
+        assert_eq!(a, b);
+        assert!(a.data.iter().all(|x| x.abs() <= 0.5));
+    }
+
+    #[test]
+    fn bin_roundtrip() {
+        let t = Tensor::random(&[3, 5], 1, 1.0);
+        let path = std::env::temp_dir().join("odin_tensor_test.bin");
+        let bytes: Vec<u8> = t.data.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        let back = Tensor::from_bin_file(path.to_str().unwrap(), &[3, 5]).unwrap();
+        assert_eq!(t, back);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn bin_file_shape_mismatch_rejected() {
+        let path = std::env::temp_dir().join("odin_tensor_bad.bin");
+        std::fs::write(&path, [0u8; 8]).unwrap();
+        assert!(Tensor::from_bin_file(path.to_str().unwrap(), &[3]).is_err());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn max_abs_diff_basic() {
+        let a = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::new(vec![3], vec![1.5, 2.0, 2.0]).unwrap();
+        assert!((a.max_abs_diff(&b) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,64 @@
+//! Live stage-time evaluation: the serving-path counterpart of the
+//! simulator's database lookups.
+//!
+//! Each evaluation runs one probe query *serially* through the trial
+//! configuration and measures real per-stage times — this is literally
+//! the paper's "queries are processed serially during the rebalancing
+//! phase": every Algorithm-1 trial costs one serial query.
+
+use crate::coordinator::StageEval;
+use crate::pipeline::PipelineConfig;
+use crate::runtime::{ExecHandle, Tensor};
+
+pub struct LiveEval {
+    handle: ExecHandle,
+    input: Tensor,
+    probes: usize,
+    /// (config, measured stage times) log of every probe, for reporting.
+    pub log: Vec<(PipelineConfig, Vec<f64>)>,
+}
+
+impl LiveEval {
+    pub fn new(handle: ExecHandle, input: Tensor) -> LiveEval {
+        LiveEval { handle, input, probes: 0, log: Vec::new() }
+    }
+
+    /// Run one query serially through `config`, returning per-stage times.
+    pub fn probe(&mut self, config: &PipelineConfig) -> anyhow::Result<Vec<f64>> {
+        let mut times = Vec::with_capacity(config.num_stages());
+        let mut act = self.input.clone();
+        for (start, end) in config.ranges() {
+            if start == end {
+                times.push(0.0);
+                continue;
+            }
+            let (out, dt) = self.handle.run_range(start, end, act)?;
+            act = out;
+            times.push(dt);
+        }
+        self.probes += 1;
+        Ok(times)
+    }
+}
+
+impl StageEval for LiveEval {
+    fn stage_times(&mut self, config: &PipelineConfig, out: &mut Vec<f64>) {
+        out.clear();
+        match self.probe(config) {
+            Ok(times) => {
+                self.log.push((config.clone(), times.clone()));
+                out.extend(times);
+            }
+            Err(e) => {
+                // a failed probe must not crash the rebalance loop; report
+                // an infinitely-bad config so the algorithm steers away
+                crate::log_warn!("live probe failed: {e:#}");
+                out.extend(std::iter::repeat(f64::INFINITY).take(config.num_stages()));
+            }
+        }
+    }
+
+    fn probes(&self) -> usize {
+        self.probes
+    }
+}

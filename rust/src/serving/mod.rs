@@ -1,0 +1,12 @@
+//! The real serving path: a bind-to-stage pipeline server over the PJRT
+//! artifact runtime, with online interference detection and live ODIN
+//! rebalancing (probe queries processed serially, exactly as the paper
+//! charges exploration overhead).
+
+pub mod live_eval;
+pub mod server;
+pub mod stats;
+
+pub use live_eval::LiveEval;
+pub use server::{Completion, PipelineServer, RebalanceLog, ServerOpts};
+pub use stats::ServeReport;

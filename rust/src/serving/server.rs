@@ -1,0 +1,283 @@
+//! The bind-to-stage pipeline server: one worker thread per pipeline
+//! stage (= execution place), tensors flowing stage-to-stage over
+//! channels, with online monitoring and ODIN rebalancing between queries.
+//!
+//! Stage workers are pinned to their EP's cores when the host has them
+//! (util::affinity degrades gracefully on smaller machines). All XLA
+//! execution funnels through the [`crate::runtime::ExecService`] thread —
+//! the paper's "EP" isolation is then enforced by pinning on real
+//! hardware, while the message flow (admission → stage 0 → … → stage N−1
+//! → completion) is identical everywhere.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{Monitor, Odin, RebalanceResult};
+use crate::pipeline::PipelineConfig;
+use crate::runtime::{ExecHandle, Tensor};
+use crate::util::affinity;
+
+use super::live_eval::LiveEval;
+
+/// A query travelling the pipeline.
+struct QueryMsg {
+    id: usize,
+    tensor: Tensor,
+    /// Stage ranges snapshotted at admission (consistent across stages
+    /// even while the coordinator installs a new configuration).
+    ranges: Arc<Vec<(usize, usize)>>,
+    admitted: Instant,
+    stage_times: Vec<f64>,
+}
+
+/// A completed query.
+pub struct Completion {
+    pub id: usize,
+    pub latency: f64,
+    pub stage_times: Vec<f64>,
+    pub output: Tensor,
+    /// True when the query was a rebalancing probe (processed serially).
+    pub serial: bool,
+}
+
+/// Coordinator-facing knobs.
+#[derive(Clone, Debug)]
+pub struct ServerOpts {
+    pub num_eps: usize,
+    pub cores_per_ep: usize,
+    /// Monitor threshold on the bottleneck stage time.
+    pub detect_threshold: f64,
+    /// ODIN exploration budget.
+    pub alpha: usize,
+    /// Smoothing: rebalance only after this many consecutive triggers
+    /// (real measurements are noisy; the simulator uses 1).
+    pub confirm_triggers: usize,
+}
+
+impl Default for ServerOpts {
+    fn default() -> Self {
+        ServerOpts {
+            num_eps: 4,
+            cores_per_ep: 8,
+            detect_threshold: 0.25,
+            alpha: 2,
+            confirm_triggers: 2,
+        }
+    }
+}
+
+/// Events the server reports per processed query batch.
+#[derive(Clone, Debug)]
+pub struct RebalanceLog {
+    pub at_query: usize,
+    pub trials: usize,
+    pub old_config: PipelineConfig,
+    pub new_config: PipelineConfig,
+}
+
+pub struct PipelineServer {
+    handle: ExecHandle,
+    opts: ServerOpts,
+    config: PipelineConfig,
+    monitor: Monitor,
+    pending_triggers: usize,
+    pub rebalance_log: Vec<RebalanceLog>,
+    // stage worker plumbing (rebuilt on config change is NOT needed —
+    // ranges travel with each query)
+    injector: Sender<QueryMsg>,
+    completions: Receiver<QueryMsg>,
+    workers: Vec<JoinHandle<()>>,
+    queries_done: usize,
+    /// Shape of served queries (captured from the first one; probes
+    /// during rebalancing reuse it).
+    input_shape: Option<Vec<usize>>,
+}
+
+impl PipelineServer {
+    pub fn new(
+        handle: ExecHandle,
+        initial: PipelineConfig,
+        opts: ServerOpts,
+    ) -> PipelineServer {
+        let n = opts.num_eps;
+        assert_eq!(initial.num_stages(), n);
+        // stage s receives on rx[s], sends on tx[s+1]; last → completions
+        let mut senders: Vec<Sender<QueryMsg>> = Vec::with_capacity(n + 1);
+        let mut receivers: Vec<Receiver<QueryMsg>> = Vec::with_capacity(n + 1);
+        for _ in 0..=n {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        let injector = senders[0].clone();
+        let mut workers = Vec::with_capacity(n);
+        // build stage workers back-to-front so each owns its successor tx
+        let mut rx_iter = receivers.into_iter();
+        let rxs: Vec<Receiver<QueryMsg>> = rx_iter.by_ref().take(n).collect();
+        let completions = rx_iter.next().unwrap();
+        for (s, rx) in rxs.into_iter().enumerate() {
+            let next = senders[s + 1].clone();
+            let handle = handle.clone();
+            let cores = affinity::ep_cores(s, opts.cores_per_ep);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("odin-stage-{s}"))
+                    .spawn(move || stage_worker(s, rx, next, handle, cores))
+                    .expect("spawn stage worker"),
+            );
+        }
+        drop(senders); // workers + injector hold the live clones
+        let mut monitor = Monitor::new(opts.detect_threshold);
+        monitor.set_baseline(f64::INFINITY); // blessed on first query
+        PipelineServer {
+            handle,
+            opts,
+            config: initial,
+            monitor,
+            pending_triggers: 0,
+            rebalance_log: Vec::new(),
+            injector,
+            completions,
+            workers,
+            queries_done: 0,
+            input_shape: None,
+        }
+    }
+
+    pub fn config(&self) -> &PipelineConfig {
+        &self.config
+    }
+
+    /// Serve a stream of queries with online monitoring + rebalancing.
+    /// Returns one [`Completion`] per input (order preserved), including
+    /// the serial probe queries spent inside rebalancing phases.
+    pub fn serve(&mut self, inputs: Vec<Tensor>) -> Result<Vec<Completion>> {
+        let mut out = Vec::with_capacity(inputs.len());
+        let mut first = true;
+        for (id, tensor) in inputs.into_iter().enumerate() {
+            if self.input_shape.is_none() {
+                self.input_shape = Some(tensor.shape.clone());
+            }
+            let ranges = Arc::new(self.config.ranges());
+            let admitted = Instant::now();
+            self.injector
+                .send(QueryMsg {
+                    id,
+                    tensor,
+                    ranges,
+                    admitted,
+                    stage_times: Vec::new(),
+                })
+                .map_err(|_| anyhow!("pipeline workers gone"))?;
+            // lock-step: wait for completion before admitting the next —
+            // keeps monitoring simple and exact; the pipeline parallelism
+            // is still real on multi-EP hosts because stage workers run
+            // concurrently across *different* queries when callers batch.
+            let msg = self
+                .completions
+                .recv()
+                .map_err(|_| anyhow!("pipeline drained unexpectedly"))?;
+            let latency = msg.admitted.elapsed().as_secs_f64();
+            if first {
+                self.monitor.set_baseline_times(&msg.stage_times);
+                first = false;
+            }
+            let trigger = self.monitor.observe(&msg.stage_times);
+            out.push(Completion {
+                id: msg.id,
+                latency,
+                stage_times: msg.stage_times,
+                output: msg.tensor,
+                serial: false,
+            });
+            self.queries_done += 1;
+
+            if trigger.is_some() {
+                self.pending_triggers += 1;
+            } else {
+                self.pending_triggers = 0;
+            }
+            if self.pending_triggers >= self.opts.confirm_triggers {
+                self.pending_triggers = 0;
+                self.rebalance()?;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Run ODIN online: live serial probes through trial configurations.
+    fn rebalance(&mut self) -> Result<()> {
+        let shape = self
+            .input_shape
+            .clone()
+            .ok_or_else(|| anyhow!("rebalance before any query"))?;
+        let probe_input = Tensor::random(&shape, 0xBEEF, 1.0);
+        let mut eval = LiveEval::new(self.handle.clone(), probe_input);
+        let odin = Odin::new(self.opts.alpha);
+        let old = self.config.clone();
+        let result: RebalanceResult = odin.rebalance_with(&self.config, &mut eval);
+        crate::log_info!(
+            "rebalance at query {}: {} -> {} ({} trials)",
+            self.queries_done,
+            old,
+            result.config,
+            result.trials
+        );
+        self.rebalance_log.push(RebalanceLog {
+            at_query: self.queries_done,
+            trials: result.trials,
+            old_config: old,
+            new_config: result.config.clone(),
+        });
+        self.config = result.config;
+        // bless the new config with a fresh serial probe
+        let times = eval.probe(&self.config)?;
+        self.monitor.set_baseline_times(&times);
+        Ok(())
+    }
+}
+
+fn stage_worker(
+    s: usize,
+    rx: Receiver<QueryMsg>,
+    next: Sender<QueryMsg>,
+    handle: ExecHandle,
+    cores: Vec<usize>,
+) {
+    affinity::pin_current_thread(&cores);
+    while let Ok(mut msg) = rx.recv() {
+        let (start, end) = msg.ranges[s];
+        if start == end {
+            msg.stage_times.push(0.0);
+        } else {
+            match handle.run_range(start, end, msg.tensor) {
+                Ok((out, dt)) => {
+                    msg.tensor = out;
+                    msg.stage_times.push(dt);
+                }
+                Err(e) => {
+                    crate::log_error!("stage {s} failed: {e:#}");
+                    return;
+                }
+            }
+        }
+        if next.send(msg).is_err() {
+            return; // server dropped
+        }
+    }
+}
+
+impl Drop for PipelineServer {
+    fn drop(&mut self) {
+        // close the injector; workers exit as channels drain
+        let (tx, _rx) = channel();
+        let _ = std::mem::replace(&mut self.injector, tx);
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}

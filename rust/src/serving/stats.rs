@@ -1,0 +1,71 @@
+//! Serving-side reporting: latency/throughput over a served batch.
+
+use crate::util::stats::Summary;
+
+use super::server::Completion;
+
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub queries: usize,
+    pub latency: Summary,
+    /// Completed queries / wall-clock of the batch.
+    pub throughput: f64,
+    pub serial_queries: usize,
+}
+
+impl ServeReport {
+    pub fn of(completions: &[Completion], wall_seconds: f64) -> ServeReport {
+        assert!(!completions.is_empty());
+        let lat: Vec<f64> = completions.iter().map(|c| c.latency).collect();
+        ServeReport {
+            queries: completions.len(),
+            latency: Summary::of(&lat),
+            throughput: completions.len() as f64 / wall_seconds.max(1e-12),
+            serial_queries: completions.iter().filter(|c| c.serial).count(),
+        }
+    }
+
+    pub fn print(&self, label: &str) {
+        println!(
+            "{label}: {} queries  lat mean={:.1}ms p50={:.1}ms p99={:.1}ms  \
+             throughput={:.2} q/s  serial={}",
+            self.queries,
+            self.latency.mean * 1e3,
+            self.latency.p50 * 1e3,
+            self.latency.p99 * 1e3,
+            self.throughput,
+            self.serial_queries,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Tensor;
+
+    #[test]
+    fn report_aggregates() {
+        let comps = vec![
+            Completion {
+                id: 0,
+                latency: 0.1,
+                stage_times: vec![0.05, 0.05],
+                output: Tensor::zeros(&[1]),
+                serial: false,
+            },
+            Completion {
+                id: 1,
+                latency: 0.3,
+                stage_times: vec![0.1, 0.2],
+                output: Tensor::zeros(&[1]),
+                serial: true,
+            },
+        ];
+        let r = ServeReport::of(&comps, 0.5);
+        assert_eq!(r.queries, 2);
+        assert_eq!(r.serial_queries, 1);
+        assert!((r.throughput - 4.0).abs() < 1e-9);
+        assert!((r.latency.mean - 0.2).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,15 @@
+//! Query-level pipeline simulator — the paper's evaluation vehicle.
+//!
+//! The paper evaluates ODIN "in a simulated system for inference serving"
+//! driven by the measured per-layer timing database (§3.3, §4.1): EPs are
+//! replicas of the measured platform, interference is emulated by looking
+//! up the scenario column, and 4000 queries stream through the pipeline
+//! while the schedule perturbs EPs. This module is that system.
+
+pub mod engine;
+pub mod metrics;
+pub mod slo;
+
+pub use engine::{simulate, Policy, RebalanceEvent, SimConfig, SimResult};
+pub use metrics::SimSummary;
+pub use slo::{slo_violations, SloReport};

@@ -1,0 +1,136 @@
+//! SLO accounting (paper §4.3 "Maintaining QoS with ODIN").
+//!
+//! The paper's QoS metric: throughput SLO as a percentage of a reference
+//! throughput (the interference-free *peak*, or the *resource-constrained*
+//! optimum found by exhaustive search). A query violates the SLO when the
+//! throughput the pipeline sustains while serving it falls below
+//! `level × reference`.
+
+use crate::coordinator::optimal_config;
+use crate::database::TimingDb;
+use crate::interference::Schedule;
+
+use super::engine::SimResult;
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+pub struct SloReport {
+    /// SLO level in (0, 1] (fraction of the reference throughput).
+    pub level: f64,
+    pub violations: usize,
+    pub total: usize,
+}
+
+impl SloReport {
+    pub fn violation_rate(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.violations as f64 / self.total as f64
+        }
+    }
+}
+
+/// Violations against a *fixed* reference throughput (the paper's peak-
+/// throughput SLO): query q violates iff inst_throughput[q] < level·ref.
+pub fn slo_violations(result: &SimResult, reference: f64, level: f64) -> SloReport {
+    assert!(level > 0.0 && level <= 1.0, "SLO level {level}");
+    let target = level * reference;
+    let violations = result
+        .config_throughput
+        .iter()
+        .filter(|&&t| t < target)
+        .count();
+    SloReport { level, violations, total: result.config_throughput.len() }
+}
+
+/// Violations against the *resource-constrained* throughput: the per-query
+/// reference is the exhaustive-search optimum for the interference state
+/// active at that query (memoized per distinct scenario vector).
+pub fn slo_violations_constrained(
+    result: &SimResult,
+    db: &TimingDb,
+    schedule: &Schedule,
+    num_eps: usize,
+    level: f64,
+) -> SloReport {
+    assert!(level > 0.0 && level <= 1.0);
+    let mut cache: HashMap<Vec<usize>, f64> = HashMap::new();
+    let mut violations = 0usize;
+    for (q, &t) in result.config_throughput.iter().enumerate() {
+        let sc = schedule.at(q);
+        let opt = *cache.entry(sc.clone()).or_insert_with(|| {
+            let (_, b) = optimal_config(db, sc, num_eps);
+            1.0 / b
+        });
+        if t < level * opt {
+            violations += 1;
+        }
+    }
+    SloReport { level, violations, total: result.config_throughput.len() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::database::synth::synthesize;
+    use crate::interference::RandomInterference;
+    use crate::models;
+    use crate::simulator::engine::{simulate, Policy, SimConfig};
+
+    fn run(policy: Policy) -> (SimResult, TimingDb, Schedule) {
+        let db = synthesize(&models::vgg16(64), 1);
+        let schedule = Schedule::random(
+            4,
+            1500,
+            RandomInterference { period: 100, duration: 100, seed: 5, p_active: 1.0 },
+        );
+        let r = simulate(&db, &schedule, &SimConfig::new(4, policy));
+        (r, db, schedule)
+    }
+
+    #[test]
+    fn zero_level_invalid() {
+        let (r, _, _) = run(Policy::Static);
+        assert!(std::panic::catch_unwind(|| slo_violations(&r, 10.0, 0.0)).is_err());
+    }
+
+    #[test]
+    fn violations_monotone_in_level() {
+        let (r, _, _) = run(Policy::Odin { alpha: 2 });
+        let reference = r.peak_throughput;
+        let mut prev = 0;
+        for level in [0.35, 0.5, 0.7, 0.85, 1.0] {
+            let rep = slo_violations(&r, reference, level);
+            assert!(rep.violations >= prev, "level {level}");
+            prev = rep.violations;
+        }
+    }
+
+    #[test]
+    fn odin_violates_less_than_static() {
+        let (rs, _, _) = run(Policy::Static);
+        let (ro, _, _) = run(Policy::Odin { alpha: 10 });
+        let lvl = 0.7;
+        let vs = slo_violations(&rs, rs.peak_throughput, lvl).violation_rate();
+        let vo = slo_violations(&ro, ro.peak_throughput, lvl).violation_rate();
+        assert!(vo <= vs + 1e-9, "odin {vo} > static {vs}");
+    }
+
+    #[test]
+    fn constrained_reference_never_exceeds_peak_violations() {
+        // the resource-constrained reference is ≤ peak, so violations
+        // against it are ≤ violations against peak at the same level
+        let (r, db, schedule) = run(Policy::Odin { alpha: 10 });
+        for level in [0.5, 0.8, 0.95] {
+            let vp = slo_violations(&r, r.peak_throughput, level);
+            let vc = slo_violations_constrained(&r, &db, &schedule, 4, level);
+            assert!(
+                vc.violations <= vp.violations,
+                "level {level}: constrained {} > peak {}",
+                vc.violations,
+                vp.violations
+            );
+        }
+    }
+}

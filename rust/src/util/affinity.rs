@@ -1,0 +1,76 @@
+//! CPU affinity: pin a thread to the cores of an execution place.
+//!
+//! The paper's EPs are disjoint core sets ("execution places do not share
+//! performance-critical resources"); on hosts with enough cores the serving
+//! path pins each stage worker and each interference stressor to its EP's
+//! cores via `sched_setaffinity`. On this single-core sandbox pinning
+//! degenerates to a no-op-with-logging, which is detected and reported.
+
+/// Number of online CPUs.
+pub fn num_cpus() -> usize {
+    // SAFETY: sysconf is async-signal-safe and has no memory contract.
+    let n = unsafe { libc::sysconf(libc::_SC_NPROCESSORS_ONLN) };
+    if n < 1 {
+        1
+    } else {
+        n as usize
+    }
+}
+
+/// Pin the calling thread to the given cores. Returns false (without
+/// failing) when the host cannot honor the request — e.g. fewer cores than
+/// requested — so callers can degrade gracefully.
+pub fn pin_current_thread(cores: &[usize]) -> bool {
+    let ncpu = num_cpus();
+    let usable: Vec<usize> = cores.iter().copied().filter(|&c| c < ncpu).collect();
+    if usable.is_empty() {
+        return false;
+    }
+    // SAFETY: CPU_* only write into the local cpu_set_t.
+    unsafe {
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        libc::CPU_ZERO(&mut set);
+        for &c in &usable {
+            libc::CPU_SET(c, &mut set);
+        }
+        libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set)
+            == 0
+    }
+}
+
+/// The core set of execution place `ep` when EPs are `cores_per_ep` wide.
+pub fn ep_cores(ep: usize, cores_per_ep: usize) -> Vec<usize> {
+    (ep * cores_per_ep..(ep + 1) * cores_per_ep).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn num_cpus_positive() {
+        assert!(num_cpus() >= 1);
+    }
+
+    #[test]
+    fn ep_cores_disjoint() {
+        let a = ep_cores(0, 8);
+        let b = ep_cores(1, 8);
+        assert_eq!(a, (0..8).collect::<Vec<_>>());
+        assert_eq!(b, (8..16).collect::<Vec<_>>());
+        assert!(a.iter().all(|c| !b.contains(c)));
+    }
+
+    #[test]
+    fn pin_to_core_zero_works() {
+        // Core 0 always exists; pinning to it must succeed.
+        assert!(pin_current_thread(&[0]));
+    }
+
+    #[test]
+    fn pin_to_absent_core_degrades() {
+        // A core index far beyond any real machine: must return false,
+        // not error out.
+        assert!(!pin_current_thread(&[100_000]));
+    }
+}

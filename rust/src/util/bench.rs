@@ -1,0 +1,132 @@
+//! Micro/macro benchmark harness (criterion is not in the offline vendor
+//! set, so `cargo bench` targets are `harness = false` binaries built on
+//! this module).
+//!
+//! Usage in a bench target:
+//! ```no_run
+//! use odin::util::bench::Bench;
+//! let mut b = Bench::new("fig5_latency");
+//! b.run("vgg16/odin_a2/f10d10", || { /* workload */ });
+//! b.finish();
+//! ```
+//!
+//! Output format is one line per case:
+//! `bench <suite>/<case>  iters=N  mean=…  p50=…  p99=…` — stable enough
+//! to grep in EXPERIMENTS.md and diff across perf iterations.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// Target wall-clock spent measuring each case (after warmup).
+const TARGET_MEASURE: Duration = Duration::from_millis(600);
+const TARGET_WARMUP: Duration = Duration::from_millis(120);
+const MAX_SAMPLES: usize = 10_000;
+
+pub struct Bench {
+    suite: String,
+    results: Vec<(String, Summary)>,
+    /// Filter from ODIN_BENCH_FILTER / argv: only run matching cases.
+    filter: Option<String>,
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Bench {
+        // `cargo bench -- <filter>` passes the filter as an argument;
+        // `--bench` is injected by cargo's harness protocol and ignored.
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with('-'))
+            .or_else(|| std::env::var("ODIN_BENCH_FILTER").ok());
+        println!("suite {suite}");
+        Bench { suite: suite.to_string(), results: Vec::new(), filter }
+    }
+
+    /// Measure a closure: warm up, then sample until the time budget or
+    /// MAX_SAMPLES. The closure should perform one logical iteration.
+    pub fn run<F: FnMut()>(&mut self, case: &str, mut f: F) {
+        if let Some(ref flt) = self.filter {
+            if !case.contains(flt.as_str()) && !self.suite.contains(flt.as_str()) {
+                return;
+            }
+        }
+        // Warmup.
+        let w0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while w0.elapsed() < TARGET_WARMUP || warm_iters < 3 {
+            f();
+            warm_iters += 1;
+        }
+        // Measure.
+        let mut samples = Vec::with_capacity(256);
+        let m0 = Instant::now();
+        while m0.elapsed() < TARGET_MEASURE && samples.len() < MAX_SAMPLES {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64() * 1e9);
+        }
+        let s = Summary::of(&samples);
+        println!(
+            "bench {}/{}  iters={}  mean={}  p50={}  p99={}",
+            self.suite,
+            case,
+            s.n,
+            fmt_ns(s.mean),
+            fmt_ns(s.p50),
+            fmt_ns(s.p99),
+        );
+        self.results.push((case.to_string(), s));
+    }
+
+    /// Report a pre-measured scalar (for experiment-shaped benches where
+    /// the interesting number is a metric, not wall time).
+    pub fn report_metric(&mut self, case: &str, name: &str, value: f64) {
+        println!("metric {}/{}  {name}={value:.6}", self.suite, case);
+    }
+
+    pub fn finish(self) -> Vec<(String, Summary)> {
+        println!(
+            "suite {} done: {} cases",
+            self.suite,
+            self.results.len()
+        );
+        self.results
+    }
+}
+
+/// Human-scale duration formatting (ns → µs → ms → s).
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(12.0), "12.0ns");
+        assert_eq!(fmt_ns(1_500.0), "1.50µs");
+        assert_eq!(fmt_ns(2_000_000.0), "2.000ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200s");
+    }
+
+    #[test]
+    fn black_box_returns_value() {
+        assert_eq!(black_box(41) + 1, 42);
+    }
+}

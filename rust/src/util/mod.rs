@@ -1,0 +1,15 @@
+//! Substrate utilities built from scratch for the offline sandbox:
+//! RNG, statistics, bench harness, thread pool, affinity, logging,
+//! property testing.
+
+pub mod affinity;
+pub mod bench;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+pub use rng::Rng;
+pub use stats::{percentile, Histogram, Summary, Welford};
+pub use threadpool::ThreadPool;

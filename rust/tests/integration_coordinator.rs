@@ -1,0 +1,140 @@
+//! Cross-module integration tests: rebalancers × database × pipeline,
+//! over many randomized interference states — the paper's core claims as
+//! assertions.
+
+use odin::coordinator::{optimal_config, Lls, Odin, Rebalancer};
+use odin::database::synth::synthesize;
+use odin::database::TimingDb;
+use odin::models;
+use odin::pipeline::{CostModel, PipelineConfig};
+use odin::util::Rng;
+
+fn balanced(db: &TimingDb, n: usize) -> PipelineConfig {
+    optimal_config(db, &vec![0usize; n], n).0
+}
+
+/// ODIN closes most of the gap to the exhaustive optimum across all
+/// models and many random interference states (paper: "near-optimal
+/// configurations in most cases").
+#[test]
+fn odin_near_optimal_across_models_and_scenarios() {
+    let mut near = 0usize;
+    let mut total = 0usize;
+    for name in models::MODEL_NAMES {
+        let spec = models::build(name, 64).unwrap();
+        let db = synthesize(&spec, 7);
+        let n = 4;
+        let start = balanced(&db, n);
+        let mut rng = Rng::new(0xAB);
+        for _ in 0..25 {
+            let sc: Vec<usize> = (0..n).map(|_| rng.below(13)).collect();
+            let cost = CostModel::new(&db, &sc);
+            let r = Odin::new(10).rebalance(&start, &cost);
+            let opt = 1.0 / optimal_config(&db, &sc, n).1;
+            total += 1;
+            if r.throughput >= 0.9 * opt {
+                near += 1;
+            }
+            // hard floor: never below 60% of optimal
+            assert!(
+                r.throughput >= 0.6 * opt,
+                "{name} {sc:?}: odin {} << opt {opt}",
+                r.throughput
+            );
+        }
+    }
+    // "most cases": at least 70% of states within 10% of the optimum
+    assert!(
+        near * 10 >= total * 7,
+        "only {near}/{total} states near-optimal"
+    );
+}
+
+/// ODIN's final throughput dominates LLS's on average (paper: +19%),
+/// evaluated per identical interference state.
+#[test]
+fn odin_beats_lls_on_config_quality() {
+    let spec = models::vgg16(64);
+    let db = synthesize(&spec, 7);
+    let start = balanced(&db, 4);
+    let mut rng = Rng::new(0xCD);
+    let mut odin_sum = 0.0;
+    let mut lls_sum = 0.0;
+    for _ in 0..50 {
+        let sc: Vec<usize> = (0..4).map(|_| rng.below(13)).collect();
+        let cost = CostModel::new(&db, &sc);
+        odin_sum += Odin::new(10).rebalance(&start, &cost).throughput;
+        lls_sum += Lls::new().rebalance(&start, &cost).throughput;
+    }
+    assert!(
+        odin_sum > lls_sum * 1.05,
+        "odin {odin_sum} vs lls {lls_sum}: expected >5% aggregate win"
+    );
+}
+
+/// The DP oracle equals literal enumeration on every model at 3 stages.
+#[test]
+fn dp_oracle_cross_validated_on_all_models() {
+    for name in models::MODEL_NAMES {
+        let spec = models::build(name, 64).unwrap();
+        if spec.num_units() > 20 {
+            continue; // brute force explodes; covered by vgg16/resnet50
+        }
+        let db = synthesize(&spec, 3);
+        let sc = vec![5usize, 0, 11];
+        let (_, dp) = odin::coordinator::optimal_config(&db, &sc, 3);
+        let (_, bf, _) = odin::coordinator::brute_force_optimal(&db, &sc, 3);
+        assert!((dp - bf).abs() < 1e-12, "{name}");
+    }
+}
+
+/// Rebalancing is idempotent at the fixpoint: running ODIN on its own
+/// output under unchanged conditions must not degrade throughput.
+#[test]
+fn odin_fixpoint_stable() {
+    let spec = models::resnet50(64);
+    let db = synthesize(&spec, 1);
+    let start = balanced(&db, 4);
+    let sc = vec![0usize, 9, 0, 3];
+    let cost = CostModel::new(&db, &sc);
+    let r1 = Odin::new(10).rebalance(&start, &cost);
+    let r2 = Odin::new(10).rebalance(&r1.config, &cost);
+    assert!(r2.throughput >= r1.throughput * (1.0 - 1e-9));
+}
+
+/// Interference on several EPs at once: ODIN still improves and yields a
+/// valid partition (the paper only shows single-EP interference; this is
+/// the harder case).
+#[test]
+fn odin_handles_multi_ep_interference() {
+    let spec = models::vgg16(64);
+    let db = synthesize(&spec, 1);
+    let start = balanced(&db, 4);
+    let sc = vec![3usize, 9, 6, 12];
+    let cost = CostModel::new(&db, &sc);
+    let before = cost.throughput(&start);
+    let r = Odin::new(10).rebalance(&start, &cost);
+    r.config.check(16).unwrap();
+    assert!(r.throughput >= before);
+}
+
+/// 52-unit model over many EP counts: rebalance output always valid and
+/// fast (the Fig 10 scalability property).
+#[test]
+fn odin_scales_to_52_units() {
+    let spec = models::resnet152(64);
+    let db = synthesize(&spec, 2);
+    for n in [4usize, 13, 52] {
+        let start = balanced(&db, n);
+        let mut sc = vec![0usize; n];
+        sc[n / 2] = 9;
+        let cost = CostModel::new(&db, &sc);
+        let t0 = std::time::Instant::now();
+        let r = Odin::new(10).rebalance(&start, &cost);
+        assert!(
+            t0.elapsed().as_millis() < 500,
+            "rebalance too slow at {n} EPs"
+        );
+        r.config.check(52).unwrap();
+    }
+}

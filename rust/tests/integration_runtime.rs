@@ -1,0 +1,132 @@
+//! Runtime + serving integration over the real AOT artifacts.
+//!
+//! All tests skip cleanly when `make artifacts` has not run (CI without
+//! python); with artifacts they exercise the full L1→L2→L3 composition:
+//! HLO loading, PJRT compilation, gold numerics, stage chaining, the
+//! exec service, and the live pipeline server with online rebalancing.
+
+use odin::coordinator::{optimal_config, StageEval};
+use odin::database::synth::synthesize;
+use odin::models;
+use odin::pipeline::PipelineConfig;
+use odin::runtime::{ExecService, Manifest, ModelRuntime, Tensor};
+use odin::serving::{LiveEval, PipelineServer, ServerOpts};
+
+fn manifest() -> Option<Manifest> {
+    Manifest::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).ok()
+}
+
+#[test]
+fn gold_numerics_all_models() {
+    let Some(m) = manifest() else { return };
+    for model in &m.models {
+        let rt = ModelRuntime::load(model).unwrap();
+        let (checked, worst) = rt.verify_gold(1e-3).unwrap();
+        assert!(checked >= 4, "{}: only {checked} gold units", model.name);
+        assert!(worst < 1e-3, "{}: worst delta {worst}", model.name);
+    }
+}
+
+#[test]
+fn stage_chaining_equals_full_model() {
+    let Some(m) = manifest() else { return };
+    let model = m.model("vgg16").unwrap();
+    let rt = ModelRuntime::load(model).unwrap();
+    let input = rt.example_input();
+    // full model in one range
+    let full = rt.run_range(0, 16, &input).unwrap();
+    // same computation split into 4 stages
+    let mut act = input;
+    for (s, e) in [(0usize, 4usize), (4, 7), (7, 12), (12, 16)] {
+        act = rt.run_range(s, e, &act).unwrap();
+    }
+    assert_eq!(full.shape, act.shape);
+    assert!(
+        full.max_abs_diff(&act) < 1e-5,
+        "stage split changed numerics: {}",
+        full.max_abs_diff(&act)
+    );
+}
+
+#[test]
+fn shapes_match_manifest_chain() {
+    let Some(m) = manifest() else { return };
+    let model = m.model("resnet50").unwrap();
+    let rt = ModelRuntime::load(model).unwrap();
+    let mut act = rt.example_input();
+    for (u, spec) in model.units.iter().enumerate() {
+        act = rt.run_unit(u, &act).unwrap();
+        assert_eq!(act.shape, spec.out_shape, "unit {} ({})", u, spec.name);
+    }
+}
+
+#[test]
+fn exec_service_concurrent_clients() {
+    let Some(m) = manifest() else { return };
+    let model = m.model("vgg16").unwrap().clone();
+    let input_shape = model.input_shape.clone();
+    let service = ExecService::spawn(model).unwrap();
+    let mut joins = Vec::new();
+    for t in 0..3u64 {
+        let h = service.handle();
+        let shape = input_shape.clone();
+        joins.push(std::thread::spawn(move || {
+            let x = Tensor::random(&shape, t, 1.0);
+            let (out, dt) = h.run_range(0, 4, x).unwrap();
+            assert!(dt > 0.0);
+            out.data.iter().all(|v| v.is_finite())
+        }));
+    }
+    for j in joins {
+        assert!(j.join().unwrap());
+    }
+}
+
+#[test]
+fn live_eval_probes_report_stage_times() {
+    let Some(m) = manifest() else { return };
+    let model = m.model("vgg16").unwrap().clone();
+    let input_shape = model.input_shape.clone();
+    let service = ExecService::spawn(model).unwrap();
+    let input = Tensor::random(&input_shape, 5, 1.0);
+    let mut eval = LiveEval::new(service.handle(), input);
+    let cfg = PipelineConfig::new(vec![4, 3, 3, 6]);
+    let times = eval.probe(&cfg).unwrap();
+    assert_eq!(times.len(), 4);
+    assert!(times.iter().all(|&t| t > 0.0));
+    // empty stages report zero
+    let cfg2 = PipelineConfig::new(vec![8, 0, 8, 0]);
+    let times2 = eval.probe(&cfg2).unwrap();
+    assert_eq!(times2[1], 0.0);
+    assert_eq!(times2[3], 0.0);
+    assert_eq!(eval.probes(), 2);
+}
+
+#[test]
+fn pipeline_server_serves_and_monitors() {
+    let Some(m) = manifest() else { return };
+    let model = m.model("vgg16").unwrap().clone();
+    let input_shape = model.input_shape.clone();
+    let service = ExecService::spawn(model).unwrap();
+    let spec = models::vgg16(m.spatial);
+    let db = synthesize(&spec, 7);
+    let (config, _) = optimal_config(&db, &vec![0usize; 4], 4);
+    let opts = ServerOpts {
+        detect_threshold: 10.0, // effectively disable rebalancing here
+        ..ServerOpts::default()
+    };
+    let mut server = PipelineServer::new(service.handle(), config, opts);
+    let inputs: Vec<Tensor> =
+        (0..4).map(|i| Tensor::random(&input_shape, i, 1.0)).collect();
+    let done = server.serve(inputs).unwrap();
+    assert_eq!(done.len(), 4);
+    for c in &done {
+        assert!(c.latency > 0.0);
+        assert_eq!(c.stage_times.len(), 4);
+        assert_eq!(c.output.shape, vec![1, 1000]);
+        assert!(c.output.data.iter().all(|v| v.is_finite()));
+    }
+    // ids preserved in order
+    let ids: Vec<usize> = done.iter().map(|c| c.id).collect();
+    assert_eq!(ids, vec![0, 1, 2, 3]);
+}
