@@ -1,0 +1,39 @@
+//! Parallel sweep-engine micro-benchmarks: `simulate_many` fan-out vs the
+//! serial path on identical windows, plus a jobs-invariance metric so the
+//! byte-stability contract is visible in bench output.
+
+use odin::database::synth::synthesize;
+use odin::interference::{RandomInterference, Schedule};
+use odin::models;
+use odin::simulator::{simulate_many, Policy, SimConfig};
+use odin::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("micro_sweep");
+    let db = synthesize(&models::vgg16(64), 42);
+    let runs: Vec<(Schedule, SimConfig)> = (0..8u64)
+        .map(|i| {
+            (
+                Schedule::random(
+                    4,
+                    1000,
+                    RandomInterference { period: 10, duration: 10, seed: 42 ^ i, p_active: 1.0 },
+                ),
+                SimConfig::new(4, Policy::Odin { alpha: 2 }),
+            )
+        })
+        .collect();
+    for jobs in [1usize, 2, 4] {
+        b.run(&format!("sweep_8x1000q_jobs{jobs}"), || {
+            black_box(simulate_many(&db, &runs, jobs));
+        });
+    }
+    let serial = simulate_many(&db, &runs, 1);
+    let parallel = simulate_many(&db, &runs, 4);
+    let identical = serial
+        .iter()
+        .zip(&parallel)
+        .all(|(a, c)| a.latencies == c.latencies && a.final_config == c.final_config);
+    b.report_metric("determinism", "jobs_invariant", if identical { 1.0 } else { 0.0 });
+    b.finish();
+}

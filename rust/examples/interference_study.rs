@@ -4,13 +4,13 @@
 //!
 //!   cargo run --release --example interference_study [-- --queries 2000]
 
-use anyhow::Result;
 use odin::cli::Command;
 use odin::coordinator::optimal_config;
 use odin::database::synth::synthesize;
 use odin::interference::{catalogue, Schedule};
 use odin::models;
 use odin::simulator::{simulate, Policy, SimConfig, SimSummary};
+use odin::util::error::Result;
 
 fn main() -> Result<()> {
     let cmd = Command::new("interference_study", "per-scenario policy comparison")

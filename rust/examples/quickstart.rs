@@ -4,12 +4,12 @@
 //!
 //!   make artifacts && cargo run --release --example quickstart
 
-use anyhow::Result;
 use odin::coordinator::optimal_config;
 use odin::database::synth::synthesize;
 use odin::models;
 use odin::pipeline::PipelineConfig;
 use odin::runtime::{Manifest, ModelRuntime};
+use odin::util::error::Result;
 
 fn main() -> Result<()> {
     let manifest = Manifest::load("artifacts")?;

@@ -3,12 +3,12 @@
 //!
 //!   cargo run --release --example scalability [-- --queries 2000]
 
-use anyhow::Result;
 use odin::cli::Command;
 use odin::database::synth::synthesize;
 use odin::interference::{RandomInterference, Schedule};
 use odin::models;
 use odin::simulator::{simulate, Policy, SimConfig, SimSummary};
+use odin::util::error::Result;
 
 fn main() -> Result<()> {
     let cmd = Command::new("scalability", "ResNet-152 EP scaling study")

@@ -16,14 +16,14 @@
 
 use std::time::Instant;
 
-use anyhow::Result;
 use odin::cli::Command;
 use odin::coordinator::optimal_config;
 use odin::database::synth::synthesize;
-use odin::interference::{Scenario, StressKind, Placement, Stressor};
+use odin::interference::{Placement, Scenario, StressKind, Stressor};
 use odin::models;
 use odin::runtime::{ExecService, Manifest, Tensor};
 use odin::serving::{PipelineServer, ServeReport, ServerOpts};
+use odin::util::error::Result;
 
 fn main() -> Result<()> {
     let cmd = Command::new("serve_pipeline", "end-to-end serving demo")

@@ -9,6 +9,7 @@
 
 use crate::interference::{catalogue, Scenario, Stressor};
 use crate::util::affinity;
+use crate::util::error::Result;
 
 use super::TimingDb;
 
@@ -18,7 +19,7 @@ pub trait UnitTimer {
     fn unit_name(&self, u: usize) -> String;
     fn model_name(&self) -> String;
     /// Execute unit `u` once, end to end, returning elapsed seconds.
-    fn time_unit(&mut self, u: usize) -> anyhow::Result<f64>;
+    fn time_unit(&mut self, u: usize) -> Result<f64>;
 }
 
 /// Measurement parameters.
@@ -41,7 +42,7 @@ impl Default for MeasureOpts {
 }
 
 /// Measure the full m×(n+1) database.
-pub fn measure(timer: &mut dyn UnitTimer, opts: &MeasureOpts) -> anyhow::Result<TimingDb> {
+pub fn measure(timer: &mut dyn UnitTimer, opts: &MeasureOpts) -> Result<TimingDb> {
     let scenarios = catalogue();
     let m = timer.num_units();
     let mut times = vec![Vec::with_capacity(scenarios.len() + 1); m];
@@ -88,7 +89,7 @@ fn sample(
     u: usize,
     opts: &MeasureOpts,
     keep_min: bool,
-) -> anyhow::Result<f64> {
+) -> Result<f64> {
     for _ in 0..opts.warmup {
         timer.time_unit(u)?;
     }
@@ -120,7 +121,7 @@ mod tests {
         fn model_name(&self) -> String {
             "fake".into()
         }
-        fn time_unit(&mut self, u: usize) -> anyhow::Result<f64> {
+        fn time_unit(&mut self, u: usize) -> Result<f64> {
             self.calls += 1;
             // deterministic base per unit + tiny call-dependent wobble
             Ok(1e-3 * (u + 1) as f64 + 1e-7 * (self.calls % 3) as f64)

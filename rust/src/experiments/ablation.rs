@@ -9,12 +9,11 @@
 //!   extra move on a throughput plateau), measured by comparing against
 //!   a plateau-blind ODIN variant emulated via exhaustive-trial parity.
 
-use anyhow::Result;
-
 use crate::database::synth::synthesize;
 use crate::interference::{RandomInterference, Schedule};
 use crate::models;
-use crate::simulator::{simulate, Policy, SimConfig, SimSummary};
+use crate::simulator::{simulate_many, Policy, SimConfig, SimSummary};
+use crate::util::error::Result;
 
 use super::{ExpCtx, Output};
 
@@ -28,6 +27,7 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
         "{:<8} {:>7} {:>12} {:>11} {:>10} {:>9}",
         "cadence", "alpha", "lat_mean(ms)", "tput_p50", "rebal_%", "serial/rb"
     ));
+    const ALPHAS: [usize; 5] = [1, 2, 5, 10, 20];
     for (label, period, duration) in [("fast", 2usize, 10usize), ("slow", 100, 100)] {
         let schedule = Schedule::random(
             4,
@@ -39,13 +39,15 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
                 p_active: 1.0,
             },
         );
-        for alpha in [1usize, 2, 5, 10, 20] {
-            let r = simulate(
-                &db,
-                &schedule,
-                &SimConfig::new(4, Policy::Odin { alpha }),
-            );
-            let s = SimSummary::of(&r);
+        // the alpha sweep shares one schedule; windows fan out over
+        // ctx.jobs workers and print in ALPHAS order
+        let runs: Vec<(Schedule, SimConfig)> = ALPHAS
+            .iter()
+            .map(|&alpha| (schedule.clone(), SimConfig::new(4, Policy::Odin { alpha })))
+            .collect();
+        let results = simulate_many(&db, &runs, ctx.jobs);
+        for (&alpha, r) in ALPHAS.iter().zip(&results) {
+            let s = SimSummary::of(r);
             out.line(format!(
                 "{:<8} {:>7} {:>12.2} {:>11.2} {:>9.1}% {:>9.1}",
                 label,
@@ -72,11 +74,18 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
         ctx.queries,
         RandomInterference { period: 10, duration: 10, seed: ctx.seed, p_active: 1.0 },
     );
-    for threshold in [0.01f64, 0.05, 0.10, 0.25, 0.50] {
-        let mut cfg = SimConfig::new(4, Policy::Odin { alpha: 2 });
-        cfg.detect_threshold = threshold;
-        let r = simulate(&db, &schedule, &cfg);
-        let s = SimSummary::of(&r);
+    const THRESHOLDS: [f64; 5] = [0.01, 0.05, 0.10, 0.25, 0.50];
+    let runs: Vec<(Schedule, SimConfig)> = THRESHOLDS
+        .iter()
+        .map(|&threshold| {
+            let mut cfg = SimConfig::new(4, Policy::Odin { alpha: 2 });
+            cfg.detect_threshold = threshold;
+            (schedule.clone(), cfg)
+        })
+        .collect();
+    let results = simulate_many(&db, &runs, ctx.jobs);
+    for (&threshold, r) in THRESHOLDS.iter().zip(&results) {
+        let s = SimSummary::of(r);
         out.line(format!(
             "{:<10.2} {:>12.2} {:>11.2} {:>11} {:>8.1}%",
             threshold,

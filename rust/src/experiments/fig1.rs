@@ -6,7 +6,7 @@
 
 use std::time::Instant;
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::coordinator::{brute_force_optimal, optimal_config};
 use crate::database::synth::synthesize;
@@ -36,7 +36,8 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
     let ts_dirty = stage_times(&balanced, &db, &dirty);
     let t_dirty = 1.0 / ts_dirty.iter().copied().fold(0.0f64, f64::max);
     out.line(format!(
-        "(b) same config under interference: stage times {:?} -> {:.2} q/s ({:.0}% drop; paper: 46%)",
+        "(b) same config under interference: stage times {:?} -> {:.2} q/s \
+         ({:.0}% drop; paper: 46%)",
         fmt_times(&ts_dirty),
         t_dirty,
         100.0 * (1.0 - t_dirty / t0)

@@ -4,12 +4,11 @@
 //! Paper shape: latency stays flat as EPs grow (ODIN keeps finding good
 //! configurations), throughput rises with EPs and approaches the peak.
 
-use anyhow::Result;
-
 use crate::database::synth::synthesize;
 use crate::interference::{RandomInterference, Schedule};
 use crate::models;
-use crate::simulator::{simulate, Policy, SimConfig, SimSummary};
+use crate::simulator::{simulate_many, Policy, SimConfig, SimSummary};
+use crate::util::error::Result;
 
 use super::{ExpCtx, Output};
 
@@ -24,24 +23,28 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
         "{:>4} {:>12} {:>12} {:>12} {:>10} {:>10} {:>11}",
         "EPs", "lat_mean(ms)", "lat_p99(ms)", "tput_p50", "achieved", "peak(q/s)", "rebalances"
     ));
+    // one window per EP count, fanned out over ctx.jobs workers; rows
+    // print in EP_COUNTS order regardless of parallelism
+    let runs: Vec<(Schedule, SimConfig)> = EP_COUNTS
+        .iter()
+        .map(|&eps| {
+            let schedule = Schedule::random(
+                eps,
+                ctx.queries,
+                RandomInterference {
+                    period: 10,
+                    duration: 10,
+                    seed: ctx.seed ^ eps as u64,
+                    p_active: 1.0,
+                },
+            );
+            (schedule, SimConfig::new(eps, Policy::Odin { alpha: 10 }))
+        })
+        .collect();
+    let results = simulate_many(&db, &runs, ctx.jobs);
     let mut rows = Vec::new();
-    for &eps in &EP_COUNTS {
-        let schedule = Schedule::random(
-            eps,
-            ctx.queries,
-            RandomInterference {
-                period: 10,
-                duration: 10,
-                seed: ctx.seed ^ eps as u64,
-                p_active: 1.0,
-            },
-        );
-        let r = simulate(
-            &db,
-            &schedule,
-            &SimConfig::new(eps, Policy::Odin { alpha: 10 }),
-        );
-        let s = SimSummary::of(&r);
+    for (&eps, r) in EP_COUNTS.iter().zip(&results) {
+        let s = SimSummary::of(r);
         out.line(format!(
             "{:>4} {:>12.2} {:>12.2} {:>12.2} {:>10.2} {:>10.2} {:>11}",
             eps,

@@ -5,7 +5,7 @@
 //! and print the achieved vs resource-constrained throughput series plus
 //! the configuration after each reaction.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::coordinator::optimal_config;
 use crate::database::synth::synthesize;

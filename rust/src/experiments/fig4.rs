@@ -6,7 +6,7 @@
 //! (`odin bench-db`) exists at artifacts/db_measured.json, prints it side
 //! by side.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::database::{synth::synthesize, TimingDb};
 use crate::interference::{catalogue, NUM_SCENARIOS};

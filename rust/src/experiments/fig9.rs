@@ -3,13 +3,12 @@
 //! throughput and (ii) the resource-constrained (exhaustive-search)
 //! throughput. Aggregated over the §4.2 grid, as in the paper.
 
-use anyhow::Result;
-
 use crate::database::synth::synthesize;
 use crate::interference::{RandomInterference, Schedule};
 use crate::models;
-use crate::simulator::engine::{simulate, SimConfig};
+use crate::simulator::engine::{simulate_many, SimConfig};
 use crate::simulator::slo::{slo_violations, slo_violations_constrained};
+use crate::util::error::Result;
 
 use super::grid::{GRID_DURS, GRID_FREQS, GRID_MODELS, GRID_POLICIES};
 use super::{ExpCtx, Output};
@@ -36,9 +35,10 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
             "policy", "SLO%", "vs peak", "vs constr."
         ));
         for &policy in &GRID_POLICIES {
-            // aggregate violations across the 3x3 grid
-            let mut agg: Vec<(usize, usize, usize)> =
-                vec![(0, 0, 0); LEVELS.len()]; // (viol_peak, viol_constr, total)
+            // the 3x3 grid of windows, fanned out over ctx.jobs workers;
+            // aggregation below follows the input order, so the printed
+            // table is identical for every --jobs value
+            let mut runs = Vec::new();
             for &period in &GRID_FREQS {
                 for &duration in &GRID_DURS {
                     let schedule = Schedule::random(
@@ -47,20 +47,24 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
                         RandomInterference {
                             period,
                             duration,
-                            seed: ctx.seed ^ (period as u64) << 8 ^ duration as u64,
+                            seed: ctx.seed ^ ((period as u64) << 8) ^ duration as u64,
                             p_active: 1.0,
                         },
                     );
-                    let r = simulate(&db, &schedule, &SimConfig::new(NUM_EPS, policy));
-                    for (i, &level) in LEVELS.iter().enumerate() {
-                        let vp = slo_violations(&r, r.peak_throughput, level);
-                        let vc = slo_violations_constrained(
-                            &r, &db, &schedule, NUM_EPS, level,
-                        );
-                        agg[i].0 += vp.violations;
-                        agg[i].1 += vc.violations;
-                        agg[i].2 += vp.total;
-                    }
+                    runs.push((schedule, SimConfig::new(NUM_EPS, policy)));
+                }
+            }
+            let results = simulate_many(&db, &runs, ctx.jobs);
+            // aggregate violations across the 3x3 grid
+            let mut agg: Vec<(usize, usize, usize)> =
+                vec![(0, 0, 0); LEVELS.len()]; // (viol_peak, viol_constr, total)
+            for ((schedule, _), r) in runs.iter().zip(&results) {
+                for (i, &level) in LEVELS.iter().enumerate() {
+                    let vp = slo_violations(r, r.peak_throughput, level);
+                    let vc = slo_violations_constrained(r, &db, schedule, NUM_EPS, level);
+                    agg[i].0 += vp.violations;
+                    agg[i].1 += vc.violations;
+                    agg[i].2 += vp.total;
                 }
             }
             for (i, &level) in LEVELS.iter().enumerate() {

@@ -1,13 +1,24 @@
 //! The shared §4.2 experiment grid behind Figs 5–8: frequency period ×
 //! duration ∈ {2, 10, 100}², models {VGG16, ResNet-50}, policies
 //! {ODIN α=2, ODIN α=10, LLS}, 4000 queries, 4 EPs.
+//!
+//! The sweep fans out over `ExpCtx::jobs` worker threads, one work item
+//! per (model, period, duration) combo so all three policies of a combo
+//! share one schedule (identical conditions, as the paper requires).
+//! Results merge in the fixed model → period → duration → policy order,
+//! so the printed rows and the figure JSON are byte-identical for every
+//! `--jobs` value.
 
-use anyhow::Result;
+use std::sync::Arc;
 
 use crate::database::synth::synthesize;
+use crate::database::TimingDb;
 use crate::interference::{RandomInterference, Schedule};
+use crate::json::{to_string_pretty, Value};
 use crate::models;
 use crate::simulator::{simulate, Policy, SimConfig, SimSummary};
+use crate::util::error::Result;
+use crate::util::ThreadPool;
 
 use super::{ExpCtx, Output};
 
@@ -49,40 +60,91 @@ pub fn grid_cells() -> Vec<GridCell> {
     out
 }
 
-/// Run the full grid (all runs share the same interference schedule per
-/// (model, period, duration) so policies face identical conditions).
+/// Run the full grid, fanning combos across `ctx.jobs` threads. All runs
+/// of a combo share the same interference schedule so policies face
+/// identical conditions; the merge order (and thus every downstream
+/// rendering) is independent of `jobs`.
 pub fn run_grid(ctx: &ExpCtx) -> Result<Vec<GridResult>> {
-    let mut out = Vec::new();
+    // synthesize each model's database once and share it across the
+    // fan-out (it is deterministic in (model, seed), so sharing changes
+    // nothing except the redundant work)
+    let mut combos = Vec::new();
     for &model in &GRID_MODELS {
         let spec = models::build(model, ctx.spatial).unwrap();
-        let db = synthesize(&spec, ctx.seed);
+        let db = Arc::new(synthesize(&spec, ctx.seed));
         for &period in &GRID_FREQS {
             for &duration in &GRID_DURS {
-                let schedule = Schedule::random(
-                    NUM_EPS,
-                    ctx.queries,
-                    RandomInterference {
-                        period,
-                        duration,
-                        seed: ctx.seed ^ (period as u64) << 8 ^ duration as u64,
-                        p_active: 1.0,
-                    },
-                );
-                for &policy in &GRID_POLICIES {
-                    let r = simulate(
-                        &db,
-                        &schedule,
-                        &SimConfig::new(NUM_EPS, policy),
-                    );
-                    out.push(GridResult {
-                        cell: GridCell { model, policy, period, duration },
-                        summary: SimSummary::of(&r),
-                    });
-                }
+                combos.push((model, Arc::clone(&db), period, duration));
             }
         }
     }
-    Ok(out)
+    let (seed, queries) = (ctx.seed, ctx.queries);
+    type Combo = (&'static str, Arc<TimingDb>, usize, usize);
+    let run_combo = move |(model, db, period, duration): Combo| {
+        let schedule = Schedule::random(
+            NUM_EPS,
+            queries,
+            RandomInterference {
+                period,
+                duration,
+                seed: seed ^ ((period as u64) << 8) ^ duration as u64,
+                p_active: 1.0,
+            },
+        );
+        GRID_POLICIES
+            .iter()
+            .map(|&policy| {
+                let r = simulate(&db, &schedule, &SimConfig::new(NUM_EPS, policy));
+                GridResult {
+                    cell: GridCell { model, policy, period, duration },
+                    summary: SimSummary::of(&r),
+                }
+            })
+            .collect::<Vec<GridResult>>()
+    };
+    let nested: Vec<Vec<GridResult>> = if ctx.jobs > 1 {
+        let pool = ThreadPool::new(ctx.jobs.min(combos.len()));
+        pool.map(combos, run_combo)
+    } else {
+        combos.into_iter().map(run_combo).collect()
+    };
+    Ok(nested.into_iter().flatten().collect())
+}
+
+/// Deterministic JSON rendering of grid results: stable key order
+/// (BTreeMap emission) on top of the stable merge order makes the bytes
+/// identical across `--jobs` settings.
+pub fn grid_results_json(results: &[GridResult]) -> Value {
+    Value::arr(
+        results
+            .iter()
+            .map(|r| {
+                Value::obj(vec![
+                    ("model", Value::from(r.cell.model)),
+                    ("policy", Value::from(r.cell.policy.label())),
+                    ("period", Value::from(r.cell.period)),
+                    ("duration", Value::from(r.cell.duration)),
+                    ("lat_mean", Value::from(r.summary.latency.mean)),
+                    ("lat_p50", Value::from(r.summary.latency.p50)),
+                    ("lat_p99", Value::from(r.summary.latency.p99)),
+                    ("tput_mean", Value::from(r.summary.throughput.mean)),
+                    ("tput_p50", Value::from(r.summary.throughput.p50)),
+                    ("windowed_p50", Value::from(r.summary.windowed.p50)),
+                    ("windowed_min", Value::from(r.summary.windowed.min)),
+                    ("achieved", Value::from(r.summary.achieved_throughput)),
+                    (
+                        "rebalance_fraction",
+                        Value::from(r.summary.rebalance_fraction),
+                    ),
+                    ("rebalances", Value::from(r.summary.num_rebalances)),
+                    (
+                        "serial_per_rebalance",
+                        Value::from(r.summary.serial_per_rebalance),
+                    ),
+                ])
+            })
+            .collect(),
+    )
 }
 
 /// Which figure to print from the grid data.
@@ -119,12 +181,16 @@ pub fn run_figure(ctx: &ExpCtx, fig: Figure) -> Result<()> {
             out.line("#   interference is worst; alpha=10 <= alpha=2 latency mostly");
             header(&mut out, "lat_mean  lat_p50   lat_p99");
             for r in &results {
-                row(&mut out, r, format!(
-                    "{:>8.2}  {:>8.2}  {:>8.2}",
-                    r.summary.latency.mean * 1e3,
-                    r.summary.latency.p50 * 1e3,
-                    r.summary.latency.p99 * 1e3,
-                ));
+                row(
+                    &mut out,
+                    r,
+                    format!(
+                        "{:>8.2}  {:>8.2}  {:>8.2}",
+                        r.summary.latency.mean * 1e3,
+                        r.summary.latency.p50 * 1e3,
+                        r.summary.latency.p99 * 1e3,
+                    ),
+                );
             }
         }
         Figure::Throughput => {
@@ -133,13 +199,17 @@ pub fn run_figure(ctx: &ExpCtx, fig: Figure) -> Result<()> {
             out.line("#   rebalance phases appear as low-throughput outliers (w_min)");
             header(&mut out, "tput_p50  w_p50   w_min  achieved");
             for r in &results {
-                row(&mut out, r, format!(
-                    "{:>8.2} {:>6.2} {:>7.2}  {:>8.2}",
-                    r.summary.throughput.p50,
-                    r.summary.windowed.p50,
-                    r.summary.windowed.min,
-                    r.summary.achieved_throughput,
-                ));
+                row(
+                    &mut out,
+                    r,
+                    format!(
+                        "{:>8.2} {:>6.2} {:>7.2}  {:>8.2}",
+                        r.summary.throughput.p50,
+                        r.summary.windowed.p50,
+                        r.summary.windowed.min,
+                        r.summary.achieved_throughput,
+                    ),
+                );
             }
         }
         Figure::TailLatency => {
@@ -169,14 +239,25 @@ pub fn run_figure(ctx: &ExpCtx, fig: Figure) -> Result<()> {
             out.line("#   decreasing with longer frequency periods and durations");
             header(&mut out, "rebal_%   episodes  serial/episode");
             for r in &results {
-                row(&mut out, r, format!(
-                    "{:>7.2}%  {:>8}  {:>14.1}",
-                    r.summary.rebalance_fraction * 100.0,
-                    r.summary.num_rebalances,
-                    r.summary.serial_per_rebalance,
-                ));
+                row(
+                    &mut out,
+                    r,
+                    format!(
+                        "{:>7.2}%  {:>8}  {:>14.1}",
+                        r.summary.rebalance_fraction * 100.0,
+                        r.summary.num_rebalances,
+                        r.summary.serial_per_rebalance,
+                    ),
+                );
             }
         }
+    }
+    if let Some(dir) = &ctx.out_dir {
+        let path = dir.join(format!("{}.json", fig.id()));
+        std::fs::write(&path, to_string_pretty(&grid_results_json(&results)))?;
+        // stdout only: the .txt mirror must stay byte-identical across
+        // output directories and --jobs settings
+        println!("# wrote {}", path.display());
     }
     Ok(())
 }
@@ -196,4 +277,62 @@ fn row(out: &mut Output, r: &GridResult, cols: String) {
         r.cell.period,
         r.cell.duration,
     ));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_ctx(jobs: usize) -> ExpCtx {
+        ExpCtx { queries: 150, jobs, ..ExpCtx::default() }
+    }
+
+    #[test]
+    fn cells_enumerate_in_declared_order() {
+        let cells = grid_cells();
+        assert_eq!(
+            cells.len(),
+            GRID_MODELS.len() * GRID_POLICIES.len() * GRID_FREQS.len() * GRID_DURS.len()
+        );
+        assert_eq!(cells[0].model, "vgg16");
+        assert_eq!(cells[0].period, 2);
+    }
+
+    #[test]
+    fn parallel_sweep_matches_serial_sweep_bytewise() {
+        // the acceptance contract: --jobs 1 and --jobs 4 must produce
+        // identical figure JSON, byte for byte
+        let a = run_grid(&small_ctx(1)).unwrap();
+        let b = run_grid(&small_ctx(4)).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.cell.model, y.cell.model);
+            assert_eq!(x.cell.policy, y.cell.policy);
+            assert_eq!(x.cell.period, y.cell.period);
+            assert_eq!(x.cell.duration, y.cell.duration);
+        }
+        let ja = to_string_pretty(&grid_results_json(&a));
+        let jb = to_string_pretty(&grid_results_json(&b));
+        assert_eq!(ja, jb);
+    }
+
+    #[test]
+    fn grid_rows_follow_serial_nesting_order() {
+        // parallel merge must reproduce model → period → duration → policy
+        let results = run_grid(&small_ctx(3)).unwrap();
+        let mut i = 0;
+        for &model in &GRID_MODELS {
+            for &period in &GRID_FREQS {
+                for &duration in &GRID_DURS {
+                    for &policy in &GRID_POLICIES {
+                        let c = &results[i].cell;
+                        assert_eq!((c.model, c.period, c.duration), (model, period, duration));
+                        assert_eq!(c.policy, policy);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        assert_eq!(i, results.len());
+    }
 }

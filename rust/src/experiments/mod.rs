@@ -33,7 +33,8 @@ mod table1;
 use std::io::Write as _;
 use std::path::PathBuf;
 
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::util::error::Result;
 
 pub use grid::{grid_cells, run_grid, GridCell, GridResult, GRID_MODELS, GRID_POLICIES};
 
@@ -47,11 +48,14 @@ pub struct ExpCtx {
     pub queries: usize,
     /// Spatial resolution of the model specs (must match artifacts).
     pub spatial: usize,
+    /// Worker threads for simulation sweeps (`--jobs N`); results are
+    /// identical for every value — see `simulator::simulate_many`.
+    pub jobs: usize,
 }
 
 impl Default for ExpCtx {
     fn default() -> Self {
-        ExpCtx { out_dir: None, seed: 42, queries: 4000, spatial: 64 }
+        ExpCtx { out_dir: None, seed: 42, queries: 4000, spatial: 64, jobs: 1 }
     }
 }
 

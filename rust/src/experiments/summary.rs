@@ -6,7 +6,7 @@
 //! * ODIN tail latency vs LLS: −14%
 //! * serial queries per rebalance: LLS ≈ 1, ODIN ≈ 4 (α=2) / 12 (α=10)
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::simulator::Policy;
 

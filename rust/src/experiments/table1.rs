@@ -1,6 +1,6 @@
 //! Table 1: the colocation scenario catalogue.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::interference::catalogue;
 

@@ -15,6 +15,11 @@
 //! Entry points: the `odin` binary (`rust/src/main.rs`), the examples in
 //! `examples/`, and the per-figure benches in `rust/benches/`.
 
+// `EpScenarios` is a semantically-owned `Vec<usize>` alias that crosses
+// many APIs by reference; rewriting those signatures to `&[usize]` would
+// break `Schedule::at` callers that rely on the owned alias.
+#![allow(clippy::ptr_arg)]
+
 pub mod cli;
 pub mod coordinator;
 pub mod database;

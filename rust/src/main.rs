@@ -10,8 +10,6 @@
 //!   serve        run the live pipeline server on N random queries
 //!   models       list built-in model specs
 
-use anyhow::{anyhow, bail, Result};
-
 use odin::cli::{Args, CliError, Command};
 use odin::coordinator::optimal_config;
 use odin::database::measure::{measure, MeasureOpts};
@@ -23,6 +21,8 @@ use odin::models;
 use odin::runtime::{ExecService, Manifest, ModelRuntime, RuntimeTimer, Tensor};
 use odin::serving::{PipelineServer, ServeReport, ServerOpts};
 use odin::simulator::{simulate, Policy, SimConfig, SimSummary};
+use odin::util::error::{OdinError, Result};
+use odin::{bail, err};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -105,11 +105,11 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         .switch("no-interference", "run a clean window");
     let args = cmd.parse(argv)?;
     let spec = models::build(args.get("model"), args.usize("spatial")?)
-        .ok_or_else(|| anyhow!("unknown model {}", args.get("model")))?;
+        .ok_or_else(|| err!("unknown model {}", args.get("model")))?;
     let db = if args.get("db").is_empty() {
         synthesize(&spec, args.u64("seed")?)
     } else {
-        TimingDb::load(args.get("db")).map_err(|e| anyhow!(e))?
+        TimingDb::load(args.get("db")).map_err(OdinError::msg)?
     };
     let eps = args.usize("eps")?;
     let queries = args.usize("queries")?;
@@ -155,16 +155,18 @@ fn cmd_experiment(argv: &[String]) -> Result<()> {
         .flag("out", "results", "output directory ('' = stdout only)")
         .flag("queries", "4000", "queries per simulation window")
         .flag("seed", "42", "rng seed")
-        .flag("spatial", "64", "model input resolution");
+        .flag("spatial", "64", "model input resolution")
+        .flag("jobs", "1", "worker threads for simulation sweeps (results are jobs-invariant)");
     let args = cmd.parse(argv)?;
     let id = args
         .positional(0)
-        .ok_or_else(|| anyhow!("missing experiment id"))?;
+        .ok_or_else(|| err!("missing experiment id"))?;
     let ctx = ExpCtx {
         out_dir: (!args.get("out").is_empty()).then(|| args.get("out").into()),
         seed: args.u64("seed")?,
         queries: args.usize("queries")?,
         spatial: args.usize("spatial")?,
+        jobs: args.usize("jobs")?.max(1),
     };
     experiments::run(id, &ctx)
 }
@@ -179,7 +181,7 @@ fn cmd_bench_db(argv: &[String]) -> Result<()> {
     let manifest = Manifest::load(args.get("artifacts"))?;
     let model = manifest
         .model(args.get("model"))
-        .ok_or_else(|| anyhow!("{} not in artifacts", args.get("model")))?;
+        .ok_or_else(|| err!("{} not in artifacts", args.get("model")))?;
     eprintln!("compiling {} ({} units) ...", model.name, model.units.len());
     let rt = ModelRuntime::load(model)?;
     let mut timer = RuntimeTimer::new(&rt)?;
@@ -230,7 +232,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let manifest = Manifest::load(args.get("artifacts"))?;
     let model = manifest
         .model(args.get("model"))
-        .ok_or_else(|| anyhow!("{} not in artifacts", args.get("model")))?;
+        .ok_or_else(|| err!("{} not in artifacts", args.get("model")))?;
     let eps = args.usize("eps")?;
     let service = ExecService::spawn(model.clone())?;
     let spec = models::build(&model.name, manifest.spatial).unwrap();

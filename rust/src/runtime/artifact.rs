@@ -8,10 +8,10 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
-
+use crate::bail;
 use crate::json::{parse, Value};
 use crate::models::UnitKind;
+use crate::util::error::{Context as _, Result};
 
 #[derive(Clone, Debug)]
 pub struct GoldFiles {
@@ -56,7 +56,7 @@ impl Manifest {
         let mpath = root.join("manifest.json");
         let text = std::fs::read_to_string(&mpath)
             .with_context(|| format!("reading {} (run `make artifacts`)", mpath.display()))?;
-        let v = parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let v = parse(&text)?;
         if v.get("format").as_usize() != Some(1) {
             bail!("unsupported manifest format {:?}", v.get("format"));
         }

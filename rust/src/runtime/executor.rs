@@ -8,15 +8,21 @@
 //!
 //! NOT Send (PjRtClient is Rc-based): multi-threaded callers go through
 //! [`super::service::ExecService`].
+//!
+//! The `xla` crate is not vendored in this hermetic build; the call sites
+//! below compile against [`super::xla`], a same-API stub whose backend
+//! entry points report "unavailable" (see that module for the swap-back
+//! recipe).
 
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
-
+use crate::bail;
 use crate::database::measure::UnitTimer;
+use crate::util::error::{Context as _, Result};
 
 use super::artifact::{ModelArtifacts, UnitArtifact};
 use super::tensor::Tensor;
+use super::xla;
 
 struct CompiledUnit {
     exe: xla::PjRtLoadedExecutable,
@@ -165,10 +171,7 @@ fn compile_unit(
         .iter()
         .enumerate()
         .map(|(pi, shape)| {
-            let seed = model.seed
-                ^ (u.index as u64) << 16
-                ^ (pi as u64) << 40
-                ^ 0x9E37;
+            let seed = model.seed ^ ((u.index as u64) << 16) ^ ((pi as u64) << 40) ^ 0x9E37;
             let scale = (2.0 / shape.iter().product::<usize>() as f32).sqrt();
             Tensor::random(shape, seed, scale).to_literal()
         })

@@ -6,6 +6,7 @@ pub mod artifact;
 pub mod executor;
 pub mod service;
 pub mod tensor;
+pub mod xla;
 
 pub use artifact::{Manifest, ModelArtifacts, UnitArtifact};
 pub use executor::{ModelRuntime, RuntimeTimer};

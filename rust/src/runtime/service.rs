@@ -12,7 +12,8 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use crate::err;
+use crate::util::error::Result;
 
 use super::artifact::ModelArtifacts;
 use super::executor::ModelRuntime;
@@ -42,8 +43,8 @@ impl ExecHandle {
         let (reply, rx) = channel();
         self.tx
             .send(Request::RunRange { start, end, input, reply })
-            .map_err(|_| anyhow!("exec service gone"))?;
-        rx.recv().map_err(|_| anyhow!("exec service dropped reply"))?
+            .map_err(|_| err!("exec service gone"))?;
+        rx.recv().map_err(|_| err!("exec service dropped reply"))?
     }
 }
 
@@ -76,7 +77,7 @@ impl ExecService {
             })?;
         ready_rx
             .recv()
-            .map_err(|_| anyhow!("exec service died during load"))??;
+            .map_err(|_| err!("exec service died during load"))??;
         Ok(ExecService { tx, thread: Some(thread) })
     }
 

@@ -1,7 +1,10 @@
 //! Host tensors: plain `Vec<f32>` + shape, the Send-able currency between
 //! stage workers and the (single-threaded) XLA execution service.
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context as _, Result};
+
+use super::xla;
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
@@ -59,7 +62,7 @@ impl Tensor {
     /// Convert to an XLA literal of this shape.
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+        xla::Literal::vec1(&self.data).reshape(&dims)
     }
 
     /// Build from an XLA literal (f32 only).

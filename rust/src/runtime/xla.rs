@@ -1,0 +1,137 @@
+//! Stand-in for the external `xla` (PJRT) crate, which is not vendored in
+//! this hermetic offline build.
+//!
+//! It preserves the exact API surface `runtime::{executor, tensor}`
+//! program against — `PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `compile` → `execute` → `to_tuple1` —
+//! so the real crate can be swapped back in by deleting this module and
+//! its `use super::xla;` imports, without touching any call site. The
+//! host-side [`Literal`] plumbing (shape + f32 payload) is implemented for
+//! real; every entry point that would reach PJRT reports a clear error
+//! instead, which surfaces as "backend unavailable" from `odin bench-db`,
+//! `odin verify`, and `odin serve` (the artifact-free simulation and
+//! experiment paths never get here).
+
+use std::path::Path;
+
+use crate::util::error::{OdinError, Result};
+
+fn unavailable(what: &str) -> OdinError {
+    OdinError::msg(format!(
+        "{what}: the PJRT/XLA backend is not vendored in this hermetic build; \
+         swap runtime::xla for the real `xla` crate to execute AOT artifacts"
+    ))
+}
+
+/// Host tensor literal: f32 payload plus dimensions.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal over a borrowed slice.
+    pub fn vec1(xs: &[f32]) -> Literal {
+        Literal { data: xs.to_vec(), dims: vec![xs.len() as i64] }
+    }
+
+    /// Reshape without changing the element count.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.data.len() {
+            return Err(OdinError::msg(format!(
+                "reshape {:?} -> {:?}: element count mismatch ({} elements)",
+                self.dims,
+                dims,
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy the payload out (f32 only, matching the AOT artifact dtype).
+    pub fn to_vec<T: From<f32>>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&x| T::from(x)).collect())
+    }
+
+    /// AOT lowers with `return_tuple=True`; the stub's literals are
+    /// already the single tuple element.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Ok(self)
+    }
+}
+
+/// PJRT client handle (stub: construction reports the missing backend).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let _ = path.as_ref();
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation wrapper (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer returned by `execute` (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_reshape_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn backend_entry_points_report_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{e}").contains("not vendored"), "{e}");
+        assert!(HloModuleProto::from_text_file("/tmp/nope.hlo").is_err());
+    }
+}

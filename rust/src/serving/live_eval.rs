@@ -24,7 +24,7 @@ impl LiveEval {
     }
 
     /// Run one query serially through `config`, returning per-stage times.
-    pub fn probe(&mut self, config: &PipelineConfig) -> anyhow::Result<Vec<f64>> {
+    pub fn probe(&mut self, config: &PipelineConfig) -> crate::util::error::Result<Vec<f64>> {
         let mut times = Vec::with_capacity(config.num_stages());
         let mut act = self.input.clone();
         for (start, end) in config.ranges() {
@@ -53,7 +53,7 @@ impl StageEval for LiveEval {
                 // a failed probe must not crash the rebalance loop; report
                 // an infinitely-bad config so the algorithm steers away
                 crate::log_warn!("live probe failed: {e:#}");
-                out.extend(std::iter::repeat(f64::INFINITY).take(config.num_stages()));
+                out.resize(config.num_stages(), f64::INFINITY);
             }
         }
     }

@@ -14,12 +14,12 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
-
 use crate::coordinator::{Monitor, Odin, RebalanceResult};
+use crate::err;
 use crate::pipeline::PipelineConfig;
 use crate::runtime::{ExecHandle, Tensor};
 use crate::util::affinity;
+use crate::util::error::Result;
 
 use super::live_eval::LiveEval;
 
@@ -172,7 +172,7 @@ impl PipelineServer {
                     admitted,
                     stage_times: Vec::new(),
                 })
-                .map_err(|_| anyhow!("pipeline workers gone"))?;
+                .map_err(|_| err!("pipeline workers gone"))?;
             // lock-step: wait for completion before admitting the next —
             // keeps monitoring simple and exact; the pipeline parallelism
             // is still real on multi-EP hosts because stage workers run
@@ -180,7 +180,7 @@ impl PipelineServer {
             let msg = self
                 .completions
                 .recv()
-                .map_err(|_| anyhow!("pipeline drained unexpectedly"))?;
+                .map_err(|_| err!("pipeline drained unexpectedly"))?;
             let latency = msg.admitted.elapsed().as_secs_f64();
             if first {
                 self.monitor.set_baseline_times(&msg.stage_times);
@@ -214,7 +214,7 @@ impl PipelineServer {
         let shape = self
             .input_shape
             .clone()
-            .ok_or_else(|| anyhow!("rebalance before any query"))?;
+            .ok_or_else(|| err!("rebalance before any query"))?;
         let probe_input = Tensor::random(&shape, 0xBEEF, 1.0);
         let mut eval = LiveEval::new(self.handle.clone(), probe_input);
         let odin = Odin::new(self.opts.alpha);

@@ -14,10 +14,13 @@
 //! each costing the *serial* latency (sum of stage times) of its trial
 //! configuration.
 
+use std::sync::Arc;
+
 use crate::coordinator::{optimal_config, Lls, Monitor, Odin, RebalanceResult, Rebalancer};
 use crate::database::TimingDb;
 use crate::interference::Schedule;
 use crate::pipeline::{stage_times_into, CostModel, PipelineConfig};
+use crate::util::ThreadPool;
 
 /// Which rebalancing policy drives the run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -256,6 +259,27 @@ pub fn simulate(db: &TimingDb, schedule: &Schedule, cfg: &SimConfig) -> SimResul
     }
 }
 
+/// Run many independent simulation windows against one database, fanning
+/// out over `jobs` worker threads (1 = fully serial, no pool spawned).
+///
+/// Each window is deterministic on its own inputs and windows share no
+/// mutable state, so the outcome is identical for every `jobs` value; the
+/// merge preserves input order, which keeps downstream experiment output
+/// (including figure JSON) byte-stable regardless of parallelism.
+pub fn simulate_many(
+    db: &TimingDb,
+    runs: &[(Schedule, SimConfig)],
+    jobs: usize,
+) -> Vec<SimResult> {
+    let jobs = jobs.max(1).min(runs.len().max(1));
+    if jobs <= 1 {
+        return runs.iter().map(|(s, c)| simulate(db, s, c)).collect();
+    }
+    let db = Arc::new(db.clone());
+    let pool = ThreadPool::new(jobs);
+    pool.map(runs.to_vec(), move |(s, c)| simulate(&db, &s, &c))
+}
+
 fn bottleneck(times: &[f64]) -> f64 {
     times.iter().copied().fold(0.0f64, f64::max)
 }
@@ -435,6 +459,39 @@ mod tests {
         assert!(r.total_time > 0.0);
         assert_eq!(r.latencies.len(), 300);
     }
+
+    #[test]
+    fn simulate_many_is_jobs_invariant() {
+        // the tentpole contract: fanning a sweep across workers must not
+        // change a single bit of any window's result
+        let db = db();
+        let runs: Vec<(Schedule, SimConfig)> = (0..6)
+            .map(|i| {
+                (
+                    sched(10, 10, 200 + i * 50),
+                    SimConfig::new(4, Policy::Odin { alpha: 2 }),
+                )
+            })
+            .collect();
+        let serial = simulate_many(&db, &runs, 1);
+        let parallel = simulate_many(&db, &runs, 4);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.latencies, b.latencies);
+            assert_eq!(a.inst_throughput, b.inst_throughput);
+            assert_eq!(a.final_config.counts(), b.final_config.counts());
+            assert_eq!(a.rebalances.len(), b.rebalances.len());
+        }
+    }
+
+    #[test]
+    fn simulate_many_matches_simulate() {
+        let db = db();
+        let runs = vec![(sched(50, 20, 400), SimConfig::new(4, Policy::Lls))];
+        let many = simulate_many(&db, &runs, 8);
+        let one = simulate(&db, &runs[0].0, &runs[0].1);
+        assert_eq!(many[0].latencies, one.latencies);
+    }
 }
 
 #[cfg(test)]
@@ -449,17 +506,32 @@ mod diag {
     fn diag_policies() {
         let db = synthesize(&models::vgg16(64), 1);
         let schedule = Schedule::random(
-            4, 3000,
+            4,
+            3000,
             RandomInterference { period: 100, duration: 100, seed: 11, p_active: 1.0 },
         );
-        for policy in [Policy::Static, Policy::Lls, Policy::Odin{alpha:2}, Policy::Odin{alpha:10}, Policy::Oracle] {
+        let policies = [
+            Policy::Static,
+            Policy::Lls,
+            Policy::Odin { alpha: 2 },
+            Policy::Odin { alpha: 10 },
+            Policy::Oracle,
+        ];
+        for policy in policies {
             let r = simulate(&db, &schedule, &SimConfig::new(4, policy));
             let trials: usize = r.rebalances.iter().map(|e| e.trials).sum();
             let serial = r.serial.iter().filter(|&&s| s).count();
-            eprintln!("{:<10} achieved={:.2} rebalances={} avg_trials={:.1} serial={} rebal_frac={:.3} mean_lat={:.4}",
-                policy.label(), r.achieved_throughput(), r.rebalances.len(),
-                trials as f64 / r.rebalances.len().max(1) as f64, serial, r.rebalance_fraction(),
-                r.latencies.iter().sum::<f64>() / r.latencies.len() as f64);
+            eprintln!(
+                "{:<10} achieved={:.2} rebalances={} avg_trials={:.1} serial={} \
+                 rebal_frac={:.3} mean_lat={:.4}",
+                policy.label(),
+                r.achieved_throughput(),
+                r.rebalances.len(),
+                trials as f64 / r.rebalances.len().max(1) as f64,
+                serial,
+                r.rebalance_fraction(),
+                r.latencies.iter().sum::<f64>() / r.latencies.len() as f64
+            );
         }
     }
 }

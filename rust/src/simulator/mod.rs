@@ -10,6 +10,6 @@ pub mod engine;
 pub mod metrics;
 pub mod slo;
 
-pub use engine::{simulate, Policy, RebalanceEvent, SimConfig, SimResult};
+pub use engine::{simulate, simulate_many, Policy, RebalanceEvent, SimConfig, SimResult};
 pub use metrics::SimSummary;
 pub use slo::{slo_violations, SloReport};

@@ -5,16 +5,59 @@
 //! path pins each stage worker and each interference stressor to its EP's
 //! cores via `sched_setaffinity`. On this single-core sandbox pinning
 //! degenerates to a no-op-with-logging, which is detected and reported.
+//!
+//! Dependency-free: the one syscall we need is declared directly against
+//! the C library std already links, instead of pulling in the `libc`
+//! crate.
 
-/// Number of online CPUs.
+/// Index bound of the machine's online CPUs (highest online id + 1) —
+/// the machine's, not this process's allowance.
+///
+/// Pinning must see every online core even when the process starts with a
+/// restricted affinity mask (taskset / cgroup), so prefer the kernel's
+/// online list over `available_parallelism` (which is capped by the
+/// current mask and would silently filter out the very cores the EPs
+/// want). An index bound rather than a count: `pin_current_thread`
+/// filters requested cores with `c < num_cpus()`, which must keep the
+/// highest online core even when a lower one is offlined.
 pub fn num_cpus() -> usize {
-    // SAFETY: sysconf is async-signal-safe and has no memory contract.
-    let n = unsafe { libc::sysconf(libc::_SC_NPROCESSORS_ONLN) };
-    if n < 1 {
-        1
-    } else {
-        n as usize
+    if let Some(n) = online_cpus() {
+        return n;
     }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(target_os = "linux")]
+fn online_cpus() -> Option<usize> {
+    parse_cpu_list(&std::fs::read_to_string("/sys/devices/system/cpu/online").ok()?)
+}
+
+#[cfg(not(target_os = "linux"))]
+fn online_cpus() -> Option<usize> {
+    None
+}
+
+/// Parse the kernel's cpu-list format ("0-7", "0,2-3,5") into an index
+/// bound: highest listed id + 1.
+#[cfg(target_os = "linux")]
+fn parse_cpu_list(s: &str) -> Option<usize> {
+    let mut max_id: Option<usize> = None;
+    for part in s.trim().split(',') {
+        let mut ends = part.splitn(2, '-');
+        let lo: usize = ends.next()?.trim().parse().ok()?;
+        let hi = match ends.next() {
+            Some(h) => {
+                let h: usize = h.trim().parse().ok()?;
+                if h < lo {
+                    return None;
+                }
+                h
+            }
+            None => lo,
+        };
+        max_id = Some(max_id.map_or(hi, |m| m.max(hi)));
+    }
+    max_id.map(|m| m + 1)
 }
 
 /// Pin the calling thread to the given cores. Returns false (without
@@ -26,21 +69,39 @@ pub fn pin_current_thread(cores: &[usize]) -> bool {
     if usable.is_empty() {
         return false;
     }
-    // SAFETY: CPU_* only write into the local cpu_set_t.
-    unsafe {
-        let mut set: libc::cpu_set_t = std::mem::zeroed();
-        libc::CPU_ZERO(&mut set);
-        for &c in &usable {
-            libc::CPU_SET(c, &mut set);
-        }
-        libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set)
-            == 0
-    }
+    pin_to(&usable)
 }
 
 /// The core set of execution place `ep` when EPs are `cores_per_ep` wide.
 pub fn ep_cores(ep: usize, cores_per_ep: usize) -> Vec<usize> {
     (ep * cores_per_ep..(ep + 1) * cores_per_ep).collect()
+}
+
+#[cfg(target_os = "linux")]
+fn pin_to(cores: &[usize]) -> bool {
+    // glibc's cpu_set_t is 1024 bits; mirror it as 16 u64 words.
+    const SET_WORDS: usize = 16;
+    extern "C" {
+        // int sched_setaffinity(pid_t pid, size_t cpusetsize, const cpu_set_t *mask);
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    let mut mask = [0u64; SET_WORDS];
+    for &c in cores {
+        if c < SET_WORDS * 64 {
+            mask[c / 64] |= 1u64 << (c % 64);
+        }
+    }
+    if mask.iter().all(|&w| w == 0) {
+        return false;
+    }
+    // SAFETY: the mask is a local array of the size the kernel expects;
+    // the call only reads it and affects the calling thread (pid 0).
+    unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) == 0 }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn pin_to(_cores: &[usize]) -> bool {
+    false
 }
 
 #[cfg(test)]
@@ -61,6 +122,7 @@ mod tests {
         assert!(a.iter().all(|c| !b.contains(c)));
     }
 
+    #[cfg(target_os = "linux")]
     #[test]
     fn pin_to_core_zero_works() {
         // Core 0 always exists; pinning to it must succeed.
@@ -72,5 +134,19 @@ mod tests {
         // A core index far beyond any real machine: must return false,
         // not error out.
         assert!(!pin_current_thread(&[100_000]));
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn parse_cpu_list_is_an_index_bound() {
+        assert_eq!(parse_cpu_list("0-7\n"), Some(8));
+        assert_eq!(parse_cpu_list("0"), Some(1));
+        // sparse list (core 1 offlined): the bound must still cover the
+        // highest online core, not the online count
+        assert_eq!(parse_cpu_list("0,2-7"), Some(8));
+        assert_eq!(parse_cpu_list("0,2-3,5"), Some(6));
+        assert_eq!(parse_cpu_list(""), None);
+        assert_eq!(parse_cpu_list("junk"), None);
+        assert_eq!(parse_cpu_list("5-2"), None);
     }
 }

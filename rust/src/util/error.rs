@@ -1,0 +1,264 @@
+//! Crate-local error type with context chains — the crate's only error
+//! currency (`anyhow` is not in the offline vendor set, and a hermetic
+//! zero-dependency build wants an owned type anyway).
+//!
+//! The shape mirrors what the call sites need from anyhow:
+//!
+//! * [`OdinError`] — a message plus an optional boxed source, so errors
+//!   chain outward-in ("reading manifest: No such file or directory");
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on both `Result`
+//!   and `Option`;
+//! * [`crate::err!`] / [`crate::bail!`] — format-style construction and
+//!   early return;
+//! * [`OdinError::downcast_ref`] — walk the chain for a concrete error
+//!   type (main.rs routes [`crate::cli::CliError`] this way);
+//! * `{:#}` Display — the full chain, colon-separated, outermost first.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Crate-wide result alias; the error type defaults to [`OdinError`].
+pub type Result<T, E = OdinError> = std::result::Result<T, E>;
+
+/// A message plus an optional source, forming a context chain.
+pub struct OdinError {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl OdinError {
+    /// A leaf error from a message.
+    pub fn msg(msg: impl Into<String>) -> OdinError {
+        OdinError { msg: msg.into(), source: None }
+    }
+
+    /// Wrap `source` under a new context message.
+    pub fn wrap(
+        msg: impl Into<String>,
+        source: impl StdError + Send + Sync + 'static,
+    ) -> OdinError {
+        OdinError { msg: msg.into(), source: Some(Box::new(source)) }
+    }
+
+    /// The outermost context message.
+    pub fn message(&self) -> &str {
+        &self.msg
+    }
+
+    /// First error of concrete type `E` in the chain (self included).
+    pub fn downcast_ref<E: StdError + 'static>(&self) -> Option<&E> {
+        let mut cur: Option<&(dyn StdError + 'static)> = Some(self);
+        while let Some(e) = cur {
+            if let Some(hit) = e.downcast_ref::<E>() {
+                return Some(hit);
+            }
+            cur = e.source();
+        }
+        None
+    }
+
+    /// Context messages outermost-first (duplicates collapsed, as in the
+    /// `{:#}` rendering).
+    pub fn chain(&self) -> Vec<String> {
+        let mut out = vec![self.msg.clone()];
+        let mut cur = StdError::source(self);
+        while let Some(e) = cur {
+            let s = e.to_string();
+            if out.last() != Some(&s) {
+                out.push(s);
+            }
+            cur = e.source();
+        }
+        out
+    }
+}
+
+impl fmt::Display for OdinError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain().join(": "))
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for OdinError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:#}", self)
+    }
+}
+
+impl StdError for OdinError {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.source.as_ref().map(|s| {
+            let e: &(dyn StdError + 'static) = s.as_ref();
+            e
+        })
+    }
+}
+
+impl From<std::io::Error> for OdinError {
+    fn from(e: std::io::Error) -> OdinError {
+        OdinError::wrap(e.to_string(), e)
+    }
+}
+
+impl From<crate::cli::CliError> for OdinError {
+    fn from(e: crate::cli::CliError) -> OdinError {
+        OdinError::wrap(e.to_string(), e)
+    }
+}
+
+impl From<crate::json::ParseError> for OdinError {
+    fn from(e: crate::json::ParseError) -> OdinError {
+        OdinError::wrap(e.to_string(), e)
+    }
+}
+
+impl From<String> for OdinError {
+    fn from(msg: String) -> OdinError {
+        OdinError::msg(msg)
+    }
+}
+
+impl From<&str> for OdinError {
+    fn from(msg: &str) -> OdinError {
+        OdinError::msg(msg)
+    }
+}
+
+/// Attach context to fallible values: errors gain an outer message,
+/// `None` becomes an error with the message.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| OdinError::wrap(ctx.to_string(), e))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| OdinError::wrap(f().to_string(), e))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| OdinError::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| OdinError::msg(f().to_string()))
+    }
+}
+
+/// Build an [`OdinError`] from a format string.
+#[macro_export]
+macro_rules! err {
+    ($($t:tt)*) => { $crate::util::error::OdinError::msg(format!($($t)*)) };
+}
+
+/// Early-return an [`OdinError`] from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => { return Err($crate::err!($($t)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cli::CliError;
+
+    fn io_missing() -> std::io::Error {
+        std::fs::metadata("/nonexistent/odin/error/test").unwrap_err()
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e: OdinError = std::result::Result::<(), _>::Err(io_missing())
+            .context("reading manifest")
+            .unwrap_err();
+        let chain = e.chain();
+        assert_eq!(chain[0], "reading manifest");
+        assert!(chain.len() >= 2, "io source missing from chain: {chain:?}");
+        let rendered = format!("{e:#}");
+        assert!(rendered.starts_with("reading manifest: "), "{rendered}");
+        // non-alternate Display shows only the outermost context
+        assert_eq!(format!("{e}"), "reading manifest");
+    }
+
+    #[test]
+    fn with_context_is_lazy_on_ok() {
+        let ok: std::result::Result<u32, std::io::Error> = Ok(7);
+        let r = ok.with_context(|| -> String { panic!("must not evaluate") });
+        assert_eq!(r.unwrap(), 7);
+    }
+
+    #[test]
+    fn nested_contexts_stack() {
+        let e = std::result::Result::<(), _>::Err(io_missing())
+            .context("layer one")
+            .context("layer two")
+            .unwrap_err();
+        let chain = e.chain();
+        assert_eq!(&chain[..2], &["layer two".to_string(), "layer one".to_string()]);
+    }
+
+    #[test]
+    fn option_context() {
+        let e = None::<u8>.context("missing field").unwrap_err();
+        assert_eq!(format!("{e}"), "missing field");
+        assert_eq!(e.chain().len(), 1);
+    }
+
+    #[test]
+    fn downcast_finds_wrapped_cli_error() {
+        let cli = CliError::Unknown("--nope".to_string());
+        let e: OdinError = cli.into();
+        let found = e.downcast_ref::<CliError>().expect("CliError in chain");
+        assert!(matches!(found, CliError::Unknown(_)));
+        // further wrapping keeps it findable
+        let e2 = std::result::Result::<(), _>::Err(e).context("outer").unwrap_err();
+        assert!(e2.downcast_ref::<CliError>().is_some());
+        assert!(e2.downcast_ref::<std::io::Error>().is_none());
+    }
+
+    #[test]
+    fn downcast_self_type() {
+        let e = OdinError::msg("plain");
+        assert!(e.downcast_ref::<OdinError>().is_some());
+    }
+
+    #[test]
+    fn from_conversions_render_without_duplication() {
+        let e: OdinError = io_missing().into();
+        // the From impl copies the source's message; the chain printer
+        // collapses the duplicate
+        let rendered = format!("{e:#}");
+        assert_eq!(rendered, format!("{e}"));
+    }
+
+    #[test]
+    fn macros_format() {
+        fn fails(n: usize) -> Result<()> {
+            if n > 2 {
+                bail!("value {n} too large");
+            }
+            Err(err!("value {n} too small"))
+        }
+        assert_eq!(format!("{}", fails(5).unwrap_err()), "value 5 too large");
+        assert_eq!(format!("{}", fails(1).unwrap_err()), "value 1 too small");
+    }
+
+    #[test]
+    fn question_mark_converts_io() {
+        fn read() -> Result<String> {
+            let s = std::fs::read_to_string("/nonexistent/odin/error/test")?;
+            Ok(s)
+        }
+        assert!(read().is_err());
+    }
+}

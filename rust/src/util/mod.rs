@@ -1,9 +1,10 @@
 //! Substrate utilities built from scratch for the offline sandbox:
-//! RNG, statistics, bench harness, thread pool, affinity, logging,
-//! property testing.
+//! errors, RNG, statistics, bench harness, thread pool, affinity,
+//! logging, property testing.
 
 pub mod affinity;
 pub mod bench;
+pub mod error;
 pub mod logging;
 pub mod proptest;
 pub mod rng;

@@ -115,7 +115,13 @@ fn oracle_dominates_all_policies() {
     let db = synthesize(&models::resnet50(64), 42);
     let s = schedule(10, 10, 2000, 4);
     let oracle = SimSummary::of(&simulate(&db, &s, &SimConfig::new(4, Policy::Oracle)));
-    for policy in [Policy::Odin { alpha: 2 }, Policy::Odin { alpha: 10 }, Policy::Lls, Policy::Static] {
+    let policies = [
+        Policy::Odin { alpha: 2 },
+        Policy::Odin { alpha: 10 },
+        Policy::Lls,
+        Policy::Static,
+    ];
+    for policy in policies {
         let r = SimSummary::of(&simulate(&db, &s, &SimConfig::new(4, policy)));
         assert!(
             oracle.throughput.p50 >= r.throughput.p50 * 0.999,
