@@ -11,8 +11,10 @@ use std::fmt::Write as _;
 pub struct Flag {
     pub name: &'static str,
     pub help: &'static str,
-    /// None ⇒ boolean switch; Some(default) ⇒ value flag ("" = required).
+    /// None ⇒ boolean switch; Some(default) ⇒ value flag.
     pub default: Option<&'static str>,
+    /// Required flags must be given explicitly (their default is unused).
+    pub required: bool,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -29,6 +31,8 @@ pub struct Args {
     values: BTreeMap<String, String>,
     switches: Vec<String>,
     positionals: Vec<String>,
+    /// Value flags given explicitly (before default filling).
+    given: Vec<String>,
 }
 
 #[derive(Debug)]
@@ -61,13 +65,26 @@ impl Command {
         Command { name, about, ..Default::default() }
     }
 
+    /// Value flag; an empty default means the flag is required.
     pub fn flag(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
-        self.flags.push(Flag { name, help, default: Some(default) });
+        self.flags.push(Flag {
+            name,
+            help,
+            default: Some(default),
+            required: default.is_empty(),
+        });
+        self
+    }
+
+    /// Optional value flag with no meaningful default: `get` returns ""
+    /// when the flag is absent (callers treat "" as "not given").
+    pub fn opt(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(Flag { name, help, default: Some(""), required: false });
         self
     }
 
     pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
-        self.flags.push(Flag { name, help, default: None });
+        self.flags.push(Flag { name, help, default: None, required: false });
         self
     }
 
@@ -92,10 +109,18 @@ impl Command {
                 None => {
                     let _ = writeln!(h, "  --{:<20} {}", f.name, f.help);
                 }
-                Some("") => {
+                Some(_) if f.required => {
                     let _ = writeln!(
                         h,
                         "  --{:<20} {} (required)",
+                        format!("{} <v>", f.name),
+                        f.help
+                    );
+                }
+                Some("") => {
+                    let _ = writeln!(
+                        h,
+                        "  --{:<20} {}",
                         format!("{} <v>", f.name),
                         f.help
                     );
@@ -152,10 +177,11 @@ impl Command {
             }
         }
         // defaults + required check
+        args.given = args.values.keys().cloned().collect();
         for f in &self.flags {
             if let Some(d) = f.default {
                 if !args.values.contains_key(f.name) {
-                    if d.is_empty() {
+                    if f.required {
                         return Err(CliError::MissingRequired(format!("--{}", f.name)));
                     }
                     args.values.insert(f.name.to_string(), d.to_string());
@@ -173,6 +199,12 @@ impl Args {
 
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
+    }
+
+    /// True when a value flag was given explicitly on the command line
+    /// (as opposed to being filled from its default).
+    pub fn was_given(&self, name: &str) -> bool {
+        self.given.iter().any(|g| g == name)
     }
 
     pub fn positional(&self, i: usize) -> Option<&str> {
@@ -237,6 +269,9 @@ mod tests {
         assert_eq!(a.usize("queries").unwrap(), 100);
         assert_eq!(a.u64("seed").unwrap(), 1);
         assert!(!a.has("verbose"));
+        // explicit vs default-filled flags are distinguishable
+        assert!(a.was_given("queries"));
+        assert!(!a.was_given("model"));
     }
 
     #[test]
@@ -253,6 +288,21 @@ mod tests {
     fn required_flag_enforced() {
         let e = cmd().parse(&sv(&[])).unwrap_err();
         assert!(matches!(e, CliError::MissingRequired(_)));
+    }
+
+    #[test]
+    fn opt_flag_defaults_to_empty_without_being_required() {
+        let c = Command::new("x", "y").opt("db", "database path");
+        let a = c.parse(&sv(&[])).unwrap();
+        assert_eq!(a.get("db"), "");
+        let a = c.parse(&sv(&["--db", "p.json"])).unwrap();
+        assert_eq!(a.get("db"), "p.json");
+        let CliError::HelpRequested(h) = c.parse(&sv(&["--help"])).unwrap_err()
+        else {
+            panic!()
+        };
+        assert!(h.contains("--db"));
+        assert!(!h.contains("required"));
     }
 
     #[test]

@@ -6,18 +6,22 @@
 //! * [`exhaustive`] — the optimal-configuration oracle (DP + brute force),
 //!   the paper's "exhaustive search" used in Fig. 1d and Fig. 9.
 //! * [`monitor`] — the stage-time watcher that triggers rebalancing.
+//! * [`online`] — the closed monitor→detect→rebalance loop driving both
+//!   the simulator and the live serving path.
 
 pub mod eval;
 pub mod exhaustive;
 pub mod lls;
 pub mod monitor;
 pub mod odin;
+pub mod online;
 
 pub use eval::{DbEval, StageEval};
 pub use exhaustive::{brute_force_optimal, optimal_config};
 pub use lls::Lls;
 pub use monitor::{Monitor, Trigger};
-pub use odin::Odin;
+pub use odin::{Odin, MAX_TRIALS};
+pub use online::{ControlPolicy, OnlineController};
 
 use crate::pipeline::{CostModel, PipelineConfig};
 

@@ -33,7 +33,8 @@ use super::{RebalanceResult, Rebalancer};
 const EQ_TOL: f64 = 1e-9;
 
 /// Hard cap on trials, guarding pathological α / degenerate pipelines.
-const MAX_TRIALS: usize = 500;
+/// Public so property tests can assert the loop's termination bound.
+pub const MAX_TRIALS: usize = 500;
 
 #[derive(Clone, Copy, Debug)]
 pub struct Odin {

@@ -1,0 +1,169 @@
+//! The closed monitor→detect→rebalance loop.
+//!
+//! The paper's runtime story (§3.1) is a loop: observe stage times,
+//! detect a relative change beyond the threshold, run Algorithm 1 (or a
+//! baseline) to produce a new configuration, bless the new stage times as
+//! the reference, repeat. This controller packages that loop so both the
+//! discrete-event simulator ([`crate::simulator::engine`]) and the live
+//! serving path can drive one implementation instead of re-wiring
+//! [`Monitor`] + rebalancer by hand.
+
+use crate::database::TimingDb;
+use crate::interference::EpScenarios;
+use crate::pipeline::{CostModel, PipelineConfig};
+
+use super::exhaustive::optimal_config;
+use super::lls::Lls;
+use super::monitor::{Monitor, Trigger};
+use super::odin::Odin;
+use super::{RebalanceResult, Rebalancer};
+
+/// Which brain the loop runs when the monitor fires.
+#[derive(Clone, Copy, Debug)]
+pub enum ControlPolicy {
+    /// The paper's Algorithm 1.
+    Odin(Odin),
+    /// Least-loaded scheduling baseline.
+    Lls(Lls),
+    /// Exhaustive-search oracle (one zero-exploration trial per episode).
+    Oracle,
+    /// Never rebalance.
+    Static,
+}
+
+/// Monitor + policy, stepped by the host once per observation window.
+#[derive(Clone, Debug)]
+pub struct OnlineController {
+    monitor: Monitor,
+    policy: ControlPolicy,
+}
+
+impl OnlineController {
+    pub fn new(policy: ControlPolicy, detect_threshold: f64) -> OnlineController {
+        OnlineController { monitor: Monitor::new(detect_threshold), policy }
+    }
+
+    /// Static policies never observe, never fire.
+    pub fn is_active(&self) -> bool {
+        !matches!(self.policy, ControlPolicy::Static)
+    }
+
+    /// Bless a configuration's stage times as the new reference.
+    pub fn bless(&mut self, stage_times: &[f64]) {
+        self.monitor.set_baseline_times(stage_times);
+    }
+
+    /// Feed one observation window's stage times; Some(trigger) means the
+    /// host should run [`rebalance`](Self::rebalance) now.
+    pub fn observe(&mut self, stage_times: &[f64]) -> Option<Trigger> {
+        if !self.is_active() {
+            return None;
+        }
+        self.monitor.observe(stage_times)
+    }
+
+    /// One rebalancing episode under the interference state `sc`.
+    pub fn rebalance(
+        &self,
+        current: &PipelineConfig,
+        db: &TimingDb,
+        sc: &EpScenarios,
+    ) -> RebalanceResult {
+        let cost = CostModel::new(db, sc);
+        match &self.policy {
+            ControlPolicy::Odin(o) => o.rebalance(current, &cost),
+            ControlPolicy::Lls(l) => l.rebalance(current, &cost),
+            ControlPolicy::Oracle => {
+                let (config, bottleneck) =
+                    optimal_config(db, sc, current.num_stages());
+                RebalanceResult { config, trials: 1, throughput: 1.0 / bottleneck }
+            }
+            ControlPolicy::Static => RebalanceResult {
+                config: current.clone(),
+                trials: 0,
+                throughput: cost.throughput(current),
+            },
+        }
+    }
+
+    pub fn monitor(&self) -> &Monitor {
+        &self.monitor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::database::synth::synthesize;
+    use crate::database::TimingDb;
+    use crate::models;
+
+    fn db() -> TimingDb {
+        synthesize(&models::vgg16(64), 1)
+    }
+
+    fn balanced(db: &TimingDb) -> PipelineConfig {
+        optimal_config(db, &vec![0usize; 4], 4).0
+    }
+
+    #[test]
+    fn static_never_observes() {
+        let mut c = OnlineController::new(ControlPolicy::Static, 0.05);
+        assert!(!c.is_active());
+        c.bless(&[0.1, 0.1]);
+        assert_eq!(c.observe(&[0.9, 0.9]), None);
+    }
+
+    #[test]
+    fn detect_then_rebalance_then_bless_stops_refiring() {
+        let db = db();
+        let mut c =
+            OnlineController::new(ControlPolicy::Odin(Odin::new(5)), 0.05);
+        let config = balanced(&db);
+        let clean = vec![0usize; 4];
+        let dirty = vec![0usize, 0, 9, 0];
+        let t0 = CostModel::new(&db, &clean).stage_times(&config);
+        c.bless(&t0);
+        assert_eq!(c.observe(&t0), None);
+        let t1 = CostModel::new(&db, &dirty).stage_times(&config);
+        assert_eq!(c.observe(&t1), Some(Trigger::Degraded));
+        let r = c.rebalance(&config, &db, &dirty);
+        assert!(r.trials > 0);
+        assert!(r.throughput > 0.0);
+        // bless the repaired configuration: same conditions no longer fire
+        let t2 = CostModel::new(&db, &dirty).stage_times(&r.config);
+        c.bless(&t2);
+        assert_eq!(c.observe(&t2), None);
+    }
+
+    #[test]
+    fn oracle_lands_on_the_optimum_in_one_trial() {
+        let db = db();
+        let c = OnlineController::new(ControlPolicy::Oracle, 0.05);
+        let sc = vec![0usize, 9, 0, 0];
+        let r = c.rebalance(&balanced(&db), &db, &sc);
+        assert_eq!(r.trials, 1);
+        let (opt, b) = optimal_config(&db, &sc, 4);
+        assert_eq!(r.config.counts(), opt.counts());
+        assert!((r.throughput - 1.0 / b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lls_policy_dispatches() {
+        let db = db();
+        let c = OnlineController::new(ControlPolicy::Lls(Lls::new()), 0.05);
+        let sc = vec![0usize, 0, 0, 9];
+        let r = c.rebalance(&balanced(&db), &db, &sc);
+        r.config.check(16).unwrap();
+    }
+
+    #[test]
+    fn static_rebalance_is_identity() {
+        let db = db();
+        let c = OnlineController::new(ControlPolicy::Static, 0.05);
+        let config = balanced(&db);
+        let r = c.rebalance(&config, &db, &vec![0usize; 4]);
+        assert_eq!(r.config.counts(), config.counts());
+        assert_eq!(r.trials, 0);
+    }
+}

@@ -16,7 +16,7 @@ pub mod measure;
 pub mod synth;
 
 use crate::interference::NUM_SCENARIOS;
-use crate::json::{parse, to_string_pretty, Value};
+use crate::json::{parse, Value};
 
 /// The m×(n+1) matrix: `times[unit][scenario]`, seconds per query;
 /// scenario 0 = interference-free.
@@ -170,7 +170,7 @@ impl TimingDb {
     }
 
     pub fn save(&self, path: &str) -> std::io::Result<()> {
-        std::fs::write(path, to_string_pretty(&self.to_json()))
+        crate::json::write_file(path, &self.to_json())
     }
 
     pub fn load(path: &str) -> Result<TimingDb, String> {

@@ -1,0 +1,284 @@
+//! The dynamic-interference experiment: every builtin scenario from the
+//! DSL (`interference::dynamic`) run under the online control loop, with
+//! ODIN (α=2, α=10), LLS and a static pipeline facing the *identical*
+//! deterministic scenario stream, reported per observation window.
+//!
+//! This is the figure the paper never plots but its central claim
+//! implies: a timeline of per-window latency / throughput / SLO
+//! violations as interference bursts, ramps, arrives, departs and
+//! migrates — and the controller re-balances mid-run. The emitted
+//! `dynamic.json` is byte-stable and `--jobs`-invariant like every other
+//! figure artifact.
+
+use crate::database::synth::synthesize;
+use crate::database::TimingDb;
+use crate::interference::dynamic::{builtin, DynamicScenario, BUILTIN_NAMES};
+use crate::interference::Schedule;
+use crate::json::Value;
+use crate::models;
+use crate::simulator::window::{
+    window_metrics, windows_json, WindowMetrics, DEFAULT_WINDOW,
+};
+use crate::simulator::{simulate_policies, Policy, SimConfig, SimResult};
+use crate::util::error::Result;
+
+use super::{ExpCtx, Output};
+
+/// Observation/reporting window of the online loop (queries).
+pub const DYN_WINDOW: usize = DEFAULT_WINDOW;
+/// SLO level (fraction of interference-free peak) for per-window counts.
+pub const DYN_SLO_LEVEL: f64 = 0.7;
+/// The model all dynamic scenarios run on.
+pub const DYN_MODEL: &str = "vgg16";
+
+/// Policies of the experiment grid (the CLI uses its own list).
+pub const DYN_POLICIES: [Policy; 4] = [
+    Policy::Odin { alpha: 2 },
+    Policy::Odin { alpha: 10 },
+    Policy::Lls,
+    Policy::Static,
+];
+
+/// Run `policies` against `scenario`'s compiled schedule — identical
+/// conditions for every policy — fanned over `jobs` workers with
+/// order-preserving merge (results are jobs-invariant).
+pub fn run_scenario(
+    db: &TimingDb,
+    scenario: &DynamicScenario,
+    policies: &[Policy],
+    jobs: usize,
+) -> (Schedule, Vec<SimResult>) {
+    let schedule = scenario.compile();
+    let cfgs: Vec<SimConfig> = policies
+        .iter()
+        .map(|&p| SimConfig::new(scenario.num_eps, p).with_window(DYN_WINDOW))
+        .collect();
+    let results = simulate_policies(db, &schedule, &cfgs, jobs);
+    (schedule, results)
+}
+
+/// Per-policy headline numbers of one scenario run.
+#[derive(Clone, Copy, Debug)]
+pub struct PolicyHeadline {
+    pub tput_mean: f64,
+    pub lat_mean: f64,
+    pub slo_violations: usize,
+    pub serial_queries: usize,
+    pub rebalances: usize,
+}
+
+/// Aggregate already-computed window metrics into headline numbers.
+pub fn headline(r: &SimResult, ws: &[WindowMetrics]) -> PolicyHeadline {
+    PolicyHeadline {
+        tput_mean: ws.iter().map(|w| w.tput_mean).sum::<f64>()
+            / ws.len() as f64,
+        lat_mean: r.latencies.iter().sum::<f64>() / r.latencies.len() as f64,
+        slo_violations: ws.iter().map(|w| w.slo_violations).sum(),
+        serial_queries: ws.iter().map(|w| w.serial_queries).sum(),
+        rebalances: r.rebalances.len(),
+    }
+}
+
+/// Byte-stable JSON for one scenario's runs: per-policy window timelines
+/// plus a cross-policy summary (ODIN's best per-window throughput mean vs
+/// LLS's — the paper's "ODIN overcomes dynamic interference" check).
+pub fn scenario_json(
+    scenario: &DynamicScenario,
+    schedule: &Schedule,
+    policies: &[Policy],
+    results: &[SimResult],
+) -> Value {
+    assert_eq!(policies.len(), results.len());
+    let mut policy_vals = Vec::with_capacity(policies.len());
+    let mut odin_tput: Option<f64> = None;
+    let mut lls_tput: Option<f64> = None;
+    for (policy, r) in policies.iter().zip(results) {
+        let ws = window_metrics(r, schedule, DYN_WINDOW, DYN_SLO_LEVEL);
+        let h = headline(r, &ws);
+        match policy {
+            Policy::Odin { .. } => {
+                odin_tput =
+                    Some(odin_tput.map_or(h.tput_mean, |t| t.max(h.tput_mean)));
+            }
+            Policy::Lls => lls_tput = Some(h.tput_mean),
+            _ => {}
+        }
+        policy_vals.push(Value::obj(vec![
+            ("lat_mean", Value::from(h.lat_mean)),
+            ("policy", Value::from(policy.label())),
+            ("rebalances", Value::from(h.rebalances)),
+            ("serial_queries", Value::from(h.serial_queries)),
+            ("slo_violations", Value::from(h.slo_violations)),
+            ("tput_mean", Value::from(h.tput_mean)),
+            ("windows", windows_json(&ws)),
+        ]));
+    }
+    let mut summary = vec![(
+        "interference_load",
+        Value::from(schedule.interference_load()),
+    )];
+    if let (Some(o), Some(l)) = (odin_tput, lls_tput) {
+        summary.push(("lls_tput_mean", Value::from(l)));
+        summary.push(("odin_beats_lls", Value::from(o > l)));
+        summary.push(("odin_tput_mean", Value::from(o)));
+    }
+    Value::obj(vec![
+        ("eps", Value::from(scenario.num_eps)),
+        ("name", Value::from(scenario.name.clone())),
+        ("policies", Value::arr(policy_vals)),
+        ("queries", Value::from(scenario.num_queries)),
+        ("summary", Value::obj(summary)),
+    ])
+}
+
+/// One-line cross-policy verdict rendered from a scenario document's
+/// `summary` object — shared by the experiment runner and the CLI so the
+/// two outputs cannot drift apart.
+pub fn summary_line(name: &str, summary: &Value) -> String {
+    format!(
+        "{name}: load {:.1}%  odin {:.2} q/s vs lls {:.2} q/s — {}",
+        100.0 * summary.get("interference_load").as_f64().unwrap_or(0.0),
+        summary.get("odin_tput_mean").as_f64().unwrap_or(0.0),
+        summary.get("lls_tput_mean").as_f64().unwrap_or(0.0),
+        if summary.get("odin_beats_lls").as_bool() == Some(true) {
+            "odin wins"
+        } else {
+            "lls wins"
+        },
+    )
+}
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let mut out = Output::new(ctx, "dynamic")?;
+    out.line("# dynamic — online ODIN loop vs baselines under time-phased scenarios");
+    out.line(format!(
+        "# observation window {DYN_WINDOW} queries, SLO {:.0}% of peak; every",
+        DYN_SLO_LEVEL * 100.0
+    ));
+    out.line("# policy faces the identical deterministic scenario stream;");
+    out.line("# horizons are fixed per scenario (--queries does not apply here)");
+    let spec = models::build(DYN_MODEL, ctx.spatial).unwrap();
+    let db = synthesize(&spec, ctx.seed);
+    out.line(format!(
+        "{:<10} {:<9} {:>8} {:>8} {:>6} {:>6} {:>7}",
+        "scenario", "policy", "tput", "lat_ms", "viol", "rebal", "serial"
+    ));
+    let mut scenario_vals = Vec::with_capacity(BUILTIN_NAMES.len());
+    for name in BUILTIN_NAMES {
+        let scenario = builtin(name)?;
+        let (schedule, results) =
+            run_scenario(&db, &scenario, &DYN_POLICIES, ctx.jobs);
+        // the document is the single source of the per-policy numbers;
+        // the printed table reads them back rather than recomputing
+        let v = scenario_json(&scenario, &schedule, &DYN_POLICIES, &results);
+        for p in v.get("policies").as_arr().unwrap_or(&[]) {
+            out.line(format!(
+                "{:<10} {:<9} {:>8.2} {:>8.2} {:>6} {:>6} {:>7}",
+                name,
+                p.get("policy").as_str().unwrap_or("?"),
+                p.get("tput_mean").as_f64().unwrap_or(0.0),
+                p.get("lat_mean").as_f64().unwrap_or(0.0) * 1e3,
+                p.get("slo_violations").as_usize().unwrap_or(0),
+                p.get("rebalances").as_usize().unwrap_or(0),
+                p.get("serial_queries").as_usize().unwrap_or(0),
+            ));
+        }
+        out.line(summary_line(name, v.get("summary")));
+        scenario_vals.push(v);
+    }
+    if let Some(dir) = &ctx.out_dir {
+        let doc = Value::obj(vec![
+            ("model", Value::from(DYN_MODEL)),
+            ("scenarios", Value::arr(scenario_vals)),
+            ("slo_level", Value::from(DYN_SLO_LEVEL)),
+            ("window", Value::from(DYN_WINDOW)),
+        ]);
+        let path = dir.join("dynamic.json");
+        crate::json::write_file(&path, &doc)?;
+        println!("# wrote {}", path.display());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::to_string_pretty;
+
+    fn db() -> TimingDb {
+        synthesize(&models::build(DYN_MODEL, 64).unwrap(), 42)
+    }
+
+    #[test]
+    fn scenario_sweep_is_jobs_invariant() {
+        // the CI contract: `--jobs 1` and `--jobs 4` must emit identical
+        // bytes for a scenario document
+        let db = db();
+        let scenario = builtin("burst").unwrap();
+        let (sched1, r1) = run_scenario(&db, &scenario, &DYN_POLICIES, 1);
+        let (sched4, r4) = run_scenario(&db, &scenario, &DYN_POLICIES, 4);
+        let a = to_string_pretty(&scenario_json(&scenario, &sched1, &DYN_POLICIES, &r1));
+        let b = to_string_pretty(&scenario_json(&scenario, &sched4, &DYN_POLICIES, &r4));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn odin_beats_lls_per_window_under_burst() {
+        // the acceptance bar: ODIN's per-window throughput under the
+        // burst scenario beats LLS in the emitted summary
+        let db = db();
+        let scenario = builtin("burst").unwrap();
+        let (schedule, results) =
+            run_scenario(&db, &scenario, &DYN_POLICIES, 2);
+        let v = scenario_json(&scenario, &schedule, &DYN_POLICIES, &results);
+        let s = v.get("summary");
+        assert_eq!(
+            s.get("odin_beats_lls").as_bool(),
+            Some(true),
+            "odin {:?} vs lls {:?}",
+            s.get("odin_tput_mean"),
+            s.get("lls_tput_mean")
+        );
+    }
+
+    #[test]
+    fn online_loop_reacts_on_every_builtin() {
+        // each dynamic scenario must actually trigger mid-run rebalancing
+        // for ODIN, and the static pipeline must record none
+        let db = db();
+        for name in BUILTIN_NAMES {
+            let scenario = builtin(name).unwrap();
+            let (schedule, results) =
+                run_scenario(&db, &scenario, &DYN_POLICIES, 2);
+            let odin = &results[0];
+            assert!(
+                !odin.rebalances.is_empty(),
+                "{name}: odin never rebalanced"
+            );
+            let st = &results[DYN_POLICIES.len() - 1];
+            assert!(st.rebalances.is_empty(), "{name}: static rebalanced");
+            // every policy saw the same horizon
+            for r in &results {
+                assert_eq!(r.latencies.len(), schedule.num_queries());
+            }
+        }
+    }
+
+    #[test]
+    fn scenario_json_shape() {
+        let db = db();
+        let scenario = builtin("ramp").unwrap();
+        let (schedule, results) =
+            run_scenario(&db, &scenario, &DYN_POLICIES, 2);
+        let v = scenario_json(&scenario, &schedule, &DYN_POLICIES, &results);
+        assert_eq!(v.get("name").as_str(), Some("ramp"));
+        assert_eq!(v.get("queries").as_usize(), Some(scenario.num_queries));
+        let pols = v.get("policies").as_arr().unwrap();
+        assert_eq!(pols.len(), DYN_POLICIES.len());
+        let n_windows = scenario.num_queries.div_ceil(DYN_WINDOW);
+        for p in pols {
+            assert_eq!(p.get("windows").as_arr().unwrap().len(), n_windows);
+        }
+        assert!(v.get("summary").get("interference_load").as_f64().unwrap() > 0.0);
+    }
+}

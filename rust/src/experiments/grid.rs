@@ -14,7 +14,7 @@ use std::sync::Arc;
 use crate::database::synth::synthesize;
 use crate::database::TimingDb;
 use crate::interference::{RandomInterference, Schedule};
-use crate::json::{to_string_pretty, Value};
+use crate::json::Value;
 use crate::models;
 use crate::simulator::{simulate, Policy, SimConfig, SimSummary};
 use crate::util::error::Result;
@@ -254,7 +254,7 @@ pub fn run_figure(ctx: &ExpCtx, fig: Figure) -> Result<()> {
     }
     if let Some(dir) = &ctx.out_dir {
         let path = dir.join(format!("{}.json", fig.id()));
-        std::fs::write(&path, to_string_pretty(&grid_results_json(&results)))?;
+        crate::json::write_file(&path, &grid_results_json(&results))?;
         // stdout only: the .txt mirror must stay byte-identical across
         // output directories and --jobs settings
         println!("# wrote {}", path.display());
@@ -282,6 +282,7 @@ fn row(out: &mut Output, r: &GridResult, cols: String) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::json::to_string_pretty;
 
     fn small_ctx(jobs: usize) -> ExpCtx {
         ExpCtx { queries: 150, jobs, ..ExpCtx::default() }

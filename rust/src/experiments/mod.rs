@@ -19,8 +19,10 @@
 //! | fig10   | scalability (ResNet152, 4→52 EPs)                     |
 //! | summary | §4.2 headline averages (ODIN vs LLS)                  |
 //! | ablation| alpha / detection-threshold sweeps (extension)        |
+//! | dynamic | time-phased scenarios under the online loop (extension)|
 
 mod ablation;
+pub mod dynamic;
 mod fig1;
 mod fig10;
 mod fig3;
@@ -85,15 +87,16 @@ impl Output {
     }
 }
 
-pub const ALL_IDS: [&str; 12] = [
+pub const ALL_IDS: [&str; 13] = [
     "table1", "fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
-    "fig9", "fig10", "summary", "ablation",
+    "fig9", "fig10", "summary", "ablation", "dynamic",
 ];
 
 /// Run one experiment (or `all`).
 pub fn run(id: &str, ctx: &ExpCtx) -> Result<()> {
     match id {
         "table1" => table1::run(ctx),
+        "dynamic" => dynamic::run(ctx),
         "fig1" => fig1::run(ctx),
         "fig3" => fig3::run(ctx),
         "fig4" => fig4::run(ctx),

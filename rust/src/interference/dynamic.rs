@@ -1,0 +1,1287 @@
+//! Trace-driven, time-phased dynamic interference scenarios.
+//!
+//! The static catalogue (`scenarios`) and the §4.2 random process
+//! (`schedule`) exercise ODIN against *memoryless* interference; the
+//! paper's actual claim — "detects interference online and automatically
+//! re-balances the pipeline stages" — is about interference that *evolves*:
+//! co-runners that burst, ramp up, arrive and depart, or migrate between
+//! cores. This module is a small scenario DSL for exactly those shapes.
+//!
+//! A [`DynamicScenario`] is a list of [`Phase`]s (and/or a raw trace of
+//! state-change events) over a fixed query horizon; [`compile`] expands it
+//! into the same per-query [`Schedule`] the simulator already consumes, so
+//! every policy faces the identical, fully deterministic stream. Scenarios
+//! come from the builtin catalogue ([`builtin`]) or from JSON files
+//! ([`DynamicScenario::load`]); all validation failures are
+//! [`OdinError`]s with context — a malformed scenario file must never
+//! panic the CLI.
+//!
+//! [`compile`]: DynamicScenario::compile
+//! [`OdinError`]: crate::util::error::OdinError
+
+use crate::json::{parse, Value};
+use crate::util::error::{Context, Result};
+use crate::{bail, err};
+
+use super::scenarios::NUM_SCENARIOS;
+use super::schedule::Schedule;
+
+/// Default execution places of a scenario (the paper's 4-EP pipeline).
+pub const DEFAULT_EPS: usize = 4;
+/// Default query horizon: long enough for several interference epochs,
+/// short enough that the full builtin sweep stays interactive.
+pub const DEFAULT_QUERIES: usize = 2000;
+/// Sanity bounds on scenario dimensions: validation and compilation
+/// materialize per-(query, EP) state, so an absurd horizon in a user
+/// scenario file must fail as an [`OdinError`], not abort on allocation.
+/// `MAX_SLOTS` bounds the `queries × eps` product (the actual footprint).
+///
+/// [`OdinError`]: crate::util::error::OdinError
+pub const MAX_QUERIES: usize = 1_000_000;
+pub const MAX_EPS: usize = 256;
+pub const MAX_SLOTS: usize = 16_000_000;
+
+/// Builtin scenario names, in catalogue order (stable: golden tests and
+/// the `dynamic` experiment iterate this order).
+pub const BUILTIN_NAMES: [&str; 5] =
+    ["burst", "ramp", "arrivals", "migrate", "storm"];
+
+/// One time-phased interference pattern on the query axis.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Repeating burst: `scenario` lands on `ep` for `duration` queries
+    /// every `period` queries, starting at `start`, until the horizon.
+    Burst { start: usize, period: usize, duration: usize, ep: usize, scenario: usize },
+    /// Ramping co-runner: `ep` steps through the scenario ids in `levels`
+    /// (equal sub-spans) across `[start, end)` — e.g. a stressor growing
+    /// from 2 to 8 threads.
+    Ramp { start: usize, end: usize, ep: usize, levels: Vec<usize> },
+    /// Long-lived task: `scenario` occupies `ep` for all of `[start, end)`
+    /// (arrives at `start`, departs at `end`).
+    Task { start: usize, end: usize, ep: usize, scenario: usize },
+    /// Core migration: `scenario` hops to the next EP (round-robin from
+    /// EP 0) every `period` queries during `[start, end)`.
+    Migrate { start: usize, end: usize, period: usize, scenario: usize },
+}
+
+impl Phase {
+    fn kind(&self) -> &'static str {
+        match self {
+            Phase::Burst { .. } => "burst",
+            Phase::Ramp { .. } => "ramp",
+            Phase::Task { .. } => "task",
+            Phase::Migrate { .. } => "migrate",
+        }
+    }
+
+    /// First query the phase touches.
+    fn start(&self) -> usize {
+        match *self {
+            Phase::Burst { start, .. }
+            | Phase::Ramp { start, .. }
+            | Phase::Task { start, .. }
+            | Phase::Migrate { start, .. } => start,
+        }
+    }
+
+    /// Expand into (start, ep, scenario, duration) schedule events over a
+    /// `horizon`/`num_eps` grid — the single source of truth for both the
+    /// slot-exact overlap validation and compilation.
+    fn events(
+        &self,
+        num_eps: usize,
+        horizon: usize,
+        out: &mut Vec<(usize, usize, usize, usize)>,
+    ) {
+        match *self {
+            Phase::Burst { start, period, duration, ep, scenario } => {
+                let mut at = start;
+                while at < horizon {
+                    out.push((at, ep, scenario, duration));
+                    at += period;
+                }
+            }
+            Phase::Ramp { start, end, ep, ref levels } => {
+                let end = end.min(horizon);
+                let span = end.saturating_sub(start);
+                let chunk = (span / levels.len()).max(1);
+                for (k, &level) in levels.iter().enumerate() {
+                    let s = start + k * chunk;
+                    if s >= end {
+                        break;
+                    }
+                    // the last level absorbs the rounding remainder
+                    let d = if k + 1 == levels.len() {
+                        end - s
+                    } else {
+                        chunk.min(end - s)
+                    };
+                    out.push((s, ep, level, d));
+                }
+            }
+            Phase::Task { start, end, ep, scenario } => {
+                let end = end.min(horizon);
+                if start < end {
+                    out.push((start, ep, scenario, end - start));
+                }
+            }
+            Phase::Migrate { start, end, period, scenario } => {
+                let end = end.min(horizon);
+                let mut at = start;
+                let mut hop = 0usize;
+                while at < end {
+                    let ep = hop % num_eps;
+                    out.push((at, ep, scenario, period.min(end - at)));
+                    at += period;
+                    hop += 1;
+                }
+            }
+        }
+    }
+}
+
+/// A raw trace record: from query `at` onward, `ep` runs under `scenario`
+/// (0 clears it) until the trace changes that EP again.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub at: usize,
+    pub ep: usize,
+    pub scenario: usize,
+}
+
+/// A composed dynamic scenario: phases + trace over a fixed horizon.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DynamicScenario {
+    pub name: String,
+    pub num_eps: usize,
+    pub num_queries: usize,
+    pub phases: Vec<Phase>,
+    pub trace: Vec<TraceEvent>,
+}
+
+impl DynamicScenario {
+    /// Build and validate; every constructor funnels through here.
+    pub fn new(
+        name: impl Into<String>,
+        num_eps: usize,
+        num_queries: usize,
+        phases: Vec<Phase>,
+        trace: Vec<TraceEvent>,
+    ) -> Result<DynamicScenario> {
+        let s = DynamicScenario {
+            name: name.into(),
+            num_eps,
+            num_queries,
+            phases,
+            trace,
+        };
+        s.validate()?;
+        Ok(s)
+    }
+
+    fn validate(&self) -> Result<()> {
+        let name = &self.name;
+        // the name ends up in artifact file names (scenario_<name>.json);
+        // keep it a single path-safe token
+        if name.is_empty() {
+            bail!("scenario name must not be empty");
+        }
+        if !name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'))
+        {
+            bail!(
+                "scenario name {name:?} may only contain ASCII \
+                 letters, digits, '-', '_' and '.'"
+            );
+        }
+        if self.num_eps == 0 {
+            bail!("scenario {name:?}: num_eps must be >= 1");
+        }
+        if self.num_eps > MAX_EPS {
+            bail!(
+                "scenario {name:?}: {} EPs exceeds the {MAX_EPS} limit",
+                self.num_eps
+            );
+        }
+        if self.num_queries == 0 {
+            bail!("scenario {name:?}: num_queries must be >= 1");
+        }
+        if self.num_queries > MAX_QUERIES {
+            bail!(
+                "scenario {name:?}: {}-query horizon exceeds the \
+                 {MAX_QUERIES} limit",
+                self.num_queries
+            );
+        }
+        if self.num_queries.saturating_mul(self.num_eps) > MAX_SLOTS {
+            bail!(
+                "scenario {name:?}: {} queries x {} EPs exceeds the \
+                 {MAX_SLOTS}-slot limit",
+                self.num_queries,
+                self.num_eps
+            );
+        }
+        if self.phases.is_empty() && self.trace.is_empty() {
+            bail!(
+                "scenario {name:?}: empty — needs at least one phase or \
+                 trace event"
+            );
+        }
+        for (i, p) in self.phases.iter().enumerate() {
+            self.validate_phase(i, p)
+                .with_context(|| format!("scenario {name:?}"))?;
+        }
+        // bound the total expansion *work* (slot writes), not just the
+        // memory: a burst with period 1 and duration ~horizon respects
+        // every dimension cap yet expands to ~horizon² writes. Trace
+        // events need no budget — their spans are disjoint per EP, so
+        // they are bounded by the slot count already.
+        let mut writes = 0usize;
+        let mut events = Vec::new();
+        for (i, p) in self.phases.iter().enumerate() {
+            events.clear();
+            p.events(self.num_eps, self.num_queries, &mut events);
+            for &(start, _, _, duration) in &events {
+                writes = writes.saturating_add(
+                    duration.min(self.num_queries.saturating_sub(start)),
+                );
+            }
+            if writes > MAX_SLOTS {
+                bail!(
+                    "scenario {name:?}: phase {i} pushes the expansion \
+                     past the {MAX_SLOTS}-write budget (period too small \
+                     for its duration?)"
+                );
+            }
+        }
+        self.validate_overlaps()?;
+        self.validate_trace()?;
+        Ok(())
+    }
+
+    fn validate_phase(&self, i: usize, p: &Phase) -> Result<()> {
+        let kind = p.kind();
+        let check_scenario = |scenario: usize| -> Result<()> {
+            if !(1..=NUM_SCENARIOS).contains(&scenario) {
+                bail!(
+                    "phase {i} ({kind}): scenario id {scenario} out of \
+                     range 1..={NUM_SCENARIOS}"
+                );
+            }
+            Ok(())
+        };
+        let check_ep = |ep: usize| -> Result<()> {
+            if ep >= self.num_eps {
+                bail!(
+                    "phase {i} ({kind}): ep {ep} out of range for \
+                     {} EPs",
+                    self.num_eps
+                );
+            }
+            Ok(())
+        };
+        // repetition fields feed `at += period` / `start + duration`
+        // arithmetic; cap them so a saturated JSON number (huge floats
+        // parse as usize::MAX) can never overflow past the checks
+        let check_step = |field: &str, v: usize| -> Result<()> {
+            if v > MAX_QUERIES {
+                bail!(
+                    "phase {i} ({kind}): {field} {v} exceeds the \
+                     {MAX_QUERIES} limit"
+                );
+            }
+            Ok(())
+        };
+        match p {
+            Phase::Burst { period, duration, ep, scenario, .. } => {
+                check_ep(*ep)?;
+                check_scenario(*scenario)?;
+                if *period == 0 || *duration == 0 {
+                    bail!("phase {i} (burst): period and duration must be >= 1");
+                }
+                check_step("period", *period)?;
+                check_step("duration", *duration)?;
+            }
+            Phase::Ramp { start, end, ep, levels } => {
+                check_ep(*ep)?;
+                if levels.is_empty() {
+                    bail!("phase {i} (ramp): needs at least one level");
+                }
+                for &l in levels {
+                    check_scenario(l)?;
+                }
+                if start >= end {
+                    bail!(
+                        "phase {i} (ramp): out-of-order span [{start}, {end})"
+                    );
+                }
+                // every level must get at least one query, or trailing
+                // levels would silently never be scheduled
+                let span = (*end).min(self.num_queries).saturating_sub(*start);
+                if span < levels.len() {
+                    bail!(
+                        "phase {i} (ramp): span of {span} queries cannot \
+                         fit {} levels",
+                        levels.len()
+                    );
+                }
+            }
+            Phase::Task { start, end, ep, scenario } => {
+                check_ep(*ep)?;
+                check_scenario(*scenario)?;
+                if start >= end {
+                    bail!(
+                        "phase {i} (task): out-of-order span [{start}, {end})"
+                    );
+                }
+            }
+            Phase::Migrate { start, end, period, scenario } => {
+                check_scenario(*scenario)?;
+                if *period == 0 {
+                    bail!("phase {i} (migrate): period must be >= 1");
+                }
+                check_step("period", *period)?;
+                if start >= end {
+                    bail!(
+                        "phase {i} (migrate): out-of-order span \
+                         [{start}, {end})"
+                    );
+                }
+            }
+        }
+        // a phase entirely past the horizon would silently compile to
+        // nothing — reject it for every kind, not just bursts
+        if p.start() >= self.num_queries {
+            bail!(
+                "phase {i} ({kind}): start {} is past the {}-query horizon",
+                p.start(),
+                self.num_queries
+            );
+        }
+        Ok(())
+    }
+
+    /// Two phases may not claim the same (query, EP) slot — the compiled
+    /// schedule would silently depend on phase order otherwise. The check
+    /// is slot-exact: interleaved bursts on one EP, or a task scheduled
+    /// between a migrating stressor's visits, are legal.
+    fn validate_overlaps(&self) -> Result<()> {
+        if self.phases.len() < 2 {
+            return Ok(()); // nothing to contend with
+        }
+        const FREE: usize = usize::MAX;
+        // flat slot matrix: owner of (query q, EP e) at q * num_eps + e
+        let mut owner = vec![FREE; self.num_queries * self.num_eps];
+        let mut events = Vec::new();
+        for (i, p) in self.phases.iter().enumerate() {
+            events.clear();
+            p.events(self.num_eps, self.num_queries, &mut events);
+            for &(start, ep, _, duration) in &events {
+                for q in start..(start + duration).min(self.num_queries) {
+                    let slot = &mut owner[q * self.num_eps + ep];
+                    // a phase may overlap itself (burst duration > period)
+                    if *slot != FREE && *slot != i {
+                        bail!(
+                            "scenario {:?}: phase {} ({}) and phase \
+                             {i} ({}) overlap on EP {ep} at query {q}",
+                            self.name,
+                            *slot,
+                            self.phases[*slot].kind(),
+                            p.kind()
+                        );
+                    }
+                    *slot = i;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn validate_trace(&self) -> Result<()> {
+        let name = &self.name;
+        let mut prev_at = 0usize;
+        for (i, ev) in self.trace.iter().enumerate() {
+            if i > 0 && ev.at < prev_at {
+                bail!(
+                    "scenario {name:?}: trace event {i} at query {} is \
+                     out of order (previous event at {prev_at})",
+                    ev.at
+                );
+            }
+            prev_at = ev.at;
+            if ev.at >= self.num_queries {
+                bail!(
+                    "scenario {name:?}: trace event {i} at query {} is \
+                     past the {}-query horizon",
+                    ev.at,
+                    self.num_queries
+                );
+            }
+            if ev.ep >= self.num_eps {
+                bail!(
+                    "scenario {name:?}: trace event {i}: ep {} out of \
+                     range for {} EPs",
+                    ev.ep,
+                    self.num_eps
+                );
+            }
+            if ev.scenario > NUM_SCENARIOS {
+                bail!(
+                    "scenario {name:?}: trace event {i}: scenario id {} \
+                     out of range 0..={NUM_SCENARIOS}",
+                    ev.scenario
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Expand into the per-query schedule the simulator consumes. Phases
+    /// are slot-disjoint by construction; trace events apply last (a
+    /// trace can deliberately override phases).
+    pub fn compile(&self) -> Schedule {
+        let mut events: Vec<(usize, usize, usize, usize)> = Vec::new();
+        for p in &self.phases {
+            p.events(self.num_eps, self.num_queries, &mut events);
+        }
+        // trace: each record holds until the next record on the same EP;
+        // one reverse pass finds every successor (a forward rescan per
+        // record would be quadratic in the trace length)
+        const NONE: usize = usize::MAX;
+        let mut next_at = vec![NONE; self.num_eps];
+        let mut until = vec![self.num_queries; self.trace.len()];
+        for (i, ev) in self.trace.iter().enumerate().rev() {
+            if next_at[ev.ep] != NONE {
+                until[i] = next_at[ev.ep];
+            }
+            next_at[ev.ep] = ev.at;
+        }
+        for (i, ev) in self.trace.iter().enumerate() {
+            if ev.at < until[i] {
+                events.push((ev.at, ev.ep, ev.scenario, until[i] - ev.at));
+            }
+        }
+        Schedule::from_events(self.num_eps, self.num_queries, &events)
+    }
+
+    // -- JSON -----------------------------------------------------------
+
+    /// Parse a scenario document (this example is slot-disjoint: the
+    /// migration's four hops land on EPs 0..3 during 700..900, clear of
+    /// the burst windows on EP 0):
+    ///
+    /// ```json
+    /// {
+    ///  "name": "my-scenario", "eps": 4, "queries": 1000,
+    ///  "phases": [
+    ///   {"kind": "burst", "start": 0, "period": 200, "duration": 50,
+    ///    "ep": 0, "scenario": 3},
+    ///   {"kind": "ramp", "start": 100, "end": 600, "ep": 1,
+    ///    "levels": [7, 8, 9]},
+    ///   {"kind": "task", "start": 200, "end": 700, "ep": 2, "scenario": 6},
+    ///   {"kind": "migrate", "start": 700, "end": 900, "period": 50,
+    ///    "scenario": 8}
+    ///  ],
+    ///  "trace": [{"at": 0, "ep": 3, "scenario": 5},
+    ///            {"at": 500, "ep": 3, "scenario": 0}]
+    /// }
+    /// ```
+    pub fn from_json(v: &Value) -> Result<DynamicScenario> {
+        if v.as_obj().is_none() {
+            bail!("scenario document must be a JSON object");
+        }
+        check_keys(v, &["eps", "name", "phases", "queries", "trace"], "scenario")?;
+        // missing name defaults; a present-but-non-string name is an
+        // error, not a silent "custom"
+        let name = match v.get("name") {
+            Value::Null => "custom".to_string(),
+            other => other
+                .as_str()
+                .ok_or_else(|| err!("field \"name\" must be a string"))?
+                .to_string(),
+        };
+        let num_eps = opt_usize(v, "eps", DEFAULT_EPS)?;
+        let num_queries = opt_usize(v, "queries", DEFAULT_QUERIES)?;
+        let mut phases = Vec::new();
+        if !v.get("phases").is_null() {
+            let arr = v
+                .get("phases")
+                .as_arr()
+                .ok_or_else(|| err!("\"phases\" must be an array"))?;
+            for (i, pv) in arr.iter().enumerate() {
+                phases.push(parse_phase(pv, i)?);
+            }
+        }
+        let mut trace = Vec::new();
+        if !v.get("trace").is_null() {
+            let arr = v
+                .get("trace")
+                .as_arr()
+                .ok_or_else(|| err!("\"trace\" must be an array"))?;
+            for (i, tv) in arr.iter().enumerate() {
+                let what = format!("trace event {i}");
+                check_keys(tv, &["at", "ep", "scenario"], &what)?;
+                trace.push(TraceEvent {
+                    at: req_usize(tv, "at", &what)?,
+                    ep: req_usize(tv, "ep", &what)?,
+                    scenario: req_usize(tv, "scenario", &what)?,
+                });
+            }
+        }
+        DynamicScenario::new(name, num_eps, num_queries, phases, trace)
+    }
+
+    /// Parse a scenario from JSON text.
+    pub fn from_json_str(text: &str) -> Result<DynamicScenario> {
+        let v = parse(text).context("parsing scenario json")?;
+        DynamicScenario::from_json(&v)
+    }
+
+    /// Load a scenario file.
+    pub fn load(path: &str) -> Result<DynamicScenario> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading scenario file {path:?}"))?;
+        DynamicScenario::from_json_str(&text)
+            .with_context(|| format!("loading scenario file {path:?}"))
+    }
+}
+
+fn req_usize(v: &Value, key: &str, what: &str) -> Result<usize> {
+    v.get(key)
+        .as_usize()
+        .ok_or_else(|| err!("{what}: missing or non-integer field {key:?}"))
+}
+
+/// Reject unrecognized keys: a typo'd field must error, not silently
+/// fall back to a default. `allowed` is sorted for the message.
+fn check_keys(v: &Value, allowed: &[&str], what: &str) -> Result<()> {
+    if let Some(obj) = v.as_obj() {
+        for k in obj.keys() {
+            if !allowed.contains(&k.as_str()) {
+                bail!(
+                    "{what}: unknown field {k:?} (allowed: {})",
+                    allowed.join(", ")
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn opt_usize(v: &Value, key: &str, default: usize) -> Result<usize> {
+    if v.get(key).is_null() {
+        return Ok(default);
+    }
+    v.get(key)
+        .as_usize()
+        .ok_or_else(|| err!("field {key:?} must be a non-negative integer"))
+}
+
+fn parse_phase(v: &Value, i: usize) -> Result<Phase> {
+    let what = format!("phase {i}");
+    let kind = v
+        .get("kind")
+        .as_str()
+        .ok_or_else(|| err!("{what}: missing \"kind\""))?;
+    match kind {
+        "burst" => check_keys(
+            v,
+            &["duration", "ep", "kind", "period", "scenario", "start"],
+            &what,
+        )?,
+        "ramp" => check_keys(v, &["end", "ep", "kind", "levels", "start"], &what)?,
+        "task" => check_keys(v, &["end", "ep", "kind", "scenario", "start"], &what)?,
+        "migrate" => {
+            check_keys(v, &["end", "kind", "period", "scenario", "start"], &what)?
+        }
+        _ => {}
+    }
+    Ok(match kind {
+        "burst" => Phase::Burst {
+            start: req_usize(v, "start", &what)?,
+            period: req_usize(v, "period", &what)?,
+            duration: req_usize(v, "duration", &what)?,
+            ep: req_usize(v, "ep", &what)?,
+            scenario: req_usize(v, "scenario", &what)?,
+        },
+        "ramp" => Phase::Ramp {
+            start: req_usize(v, "start", &what)?,
+            end: req_usize(v, "end", &what)?,
+            ep: req_usize(v, "ep", &what)?,
+            levels: v
+                .get("levels")
+                .as_usize_vec()
+                .ok_or_else(|| err!("{what}: \"levels\" must be an integer array"))?,
+        },
+        "task" => Phase::Task {
+            start: req_usize(v, "start", &what)?,
+            end: req_usize(v, "end", &what)?,
+            ep: req_usize(v, "ep", &what)?,
+            scenario: req_usize(v, "scenario", &what)?,
+        },
+        "migrate" => Phase::Migrate {
+            start: req_usize(v, "start", &what)?,
+            end: req_usize(v, "end", &what)?,
+            period: req_usize(v, "period", &what)?,
+            scenario: req_usize(v, "scenario", &what)?,
+        },
+        other => bail!("{what}: unknown kind {other:?} (burst|ramp|task|migrate)"),
+    })
+}
+
+/// The builtin catalogue. Scenario ids reference Table 1: 3 = cpu_8t_same,
+/// 5 = cpu_4t_socket, 6 = cpu_8t_socket, 7..9 = membw_{2,4,8}t_same,
+/// 10..12 = membw_{2,4,8}t_socket.
+pub fn builtin(name: &str) -> Result<DynamicScenario> {
+    let (eps, q) = (DEFAULT_EPS, DEFAULT_QUERIES);
+    match name {
+        // repeating long bursts on two EPs, offset so the pipeline never
+        // settles for more than a few hundred queries
+        "burst" => DynamicScenario::new(
+            "burst",
+            eps,
+            q,
+            vec![
+                Phase::Burst { start: 100, period: 400, duration: 150, ep: 1, scenario: 9 },
+                Phase::Burst { start: 300, period: 400, duration: 100, ep: 3, scenario: 3 },
+            ],
+            Vec::new(),
+        ),
+        // a co-runner on EP 2 growing from 2 to 8 membw threads
+        "ramp" => DynamicScenario::new(
+            "ramp",
+            eps,
+            q,
+            vec![Phase::Ramp { start: 200, end: 1800, ep: 2, levels: vec![7, 8, 9] }],
+            Vec::new(),
+        ),
+        // three long-lived tasks arriving and departing at staggered times
+        "arrivals" => DynamicScenario::new(
+            "arrivals",
+            eps,
+            q,
+            vec![
+                Phase::Task { start: 150, end: 1100, ep: 0, scenario: 6 },
+                Phase::Task { start: 500, end: 1500, ep: 2, scenario: 12 },
+                Phase::Task { start: 900, end: 1900, ep: 3, scenario: 5 },
+            ],
+            Vec::new(),
+        ),
+        // one stressor hopping round-robin across all EPs
+        "migrate" => DynamicScenario::new(
+            "migrate",
+            eps,
+            q,
+            vec![Phase::Migrate { start: 100, end: 1900, period: 300, scenario: 8 }],
+            Vec::new(),
+        ),
+        // everything at once, on disjoint EPs
+        "storm" => DynamicScenario::new(
+            "storm",
+            eps,
+            q,
+            vec![
+                Phase::Burst { start: 0, period: 500, duration: 200, ep: 0, scenario: 3 },
+                Phase::Ramp { start: 400, end: 1600, ep: 2, levels: vec![10, 11, 12] },
+                Phase::Task { start: 800, end: 1800, ep: 3, scenario: 7 },
+            ],
+            Vec::new(),
+        ),
+        other => bail!(
+            "unknown scenario {other:?} (builtins: {})",
+            BUILTIN_NAMES.join(", ")
+        ),
+    }
+}
+
+/// Resolve a CLI argument: a builtin name, or a path to a scenario file.
+/// A spec matching both (a file literally named like a builtin) is
+/// ambiguous and rejected — prefix the file with `./` to load it.
+pub fn resolve(spec: &str) -> Result<DynamicScenario> {
+    let is_builtin = BUILTIN_NAMES.contains(&spec);
+    let is_file = std::path::Path::new(spec).is_file();
+    match (is_builtin, is_file) {
+        (true, true) => Err(err!(
+            "scenario {spec:?} is both a builtin name and an existing \
+             file; use ./{spec} to load the file"
+        )),
+        (true, false) => builtin(spec),
+        (false, true) => DynamicScenario::load(spec),
+        (false, false) => Err(err!(
+            "unknown scenario {spec:?}: not a builtin ({}) and not a file",
+            BUILTIN_NAMES.join(", ")
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::error::OdinError;
+
+    fn chain(e: &OdinError) -> String {
+        format!("{e:#}")
+    }
+
+    #[test]
+    fn builtins_all_compile() {
+        for name in BUILTIN_NAMES {
+            let s = builtin(name).unwrap();
+            assert_eq!(s.name, name);
+            let sched = s.compile();
+            assert_eq!(sched.num_queries(), s.num_queries);
+            assert_eq!(sched.num_eps, s.num_eps);
+            assert!(
+                sched.interference_load() > 0.0,
+                "{name} induces no interference"
+            );
+            assert!(
+                !sched.change_points.is_empty(),
+                "{name} never changes state"
+            );
+        }
+    }
+
+    #[test]
+    fn builtin_names_are_distinct_scenarios() {
+        // the acceptance bar: at least 4 distinct dynamic scenarios
+        assert!(BUILTIN_NAMES.len() >= 4);
+        let loads: Vec<f64> = BUILTIN_NAMES
+            .iter()
+            .map(|n| builtin(n).unwrap().compile().interference_load())
+            .collect();
+        for i in 0..loads.len() {
+            for j in (i + 1)..loads.len() {
+                assert_ne!(loads[i], loads[j], "{i} vs {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_builtin_is_error_with_names() {
+        let e = builtin("nope").unwrap_err();
+        assert!(chain(&e).contains("burst"), "{e:#}");
+        let e = resolve("also-nope").unwrap_err();
+        assert!(chain(&e).contains("not a builtin"), "{e:#}");
+    }
+
+    #[test]
+    fn burst_compiles_to_expected_windows() {
+        let s = DynamicScenario::new(
+            "b",
+            2,
+            100,
+            vec![Phase::Burst { start: 10, period: 40, duration: 5, ep: 1, scenario: 2 }],
+            Vec::new(),
+        )
+        .unwrap();
+        let sched = s.compile();
+        for q in 0..100 {
+            let want = matches!(q, 10..=14 | 50..=54 | 90..=94);
+            assert_eq!(sched.at(q)[1] == 2, want, "q={q}");
+            assert_eq!(sched.at(q)[0], 0);
+        }
+    }
+
+    #[test]
+    fn ramp_steps_through_levels() {
+        let s = DynamicScenario::new(
+            "r",
+            2,
+            100,
+            vec![Phase::Ramp { start: 10, end: 70, ep: 0, levels: vec![1, 2, 3] }],
+            Vec::new(),
+        )
+        .unwrap();
+        let sched = s.compile();
+        assert_eq!(sched.at(9)[0], 0);
+        assert_eq!(sched.at(10)[0], 1);
+        assert_eq!(sched.at(30)[0], 2);
+        assert_eq!(sched.at(50)[0], 3);
+        assert_eq!(sched.at(69)[0], 3);
+        assert_eq!(sched.at(70)[0], 0);
+    }
+
+    #[test]
+    fn migrate_hops_round_robin() {
+        let s = DynamicScenario::new(
+            "m",
+            3,
+            90,
+            vec![Phase::Migrate { start: 0, end: 90, period: 30, scenario: 4 }],
+            Vec::new(),
+        )
+        .unwrap();
+        let sched = s.compile();
+        assert_eq!(sched.at(0), &vec![4, 0, 0]);
+        assert_eq!(sched.at(30), &vec![0, 4, 0]);
+        assert_eq!(sched.at(60), &vec![0, 0, 4]);
+    }
+
+    #[test]
+    fn trace_holds_until_next_event_on_same_ep() {
+        let s = DynamicScenario::new(
+            "t",
+            2,
+            50,
+            Vec::new(),
+            vec![
+                TraceEvent { at: 5, ep: 0, scenario: 7 },
+                TraceEvent { at: 10, ep: 1, scenario: 2 },
+                TraceEvent { at: 20, ep: 0, scenario: 0 },
+            ],
+        )
+        .unwrap();
+        let sched = s.compile();
+        assert_eq!(sched.at(4), &vec![0, 0]);
+        assert_eq!(sched.at(5), &vec![7, 0]);
+        assert_eq!(sched.at(12), &vec![7, 2]);
+        assert_eq!(sched.at(20), &vec![0, 2]);
+        assert_eq!(sched.at(49), &vec![0, 2]);
+    }
+
+    // -- parsing / validation edge cases (satellite) --------------------
+
+    #[test]
+    fn empty_scenario_is_error_not_panic() {
+        let e = DynamicScenario::from_json_str(r#"{"name": "x"}"#).unwrap_err();
+        assert!(chain(&e).contains("empty"), "{e:#}");
+        let e = DynamicScenario::from_json_str(
+            r#"{"name": "x", "trace": [], "phases": []}"#,
+        )
+        .unwrap_err();
+        assert!(chain(&e).contains("empty"), "{e:#}");
+    }
+
+    #[test]
+    fn overlapping_phases_rejected() {
+        let e = DynamicScenario::new(
+            "o",
+            4,
+            1000,
+            vec![
+                Phase::Task { start: 100, end: 500, ep: 1, scenario: 2 },
+                Phase::Task { start: 400, end: 800, ep: 1, scenario: 3 },
+            ],
+            Vec::new(),
+        )
+        .unwrap_err();
+        assert!(chain(&e).contains("overlap"), "{e:#}");
+        // disjoint spans on the same EP are fine
+        DynamicScenario::new(
+            "o2",
+            4,
+            1000,
+            vec![
+                Phase::Task { start: 100, end: 400, ep: 1, scenario: 2 },
+                Phase::Task { start: 400, end: 800, ep: 1, scenario: 3 },
+            ],
+            Vec::new(),
+        )
+        .unwrap();
+        // same span on different EPs is fine
+        DynamicScenario::new(
+            "o3",
+            4,
+            1000,
+            vec![
+                Phase::Task { start: 100, end: 500, ep: 1, scenario: 2 },
+                Phase::Task { start: 100, end: 500, ep: 2, scenario: 3 },
+            ],
+            Vec::new(),
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn overlap_check_is_slot_exact() {
+        // migrate(0..600, period 100) visits EP 3 only during 300..400;
+        // a task on EP 3 that touches that visit clashes...
+        let e = DynamicScenario::new(
+            "m",
+            4,
+            1000,
+            vec![
+                Phase::Migrate { start: 0, end: 600, period: 100, scenario: 4 },
+                Phase::Task { start: 350, end: 900, ep: 3, scenario: 2 },
+            ],
+            Vec::new(),
+        )
+        .unwrap_err();
+        assert!(chain(&e).contains("overlap"), "{e:#}");
+        // ...while one scheduled between visits is legal
+        DynamicScenario::new(
+            "m2",
+            4,
+            1000,
+            vec![
+                Phase::Migrate { start: 0, end: 600, period: 100, scenario: 4 },
+                Phase::Task { start: 450, end: 900, ep: 3, scenario: 2 },
+            ],
+            Vec::new(),
+        )
+        .unwrap();
+        // interleaved bursts on ONE EP are legal when temporally disjoint
+        DynamicScenario::new(
+            "m3",
+            2,
+            1000,
+            vec![
+                Phase::Burst { start: 0, period: 400, duration: 100, ep: 1, scenario: 2 },
+                Phase::Burst { start: 200, period: 400, duration: 100, ep: 1, scenario: 9 },
+            ],
+            Vec::new(),
+        )
+        .unwrap();
+        // ...and clash when their windows collide
+        let e = DynamicScenario::new(
+            "m4",
+            2,
+            1000,
+            vec![
+                Phase::Burst { start: 0, period: 400, duration: 300, ep: 1, scenario: 2 },
+                Phase::Burst { start: 200, period: 400, duration: 100, ep: 1, scenario: 9 },
+            ],
+            Vec::new(),
+        )
+        .unwrap_err();
+        assert!(chain(&e).contains("overlap"), "{e:#}");
+    }
+
+    #[test]
+    fn phases_past_the_horizon_rejected_for_every_kind() {
+        let mk = |p: Phase| DynamicScenario::new("late", 4, 100, vec![p], Vec::new());
+        for p in [
+            Phase::Burst { start: 100, period: 10, duration: 5, ep: 0, scenario: 1 },
+            Phase::Ramp { start: 150, end: 200, ep: 0, levels: vec![1] },
+            Phase::Task { start: 100, end: 200, ep: 0, scenario: 1 },
+            Phase::Migrate { start: 500, end: 600, period: 10, scenario: 1 },
+        ] {
+            let e = mk(p).unwrap_err();
+            assert!(chain(&e).contains("past the"), "{e:#}");
+        }
+    }
+
+    #[test]
+    fn out_of_order_timestamps_rejected() {
+        let e = DynamicScenario::new(
+            "t",
+            2,
+            100,
+            Vec::new(),
+            vec![
+                TraceEvent { at: 50, ep: 0, scenario: 1 },
+                TraceEvent { at: 10, ep: 1, scenario: 2 },
+            ],
+        )
+        .unwrap_err();
+        assert!(chain(&e).contains("out of order"), "{e:#}");
+        // reversed phase spans are also out-of-order
+        let e = DynamicScenario::new(
+            "t2",
+            2,
+            100,
+            vec![Phase::Task { start: 80, end: 20, ep: 0, scenario: 1 }],
+            Vec::new(),
+        )
+        .unwrap_err();
+        assert!(chain(&e).contains("out-of-order"), "{e:#}");
+    }
+
+    #[test]
+    fn bad_ids_and_ranges_rejected() {
+        // scenario id 0 / 13 invalid in phases
+        for bad in [0usize, NUM_SCENARIOS + 1] {
+            let e = DynamicScenario::new(
+                "s",
+                2,
+                100,
+                vec![Phase::Task { start: 0, end: 50, ep: 0, scenario: bad }],
+                Vec::new(),
+            )
+            .unwrap_err();
+            assert!(chain(&e).contains("out of range"), "{e:#}");
+        }
+        // ep out of range
+        let e = DynamicScenario::new(
+            "s",
+            2,
+            100,
+            vec![Phase::Task { start: 0, end: 50, ep: 5, scenario: 1 }],
+            Vec::new(),
+        )
+        .unwrap_err();
+        assert!(chain(&e).contains("ep 5"), "{e:#}");
+        // zero-size horizon
+        let e = DynamicScenario::new(
+            "s",
+            2,
+            0,
+            vec![Phase::Task { start: 0, end: 50, ep: 0, scenario: 1 }],
+            Vec::new(),
+        )
+        .unwrap_err();
+        assert!(chain(&e).contains("num_queries"), "{e:#}");
+    }
+
+    #[test]
+    fn json_roundtrip_of_all_phase_kinds() {
+        // migrate(700..900, period 50) hops ep0@700, ep1@750, ep2@800,
+        // ep3@850 — slot-exactly disjoint from the burst's ep0 windows
+        // (…, 600..650, 800..850), the ramp (ep1, 100..600) and the task
+        // (ep2, 200..700), so the full four-kind document is legal
+        let text = r#"{
+          "name": "full", "eps": 4, "queries": 1000,
+          "phases": [
+            {"kind": "burst", "start": 0, "period": 200, "duration": 50,
+             "ep": 0, "scenario": 3},
+            {"kind": "ramp", "start": 100, "end": 600, "ep": 1,
+             "levels": [1, 2, 3]},
+            {"kind": "task", "start": 200, "end": 700, "ep": 2, "scenario": 6},
+            {"kind": "migrate", "start": 700, "end": 900, "period": 50,
+             "scenario": 8}
+          ]
+        }"#;
+        let s = DynamicScenario::from_json_str(text).unwrap();
+        assert_eq!(s.phases.len(), 4);
+        let sched = s.compile();
+        assert_eq!(sched.at(0)[0], 3);
+        assert_eq!(sched.at(150)[1], 1);
+        assert_eq!(sched.at(250)[2], 6);
+        assert_eq!(sched.at(720)[0], 8);
+        assert_eq!(sched.at(860)[3], 8);
+
+        // shift the migration to start at 600: its first hop lands on
+        // ep0 during the burst's 600..650 window — rejected
+        let clashing = text.replace("\"start\": 700", "\"start\": 600");
+        let e = DynamicScenario::from_json_str(&clashing).unwrap_err();
+        assert!(chain(&e).contains("overlap"), "{e:#}");
+    }
+
+    #[test]
+    fn absurd_dimensions_error_instead_of_allocating() {
+        // a hostile "queries"/"eps" must come back as an OdinError long
+        // before any per-slot state is materialized
+        let e = DynamicScenario::from_json_str(
+            r#"{"queries": 100000000000,
+                "phases": [{"kind": "task", "start": 0, "end": 10,
+                            "ep": 0, "scenario": 1}]}"#,
+        )
+        .unwrap_err();
+        assert!(chain(&e).contains("limit"), "{e:#}");
+        let e = DynamicScenario::from_json_str(
+            r#"{"eps": 100000,
+                "trace": [{"at": 0, "ep": 0, "scenario": 1}]}"#,
+        )
+        .unwrap_err();
+        assert!(chain(&e).contains("limit"), "{e:#}");
+        // dimensions fine individually but absurd combined
+        let e = DynamicScenario::new(
+            "wide",
+            MAX_EPS,
+            MAX_QUERIES,
+            vec![Phase::Task { start: 0, end: 10, ep: 0, scenario: 1 }],
+            Vec::new(),
+        )
+        .unwrap_err();
+        assert!(chain(&e).contains("slot limit"), "{e:#}");
+    }
+
+    #[test]
+    fn path_hostile_names_rejected() {
+        // the name flows into scenario_<name>.json artifact paths
+        // ("." is allowed: names always land behind a "scenario_" prefix,
+        // so dots cannot form a traversal)
+        for bad in ["", "a/b", "a b", "x\\y"] {
+            let e = DynamicScenario::new(
+                bad,
+                2,
+                100,
+                vec![Phase::Task { start: 0, end: 50, ep: 0, scenario: 1 }],
+                Vec::new(),
+            )
+            .unwrap_err();
+            assert!(chain(&e).contains("name"), "{bad:?}: {e:#}");
+        }
+    }
+
+    #[test]
+    fn saturated_repetition_fields_error_instead_of_overflowing() {
+        // a huge JSON float saturates to usize::MAX through as_usize;
+        // the caps must reject it before any `at += period` arithmetic
+        let e = DynamicScenario::from_json_str(
+            r#"{"queries": 100,
+                "phases": [{"kind": "burst", "start": 1,
+                            "period": 100000000000000000000,
+                            "duration": 5, "ep": 0, "scenario": 1}]}"#,
+        )
+        .unwrap_err();
+        assert!(chain(&e).contains("period"), "{e:#}");
+        let e = DynamicScenario::from_json_str(
+            r#"{"queries": 100,
+                "phases": [{"kind": "burst", "start": 1, "period": 10,
+                            "duration": 100000000000000000000,
+                            "ep": 0, "scenario": 1}]}"#,
+        )
+        .unwrap_err();
+        assert!(chain(&e).contains("duration"), "{e:#}");
+        let e = DynamicScenario::from_json_str(
+            r#"{"queries": 100,
+                "phases": [{"kind": "migrate", "start": 0, "end": 90,
+                            "period": 100000000000000000000,
+                            "scenario": 1}]}"#,
+        )
+        .unwrap_err();
+        assert!(chain(&e).contains("period"), "{e:#}");
+    }
+
+    #[test]
+    fn ramp_span_must_fit_its_levels() {
+        let e = DynamicScenario::new(
+            "r",
+            2,
+            100,
+            vec![Phase::Ramp { start: 0, end: 2, ep: 0, levels: vec![1, 2, 3] }],
+            Vec::new(),
+        )
+        .unwrap_err();
+        assert!(chain(&e).contains("cannot fit"), "{e:#}");
+        // a span of exactly levels.len() is the minimum legal ramp
+        let s = DynamicScenario::new(
+            "r2",
+            2,
+            100,
+            vec![Phase::Ramp { start: 0, end: 3, ep: 0, levels: vec![1, 2, 3] }],
+            Vec::new(),
+        )
+        .unwrap();
+        let sched = s.compile();
+        assert_eq!(sched.at(0)[0], 1);
+        assert_eq!(sched.at(1)[0], 2);
+        assert_eq!(sched.at(2)[0], 3);
+        assert_eq!(sched.at(3)[0], 0);
+    }
+
+    #[test]
+    fn documented_example_scenario_is_valid() {
+        // the exact document shown in README.md / the from_json doc
+        // comment must load and compile
+        let s = DynamicScenario::from_json_str(
+            r#"{
+             "name": "my-scenario", "eps": 4, "queries": 1000,
+             "phases": [
+              {"kind": "burst",   "start": 0, "period": 200, "duration": 50,
+               "ep": 0, "scenario": 3},
+              {"kind": "ramp",    "start": 100, "end": 600, "ep": 1,
+               "levels": [7, 8, 9]},
+              {"kind": "task",    "start": 200, "end": 700, "ep": 2, "scenario": 6},
+              {"kind": "migrate", "start": 700, "end": 900, "period": 50,
+               "scenario": 8}
+             ],
+             "trace": [{"at": 0, "ep": 3, "scenario": 5},
+                       {"at": 500, "ep": 3, "scenario": 0}]
+            }"#,
+        )
+        .unwrap();
+        let sched = s.compile();
+        assert_eq!(sched.at(0)[3], 5); // trace task on EP 3
+        assert_eq!(sched.at(500)[3], 0); // trace clears it (overriding
+                                         // the migration's EP-3 hop too)
+        assert_eq!(sched.at(860)[3], 0);
+        assert_eq!(sched.at(720)[0], 8); // migration hop 0
+    }
+
+    #[test]
+    fn json_defaults_and_bad_fields() {
+        let s = DynamicScenario::from_json_str(
+            r#"{"trace": [{"at": 0, "ep": 0, "scenario": 1}]}"#,
+        )
+        .unwrap();
+        assert_eq!(s.name, "custom");
+        assert_eq!(s.num_eps, DEFAULT_EPS);
+        assert_eq!(s.num_queries, DEFAULT_QUERIES);
+
+        // unknown phase kind
+        let e = DynamicScenario::from_json_str(
+            r#"{"phases": [{"kind": "quake", "start": 0}]}"#,
+        )
+        .unwrap_err();
+        assert!(chain(&e).contains("unknown kind"), "{e:#}");
+        // missing field
+        let e = DynamicScenario::from_json_str(
+            r#"{"phases": [{"kind": "task", "start": 0, "end": 10, "ep": 0}]}"#,
+        )
+        .unwrap_err();
+        assert!(chain(&e).contains("scenario"), "{e:#}");
+        // malformed json surfaces the parser's location, not a panic
+        let e = DynamicScenario::from_json_str("{").unwrap_err();
+        assert!(chain(&e).contains("parsing scenario json"), "{e:#}");
+        // a non-object document is rejected up front
+        let e = DynamicScenario::from_json_str("[1, 2]").unwrap_err();
+        assert!(chain(&e).contains("JSON object"), "{e:#}");
+    }
+
+    #[test]
+    fn unknown_keys_rejected_not_ignored() {
+        // a typo'd field must error, not silently fall back to a default
+        let e = DynamicScenario::from_json_str(
+            r#"{"querys": 500,
+                "phases": [{"kind": "task", "start": 0, "end": 400,
+                            "ep": 0, "scenario": 3}]}"#,
+        )
+        .unwrap_err();
+        assert!(chain(&e).contains("querys"), "{e:#}");
+        let e = DynamicScenario::from_json_str(
+            r#"{"phases": [{"kind": "burst", "start": 0, "period": 10,
+                            "durration": 5, "ep": 0, "scenario": 1}]}"#,
+        )
+        .unwrap_err();
+        assert!(chain(&e).contains("durration"), "{e:#}");
+        let e = DynamicScenario::from_json_str(
+            r#"{"trace": [{"at": 0, "ep": 0, "scenario": 1, "sc": 2}]}"#,
+        )
+        .unwrap_err();
+        assert!(chain(&e).contains("unknown field \"sc\""), "{e:#}");
+        // a wrong-typed name must error, not coerce to "custom"
+        let e = DynamicScenario::from_json_str(
+            r#"{"name": 42, "trace": [{"at": 0, "ep": 0, "scenario": 1}]}"#,
+        )
+        .unwrap_err();
+        assert!(chain(&e).contains("name"), "{e:#}");
+    }
+
+    #[test]
+    fn expansion_work_budget_enforced() {
+        // dimension-cap-compliant but quadratic: period 1, duration ~horizon
+        let e = DynamicScenario::from_json_str(
+            r#"{"queries": 1000000,
+                "phases": [{"kind": "burst", "start": 0, "period": 1,
+                            "duration": 1000000, "ep": 0, "scenario": 1}]}"#,
+        )
+        .unwrap_err();
+        assert!(chain(&e).contains("budget"), "{e:#}");
+    }
+
+    #[test]
+    fn load_missing_file_is_contextful_error() {
+        let e = DynamicScenario::load("/nonexistent/odin/scenario.json")
+            .unwrap_err();
+        assert!(chain(&e).contains("scenario file"), "{e:#}");
+    }
+
+    #[test]
+    fn resolve_prefers_builtin_then_file() {
+        assert_eq!(resolve("burst").unwrap().name, "burst");
+        let path = std::env::temp_dir().join("odin_dyn_scenario_test.json");
+        std::fs::write(
+            &path,
+            r#"{"name": "from-file",
+                "trace": [{"at": 0, "ep": 0, "scenario": 4}]}"#,
+        )
+        .unwrap();
+        let s = resolve(path.to_str().unwrap()).unwrap();
+        assert_eq!(s.name, "from-file");
+        let _ = std::fs::remove_file(&path);
+    }
+}

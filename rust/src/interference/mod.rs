@@ -1,10 +1,13 @@
 //! Interference machinery: the paper's Table-1 scenario catalogue, real
-//! iBench-style stress generators, and query-indexed schedules.
+//! iBench-style stress generators, query-indexed schedules, and the
+//! time-phased dynamic scenario DSL.
 
+pub mod dynamic;
 pub mod generator;
 pub mod scenarios;
 pub mod schedule;
 
+pub use dynamic::{DynamicScenario, Phase, TraceEvent, BUILTIN_NAMES};
 pub use generator::Stressor;
 pub use scenarios::{catalogue, Placement, Scenario, StressKind, NUM_SCENARIOS};
 pub use schedule::{EpScenarios, RandomInterference, Schedule};

@@ -9,6 +9,16 @@ pub fn to_string_pretty(v: &Value) -> String {
     out
 }
 
+/// Write a value to `path` in the figure-artifact format (pretty, no
+/// trailing newline) — the single emission path keeps every artifact
+/// byte-comparable across writers.
+pub fn write_file(
+    path: impl AsRef<std::path::Path>,
+    v: &Value,
+) -> std::io::Result<()> {
+    std::fs::write(path, to_string_pretty(v))
+}
+
 fn emit(v: &Value, depth: usize, out: &mut String) {
     match v {
         Value::Null => out.push_str("null"),
@@ -126,6 +136,20 @@ mod tests {
         let v = Value::obj(vec![("b", Value::Null), ("a", Value::Null)]);
         let text = to_string_pretty(&v);
         assert!(text.find("\"a\"").unwrap() < text.find("\"b\"").unwrap());
+    }
+
+    #[test]
+    fn write_file_roundtrips() {
+        let v = Value::obj(vec![("k", Value::from(1usize))]);
+        let path = std::env::temp_dir().join(format!(
+            "odin_emit_write_{}.json",
+            std::process::id()
+        ));
+        write_file(&path, &v).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, to_string_pretty(&v));
+        assert_eq!(parse(&text).unwrap(), v);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

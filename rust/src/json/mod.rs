@@ -6,6 +6,6 @@ mod emit;
 mod parse;
 mod value;
 
-pub use emit::to_string_pretty;
+pub use emit::{to_string_pretty, write_file};
 pub use parse::{parse, ParseError};
 pub use value::Value;

@@ -1,9 +1,12 @@
 //! `odin` — the leader binary.
 //!
 //! Subcommands:
-//!   simulate     run one simulation window and print its summary
+//!   simulate     run one simulation window and print its summary; with
+//!                --scenario <name|file> runs the online control loop
+//!                against a dynamic interference scenario (odin + lls /
+//!                oracle / static baselines, per-window JSON)
 //!   experiment   regenerate paper tables/figures (table1, fig1..fig10,
-//!                summary, or `all`)
+//!                summary, dynamic, or `all`)
 //!   bench-db     measure the per-layer timing database on this host
 //!                through the PJRT runtime, under real stressors
 //!   verify       compile artifacts and check gold numerics
@@ -15,8 +18,13 @@ use odin::coordinator::optimal_config;
 use odin::database::measure::{measure, MeasureOpts};
 use odin::database::synth::synthesize;
 use odin::database::TimingDb;
+use odin::experiments::dynamic::{
+    run_scenario, scenario_json, summary_line, DYN_SLO_LEVEL, DYN_WINDOW,
+};
 use odin::experiments::{self, ExpCtx};
+use odin::interference::dynamic::resolve;
 use odin::interference::{RandomInterference, Schedule};
+use odin::json::Value;
 use odin::models;
 use odin::runtime::{ExecService, Manifest, ModelRuntime, RuntimeTimer, Tensor};
 use odin::serving::{PipelineServer, ServeReport, ServerOpts};
@@ -49,8 +57,9 @@ fn main() {
 fn usage() -> String {
     "odin — ODIN inference-pipeline coordinator (paper reproduction)\n\n\
      subcommands:\n\
-       simulate     one simulation window (policy, schedule, model)\n\
-       experiment   regenerate paper artifacts: table1 fig1 fig3..fig10 summary all\n\
+       simulate     one simulation window; --scenario <name|file> runs the\n\
+                    online loop against a dynamic interference scenario\n\
+       experiment   regenerate paper artifacts: table1 fig1 fig3..fig10 summary dynamic all\n\
        bench-db     measure the per-layer timing database via PJRT\n\
        verify       compile artifacts + gold numerics check\n\
        serve        live pipeline server demo\n\
@@ -80,6 +89,18 @@ fn dispatch(argv: &[String]) -> Result<()> {
     }
 }
 
+/// Timing database for `simulate` (both modes): synthesized from the
+/// --model spec by default, loaded from --db when given.
+fn load_sim_db(args: &Args) -> Result<TimingDb> {
+    let spec = models::build(args.get("model"), args.usize("spatial")?)
+        .ok_or_else(|| err!("unknown model {}", args.get("model")))?;
+    Ok(if args.get("db").is_empty() {
+        synthesize(&spec, args.u64("seed")?)
+    } else {
+        TimingDb::load(args.get("db")).map_err(OdinError::msg)?
+    })
+}
+
 fn parse_policy(args: &Args) -> Result<Policy> {
     Ok(match args.get("policy") {
         "odin" => Policy::Odin { alpha: args.usize("alpha")? },
@@ -101,16 +122,27 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         .flag("duration", "10", "interference duration (queries)")
         .flag("seed", "42", "rng seed")
         .flag("spatial", "64", "model input resolution")
-        .flag("db", "", "timing database json (default: synthetic)")
+        .opt("db", "timing database json (default: synthetic)")
+        .opt(
+            "scenario",
+            "dynamic scenario (builtin name or JSON file); runs the online \
+             loop for odin + lls/oracle/static baselines",
+        )
+        .flag("jobs", "1", "worker threads for the scenario policy sweep")
+        .flag("out", "results", "output dir for scenario JSON ('' = none)")
         .switch("no-interference", "run a clean window");
     let args = cmd.parse(argv)?;
-    let spec = models::build(args.get("model"), args.usize("spatial")?)
-        .ok_or_else(|| err!("unknown model {}", args.get("model")))?;
-    let db = if args.get("db").is_empty() {
-        synthesize(&spec, args.u64("seed")?)
-    } else {
-        TimingDb::load(args.get("db")).map_err(OdinError::msg)?
-    };
+    if !args.get("scenario").is_empty() {
+        return cmd_simulate_scenario(&args);
+    }
+    // the policy-sweep flags only exist in scenario mode; reject them
+    // here rather than silently ignoring them
+    for flag in ["jobs", "out"] {
+        if args.was_given(flag) {
+            bail!("--{flag} only applies to `simulate --scenario <name|file>`");
+        }
+    }
+    let db = load_sim_db(&args)?;
     let eps = args.usize("eps")?;
     let queries = args.usize("queries")?;
     let schedule = if args.has("no-interference") {
@@ -149,9 +181,73 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `odin simulate --scenario <name|file>`: run the online control loop
+/// against one dynamic scenario, with LLS, the exhaustive oracle, and a
+/// static pipeline as baselines under the identical scenario stream, and
+/// emit the per-window JSON (byte-identical for every `--jobs` value).
+fn cmd_simulate_scenario(args: &Args) -> Result<()> {
+    let db = load_sim_db(args)?;
+    // scenario mode fixes the horizon/EPs (from the scenario) and the
+    // policy set (odin + all baselines); reject contradicting flags
+    // instead of silently ignoring them
+    for flag in ["policy", "queries", "eps", "period", "duration"] {
+        if !args.was_given(flag) {
+            continue;
+        }
+        bail!(
+            "--{flag} cannot be combined with --scenario: the scenario \
+             file sets the horizon and EPs, and the online loop always \
+             runs odin + lls/oracle/static under the identical stream"
+        );
+    }
+    if args.has("no-interference") {
+        bail!("--no-interference cannot be combined with --scenario");
+    }
+    let scenario = resolve(args.get("scenario"))?;
+    let policies = [
+        Policy::Odin { alpha: args.usize("alpha")? },
+        Policy::Lls,
+        Policy::Oracle,
+        Policy::Static,
+    ];
+    let jobs = args.usize("jobs")?.max(1);
+    let (schedule, results) = run_scenario(&db, &scenario, &policies, jobs);
+    for (policy, r) in policies.iter().zip(&results) {
+        let s = SimSummary::of(r);
+        println!(
+            "{}",
+            s.row(&format!(
+                "{}/{}/{}",
+                args.get("model"),
+                scenario.name,
+                policy.label()
+            ))
+        );
+    }
+    let doc_scenario = scenario_json(&scenario, &schedule, &policies, &results);
+    println!(
+        "{}",
+        summary_line(&scenario.name, doc_scenario.get("summary"))
+    );
+    if !args.get("out").is_empty() {
+        let dir = std::path::Path::new(args.get("out"));
+        std::fs::create_dir_all(dir)?;
+        let doc = Value::obj(vec![
+            ("model", Value::from(args.get("model"))),
+            ("scenario", doc_scenario),
+            ("slo_level", Value::from(DYN_SLO_LEVEL)),
+            ("window", Value::from(DYN_WINDOW)),
+        ]);
+        let path = dir.join(format!("scenario_{}.json", scenario.name));
+        odin::json::write_file(&path, &doc)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
 fn cmd_experiment(argv: &[String]) -> Result<()> {
     let cmd = Command::new("experiment", "regenerate paper tables/figures")
-        .positional("id", "table1|fig1|fig3..fig10|summary|all")
+        .positional("id", "table1|fig1|fig3..fig10|summary|ablation|dynamic|all")
         .flag("out", "results", "output directory ('' = stdout only)")
         .flag("queries", "4000", "queries per simulation window")
         .flag("seed", "42", "rng seed")

@@ -1,8 +1,15 @@
-//! Serving-side reporting: latency/throughput over a served batch.
+//! Serving-side reporting: latency/throughput over a served batch, plus
+//! a per-window latency track mirroring the simulator's window metrics —
+//! a live run of a dynamic scenario reports in the same currency as the
+//! `dynamic` experiment.
 
 use crate::util::stats::Summary;
 
 use super::server::Completion;
+
+/// Completion-order window width for the live per-window track (the live
+/// path serves tens of queries, not thousands, so the window is small).
+pub const SERVE_WINDOW: usize = 8;
 
 #[derive(Clone, Debug)]
 pub struct ServeReport {
@@ -11,30 +18,41 @@ pub struct ServeReport {
     /// Completed queries / wall-clock of the batch.
     pub throughput: f64,
     pub serial_queries: usize,
+    /// Distribution of per-window mean latencies ([`SERVE_WINDOW`]-query
+    /// chunks in completion order): windows hit by interference or by
+    /// exploration phases surface as the max.
+    pub window_latency: Summary,
 }
 
 impl ServeReport {
     pub fn of(completions: &[Completion], wall_seconds: f64) -> ServeReport {
         assert!(!completions.is_empty());
         let lat: Vec<f64> = completions.iter().map(|c| c.latency).collect();
+        let windows: Vec<f64> = lat
+            .chunks(SERVE_WINDOW)
+            .map(|w| w.iter().sum::<f64>() / w.len() as f64)
+            .collect();
         ServeReport {
             queries: completions.len(),
             latency: Summary::of(&lat),
             throughput: completions.len() as f64 / wall_seconds.max(1e-12),
             serial_queries: completions.iter().filter(|c| c.serial).count(),
+            window_latency: Summary::of(&windows),
         }
     }
 
     pub fn print(&self, label: &str) {
         println!(
             "{label}: {} queries  lat mean={:.1}ms p50={:.1}ms p99={:.1}ms  \
-             throughput={:.2} q/s  serial={}",
+             throughput={:.2} q/s  serial={}  window lat {:.1}..{:.1}ms",
             self.queries,
             self.latency.mean * 1e3,
             self.latency.p50 * 1e3,
             self.latency.p99 * 1e3,
             self.throughput,
             self.serial_queries,
+            self.window_latency.min * 1e3,
+            self.window_latency.max * 1e3,
         );
     }
 }
@@ -67,5 +85,25 @@ mod tests {
         assert_eq!(r.serial_queries, 1);
         assert!((r.throughput - 4.0).abs() < 1e-9);
         assert!((r.latency.mean - 0.2).abs() < 1e-12);
+        // 2 queries fit one SERVE_WINDOW chunk: window mean == batch mean
+        assert_eq!(r.window_latency.n, 1);
+        assert!((r.window_latency.mean - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn window_latency_tracks_chunks() {
+        let comps: Vec<Completion> = (0..SERVE_WINDOW * 2)
+            .map(|i| Completion {
+                id: i,
+                latency: if i < SERVE_WINDOW { 0.1 } else { 0.3 },
+                stage_times: vec![0.1],
+                output: Tensor::zeros(&[1]),
+                serial: false,
+            })
+            .collect();
+        let r = ServeReport::of(&comps, 1.0);
+        assert_eq!(r.window_latency.n, 2);
+        assert!((r.window_latency.min - 0.1).abs() < 1e-12);
+        assert!((r.window_latency.max - 0.3).abs() < 1e-12);
     }
 }

@@ -16,10 +16,12 @@
 
 use std::sync::Arc;
 
-use crate::coordinator::{optimal_config, Lls, Monitor, Odin, RebalanceResult, Rebalancer};
+use crate::coordinator::{
+    optimal_config, ControlPolicy, Lls, Odin, OnlineController, RebalanceResult,
+};
 use crate::database::TimingDb;
 use crate::interference::Schedule;
-use crate::pipeline::{stage_times_into, CostModel, PipelineConfig};
+use crate::pipeline::{stage_times_into, PipelineConfig};
 use crate::util::ThreadPool;
 
 /// Which rebalancing policy drives the run.
@@ -45,6 +47,16 @@ impl Policy {
             Policy::Static => "static".to_string(),
         }
     }
+
+    /// The coordinator-side brain implementing this policy.
+    pub fn control(self) -> ControlPolicy {
+        match self {
+            Policy::Odin { alpha } => ControlPolicy::Odin(Odin::new(alpha)),
+            Policy::Lls => ControlPolicy::Lls(Lls::new()),
+            Policy::Oracle => ControlPolicy::Oracle,
+            Policy::Static => ControlPolicy::Static,
+        }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -53,11 +65,23 @@ pub struct SimConfig {
     pub policy: Policy,
     /// Monitor trigger threshold (relative bottleneck change).
     pub detect_threshold: f64,
+    /// Online-loop sampling period in queries: the controller observes
+    /// stage times only at multiples of `window` (the paper's runtime
+    /// monitors periodically, not per query). None = observe every query,
+    /// the historical behavior.
+    pub window: Option<usize>,
 }
 
 impl SimConfig {
     pub fn new(num_eps: usize, policy: Policy) -> SimConfig {
-        SimConfig { num_eps, policy, detect_threshold: 0.05 }
+        SimConfig { num_eps, policy, detect_threshold: 0.05, window: None }
+    }
+
+    /// Sample the online loop once per `window` queries.
+    pub fn with_window(mut self, window: usize) -> SimConfig {
+        assert!(window > 0, "window must be >= 1");
+        self.window = Some(window);
+        self
     }
 }
 
@@ -124,22 +148,13 @@ pub fn simulate(db: &TimingDb, schedule: &Schedule, cfg: &SimConfig) -> SimResul
     let (initial, clean_bottleneck) = optimal_config(db, &clean, n);
     let peak_throughput = 1.0 / clean_bottleneck;
 
-    let odin2: Odin;
-    let lls = Lls::new();
-    let rebalancer: Option<&dyn Rebalancer> = match cfg.policy {
-        Policy::Odin { alpha } => {
-            odin2 = Odin::new(alpha);
-            Some(&odin2)
-        }
-        Policy::Lls => Some(&lls),
-        Policy::Oracle | Policy::Static => None,
-    };
+    let mut controller =
+        OnlineController::new(cfg.policy.control(), cfg.detect_threshold);
 
     let mut config = initial;
-    let mut monitor = Monitor::new(cfg.detect_threshold);
     let mut times = Vec::with_capacity(n);
     stage_times_into(&config, db, &clean, &mut times);
-    monitor.set_baseline_times(&times);
+    controller.bless(&times);
 
     // pipeline state: when each stage becomes free, and completion time
     // of the query admitted `active` slots ago (admission token)
@@ -166,18 +181,14 @@ pub fn simulate(db: &TimingDb, schedule: &Schedule, cfg: &SimConfig) -> SimResul
             last_sc.clone_from(sc);
         }
 
-        // --- detection & rebalancing phase -------------------------
-        if rebalancer.is_some() || cfg.policy == Policy::Oracle {
-            if let Some(_trigger) = monitor.observe(&times) {
-                let cost = CostModel::new(db, sc);
+        // --- online-loop tick: detect, then rebalance ---------------
+        // the controller samples stage times once per observation window
+        // (cfg.window); between boundaries it runs open-loop
+        if controller.is_active() && cfg.window.is_none_or(|w| q % w == 0) {
+            if let Some(_trigger) = controller.observe(&times) {
                 let before = 1.0 / bottleneck(&times);
-                let result: RebalanceResult = match cfg.policy {
-                    Policy::Oracle => {
-                        let (c, b) = optimal_config(db, sc, n);
-                        RebalanceResult { config: c, trials: 1, throughput: 1.0 / b }
-                    }
-                    _ => rebalancer.unwrap().rebalance(&config, &cost),
-                };
+                let result: RebalanceResult =
+                    controller.rebalance(&config, db, sc);
                 // serial processing of `trials` queries (capped by the
                 // remaining query budget)
                 let serial_queries = result.trials.min(queries - q);
@@ -202,7 +213,7 @@ pub fn simulate(db: &TimingDb, schedule: &Schedule, cfg: &SimConfig) -> SimResul
                 }
                 config = result.config;
                 stage_times_into(&config, db, schedule.at(q.min(queries - 1)), &mut times);
-                monitor.set_baseline_times(&times);
+                controller.bless(&times);
                 last_sc.clear(); // config changed: invalidate the cache
                 rebalances.push(RebalanceEvent {
                     query: q.min(queries - 1),
@@ -278,6 +289,27 @@ pub fn simulate_many(
     let db = Arc::new(db.clone());
     let pool = ThreadPool::new(jobs);
     pool.map(runs.to_vec(), move |(s, c)| simulate(&db, &s, &c))
+}
+
+/// Run several policy configurations against ONE shared schedule (the
+/// dynamic-scenario case: every policy faces the identical stream).
+/// Unlike [`simulate_many`], the expanded schedule — up to
+/// queries × eps state for a large scenario — is cloned at most once
+/// for the pool's `'static` bound instead of once per run.
+pub fn simulate_policies(
+    db: &TimingDb,
+    schedule: &Schedule,
+    cfgs: &[SimConfig],
+    jobs: usize,
+) -> Vec<SimResult> {
+    let jobs = jobs.max(1).min(cfgs.len().max(1));
+    if jobs <= 1 {
+        return cfgs.iter().map(|c| simulate(db, schedule, c)).collect();
+    }
+    let db = Arc::new(db.clone());
+    let schedule = Arc::new(schedule.clone());
+    let pool = ThreadPool::new(jobs);
+    pool.map(cfgs.to_vec(), move |c| simulate(&db, &schedule, &c))
 }
 
 fn bottleneck(times: &[f64]) -> f64 {
@@ -485,12 +517,83 @@ mod tests {
     }
 
     #[test]
+    fn window_gating_defers_detection_to_boundaries() {
+        // interference arrives at q=50; with an observation window larger
+        // than the run, the only sampling point is q=0 (clean), so the
+        // online loop can never fire — while the per-query loop does
+        let db = db();
+        let schedule = Schedule::from_events(4, 400, &[(50, 2, 9, 300)]);
+        let every_query = simulate(
+            &db,
+            &schedule,
+            &SimConfig::new(4, Policy::Odin { alpha: 5 }),
+        );
+        assert!(!every_query.rebalances.is_empty());
+        let gated = simulate(
+            &db,
+            &schedule,
+            &SimConfig::new(4, Policy::Odin { alpha: 5 }).with_window(10_000),
+        );
+        assert!(gated.rebalances.is_empty());
+        // a realistic window still reacts, just at boundary granularity
+        let windowed = simulate(
+            &db,
+            &schedule,
+            &SimConfig::new(4, Policy::Odin { alpha: 5 }).with_window(25),
+        );
+        assert!(!windowed.rebalances.is_empty());
+        assert!(windowed.rebalances.len() <= every_query.rebalances.len() + 1);
+    }
+
+    #[test]
+    fn windowed_online_loop_still_beats_static() {
+        let db = db();
+        let schedule = sched(100, 100, 2000);
+        let st = simulate(&db, &schedule, &SimConfig::new(4, Policy::Static));
+        let od = simulate(
+            &db,
+            &schedule,
+            &SimConfig::new(4, Policy::Odin { alpha: 5 }).with_window(50),
+        );
+        assert!(
+            od.achieved_throughput() > st.achieved_throughput(),
+            "windowed odin {} <= static {}",
+            od.achieved_throughput(),
+            st.achieved_throughput()
+        );
+    }
+
+    #[test]
     fn simulate_many_matches_simulate() {
         let db = db();
         let runs = vec![(sched(50, 20, 400), SimConfig::new(4, Policy::Lls))];
         let many = simulate_many(&db, &runs, 8);
         let one = simulate(&db, &runs[0].0, &runs[0].1);
         assert_eq!(many[0].latencies, one.latencies);
+    }
+
+    #[test]
+    fn simulate_policies_matches_per_run_simulate_and_is_jobs_invariant() {
+        let db = db();
+        let schedule = sched(50, 30, 600);
+        let cfgs: Vec<SimConfig> = [
+            Policy::Odin { alpha: 2 },
+            Policy::Lls,
+            Policy::Oracle,
+            Policy::Static,
+        ]
+        .into_iter()
+        .map(|p| SimConfig::new(4, p))
+        .collect();
+        let serial = simulate_policies(&db, &schedule, &cfgs, 1);
+        let parallel = simulate_policies(&db, &schedule, &cfgs, 4);
+        assert_eq!(serial.len(), cfgs.len());
+        for ((a, b), c) in serial.iter().zip(&parallel).zip(&cfgs) {
+            assert_eq!(a.latencies, b.latencies);
+            assert_eq!(a.rebalances.len(), b.rebalances.len());
+            let direct = simulate(&db, &schedule, c);
+            assert_eq!(a.latencies, direct.latencies);
+        }
     }
 }
 

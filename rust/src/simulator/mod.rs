@@ -9,7 +9,12 @@
 pub mod engine;
 pub mod metrics;
 pub mod slo;
+pub mod window;
 
-pub use engine::{simulate, simulate_many, Policy, RebalanceEvent, SimConfig, SimResult};
+pub use engine::{
+    simulate, simulate_many, simulate_policies, Policy, RebalanceEvent, SimConfig,
+    SimResult,
+};
 pub use metrics::SimSummary;
 pub use slo::{slo_violations, SloReport};
+pub use window::{window_metrics, windows_json, WindowMetrics, DEFAULT_WINDOW};

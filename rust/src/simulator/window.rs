@@ -1,0 +1,200 @@
+//! Per-window accounting of a simulation run — the time axis of the
+//! dynamic-interference story.
+//!
+//! The online loop reasons in observation windows; this module reports in
+//! the same currency: chop a run into fixed-size query windows and emit
+//! latency / throughput / SLO-violation numbers per window, so a dynamic
+//! scenario renders as a timeline (the shape of paper Fig. 3, generalized
+//! to every scenario) instead of one flattened distribution.
+
+use crate::interference::Schedule;
+use crate::json::Value;
+
+use super::engine::SimResult;
+use super::metrics::windowed_throughput;
+
+/// Default reporting window (queries) for dynamic scenarios.
+pub const DEFAULT_WINDOW: usize = 100;
+
+/// Metrics of one `window`-query chunk of a run.
+#[derive(Clone, Debug)]
+pub struct WindowMetrics {
+    pub index: usize,
+    /// Query span `[start, end)` of the window.
+    pub start: usize,
+    pub end: usize,
+    pub lat_mean: f64,
+    pub lat_max: f64,
+    /// Mean sustained (configuration) throughput over the window — the
+    /// Fig-6 quality metric.
+    pub tput_mean: f64,
+    /// Wall throughput: queries / simulated span, exploration charged.
+    pub wall_tput: f64,
+    /// Queries processed serially (rebalancing phases) in the window.
+    pub serial_queries: usize,
+    /// Rebalancing episodes that completed inside the window.
+    pub rebalances: usize,
+    /// Queries whose sustained throughput fell below `level × peak`.
+    pub slo_violations: usize,
+    /// Fraction of (query, EP) slots under interference in the window.
+    pub interference_load: f64,
+}
+
+/// Chop `r` into `window`-query chunks (the last may be short). `level`
+/// is the SLO level as a fraction of the run's interference-free peak.
+pub fn window_metrics(
+    r: &SimResult,
+    schedule: &Schedule,
+    window: usize,
+    level: f64,
+) -> Vec<WindowMetrics> {
+    assert!(window >= 1, "window must be >= 1");
+    assert!(level > 0.0 && level <= 1.0, "SLO level {level}");
+    let n = r.latencies.len();
+    let target = level * r.peak_throughput;
+    // wall throughput (queries / simulated span, exploration charged)
+    // comes from the one existing implementation of the chunk-span
+    // accounting; its chunk boundaries are identical to ours
+    let wall = windowed_throughput(r, window);
+    let mut out = Vec::with_capacity(wall.len());
+    let mut start = 0usize;
+    while start < n {
+        let end = (start + window).min(n);
+        let lats = &r.latencies[start..end];
+        let lat_mean = lats.iter().sum::<f64>() / lats.len() as f64;
+        let lat_max = lats.iter().copied().fold(0.0f64, f64::max);
+        let tput_mean = r.config_throughput[start..end].iter().sum::<f64>()
+            / (end - start) as f64;
+        let wall_tput = wall[out.len()];
+        let serial_queries =
+            r.serial[start..end].iter().filter(|&&s| s).count();
+        let rebalances = r
+            .rebalances
+            .iter()
+            .filter(|e| e.query >= start && e.query < end)
+            .count();
+        let slo_violations = r.config_throughput[start..end]
+            .iter()
+            .filter(|&&t| t < target)
+            .count();
+        let active: usize = (start..end)
+            .map(|q| schedule.at(q).iter().filter(|&&s| s != 0).count())
+            .sum();
+        let interference_load =
+            active as f64 / ((end - start) * schedule.num_eps) as f64;
+        out.push(WindowMetrics {
+            index: out.len(),
+            start,
+            end,
+            lat_mean,
+            lat_max,
+            tput_mean,
+            wall_tput,
+            serial_queries,
+            rebalances,
+            slo_violations,
+            interference_load,
+        });
+        start = end;
+    }
+    out
+}
+
+/// Deterministic JSON array of per-window rows (stable key order via the
+/// BTreeMap-backed emitter — byte-identical across `--jobs` values).
+pub fn windows_json(windows: &[WindowMetrics]) -> Value {
+    Value::arr(
+        windows
+            .iter()
+            .map(|w| {
+                Value::obj(vec![
+                    ("window", Value::from(w.index)),
+                    ("start", Value::from(w.start)),
+                    ("end", Value::from(w.end)),
+                    ("lat_mean", Value::from(w.lat_mean)),
+                    ("lat_max", Value::from(w.lat_max)),
+                    ("tput_mean", Value::from(w.tput_mean)),
+                    ("wall_tput", Value::from(w.wall_tput)),
+                    ("serial_queries", Value::from(w.serial_queries)),
+                    ("rebalances", Value::from(w.rebalances)),
+                    ("slo_violations", Value::from(w.slo_violations)),
+                    ("interference_load", Value::from(w.interference_load)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::database::synth::synthesize;
+    use crate::interference::dynamic::builtin;
+    use crate::models;
+    use crate::simulator::engine::{simulate, Policy, SimConfig};
+
+    fn run(policy: Policy) -> (SimResult, Schedule) {
+        let db = synthesize(&models::vgg16(64), 1);
+        let schedule = builtin("burst").unwrap().compile();
+        let r = simulate(
+            &db,
+            &schedule,
+            &SimConfig::new(4, policy).with_window(DEFAULT_WINDOW),
+        );
+        (r, schedule)
+    }
+
+    #[test]
+    fn windows_partition_the_run() {
+        let (r, schedule) = run(Policy::Odin { alpha: 2 });
+        let ws = window_metrics(&r, &schedule, DEFAULT_WINDOW, 0.7);
+        assert_eq!(ws.len(), r.latencies.len().div_ceil(DEFAULT_WINDOW));
+        assert_eq!(ws[0].start, 0);
+        for (i, w) in ws.iter().enumerate() {
+            assert_eq!(w.index, i);
+            if i > 0 {
+                assert_eq!(w.start, ws[i - 1].end);
+            }
+            assert!(w.lat_mean > 0.0 && w.lat_mean <= w.lat_max);
+            assert!(w.tput_mean > 0.0 && w.wall_tput > 0.0);
+            assert!(w.slo_violations <= w.end - w.start);
+            assert!((0.0..=1.0).contains(&w.interference_load));
+        }
+        assert_eq!(ws.last().unwrap().end, r.latencies.len());
+    }
+
+    #[test]
+    fn window_totals_match_run_totals() {
+        let (r, schedule) = run(Policy::Odin { alpha: 5 });
+        let ws = window_metrics(&r, &schedule, 128, 0.7);
+        let serial: usize = ws.iter().map(|w| w.serial_queries).sum();
+        assert_eq!(serial, r.serial.iter().filter(|&&s| s).count());
+        let rebalances: usize = ws.iter().map(|w| w.rebalances).sum();
+        assert_eq!(rebalances, r.rebalances.len());
+    }
+
+    #[test]
+    fn quiet_windows_have_no_interference_and_no_violations() {
+        // burst starts at q=100: window 0 is interference-free
+        let (r, schedule) = run(Policy::Static);
+        let ws = window_metrics(&r, &schedule, DEFAULT_WINDOW, 0.7);
+        assert_eq!(ws[0].interference_load, 0.0);
+        assert_eq!(ws[0].slo_violations, 0);
+        // the first burst window (100..250 on EP 1) has load and, for the
+        // static policy, degraded throughput
+        assert!(ws[1].interference_load > 0.0);
+        assert!(ws[1].tput_mean < ws[0].tput_mean);
+    }
+
+    #[test]
+    fn windows_json_shape() {
+        let (r, schedule) = run(Policy::Lls);
+        let ws = window_metrics(&r, &schedule, 500, 0.7);
+        let v = windows_json(&ws);
+        let arr = v.as_arr().unwrap();
+        assert_eq!(arr.len(), ws.len());
+        assert_eq!(arr[0].get("window").as_usize(), Some(0));
+        assert_eq!(arr[0].get("start").as_usize(), Some(0));
+        assert!(arr[0].get("lat_mean").as_f64().unwrap() > 0.0);
+    }
+}

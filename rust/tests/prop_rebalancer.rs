@@ -1,0 +1,211 @@
+//! Property tests for the ODIN rebalancer (Algorithm 1), driven by
+//! randomized cost tables and α values through the crate's own seeded
+//! xorshift-family PRNG (`util::rng`, xoshiro256**) and property harness
+//! (`util::proptest`) — no external test dependencies.
+//!
+//! Invariants under test:
+//!  * layer count is conserved across every trial (the configuration is
+//!    always a partition of the model's units);
+//!  * every intermediate `PipelineConfig` the rebalancer evaluates is
+//!    valid: correct unit total, and never a fully-empty pipeline;
+//!  * the loop terminates within `MAX_TRIALS` for any cost table and α,
+//!    and never returns a configuration worse than its input.
+
+use odin::coordinator::eval::StageEval;
+use odin::coordinator::{Odin, Rebalancer, MAX_TRIALS};
+use odin::database::TimingDb;
+use odin::interference::NUM_SCENARIOS;
+use odin::pipeline::{CostModel, PipelineConfig};
+use odin::util::proptest::Property;
+use odin::util::Rng;
+
+/// A raw random cost table: `costs[stage][unit]`, evaluated exactly like
+/// the database path (stage time = sum of its units' costs).
+struct TableEval {
+    costs: Vec<Vec<f64>>,
+    probes: usize,
+}
+
+impl TableEval {
+    fn random(rng: &mut Rng, stages: usize, units: usize, lo: f64, hi: f64) -> TableEval {
+        let costs = (0..stages)
+            .map(|_| (0..units).map(|_| rng.uniform(lo, hi)).collect())
+            .collect();
+        TableEval { costs, probes: 0 }
+    }
+}
+
+impl StageEval for TableEval {
+    fn stage_times(&mut self, config: &PipelineConfig, out: &mut Vec<f64>) {
+        self.probes += 1;
+        out.clear();
+        for (s, (lo, hi)) in config.ranges().into_iter().enumerate() {
+            out.push(self.costs[s][lo..hi].iter().sum());
+        }
+    }
+
+    fn probes(&self) -> usize {
+        self.probes
+    }
+}
+
+/// Wrapper that checks every intermediate configuration the rebalancer
+/// asks about; violations are recorded (not panicked) so the property
+/// harness can shrink to a minimal counterexample.
+struct ValidatingEval<E> {
+    inner: E,
+    units: usize,
+    valid: bool,
+    configs_seen: usize,
+}
+
+impl<E: StageEval> ValidatingEval<E> {
+    fn new(inner: E, units: usize) -> ValidatingEval<E> {
+        ValidatingEval { inner, units, valid: true, configs_seen: 0 }
+    }
+}
+
+impl<E: StageEval> StageEval for ValidatingEval<E> {
+    fn stage_times(&mut self, config: &PipelineConfig, out: &mut Vec<f64>) {
+        self.configs_seen += 1;
+        if config.check(self.units).is_err() || config.active_stages() == 0 {
+            self.valid = false;
+        }
+        self.inner.stage_times(config, out);
+    }
+
+    fn probes(&self) -> usize {
+        self.inner.probes()
+    }
+}
+
+/// Scatter `units` layers over `stages` stages uniformly at random.
+fn random_config(rng: &mut Rng, units: usize, stages: usize) -> PipelineConfig {
+    let mut counts = vec![0usize; stages];
+    for _ in 0..units {
+        counts[rng.below(stages)] += 1;
+    }
+    PipelineConfig::new(counts)
+}
+
+fn bottleneck(times: &[f64]) -> f64 {
+    times.iter().copied().fold(0.0f64, f64::max)
+}
+
+#[test]
+fn prop_layer_count_conserved_and_intermediates_valid() {
+    let p = Property::new(|r: &mut Rng| {
+        let stages = r.range(2, 6);
+        let units = r.range(stages, 40);
+        let alpha = r.range(1, 12);
+        (stages, units, alpha, r.next_u64())
+    });
+    p.check(0xD1AB10, 120, |&(stages, units, alpha, seed)| {
+        let mut rng = Rng::new(seed);
+        let start = random_config(&mut rng, units, stages);
+        let table = TableEval::random(&mut rng, stages, units, 0.05, 1.0);
+        let mut eval = ValidatingEval::new(table, units);
+        let r = Odin::new(alpha).rebalance_with(&start, &mut eval);
+        eval.valid
+            && eval.configs_seen > 0
+            && r.config.check(units).is_ok()
+            && r.config.total_units() == start.total_units()
+    });
+}
+
+#[test]
+fn prop_terminates_within_max_trials_on_adversarial_tables() {
+    // extreme cost spreads (1e-6 .. 10) and flat plateau tables both must
+    // terminate within the hard cap, for any α up to far beyond practical
+    let p = Property::new(|r: &mut Rng| {
+        let stages = r.range(2, 8);
+        let units = r.range(stages, 48);
+        let alpha = r.range(1, 64);
+        let flat = r.chance(0.3);
+        (stages, units, alpha, flat, r.next_u64())
+    });
+    p.check(0x7E57, 100, |&(stages, units, alpha, flat, seed)| {
+        let mut rng = Rng::new(seed);
+        let start = random_config(&mut rng, units, stages);
+        let mut table = if flat {
+            // plateau everywhere: every move keeps the same bottleneck,
+            // exercising the plateau-escape branch (lines 24–27)
+            TableEval { costs: vec![vec![0.25; units]; stages], probes: 0 }
+        } else {
+            TableEval::random(&mut rng, stages, units, 1e-6, 10.0)
+        };
+        let mut times = Vec::new();
+        table.stage_times(&start, &mut times);
+        let t0 = if bottleneck(&times) > 0.0 { 1.0 / bottleneck(&times) } else { 0.0 };
+        let mut eval = ValidatingEval::new(table, units);
+        let r = Odin::new(alpha).rebalance_with(&start, &mut eval);
+        eval.valid
+            && r.trials <= MAX_TRIALS
+            && r.throughput >= t0 * (1.0 - 1e-9)
+    });
+}
+
+#[test]
+fn prop_database_path_matches_invariants() {
+    // same invariants through the real TimingDb/CostModel path with a
+    // randomized m×(n+1) cost matrix and a random interference vector
+    let p = Property::new(|r: &mut Rng| {
+        let stages = r.range(2, 6);
+        let units = r.range(stages, 24);
+        let alpha = r.range(1, 16);
+        (stages, units, alpha, r.next_u64())
+    });
+    p.check(0x0D1B, 80, |&(stages, units, alpha, seed)| {
+        let mut rng = Rng::new(seed);
+        // random database: scenario columns are >= the clean column, as
+        // TimingDb::validate requires of real measurements
+        let times: Vec<Vec<f64>> = (0..units)
+            .map(|_| {
+                let base = rng.uniform(0.01, 1.0);
+                let mut row = vec![base];
+                for _ in 0..NUM_SCENARIOS {
+                    row.push(base * (1.0 + rng.uniform(0.0, 2.0)));
+                }
+                row
+            })
+            .collect();
+        let names = (0..units).map(|u| format!("u{u}")).collect();
+        let db = TimingDb::new("prop", names, times, "synthetic");
+        let sc: Vec<usize> =
+            (0..stages).map(|_| rng.below(NUM_SCENARIOS + 1)).collect();
+        let cost = CostModel::new(&db, &sc);
+        let start = random_config(&mut rng, units, stages);
+        let t0 = cost.throughput(&start);
+        let r = Odin::new(alpha).rebalance(&start, &cost);
+        r.config.check(units).is_ok()
+            && r.trials <= MAX_TRIALS
+            && r.throughput >= t0 * (1.0 - 1e-9)
+    });
+}
+
+#[test]
+fn prop_alpha_monotone_trials_on_random_tables() {
+    // a larger exploration budget never runs fewer trials on the same
+    // deterministic table (γ only resets on improvement, which is
+    // input-independent of α until the smaller budget stops)
+    let p = Property::new(|r: &mut Rng| {
+        let stages = r.range(2, 5);
+        let units = r.range(stages * 2, 32);
+        (stages, units, r.next_u64())
+    });
+    p.check(0xA1FA, 60, |&(stages, units, seed)| {
+        let mut rng = Rng::new(seed);
+        let start = random_config(&mut rng, units, stages);
+        let costs: Vec<Vec<f64>> = (0..stages)
+            .map(|_| (0..units).map(|_| rng.uniform(0.05, 1.0)).collect())
+            .collect();
+        let run = |alpha: usize| {
+            let mut eval = TableEval { costs: costs.clone(), probes: 0 };
+            Odin::new(alpha).rebalance_with(&start, &mut eval)
+        };
+        let r2 = run(2);
+        let r10 = run(10);
+        r10.trials >= r2.trials
+            && r10.throughput >= r2.throughput * (1.0 - 1e-9)
+    });
+}

@@ -1,0 +1,127 @@
+//! Integration coverage for scenario parsing edge cases through the
+//! public API (ISSUE 2 satellite): every malformed input must surface as
+//! an `OdinError` with context — never a panic — exactly as the CLI's
+//! `--scenario` flag would hit them.
+
+use odin::interference::dynamic::{resolve, DynamicScenario, BUILTIN_NAMES};
+use odin::util::error::OdinError;
+
+fn rendered(e: &OdinError) -> String {
+    format!("{e:#}")
+}
+
+#[test]
+fn empty_trace_and_phaseless_scenarios_error() {
+    for text in [
+        r#"{"name": "void"}"#,
+        r#"{"name": "void", "phases": []}"#,
+        r#"{"name": "void", "trace": []}"#,
+        r#"{"name": "void", "phases": [], "trace": []}"#,
+    ] {
+        let e = DynamicScenario::from_json_str(text).unwrap_err();
+        assert!(rendered(&e).contains("empty"), "{text}: {e:#}");
+    }
+}
+
+#[test]
+fn overlapping_phases_error_names_both_phases() {
+    let text = r#"{
+      "name": "clash", "eps": 4, "queries": 1000,
+      "phases": [
+        {"kind": "task", "start": 0, "end": 600, "ep": 2, "scenario": 5},
+        {"kind": "ramp", "start": 500, "end": 900, "ep": 2, "levels": [1, 2]}
+      ]
+    }"#;
+    let e = DynamicScenario::from_json_str(text).unwrap_err();
+    let msg = rendered(&e);
+    assert!(msg.contains("overlap"), "{msg}");
+    assert!(msg.contains("phase 0") && msg.contains("phase 1"), "{msg}");
+}
+
+#[test]
+fn out_of_order_trace_timestamps_error() {
+    let text = r#"{
+      "name": "rewind",
+      "trace": [
+        {"at": 100, "ep": 0, "scenario": 3},
+        {"at": 50, "ep": 1, "scenario": 4}
+      ]
+    }"#;
+    let e = DynamicScenario::from_json_str(text).unwrap_err();
+    assert!(rendered(&e).contains("out of order"), "{e:#}");
+}
+
+#[test]
+fn unknown_scenario_name_errors_with_catalogue() {
+    let e = resolve("tsunami").unwrap_err();
+    let msg = rendered(&e);
+    for name in BUILTIN_NAMES {
+        assert!(msg.contains(name), "{msg} missing builtin {name}");
+    }
+}
+
+#[test]
+fn malformed_file_reports_path_and_location() {
+    let path = std::env::temp_dir().join(format!(
+        "odin_scenario_parse_{}.json",
+        std::process::id()
+    ));
+    std::fs::write(&path, "{\n  \"phases\": [nope]\n}").unwrap();
+    let e = DynamicScenario::load(path.to_str().unwrap()).unwrap_err();
+    let msg = rendered(&e);
+    assert!(msg.contains("loading scenario file"), "{msg}");
+    assert!(msg.contains("parsing scenario json"), "{msg}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn valid_file_roundtrips_through_resolve_and_compiles() {
+    let path = std::env::temp_dir().join(format!(
+        "odin_scenario_ok_{}.json",
+        std::process::id()
+    ));
+    std::fs::write(
+        &path,
+        r#"{
+          "name": "two-tasks", "eps": 3, "queries": 300,
+          "phases": [
+            {"kind": "task", "start": 20, "end": 120, "ep": 0, "scenario": 9},
+            {"kind": "task", "start": 100, "end": 260, "ep": 1, "scenario": 2}
+          ]
+        }"#,
+    )
+    .unwrap();
+    let s = resolve(path.to_str().unwrap()).unwrap();
+    assert_eq!(s.name, "two-tasks");
+    let sched = s.compile();
+    assert_eq!(sched.num_queries(), 300);
+    assert_eq!(sched.at(25), &vec![9, 0, 0]);
+    assert_eq!(sched.at(110), &vec![9, 2, 0]);
+    assert_eq!(sched.at(270), &vec![0, 0, 0]);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn scenario_ids_and_eps_validated_through_json() {
+    // scenario id 13 (out of the Table-1 catalogue)
+    let e = DynamicScenario::from_json_str(
+        r#"{"phases": [{"kind": "task", "start": 0, "end": 10, "ep": 0,
+             "scenario": 13}]}"#,
+    )
+    .unwrap_err();
+    assert!(rendered(&e).contains("out of range"), "{e:#}");
+    // ep beyond the pipeline
+    let e = DynamicScenario::from_json_str(
+        r#"{"eps": 2, "phases": [{"kind": "task", "start": 0, "end": 10,
+             "ep": 7, "scenario": 1}]}"#,
+    )
+    .unwrap_err();
+    assert!(rendered(&e).contains("ep 7"), "{e:#}");
+    // non-integer field types are rejected, not coerced
+    let e = DynamicScenario::from_json_str(
+        r#"{"phases": [{"kind": "task", "start": "soon", "end": 10,
+             "ep": 0, "scenario": 1}]}"#,
+    )
+    .unwrap_err();
+    assert!(rendered(&e).contains("start"), "{e:#}");
+}
