@@ -56,6 +56,7 @@ fn main() -> Result<()> {
     println!("initial config {config}");
 
     let opts = ServerOpts { alpha, ..ServerOpts::default() };
+    let cores_per_ep = opts.cores_per_ep;
     let mut server = PipelineServer::new(service.handle(), config, opts);
 
     let mk_inputs = |n: usize, seed: u64| -> Vec<Tensor> {
@@ -78,10 +79,12 @@ fn main() -> Result<()> {
         placement: Placement::SameCores,
     };
     println!(
-        "\n== phase 2: stressor {} colocated ({queries} queries) ==",
+        "\n== phase 2: stressor {} colocated on EP 0 ({queries} queries) ==",
         scenario.label()
     );
-    let stress = Stressor::launch(scenario, None);
+    // SameCores placement derives EP 0's core list (affinity::ep_cores),
+    // so the stressor timeshares exactly the cores stage 0 is pinned to
+    let stress = Stressor::launch_on_ep(scenario, 0, 4, cores_per_ep);
     let t0 = Instant::now();
     let dirty = server.serve(mk_inputs(queries, 1000))?;
     ServeReport::of(&dirty, t0.elapsed().as_secs_f64()).print("interf  ");

@@ -219,6 +219,15 @@ impl Args {
         })
     }
 
+    /// Optional integer flag (declared with [`Command::opt`]): `None`
+    /// when absent, parse error surfaced when present but malformed.
+    pub fn usize_opt(&self, name: &str) -> Result<Option<usize>, CliError> {
+        if self.get(name).is_empty() {
+            return Ok(None);
+        }
+        self.usize(name).map(Some)
+    }
+
     pub fn f64(&self, name: &str) -> Result<f64, CliError> {
         self.get(name).parse().map_err(|_| CliError::BadValue {
             flag: format!("--{name}"),
@@ -303,6 +312,16 @@ mod tests {
         };
         assert!(h.contains("--db"));
         assert!(!h.contains("required"));
+    }
+
+    #[test]
+    fn usize_opt_distinguishes_absent_from_bad() {
+        let c = Command::new("x", "y").opt("queries", "count");
+        assert_eq!(c.parse(&sv(&[])).unwrap().usize_opt("queries").unwrap(), None);
+        let a = c.parse(&sv(&["--queries", "50"])).unwrap();
+        assert_eq!(a.usize_opt("queries").unwrap(), Some(50));
+        let a = c.parse(&sv(&["--queries", "x"])).unwrap();
+        assert!(a.usize_opt("queries").is_err());
     }
 
     #[test]

@@ -12,6 +12,15 @@
 
 use crate::util::Welford;
 
+/// Bounds of the auto-tuned detection threshold: never hair-trigger below
+/// 5% (measurement jitter on a quiet host), never blunter than 50% (a 1.5×
+/// bottleneck inflation must always fire).
+pub const THRESHOLD_MIN: f64 = 0.05;
+pub const THRESHOLD_MAX: f64 = 0.5;
+/// How many noise standard deviations a change must exceed to count as
+/// interference rather than jitter (the usual 3-sigma rule).
+pub const NOISE_GAIN: f64 = 3.0;
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Trigger {
     /// Bottleneck grew: interference appeared (or got worse).
@@ -63,6 +72,12 @@ impl Monitor {
     /// Improved — the bottleneck is not degraded AND some loaded stage's
     /// time shrank beyond the threshold (vs its blessed value), so a
     /// rebalance could reclaim the freed capacity.
+    ///
+    /// A non-finite baseline (`set_baseline(f64::INFINITY)`) means "bless
+    /// the next real observation": the serving path uses it at startup and
+    /// right after a rebalance, so the reference is always measured by the
+    /// same pinned stage workers that produce later observations, never by
+    /// an unpinned probe thread.
     pub fn observe(&mut self, stage_times: &[f64]) -> Option<Trigger> {
         let bottleneck = stage_times.iter().copied().fold(0.0f64, f64::max);
         if bottleneck <= 0.0 {
@@ -72,8 +87,12 @@ impl Monitor {
             self.baseline = Some(stage_times.to_vec());
             return None;
         };
-        self.noise.push(bottleneck);
         let base_bottleneck = base.iter().copied().fold(0.0f64, f64::max);
+        if !base_bottleneck.is_finite() {
+            self.set_baseline_times(stage_times);
+            return None;
+        }
+        self.noise.push(bottleneck);
         if bottleneck > base_bottleneck * (1.0 + self.threshold) {
             return Some(Trigger::Degraded);
         }
@@ -102,6 +121,38 @@ impl Monitor {
         } else {
             self.noise.std() / self.noise.mean()
         }
+    }
+
+    /// Observations accumulated into the noise tracker since the last
+    /// baseline (gates auto-tuning on having seen enough samples).
+    pub fn noise_samples(&self) -> usize {
+        self.noise.n() as usize
+    }
+
+    /// Restart noise accumulation without touching the baseline. Hosts
+    /// that know interference just receded (e.g. the scenario harness at
+    /// a stressor-era boundary) call this so [`autotune`](Self::autotune)
+    /// derives from quiet-only samples instead of a mix that straddles
+    /// the era.
+    pub fn reset_noise(&mut self) {
+        self.noise = Welford::default();
+    }
+
+    /// The detection threshold implied by a measured noise ratio:
+    /// [`NOISE_GAIN`] standard deviations of relative jitter, clamped to
+    /// [`THRESHOLD_MIN`]..[`THRESHOLD_MAX`]. Monotone (non-decreasing) in
+    /// the noise ratio by construction.
+    pub fn derived_threshold(noise_ratio: f64) -> f64 {
+        (NOISE_GAIN * noise_ratio.max(0.0)).clamp(THRESHOLD_MIN, THRESHOLD_MAX)
+    }
+
+    /// Re-derive `threshold` from the noise observed since the last
+    /// baseline. Callers invoke this during *quiet* (interference-free)
+    /// windows so the noise tracker reflects jitter, not real contention.
+    /// Returns the new threshold.
+    pub fn autotune(&mut self) -> f64 {
+        self.threshold = Self::derived_threshold(self.noise_ratio());
+        self.threshold
     }
 }
 
@@ -189,5 +240,76 @@ mod tests {
         m.set_baseline(0.2);
         assert_eq!(m.observe(&[]), None);
         assert_eq!(m.observe(&[0.0, 0.0]), None);
+    }
+
+    #[test]
+    fn infinite_baseline_blesses_first_observation() {
+        // the serving path's startup / post-rebalance handshake: an
+        // INFINITY baseline must not fire (neither Degraded nor the
+        // Improved fallback) — it adopts the first real observation
+        let mut m = Monitor::new(0.05);
+        m.set_baseline(f64::INFINITY);
+        assert_eq!(m.observe(&[0.1, 0.2]), None);
+        assert_eq!(m.baseline(), Some(0.2));
+        // and detection works normally from that blessed reference
+        assert_eq!(m.observe(&[0.1, 0.3]), Some(Trigger::Degraded));
+        // the blessing observation itself must not pollute the noise
+        // tracker (noise is measured against the blessed reference)
+        let mut m2 = Monitor::new(0.5);
+        m2.set_baseline(f64::INFINITY);
+        m2.observe(&[0.2]);
+        assert_eq!(m2.noise_samples(), 0);
+    }
+
+    #[test]
+    fn noise_ratio_quiet_vs_noisy_traces() {
+        let feed = |times: &[f64]| {
+            let mut m = Monitor::new(10.0); // never fires; just accumulate
+            m.set_baseline(1.0);
+            for &t in times {
+                m.observe(&[t]);
+            }
+            m.noise_ratio()
+        };
+        let quiet = feed(&[1.0, 1.001, 0.999, 1.0, 1.002, 0.998]);
+        let noisy = feed(&[1.0, 1.4, 0.6, 1.3, 0.7, 1.5]);
+        assert!(quiet < 0.01, "quiet trace noise {quiet}");
+        assert!(noisy > 0.2, "noisy trace noise {noisy}");
+        assert!(noisy > quiet * 10.0);
+    }
+
+    #[test]
+    fn derived_threshold_monotone_and_clamped() {
+        let mut prev = 0.0;
+        for i in 0..200 {
+            let nr = i as f64 * 0.005; // 0.0 .. 1.0
+            let t = Monitor::derived_threshold(nr);
+            assert!(t >= prev, "not monotone at noise {nr}");
+            assert!((THRESHOLD_MIN..=THRESHOLD_MAX).contains(&t), "{t}");
+            prev = t;
+        }
+        // clamping at both ends, sane interior behavior
+        assert_eq!(Monitor::derived_threshold(0.0), THRESHOLD_MIN);
+        assert_eq!(Monitor::derived_threshold(10.0), THRESHOLD_MAX);
+        let mid = Monitor::derived_threshold(0.05);
+        assert!((mid - 0.15).abs() < 1e-12, "3-sigma rule: {mid}");
+        // hostile inputs stay in bounds
+        assert_eq!(Monitor::derived_threshold(-1.0), THRESHOLD_MIN);
+        assert_eq!(Monitor::derived_threshold(f64::NAN), THRESHOLD_MIN);
+    }
+
+    #[test]
+    fn autotune_updates_live_threshold() {
+        let mut m = Monitor::new(0.05);
+        m.set_baseline(1.0);
+        for t in [1.0, 1.3, 0.7, 1.25, 0.75] {
+            m.observe(&[t]);
+        }
+        let t = m.autotune();
+        assert_eq!(t, m.threshold);
+        assert!(t > THRESHOLD_MIN, "noisy trace must raise the threshold");
+        // with the raised threshold, the wobble that fed it no longer fires
+        m.set_baseline(1.0);
+        assert_eq!(m.observe(&[1.0 + t * 0.9]), None);
     }
 }

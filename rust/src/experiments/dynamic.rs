@@ -156,7 +156,11 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
         DYN_SLO_LEVEL * 100.0
     ));
     out.line("# policy faces the identical deterministic scenario stream;");
-    out.line("# horizons are fixed per scenario (--queries does not apply here)");
+    out.line(format!(
+        "# horizons rescale to --queries (here {}; builtins are authored \
+         at 2000)",
+        ctx.queries
+    ));
     let spec = models::build(DYN_MODEL, ctx.spatial).unwrap();
     let db = synthesize(&spec, ctx.seed);
     out.line(format!(
@@ -165,7 +169,10 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
     ));
     let mut scenario_vals = Vec::with_capacity(BUILTIN_NAMES.len());
     for name in BUILTIN_NAMES {
-        let scenario = builtin(name)?;
+        // horizons scale with --queries (ROADMAP follow-up); the golden
+        // tests pin --queries 2000 = the authored horizon, so their
+        // artifacts are unchanged
+        let scenario = builtin(name)?.scaled(ctx.queries)?;
         let (schedule, results) =
             run_scenario(&db, &scenario, &DYN_POLICIES, ctx.jobs);
         // the document is the single source of the per-policy numbers;
@@ -262,6 +269,27 @@ mod tests {
                 assert_eq!(r.latencies.len(), schedule.num_queries());
             }
         }
+    }
+
+    #[test]
+    fn scaled_scenarios_flow_through_the_sweep() {
+        // --queries rescales the horizon end-to-end: schedule, results
+        // and window counts all follow
+        let db = db();
+        let scenario = builtin("burst").unwrap().scaled(400).unwrap();
+        let (schedule, results) =
+            run_scenario(&db, &scenario, &DYN_POLICIES, 2);
+        assert_eq!(schedule.num_queries(), 400);
+        for r in &results {
+            assert_eq!(r.latencies.len(), 400);
+        }
+        let v = scenario_json(&scenario, &schedule, &DYN_POLICIES, &results);
+        assert_eq!(v.get("queries").as_usize(), Some(400));
+        let pols = v.get("policies").as_arr().unwrap();
+        assert_eq!(
+            pols[0].get("windows").as_arr().unwrap().len(),
+            400usize.div_ceil(DYN_WINDOW)
+        );
     }
 
     #[test]

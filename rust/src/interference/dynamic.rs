@@ -465,6 +465,88 @@ impl DynamicScenario {
         Schedule::from_events(self.num_eps, self.num_queries, &events)
     }
 
+    /// Rescale the scenario's query axis to a new `queries` horizon,
+    /// preserving each phase's *shape*: every query-axis field (start,
+    /// end, period, duration, trace timestamps) scales by
+    /// `queries / self.num_queries` with round-half-up; repetition fields
+    /// clamp to ≥ 1 and spans to ≥ 1 query so a shrunken phase never
+    /// degenerates. The result re-validates, so a horizon too small to
+    /// hold a phase (e.g. a ramp with more levels than queries) errors
+    /// with context instead of silently compiling to nothing.
+    pub fn scaled(&self, queries: usize) -> Result<DynamicScenario> {
+        self.adapted(queries, self.num_eps)
+    }
+
+    /// [`scaled`](Self::scaled) plus an EP remap (`ep % num_eps`), for
+    /// driving a scenario on a pipeline with a different stage count.
+    /// Remapping can fold two phases onto one EP; the slot-exact overlap
+    /// validation rejects such folds with a clear error.
+    pub fn adapted(
+        &self,
+        queries: usize,
+        num_eps: usize,
+    ) -> Result<DynamicScenario> {
+        if queries == self.num_queries && num_eps == self.num_eps {
+            return Ok(self.clone());
+        }
+        if queries == 0 || num_eps == 0 {
+            bail!(
+                "cannot adapt scenario {:?} to {queries} queries / \
+                 {num_eps} EPs",
+                self.name
+            );
+        }
+        // round-half-up rational scaling; u128 guards against overflow at
+        // the MAX_QUERIES end of the range
+        let old = self.num_queries as u128;
+        let s = |v: usize| -> usize {
+            ((v as u128 * queries as u128 + old / 2) / old) as usize
+        };
+        let sp = |v: usize| s(v).max(1); // periods/durations stay >= 1
+        let span = |a: usize, b: usize| (s(a), s(b).max(s(a) + 1));
+        let re = |e: usize| e % num_eps;
+        let phases = self
+            .phases
+            .iter()
+            .map(|p| match *p {
+                Phase::Burst { start, period, duration, ep, scenario } => {
+                    Phase::Burst {
+                        start: s(start),
+                        period: sp(period),
+                        duration: sp(duration),
+                        ep: re(ep),
+                        scenario,
+                    }
+                }
+                Phase::Ramp { start, end, ep, ref levels } => {
+                    let (start, end) = span(start, end);
+                    Phase::Ramp { start, end, ep: re(ep), levels: levels.clone() }
+                }
+                Phase::Task { start, end, ep, scenario } => {
+                    let (start, end) = span(start, end);
+                    Phase::Task { start, end, ep: re(ep), scenario }
+                }
+                Phase::Migrate { start, end, period, scenario } => {
+                    let (start, end) = span(start, end);
+                    Phase::Migrate { start, end, period: sp(period), scenario }
+                }
+            })
+            .collect();
+        let trace = self
+            .trace
+            .iter()
+            .map(|ev| TraceEvent { at: s(ev.at), ep: re(ev.ep), scenario: ev.scenario })
+            .collect();
+        DynamicScenario::new(self.name.clone(), num_eps, queries, phases, trace)
+            .with_context(|| {
+                format!(
+                    "adapting scenario {:?} ({} queries, {} EPs) to \
+                     {queries} queries, {num_eps} EPs",
+                    self.name, self.num_queries, self.num_eps
+                )
+            })
+    }
+
     // -- JSON -----------------------------------------------------------
 
     /// Parse a scenario document (this example is slot-disjoint: the
@@ -1261,6 +1343,72 @@ mod tests {
         )
         .unwrap_err();
         assert!(chain(&e).contains("budget"), "{e:#}");
+    }
+
+    #[test]
+    fn scaled_horizons_still_validate() {
+        // the ROADMAP follow-up: horizons scale with --queries; every
+        // builtin must survive shrinking and growing, and the identity
+        // scale must be exact
+        for name in BUILTIN_NAMES {
+            let base = builtin(name).unwrap();
+            assert_eq!(base.scaled(base.num_queries).unwrap(), base);
+            for q in [50, 123, 2000, 10_000] {
+                let s = base.scaled(q).unwrap_or_else(|e| {
+                    panic!("{name} scaled to {q}: {e:#}")
+                });
+                assert_eq!(s.num_queries, q);
+                assert_eq!(s.num_eps, base.num_eps);
+                assert_eq!(s.phases.len(), base.phases.len());
+                let sched = s.compile();
+                assert_eq!(sched.num_queries(), q);
+                assert!(
+                    sched.interference_load() > 0.0,
+                    "{name}@{q} lost all interference"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scaling_preserves_shape_proportions() {
+        // burst at half the horizon: the first burst lands at half the
+        // query index with half the duration
+        let s = builtin("burst").unwrap().scaled(1000).unwrap();
+        match s.phases[0] {
+            Phase::Burst { start, period, duration, ep, scenario } => {
+                assert_eq!((start, period, duration), (50, 200, 75));
+                assert_eq!((ep, scenario), (1, 9));
+            }
+            ref p => panic!("unexpected phase {p:?}"),
+        }
+    }
+
+    #[test]
+    fn adapted_remaps_eps_or_rejects_folds() {
+        // burst's two phases (EP 1 and EP 3) fold onto EP 1 of a 2-EP
+        // pipeline, where their windows are temporally disjoint — legal
+        let s = builtin("burst").unwrap().adapted(200, 2).unwrap();
+        assert_eq!(s.num_eps, 2);
+        let sched = s.compile();
+        assert_eq!(sched.num_eps, 2);
+        assert!(sched.interference_load() > 0.0);
+        // arrivals' tasks on EPs 0 and 2 collide when folded onto EP 0 —
+        // the slot-exact overlap check must reject, with context
+        let e = builtin("arrivals").unwrap().adapted(2000, 2).unwrap_err();
+        let msg = chain(&e);
+        assert!(msg.contains("overlap"), "{msg}");
+        assert!(msg.contains("adapting"), "{msg}");
+    }
+
+    #[test]
+    fn degenerate_scale_targets_error_with_context() {
+        let base = builtin("ramp").unwrap();
+        assert!(base.scaled(0).is_err());
+        assert!(base.adapted(100, 0).is_err());
+        // a 2-query horizon cannot hold a 3-level ramp: contextful error
+        let e = base.scaled(2).unwrap_err();
+        assert!(chain(&e).contains("adapting"), "{e:#}");
     }
 
     #[test]

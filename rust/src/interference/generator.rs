@@ -12,7 +12,7 @@ use std::thread::JoinHandle;
 
 use crate::util::affinity;
 
-use super::scenarios::{Scenario, StressKind};
+use super::scenarios::{Placement, Scenario, StressKind};
 
 /// Working-set size of the memBW stressor: large enough to blow out any
 /// L2/L3 and hit DRAM (iBench memBW streams ~100s of MiB; 64 MiB keeps
@@ -55,6 +55,22 @@ impl Stressor {
         Stressor { stop, threads, work_done }
     }
 
+    /// Launch the stressor against victim EP `ep` of an `num_eps`-stage
+    /// pipeline whose EPs are `cores_per_ep` wide, deriving the core list
+    /// from the scenario's [`Placement`] (see [`placement_cores`]) — so
+    /// the stressor contends on exactly the cores the victim stage worker
+    /// is pinned to, instead of callers passing `None` and stressing the
+    /// whole machine.
+    pub fn launch_on_ep(
+        scenario: Scenario,
+        ep: usize,
+        num_eps: usize,
+        cores_per_ep: usize,
+    ) -> Stressor {
+        let cores = placement_cores(scenario.placement, ep, num_eps, cores_per_ep);
+        Stressor::launch(scenario, Some(cores))
+    }
+
     pub fn stop(mut self) -> u64 {
         self.halt();
         self.work_done.load(Ordering::Relaxed)
@@ -71,6 +87,24 @@ impl Stressor {
 impl Drop for Stressor {
     fn drop(&mut self) {
         self.halt();
+    }
+}
+
+/// The cores a stressor should occupy for a given placement, mirroring
+/// Table 1: `SameCores` timeshares the victim EP's own cores
+/// ([`affinity::ep_cores`] — the same list the stage worker pins to);
+/// `SameSocket` takes the core block just past the pipeline's EPs, so it
+/// contends only on socket-shared resources. Hosts without those cores
+/// degrade gracefully (pinning becomes a no-op and the threads roam).
+pub fn placement_cores(
+    placement: Placement,
+    ep: usize,
+    num_eps: usize,
+    cores_per_ep: usize,
+) -> Vec<usize> {
+    match placement {
+        Placement::SameCores => affinity::ep_cores(ep, cores_per_ep),
+        Placement::SameSocket => affinity::ep_cores(num_eps, cores_per_ep),
     }
 }
 
@@ -138,5 +172,29 @@ mod tests {
         let s = Stressor::launch(scenario(StressKind::Cpu, 1), Some(vec![0]));
         std::thread::sleep(Duration::from_millis(20));
         drop(s); // must join, not leak a spinning thread
+    }
+
+    #[test]
+    fn placement_cores_match_victim_pinning() {
+        // SameCores = the exact list the stage worker pins to
+        assert_eq!(
+            placement_cores(Placement::SameCores, 1, 4, 8),
+            affinity::ep_cores(1, 8)
+        );
+        // SameSocket = the block past the pipeline's EPs, disjoint from
+        // every victim EP
+        let sock = placement_cores(Placement::SameSocket, 1, 4, 8);
+        assert_eq!(sock, (32..40).collect::<Vec<_>>());
+        for ep in 0..4 {
+            let victim = affinity::ep_cores(ep, 8);
+            assert!(sock.iter().all(|c| !victim.contains(c)));
+        }
+    }
+
+    #[test]
+    fn launch_on_ep_runs_and_stops() {
+        let s = Stressor::launch_on_ep(scenario(StressKind::Cpu, 2), 0, 2, 1);
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(s.stop() > 0);
     }
 }

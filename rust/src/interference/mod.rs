@@ -8,6 +8,6 @@ pub mod scenarios;
 pub mod schedule;
 
 pub use dynamic::{DynamicScenario, Phase, TraceEvent, BUILTIN_NAMES};
-pub use generator::Stressor;
+pub use generator::{placement_cores, Stressor};
 pub use scenarios::{catalogue, Placement, Scenario, StressKind, NUM_SCENARIOS};
 pub use schedule::{EpScenarios, RandomInterference, Schedule};

@@ -83,6 +83,17 @@ impl Value {
         matches!(self, Value::Null)
     }
 
+    /// Sorted key list of an object (empty for non-objects) — the schema
+    /// of a row, for contracts that require two emitters to agree on the
+    /// exact key set (e.g. live vs simulated window timelines).
+    pub fn keys(&self) -> Vec<&str> {
+        match self {
+            // BTreeMap iterates in sorted order already
+            Value::Obj(m) => m.keys().map(|k| k.as_str()).collect(),
+            _ => Vec::new(),
+        }
+    }
+
     /// Convenience: `[1,2,3]` → `vec![1usize,2,3]`, or None on any mismatch.
     pub fn as_usize_vec(&self) -> Option<Vec<usize>> {
         self.as_arr()?.iter().map(|v| v.as_usize()).collect()

@@ -10,7 +10,9 @@
 //!   bench-db     measure the per-layer timing database on this host
 //!                through the PJRT runtime, under real stressors
 //!   verify       compile artifacts and check gold numerics
-//!   serve        run the live pipeline server on N random queries
+//!   serve        run the live pipeline server on N random queries; with
+//!                --scenario <name|file> replays a dynamic interference
+//!                scenario with real stressors and emits live_<name>.json
 //!   models       list built-in model specs
 
 use odin::cli::{Args, CliError, Command};
@@ -26,9 +28,16 @@ use odin::interference::dynamic::resolve;
 use odin::interference::{RandomInterference, Schedule};
 use odin::json::Value;
 use odin::models;
-use odin::runtime::{ExecService, Manifest, ModelRuntime, RuntimeTimer, Tensor};
-use odin::serving::{PipelineServer, ServeReport, ServerOpts};
+use odin::runtime::{
+    ExecHandle, ExecService, Manifest, ModelRuntime, RuntimeTimer,
+    SynthBackend, Tensor,
+};
+use odin::serving::{
+    live_json, HarnessOpts, PipelineServer, ScenarioDriver, ServeReport,
+    ServerOpts,
+};
 use odin::simulator::{simulate, Policy, SimConfig, SimSummary};
+use odin::util::affinity;
 use odin::util::error::{OdinError, Result};
 use odin::{bail, err};
 
@@ -62,7 +71,8 @@ fn usage() -> String {
        experiment   regenerate paper artifacts: table1 fig1 fig3..fig10 summary dynamic all\n\
        bench-db     measure the per-layer timing database via PJRT\n\
        verify       compile artifacts + gold numerics check\n\
-       serve        live pipeline server demo\n\
+       serve        live pipeline server; --scenario <name|file> replays a\n\
+                    dynamic scenario with real stressors (live_<name>.json)\n\
        models       list model specs\n\n\
      `odin <subcommand> --help` for flags"
         .to_string()
@@ -187,23 +197,28 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
 /// emit the per-window JSON (byte-identical for every `--jobs` value).
 fn cmd_simulate_scenario(args: &Args) -> Result<()> {
     let db = load_sim_db(args)?;
-    // scenario mode fixes the horizon/EPs (from the scenario) and the
-    // policy set (odin + all baselines); reject contradicting flags
-    // instead of silently ignoring them
-    for flag in ["policy", "queries", "eps", "period", "duration"] {
+    // scenario mode fixes the EPs (from the scenario) and the policy set
+    // (odin + all baselines); reject contradicting flags instead of
+    // silently ignoring them. --queries is honored: it rescales the
+    // scenario's horizon (phases keep their proportional shape).
+    for flag in ["policy", "eps", "period", "duration"] {
         if !args.was_given(flag) {
             continue;
         }
         bail!(
             "--{flag} cannot be combined with --scenario: the scenario \
-             file sets the horizon and EPs, and the online loop always \
-             runs odin + lls/oracle/static under the identical stream"
+             file sets the EPs, and the online loop always runs odin + \
+             lls/oracle/static under the identical stream (--queries \
+             rescales the horizon)"
         );
     }
     if args.has("no-interference") {
         bail!("--no-interference cannot be combined with --scenario");
     }
-    let scenario = resolve(args.get("scenario"))?;
+    let mut scenario = resolve(args.get("scenario"))?;
+    if args.was_given("queries") {
+        scenario = scenario.scaled(args.usize("queries")?)?;
+    }
     let policies = [
         Policy::Odin { alpha: args.usize("alpha")? },
         Policy::Lls,
@@ -318,18 +333,51 @@ fn cmd_verify(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_serve(argv: &[String]) -> Result<()> {
-    let cmd = Command::new("serve", "live pipeline server demo")
-        .flag("model", "vgg16", "model artifacts to serve")
-        .flag("queries", "24", "queries to serve")
-        .flag("eps", "4", "pipeline stages / execution places")
+    let cmd = Command::new("serve", "live pipeline server")
+        .flag("model", "vgg16", "model to serve")
+        .flag("queries", "24", "queries to serve (scenario horizons rescale)")
+        .opt("eps", "pipeline stages (default 4, or the scenario's EPs)")
         .flag("alpha", "2", "ODIN exploration budget")
-        .flag("artifacts", "artifacts", "artifact directory");
+        .flag("threshold", "0.25", "monitor detection threshold")
+        .flag(
+            "admission-depth",
+            "2",
+            "bounded in-flight admission window (1 = lock-step)",
+        )
+        .flag("artifacts", "artifacts", "artifact directory (PJRT mode)")
+        .opt(
+            "scenario",
+            "dynamic scenario (builtin name or JSON file): replay it live \
+             with real stressors on the synthetic backend, emitting \
+             live_<name>.json",
+        )
+        .flag("query-ms", "2", "synthetic per-query work budget, ms")
+        .flag("spatial", "16", "model input resolution (scenario mode)")
+        .flag(
+            "cores-per-ep",
+            "0",
+            "cores per EP for pinning + stressor placement (0 = host/eps)",
+        )
+        .flag("out", "results", "output dir for live JSON ('' = none)")
+        .switch(
+            "auto-threshold",
+            "re-derive the detection threshold from noise in quiet windows",
+        );
     let args = cmd.parse(argv)?;
+    if !args.get("scenario").is_empty() {
+        return cmd_serve_scenario(&args);
+    }
+    // reject scenario-only flags instead of silently ignoring them
+    for flag in ["out", "auto-threshold", "cores-per-ep", "query-ms", "spatial"] {
+        if args.was_given(flag) || args.has(flag) {
+            bail!("--{flag} only applies to `serve --scenario <name|file>`");
+        }
+    }
     let manifest = Manifest::load(args.get("artifacts"))?;
     let model = manifest
         .model(args.get("model"))
         .ok_or_else(|| err!("{} not in artifacts", args.get("model")))?;
-    let eps = args.usize("eps")?;
+    let eps = args.usize_opt("eps")?.unwrap_or(4);
     let service = ExecService::spawn(model.clone())?;
     let spec = models::build(&model.name, manifest.spatial).unwrap();
     let db = synthesize(&spec, 7);
@@ -337,6 +385,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let opts = ServerOpts {
         num_eps: eps,
         alpha: args.usize("alpha")?,
+        detect_threshold: args.f64("threshold")?,
+        admission_depth: args.usize("admission-depth")?.max(1),
         ..ServerOpts::default()
     };
     let mut server = PipelineServer::new(service.handle(), config, opts);
@@ -348,6 +398,72 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let done = server.serve(inputs)?;
     ServeReport::of(&done, t0.elapsed().as_secs_f64()).print("serve");
     println!("final config {}", server.config());
+    Ok(())
+}
+
+/// `odin serve --scenario <name|file>`: replay a dynamic interference
+/// scenario against the *live* pipeline server — real stage workers
+/// pinned to EP cores, real iBench-style stressors launched and stopped
+/// at phase boundaries on the victim EP's cores, the online
+/// monitor→detect→rebalance loop closing over measured stage times — and
+/// emit `live_<name>.json` whose per-window rows share the simulator's
+/// exact window schema (diff it against `scenario_<name>.json`).
+fn cmd_serve_scenario(args: &Args) -> Result<()> {
+    let base = resolve(args.get("scenario"))?;
+    let queries = args.usize("queries")?;
+    let eps = args.usize_opt("eps")?.unwrap_or(base.num_eps);
+    let scenario = base.adapted(queries, eps)?;
+    let spec = models::build(args.get("model"), args.usize("spatial")?)
+        .ok_or_else(|| err!("unknown model {}", args.get("model")))?;
+    let backend = SynthBackend::new(&spec, args.f64("query-ms")?);
+    let shape = backend.input_shape();
+    let db = synthesize(&spec, 7);
+    let (config, _) = optimal_config(&db, &vec![0usize; eps], eps);
+    let mut cores_per_ep = args.usize("cores-per-ep")?;
+    if cores_per_ep == 0 {
+        cores_per_ep = (affinity::num_cpus() / eps).max(1);
+    }
+    let opts = ServerOpts {
+        num_eps: eps,
+        cores_per_ep,
+        alpha: args.usize("alpha")?,
+        detect_threshold: args.f64("threshold")?,
+        admission_depth: args.usize("admission-depth")?.max(1),
+        ..ServerOpts::default()
+    };
+    let depth = opts.admission_depth;
+    let mut server = PipelineServer::new(ExecHandle::synthetic(backend), config, opts);
+    let driver = ScenarioDriver::new(
+        scenario,
+        HarnessOpts {
+            auto_threshold: args.has("auto-threshold"),
+            cores_per_ep,
+            ..HarnessOpts::default()
+        },
+    );
+    let inputs: Vec<Tensor> = (0..queries)
+        .map(|i| Tensor::random(&shape, i as u64, 1.0))
+        .collect();
+    let run = driver.run(&mut server, inputs)?;
+    run.report.print(&format!("live/{}", driver.scenario().name));
+    println!(
+        "rebalances {}  serial probes {}  stressor launches {} \
+         (work {})  threshold {:.3}  final config {}",
+        run.rebalance_log.len(),
+        run.rebalance_log.iter().map(|e| e.trials).sum::<usize>(),
+        run.stressor_launches,
+        run.stressor_work,
+        run.final_threshold,
+        run.final_config,
+    );
+    if !args.get("out").is_empty() {
+        let dir = std::path::Path::new(args.get("out"));
+        std::fs::create_dir_all(dir)?;
+        let doc = live_json(&driver, &run, args.get("model"), depth);
+        let path = dir.join(format!("live_{}.json", driver.scenario().name));
+        odin::json::write_file(&path, &doc)?;
+        println!("wrote {}", path.display());
+    }
     Ok(())
 }
 

@@ -5,10 +5,12 @@
 pub mod artifact;
 pub mod executor;
 pub mod service;
+pub mod synth;
 pub mod tensor;
 pub mod xla;
 
 pub use artifact::{Manifest, ModelArtifacts, UnitArtifact};
 pub use executor::{ModelRuntime, RuntimeTimer};
 pub use service::{ExecHandle, ExecService};
+pub use synth::SynthBackend;
 pub use tensor::Tensor;

@@ -9,6 +9,7 @@
 //! bind-to-stage message flow.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -17,6 +18,7 @@ use crate::util::error::Result;
 
 use super::artifact::ModelArtifacts;
 use super::executor::ModelRuntime;
+use super::synth::SynthBackend;
 use super::tensor::Tensor;
 
 enum Request {
@@ -33,18 +35,38 @@ enum Request {
 /// Cloneable handle used by stage workers.
 #[derive(Clone)]
 pub struct ExecHandle {
-    tx: Sender<Request>,
+    inner: HandleInner,
+}
+
+#[derive(Clone)]
+enum HandleInner {
+    /// Requests funnel to the dedicated PJRT service thread.
+    Service(Sender<Request>),
+    /// Calibrated busy-work executed inline on the *calling* thread — the
+    /// stage worker's own pinned cores do the compute, so co-located
+    /// stressors genuinely contend with it (see [`SynthBackend`]).
+    Synth(Arc<SynthBackend>),
 }
 
 // Sender is Send; the handle carries no XLA state.
 impl ExecHandle {
-    /// Execute a unit range; blocks until the service replies.
+    /// A handle over the synthetic in-thread backend (no PJRT needed).
+    pub fn synthetic(backend: SynthBackend) -> ExecHandle {
+        ExecHandle { inner: HandleInner::Synth(Arc::new(backend)) }
+    }
+
+    /// Execute a unit range. Service-backed handles block until the
+    /// service thread replies; synthetic handles compute inline.
     pub fn run_range(&self, start: usize, end: usize, input: Tensor) -> Result<(Tensor, f64)> {
-        let (reply, rx) = channel();
-        self.tx
-            .send(Request::RunRange { start, end, input, reply })
-            .map_err(|_| err!("exec service gone"))?;
-        rx.recv().map_err(|_| err!("exec service dropped reply"))?
+        match &self.inner {
+            HandleInner::Service(tx) => {
+                let (reply, rx) = channel();
+                tx.send(Request::RunRange { start, end, input, reply })
+                    .map_err(|_| err!("exec service gone"))?;
+                rx.recv().map_err(|_| err!("exec service dropped reply"))?
+            }
+            HandleInner::Synth(b) => b.run_range(start, end, input),
+        }
     }
 }
 
@@ -82,7 +104,7 @@ impl ExecService {
     }
 
     pub fn handle(&self) -> ExecHandle {
-        ExecHandle { tx: self.tx.clone() }
+        ExecHandle { inner: HandleInner::Service(self.tx.clone()) }
     }
 }
 

@@ -1,0 +1,170 @@
+//! Synthetic in-thread execution backend for the live serving path.
+//!
+//! The PJRT backend is stubbed in this hermetic build (`runtime::xla`),
+//! but the live harness needs stage workers that burn *real, measurable
+//! CPU time on their own pinned cores* — that is what co-located
+//! stressors degrade and what the monitor detects. This backend gives
+//! each model unit a busy-work budget proportional to its FLOP count
+//! (calibrated against the host once) and executes unit ranges inline on
+//! the **calling** thread, so a stage worker pinned to EP k's cores does
+//! its compute exactly where an interference generator pinned to the same
+//! cores will contend with it.
+//!
+//! Tensors pass through unchanged — the synthetic path models *time*, not
+//! numerics (the PJRT path owns numerics; `odin verify` covers it).
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::bail;
+use crate::models::ModelSpec;
+use crate::util::error::Result;
+
+use super::tensor::Tensor;
+
+/// One timed calibration probe must run at least this long for a stable
+/// iterations/second estimate.
+const CALIBRATE_SECS: f64 = 2e-3;
+
+/// Dependent ALU chain, `iters` iterations — the same loop body as the
+/// CPU stressor, so victim and aggressor contend for identical resources.
+fn busy(iters: u64) -> u64 {
+    let mut x: u64 = 0x9E3779B97F4A7C15;
+    let mut f: f64 = 1.000000001;
+    for _ in 0..iters {
+        x = x
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        f = (f * 1.0000001).sqrt() + 0.5;
+    }
+    std::hint::black_box(f);
+    x
+}
+
+/// Host ALU-loop rate (iterations/second), measured once per process.
+fn alu_rate() -> f64 {
+    static RATE: OnceLock<f64> = OnceLock::new();
+    *RATE.get_or_init(|| {
+        let mut iters = 50_000u64;
+        loop {
+            let t0 = Instant::now();
+            std::hint::black_box(busy(iters));
+            let dt = t0.elapsed().as_secs_f64();
+            if dt > CALIBRATE_SECS || iters >= 1 << 30 {
+                return iters as f64 / dt.max(1e-9);
+            }
+            iters *= 4;
+        }
+    })
+}
+
+/// A calibrated synthetic executor: per-unit busy-work budgets sized so
+/// one full-model query costs roughly `query_ms` milliseconds on an idle
+/// host, split across units proportionally to their FLOPs.
+pub struct SynthBackend {
+    model: String,
+    spatial: usize,
+    iters: Vec<u64>,
+}
+
+impl SynthBackend {
+    pub fn new(spec: &ModelSpec, query_ms: f64) -> SynthBackend {
+        assert!(query_ms > 0.0, "query_ms must be positive");
+        let total_flops: u128 =
+            spec.units.iter().map(|u| u.flops as u128).sum::<u128>().max(1);
+        let total_iters = (alu_rate() * query_ms / 1e3).max(1.0) as u128;
+        let iters = spec
+            .units
+            .iter()
+            .map(|u| {
+                ((total_iters * u.flops as u128 / total_flops) as u64).max(1)
+            })
+            .collect();
+        SynthBackend { model: spec.name.clone(), spatial: spec.spatial, iters }
+    }
+
+    pub fn model_name(&self) -> &str {
+        &self.model
+    }
+
+    pub fn num_units(&self) -> usize {
+        self.iters.len()
+    }
+
+    /// A plausible query shape for this model (NHWC, batch 1). The
+    /// synthetic path only threads tensors through; any shape serves.
+    pub fn input_shape(&self) -> Vec<usize> {
+        vec![1, self.spatial, self.spatial, 3]
+    }
+
+    /// Execute units `[start, end)` inline on the calling thread,
+    /// returning the (pass-through) activation and the measured seconds.
+    pub fn run_range(
+        &self,
+        start: usize,
+        end: usize,
+        input: Tensor,
+    ) -> Result<(Tensor, f64)> {
+        if start >= end || end > self.iters.len() {
+            bail!(
+                "{}: bad unit range {start}..{end} ({} units)",
+                self.model,
+                self.iters.len()
+            );
+        }
+        let t0 = Instant::now();
+        for &n in &self.iters[start..end] {
+            std::hint::black_box(busy(n));
+        }
+        Ok((input, t0.elapsed().as_secs_f64()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    fn backend() -> SynthBackend {
+        SynthBackend::new(&models::vgg16(8), 1.0)
+    }
+
+    #[test]
+    fn work_proportional_to_flops() {
+        let spec = models::vgg16(8);
+        let b = SynthBackend::new(&spec, 2.0);
+        assert_eq!(b.num_units(), spec.num_units());
+        // the heaviest unit gets the largest budget
+        let heaviest = spec
+            .units
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, u)| u.flops)
+            .unwrap()
+            .0;
+        let max_iters = *b.iters.iter().max().unwrap();
+        assert_eq!(b.iters[heaviest], max_iters);
+        // total budget roughly matches the calibrated 2 ms target
+        let total: u64 = b.iters.iter().sum();
+        assert!(total >= b.num_units() as u64);
+    }
+
+    #[test]
+    fn run_range_times_positive_and_passthrough() {
+        let b = backend();
+        let x = Tensor::random(&b.input_shape(), 1, 1.0);
+        let want = x.data.clone();
+        let (out, dt) = b.run_range(0, b.num_units(), x).unwrap();
+        assert!(dt > 0.0);
+        assert_eq!(out.data, want);
+    }
+
+    #[test]
+    fn bad_ranges_error() {
+        let b = backend();
+        let x = || Tensor::zeros(&[1]);
+        assert!(b.run_range(3, 3, x()).is_err());
+        assert!(b.run_range(5, 2, x()).is_err());
+        assert!(b.run_range(0, b.num_units() + 1, x()).is_err());
+    }
+}

@@ -1,0 +1,588 @@
+//! The live scenario harness: drive [`PipelineServer`] from a
+//! [`DynamicScenario`] with *real* stressors.
+//!
+//! PR 2 proved the online-adaptation claim in simulation; this module is
+//! the serving-path counterpart. A [`ScenarioDriver`] compiles the
+//! scenario into the same per-query [`Schedule`] the simulator consumes,
+//! then walks the live query stream: at every phase boundary it launches
+//! and stops real [`Stressor`]s pinned to the victim EP's cores (the same
+//! core lists the stage workers pin to, via
+//! [`crate::interference::placement_cores`]) while the server serves with
+//! a bounded in-flight admission window. Per-query stats are folded into
+//! the same [`WindowMetrics`] rows — and serialized through the same
+//! [`windows_json`] emitter — as the simulator's `scenario_*.json`, so a
+//! live run and a simulated run of one scenario are directly diffable.
+//!
+//! With `auto_threshold`, the driver re-derives the monitor's detection
+//! threshold from [`Monitor::noise_ratio`] at quiet (stressor-free)
+//! window boundaries — the ROADMAP's auto-tuning follow-up.
+//!
+//! [`Monitor::noise_ratio`]: crate::coordinator::Monitor::noise_ratio
+
+use std::time::Instant;
+
+use crate::bail;
+use crate::interference::dynamic::DynamicScenario;
+use crate::interference::{Scenario, Schedule, Stressor};
+use crate::json::Value;
+use crate::runtime::Tensor;
+use crate::simulator::window::{windows_json, WindowMetrics};
+use crate::util::error::Result;
+
+use super::server::{PipelineServer, RebalanceLog};
+use super::stats::{ServeReport, SERVE_WINDOW};
+
+/// SLO level for live per-window violation counts, as a fraction of the
+/// run's quiet-phase peak throughput (mirrors the simulator's level).
+pub const LIVE_SLO_LEVEL: f64 = 0.7;
+
+/// Harness knobs (server-side knobs live in [`super::ServerOpts`]).
+#[derive(Clone, Debug)]
+pub struct HarnessOpts {
+    /// Reporting window (queries) of the live timeline.
+    pub window: usize,
+    /// SLO level as a fraction of quiet peak throughput.
+    pub slo_level: f64,
+    /// Re-derive the detection threshold from observed noise at quiet
+    /// window boundaries.
+    pub auto_threshold: bool,
+    /// EP width used for stressor placement; must match the server's
+    /// `cores_per_ep` so aggressor and victim contend on the same cores.
+    pub cores_per_ep: usize,
+}
+
+impl Default for HarnessOpts {
+    fn default() -> Self {
+        HarnessOpts {
+            window: SERVE_WINDOW,
+            slo_level: LIVE_SLO_LEVEL,
+            auto_threshold: false,
+            cores_per_ep: 8,
+        }
+    }
+}
+
+/// Everything a live scenario run produced.
+pub struct LiveRun {
+    pub completions: Vec<super::Completion>,
+    /// Wall-clock completion offsets (seconds since run start), indexed
+    /// like `completions`.
+    pub wall: Vec<f64>,
+    /// True where the schedule had any stressor active at admission.
+    pub stressed: Vec<bool>,
+    /// The same per-window rows the simulator reports.
+    pub windows: Vec<WindowMetrics>,
+    pub report: ServeReport,
+    pub rebalance_log: Vec<RebalanceLog>,
+    pub final_config: String,
+    /// Total loop iterations completed by stressors (proves they ran).
+    pub stressor_work: u64,
+    /// Stressor launch episodes (phase boundaries that started one).
+    pub stressor_launches: usize,
+    /// `(query, new_threshold)` for every auto-threshold re-derivation.
+    pub thresholds: Vec<(usize, f64)>,
+    /// Detection threshold at the end of the run.
+    pub final_threshold: f64,
+    pub wall_seconds: f64,
+}
+
+/// Per-EP stressor bank, synced against the schedule's EP-state vector.
+struct StressorRack {
+    num_eps: usize,
+    cores_per_ep: usize,
+    active: Vec<Option<(usize, Stressor)>>,
+    work_done: u64,
+    launches: usize,
+}
+
+impl StressorRack {
+    fn new(num_eps: usize, cores_per_ep: usize) -> StressorRack {
+        StressorRack {
+            num_eps,
+            cores_per_ep,
+            active: (0..num_eps).map(|_| None).collect(),
+            work_done: 0,
+            launches: 0,
+        }
+    }
+
+    /// Launch/stop stressors so each EP runs exactly `target[ep]`
+    /// (0 = none). Idempotent between phase boundaries.
+    fn sync(&mut self, target: &[usize]) {
+        for ep in 0..self.num_eps {
+            let want = target[ep];
+            let have = self.active[ep].as_ref().map_or(0, |(id, _)| *id);
+            if want == have {
+                continue;
+            }
+            if let Some((_, s)) = self.active[ep].take() {
+                self.work_done += s.stop();
+            }
+            if want != 0 {
+                let sc = Scenario::by_id(want)
+                    .expect("scenario ids validated at scenario build");
+                self.active[ep] = Some((
+                    want,
+                    Stressor::launch_on_ep(sc, ep, self.num_eps, self.cores_per_ep),
+                ));
+                self.launches += 1;
+            }
+        }
+    }
+
+    fn stop_all(&mut self) {
+        for slot in &mut self.active {
+            if let Some((_, s)) = slot.take() {
+                self.work_done += s.stop();
+            }
+        }
+    }
+}
+
+impl Drop for StressorRack {
+    fn drop(&mut self) {
+        self.stop_all(); // Stressor::drop joins; never leak a spinner
+    }
+}
+
+/// Compiles a scenario into a live timeline and drives a server along it.
+pub struct ScenarioDriver {
+    scenario: DynamicScenario,
+    schedule: Schedule,
+    opts: HarnessOpts,
+}
+
+impl ScenarioDriver {
+    pub fn new(scenario: DynamicScenario, opts: HarnessOpts) -> ScenarioDriver {
+        assert!(opts.window >= 1, "window must be >= 1");
+        assert!(
+            opts.slo_level > 0.0 && opts.slo_level <= 1.0,
+            "SLO level {}",
+            opts.slo_level
+        );
+        let schedule = scenario.compile();
+        ScenarioDriver { scenario, schedule, opts }
+    }
+
+    pub fn scenario(&self) -> &DynamicScenario {
+        &self.scenario
+    }
+
+    pub fn schedule(&self) -> &Schedule {
+        &self.schedule
+    }
+
+    /// Serve `inputs` (one per scheduled query) through `server`, running
+    /// the scenario's stressor timeline alongside. The server must have
+    /// as many stages as the scenario has EPs.
+    pub fn run(
+        &self,
+        server: &mut PipelineServer,
+        inputs: Vec<Tensor>,
+    ) -> Result<LiveRun> {
+        let n = self.schedule.num_queries();
+        if inputs.len() != n {
+            bail!(
+                "scenario {:?} schedules {n} queries, got {} inputs \
+                 (adapt the scenario with --queries)",
+                self.scenario.name,
+                inputs.len()
+            );
+        }
+        if server.config().num_stages() != self.scenario.num_eps {
+            bail!(
+                "scenario {:?} targets {} EPs but the server has {} stages",
+                self.scenario.name,
+                self.scenario.num_eps,
+                server.config().num_stages()
+            );
+        }
+        let log_start = server.rebalance_log.len();
+        // at_query values in the server log count the server's lifetime
+        // completions; subtract this to window them on the run's axis
+        // (a reused server starts past zero)
+        let done_start = server.queries_done();
+        let mut rack =
+            StressorRack::new(self.scenario.num_eps, self.opts.cores_per_ep);
+        let mut completions = Vec::with_capacity(n);
+        let mut wall = Vec::with_capacity(n);
+        let mut stressed = Vec::with_capacity(n);
+        let mut thresholds = Vec::new();
+        let mut pending = inputs.into_iter();
+        let mut next = 0usize;
+        let t0 = Instant::now();
+        while completions.len() < n {
+            if server.rebalance_due() && server.in_flight() == 0 {
+                server.rebalance_now()?;
+            }
+            while next < n
+                && server.in_flight() < server.admission_depth()
+                && !server.rebalance_due()
+            {
+                let state = self.schedule.at(next);
+                let now_stressed = state.iter().any(|&s| s != 0);
+                if self.opts.auto_threshold
+                    && stressed.last() == Some(&true)
+                    && !now_stressed
+                {
+                    // a stressor era just ended: restart noise
+                    // accumulation so the next derivation sees quiet
+                    // samples only, not a mix straddling the era
+                    server.reset_monitor_noise();
+                }
+                rack.sync(state);
+                stressed.push(now_stressed);
+                if self.opts.auto_threshold
+                    && next > 0
+                    && next % self.opts.window == 0
+                    && self.quiet_window(next)
+                    && server.noise_samples() >= 2
+                {
+                    thresholds.push((next, server.autotune_threshold()));
+                }
+                server.admit(pending.next().expect("inputs counted above"))?;
+                next += 1;
+            }
+            if server.in_flight() == 0 {
+                continue; // rebalance was due; retry the loop head
+            }
+            completions.push(server.recv_completion()?);
+            wall.push(t0.elapsed().as_secs_f64());
+        }
+        rack.stop_all();
+        let wall_seconds = t0.elapsed().as_secs_f64();
+        // report run-relative query indexes (aligned with the schedule
+        // and the window axis), whatever the server served before
+        let rebalance_log: Vec<RebalanceLog> = server.rebalance_log
+            [log_start..]
+            .iter()
+            .map(|e| RebalanceLog {
+                at_query: e.at_query - done_start,
+                ..e.clone()
+            })
+            .collect();
+        let windows =
+            self.live_windows(&completions, &wall, &stressed, &rebalance_log);
+        let report = ServeReport::of(&completions, wall_seconds);
+        Ok(LiveRun {
+            report,
+            windows,
+            wall,
+            stressed,
+            completions,
+            rebalance_log,
+            final_config: server.config().to_string(),
+            stressor_work: rack.work_done,
+            stressor_launches: rack.launches,
+            thresholds,
+            final_threshold: server.detect_threshold(),
+            wall_seconds,
+        })
+    }
+
+    /// True when the window ending at `boundary` saw no stressor.
+    fn quiet_window(&self, boundary: usize) -> bool {
+        let start = boundary.saturating_sub(self.opts.window);
+        (start..boundary).all(|q| self.schedule.at(q).iter().all(|&s| s == 0))
+    }
+
+    /// Fold the live per-query record into the simulator's per-window
+    /// rows — same fields, same [`windows_json`] serialization, so
+    /// `live_<name>.json` and `scenario_<name>.json` timelines diff
+    /// directly. Live semantics per field: sustained throughput is
+    /// 1/bottleneck of each query's measured stage times; wall throughput
+    /// charges real elapsed time (queueing, probes, stressor overhead);
+    /// serial queries count the rebalance probes that ran in the window.
+    fn live_windows(
+        &self,
+        completions: &[super::Completion],
+        wall: &[f64],
+        stressed: &[bool],
+        rebalances: &[RebalanceLog],
+    ) -> Vec<WindowMetrics> {
+        let n = completions.len();
+        let tput: Vec<f64> = completions
+            .iter()
+            .map(|c| {
+                let b = c.stage_times.iter().copied().fold(0.0f64, f64::max);
+                1.0 / b.max(1e-12)
+            })
+            .collect();
+        // quiet-phase peak; a fully-stressed run falls back to the best
+        // observed throughput
+        let peak = tput
+            .iter()
+            .zip(stressed)
+            .filter(|(_, &s)| !s)
+            .map(|(&t, _)| t)
+            .fold(0.0f64, f64::max)
+            .max(if stressed.iter().all(|&s| s) {
+                tput.iter().copied().fold(0.0f64, f64::max)
+            } else {
+                0.0
+            });
+        let target = self.opts.slo_level * peak;
+        let mut out = Vec::new();
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + self.opts.window).min(n);
+            let lats: Vec<f64> =
+                completions[start..end].iter().map(|c| c.latency).collect();
+            let lat_mean = lats.iter().sum::<f64>() / lats.len() as f64;
+            let lat_max = lats.iter().copied().fold(0.0f64, f64::max);
+            let tput_mean =
+                tput[start..end].iter().sum::<f64>() / (end - start) as f64;
+            let span_start = if start == 0 { 0.0 } else { wall[start - 1] };
+            let span = (wall[end - 1] - span_start).max(1e-12);
+            let wall_tput = (end - start) as f64 / span;
+            let in_window = |e: &&RebalanceLog| {
+                e.at_query >= start && e.at_query < end
+            };
+            let serial_queries: usize =
+                rebalances.iter().filter(in_window).map(|e| e.trials).sum();
+            let rebalance_count = rebalances.iter().filter(in_window).count();
+            let slo_violations =
+                tput[start..end].iter().filter(|&&t| t < target).count();
+            let active: usize = (start..end)
+                .map(|q| {
+                    self.schedule.at(q).iter().filter(|&&s| s != 0).count()
+                })
+                .sum();
+            let interference_load = active as f64
+                / ((end - start) * self.scenario.num_eps) as f64;
+            out.push(WindowMetrics {
+                index: out.len(),
+                start,
+                end,
+                lat_mean,
+                lat_max,
+                tput_mean,
+                wall_tput,
+                serial_queries,
+                rebalances: rebalance_count,
+                slo_violations,
+                interference_load,
+            });
+            start = end;
+        }
+        out
+    }
+}
+
+/// The `live_<scenario>.json` document. Its `windows` array is emitted by
+/// the *same* [`windows_json`] the simulator uses, so the per-window key
+/// set is byte-identical to `scenario_<name>.json`'s.
+pub fn live_json(
+    driver: &ScenarioDriver,
+    run: &LiveRun,
+    model: &str,
+    admission_depth: usize,
+) -> Value {
+    let scenario = driver.scenario();
+    let rebalances = Value::arr(
+        run.rebalance_log
+            .iter()
+            .map(|e| {
+                Value::obj(vec![
+                    ("at_query", Value::from(e.at_query)),
+                    ("from", Value::from(e.old_config.to_string())),
+                    ("to", Value::from(e.new_config.to_string())),
+                    ("trials", Value::from(e.trials)),
+                ])
+            })
+            .collect(),
+    );
+    let thresholds = Value::arr(
+        run.thresholds
+            .iter()
+            .map(|&(q, t)| {
+                Value::obj(vec![
+                    ("at_query", Value::from(q)),
+                    ("threshold", Value::from(t)),
+                ])
+            })
+            .collect(),
+    );
+    Value::obj(vec![
+        ("admission_depth", Value::from(admission_depth)),
+        ("auto_threshold", Value::from(driver.opts.auto_threshold)),
+        ("eps", Value::from(scenario.num_eps)),
+        ("final_config", Value::from(run.final_config.clone())),
+        ("model", Value::from(model)),
+        ("name", Value::from(scenario.name.clone())),
+        ("policy", Value::from("odin_live")),
+        ("queries", Value::from(scenario.num_queries)),
+        ("rebalances", rebalances),
+        (
+            "serial_probes",
+            Value::from(
+                run.rebalance_log.iter().map(|e| e.trials).sum::<usize>(),
+            ),
+        ),
+        ("slo_level", Value::from(driver.opts.slo_level)),
+        ("stressor_launches", Value::from(run.stressor_launches)),
+        ("stressor_work", Value::from(run.stressor_work as f64)),
+        ("threshold", Value::from(run.final_threshold)),
+        ("thresholds", thresholds),
+        ("wall_seconds", Value::from(run.wall_seconds)),
+        ("window", Value::from(driver.opts.window)),
+        ("windows", windows_json(&run.windows)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::optimal_config;
+    use crate::database::synth::synthesize;
+    use crate::interference::Phase;
+    use crate::models;
+    use crate::runtime::{ExecHandle, SynthBackend};
+    use crate::serving::ServerOpts;
+
+    /// A 20-query, 2-EP scenario with one short 2-thread CPU task.
+    fn tiny_scenario() -> DynamicScenario {
+        DynamicScenario::new(
+            "tiny",
+            2,
+            20,
+            vec![Phase::Task { start: 8, end: 14, ep: 1, scenario: 1 }],
+            Vec::new(),
+        )
+        .unwrap()
+    }
+
+    fn tiny_server(eps: usize) -> (PipelineServer, Vec<Tensor>) {
+        let spec = models::build("vgg16", 8).unwrap();
+        let backend = SynthBackend::new(&spec, 0.5);
+        let shape = backend.input_shape();
+        let db = synthesize(&spec, 7);
+        let (config, _) = optimal_config(&db, &vec![0usize; eps], eps);
+        let server = PipelineServer::new(
+            ExecHandle::synthetic(backend),
+            config,
+            ServerOpts {
+                num_eps: eps,
+                cores_per_ep: 1,
+                detect_threshold: 10.0, // keep this test rebalance-free
+                alpha: 2,
+                confirm_triggers: 1,
+                admission_depth: 2,
+            },
+        );
+        let inputs =
+            (0..20).map(|i| Tensor::random(&shape, i, 1.0)).collect();
+        (server, inputs)
+    }
+
+    #[test]
+    fn rack_launches_and_stops_per_ep() {
+        let mut rack = StressorRack::new(2, 1);
+        rack.sync(&[0, 1]);
+        assert_eq!(rack.launches, 1);
+        rack.sync(&[0, 1]); // idempotent between boundaries
+        assert_eq!(rack.launches, 1);
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        rack.sync(&[2, 0]); // EP 1 stops, EP 0 starts
+        assert_eq!(rack.launches, 2);
+        assert!(rack.work_done > 0, "stopped stressor reported no work");
+        rack.stop_all();
+        assert!(rack.active.iter().all(|s| s.is_none()));
+    }
+
+    #[test]
+    fn run_partitions_windows_and_tracks_stress() {
+        let (mut server, inputs) = tiny_server(2);
+        let driver = ScenarioDriver::new(
+            tiny_scenario(),
+            HarnessOpts { window: 5, cores_per_ep: 1, ..HarnessOpts::default() },
+        );
+        let run = driver.run(&mut server, inputs).unwrap();
+        assert_eq!(run.completions.len(), 20);
+        assert_eq!(run.stressed.len(), 20);
+        assert_eq!(
+            run.stressed.iter().filter(|&&s| s).count(),
+            6,
+            "task spans queries 8..14"
+        );
+        assert!(run.stressor_work > 0);
+        assert_eq!(run.stressor_launches, 1);
+        // windows partition [0, 20) and wall offsets are monotone
+        assert_eq!(run.windows.len(), 4);
+        for (i, w) in run.windows.iter().enumerate() {
+            assert_eq!((w.index, w.start, w.end), (i, i * 5, i * 5 + 5));
+            assert!(w.lat_mean > 0.0 && w.lat_mean <= w.lat_max);
+            assert!(w.tput_mean > 0.0 && w.wall_tput > 0.0);
+        }
+        assert!(run.wall.windows(2).all(|p| p[0] <= p[1]));
+        // interference_load mirrors the schedule: window [5,10) holds 2
+        // stressed slots of 10, window [10,15) holds 4 of 10
+        assert!((run.windows[1].interference_load - 0.2).abs() < 1e-12);
+        assert!((run.windows[2].interference_load - 0.4).abs() < 1e-12);
+        assert_eq!(run.windows[0].interference_load, 0.0);
+        // the live document carries the simulator's window key schema
+        let doc = live_json(&driver, &run, "vgg16", 2);
+        let row = doc.get("windows").idx(0);
+        for key in [
+            "window",
+            "start",
+            "end",
+            "lat_mean",
+            "lat_max",
+            "tput_mean",
+            "wall_tput",
+            "serial_queries",
+            "rebalances",
+            "slo_violations",
+            "interference_load",
+        ] {
+            assert!(!row.get(key).is_null(), "missing window key {key}");
+        }
+        assert_eq!(row.keys().len(), 11);
+    }
+
+    #[test]
+    fn reused_server_reports_run_relative_rebalances() {
+        // a second run on the same server must window its rebalances on
+        // the new run's query axis, not the server's lifetime axis
+        let (mut server, inputs) = tiny_server(2);
+        let driver = ScenarioDriver::new(
+            tiny_scenario(),
+            HarnessOpts { window: 5, cores_per_ep: 1, ..HarnessOpts::default() },
+        );
+        driver.run(&mut server, inputs).unwrap();
+        let inputs2: Vec<Tensor> = (0..20)
+            .map(|i| Tensor::random(&[1, 8, 8, 3], i + 100, 1.0))
+            .collect();
+        let run2 = driver.run(&mut server, inputs2).unwrap();
+        assert_eq!(run2.completions.len(), 20);
+        for e in &run2.rebalance_log {
+            assert!(e.at_query < 20, "lifetime index leaked: {}", e.at_query);
+        }
+        // conservation between the log and the windows still holds
+        let serial: usize =
+            run2.windows.iter().map(|w| w.serial_queries).sum();
+        let trials: usize =
+            run2.rebalance_log.iter().map(|e| e.trials).sum();
+        assert_eq!(serial, trials);
+        let n_rebal: usize = run2.windows.iter().map(|w| w.rebalances).sum();
+        assert_eq!(n_rebal, run2.rebalance_log.len());
+    }
+
+    #[test]
+    fn run_rejects_mismatched_inputs_or_stage_count() {
+        let (mut server, mut inputs) = tiny_server(2);
+        inputs.pop();
+        let driver =
+            ScenarioDriver::new(tiny_scenario(), HarnessOpts::default());
+        let e = driver.run(&mut server, inputs).unwrap_err();
+        assert!(format!("{e:#}").contains("19 inputs"), "{e:#}");
+        // a 4-stage server cannot serve a 2-EP scenario
+        let (mut server4, _) = tiny_server(4);
+        let shape = vec![1, 8, 8, 3];
+        let inputs: Vec<Tensor> =
+            (0..20).map(|i| Tensor::random(&shape, i, 1.0)).collect();
+        let e = driver.run(&mut server4, inputs).unwrap_err();
+        assert!(format!("{e:#}").contains("4 stages"), "{e:#}");
+    }
+}

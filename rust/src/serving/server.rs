@@ -1,13 +1,17 @@
 //! The bind-to-stage pipeline server: one worker thread per pipeline
 //! stage (= execution place), tensors flowing stage-to-stage over
 //! channels, with online monitoring and ODIN rebalancing between queries.
+//! Admission keeps up to `admission_depth` queries in flight (1 = strict
+//! lock-step), pausing to drain whenever the monitor confirms a trigger.
 //!
 //! Stage workers are pinned to their EP's cores when the host has them
-//! (util::affinity degrades gracefully on smaller machines). All XLA
-//! execution funnels through the [`crate::runtime::ExecService`] thread —
-//! the paper's "EP" isolation is then enforced by pinning on real
-//! hardware, while the message flow (admission → stage 0 → … → stage N−1
-//! → completion) is identical everywhere.
+//! (util::affinity degrades gracefully on smaller machines). XLA
+//! execution funnels through the [`crate::runtime::ExecService`] thread,
+//! while the synthetic backend ([`crate::runtime::SynthBackend`])
+//! computes inline on the pinned worker itself — either way the message
+//! flow (admission → stage 0 → … → stage N−1 → completion) is identical,
+//! and the paper's "EP" isolation is enforced by pinning on real
+//! hardware.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -15,11 +19,11 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::coordinator::{Monitor, Odin, RebalanceResult};
-use crate::err;
 use crate::pipeline::PipelineConfig;
 use crate::runtime::{ExecHandle, Tensor};
 use crate::util::affinity;
 use crate::util::error::Result;
+use crate::{bail, err};
 
 use super::live_eval::LiveEval;
 
@@ -56,6 +60,13 @@ pub struct ServerOpts {
     /// Smoothing: rebalance only after this many consecutive triggers
     /// (real measurements are noisy; the simulator uses 1).
     pub confirm_triggers: usize,
+    /// Bounded in-flight admission window: how many queries may travel
+    /// the pipeline concurrently. Depth 1 is strict lock-step (admit,
+    /// wait, repeat — the historical behavior); deeper windows overlap
+    /// queries across stage workers so pipeline parallelism is real
+    /// under load. Admission always pauses while a rebalance is due so
+    /// exploration probes still run on a drained pipeline.
+    pub admission_depth: usize,
 }
 
 impl Default for ServerOpts {
@@ -66,6 +77,7 @@ impl Default for ServerOpts {
             detect_threshold: 0.25,
             alpha: 2,
             confirm_triggers: 2,
+            admission_depth: 1,
         }
     }
 }
@@ -92,6 +104,13 @@ pub struct PipelineServer {
     completions: Receiver<QueryMsg>,
     workers: Vec<JoinHandle<()>>,
     queries_done: usize,
+    /// Queries admitted but not yet completed.
+    in_flight: usize,
+    /// Id assigned to the next admitted query.
+    next_id: usize,
+    /// The monitor confirmed a trigger; the pipeline must drain and
+    /// rebalance before admission resumes.
+    rebalance_due: bool,
     /// Shape of served queries (captured from the first one; probes
     /// during rebalancing reuse it).
     input_shape: Option<Vec<usize>>,
@@ -131,6 +150,7 @@ impl PipelineServer {
             );
         }
         drop(senders); // workers + injector hold the live clones
+        assert!(opts.admission_depth >= 1, "admission_depth must be >= 1");
         let mut monitor = Monitor::new(opts.detect_threshold);
         monitor.set_baseline(f64::INFINITY); // blessed on first query
         PipelineServer {
@@ -144,6 +164,9 @@ impl PipelineServer {
             completions,
             workers,
             queries_done: 0,
+            in_flight: 0,
+            next_id: 0,
+            rebalance_due: false,
             input_shape: None,
         }
     }
@@ -152,65 +175,151 @@ impl PipelineServer {
         &self.config
     }
 
-    /// Serve a stream of queries with online monitoring + rebalancing.
-    /// Returns one [`Completion`] per input (order preserved), including
-    /// the serial probe queries spent inside rebalancing phases.
-    pub fn serve(&mut self, inputs: Vec<Tensor>) -> Result<Vec<Completion>> {
-        let mut out = Vec::with_capacity(inputs.len());
-        let mut first = true;
-        for (id, tensor) in inputs.into_iter().enumerate() {
-            if self.input_shape.is_none() {
-                self.input_shape = Some(tensor.shape.clone());
-            }
-            let ranges = Arc::new(self.config.ranges());
-            let admitted = Instant::now();
-            self.injector
-                .send(QueryMsg {
-                    id,
-                    tensor,
-                    ranges,
-                    admitted,
-                    stage_times: Vec::new(),
-                })
-                .map_err(|_| err!("pipeline workers gone"))?;
-            // lock-step: wait for completion before admitting the next —
-            // keeps monitoring simple and exact; the pipeline parallelism
-            // is still real on multi-EP hosts because stage workers run
-            // concurrently across *different* queries when callers batch.
-            let msg = self
-                .completions
-                .recv()
-                .map_err(|_| err!("pipeline drained unexpectedly"))?;
-            let latency = msg.admitted.elapsed().as_secs_f64();
-            if first {
-                self.monitor.set_baseline_times(&msg.stage_times);
-                first = false;
-            }
-            let trigger = self.monitor.observe(&msg.stage_times);
-            out.push(Completion {
-                id: msg.id,
-                latency,
-                stage_times: msg.stage_times,
-                output: msg.tensor,
-                serial: false,
-            });
-            self.queries_done += 1;
+    /// Queries admitted but not yet completed.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
 
-            if trigger.is_some() {
-                self.pending_triggers += 1;
-            } else {
-                self.pending_triggers = 0;
+    /// The bounded in-flight admission window (1 = lock-step).
+    pub fn admission_depth(&self) -> usize {
+        self.opts.admission_depth
+    }
+
+    /// Completed (non-probe) queries so far.
+    pub fn queries_done(&self) -> usize {
+        self.queries_done
+    }
+
+    /// True when the monitor has confirmed a trigger: the caller should
+    /// stop admitting, drain, and call [`rebalance_now`](Self::rebalance_now).
+    pub fn rebalance_due(&self) -> bool {
+        self.rebalance_due
+    }
+
+    /// Current monitor threshold (auto-tuning changes it at runtime).
+    pub fn detect_threshold(&self) -> f64 {
+        self.monitor.threshold
+    }
+
+    /// Bottleneck noise ratio observed since the last blessed baseline.
+    pub fn noise_ratio(&self) -> f64 {
+        self.monitor.noise_ratio()
+    }
+
+    /// Observations feeding the noise tracker since the last baseline.
+    pub fn noise_samples(&self) -> usize {
+        self.monitor.noise_samples()
+    }
+
+    /// Re-derive the detection threshold from observed noise (call during
+    /// quiet windows — see [`Monitor::autotune`]). Returns the new value.
+    pub fn autotune_threshold(&mut self) -> f64 {
+        self.monitor.autotune()
+    }
+
+    /// Restart noise accumulation (baseline untouched) — see
+    /// [`Monitor::reset_noise`].
+    pub fn reset_monitor_noise(&mut self) {
+        self.monitor.reset_noise();
+    }
+
+    /// Admit one query into the pipeline (non-blocking). Returns its id.
+    pub fn admit(&mut self, tensor: Tensor) -> Result<usize> {
+        if self.input_shape.is_none() {
+            self.input_shape = Some(tensor.shape.clone());
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let ranges = Arc::new(self.config.ranges());
+        self.injector
+            .send(QueryMsg {
+                id,
+                tensor,
+                ranges,
+                admitted: Instant::now(),
+                stage_times: Vec::new(),
+            })
+            .map_err(|_| err!("pipeline workers gone"))?;
+        self.in_flight += 1;
+        Ok(id)
+    }
+
+    /// Block for the next completion (admission order) and feed the
+    /// monitor. May set [`rebalance_due`](Self::rebalance_due).
+    pub fn recv_completion(&mut self) -> Result<Completion> {
+        if self.in_flight == 0 {
+            // the channel stays open (we hold the injector), so a recv
+            // here would block forever instead of erroring
+            bail!("recv_completion with no query in flight");
+        }
+        let msg = self
+            .completions
+            .recv()
+            .map_err(|_| err!("pipeline drained unexpectedly"))?;
+        self.in_flight -= 1;
+        let latency = msg.admitted.elapsed().as_secs_f64();
+        // an INFINITY baseline (startup / just rebalanced) blesses this
+        // observation instead of judging it — see Monitor::observe
+        let trigger = self.monitor.observe(&msg.stage_times);
+        self.queries_done += 1;
+        if trigger.is_some() {
+            self.pending_triggers += 1;
+        } else {
+            self.pending_triggers = 0;
+        }
+        if self.pending_triggers >= self.opts.confirm_triggers {
+            self.pending_triggers = 0;
+            self.rebalance_due = true;
+        }
+        Ok(Completion {
+            id: msg.id,
+            latency,
+            stage_times: msg.stage_times,
+            output: msg.tensor,
+            serial: false,
+        })
+    }
+
+    /// Serve a stream of queries with online monitoring + rebalancing,
+    /// keeping up to `opts.admission_depth` queries in flight. Returns one
+    /// [`Completion`] per input (order preserved); the serial probe
+    /// queries spent inside rebalancing phases are logged in
+    /// `rebalance_log`, not returned.
+    pub fn serve(&mut self, inputs: Vec<Tensor>) -> Result<Vec<Completion>> {
+        let n = inputs.len();
+        let mut out = Vec::with_capacity(n);
+        let mut pending = inputs.into_iter();
+        while out.len() < n {
+            if self.rebalance_due && self.in_flight == 0 {
+                self.rebalance_now()?;
             }
-            if self.pending_triggers >= self.opts.confirm_triggers {
-                self.pending_triggers = 0;
-                self.rebalance()?;
+            while self.in_flight < self.opts.admission_depth
+                && !self.rebalance_due
+            {
+                let Some(tensor) = pending.next() else { break };
+                self.admit(tensor)?;
             }
+            if self.in_flight == 0 {
+                continue; // rebalance due with nothing left to drain
+            }
+            out.push(self.recv_completion()?);
         }
         Ok(out)
     }
 
     /// Run ODIN online: live serial probes through trial configurations.
-    fn rebalance(&mut self) -> Result<()> {
+    /// The pipeline must be drained (`in_flight == 0`) — probes process
+    /// serially, exactly as the paper charges exploration overhead.
+    pub fn rebalance_now(&mut self) -> Result<&RebalanceLog> {
+        if self.in_flight > 0 {
+            bail!(
+                "rebalance with {} queries in flight: drain the pipeline \
+                 first",
+                self.in_flight
+            );
+        }
+        self.rebalance_due = false;
+        self.pending_triggers = 0;
         let shape = self
             .input_shape
             .clone()
@@ -234,10 +343,11 @@ impl PipelineServer {
             new_config: result.config.clone(),
         });
         self.config = result.config;
-        // bless the new config with a fresh serial probe
-        let times = eval.probe(&self.config)?;
-        self.monitor.set_baseline_times(&times);
-        Ok(())
+        // bless the new configuration from the next completion the pinned
+        // stage workers produce (probe threads are not pinned to EP
+        // cores, so probe times would bias the reference)
+        self.monitor.set_baseline(f64::INFINITY);
+        Ok(self.rebalance_log.last().unwrap())
     }
 }
 
@@ -278,6 +388,106 @@ impl Drop for PipelineServer {
         let _ = std::mem::replace(&mut self.injector, tx);
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::optimal_config;
+    use crate::database::synth::synthesize;
+    use crate::models;
+    use crate::runtime::SynthBackend;
+
+    fn server(eps: usize, depth: usize, threshold: f64) -> PipelineServer {
+        let spec = models::build("vgg16", 8).unwrap();
+        let backend = SynthBackend::new(&spec, 0.5);
+        let db = synthesize(&spec, 7);
+        let (config, _) = optimal_config(&db, &vec![0usize; eps], eps);
+        PipelineServer::new(
+            ExecHandle::synthetic(backend),
+            config,
+            ServerOpts {
+                num_eps: eps,
+                cores_per_ep: 1,
+                detect_threshold: threshold,
+                alpha: 2,
+                confirm_triggers: 1,
+                admission_depth: depth,
+            },
+        )
+    }
+
+    fn inputs(n: usize) -> Vec<Tensor> {
+        (0..n).map(|i| Tensor::random(&[1, 8, 8, 3], i as u64, 1.0)).collect()
+    }
+
+    #[test]
+    fn lock_step_serve_preserves_order() {
+        let mut s = server(2, 1, 10.0); // threshold 10 = never rebalance
+        let done = s.serve(inputs(6)).unwrap();
+        assert_eq!(done.len(), 6);
+        for (i, c) in done.iter().enumerate() {
+            assert_eq!(c.id, i);
+            assert!(c.latency > 0.0 && c.latency.is_finite());
+            assert_eq!(c.stage_times.len(), 2);
+        }
+        assert_eq!(s.queries_done(), 6);
+        assert_eq!(s.in_flight(), 0);
+        assert!(s.rebalance_log.is_empty());
+    }
+
+    #[test]
+    fn windowed_admission_overlaps_queries() {
+        let mut s = server(2, 3, 10.0);
+        assert_eq!(s.admission_depth(), 3);
+        for x in inputs(3) {
+            s.admit(x).unwrap();
+        }
+        assert_eq!(s.in_flight(), 3);
+        let c0 = s.recv_completion().unwrap();
+        assert_eq!((c0.id, s.in_flight()), (0, 2));
+        let c1 = s.recv_completion().unwrap();
+        let c2 = s.recv_completion().unwrap();
+        assert_eq!((c1.id, c2.id, s.in_flight()), (1, 2, 0));
+        // serve() with a deep window returns the same contract
+        let done = s.serve(inputs(8)).unwrap();
+        assert_eq!(done.len(), 8);
+        let ids: Vec<usize> = done.iter().map(|c| c.id).collect();
+        assert_eq!(ids, (3..11).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn recv_with_nothing_in_flight_errors_not_blocks() {
+        let mut s = server(2, 1, 10.0);
+        let e = s.recv_completion().unwrap_err();
+        assert!(format!("{e:#}").contains("no query in flight"), "{e:#}");
+    }
+
+    #[test]
+    fn rebalance_requires_drained_pipeline() {
+        let mut s = server(2, 2, 10.0);
+        s.admit(inputs(1).pop().unwrap()).unwrap();
+        let e = s.rebalance_now().unwrap_err();
+        assert!(format!("{e:#}").contains("in flight"), "{e:#}");
+        s.recv_completion().unwrap();
+        // drained: live probes run and the episode is logged
+        s.rebalance_now().unwrap();
+        assert_eq!(s.rebalance_log.len(), 1);
+        assert!(s.rebalance_log[0].trials >= 1);
+        // post-rebalance the monitor re-blesses from the next completion
+        let done = s.serve(inputs(2)).unwrap();
+        assert_eq!(done.len(), 2);
+    }
+
+    #[test]
+    fn depth_one_and_depth_four_serve_identical_streams() {
+        for depth in [1, 4] {
+            let mut s = server(4, depth, 10.0);
+            let done = s.serve(inputs(10)).unwrap();
+            assert_eq!(done.len(), 10, "depth {depth}");
+            assert!(done.iter().all(|c| c.latency > 0.0));
         }
     }
 }

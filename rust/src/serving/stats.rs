@@ -9,7 +9,18 @@ use super::server::Completion;
 
 /// Completion-order window width for the live per-window track (the live
 /// path serves tens of queries, not thousands, so the window is small).
+/// The scenario harness ([`super::harness`]) reports its `live_*.json`
+/// timelines in the same currency by default.
 pub const SERVE_WINDOW: usize = 8;
+
+/// Chunk a per-query series into `window`-sized means (the last chunk may
+/// be short) — the shared accounting of the SERVE_WINDOW track.
+pub fn window_means(xs: &[f64], window: usize) -> Vec<f64> {
+    assert!(window >= 1, "window must be >= 1");
+    xs.chunks(window)
+        .map(|w| w.iter().sum::<f64>() / w.len() as f64)
+        .collect()
+}
 
 #[derive(Clone, Debug)]
 pub struct ServeReport {
@@ -28,10 +39,7 @@ impl ServeReport {
     pub fn of(completions: &[Completion], wall_seconds: f64) -> ServeReport {
         assert!(!completions.is_empty());
         let lat: Vec<f64> = completions.iter().map(|c| c.latency).collect();
-        let windows: Vec<f64> = lat
-            .chunks(SERVE_WINDOW)
-            .map(|w| w.iter().sum::<f64>() / w.len() as f64)
-            .collect();
+        let windows = window_means(&lat, SERVE_WINDOW);
         ServeReport {
             queries: completions.len(),
             latency: Summary::of(&lat),

@@ -1,0 +1,242 @@
+//! Integration suite for the live scenario harness (ISSUE 3): drive the
+//! real `PipelineServer` from the `burst` builtin with genuine stressors
+//! on the calibrated synthetic backend, and lock down the contract —
+//! completion integrity, stressor-era rebalancing, the live-vs-simulated
+//! window schema, and thread hygiene.
+//!
+//! Timing-sensitive by nature: the work budgets and thresholds below are
+//! sized so an 8-thread stressor timesharing the victim stage's cores
+//! inflates its measured time far beyond the 20% detection threshold on
+//! any host, loaded CI runners included.
+
+use std::sync::Mutex;
+
+use odin::coordinator::optimal_config;
+use odin::database::synth::synthesize;
+use odin::interference::dynamic::builtin;
+use odin::interference::{Scenario, StressKind};
+use odin::json::{parse, to_string_pretty};
+use odin::models;
+use odin::runtime::{ExecHandle, SynthBackend, Tensor};
+use odin::serving::{
+    live_json, HarnessOpts, PipelineServer, ScenarioDriver, ServerOpts,
+};
+use odin::simulator::{
+    simulate, window_metrics, windows_json, Policy, SimConfig,
+};
+use odin::util::affinity;
+
+/// The thread-hygiene test counts this process's `odin-*` threads; hold
+/// this across every test here so concurrent harness runs cannot skew it.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Count live threads named `odin-*` (stage workers, stressors, the exec
+/// service) via /proc — immune to the test harness's own thread pool.
+/// None when /proc is unavailable (non-Linux).
+fn odin_threads() -> Option<usize> {
+    let dir = std::fs::read_dir("/proc/self/task").ok()?;
+    let mut n = 0;
+    for entry in dir.flatten() {
+        let comm = std::fs::read_to_string(entry.path().join("comm"))
+            .unwrap_or_default();
+        if comm.trim_end().starts_with("odin-") {
+            n += 1;
+        }
+    }
+    Some(n)
+}
+
+/// Build a server + driver over a tiny model (vgg16 @ spatial 8, ~`ms`
+/// milliseconds of calibrated busy-work per query).
+fn rig(
+    queries: usize,
+    eps: usize,
+    ms: f64,
+) -> (PipelineServer, ScenarioDriver, Vec<Tensor>) {
+    let scenario = builtin("burst").unwrap().adapted(queries, eps).unwrap();
+    let spec = models::build("vgg16", 8).unwrap();
+    let backend = SynthBackend::new(&spec, ms);
+    let shape = backend.input_shape();
+    let db = synthesize(&spec, 7);
+    let (config, _) = optimal_config(&db, &vec![0usize; eps], eps);
+    let cores_per_ep = (affinity::num_cpus() / eps).max(1);
+    let opts = ServerOpts {
+        num_eps: eps,
+        cores_per_ep,
+        detect_threshold: 0.2,
+        alpha: 2,
+        confirm_triggers: 1,
+        admission_depth: 2,
+    };
+    let server =
+        PipelineServer::new(ExecHandle::synthetic(backend), config, opts);
+    let driver = ScenarioDriver::new(
+        scenario,
+        HarnessOpts { cores_per_ep, ..HarnessOpts::default() },
+    );
+    let inputs = (0..queries)
+        .map(|i| Tensor::random(&shape, i as u64, 1.0))
+        .collect();
+    (server, driver, inputs)
+}
+
+#[test]
+fn burst_scenario_live_end_to_end() {
+    let _g = lock();
+    let queries = 200;
+    let (mut server, driver, inputs) = rig(queries, 4, 1.5);
+    let run = driver.run(&mut server, inputs).unwrap();
+
+    // (a) every query completes, in order, with positive finite latency
+    assert_eq!(run.completions.len(), queries);
+    for (i, c) in run.completions.iter().enumerate() {
+        assert_eq!(c.id, i, "completion order broken");
+        assert!(c.latency > 0.0 && c.latency.is_finite(), "query {i}");
+        assert_eq!(c.stage_times.len(), 4);
+    }
+    // the stressors genuinely ran at phase boundaries
+    assert!(run.stressor_work > 0, "stressors did no work");
+    assert!(run.stressor_launches >= 2, "{} launches", run.stressor_launches);
+    assert!(run.stressed.iter().any(|&s| s));
+    assert!(run.stressed.iter().any(|&s| !s));
+
+    // (b) at least one rebalance landed while a CPU stressor was active
+    // (burst's EP-3 phase is cpu_8t_same; at_query is a completion index,
+    // so also accept the admission slot one behind it)
+    let cpu_active = |q: usize| {
+        driver.schedule().at(q.min(queries - 1)).iter().any(|&id| {
+            id != 0
+                && matches!(Scenario::by_id(id).unwrap().kind, StressKind::Cpu)
+        })
+    };
+    assert!(!run.rebalance_log.is_empty(), "monitor never fired");
+    assert!(
+        run.rebalance_log
+            .iter()
+            .any(|e| cpu_active(e.at_query)
+                || cpu_active(e.at_query.saturating_sub(1))),
+        "no rebalance inside a cpu burst; rebalances at {:?}",
+        run.rebalance_log.iter().map(|e| e.at_query).collect::<Vec<_>>()
+    );
+    for e in &run.rebalance_log {
+        assert!(e.trials >= 1);
+    }
+
+    // (c) the live document parses and its per-window key set is exactly
+    // the simulator's window schema
+    let doc = live_json(&driver, &run, "vgg16", 2);
+    let parsed = parse(&to_string_pretty(&doc)).unwrap();
+    assert_eq!(parsed.get("name").as_str(), Some("burst"));
+    assert_eq!(parsed.get("queries").as_usize(), Some(queries));
+    let live_rows = parsed.get("windows").as_arr().unwrap();
+    assert!(!live_rows.is_empty());
+    assert_eq!(live_rows.last().unwrap().get("end").as_usize(), Some(queries));
+    let db = synthesize(&models::build("vgg16", 8).unwrap(), 7);
+    let sim = simulate(
+        &db,
+        driver.schedule(),
+        &SimConfig::new(4, Policy::Odin { alpha: 2 }).with_window(50),
+    );
+    let sim_rows = windows_json(&window_metrics(&sim, driver.schedule(), 50, 0.7));
+    let sim_keys = sim_rows.idx(0).keys();
+    assert!(!sim_keys.is_empty());
+    for row in live_rows {
+        assert_eq!(row.keys(), sim_keys, "live window schema drifted");
+    }
+
+    // per-window bookkeeping is conserved
+    let serial_total: usize = run.windows.iter().map(|w| w.serial_queries).sum();
+    let trials_total: usize = run.rebalance_log.iter().map(|e| e.trials).sum();
+    assert_eq!(serial_total, trials_total);
+    let rebalances: usize = run.windows.iter().map(|w| w.rebalances).sum();
+    assert_eq!(rebalances, run.rebalance_log.len());
+    assert!(run.windows.iter().any(|w| w.interference_load > 0.0));
+    assert!(run.windows.iter().any(|w| w.interference_load == 0.0));
+}
+
+#[test]
+fn drop_leaks_no_stressor_or_worker_threads() {
+    let _g = lock();
+    let Some(before) = odin_threads() else {
+        return; // /proc not available on this platform
+    };
+    assert_eq!(before, 0, "stale odin threads before the run");
+    {
+        let queries = 40;
+        let (mut server, driver, inputs) = rig(queries, 2, 1.0);
+        let run = driver.run(&mut server, inputs).unwrap();
+        assert_eq!(run.completions.len(), queries);
+        assert!(run.stressor_work > 0);
+        // stressors already stopped inside run(); the stage workers are
+        // still alive while the server is
+        assert!(odin_threads().unwrap() >= 2, "stage workers not running");
+        // server (stage workers) and driver (stressor rack) drop here
+    }
+    let mut after = odin_threads().unwrap();
+    for _ in 0..100 {
+        if after == 0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        after = odin_threads().unwrap();
+    }
+    assert_eq!(after, 0, "leaked {after} odin-* threads");
+}
+
+#[test]
+fn auto_threshold_rederives_in_quiet_windows() {
+    let _g = lock();
+    let queries = 120;
+    let scenario = builtin("burst").unwrap().adapted(queries, 2).unwrap();
+    let spec = models::build("vgg16", 8).unwrap();
+    let backend = SynthBackend::new(&spec, 1.0);
+    let shape = backend.input_shape();
+    let db = synthesize(&spec, 7);
+    let (config, _) = optimal_config(&db, &vec![0usize; 2], 2);
+    let cores_per_ep = (affinity::num_cpus() / 2).max(1);
+    let opts = ServerOpts {
+        num_eps: 2,
+        cores_per_ep,
+        detect_threshold: 0.2,
+        alpha: 2,
+        confirm_triggers: 1,
+        admission_depth: 1,
+    };
+    let mut server =
+        PipelineServer::new(ExecHandle::synthetic(backend), config, opts);
+    let driver = ScenarioDriver::new(
+        scenario,
+        HarnessOpts {
+            auto_threshold: true,
+            cores_per_ep,
+            // 4-query windows: the scaled burst's quiet gaps are shorter
+            // than the default 8-query window, and re-derivation only
+            // fires on fully-quiet windows
+            window: 4,
+            ..HarnessOpts::default()
+        },
+    );
+    let inputs: Vec<Tensor> = (0..queries)
+        .map(|i| Tensor::random(&shape, i as u64, 1.0))
+        .collect();
+    let run = driver.run(&mut server, inputs).unwrap();
+    assert_eq!(run.completions.len(), queries);
+    // quiet windows exist in the scaled burst, so at least one
+    // re-derivation fired, every value within the clamp bounds, and the
+    // final threshold is the last derived one
+    assert!(!run.thresholds.is_empty(), "auto-threshold never fired");
+    for &(q, t) in &run.thresholds {
+        assert!(q < queries);
+        assert!(
+            (odin::coordinator::monitor::THRESHOLD_MIN
+                ..=odin::coordinator::monitor::THRESHOLD_MAX)
+                .contains(&t),
+            "threshold {t} out of bounds"
+        );
+    }
+    assert_eq!(run.final_threshold, run.thresholds.last().unwrap().1);
+}

@@ -102,6 +102,40 @@ fn valid_file_roundtrips_through_resolve_and_compiles() {
 }
 
 #[test]
+fn parsed_scenarios_survive_horizon_scaling() {
+    // the --queries path: a scenario loaded from JSON, rescaled to a new
+    // horizon, must re-validate and compile with no past-horizon or
+    // overlap regressions — at shrunken, grown, and identity scales
+    let text = r#"{
+      "name": "scale-me", "eps": 4, "queries": 1000,
+      "phases": [
+        {"kind": "burst", "start": 0, "period": 200, "duration": 50,
+         "ep": 0, "scenario": 3},
+        {"kind": "ramp", "start": 100, "end": 600, "ep": 1,
+         "levels": [7, 8, 9]},
+        {"kind": "task", "start": 200, "end": 700, "ep": 2, "scenario": 6},
+        {"kind": "migrate", "start": 700, "end": 900, "period": 50,
+         "scenario": 8}
+      ]
+    }"#;
+    let base = DynamicScenario::from_json_str(text).unwrap();
+    for q in [100, 1000, 5000] {
+        let s = base.scaled(q).unwrap_or_else(|e| panic!("scale {q}: {e:#}"));
+        assert_eq!(s.num_queries, q);
+        assert_eq!(s.phases.len(), 4);
+        let sched = s.compile();
+        assert_eq!(sched.num_queries(), q);
+        assert!(sched.interference_load() > 0.0, "scale {q} lost load");
+        assert!(!sched.change_points.is_empty());
+    }
+    // identity scale is exact, and an impossible target errors with the
+    // adapting context instead of panicking
+    assert_eq!(base.scaled(1000).unwrap(), base);
+    let e = base.scaled(2).unwrap_err();
+    assert!(rendered(&e).contains("adapting"), "{e:#}");
+}
+
+#[test]
 fn scenario_ids_and_eps_validated_through_json() {
     // scenario id 13 (out of the Table-1 catalogue)
     let e = DynamicScenario::from_json_str(
