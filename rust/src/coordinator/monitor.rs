@@ -10,7 +10,7 @@
 //! interference receded somewhere (→ rebalance to reclaim the EP — the
 //! paper's step-20 reaction in Fig. 3).
 
-use crate::util::Welford;
+use crate::util::Ewma;
 
 /// Bounds of the auto-tuned detection threshold: never hair-trigger below
 /// 5% (measurement jitter on a quiet host), never blunter than 50% (a 1.5×
@@ -20,6 +20,13 @@ pub const THRESHOLD_MAX: f64 = 0.5;
 /// How many noise standard deviations a change must exceed to count as
 /// interference rather than jitter (the usual 3-sigma rule).
 pub const NOISE_GAIN: f64 = 3.0;
+/// Decay rate of the noise tracker: each observation carries this weight,
+/// so a burst of noisy samples stops dominating the estimate after a few
+/// dozen quiet ones (memory ≈ 1/λ ≈ 7 samples). This is what lets hosts
+/// re-derive the threshold at *every* window boundary instead of only at
+/// provably-quiet ones — a short stressor burst inflates the estimate
+/// transiently and then decays away.
+pub const NOISE_DECAY: f64 = 0.15;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Trigger {
@@ -36,27 +43,28 @@ pub struct Monitor {
     pub threshold: f64,
     /// Blessed per-stage times of the current configuration.
     baseline: Option<Vec<f64>>,
-    /// Noise tracker for the bottleneck since the last baseline.
-    noise: Welford,
+    /// Decaying (EWMA) noise tracker for the bottleneck since the last
+    /// baseline: short bursts inflate it transiently, then decay away.
+    noise: Ewma,
 }
 
 impl Monitor {
     pub fn new(threshold: f64) -> Monitor {
         assert!(threshold > 0.0);
-        Monitor { threshold, baseline: None, noise: Welford::default() }
+        Monitor { threshold, baseline: None, noise: Ewma::new(NOISE_DECAY) }
     }
 
     /// Bless a configuration's stage times as the new reference (called
     /// after each rebalance and at startup).
     pub fn set_baseline_times(&mut self, stage_times: &[f64]) {
         self.baseline = Some(stage_times.to_vec());
-        self.noise = Welford::default();
+        self.noise = Ewma::new(NOISE_DECAY);
     }
 
     /// Convenience for callers that only track the bottleneck.
     pub fn set_baseline(&mut self, bottleneck: f64) {
         self.baseline = Some(vec![bottleneck]);
-        self.noise = Welford::default();
+        self.noise = Ewma::new(NOISE_DECAY);
     }
 
     /// Blessed bottleneck, if any.
@@ -113,8 +121,11 @@ impl Monitor {
         None
     }
 
-    /// Observed bottleneck noise (std / mean) since the last baseline —
-    /// real deployments can use this to auto-tune `threshold`.
+    /// Observed bottleneck noise (decaying std / mean) since the last
+    /// baseline — real deployments use this to auto-tune `threshold`.
+    /// Because the tracker is an EWMA ([`NOISE_DECAY`]), the ratio
+    /// recovers from a short noisy burst on its own; hosts no longer need
+    /// to gate derivation on provably-quiet windows.
     pub fn noise_ratio(&self) -> f64 {
         if self.noise.n() < 2 || self.noise.mean() <= 0.0 {
             0.0
@@ -129,13 +140,13 @@ impl Monitor {
         self.noise.n() as usize
     }
 
-    /// Restart noise accumulation without touching the baseline. Hosts
-    /// that know interference just receded (e.g. the scenario harness at
-    /// a stressor-era boundary) call this so [`autotune`](Self::autotune)
-    /// derives from quiet-only samples instead of a mix that straddles
-    /// the era.
+    /// Restart noise accumulation without touching the baseline. With the
+    /// decaying tracker this is rarely needed — a burst straddling an era
+    /// boundary decays out by itself — but hosts with hard knowledge that
+    /// the regime changed (e.g. a reconfigured backend) can still force a
+    /// cold start.
     pub fn reset_noise(&mut self) {
-        self.noise = Welford::default();
+        self.noise = Ewma::new(NOISE_DECAY);
     }
 
     /// The detection threshold implied by a measured noise ratio:
@@ -276,6 +287,57 @@ mod tests {
         assert!(quiet < 0.01, "quiet trace noise {quiet}");
         assert!(noisy > 0.2, "noisy trace noise {noisy}");
         assert!(noisy > quiet * 10.0);
+    }
+
+    #[test]
+    fn noise_estimate_decays_after_a_single_noisy_window() {
+        // the ISSUE-3 follow-up: one noisy observation window must not
+        // poison the noise estimate forever — with the decaying tracker,
+        // the ratio recovers to near the quiet floor without any reset
+        let mut m = Monitor::new(10.0); // never fires; just accumulate
+        m.set_baseline(1.0);
+        for _ in 0..30 {
+            m.observe(&[1.0]);
+        }
+        let quiet = m.noise_ratio();
+        // one 8-query noisy window (a short stressor burst)
+        for t in [1.5, 0.5, 1.4, 0.6, 1.5, 0.5, 1.4, 0.6] {
+            m.observe(&[t]);
+        }
+        let burst = m.noise_ratio();
+        assert!(burst > 0.2, "burst not registered: {burst}");
+        assert!(Monitor::derived_threshold(burst) > THRESHOLD_MIN);
+        // quiet windows decay it back down — no reset_noise involved
+        for _ in 0..60 {
+            m.observe(&[1.0]);
+        }
+        let recovered = m.noise_ratio();
+        assert!(
+            recovered < burst * 0.05,
+            "no decay: burst {burst} -> recovered {recovered}"
+        );
+        assert_eq!(Monitor::derived_threshold(recovered), THRESHOLD_MIN);
+        let _ = quiet;
+    }
+
+    #[test]
+    fn derived_threshold_is_usable_right_after_a_burst_decays() {
+        // derivation at an arbitrary window boundary (not provably quiet)
+        // is safe: shortly after a burst the threshold is elevated, and a
+        // few windows later it is back to the jitter-implied floor
+        let mut m = Monitor::new(10.0);
+        m.set_baseline(1.0);
+        for t in [1.5, 0.5, 1.5, 0.5] {
+            m.observe(&[t]);
+        }
+        let hot = m.autotune();
+        assert!(hot > 0.3, "burst-era threshold too low: {hot}");
+        for _ in 0..80 {
+            m.observe(&[1.0]);
+        }
+        let cold = m.autotune();
+        assert!(cold < hot, "threshold never relaxed: {cold} vs {hot}");
+        assert_eq!(cold, THRESHOLD_MIN);
     }
 
     #[test]

@@ -89,6 +89,19 @@ impl OnlineController {
     pub fn monitor(&self) -> &Monitor {
         &self.monitor
     }
+
+    /// Current detection threshold (auto-tuning shifts it at runtime).
+    pub fn threshold(&self) -> f64 {
+        self.monitor.threshold
+    }
+
+    /// Re-derive the detection threshold from the decaying noise
+    /// estimate. Because the tracker is an EWMA, this is safe to call at
+    /// *any* observation-window boundary — a noise estimate contaminated
+    /// by a short burst recovers on its own (see [`Monitor::noise_ratio`]).
+    pub fn autotune(&mut self) -> f64 {
+        self.monitor.autotune()
+    }
 }
 
 #[cfg(test)]
@@ -134,6 +147,24 @@ mod tests {
         let t2 = CostModel::new(&db, &dirty).stage_times(&r.config);
         c.bless(&t2);
         assert_eq!(c.observe(&t2), None);
+    }
+
+    #[test]
+    fn controller_autotune_tracks_decaying_noise() {
+        let mut c =
+            OnlineController::new(ControlPolicy::Odin(Odin::new(2)), 0.05);
+        c.bless(&[1.0]);
+        assert_eq!(c.threshold(), 0.05);
+        for t in [1.0, 1.4, 0.6, 1.4, 0.6] {
+            c.observe(&[t]);
+        }
+        let hot = c.autotune();
+        assert_eq!(hot, c.threshold());
+        assert!(hot > 0.05, "noisy trace must raise the threshold");
+        for _ in 0..80 {
+            c.observe(&[1.0]);
+        }
+        assert!(c.autotune() < hot, "threshold never decayed back");
     }
 
     #[test]

@@ -16,10 +16,14 @@ use crate::interference::dynamic::{builtin, DynamicScenario, BUILTIN_NAMES};
 use crate::interference::Schedule;
 use crate::json::Value;
 use crate::models;
+use crate::serving::Workload;
 use crate::simulator::window::{
     window_metrics, windows_json, WindowMetrics, DEFAULT_WINDOW,
 };
-use crate::simulator::{simulate_policies, Policy, SimConfig, SimResult};
+use crate::simulator::{
+    simulate_policies, simulate_policies_workload, Policy, SimConfig,
+    SimResult,
+};
 use crate::util::error::Result;
 
 use super::{ExpCtx, Output};
@@ -55,6 +59,41 @@ pub fn run_scenario(
         .collect();
     let results = simulate_policies(db, &schedule, &cfgs, jobs);
     (schedule, results)
+}
+
+/// [`run_scenario`] under an explicit [`Workload`]: every policy faces
+/// the identical scenario stream *and* the identical (virtual) arrival
+/// timeline. `queries` sizes the run — it must match the horizon for
+/// query-axis scenarios and is free for wall-clock ones. Open workloads
+/// queue in a `queue_cap`-bounded buffer and shed past it.
+pub fn run_scenario_workload(
+    db: &TimingDb,
+    scenario: &DynamicScenario,
+    policies: &[Policy],
+    workload: &Workload,
+    queries: usize,
+    queue_cap: usize,
+    jobs: usize,
+) -> Result<(Schedule, Vec<SimResult>)> {
+    let schedule = scenario.compile();
+    let cfgs: Vec<SimConfig> = policies
+        .iter()
+        .map(|&p| {
+            SimConfig::new(scenario.num_eps, p)
+                .with_window(DYN_WINDOW)
+                .with_queue_cap(queue_cap)
+        })
+        .collect();
+    let results = simulate_policies_workload(
+        db,
+        &schedule,
+        scenario.axis,
+        &cfgs,
+        workload,
+        queries,
+        jobs,
+    )?;
+    Ok((schedule, results))
 }
 
 /// Per-policy headline numbers of one scenario run.
@@ -104,7 +143,9 @@ pub fn scenario_json(
             _ => {}
         }
         policy_vals.push(Value::obj(vec![
+            ("dropped", Value::from(r.dropped_at.len())),
             ("lat_mean", Value::from(h.lat_mean)),
+            ("offered", Value::from(r.offered)),
             ("policy", Value::from(policy.label())),
             ("rebalances", Value::from(h.rebalances)),
             ("serial_queries", Value::from(h.serial_queries)),

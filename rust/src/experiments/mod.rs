@@ -20,6 +20,7 @@
 //! | summary | §4.2 headline averages (ODIN vs LLS)                  |
 //! | ablation| alpha / detection-threshold sweeps (extension)        |
 //! | dynamic | time-phased scenarios under the online loop (extension)|
+//! | openloop| Poisson offered load: queueing, drops, SLO (extension)|
 
 mod ablation;
 pub mod dynamic;
@@ -29,6 +30,7 @@ mod fig3;
 mod fig4;
 mod fig9;
 mod grid;
+pub mod openloop;
 mod summary;
 mod table1;
 
@@ -87,9 +89,9 @@ impl Output {
     }
 }
 
-pub const ALL_IDS: [&str; 13] = [
+pub const ALL_IDS: [&str; 14] = [
     "table1", "fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
-    "fig9", "fig10", "summary", "ablation", "dynamic",
+    "fig9", "fig10", "summary", "ablation", "dynamic", "openloop",
 ];
 
 /// Run one experiment (or `all`).
@@ -97,6 +99,7 @@ pub fn run(id: &str, ctx: &ExpCtx) -> Result<()> {
     match id {
         "table1" => table1::run(ctx),
         "dynamic" => dynamic::run(ctx),
+        "openloop" => openloop::run(ctx),
         "fig1" => fig1::run(ctx),
         "fig3" => fig3::run(ctx),
         "fig4" => fig4::run(ctx),

@@ -1,0 +1,197 @@
+//! The open-loop serving experiment: rate × scenario × policy under
+//! Poisson offered load.
+//!
+//! The paper's SLO claims are about latency under *offered load*, but the
+//! closed-loop grids (fig5..fig9) admit the next query only when a slot
+//! frees — queueing delay is structurally invisible there. This sweep
+//! replays each dynamic scenario under open-loop Poisson arrivals at
+//! several fractions of the pipeline's interference-free peak rate, for
+//! ODIN / LLS / static, and reports the full offered-load picture per
+//! cell: end-to-end latency (p50/p99), the queued-vs-service split, shed
+//! arrivals at the bounded queue, and achieved throughput. Like every
+//! figure artifact, the emitted `openloop.json` is byte-stable and
+//! `--jobs`-invariant.
+
+use crate::database::synth::synthesize;
+use crate::json::Value;
+use crate::models;
+use crate::serving::Workload;
+use crate::simulator::{Policy, SimResult};
+use crate::util::error::Result;
+use crate::util::stats::percentile;
+
+use super::dynamic::run_scenario_workload;
+use super::{ExpCtx, Output};
+
+/// Scenarios of the sweep (a subset of the builtins keeps `experiment
+/// all` interactive; `odin simulate --scenario X --workload ...` covers
+/// the rest ad hoc).
+pub const OPENLOOP_SCENARIOS: [&str; 2] = ["burst", "arrivals"];
+/// Offered load as fractions of the interference-free peak rate: under,
+/// near, and past saturation.
+pub const OPENLOOP_RATES: [f64; 3] = [0.6, 0.9, 1.2];
+/// Policies per cell (oracle excluded: its zero-cost trials make
+/// open-loop queueing comparisons misleading).
+pub const OPENLOOP_POLICIES: [Policy; 3] =
+    [Policy::Odin { alpha: 2 }, Policy::Lls, Policy::Static];
+/// Bound of the arrival queue: small enough that the past-saturation
+/// rate visibly sheds.
+pub const OPENLOOP_QUEUE_CAP: usize = 64;
+/// The model the sweep runs on.
+pub const OPENLOOP_MODEL: &str = "vgg16";
+
+/// Headline numbers of one (scenario, rate, policy) cell.
+fn cell_json(rate_frac: f64, rate_qps: f64, policy: Policy, r: &SimResult) -> Value {
+    let q_mean = r.queued.iter().sum::<f64>() / r.queued.len().max(1) as f64;
+    let lat_mean =
+        r.latencies.iter().sum::<f64>() / r.latencies.len().max(1) as f64;
+    Value::obj(vec![
+        ("dropped", Value::from(r.dropped_at.len())),
+        ("lat_mean", Value::from(lat_mean)),
+        ("lat_p50", Value::from(percentile(&r.latencies, 50.0))),
+        ("lat_p99", Value::from(percentile(&r.latencies, 99.0))),
+        ("offered", Value::from(r.offered)),
+        ("policy", Value::from(policy.label())),
+        ("queued_mean", Value::from(q_mean)),
+        ("queued_p99", Value::from(percentile(&r.queued, 99.0))),
+        ("rate_frac", Value::from(rate_frac)),
+        ("rate_qps", Value::from(rate_qps)),
+        ("rebalances", Value::from(r.rebalances.len())),
+        ("served", Value::from(r.latencies.len())),
+        ("service_mean", Value::from(lat_mean - q_mean)),
+        ("tput_achieved", Value::from(r.achieved_throughput())),
+    ])
+}
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let mut out = Output::new(ctx, "openloop")?;
+    out.line("# openloop — Poisson offered load vs closed-loop-invisible queueing");
+    out.line(format!(
+        "# rates as fractions of the interference-free peak; queue cap \
+         {OPENLOOP_QUEUE_CAP}; seeded arrivals shared by every policy"
+    ));
+    let spec = models::build(OPENLOOP_MODEL, ctx.spatial).unwrap();
+    let db = synthesize(&spec, ctx.seed);
+    out.line(format!(
+        "{:<10} {:>5} {:<9} {:>9} {:>9} {:>9} {:>8} {:>7} {:>7}",
+        "scenario", "rate", "policy", "lat_ms", "p99_ms", "queue_ms", "tput", "drop", "rebal"
+    ));
+    let mut scenario_vals = Vec::with_capacity(OPENLOOP_SCENARIOS.len());
+    for name in OPENLOOP_SCENARIOS {
+        let scenario =
+            crate::interference::dynamic::builtin(name)?.scaled(ctx.queries)?;
+        // the peak rate is a property of the db + EP count, identical for
+        // every cell of this scenario
+        let peak = {
+            let clean = vec![0usize; scenario.num_eps];
+            let (_, bottleneck) = crate::coordinator::optimal_config(
+                &db,
+                &clean,
+                scenario.num_eps,
+            );
+            1.0 / bottleneck
+        };
+        let mut rate_vals = Vec::with_capacity(OPENLOOP_RATES.len());
+        for rate_frac in OPENLOOP_RATES {
+            let rate_qps = rate_frac * peak;
+            let workload = Workload::poisson(rate_qps, ctx.seed)?;
+            let (_, results) = run_scenario_workload(
+                &db,
+                &scenario,
+                &OPENLOOP_POLICIES,
+                &workload,
+                scenario.num_queries,
+                OPENLOOP_QUEUE_CAP,
+                ctx.jobs,
+            )?;
+            let mut cells = Vec::with_capacity(OPENLOOP_POLICIES.len());
+            for (policy, r) in OPENLOOP_POLICIES.iter().zip(&results) {
+                let v = cell_json(rate_frac, rate_qps, *policy, r);
+                out.line(format!(
+                    "{:<10} {:>5.2} {:<9} {:>9.2} {:>9.2} {:>9.2} {:>8.2} {:>7} {:>7}",
+                    name,
+                    rate_frac,
+                    policy.label(),
+                    v.get("lat_mean").as_f64().unwrap_or(0.0) * 1e3,
+                    v.get("lat_p99").as_f64().unwrap_or(0.0) * 1e3,
+                    v.get("queued_mean").as_f64().unwrap_or(0.0) * 1e3,
+                    v.get("tput_achieved").as_f64().unwrap_or(0.0),
+                    v.get("dropped").as_usize().unwrap_or(0),
+                    v.get("rebalances").as_usize().unwrap_or(0),
+                ));
+                cells.push(v);
+            }
+            rate_vals.push(Value::obj(vec![
+                ("cells", Value::arr(cells)),
+                ("rate_frac", Value::from(rate_frac)),
+                ("rate_qps", Value::from(rate_qps)),
+                ("workload", Value::from(workload.spec())),
+            ]));
+        }
+        scenario_vals.push(Value::obj(vec![
+            ("name", Value::from(name)),
+            ("peak_qps", Value::from(peak)),
+            ("queries", Value::from(scenario.num_queries)),
+            ("rates", Value::arr(rate_vals)),
+        ]));
+    }
+    if let Some(dir) = &ctx.out_dir {
+        let doc = Value::obj(vec![
+            ("model", Value::from(OPENLOOP_MODEL)),
+            ("queue_cap", Value::from(OPENLOOP_QUEUE_CAP)),
+            ("scenarios", Value::arr(scenario_vals)),
+        ]);
+        let path = dir.join("openloop.json");
+        crate::json::write_file(&path, &doc)?;
+        println!("# wrote {}", path.display());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interference::dynamic::builtin;
+    use crate::json::to_string_pretty;
+
+    #[test]
+    fn openloop_sweep_is_jobs_invariant_and_queues_past_saturation() {
+        let spec = models::build(OPENLOOP_MODEL, 64).unwrap();
+        let db = synthesize(&spec, 42);
+        let scenario = builtin("burst").unwrap().scaled(400).unwrap();
+        let peak = {
+            let (_, b) =
+                crate::coordinator::optimal_config(&db, &vec![0usize; 4], 4);
+            1.0 / b
+        };
+        let w = Workload::poisson(1.2 * peak, 42).unwrap();
+        let run = |jobs| {
+            let (_, results) = run_scenario_workload(
+                &db,
+                &scenario,
+                &OPENLOOP_POLICIES,
+                &w,
+                400,
+                OPENLOOP_QUEUE_CAP,
+                jobs,
+            )
+            .unwrap();
+            results
+        };
+        let serial = run(1);
+        let parallel = run(3);
+        for ((a, b), p) in serial.iter().zip(&parallel).zip(&OPENLOOP_POLICIES) {
+            assert_eq!(
+                to_string_pretty(&cell_json(1.2, 1.2 * peak, *p, a)),
+                to_string_pretty(&cell_json(1.2, 1.2 * peak, *p, b)),
+                "{} cell differs across --jobs",
+                p.label()
+            );
+        }
+        // past saturation the static pipeline must visibly queue
+        let st = serial.last().unwrap();
+        let q_mean: f64 =
+            st.queued.iter().sum::<f64>() / st.queued.len() as f64;
+        assert!(q_mean > 0.0, "no queueing at 1.2x peak");
+    }
+}

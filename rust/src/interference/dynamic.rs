@@ -46,6 +46,26 @@ pub const MAX_SLOTS: usize = 16_000_000;
 pub const BUILTIN_NAMES: [&str; 5] =
     ["burst", "ramp", "arrivals", "migrate", "storm"];
 
+/// The unit of a scenario's time axis.
+///
+/// Historically every phase boundary was a **query index** — which makes
+/// stressor eras admission-rate dependent: the same scenario hits its
+/// burst "later" (in wall-clock terms) under a deeper admission window or
+/// a slower arrival rate. `Millis` scenarios fix phase boundaries in
+/// **wall-clock milliseconds** instead (virtual milliseconds in the
+/// simulator), so one scenario file reproduces identical stressor-era
+/// boundaries at any admission depth or arrival rate. `Queries` remains
+/// the default — the compatibility shim for every existing scenario file.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScenarioAxis {
+    /// Phase fields count query indexes (the historical behavior).
+    Queries,
+    /// Phase fields count milliseconds since run start; the horizon is
+    /// `num_queries` *milliseconds* and the query count comes from the
+    /// workload/CLI instead.
+    Millis,
+}
+
 /// One time-phased interference pattern on the query axis.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Phase {
@@ -150,6 +170,12 @@ pub struct TraceEvent {
 }
 
 /// A composed dynamic scenario: phases + trace over a fixed horizon.
+///
+/// `num_queries` is the horizon in `axis` units: query slots for
+/// [`ScenarioAxis::Queries`], milliseconds for [`ScenarioAxis::Millis`].
+/// The compiled [`Schedule`] indexes the same units — hosts of a `Millis`
+/// scenario look its state up by elapsed (wall or virtual) millisecond
+/// instead of by query index.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DynamicScenario {
     pub name: String,
@@ -157,10 +183,12 @@ pub struct DynamicScenario {
     pub num_queries: usize,
     pub phases: Vec<Phase>,
     pub trace: Vec<TraceEvent>,
+    pub axis: ScenarioAxis,
 }
 
 impl DynamicScenario {
-    /// Build and validate; every constructor funnels through here.
+    /// Build and validate a query-axis scenario (the historical shape);
+    /// every constructor funnels through [`with_axis`](Self::with_axis).
     pub fn new(
         name: impl Into<String>,
         num_eps: usize,
@@ -168,12 +196,33 @@ impl DynamicScenario {
         phases: Vec<Phase>,
         trace: Vec<TraceEvent>,
     ) -> Result<DynamicScenario> {
-        let s = DynamicScenario {
-            name: name.into(),
+        Self::with_axis(
+            name,
             num_eps,
             num_queries,
             phases,
             trace,
+            ScenarioAxis::Queries,
+        )
+    }
+
+    /// Build and validate with an explicit time axis (`horizon` in axis
+    /// units: queries, or milliseconds for a wall-clock scenario).
+    pub fn with_axis(
+        name: impl Into<String>,
+        num_eps: usize,
+        horizon: usize,
+        phases: Vec<Phase>,
+        trace: Vec<TraceEvent>,
+        axis: ScenarioAxis,
+    ) -> Result<DynamicScenario> {
+        let s = DynamicScenario {
+            name: name.into(),
+            num_eps,
+            num_queries: horizon,
+            phases,
+            trace,
+            axis,
         };
         s.validate()?;
         Ok(s)
@@ -481,12 +530,18 @@ impl DynamicScenario {
     /// driving a scenario on a pipeline with a different stage count.
     /// Remapping can fold two phases onto one EP; the slot-exact overlap
     /// validation rejects such folds with a clear error.
+    ///
+    /// Wall-clock ([`ScenarioAxis::Millis`]) scenarios keep their time
+    /// axis **absolute**: `queries` only sizes the run, never the phase
+    /// boundaries — that invariance is the whole point of the axis.
     pub fn adapted(
         &self,
         queries: usize,
         num_eps: usize,
     ) -> Result<DynamicScenario> {
-        if queries == self.num_queries && num_eps == self.num_eps {
+        let rescale_time = self.axis == ScenarioAxis::Queries;
+        let horizon = if rescale_time { queries } else { self.num_queries };
+        if horizon == self.num_queries && num_eps == self.num_eps {
             return Ok(self.clone());
         }
         if queries == 0 || num_eps == 0 {
@@ -497,11 +552,14 @@ impl DynamicScenario {
             );
         }
         // round-half-up rational scaling; u128 guards against overflow at
-        // the MAX_QUERIES end of the range
-        let old = self.num_queries as u128;
-        let s = |v: usize| -> usize {
-            ((v as u128 * queries as u128 + old / 2) / old) as usize
+        // the MAX_QUERIES end of the range. A Millis axis scales by 1/1
+        // (identity): wall-clock boundaries do not move with --queries.
+        let (old, new) = if rescale_time {
+            (self.num_queries as u128, queries as u128)
+        } else {
+            (1, 1)
         };
+        let s = |v: usize| -> usize { ((v as u128 * new + old / 2) / old) as usize };
         let sp = |v: usize| s(v).max(1); // periods/durations stay >= 1
         let span = |a: usize, b: usize| (s(a), s(b).max(s(a) + 1));
         let re = |e: usize| e % num_eps;
@@ -537,14 +595,21 @@ impl DynamicScenario {
             .iter()
             .map(|ev| TraceEvent { at: s(ev.at), ep: re(ev.ep), scenario: ev.scenario })
             .collect();
-        DynamicScenario::new(self.name.clone(), num_eps, queries, phases, trace)
-            .with_context(|| {
-                format!(
-                    "adapting scenario {:?} ({} queries, {} EPs) to \
-                     {queries} queries, {num_eps} EPs",
-                    self.name, self.num_queries, self.num_eps
-                )
-            })
+        DynamicScenario::with_axis(
+            self.name.clone(),
+            num_eps,
+            horizon,
+            phases,
+            trace,
+            self.axis,
+        )
+        .with_context(|| {
+            format!(
+                "adapting scenario {:?} ({} queries, {} EPs) to \
+                 {queries} queries, {num_eps} EPs",
+                self.name, self.num_queries, self.num_eps
+            )
+        })
     }
 
     // -- JSON -----------------------------------------------------------
@@ -573,7 +638,11 @@ impl DynamicScenario {
         if v.as_obj().is_none() {
             bail!("scenario document must be a JSON object");
         }
-        check_keys(v, &["eps", "name", "phases", "queries", "trace"], "scenario")?;
+        check_keys(
+            v,
+            &["eps", "horizon_ms", "name", "phases", "queries", "trace", "unit"],
+            "scenario",
+        )?;
         // missing name defaults; a present-but-non-string name is an
         // error, not a silent "custom"
         let name = match v.get("name") {
@@ -584,7 +653,45 @@ impl DynamicScenario {
                 .to_string(),
         };
         let num_eps = opt_usize(v, "eps", DEFAULT_EPS)?;
-        let num_queries = opt_usize(v, "queries", DEFAULT_QUERIES)?;
+        // the time axis: "queries" (default, the compatibility shim for
+        // every pre-existing scenario file) or "ms" (wall-clock phase
+        // boundaries; the horizon comes from "horizon_ms" and the query
+        // count from the workload/CLI). "horizon_ms" alone implies ms.
+        let unit = match v.get("unit") {
+            Value::Null => None,
+            other => match other.as_str() {
+                Some("queries") => Some(ScenarioAxis::Queries),
+                Some("ms") => Some(ScenarioAxis::Millis),
+                _ => bail!("field \"unit\" must be \"queries\" or \"ms\""),
+            },
+        };
+        let has_ms = !v.get("horizon_ms").is_null();
+        if has_ms && !v.get("queries").is_null() {
+            bail!(
+                "scenario {name:?}: give either \"queries\" (query-axis) \
+                 or \"horizon_ms\" (wall-clock axis), not both"
+            );
+        }
+        if unit == Some(ScenarioAxis::Millis) && !has_ms {
+            bail!("scenario {name:?}: \"unit\": \"ms\" requires \"horizon_ms\"");
+        }
+        if unit == Some(ScenarioAxis::Queries) && has_ms {
+            bail!(
+                "scenario {name:?}: \"horizon_ms\" contradicts \
+                 \"unit\": \"queries\""
+            );
+        }
+        let (axis, num_queries) = if has_ms {
+            (
+                ScenarioAxis::Millis,
+                req_usize(v, "horizon_ms", "scenario")?,
+            )
+        } else {
+            (
+                ScenarioAxis::Queries,
+                opt_usize(v, "queries", DEFAULT_QUERIES)?,
+            )
+        };
         let mut phases = Vec::new();
         if !v.get("phases").is_null() {
             let arr = v
@@ -611,7 +718,7 @@ impl DynamicScenario {
                 });
             }
         }
-        DynamicScenario::new(name, num_eps, num_queries, phases, trace)
+        DynamicScenario::with_axis(name, num_eps, num_queries, phases, trace, axis)
     }
 
     /// Parse a scenario from JSON text.
@@ -1409,6 +1516,71 @@ mod tests {
         // a 2-query horizon cannot hold a 3-level ramp: contextful error
         let e = base.scaled(2).unwrap_err();
         assert!(chain(&e).contains("adapting"), "{e:#}");
+    }
+
+    #[test]
+    fn wall_clock_axis_parses_and_keeps_boundaries_absolute() {
+        // a wall-clock scenario: phase fields in milliseconds, horizon
+        // from horizon_ms; the compiled schedule indexes milliseconds
+        let s = DynamicScenario::from_json_str(
+            r#"{"name": "ms-burst", "eps": 2, "unit": "ms",
+                "horizon_ms": 5000,
+                "phases": [{"kind": "task", "start": 1000, "end": 3000,
+                            "ep": 1, "scenario": 3}]}"#,
+        )
+        .unwrap();
+        assert_eq!(s.axis, ScenarioAxis::Millis);
+        assert_eq!(s.num_queries, 5000, "horizon is in ms");
+        let sched = s.compile();
+        assert_eq!(sched.at(999)[1], 0);
+        assert_eq!(sched.at(1000)[1], 3);
+        assert_eq!(sched.at(2999)[1], 3);
+        assert_eq!(sched.at(3000)[1], 0);
+        // adapting to a different query count must NOT move the
+        // boundaries — wall-clock eras are admission-rate independent
+        let a = s.adapted(50, 2).unwrap();
+        assert_eq!(a, s);
+        let a = s.adapted(100_000, 2).unwrap();
+        assert_eq!(a.num_queries, 5000);
+        assert_eq!(a.phases, s.phases);
+        // ...while the EP remap still applies
+        let folded = s.adapted(50, 1).unwrap();
+        assert_eq!(folded.num_eps, 1);
+        match folded.phases[0] {
+            Phase::Task { start, end, ep, .. } => {
+                assert_eq!((start, end, ep), (1000, 3000, 0));
+            }
+            ref p => panic!("unexpected phase {p:?}"),
+        }
+        // "horizon_ms" alone implies the ms axis
+        let s2 = DynamicScenario::from_json_str(
+            r#"{"name": "implied", "horizon_ms": 2000,
+                "phases": [{"kind": "task", "start": 0, "end": 500,
+                            "ep": 0, "scenario": 1}]}"#,
+        )
+        .unwrap();
+        assert_eq!(s2.axis, ScenarioAxis::Millis);
+    }
+
+    #[test]
+    fn wall_clock_axis_misuse_rejected() {
+        let base = r#""phases": [{"kind": "task", "start": 0, "end": 10,
+                                  "ep": 0, "scenario": 1}]"#;
+        for (doc, needle) in [
+            (
+                format!(r#"{{"queries": 100, "horizon_ms": 100, {base}}}"#),
+                "not both",
+            ),
+            (format!(r#"{{"unit": "ms", {base}}}"#), "requires"),
+            (
+                format!(r#"{{"unit": "queries", "horizon_ms": 50, {base}}}"#),
+                "contradicts",
+            ),
+            (format!(r#"{{"unit": "hours", "queries": 100, {base}}}"#), "unit"),
+        ] {
+            let e = DynamicScenario::from_json_str(&doc).unwrap_err();
+            assert!(chain(&e).contains(needle), "{doc}: {e:#}");
+        }
     }
 
     #[test]

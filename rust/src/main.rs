@@ -4,9 +4,10 @@
 //!   simulate     run one simulation window and print its summary; with
 //!                --scenario <name|file> runs the online control loop
 //!                against a dynamic interference scenario (odin + lls /
-//!                oracle / static baselines, per-window JSON)
+//!                oracle / static baselines, per-window JSON), driven
+//!                closed- or open-loop via --workload
 //!   experiment   regenerate paper tables/figures (table1, fig1..fig10,
-//!                summary, dynamic, or `all`)
+//!                summary, dynamic, openloop, or `all`)
 //!   bench-db     measure the per-layer timing database on this host
 //!                through the PJRT runtime, under real stressors
 //!   verify       compile artifacts and check gold numerics
@@ -21,10 +22,11 @@ use odin::database::measure::{measure, MeasureOpts};
 use odin::database::synth::synthesize;
 use odin::database::TimingDb;
 use odin::experiments::dynamic::{
-    run_scenario, scenario_json, summary_line, DYN_SLO_LEVEL, DYN_WINDOW,
+    run_scenario, run_scenario_workload, scenario_json, summary_line,
+    DYN_SLO_LEVEL, DYN_WINDOW,
 };
 use odin::experiments::{self, ExpCtx};
-use odin::interference::dynamic::resolve;
+use odin::interference::dynamic::{resolve, ScenarioAxis};
 use odin::interference::{RandomInterference, Schedule};
 use odin::json::Value;
 use odin::models;
@@ -34,7 +36,7 @@ use odin::runtime::{
 };
 use odin::serving::{
     live_json, HarnessOpts, PipelineServer, ScenarioDriver, ServeReport,
-    ServerOpts,
+    ServerOpts, Workload,
 };
 use odin::simulator::{simulate, Policy, SimConfig, SimSummary};
 use odin::util::affinity;
@@ -68,7 +70,7 @@ fn usage() -> String {
      subcommands:\n\
        simulate     one simulation window; --scenario <name|file> runs the\n\
                     online loop against a dynamic interference scenario\n\
-       experiment   regenerate paper artifacts: table1 fig1 fig3..fig10 summary dynamic all\n\
+       experiment   regenerate paper artifacts: table1 fig1 fig3..fig10 summary dynamic openloop all\n\
        bench-db     measure the per-layer timing database via PJRT\n\
        verify       compile artifacts + gold numerics check\n\
        serve        live pipeline server; --scenario <name|file> replays a\n\
@@ -138,6 +140,18 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
             "dynamic scenario (builtin name or JSON file); runs the online \
              loop for odin + lls/oracle/static baselines",
         )
+        .opt(
+            "workload",
+            "arrival process for scenario mode: closed:<depth> | \
+             poisson:<rate>qps[@seed] | trace:<file.json> (default: the \
+             historical closed loop)",
+        )
+        .flag(
+            "queue-cap",
+            "256",
+            "arrival-queue bound for open workloads (arrivals past it \
+             are shed)",
+        )
         .flag("jobs", "1", "worker threads for the scenario policy sweep")
         .flag("out", "results", "output dir for scenario JSON ('' = none)")
         .switch("no-interference", "run a clean window");
@@ -147,7 +161,7 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
     }
     // the policy-sweep flags only exist in scenario mode; reject them
     // here rather than silently ignoring them
-    for flag in ["jobs", "out"] {
+    for flag in ["jobs", "out", "workload", "queue-cap"] {
         if args.was_given(flag) {
             bail!("--{flag} only applies to `simulate --scenario <name|file>`");
         }
@@ -193,14 +207,16 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
 
 /// `odin simulate --scenario <name|file>`: run the online control loop
 /// against one dynamic scenario, with LLS, the exhaustive oracle, and a
-/// static pipeline as baselines under the identical scenario stream, and
+/// static pipeline as baselines under the identical scenario stream —
+/// and, with `--workload`, under the identical arrival timeline — and
 /// emit the per-window JSON (byte-identical for every `--jobs` value).
 fn cmd_simulate_scenario(args: &Args) -> Result<()> {
     let db = load_sim_db(args)?;
     // scenario mode fixes the EPs (from the scenario) and the policy set
     // (odin + all baselines); reject contradicting flags instead of
     // silently ignoring them. --queries is honored: it rescales the
-    // scenario's horizon (phases keep their proportional shape).
+    // scenario's horizon (phases keep their proportional shape) for
+    // query-axis scenarios, and sizes the run for wall-clock ones.
     for flag in ["policy", "eps", "period", "duration"] {
         if !args.was_given(flag) {
             continue;
@@ -219,6 +235,23 @@ fn cmd_simulate_scenario(args: &Args) -> Result<()> {
     if args.was_given("queries") {
         scenario = scenario.scaled(args.usize("queries")?)?;
     }
+    let workload = if args.was_given("workload") {
+        Some(Workload::parse(args.get("workload"))?)
+    } else {
+        None
+    };
+    if args.was_given("queue-cap")
+        && !workload.as_ref().is_some_and(|w| w.is_open())
+    {
+        bail!(
+            "--queue-cap only applies to an open --workload \
+             (poisson:* or trace:*): closed loops never queue"
+        );
+    }
+    let queries_run = match scenario.axis {
+        ScenarioAxis::Queries => scenario.num_queries,
+        ScenarioAxis::Millis => args.usize("queries")?,
+    };
     let policies = [
         Policy::Odin { alpha: args.usize("alpha")? },
         Policy::Lls,
@@ -226,7 +259,33 @@ fn cmd_simulate_scenario(args: &Args) -> Result<()> {
         Policy::Static,
     ];
     let jobs = args.usize("jobs")?.max(1);
-    let (schedule, results) = run_scenario(&db, &scenario, &policies, jobs);
+    // clamp like the serve path: a 0 cap must not trip the SimConfig
+    // assert into a panic (and the shed report prints what actually ran)
+    let queue_cap = args.usize("queue-cap")?.max(1);
+    // no --workload on a query-axis scenario = the historical engine
+    // path, bit-for-bit; everything else goes through the Workload API
+    let (schedule, results) = match &workload {
+        None if scenario.axis == ScenarioAxis::Queries => {
+            run_scenario(&db, &scenario, &policies, jobs)
+        }
+        maybe => {
+            let w = match maybe {
+                Some(w) => w.clone(),
+                None => Workload::closed(
+                    odin::serving::workload::MAX_CLOSED_DEPTH,
+                )?,
+            };
+            run_scenario_workload(
+                &db,
+                &scenario,
+                &policies,
+                &w,
+                queries_run,
+                queue_cap,
+                jobs,
+            )?
+        }
+    };
     for (policy, r) in policies.iter().zip(&results) {
         let s = SimSummary::of(r);
         println!(
@@ -238,6 +297,15 @@ fn cmd_simulate_scenario(args: &Args) -> Result<()> {
                 policy.label()
             ))
         );
+        if !r.dropped_at.is_empty() {
+            println!(
+                "  {}: shed {} of {} offered arrivals (queue cap {})",
+                policy.label(),
+                r.dropped_at.len(),
+                r.offered,
+                queue_cap,
+            );
+        }
     }
     let doc_scenario = scenario_json(&scenario, &schedule, &policies, &results);
     println!(
@@ -252,6 +320,15 @@ fn cmd_simulate_scenario(args: &Args) -> Result<()> {
             ("scenario", doc_scenario),
             ("slo_level", Value::from(DYN_SLO_LEVEL)),
             ("window", Value::from(DYN_WINDOW)),
+            (
+                "workload",
+                Value::from(
+                    workload
+                        .as_ref()
+                        .map(|w| w.spec().to_string())
+                        .unwrap_or_else(|| "closed".to_string()),
+                ),
+            ),
         ]);
         let path = dir.join(format!("scenario_{}.json", scenario.name));
         odin::json::write_file(&path, &doc)?;
@@ -262,7 +339,7 @@ fn cmd_simulate_scenario(args: &Args) -> Result<()> {
 
 fn cmd_experiment(argv: &[String]) -> Result<()> {
     let cmd = Command::new("experiment", "regenerate paper tables/figures")
-        .positional("id", "table1|fig1|fig3..fig10|summary|ablation|dynamic|all")
+        .positional("id", "table1|fig1|fig3..fig10|summary|ablation|dynamic|openloop|all")
         .flag("out", "results", "output directory ('' = stdout only)")
         .flag("queries", "4000", "queries per simulation window")
         .flag("seed", "42", "rng seed")
@@ -351,6 +428,18 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
              with real stressors on the synthetic backend, emitting \
              live_<name>.json",
         )
+        .opt(
+            "workload",
+            "arrival process for scenario mode: closed:<depth> | \
+             poisson:<rate>qps[@seed] | trace:<file.json> (default: \
+             closed at --admission-depth)",
+        )
+        .flag(
+            "queue-cap",
+            "256",
+            "arrival-queue bound for open workloads (arrivals past it \
+             are shed)",
+        )
         .flag("query-ms", "2", "synthetic per-query work budget, ms")
         .flag("spatial", "16", "model input resolution (scenario mode)")
         .flag(
@@ -368,7 +457,18 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         return cmd_serve_scenario(&args);
     }
     // reject scenario-only flags instead of silently ignoring them
-    for flag in ["out", "auto-threshold", "cores-per-ep", "query-ms", "spatial"] {
+    // (audited against the full flag set: every flag that only scenario
+    // mode reads — including the new workload surface — must fail fast
+    // here, with was_given for value flags and has for switches)
+    for flag in [
+        "out",
+        "auto-threshold",
+        "cores-per-ep",
+        "query-ms",
+        "spatial",
+        "workload",
+        "queue-cap",
+    ] {
         if args.was_given(flag) || args.has(flag) {
             bail!("--{flag} only applies to `serve --scenario <name|file>`");
         }
@@ -413,6 +513,34 @@ fn cmd_serve_scenario(args: &Args) -> Result<()> {
     let queries = args.usize("queries")?;
     let eps = args.usize_opt("eps")?.unwrap_or(base.num_eps);
     let scenario = base.adapted(queries, eps)?;
+    // the workload drives admission: closed:<depth> takes over the
+    // admission window (contradicting --admission-depth is an error, not
+    // a silent pick), open workloads replay arrivals through the bounded
+    // queue at the --admission-depth in-flight window
+    let workload = if args.was_given("workload") {
+        Workload::parse(args.get("workload"))?
+    } else {
+        Workload::closed(args.usize("admission-depth")?.max(1))?
+    };
+    let mut depth = args.usize("admission-depth")?.max(1);
+    if let Some(d) = workload.closed_depth() {
+        if args.was_given("workload")
+            && args.was_given("admission-depth")
+            && d != depth
+        {
+            bail!(
+                "--admission-depth {depth} contradicts --workload \
+                 closed:{d}; give one of them"
+            );
+        }
+        depth = d;
+    }
+    if args.was_given("queue-cap") && !workload.is_open() {
+        bail!(
+            "--queue-cap only applies to an open --workload \
+             (poisson:* or trace:*): closed loops never queue"
+        );
+    }
     let spec = models::build(args.get("model"), args.usize("spatial")?)
         .ok_or_else(|| err!("unknown model {}", args.get("model")))?;
     let backend = SynthBackend::new(&spec, args.f64("query-ms")?);
@@ -428,10 +556,10 @@ fn cmd_serve_scenario(args: &Args) -> Result<()> {
         cores_per_ep,
         alpha: args.usize("alpha")?,
         detect_threshold: args.f64("threshold")?,
-        admission_depth: args.usize("admission-depth")?.max(1),
+        admission_depth: depth,
+        queue_cap: args.usize("queue-cap")?.max(1),
         ..ServerOpts::default()
     };
-    let depth = opts.admission_depth;
     let mut server = PipelineServer::new(ExecHandle::synthetic(backend), config, opts);
     let driver = ScenarioDriver::new(
         scenario,
@@ -444,11 +572,15 @@ fn cmd_serve_scenario(args: &Args) -> Result<()> {
     let inputs: Vec<Tensor> = (0..queries)
         .map(|i| Tensor::random(&shape, i as u64, 1.0))
         .collect();
-    let run = driver.run(&mut server, inputs)?;
+    let run = driver.run_workload(&mut server, inputs, &workload)?;
     run.report.print(&format!("live/{}", driver.scenario().name));
     println!(
-        "rebalances {}  serial probes {}  stressor launches {} \
-         (work {})  threshold {:.3}  final config {}",
+        "workload {}  offered {}  dropped {}  rebalances {}  serial \
+         probes {}  stressor launches {} (work {})  threshold {:.3}  \
+         final config {}",
+        run.workload,
+        run.offered,
+        run.dropped,
         run.rebalance_log.len(),
         run.rebalance_log.iter().map(|e| e.trials).sum::<usize>(),
         run.stressor_launches,

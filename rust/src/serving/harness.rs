@@ -1,29 +1,42 @@
 //! The live scenario harness: drive [`PipelineServer`] from a
-//! [`DynamicScenario`] with *real* stressors.
+//! [`DynamicScenario`] under a [`Workload`], with *real* stressors.
 //!
 //! PR 2 proved the online-adaptation claim in simulation; this module is
 //! the serving-path counterpart. A [`ScenarioDriver`] compiles the
-//! scenario into the same per-query [`Schedule`] the simulator consumes,
-//! then walks the live query stream: at every phase boundary it launches
-//! and stops real [`Stressor`]s pinned to the victim EP's cores (the same
-//! core lists the stage workers pin to, via
-//! [`crate::interference::placement_cores`]) while the server serves with
-//! a bounded in-flight admission window. Per-query stats are folded into
-//! the same [`WindowMetrics`] rows — and serialized through the same
-//! [`windows_json`] emitter — as the simulator's `scenario_*.json`, so a
-//! live run and a simulated run of one scenario are directly diffable.
+//! scenario into the same [`Schedule`] the simulator consumes, then walks
+//! the live query stream: at every phase boundary it launches and stops
+//! real [`Stressor`]s pinned to the victim EP's cores (the same core
+//! lists the stage workers pin to, via
+//! [`crate::interference::placement_cores`]). Query driving is the
+//! [`Workload`] API: a *closed* workload reproduces the PR-3 bounded
+//! admission window (arrival == admission, zero queueing), while an
+//! *open* workload (Poisson / trace / rate-phased) replays a wall-clock
+//! arrival timeline through the server's bounded queue
+//! ([`PipelineServer::enqueue`] / [`PipelineServer::poll_ready`]),
+//! reporting the queueing-vs-service latency split and shed arrivals.
+//! Per-query stats are folded into the same [`WindowMetrics`] rows — and
+//! serialized through the same [`windows_json`] emitter — as the
+//! simulator's `scenario_*.json`, so a live run and a simulated run of
+//! one scenario are directly diffable.
+//!
+//! Wall-clock scenarios ([`ScenarioAxis::Millis`]) sync stressors by
+//! *elapsed time*, not query index: the same scenario file + workload
+//! reproduces the same stressor eras at any admission depth or arrival
+//! rate.
 //!
 //! With `auto_threshold`, the driver re-derives the monitor's detection
-//! threshold from [`Monitor::noise_ratio`] at quiet (stressor-free)
-//! window boundaries — the ROADMAP's auto-tuning follow-up.
+//! threshold from [`Monitor::noise_ratio`] at every window boundary —
+//! safe since the noise estimate decays ([`Monitor`]'s EWMA tracker), so
+//! a boundary contaminated by a short burst corrects itself.
 //!
 //! [`Monitor::noise_ratio`]: crate::coordinator::Monitor::noise_ratio
+//! [`Monitor`]: crate::coordinator::Monitor
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::bail;
-use crate::interference::dynamic::DynamicScenario;
-use crate::interference::{Scenario, Schedule, Stressor};
+use crate::interference::dynamic::{DynamicScenario, ScenarioAxis};
+use crate::interference::{EpScenarios, Scenario, Schedule, Stressor};
 use crate::json::Value;
 use crate::runtime::Tensor;
 use crate::simulator::window::{windows_json, WindowMetrics};
@@ -31,6 +44,7 @@ use crate::util::error::Result;
 
 use super::server::{PipelineServer, RebalanceLog};
 use super::stats::{ServeReport, SERVE_WINDOW};
+use super::workload::Workload;
 
 /// SLO level for live per-window violation counts, as a fraction of the
 /// run's quiet-phase peak throughput (mirrors the simulator's level).
@@ -43,8 +57,8 @@ pub struct HarnessOpts {
     pub window: usize,
     /// SLO level as a fraction of quiet peak throughput.
     pub slo_level: f64,
-    /// Re-derive the detection threshold from observed noise at quiet
-    /// window boundaries.
+    /// Re-derive the detection threshold from the decaying noise
+    /// estimate at every window boundary.
     pub auto_threshold: bool,
     /// EP width used for stressor placement; must match the server's
     /// `cores_per_ep` so aggressor and victim contend on the same cores.
@@ -70,6 +84,12 @@ pub struct LiveRun {
     pub wall: Vec<f64>,
     /// True where the schedule had any stressor active at admission.
     pub stressed: Vec<bool>,
+    /// The workload spec that drove the run.
+    pub workload: String,
+    /// Arrivals offered: `completions.len() + dropped`.
+    pub offered: usize,
+    /// Arrivals shed at the bounded queue (open workloads only).
+    pub dropped: usize,
     /// The same per-window rows the simulator reports.
     pub windows: Vec<WindowMetrics>,
     pub report: ServeReport,
@@ -149,6 +169,8 @@ impl Drop for StressorRack {
 pub struct ScenarioDriver {
     scenario: DynamicScenario,
     schedule: Schedule,
+    /// All-quiet EP state, returned for wall-clock time past the horizon.
+    clear: EpScenarios,
     opts: HarnessOpts,
 }
 
@@ -161,7 +183,8 @@ impl ScenarioDriver {
             opts.slo_level
         );
         let schedule = scenario.compile();
-        ScenarioDriver { scenario, schedule, opts }
+        let clear = vec![0usize; scenario.num_eps];
+        ScenarioDriver { scenario, schedule, clear, opts }
     }
 
     pub fn scenario(&self) -> &DynamicScenario {
@@ -172,22 +195,81 @@ impl ScenarioDriver {
         &self.schedule
     }
 
-    /// Serve `inputs` (one per scheduled query) through `server`, running
-    /// the scenario's stressor timeline alongside. The server must have
-    /// as many stages as the scenario has EPs.
+    /// The EP-scenario state governing the `q`-th admitted query at
+    /// `elapsed` run time: indexed by query for the historical query-axis
+    /// scenarios, by elapsed millisecond for wall-clock ones (time past
+    /// the horizon is quiet) — which is exactly what makes wall-clock
+    /// stressor eras admission-rate independent.
+    fn state(&self, q: usize, elapsed: Duration) -> &EpScenarios {
+        match self.scenario.axis {
+            ScenarioAxis::Queries => self.schedule.at(q),
+            ScenarioAxis::Millis => {
+                let ms = elapsed.as_millis() as usize;
+                if ms < self.schedule.num_queries() {
+                    self.schedule.at(ms)
+                } else {
+                    &self.clear
+                }
+            }
+        }
+    }
+
+    /// Serve `inputs` through `server` with the PR-3 closed-loop
+    /// admission window (the server's `admission_depth`), running the
+    /// scenario's stressor timeline alongside — the compatibility wrapper
+    /// over [`run_workload`](Self::run_workload).
     pub fn run(
         &self,
         server: &mut PipelineServer,
         inputs: Vec<Tensor>,
     ) -> Result<LiveRun> {
-        let n = self.schedule.num_queries();
-        if inputs.len() != n {
-            bail!(
-                "scenario {:?} schedules {n} queries, got {} inputs \
-                 (adapt the scenario with --queries)",
-                self.scenario.name,
-                inputs.len()
-            );
+        let workload = Workload::closed(server.admission_depth())
+            .expect("admission_depth >= 1 is a valid closed depth");
+        self.run_workload(server, inputs, &workload)
+    }
+
+    /// Serve `inputs` through `server`, driven by `workload`, running the
+    /// scenario's stressor timeline alongside. The server must have as
+    /// many stages as the scenario has EPs.
+    ///
+    /// * A closed workload admits directly: up to
+    ///   `min(depth, admission_depth)` in flight, arrival == admission.
+    /// * An open workload replays its arrival timeline on the wall clock:
+    ///   due arrivals enter the server's bounded queue (sheds counted in
+    ///   [`LiveRun::dropped`]), admission drains the queue FIFO, and each
+    ///   completion carries the queueing-vs-service latency split.
+    ///
+    /// Query-axis scenarios need one input per scheduled query (adapt
+    /// with `--queries`); wall-clock scenarios accept any input count —
+    /// their horizon is time, and the query count is the workload's
+    /// business.
+    pub fn run_workload(
+        &self,
+        server: &mut PipelineServer,
+        inputs: Vec<Tensor>,
+        workload: &Workload,
+    ) -> Result<LiveRun> {
+        let n = inputs.len();
+        match self.scenario.axis {
+            ScenarioAxis::Queries => {
+                if n != self.schedule.num_queries() {
+                    bail!(
+                        "scenario {:?} schedules {} queries, got {n} inputs \
+                         (adapt the scenario with --queries)",
+                        self.scenario.name,
+                        self.schedule.num_queries()
+                    );
+                }
+            }
+            ScenarioAxis::Millis => {
+                if n == 0 {
+                    bail!(
+                        "scenario {:?}: wall-clock run needs at least one \
+                         input",
+                        self.scenario.name
+                    );
+                }
+            }
         }
         if server.config().num_stages() != self.scenario.num_eps {
             bail!(
@@ -197,57 +279,167 @@ impl ScenarioDriver {
                 server.config().num_stages()
             );
         }
+        let arrivals = if workload.is_open() {
+            Some(workload.arrivals(n)?)
+        } else {
+            None
+        };
+        let depth = workload
+            .closed_depth()
+            .unwrap_or(server.admission_depth())
+            .min(server.admission_depth());
         let log_start = server.rebalance_log.len();
         // at_query values in the server log count the server's lifetime
         // completions; subtract this to window them on the run's axis
         // (a reused server starts past zero)
         let done_start = server.queries_done();
+        let drop_start = server.dropped();
         let mut rack =
             StressorRack::new(self.scenario.num_eps, self.opts.cores_per_ep);
         let mut completions = Vec::with_capacity(n);
         let mut wall = Vec::with_capacity(n);
         let mut stressed = Vec::with_capacity(n);
+        let mut active_eps = Vec::with_capacity(n);
+        let mut dropped_at = Vec::new();
         let mut thresholds = Vec::new();
         let mut pending = inputs.into_iter();
-        let mut next = 0usize;
+        let mut offered = 0usize; // arrivals handed to the server (open)
+        let mut admitted = 0usize; // queries admitted into the pipeline
+        // arrival index of each queued (accepted) query, FIFO with the
+        // server's queue: query-axis schedules are indexed by ARRIVAL,
+        // exactly as the simulator indexes them, so a shed arrival skips
+        // its slot instead of shifting every later query's era
+        let mut queued_idx: std::collections::VecDeque<usize> =
+            std::collections::VecDeque::new();
         let t0 = Instant::now();
-        while completions.len() < n {
+        loop {
+            let done = match &arrivals {
+                None => completions.len() >= n,
+                Some(_) => {
+                    offered >= n
+                        && server.queue_len() == 0
+                        && server.in_flight() == 0
+                }
+            };
+            if done {
+                break;
+            }
+            // open-loop: offer every arrival that is due by now, stamped
+            // with its *scheduled* due time — the driver may have been
+            // blocked (a completion wait, a rebalance) past it, and that
+            // delay is queueing the split must charge, not erase
+            if let Some(offs) = &arrivals {
+                let now = t0.elapsed().as_secs_f64();
+                while offered < n && offs[offered] <= now {
+                    let x = pending.next().expect("inputs counted above");
+                    let due = t0 + Duration::from_secs_f64(offs[offered]);
+                    if server.enqueue_arrived(x, due) {
+                        queued_idx.push_back(offered);
+                    } else {
+                        dropped_at.push(completions.len());
+                    }
+                    offered += 1;
+                }
+            }
             if server.rebalance_due() && server.in_flight() == 0 {
                 server.rebalance_now()?;
+                continue;
             }
-            while next < n
-                && server.in_flight() < server.admission_depth()
-                && !server.rebalance_due()
-            {
-                let state = self.schedule.at(next);
-                let now_stressed = state.iter().any(|&s| s != 0);
-                if self.opts.auto_threshold
-                    && stressed.last() == Some(&true)
-                    && !now_stressed
-                {
-                    // a stressor era just ended: restart noise
-                    // accumulation so the next derivation sees quiet
-                    // samples only, not a mix straddling the era
-                    server.reset_monitor_noise();
+            // admission, one query at a time so the stressor rack and the
+            // per-query bookkeeping stay in lock-step with it
+            while server.in_flight() < depth && !server.rebalance_due() {
+                let available = match &arrivals {
+                    Some(_) => server.queue_len() > 0,
+                    None => admitted < n,
+                };
+                if !available {
+                    break;
                 }
+                // query-axis schedules index by arrival (the simulator's
+                // axis; drops skip their slot); wall-clock ones by time
+                let slot = match &arrivals {
+                    Some(_) => *queued_idx
+                        .front()
+                        .expect("queue non-empty implies a tracked index"),
+                    None => admitted,
+                };
+                let state = self.state(slot, t0.elapsed());
                 rack.sync(state);
-                stressed.push(now_stressed);
+                stressed.push(state.iter().any(|&s| s != 0));
+                active_eps.push(state.iter().filter(|&&s| s != 0).count());
                 if self.opts.auto_threshold
-                    && next > 0
-                    && next % self.opts.window == 0
-                    && self.quiet_window(next)
+                    && admitted > 0
+                    && admitted % self.opts.window == 0
                     && server.noise_samples() >= 2
                 {
-                    thresholds.push((next, server.autotune_threshold()));
+                    // the decaying noise estimate makes every boundary a
+                    // safe derivation point — a burst-straddling window
+                    // corrects itself a few boundaries later
+                    thresholds.push((admitted, server.autotune_threshold()));
                 }
-                server.admit(pending.next().expect("inputs counted above"))?;
-                next += 1;
+                match &arrivals {
+                    Some(_) => {
+                        server.admit_one()?;
+                        queued_idx.pop_front();
+                    }
+                    None => {
+                        server.admit(
+                            pending.next().expect("inputs counted above"),
+                        )?;
+                    }
+                }
+                admitted += 1;
             }
-            if server.in_flight() == 0 {
-                continue; // rebalance was due; retry the loop head
+            if server.in_flight() > 0 {
+                // with arrivals still pending, wait for a completion only
+                // until the next one is due — an unbounded recv would park
+                // the driver past due arrivals (late shedding, and idle
+                // admission slots silently billed as queueing)
+                let next_due = match &arrivals {
+                    Some(offs) if offered < n => {
+                        Some(offs[offered] - t0.elapsed().as_secs_f64())
+                    }
+                    _ => None,
+                };
+                match next_due {
+                    Some(gap) if gap <= 0.0 => {
+                        // due already: offer + admit before waiting
+                        continue;
+                    }
+                    Some(gap) => {
+                        if let Some(c) = server.recv_completion_timeout(
+                            Duration::from_secs_f64(gap),
+                        )? {
+                            completions.push(c);
+                            wall.push(t0.elapsed().as_secs_f64());
+                        }
+                        // on timeout the next arrival is due; loop back
+                    }
+                    None => {
+                        completions.push(server.recv_completion()?);
+                        wall.push(t0.elapsed().as_secs_f64());
+                    }
+                }
+                continue;
             }
-            completions.push(server.recv_completion()?);
-            wall.push(t0.elapsed().as_secs_f64());
+            if let Some(offs) = &arrivals {
+                if offered < n {
+                    // idle until the next arrival; tick the stressor rack
+                    // meanwhile so wall-clock eras stay honest while the
+                    // pipeline is empty
+                    if self.scenario.axis == ScenarioAxis::Millis {
+                        rack.sync(self.state(admitted, t0.elapsed()));
+                    }
+                    let gap = offs[offered] - t0.elapsed().as_secs_f64();
+                    if gap > 0.0 {
+                        std::thread::sleep(Duration::from_secs_f64(
+                            gap.min(0.05),
+                        ));
+                    }
+                }
+                // else: queue drains on the next iteration (a rebalance
+                // was due; the loop head handles it)
+            }
         }
         rack.stop_all();
         let wall_seconds = t0.elapsed().as_secs_f64();
@@ -261,14 +453,24 @@ impl ScenarioDriver {
                 ..e.clone()
             })
             .collect();
-        let windows =
-            self.live_windows(&completions, &wall, &stressed, &rebalance_log);
+        let windows = self.live_windows(
+            &completions,
+            &wall,
+            &stressed,
+            &active_eps,
+            &dropped_at,
+            &rebalance_log,
+        );
         let report = ServeReport::of(&completions, wall_seconds);
+        debug_assert_eq!(server.dropped() - drop_start, dropped_at.len());
         Ok(LiveRun {
             report,
             windows,
             wall,
             stressed,
+            workload: workload.spec().to_string(),
+            offered: if arrivals.is_some() { n } else { completions.len() },
+            dropped: dropped_at.len(),
             completions,
             rebalance_log,
             final_config: server.config().to_string(),
@@ -280,24 +482,22 @@ impl ScenarioDriver {
         })
     }
 
-    /// True when the window ending at `boundary` saw no stressor.
-    fn quiet_window(&self, boundary: usize) -> bool {
-        let start = boundary.saturating_sub(self.opts.window);
-        (start..boundary).all(|q| self.schedule.at(q).iter().all(|&s| s == 0))
-    }
-
     /// Fold the live per-query record into the simulator's per-window
     /// rows — same fields, same [`windows_json`] serialization, so
     /// `live_<name>.json` and `scenario_<name>.json` timelines diff
     /// directly. Live semantics per field: sustained throughput is
     /// 1/bottleneck of each query's measured stage times; wall throughput
     /// charges real elapsed time (queueing, probes, stressor overhead);
-    /// serial queries count the rebalance probes that ran in the window.
+    /// serial queries count the rebalance probes that ran in the window;
+    /// queued/service split each completion's measured latency; dropped
+    /// counts arrivals shed while the window's queries completed.
     fn live_windows(
         &self,
         completions: &[super::Completion],
         wall: &[f64],
         stressed: &[bool],
+        active_eps: &[usize],
+        dropped_at: &[usize],
         rebalances: &[RebalanceLog],
     ) -> Vec<WindowMetrics> {
         let n = completions.len();
@@ -330,6 +530,18 @@ impl ScenarioDriver {
                 completions[start..end].iter().map(|c| c.latency).collect();
             let lat_mean = lats.iter().sum::<f64>() / lats.len() as f64;
             let lat_max = lats.iter().copied().fold(0.0f64, f64::max);
+            let queued_mean = completions[start..end]
+                .iter()
+                .map(|c| c.queued)
+                .sum::<f64>()
+                / (end - start) as f64;
+            let service_mean = completions[start..end]
+                .iter()
+                .map(|c| c.service)
+                .sum::<f64>()
+                / (end - start) as f64;
+            let dropped =
+                crate::simulator::window::dropped_in_window(dropped_at, n, start, end);
             let tput_mean =
                 tput[start..end].iter().sum::<f64>() / (end - start) as f64;
             let span_start = if start == 0 { 0.0 } else { wall[start - 1] };
@@ -343,11 +555,10 @@ impl ScenarioDriver {
             let rebalance_count = rebalances.iter().filter(in_window).count();
             let slo_violations =
                 tput[start..end].iter().filter(|&&t| t < target).count();
-            let active: usize = (start..end)
-                .map(|q| {
-                    self.schedule.at(q).iter().filter(|&&s| s != 0).count()
-                })
-                .sum();
+            // interference as recorded at each query's admission: exact
+            // for query-axis scenarios, the sampled truth for wall-clock
+            // ones (where the schedule is indexed by time, not query)
+            let active: usize = active_eps[start..end].iter().sum();
             let interference_load = active as f64
                 / ((end - start) * self.scenario.num_eps) as f64;
             out.push(WindowMetrics {
@@ -356,6 +567,9 @@ impl ScenarioDriver {
                 end,
                 lat_mean,
                 lat_max,
+                queued_ns: queued_mean * 1e9,
+                service_ns: service_mean * 1e9,
+                dropped,
                 tput_mean,
                 wall_tput,
                 serial_queries,
@@ -406,12 +620,19 @@ pub fn live_json(
     Value::obj(vec![
         ("admission_depth", Value::from(admission_depth)),
         ("auto_threshold", Value::from(driver.opts.auto_threshold)),
+        ("dropped", Value::from(run.dropped)),
         ("eps", Value::from(scenario.num_eps)),
         ("final_config", Value::from(run.final_config.clone())),
         ("model", Value::from(model)),
         ("name", Value::from(scenario.name.clone())),
+        ("offered", Value::from(run.offered)),
         ("policy", Value::from("odin_live")),
-        ("queries", Value::from(scenario.num_queries)),
+        ("queries", Value::from(run.completions.len())),
+        ("scenario_axis", match scenario.axis {
+            ScenarioAxis::Queries => Value::from("queries"),
+            ScenarioAxis::Millis => Value::from("ms"),
+        }),
+        ("workload", Value::from(run.workload.clone())),
         ("rebalances", rebalances),
         (
             "serial_probes",
@@ -468,6 +689,7 @@ mod tests {
                 alpha: 2,
                 confirm_triggers: 1,
                 admission_depth: 2,
+                queue_cap: 256,
             },
         );
         let inputs =
@@ -529,6 +751,9 @@ mod tests {
             "end",
             "lat_mean",
             "lat_max",
+            "queued_ns",
+            "service_ns",
+            "dropped",
             "tput_mean",
             "wall_tput",
             "serial_queries",
@@ -538,7 +763,12 @@ mod tests {
         ] {
             assert!(!row.get(key).is_null(), "missing window key {key}");
         }
-        assert_eq!(row.keys().len(), 11);
+        assert_eq!(row.keys().len(), 14);
+        // closed-loop run: zero queueing, nothing offered beyond served
+        assert_eq!(doc.get("workload").as_str(), Some("closed:2"));
+        assert_eq!(doc.get("dropped").as_usize(), Some(0));
+        assert_eq!(doc.get("offered").as_usize(), Some(20));
+        assert_eq!(row.get("queued_ns").as_f64(), Some(0.0));
     }
 
     #[test]
@@ -567,6 +797,143 @@ mod tests {
         assert_eq!(serial, trials);
         let n_rebal: usize = run2.windows.iter().map(|w| w.rebalances).sum();
         assert_eq!(n_rebal, run2.rebalance_log.len());
+    }
+
+    #[test]
+    fn open_workload_replays_arrivals_and_splits_queueing() {
+        let (mut server, inputs) = tiny_server(2);
+        let driver = ScenarioDriver::new(
+            tiny_scenario(),
+            HarnessOpts { window: 5, cores_per_ep: 1, ..HarnessOpts::default() },
+        );
+        // a fast deterministic trace: all 20 queries arrive almost at
+        // once, so the depth-2 server must queue the rest
+        let workload = Workload::trace(vec![1e-4]).unwrap();
+        let run = driver.run_workload(&mut server, inputs, &workload).unwrap();
+        assert_eq!(run.offered, 20);
+        assert_eq!(run.completions.len() + run.dropped, 20);
+        assert_eq!(run.dropped, 0, "a 256-slot queue must hold 20 queries");
+        // queueing is real and separated from service
+        let queued: f64 = run.completions.iter().map(|c| c.queued).sum();
+        assert!(queued > 0.0, "burst arrivals never queued");
+        for c in &run.completions {
+            assert!(c.service > 0.0);
+            assert!((c.latency - (c.queued + c.service)).abs() < 1e-9);
+        }
+        assert!(run.windows.iter().any(|w| w.queued_ns > 0.0));
+        let doc = live_json(&driver, &run, "vgg16", 2);
+        assert_eq!(
+            doc.get("workload").as_str(),
+            Some("trace:[1 intervals]")
+        );
+        // completion order is arrival order even through the queue
+        for (i, c) in run.completions.iter().enumerate() {
+            assert_eq!(c.id, i);
+        }
+    }
+
+    #[test]
+    fn open_workload_sheds_at_the_queue_bound() {
+        let spec = models::build("vgg16", 8).unwrap();
+        let backend = SynthBackend::new(&spec, 0.5);
+        let shape = backend.input_shape();
+        let db = synthesize(&spec, 7);
+        let (config, _) = optimal_config(&db, &vec![0usize; 2], 2);
+        let mut server = PipelineServer::new(
+            ExecHandle::synthetic(backend),
+            config,
+            ServerOpts {
+                num_eps: 2,
+                cores_per_ep: 1,
+                detect_threshold: 10.0,
+                alpha: 2,
+                confirm_triggers: 1,
+                admission_depth: 1,
+                queue_cap: 4,
+            },
+        );
+        let driver = ScenarioDriver::new(
+            tiny_scenario(),
+            HarnessOpts { window: 5, cores_per_ep: 1, ..HarnessOpts::default() },
+        );
+        let inputs: Vec<Tensor> =
+            (0..20).map(|i| Tensor::random(&shape, i, 1.0)).collect();
+        // every query arrives instantly: 1 in flight + 4 queued, the
+        // rest shed as they arrive
+        let workload = Workload::trace(vec![0.0]).unwrap();
+        let run = driver.run_workload(&mut server, inputs, &workload).unwrap();
+        assert!(run.dropped > 0, "cap-4 queue never shed under a stampede");
+        assert_eq!(run.completions.len() + run.dropped, 20);
+        assert_eq!(server.dropped(), run.dropped);
+        let windows_dropped: usize =
+            run.windows.iter().map(|w| w.dropped).sum();
+        assert_eq!(windows_dropped, run.dropped);
+    }
+
+    #[test]
+    fn wall_clock_scenario_eras_follow_the_clock_not_the_query_index() {
+        // a ms-axis scenario holding one stressor era over 80..10000 ms:
+        // whatever the admission depth, queries admitted in the first
+        // ~80 ms are quiet and later ones are stressed — the era boundary
+        // is a wall-clock fact, not a query-index fact
+        let scenario = DynamicScenario::from_json_str(
+            r#"{"name": "ms-era", "eps": 2, "unit": "ms",
+                "horizon_ms": 10000,
+                "phases": [{"kind": "task", "start": 80, "end": 10000,
+                            "ep": 1, "scenario": 1}]}"#,
+        )
+        .unwrap();
+        for depth in [1usize, 3] {
+            let spec = models::build("vgg16", 8).unwrap();
+            let backend = SynthBackend::new(&spec, 2.0);
+            let shape = backend.input_shape();
+            let db = synthesize(&spec, 7);
+            let (config, _) = optimal_config(&db, &vec![0usize; 2], 2);
+            let mut server = PipelineServer::new(
+                ExecHandle::synthetic(backend),
+                config,
+                ServerOpts {
+                    num_eps: 2,
+                    cores_per_ep: 1,
+                    detect_threshold: 10.0,
+                    alpha: 2,
+                    confirm_triggers: 1,
+                    admission_depth: depth,
+                    queue_cap: 64,
+                },
+            );
+            let driver = ScenarioDriver::new(
+                scenario.clone(),
+                HarnessOpts {
+                    window: 4,
+                    cores_per_ep: 1,
+                    ..HarnessOpts::default()
+                },
+            );
+            let inputs: Vec<Tensor> =
+                (0..24).map(|i| Tensor::random(&shape, i, 1.0)).collect();
+            // 24 arrivals, one every 25 ms: the era starts at 80 ms, so
+            // the first ~3 admissions are quiet and the rest stressed,
+            // at ANY depth
+            let workload = Workload::trace(vec![0.025]).unwrap();
+            let run =
+                driver.run_workload(&mut server, inputs, &workload).unwrap();
+            assert_eq!(run.completions.len(), 24, "depth {depth}");
+            assert!(
+                !run.stressed[0],
+                "depth {depth}: first arrival (25 ms) already stressed"
+            );
+            assert!(
+                run.stressed[10..].iter().all(|&s| s),
+                "depth {depth}: queries past 250 ms must sit in the era"
+            );
+            let flip = run.stressed.iter().position(|&s| s).unwrap();
+            assert!(
+                (1..=6).contains(&flip),
+                "depth {depth}: era began at admission {flip}, expected \
+                 around 80 ms / 25 ms-per-arrival = ~3"
+            );
+        }
     }
 
     #[test]

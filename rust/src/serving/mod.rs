@@ -1,16 +1,20 @@
 //! The real serving path: a bind-to-stage pipeline server over the PJRT
 //! artifact runtime (or the calibrated synthetic backend), with online
 //! interference detection, live ODIN rebalancing (probe queries processed
-//! serially, exactly as the paper charges exploration overhead), and a
-//! scenario harness that replays dynamic interference timelines with real
+//! serially, exactly as the paper charges exploration overhead), a
+//! unified [`Workload`] arrival API (closed-loop windows, open-loop
+//! Poisson/trace arrivals) shared with the simulator, and a scenario
+//! harness that replays dynamic interference timelines with real
 //! stressors.
 
 pub mod harness;
 pub mod live_eval;
 pub mod server;
 pub mod stats;
+pub mod workload;
 
 pub use harness::{live_json, HarnessOpts, LiveRun, ScenarioDriver};
 pub use live_eval::LiveEval;
 pub use server::{Completion, PipelineServer, RebalanceLog, ServerOpts};
 pub use stats::ServeReport;
+pub use workload::{ArrivalProcess, RatePhase, Workload};

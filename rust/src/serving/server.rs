@@ -13,6 +13,7 @@
 //! and the paper's "EP" isolation is enforced by pinning on real
 //! hardware.
 
+use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -34,6 +35,9 @@ struct QueryMsg {
     /// Stage ranges snapshotted at admission (consistent across stages
     /// even while the coordinator installs a new configuration).
     ranges: Arc<Vec<(usize, usize)>>,
+    /// When the query entered the system (enqueue under open-loop
+    /// driving; == `admitted` under direct closed-loop admission).
+    arrived: Instant,
     admitted: Instant,
     stage_times: Vec<f64>,
 }
@@ -41,7 +45,15 @@ struct QueryMsg {
 /// A completed query.
 pub struct Completion {
     pub id: usize,
+    /// End-to-end latency (arrival → completion, seconds): `queued` +
+    /// `service`. Identical to `service` under closed-loop admission,
+    /// where arrival *is* admission.
     pub latency: f64,
+    /// Queueing delay (arrival → admission, seconds; 0 when admitted
+    /// directly).
+    pub queued: f64,
+    /// Service time (admission → completion, seconds).
+    pub service: f64,
     pub stage_times: Vec<f64>,
     pub output: Tensor,
     /// True when the query was a rebalancing probe (processed serially).
@@ -67,6 +79,12 @@ pub struct ServerOpts {
     /// under load. Admission always pauses while a rebalance is due so
     /// exploration probes still run on a drained pipeline.
     pub admission_depth: usize,
+    /// Bound of the arrival queue ([`enqueue`](PipelineServer::enqueue)):
+    /// an arrival finding this many queries already waiting is shed
+    /// (counted in [`dropped`](PipelineServer::dropped)), never served.
+    /// Only open-loop driving queues; closed-loop admission bypasses the
+    /// queue entirely.
+    pub queue_cap: usize,
 }
 
 impl Default for ServerOpts {
@@ -78,6 +96,7 @@ impl Default for ServerOpts {
             alpha: 2,
             confirm_triggers: 2,
             admission_depth: 1,
+            queue_cap: 256,
         }
     }
 }
@@ -106,6 +125,10 @@ pub struct PipelineServer {
     queries_done: usize,
     /// Queries admitted but not yet completed.
     in_flight: usize,
+    /// Arrived-but-not-admitted queries (open-loop driving), FIFO.
+    queue: VecDeque<(Tensor, Instant)>,
+    /// Arrivals shed because the queue was at `opts.queue_cap`.
+    dropped: usize,
     /// Id assigned to the next admitted query.
     next_id: usize,
     /// The monitor confirmed a trigger; the pipeline must drain and
@@ -151,6 +174,7 @@ impl PipelineServer {
         }
         drop(senders); // workers + injector hold the live clones
         assert!(opts.admission_depth >= 1, "admission_depth must be >= 1");
+        assert!(opts.queue_cap >= 1, "queue_cap must be >= 1");
         let mut monitor = Monitor::new(opts.detect_threshold);
         monitor.set_baseline(f64::INFINITY); // blessed on first query
         PipelineServer {
@@ -165,6 +189,8 @@ impl PipelineServer {
             workers,
             queries_done: 0,
             in_flight: 0,
+            queue: VecDeque::new(),
+            dropped: 0,
             next_id: 0,
             rebalance_due: false,
             input_shape: None,
@@ -211,8 +237,9 @@ impl PipelineServer {
         self.monitor.noise_samples()
     }
 
-    /// Re-derive the detection threshold from observed noise (call during
-    /// quiet windows — see [`Monitor::autotune`]). Returns the new value.
+    /// Re-derive the detection threshold from the decaying noise
+    /// estimate (safe at any window boundary — see [`Monitor::autotune`]).
+    /// Returns the new value.
     pub fn autotune_threshold(&mut self) -> f64 {
         self.monitor.autotune()
     }
@@ -223,20 +250,110 @@ impl PipelineServer {
         self.monitor.reset_noise();
     }
 
-    /// Admit one query into the pipeline (non-blocking). Returns its id.
-    pub fn admit(&mut self, tensor: Tensor) -> Result<usize> {
+    /// Arrived-but-not-admitted queries waiting in the bounded queue.
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Arrivals shed so far because the queue was full.
+    pub fn dropped(&self) -> usize {
+        self.dropped
+    }
+
+    /// Offer one arrival to the bounded queue (open-loop driving): the
+    /// query is stamped with its arrival time and waits until
+    /// [`poll_ready`](Self::poll_ready) moves it into the pipeline.
+    /// Returns false — and counts the shed — when `opts.queue_cap`
+    /// queries are already waiting.
+    pub fn enqueue(&mut self, tensor: Tensor) -> bool {
+        self.enqueue_arrived(tensor, Instant::now())
+    }
+
+    /// [`enqueue`](Self::enqueue) with an explicit arrival timestamp.
+    /// A single-threaded driver offers arrivals only between blocking
+    /// calls (a completion wait, a rebalance), so stamping "now" at
+    /// enqueue would silently erase the delay between when a query was
+    /// *due* and when the driver got around to it — exactly the
+    /// queueing-under-load cost the open-loop split exists to measure.
+    /// Pass the scheduled due time instead.
+    pub fn enqueue_arrived(&mut self, tensor: Tensor, arrived: Instant) -> bool {
+        if self.queue.len() >= self.opts.queue_cap {
+            self.dropped += 1;
+            return false;
+        }
         if self.input_shape.is_none() {
             self.input_shape = Some(tensor.shape.clone());
         }
+        self.queue.push_back((tensor, arrived));
+        true
+    }
+
+    /// Move queued arrivals into the pipeline while an admission slot is
+    /// free and no rebalance is pending. Returns how many were admitted.
+    pub fn poll_ready(&mut self) -> Result<usize> {
+        let mut n = 0;
+        while self.in_flight < self.opts.admission_depth
+            && !self.rebalance_due
+            && !self.queue.is_empty()
+        {
+            self.admit_one()?;
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Admit exactly one queued arrival (the harness interleaves per-
+    /// admission bookkeeping — stressor sync, window accounting — so it
+    /// needs single-step admission; [`poll_ready`](Self::poll_ready) is
+    /// the batch convenience). Errors when the queue is empty, a slot is
+    /// unavailable, or a rebalance is pending.
+    pub fn admit_one(&mut self) -> Result<usize> {
+        if self.queue.is_empty() {
+            bail!("admit_one with an empty arrival queue");
+        }
+        if self.in_flight >= self.opts.admission_depth {
+            bail!("admit_one with no free admission slot");
+        }
+        if self.rebalance_due {
+            bail!("admit_one while a rebalance is pending");
+        }
+        let (tensor, arrived) = self.queue.pop_front().expect("checked non-empty");
+        self.inject(tensor, Some(arrived))
+    }
+
+    /// Admit one query into the pipeline directly (closed-loop driving:
+    /// arrival == admission, zero queueing). Non-blocking; returns its
+    /// id. Rejects mixing with a non-empty arrival queue — that would
+    /// reorder the FIFO.
+    pub fn admit(&mut self, tensor: Tensor) -> Result<usize> {
+        if !self.queue.is_empty() {
+            bail!(
+                "direct admit() with {} queries queued: drain the queue \
+                 via poll_ready() or stick to one driving mode",
+                self.queue.len()
+            );
+        }
+        if self.input_shape.is_none() {
+            self.input_shape = Some(tensor.shape.clone());
+        }
+        self.inject(tensor, None)
+    }
+
+    /// `arrived`: the enqueue timestamp under open-loop driving; None for
+    /// direct admission, where arrival *is* admission (so the queueing
+    /// split reports an exact zero, not clock jitter).
+    fn inject(&mut self, tensor: Tensor, arrived: Option<Instant>) -> Result<usize> {
         let id = self.next_id;
         self.next_id += 1;
         let ranges = Arc::new(self.config.ranges());
+        let admitted = Instant::now();
         self.injector
             .send(QueryMsg {
                 id,
                 tensor,
                 ranges,
-                admitted: Instant::now(),
+                arrived: arrived.unwrap_or(admitted),
+                admitted,
                 stage_times: Vec::new(),
             })
             .map_err(|_| err!("pipeline workers gone"))?;
@@ -256,8 +373,40 @@ impl PipelineServer {
             .completions
             .recv()
             .map_err(|_| err!("pipeline drained unexpectedly"))?;
+        Ok(self.complete(msg))
+    }
+
+    /// [`recv_completion`](Self::recv_completion) with a deadline:
+    /// `Ok(None)` when `timeout` elapses first. An open-loop driver waits
+    /// for completions only until the next arrival is *due*, so a free
+    /// admission slot never sits idle behind an unbounded recv while
+    /// offered queries pile up queueing delay.
+    pub fn recv_completion_timeout(
+        &mut self,
+        timeout: std::time::Duration,
+    ) -> Result<Option<Completion>> {
+        use std::sync::mpsc::RecvTimeoutError;
+        if self.in_flight == 0 {
+            bail!("recv_completion with no query in flight");
+        }
+        match self.completions.recv_timeout(timeout) {
+            Ok(msg) => Ok(Some(self.complete(msg))),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(err!("pipeline drained unexpectedly"))
+            }
+        }
+    }
+
+    /// Book one received completion: latency split, monitor feed,
+    /// trigger confirmation — the shared tail of both recv flavors.
+    fn complete(&mut self, msg: QueryMsg) -> Completion {
         self.in_flight -= 1;
-        let latency = msg.admitted.elapsed().as_secs_f64();
+        let service = msg.admitted.elapsed().as_secs_f64();
+        // exact duration, not two racing elapsed() reads: direct
+        // admission (arrived == admitted) reports a hard 0.0
+        let queued = (msg.admitted - msg.arrived).as_secs_f64();
+        let latency = queued + service;
         // an INFINITY baseline (startup / just rebalanced) blesses this
         // observation instead of judging it — see Monitor::observe
         let trigger = self.monitor.observe(&msg.stage_times);
@@ -271,13 +420,15 @@ impl PipelineServer {
             self.pending_triggers = 0;
             self.rebalance_due = true;
         }
-        Ok(Completion {
+        Completion {
             id: msg.id,
             latency,
+            queued,
+            service,
             stage_times: msg.stage_times,
             output: msg.tensor,
             serial: false,
-        })
+        }
     }
 
     /// Serve a stream of queries with online monitoring + rebalancing,
@@ -415,6 +566,7 @@ mod tests {
                 alpha: 2,
                 confirm_triggers: 1,
                 admission_depth: depth,
+                queue_cap: 4,
             },
         )
     }
@@ -456,6 +608,113 @@ mod tests {
         assert_eq!(done.len(), 8);
         let ids: Vec<usize> = done.iter().map(|c| c.id).collect();
         assert_eq!(ids, (3..11).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn closed_admission_reports_exact_zero_queueing() {
+        let mut s = server(2, 1, 10.0);
+        let done = s.serve(inputs(3)).unwrap();
+        for c in &done {
+            assert_eq!(c.queued, 0.0, "direct admit must not queue");
+            assert_eq!(c.latency, c.service);
+        }
+        assert_eq!(s.dropped(), 0);
+        assert_eq!(s.queue_len(), 0);
+    }
+
+    #[test]
+    fn enqueue_poll_ready_split_queued_from_service() {
+        let mut s = server(2, 1, 10.0); // depth 1: the queue must hold
+        for x in inputs(3) {
+            assert!(s.enqueue(x));
+        }
+        assert_eq!((s.queue_len(), s.in_flight()), (3, 0));
+        // one slot: exactly one admission per poll at depth 1
+        assert_eq!(s.poll_ready().unwrap(), 1);
+        assert_eq!((s.queue_len(), s.in_flight()), (2, 1));
+        let mut done = Vec::new();
+        while done.len() < 3 {
+            done.push(s.recv_completion().unwrap());
+            s.poll_ready().unwrap();
+        }
+        let ids: Vec<usize> = done.iter().map(|c| c.id).collect();
+        assert_eq!(ids, vec![0, 1, 2], "queue must stay FIFO");
+        // queries 1 and 2 sat in the queue while 0 (then 1) served
+        assert!(done[1].queued > 0.0, "query 1 never waited");
+        assert!(done[2].queued >= done[1].queued * 0.5);
+        for c in &done {
+            assert!(c.service > 0.0);
+            assert!((c.latency - (c.queued + c.service)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn full_queue_sheds_and_counts_drops() {
+        let mut s = server(2, 1, 10.0); // queue_cap 4
+        let mut accepted = 0;
+        for x in inputs(7) {
+            if s.enqueue(x) {
+                accepted += 1;
+            }
+        }
+        assert_eq!(accepted, 4, "cap 4 must shed the rest");
+        assert_eq!(s.dropped(), 3);
+        assert_eq!(s.queue_len(), 4);
+        // shed queries are never served: draining yields exactly 4
+        let mut done = 0;
+        s.poll_ready().unwrap();
+        while s.in_flight() > 0 || s.queue_len() > 0 {
+            s.recv_completion().unwrap();
+            done += 1;
+            s.poll_ready().unwrap();
+        }
+        assert_eq!(done, 4);
+        assert_eq!(s.queries_done(), 4);
+    }
+
+    #[test]
+    fn enqueue_arrived_backdates_queueing_to_the_due_time() {
+        // a blocked driver offers arrivals late; the explicit due-time
+        // stamp must charge that delay to queueing, not erase it
+        let mut s = server(2, 1, 10.0);
+        let due = Instant::now();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let mut xs = inputs(1);
+        assert!(s.enqueue_arrived(xs.pop().unwrap(), due));
+        s.poll_ready().unwrap();
+        let c = s.recv_completion().unwrap();
+        assert!(c.queued >= 0.02, "due-time delay erased: {}", c.queued);
+        assert!((c.latency - (c.queued + c.service)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn direct_admit_rejected_while_queue_nonempty() {
+        let mut s = server(2, 2, 10.0);
+        let mut xs = inputs(2).into_iter();
+        assert!(s.enqueue(xs.next().unwrap()));
+        let e = s.admit(xs.next().unwrap()).unwrap_err();
+        assert!(format!("{e:#}").contains("queued"), "{e:#}");
+        // drain and the direct path works again
+        s.poll_ready().unwrap();
+        s.recv_completion().unwrap();
+        s.admit(inputs(1).pop().unwrap()).unwrap();
+        s.recv_completion().unwrap();
+    }
+
+    #[test]
+    fn admit_one_respects_slots_and_rebalance_state() {
+        let mut s = server(2, 1, 10.0);
+        let e = s.admit_one().unwrap_err();
+        assert!(format!("{e:#}").contains("empty"), "{e:#}");
+        for x in inputs(2) {
+            s.enqueue(x);
+        }
+        s.admit_one().unwrap();
+        let e = s.admit_one().unwrap_err();
+        assert!(format!("{e:#}").contains("slot"), "{e:#}");
+        s.recv_completion().unwrap();
+        s.admit_one().unwrap();
+        s.recv_completion().unwrap();
     }
 
     #[test]

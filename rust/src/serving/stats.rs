@@ -25,7 +25,13 @@ pub fn window_means(xs: &[f64], window: usize) -> Vec<f64> {
 #[derive(Clone, Debug)]
 pub struct ServeReport {
     pub queries: usize,
+    /// End-to-end latency (queueing + service).
     pub latency: Summary,
+    /// Queueing delay (arrival → admission). All-zero under closed-loop
+    /// driving; the interesting track under open-loop workloads.
+    pub queued: Summary,
+    /// Service time (admission → completion).
+    pub service: Summary,
     /// Completed queries / wall-clock of the batch.
     pub throughput: f64,
     pub serial_queries: usize,
@@ -39,10 +45,14 @@ impl ServeReport {
     pub fn of(completions: &[Completion], wall_seconds: f64) -> ServeReport {
         assert!(!completions.is_empty());
         let lat: Vec<f64> = completions.iter().map(|c| c.latency).collect();
+        let queued: Vec<f64> = completions.iter().map(|c| c.queued).collect();
+        let service: Vec<f64> = completions.iter().map(|c| c.service).collect();
         let windows = window_means(&lat, SERVE_WINDOW);
         ServeReport {
             queries: completions.len(),
             latency: Summary::of(&lat),
+            queued: Summary::of(&queued),
+            service: Summary::of(&service),
             throughput: completions.len() as f64 / wall_seconds.max(1e-12),
             serial_queries: completions.iter().filter(|c| c.serial).count(),
             window_latency: Summary::of(&windows),
@@ -52,11 +62,14 @@ impl ServeReport {
     pub fn print(&self, label: &str) {
         println!(
             "{label}: {} queries  lat mean={:.1}ms p50={:.1}ms p99={:.1}ms  \
-             throughput={:.2} q/s  serial={}  window lat {:.1}..{:.1}ms",
+             queued mean={:.1}ms p99={:.1}ms  throughput={:.2} q/s  \
+             serial={}  window lat {:.1}..{:.1}ms",
             self.queries,
             self.latency.mean * 1e3,
             self.latency.p50 * 1e3,
             self.latency.p99 * 1e3,
+            self.queued.mean * 1e3,
+            self.queued.p99 * 1e3,
             self.throughput,
             self.serial_queries,
             self.window_latency.min * 1e3,
@@ -76,6 +89,8 @@ mod tests {
             Completion {
                 id: 0,
                 latency: 0.1,
+                queued: 0.0,
+                service: 0.1,
                 stage_times: vec![0.05, 0.05],
                 output: Tensor::zeros(&[1]),
                 serial: false,
@@ -83,6 +98,8 @@ mod tests {
             Completion {
                 id: 1,
                 latency: 0.3,
+                queued: 0.1,
+                service: 0.2,
                 stage_times: vec![0.1, 0.2],
                 output: Tensor::zeros(&[1]),
                 serial: true,
@@ -93,6 +110,9 @@ mod tests {
         assert_eq!(r.serial_queries, 1);
         assert!((r.throughput - 4.0).abs() < 1e-9);
         assert!((r.latency.mean - 0.2).abs() < 1e-12);
+        // the queueing/service split aggregates alongside
+        assert!((r.queued.mean - 0.05).abs() < 1e-12);
+        assert!((r.service.mean - 0.15).abs() < 1e-12);
         // 2 queries fit one SERVE_WINDOW chunk: window mean == batch mean
         assert_eq!(r.window_latency.n, 1);
         assert!((r.window_latency.mean - 0.2).abs() < 1e-12);
@@ -104,6 +124,8 @@ mod tests {
             .map(|i| Completion {
                 id: i,
                 latency: if i < SERVE_WINDOW { 0.1 } else { 0.3 },
+                queued: 0.0,
+                service: if i < SERVE_WINDOW { 0.1 } else { 0.3 },
                 stage_times: vec![0.1],
                 output: Tensor::zeros(&[1]),
                 serial: false,

@@ -1,0 +1,568 @@
+//! The unified query-driving API: *what stream of queries hits the
+//! pipeline, and when*.
+//!
+//! ODIN's SLO story (paper §5) is about latency under **offered load**,
+//! but both the simulator and the PR-3 live harness used to drive queries
+//! closed-loop — the next query admitted only when a pipeline slot freed —
+//! which hides queueing delay entirely and makes stressor eras depend on
+//! the admission rate. InferLine-style evaluation replays *open-loop
+//! arrival traces* against the server instead: queries arrive on their own
+//! timeline whether or not the pipeline is ready, queue in a bounded
+//! buffer, and report queueing delay separately from service time.
+//!
+//! A [`Workload`] owns one arrival process:
+//!
+//! * [`closed(depth)`](Workload::closed) — the historical behavior: up to
+//!   `depth` queries in flight, the next admitted the instant a slot
+//!   frees. Arrival time == admission time, so queueing delay is zero by
+//!   construction.
+//! * [`poisson(rate)`](Workload::poisson) — memoryless open-loop arrivals
+//!   at `rate` queries/second (seeded, fully deterministic).
+//! * [`trace(intervals)`](Workload::trace) — explicit inter-arrival gaps
+//!   (seconds), cycled if the run is longer than the trace.
+//! * [`phased(...)`](Workload::phased) — a rate-phased DSL mirroring
+//!   [`crate::interference::dynamic`]: piecewise-constant Poisson rates
+//!   over the query axis (a diurnal curve, a load spike, a ramp).
+//!
+//! Both the simulator and the live server consume the same `Workload`:
+//! the simulator stamps arrivals on its **virtual** clock, the live
+//! harness on the **wall** clock — one spec string
+//! (`closed:4`, `poisson:200qps`, `trace:file.json`) reproduces the same
+//! offered-load shape in either world.
+
+use crate::json::{parse, Value};
+use crate::util::error::{Context, Result};
+use crate::util::Rng;
+use crate::{bail, err};
+
+/// Default seed of seeded arrival processes (`poisson` without `@seed`).
+pub const DEFAULT_ARRIVAL_SEED: u64 = 42;
+/// Caps on workload parameters: hostile specs/files must error long
+/// before they can overflow arithmetic or allocate absurd timelines.
+pub const MAX_RATE_QPS: f64 = 1e9;
+pub const MAX_CLOSED_DEPTH: usize = 1_000_000;
+pub const MAX_TRACE_EVENTS: usize = 10_000_000;
+
+/// One piecewise-constant segment of a rate-phased workload: `queries`
+/// arrivals drawn at `rate_qps` (the last phase extends to the horizon).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RatePhase {
+    pub queries: usize,
+    pub rate_qps: f64,
+}
+
+/// The arrival process a [`Workload`] owns.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Closed loop: up to `depth` queries in flight, no arrival timeline.
+    Closed { depth: usize },
+    /// Open loop, exponential inter-arrivals at `rate_qps`.
+    Poisson { rate_qps: f64, seed: u64 },
+    /// Open loop, explicit inter-arrival gaps in seconds (cycled).
+    Trace { intervals: Vec<f64> },
+    /// Open loop, piecewise-constant Poisson rates over the query axis.
+    Phased { phases: Vec<RatePhase>, seed: u64 },
+}
+
+/// An arrival process plus the spec string it was built from (the spec is
+/// echoed into artifacts so a run is reproducible from its JSON alone).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Workload {
+    spec: String,
+    process: ArrivalProcess,
+}
+
+impl Workload {
+    fn build(spec: String, process: ArrivalProcess) -> Result<Workload> {
+        let w = Workload { spec, process };
+        w.validate()?;
+        Ok(w)
+    }
+
+    /// Today's behavior: up to `depth` queries in flight (1 = lock-step).
+    pub fn closed(depth: usize) -> Result<Workload> {
+        Workload::build(format!("closed:{depth}"), ArrivalProcess::Closed { depth })
+    }
+
+    /// Open-loop Poisson arrivals at `rate_qps` queries per second.
+    pub fn poisson(rate_qps: f64, seed: u64) -> Result<Workload> {
+        Workload::build(
+            format!("poisson:{rate_qps}qps@{seed}"),
+            ArrivalProcess::Poisson { rate_qps, seed },
+        )
+    }
+
+    /// Open-loop replay of explicit inter-arrival gaps (seconds).
+    pub fn trace(intervals: Vec<f64>) -> Result<Workload> {
+        Workload::build(
+            format!("trace:[{} intervals]", intervals.len()),
+            ArrivalProcess::Trace { intervals },
+        )
+    }
+
+    /// Rate-phased open-loop arrivals (piecewise-constant Poisson).
+    pub fn phased(phases: Vec<RatePhase>, seed: u64) -> Result<Workload> {
+        Workload::build(
+            format!("phased:[{} phases]@{seed}", phases.len()),
+            ArrivalProcess::Phased { phases, seed },
+        )
+    }
+
+    fn validate(&self) -> Result<()> {
+        let check_rate = |rate: f64| -> Result<()> {
+            if !rate.is_finite() || rate <= 0.0 {
+                bail!("workload {:?}: rate {rate} must be a positive number", self.spec);
+            }
+            if rate > MAX_RATE_QPS {
+                bail!(
+                    "workload {:?}: rate {rate} exceeds the \
+                     {MAX_RATE_QPS:.0} qps limit",
+                    self.spec
+                );
+            }
+            Ok(())
+        };
+        match &self.process {
+            ArrivalProcess::Closed { depth } => {
+                if *depth == 0 {
+                    bail!("workload {:?}: closed depth must be >= 1", self.spec);
+                }
+                if *depth > MAX_CLOSED_DEPTH {
+                    bail!(
+                        "workload {:?}: closed depth {depth} exceeds the {MAX_CLOSED_DEPTH} limit",
+                        self.spec
+                    );
+                }
+            }
+            ArrivalProcess::Poisson { rate_qps, .. } => check_rate(*rate_qps)?,
+            ArrivalProcess::Trace { intervals } => {
+                if intervals.is_empty() {
+                    bail!("workload {:?}: trace needs at least one interval", self.spec);
+                }
+                if intervals.len() > MAX_TRACE_EVENTS {
+                    bail!(
+                        "workload {:?}: {} intervals exceed the {MAX_TRACE_EVENTS} limit",
+                        self.spec,
+                        intervals.len()
+                    );
+                }
+                for (i, &dt) in intervals.iter().enumerate() {
+                    if !dt.is_finite() || dt < 0.0 {
+                        bail!(
+                            "workload {:?}: interval {i} ({dt}) must be a non-negative number",
+                            self.spec
+                        );
+                    }
+                }
+            }
+            ArrivalProcess::Phased { phases, .. } => {
+                if phases.is_empty() {
+                    bail!("workload {:?}: needs at least one rate phase", self.spec);
+                }
+                for (i, p) in phases.iter().enumerate() {
+                    check_rate(p.rate_qps)
+                        .with_context(|| format!("rate phase {i}"))?;
+                    if p.queries == 0 {
+                        bail!(
+                            "workload {:?}: rate phase {i} must cover >= 1 query",
+                            self.spec
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The spec string the workload was built from (echoed in artifacts).
+    pub fn spec(&self) -> &str {
+        &self.spec
+    }
+
+    pub fn process(&self) -> &ArrivalProcess {
+        &self.process
+    }
+
+    /// True for processes with their own arrival timeline (everything but
+    /// `closed`).
+    pub fn is_open(&self) -> bool {
+        !matches!(self.process, ArrivalProcess::Closed { .. })
+    }
+
+    /// The in-flight bound of a closed workload; `None` when open-loop.
+    pub fn closed_depth(&self) -> Option<usize> {
+        match self.process {
+            ArrivalProcess::Closed { depth } => Some(depth),
+            _ => None,
+        }
+    }
+
+    /// Materialize the first `n` arrival offsets (seconds since run
+    /// start, non-decreasing). Deterministic: the same workload always
+    /// yields the same timeline, in simulation (virtual clock) and live
+    /// (wall clock) alike. Errors for closed workloads — they have no
+    /// timeline; admission *is* arrival.
+    pub fn arrivals(&self, n: usize) -> Result<Vec<f64>> {
+        let mut out = Vec::with_capacity(n);
+        let mut t = 0.0f64;
+        match &self.process {
+            ArrivalProcess::Closed { .. } => {
+                bail!(
+                    "workload {:?} is closed-loop: admission is gated by \
+                     completions, not an arrival timeline",
+                    self.spec
+                );
+            }
+            ArrivalProcess::Poisson { rate_qps, seed } => {
+                let mut rng = Rng::new(*seed);
+                for _ in 0..n {
+                    t += exp_gap(&mut rng, *rate_qps);
+                    out.push(t);
+                }
+            }
+            ArrivalProcess::Trace { intervals } => {
+                for i in 0..n {
+                    t += intervals[i % intervals.len()];
+                    out.push(t);
+                }
+            }
+            ArrivalProcess::Phased { phases, seed } => {
+                let mut rng = Rng::new(*seed);
+                let mut phase = 0usize;
+                let mut left = phases[0].queries;
+                for _ in 0..n {
+                    // the last phase extends past its budget to the horizon
+                    if left == 0 && phase + 1 < phases.len() {
+                        phase += 1;
+                        left = phases[phase].queries;
+                    }
+                    left = left.saturating_sub(1);
+                    t += exp_gap(&mut rng, phases[phase].rate_qps);
+                    out.push(t);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    // -- spec / JSON parsing --------------------------------------------
+
+    /// Parse a CLI workload spec:
+    ///
+    /// * `closed:<depth>` (or bare `closed` = depth 1)
+    /// * `poisson:<rate>[qps][@<seed>]`, e.g. `poisson:200qps`,
+    ///   `poisson:50qps@7`
+    /// * `trace:<file.json>` — a workload file (see
+    ///   [`from_json`](Self::from_json)) holding either raw inter-arrival
+    ///   `intervals` or rate-phased `phases`
+    pub fn parse(spec: &str) -> Result<Workload> {
+        let (kind, rest) = match spec.split_once(':') {
+            Some((k, r)) => (k, r),
+            None => (spec, ""),
+        };
+        match kind {
+            "closed" => {
+                let depth = if rest.is_empty() {
+                    1
+                } else {
+                    rest.parse::<usize>().map_err(|_| {
+                        err!("workload {spec:?}: closed depth {rest:?} is not an integer")
+                    })?
+                };
+                Workload::closed(depth)
+            }
+            "poisson" => {
+                if rest.is_empty() {
+                    bail!("workload {spec:?}: poisson needs a rate, e.g. poisson:200qps");
+                }
+                let (rate_str, seed) = match rest.split_once('@') {
+                    Some((r, s)) => (
+                        r,
+                        s.parse::<u64>().map_err(|_| {
+                            err!("workload {spec:?}: seed {s:?} is not an integer")
+                        })?,
+                    ),
+                    None => (rest, DEFAULT_ARRIVAL_SEED),
+                };
+                let rate_str = rate_str.strip_suffix("qps").unwrap_or(rate_str);
+                let rate = rate_str.parse::<f64>().map_err(|_| {
+                    err!("workload {spec:?}: rate {rate_str:?} is not a number")
+                })?;
+                Workload::poisson(rate, seed)
+            }
+            "trace" => {
+                if rest.is_empty() {
+                    bail!("workload {spec:?}: trace needs a file, e.g. trace:arrivals.json");
+                }
+                Workload::load(rest)
+            }
+            other => bail!(
+                "unknown workload kind {other:?} (closed:<depth> | \
+                 poisson:<rate>qps[@seed] | trace:<file.json>)"
+            ),
+        }
+    }
+
+    /// Parse a workload document. Two shapes, mirroring the scenario DSL:
+    ///
+    /// ```json
+    /// {"intervals": [0.005, 0.01, 0.005]}
+    /// ```
+    ///
+    /// replays explicit inter-arrival gaps (seconds, cycled), while
+    ///
+    /// ```json
+    /// {"seed": 7,
+    ///  "phases": [{"rate_qps": 100, "queries": 500},
+    ///             {"rate_qps": 400, "queries": 200}]}
+    /// ```
+    ///
+    /// draws Poisson arrivals at piecewise-constant rates (the last phase
+    /// extends to the run horizon). A bare JSON array is shorthand for
+    /// `intervals`.
+    pub fn from_json(v: &Value, spec: String) -> Result<Workload> {
+        if let Some(intervals) = v.as_f64_vec() {
+            return Workload::build(spec, ArrivalProcess::Trace { intervals });
+        }
+        if v.as_obj().is_none() {
+            bail!("workload document must be a JSON object or array");
+        }
+        for k in v.as_obj().unwrap().keys() {
+            if !["intervals", "phases", "seed"].contains(&k.as_str()) {
+                bail!(
+                    "workload document: unknown field {k:?} (allowed: \
+                     intervals, phases, seed)"
+                );
+            }
+        }
+        let has_intervals = !v.get("intervals").is_null();
+        let has_phases = !v.get("phases").is_null();
+        if has_intervals == has_phases {
+            bail!("workload document needs exactly one of \"intervals\" or \"phases\"");
+        }
+        if has_intervals {
+            let intervals = v
+                .get("intervals")
+                .as_f64_vec()
+                .ok_or_else(|| err!("\"intervals\" must be a number array"))?;
+            return Workload::build(spec, ArrivalProcess::Trace { intervals });
+        }
+        let seed = match v.get("seed") {
+            Value::Null => DEFAULT_ARRIVAL_SEED,
+            other => other
+                .as_u64()
+                .ok_or_else(|| err!("field \"seed\" must be a non-negative integer"))?,
+        };
+        let arr = v
+            .get("phases")
+            .as_arr()
+            .ok_or_else(|| err!("\"phases\" must be an array"))?;
+        let mut phases = Vec::with_capacity(arr.len());
+        for (i, pv) in arr.iter().enumerate() {
+            let what = format!("rate phase {i}");
+            if let Some(obj) = pv.as_obj() {
+                for k in obj.keys() {
+                    if !["queries", "rate_qps"].contains(&k.as_str()) {
+                        bail!(
+                            "{what}: unknown field {k:?} (allowed: queries, rate_qps)"
+                        );
+                    }
+                }
+            }
+            phases.push(RatePhase {
+                queries: pv
+                    .get("queries")
+                    .as_usize()
+                    .ok_or_else(|| err!("{what}: missing or non-integer field \"queries\""))?,
+                rate_qps: pv
+                    .get("rate_qps")
+                    .as_f64()
+                    .ok_or_else(|| err!("{what}: missing or non-number field \"rate_qps\""))?,
+            });
+        }
+        Workload::build(spec, ArrivalProcess::Phased { phases, seed })
+    }
+
+    /// Load a workload file (the `trace:<path>` spec).
+    pub fn load(path: &str) -> Result<Workload> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading workload file {path:?}"))?;
+        let v = parse(&text).context("parsing workload json")?;
+        Workload::from_json(&v, format!("trace:{path}"))
+            .with_context(|| format!("loading workload file {path:?}"))
+    }
+}
+
+/// One exponential inter-arrival gap at `rate` (inverse-CDF sampling off
+/// the crate PRNG; `1 - f64()` keeps the log argument in (0, 1]).
+fn exp_gap(rng: &mut Rng, rate: f64) -> f64 {
+    -(1.0 - rng.f64()).ln() / rate
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain(e: &crate::util::error::OdinError) -> String {
+        format!("{e:#}")
+    }
+
+    #[test]
+    fn parse_closed_and_depth() {
+        let w = Workload::parse("closed:4").unwrap();
+        assert_eq!(w.closed_depth(), Some(4));
+        assert!(!w.is_open());
+        assert_eq!(Workload::parse("closed").unwrap().closed_depth(), Some(1));
+        assert!(w.arrivals(5).is_err(), "closed workloads have no timeline");
+        let e = Workload::parse("closed:0").unwrap_err();
+        assert!(chain(&e).contains(">= 1"), "{e:#}");
+        let e = Workload::parse("closed:x").unwrap_err();
+        assert!(chain(&e).contains("not an integer"), "{e:#}");
+    }
+
+    #[test]
+    fn parse_poisson_variants() {
+        for spec in ["poisson:200qps", "poisson:200", "poisson:200.0qps"] {
+            let w = Workload::parse(spec).unwrap();
+            assert!(w.is_open());
+            match w.process() {
+                ArrivalProcess::Poisson { rate_qps, seed } => {
+                    assert_eq!(*rate_qps, 200.0);
+                    assert_eq!(*seed, DEFAULT_ARRIVAL_SEED);
+                }
+                p => panic!("unexpected process {p:?}"),
+            }
+        }
+        match Workload::parse("poisson:50qps@7").unwrap().process() {
+            ArrivalProcess::Poisson { rate_qps, seed } => {
+                assert_eq!((*rate_qps, *seed), (50.0, 7));
+            }
+            p => panic!("unexpected process {p:?}"),
+        }
+        for bad in ["poisson", "poisson:", "poisson:xqps", "poisson:10@y"] {
+            assert!(Workload::parse(bad).is_err(), "{bad} parsed");
+        }
+        for bad_rate in [0.0, -5.0, f64::INFINITY, 2e9] {
+            assert!(Workload::poisson(bad_rate, 1).is_err(), "{bad_rate} accepted");
+        }
+    }
+
+    #[test]
+    fn unknown_kind_is_error_with_grammar() {
+        let e = Workload::parse("bursty:10").unwrap_err();
+        assert!(chain(&e).contains("poisson:<rate>"), "{e:#}");
+    }
+
+    #[test]
+    fn poisson_arrivals_are_seed_deterministic_and_monotone() {
+        let a = Workload::poisson(100.0, 7).unwrap().arrivals(500).unwrap();
+        let b = Workload::poisson(100.0, 7).unwrap().arrivals(500).unwrap();
+        assert_eq!(a, b, "same seed must yield an identical timeline");
+        let c = Workload::poisson(100.0, 8).unwrap().arrivals(500).unwrap();
+        assert_ne!(a, c, "different seeds must differ");
+        assert!(a.windows(2).all(|p| p[0] <= p[1]), "non-monotone arrivals");
+        assert!(a[0] > 0.0 && a.iter().all(|t| t.is_finite()));
+        // mean gap ~ 1/rate (500 samples: within 20%)
+        let mean_gap = a.last().unwrap() / a.len() as f64;
+        assert!((mean_gap - 0.01).abs() < 0.002, "mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn trace_cycles_and_accumulates() {
+        let w = Workload::trace(vec![0.1, 0.3]).unwrap();
+        let a = w.arrivals(5).unwrap();
+        let want = [0.1, 0.4, 0.5, 0.8, 0.9];
+        for (got, want) in a.iter().zip(want) {
+            assert!((got - want).abs() < 1e-12, "{a:?}");
+        }
+        assert!(Workload::trace(vec![]).is_err());
+        assert!(Workload::trace(vec![0.1, -0.2]).is_err());
+        assert!(Workload::trace(vec![f64::NAN]).is_err());
+    }
+
+    #[test]
+    fn phased_rates_shift_at_phase_boundaries() {
+        let w = Workload::phased(
+            vec![
+                RatePhase { queries: 1000, rate_qps: 100.0 },
+                RatePhase { queries: 1000, rate_qps: 400.0 },
+            ],
+            3,
+        )
+        .unwrap();
+        let a = w.arrivals(2000).unwrap();
+        let first = a[999];
+        let second = a[1999] - a[999];
+        // 1000 arrivals at 100 qps ~ 10 s; at 400 qps ~ 2.5 s
+        assert!((first - 10.0).abs() < 2.0, "phase 1 span {first}");
+        assert!((second - 2.5).abs() < 0.6, "phase 2 span {second}");
+        // the last phase extends past its budget
+        let a = w.arrivals(3000).unwrap();
+        let tail = a[2999] - a[1999];
+        assert!((tail - 2.5).abs() < 0.6, "tail span {tail}");
+    }
+
+    #[test]
+    fn workload_file_intervals_and_phases() {
+        let dir = std::env::temp_dir();
+        let p1 = dir.join("odin_workload_intervals.json");
+        std::fs::write(&p1, r#"{"intervals": [0.01, 0.02]}"#).unwrap();
+        let w = Workload::parse(&format!("trace:{}", p1.display())).unwrap();
+        let a = w.arrivals(3).unwrap();
+        assert!((a[2] - 0.04).abs() < 1e-12, "{a:?}");
+        let p2 = dir.join("odin_workload_phases.json");
+        std::fs::write(
+            &p2,
+            r#"{"seed": 7, "phases": [{"rate_qps": 100, "queries": 10}]}"#,
+        )
+        .unwrap();
+        let w = Workload::parse(&format!("trace:{}", p2.display())).unwrap();
+        assert_eq!(
+            w.arrivals(10).unwrap(),
+            Workload::phased(vec![RatePhase { queries: 10, rate_qps: 100.0 }], 7)
+                .unwrap()
+                .arrivals(10)
+                .unwrap()
+        );
+        // a bare array is shorthand for intervals
+        let p3 = dir.join("odin_workload_bare.json");
+        std::fs::write(&p3, "[0.5, 0.5]").unwrap();
+        let w = Workload::parse(&format!("trace:{}", p3.display())).unwrap();
+        assert_eq!(w.arrivals(2).unwrap(), vec![0.5, 1.0]);
+        for p in [p1, p2, p3] {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+
+    #[test]
+    fn workload_file_validation_errors_are_contextful() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("odin_workload_bad.json");
+        for (text, needle) in [
+            (r#"{"intervals": [0.1], "phases": []}"#, "exactly one"),
+            (r#"{"phases": []}"#, "at least one"),
+            (r#"{"phases": [{"rate_qps": 0, "queries": 5}]}"#, "positive"),
+            (r#"{"phases": [{"rate_qps": 10, "queries": 0}]}"#, ">= 1 query"),
+            (r#"{"phases": [{"rate_qps": 10, "queries": 5, "x": 1}]}"#, "unknown field"),
+            (r#"{"intervalz": [0.1]}"#, "unknown field"),
+            (r#""just a string""#, "object or array"),
+            ("{", "parsing workload json"),
+        ] {
+            std::fs::write(&path, text).unwrap();
+            let e = Workload::parse(&format!("trace:{}", path.display())).unwrap_err();
+            assert!(chain(&e).contains(needle), "{text}: {e:#}");
+        }
+        let _ = std::fs::remove_file(&path);
+        let e = Workload::parse("trace:/nonexistent/odin/w.json").unwrap_err();
+        assert!(chain(&e).contains("workload file"), "{e:#}");
+    }
+
+    #[test]
+    fn spec_roundtrips_into_artifacts() {
+        assert_eq!(Workload::parse("closed:4").unwrap().spec(), "closed:4");
+        assert_eq!(
+            Workload::parse("poisson:200qps").unwrap().spec(),
+            format!("poisson:200qps@{DEFAULT_ARRIVAL_SEED}")
+        );
+    }
+}

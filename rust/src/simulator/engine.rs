@@ -13,15 +13,29 @@
 //! processed serially per rebalance ≈ 1 for LLS, ≈ α-dependent for ODIN),
 //! each costing the *serial* latency (sum of stage times) of its trial
 //! configuration.
+//!
+//! Query driving: the engine no longer pulls queries itself — it consumes
+//! a [`Workload`] ([`simulate_workload`]). A *closed* workload reproduces
+//! the historical admission rule bit-for-bit (next query admitted when a
+//! pipeline slot frees, so queueing delay is zero by construction); an
+//! *open* workload (Poisson / trace / rate-phased) stamps every query
+//! with a virtual arrival time, queues it in a bounded buffer (sheds when
+//! [`SimConfig::queue_cap`] is hit), and splits its latency into
+//! `queued` + service — the offered-load methodology the SLO claims need.
+//! [`simulate`] is the closed-loop compatibility wrapper.
 
 use std::sync::Arc;
 
+use crate::bail;
 use crate::coordinator::{
     optimal_config, ControlPolicy, Lls, Odin, OnlineController, RebalanceResult,
 };
 use crate::database::TimingDb;
-use crate::interference::Schedule;
+use crate::interference::dynamic::ScenarioAxis;
+use crate::interference::{EpScenarios, Schedule};
 use crate::pipeline::{stage_times_into, PipelineConfig};
+use crate::serving::workload::{Workload, MAX_CLOSED_DEPTH};
+use crate::util::error::Result;
 use crate::util::ThreadPool;
 
 /// Which rebalancing policy drives the run.
@@ -70,17 +84,35 @@ pub struct SimConfig {
     /// monitors periodically, not per query). None = observe every query,
     /// the historical behavior.
     pub window: Option<usize>,
+    /// Bound of the arrival queue under an *open* workload: a query that
+    /// arrives while this many are already waiting is shed (recorded in
+    /// [`SimResult::dropped_at`]), never served. None = unbounded.
+    /// Ignored by closed workloads — they never queue.
+    pub queue_cap: Option<usize>,
 }
 
 impl SimConfig {
     pub fn new(num_eps: usize, policy: Policy) -> SimConfig {
-        SimConfig { num_eps, policy, detect_threshold: 0.05, window: None }
+        SimConfig {
+            num_eps,
+            policy,
+            detect_threshold: 0.05,
+            window: None,
+            queue_cap: None,
+        }
     }
 
     /// Sample the online loop once per `window` queries.
     pub fn with_window(mut self, window: usize) -> SimConfig {
         assert!(window > 0, "window must be >= 1");
         self.window = Some(window);
+        self
+    }
+
+    /// Bound the arrival queue (open workloads only; see `queue_cap`).
+    pub fn with_queue_cap(mut self, cap: usize) -> SimConfig {
+        assert!(cap > 0, "queue_cap must be >= 1");
+        self.queue_cap = Some(cap);
         self
     }
 }
@@ -95,10 +127,33 @@ pub struct RebalanceEvent {
 }
 
 /// Full per-query record of a simulation run.
+///
+/// Per-query vectors are indexed by **completed** query. Under a closed
+/// workload every offered query completes; under an open workload with a
+/// bounded queue, shed arrivals appear only in `dropped_at`.
 #[derive(Clone, Debug)]
 pub struct SimResult {
-    /// End-to-end latency of each query (seconds).
+    /// End-to-end latency of each query (seconds): queueing + service.
+    /// Closed workloads have zero queueing, so this is pure service time
+    /// there (the historical meaning, bit-for-bit).
     pub latencies: Vec<f64>,
+    /// Queueing delay of each query (arrival → admission, seconds);
+    /// all-zero under a closed workload.
+    pub queued: Vec<f64>,
+    /// Admission (pipelined) / start (serial) virtual time of each query.
+    pub start_times: Vec<f64>,
+    /// True where any EP was under interference while the query was
+    /// admitted — the stressor-era axis of the run.
+    pub stressed: Vec<bool>,
+    /// How many EPs were under interference at each query's admission
+    /// (the per-window `interference_load` numerator; for wall-clock
+    /// scenarios this is the sampled truth the query index can't give).
+    pub active_eps: Vec<usize>,
+    /// For each shed arrival: how many queries had completed when it was
+    /// dropped (windows report drops on the completion axis).
+    pub dropped_at: Vec<usize>,
+    /// Arrivals offered: `latencies.len() + dropped_at.len()`.
+    pub offered: usize,
     /// Throughput the pipeline configuration sustains while each query is
     /// in flight (1/bottleneck) — the paper's per-window throughput.
     /// Serial (rebalancing) queries record 1/serial_latency here.
@@ -136,14 +191,74 @@ impl SimResult {
     }
 }
 
-/// Run `schedule.num_queries()` queries through the pipeline.
+/// Run `schedule.num_queries()` queries through the pipeline with the
+/// historical closed-loop admission rule (next query admitted the moment
+/// a pipeline slot frees) — the compatibility wrapper over
+/// [`simulate_workload`].
 ///
 /// The initial configuration is the interference-free optimum over
 /// `num_eps` stages (the paper assumes "the stages are already effectively
 /// balanced" at start).
 pub fn simulate(db: &TimingDb, schedule: &Schedule, cfg: &SimConfig) -> SimResult {
+    // depth >= active stages reproduces the pre-Workload admission gate
+    // bit-for-bit (the gate is min(depth, active) slots)
+    let workload = Workload::closed(MAX_CLOSED_DEPTH).expect("static depth is valid");
+    simulate_workload(
+        db,
+        schedule,
+        ScenarioAxis::Queries,
+        cfg,
+        &workload,
+        schedule.num_queries(),
+    )
+    .expect("closed-loop simulation over a compiled schedule is infallible")
+}
+
+/// Run `queries` queries through the pipeline, driven by `workload`.
+///
+/// * Closed workloads gate admission at `min(depth, active stages)` in
+///   flight; arrival == admission, so `queued` is all-zero and `closed`
+///   with a large depth is bit-identical to the historical [`simulate`].
+/// * Open workloads stamp query `q` with its virtual arrival time
+///   `workload.arrivals(queries)[q]`; a query admits at
+///   `max(arrival, slot free)`, records `queued = admission − arrival`,
+///   and is shed if [`SimConfig::queue_cap`] queries are already waiting
+///   at its arrival instant.
+///
+/// `axis` says how the schedule is indexed: [`ScenarioAxis::Queries`]
+/// looks interference up by query index (the historical shim, in which
+/// case `queries` must equal `schedule.num_queries()`);
+/// [`ScenarioAxis::Millis`] looks it up by the virtual clock in
+/// milliseconds, so stressor eras sit at fixed *times* regardless of
+/// admission depth or arrival rate (one schedule slot = one millisecond;
+/// time past the horizon is interference-free).
+pub fn simulate_workload(
+    db: &TimingDb,
+    schedule: &Schedule,
+    axis: ScenarioAxis,
+    cfg: &SimConfig,
+    workload: &Workload,
+    queries: usize,
+) -> Result<SimResult> {
+    if axis == ScenarioAxis::Queries && queries != schedule.num_queries() {
+        bail!(
+            "query-axis schedule covers {} queries, asked to run {queries} \
+             (wall-clock scenarios decouple the two; query-axis ones pin \
+             them)",
+            schedule.num_queries()
+        );
+    }
+    if queries == 0 {
+        bail!("cannot simulate a 0-query run");
+    }
+    let arrivals: Option<Vec<f64>> = if workload.is_open() {
+        Some(workload.arrivals(queries)?)
+    } else {
+        None
+    };
+    let depth = workload.closed_depth().unwrap_or(usize::MAX);
+
     let n = cfg.num_eps;
-    let queries = schedule.num_queries();
     let clean = vec![0usize; n];
     let (initial, clean_bottleneck) = optimal_config(db, &clean, n);
     let peak_throughput = 1.0 / clean_bottleneck;
@@ -156,18 +271,31 @@ pub fn simulate(db: &TimingDb, schedule: &Schedule, cfg: &SimConfig) -> SimResul
     stage_times_into(&config, db, &clean, &mut times);
     controller.bless(&times);
 
+    // interference lookup: by query index (shim) or by the virtual clock
+    // in milliseconds (wall-clock scenarios; past-horizon = quiet)
+    let clear: EpScenarios = vec![0usize; schedule.num_eps];
+
     // pipeline state: when each stage becomes free, and completion time
-    // of the query admitted `active` slots ago (admission token)
+    // of the query admitted `min(depth, active)` slots ago (admission
+    // token)
     let mut stage_free = vec![0.0f64; n];
     let mut completions: Vec<f64> = Vec::with_capacity(queries);
     let mut clock = 0.0f64; // admission clock
 
     let mut latencies = Vec::with_capacity(queries);
+    let mut queued = Vec::with_capacity(queries);
+    let mut start_times = Vec::with_capacity(queries);
+    let mut stressed = Vec::with_capacity(queries);
+    let mut active_eps = Vec::with_capacity(queries);
     let mut inst_throughput = Vec::with_capacity(queries);
     let mut config_throughput = Vec::with_capacity(queries);
-    let mut serial = vec![false; queries];
+    let mut serial: Vec<bool> = Vec::with_capacity(queries);
     let mut rebalances = Vec::new();
     let mut rebalance_time = 0.0f64;
+    let mut dropped_at: Vec<usize> = Vec::new();
+    // admission times of every served query, non-decreasing — the queue
+    // occupancy probe for the shed check
+    let mut admit_times: Vec<f64> = Vec::with_capacity(queries);
 
     let mut q = 0usize;
     // perf: stage times only change when the scenario vector or the
@@ -175,7 +303,36 @@ pub fn simulate(db: &TimingDb, schedule: &Schedule, cfg: &SimConfig) -> SimResul
     // skipped (EXPERIMENTS.md §Perf L3 iteration 1)
     let mut last_sc: Vec<usize> = Vec::new();
     while q < queries {
-        let sc = schedule.at(q);
+        let arr = arrivals.as_ref().map(|a| a[q]);
+        // --- bounded queue: shed on arrival when full (open-loop) ----
+        if let (Some(a), Some(cap)) = (arr, cfg.queue_cap) {
+            // queries admitted after `a` were still waiting when q arrived
+            let waiting =
+                admit_times.len() - admit_times.partition_point(|&t| t <= a);
+            if waiting >= cap {
+                dropped_at.push(latencies.len());
+                q += 1;
+                continue;
+            }
+        }
+        // wall-clock state sample: estimate this query's admission from
+        // the state-independent terms (clock, the completion gate, the
+        // arrival) — the exact admit may also wait on stage 0, but that
+        // term needs the stage times the state itself determines. Under
+        // saturation the gate dominates, so a query queued into a
+        // stressor era samples the era, not its quiet arrival moment.
+        // (Queries-axis lookups ignore the estimate entirely.)
+        let t_est = {
+            let active = config.active_stages().max(1);
+            let slots = depth.min(active);
+            let gate = if completions.len() >= slots {
+                completions[completions.len() - slots]
+            } else {
+                0.0
+            };
+            clock.max(gate).max(arr.unwrap_or(0.0))
+        };
+        let mut sc = state_at(schedule, &clear, axis, q, t_est);
         if *sc != last_sc {
             stage_times_into(&config, db, sc, &mut times);
             last_sc.clone_from(sc);
@@ -193,26 +350,56 @@ pub fn simulate(db: &TimingDb, schedule: &Schedule, cfg: &SimConfig) -> SimResul
                 // remaining query budget)
                 let serial_queries = result.trials.min(queries - q);
                 for _ in 0..serial_queries {
-                    let sc_now = schedule.at(q);
+                    let arr_s = arrivals.as_ref().map(|a| a[q]);
+                    let t_eval = stage_free
+                        .iter()
+                        .copied()
+                        .fold(clock, f64::max)
+                        .max(arr_s.unwrap_or(0.0));
+                    let sc_now = state_at(schedule, &clear, axis, q, t_eval);
                     stage_times_into(&config, db, sc_now, &mut times);
                     let serial_latency: f64 = times.iter().sum();
-                    // pipeline drains: serial query runs alone
+                    // pipeline drains: serial query runs alone (but never
+                    // before it arrives)
                     let start = stage_free.iter().copied().fold(clock, f64::max);
+                    let start = match arr_s {
+                        Some(a) => start.max(a),
+                        None => start,
+                    };
                     let finish = start + serial_latency;
                     for f in stage_free.iter_mut() {
                         *f = finish;
                     }
                     clock = finish;
                     completions.push(finish);
-                    latencies.push(serial_latency);
+                    admit_times.push(start);
+                    start_times.push(start);
+                    match arr_s {
+                        Some(a) => {
+                            latencies.push(finish - a);
+                            queued.push(start - a);
+                        }
+                        None => {
+                            latencies.push(serial_latency);
+                            queued.push(0.0);
+                        }
+                    }
                     inst_throughput.push(1.0 / serial_latency);
                     config_throughput.push(1.0 / bottleneck(&times));
-                    serial[q] = true;
+                    serial.push(true);
+                    let act = sc_now.iter().filter(|&&s| s != 0).count();
+                    stressed.push(act != 0);
+                    active_eps.push(act);
                     rebalance_time += serial_latency;
                     q += 1;
                 }
                 config = result.config;
-                stage_times_into(&config, db, schedule.at(q.min(queries - 1)), &mut times);
+                stage_times_into(
+                    &config,
+                    db,
+                    state_at(schedule, &clear, axis, q.min(queries - 1), clock),
+                    &mut times,
+                );
                 controller.bless(&times);
                 last_sc.clear(); // config changed: invalidate the cache
                 rebalances.push(RebalanceEvent {
@@ -224,21 +411,29 @@ pub fn simulate(db: &TimingDb, schedule: &Schedule, cfg: &SimConfig) -> SimResul
                 if q >= queries {
                     break;
                 }
-                let sc = schedule.at(q);
+                // q advanced through the serial phase: refresh the state
+                // the post-rebalance query actually runs under
+                sc = state_at(schedule, &clear, axis, q, clock);
                 stage_times_into(&config, db, sc, &mut times);
                 last_sc.clone_from(sc);
             }
         }
 
         // --- pipelined processing of query q ------------------------
-        // admission: at most `active` queries in flight
+        // admission: at most `min(depth, active)` queries in flight, and
+        // never before the query arrives (open-loop)
         let active = config.active_stages().max(1);
-        let gate = if completions.len() >= active {
-            completions[completions.len() - active]
+        let slots = depth.min(active);
+        let gate = if completions.len() >= slots {
+            completions[completions.len() - slots]
         } else {
             0.0
         };
         let admit = clock.max(gate).max(stage_free[0] - times[0]).max(0.0);
+        let admit = match arr {
+            Some(a) => admit.max(a),
+            None => admit,
+        };
         let mut ready = admit; // when the query's data is available
         for (i, &t) in times.iter().enumerate() {
             if t == 0.0 {
@@ -250,15 +445,36 @@ pub fn simulate(db: &TimingDb, schedule: &Schedule, cfg: &SimConfig) -> SimResul
         }
         clock = admit;
         completions.push(ready);
-        latencies.push(ready - admit);
+        admit_times.push(admit);
+        start_times.push(admit);
+        match arr {
+            Some(a) => {
+                latencies.push(ready - a);
+                queued.push(admit - a);
+            }
+            None => {
+                latencies.push(ready - admit);
+                queued.push(0.0);
+            }
+        }
         inst_throughput.push(1.0 / bottleneck(&times));
         config_throughput.push(1.0 / bottleneck(&times));
+        serial.push(false);
+        let act = sc.iter().filter(|&&s| s != 0).count();
+        stressed.push(act != 0);
+        active_eps.push(act);
         q += 1;
     }
 
     let total_time = completions.last().copied().unwrap_or(0.0);
-    SimResult {
+    Ok(SimResult {
         latencies,
+        queued,
+        start_times,
+        stressed,
+        active_eps,
+        dropped_at,
+        offered: queries,
         inst_throughput,
         config_throughput,
         serial,
@@ -267,7 +483,7 @@ pub fn simulate(db: &TimingDb, schedule: &Schedule, cfg: &SimConfig) -> SimResul
         total_time,
         final_config: config,
         peak_throughput,
-    }
+    })
 }
 
 /// Run many independent simulation windows against one database, fanning
@@ -310,6 +526,73 @@ pub fn simulate_policies(
     let schedule = Arc::new(schedule.clone());
     let pool = ThreadPool::new(jobs);
     pool.map(cfgs.to_vec(), move |c| simulate(&db, &schedule, &c))
+}
+
+/// [`simulate_policies`] for a [`Workload`]-driven run: every policy
+/// faces the identical schedule AND the identical arrival timeline.
+/// Deterministic arrivals (re-derived from the workload's seed in each
+/// worker) keep the fan-out jobs-invariant byte-for-byte.
+pub fn simulate_policies_workload(
+    db: &TimingDb,
+    schedule: &Schedule,
+    axis: ScenarioAxis,
+    cfgs: &[SimConfig],
+    workload: &Workload,
+    queries: usize,
+    jobs: usize,
+) -> Result<Vec<SimResult>> {
+    let jobs = jobs.max(1).min(cfgs.len().max(1));
+    if jobs <= 1 {
+        return cfgs
+            .iter()
+            .map(|c| simulate_workload(db, schedule, axis, c, workload, queries))
+            .collect();
+    }
+    // surface the shape errors before fanning out, so the pooled runs
+    // below cannot fail (the same checks simulate_workload applies; an
+    // open workload's arrivals() is infallible once the Workload itself
+    // validated — rates, intervals and phases are checked at build time)
+    if axis == ScenarioAxis::Queries && queries != schedule.num_queries() {
+        bail!(
+            "query-axis schedule covers {} queries, asked to run {queries}",
+            schedule.num_queries()
+        );
+    }
+    if queries == 0 {
+        bail!("cannot simulate a 0-query run");
+    }
+    let db = Arc::new(db.clone());
+    let schedule = Arc::new(schedule.clone());
+    let workload = workload.clone();
+    let pool = ThreadPool::new(jobs);
+    Ok(pool.map(cfgs.to_vec(), move |c| {
+        simulate_workload(&db, &schedule, axis, &c, &workload, queries)
+            .expect("inputs validated before fan-out")
+    }))
+}
+
+/// Interference state lookup: by query index ([`ScenarioAxis::Queries`],
+/// the historical shim) or by the virtual clock in milliseconds
+/// ([`ScenarioAxis::Millis`]; one schedule slot = 1 ms, past-horizon
+/// time is interference-free).
+fn state_at<'a>(
+    schedule: &'a Schedule,
+    clear: &'a EpScenarios,
+    axis: ScenarioAxis,
+    q: usize,
+    t: f64,
+) -> &'a EpScenarios {
+    match axis {
+        ScenarioAxis::Queries => schedule.at(q),
+        ScenarioAxis::Millis => {
+            let ms = (t.max(0.0) * 1000.0) as usize;
+            if ms < schedule.num_queries() {
+                schedule.at(ms)
+            } else {
+                clear
+            }
+        }
+    }
 }
 
 fn bottleneck(times: &[f64]) -> f64 {
@@ -490,6 +773,166 @@ mod tests {
         let r = simulate(&db, &schedule, &SimConfig::new(4, Policy::Lls));
         assert!(r.total_time > 0.0);
         assert_eq!(r.latencies.len(), 300);
+    }
+
+    #[test]
+    fn closed_workload_is_bit_identical_to_legacy_simulate() {
+        // the tentpole compatibility contract: a closed workload with a
+        // depth >= active stages reproduces the historical engine output
+        // to the last bit, including the new columns (queued all-zero)
+        let db = db();
+        let schedule = sched(50, 50, 800);
+        let cfg = SimConfig::new(4, Policy::Odin { alpha: 2 });
+        let legacy = simulate(&db, &schedule, &cfg);
+        let w = crate::serving::Workload::parse("closed:4").unwrap();
+        let r = simulate_workload(
+            &db,
+            &schedule,
+            ScenarioAxis::Queries,
+            &cfg,
+            &w,
+            800,
+        )
+        .unwrap();
+        assert_eq!(r.latencies, legacy.latencies);
+        assert_eq!(r.inst_throughput, legacy.inst_throughput);
+        assert_eq!(r.serial, legacy.serial);
+        assert_eq!(r.total_time, legacy.total_time);
+        assert_eq!(r.rebalances.len(), legacy.rebalances.len());
+        assert!(r.queued.iter().all(|&d| d == 0.0), "closed loop queued");
+        assert!(legacy.queued.iter().all(|&d| d == 0.0));
+        assert!(r.dropped_at.is_empty() && legacy.dropped_at.is_empty());
+        assert_eq!(r.offered, 800);
+    }
+
+    #[test]
+    fn closed_depth_one_serializes_the_pipeline() {
+        let db = db();
+        let schedule = Schedule::none(4, 200);
+        let cfg = SimConfig::new(4, Policy::Static);
+        let deep = simulate(&db, &schedule, &cfg);
+        let w = crate::serving::Workload::parse("closed:1").unwrap();
+        let lock = simulate_workload(
+            &db,
+            &schedule,
+            ScenarioAxis::Queries,
+            &cfg,
+            &w,
+            200,
+        )
+        .unwrap();
+        // lock-step runs one query at a time: latency per query is the
+        // same, but completions stop overlapping so the run takes longer
+        assert!(lock.total_time > deep.total_time * 1.5);
+        assert!(lock.achieved_throughput() < deep.achieved_throughput());
+    }
+
+    #[test]
+    fn open_workload_reports_queueing_and_sheds_at_the_bound() {
+        let db = db();
+        let schedule = Schedule::none(4, 600);
+        let cfg = SimConfig::new(4, Policy::Static).with_queue_cap(16);
+        let r0 = simulate(&db, &schedule, &cfg);
+        // offered load at 3x capacity: queueing must build up and the
+        // 16-slot queue must shed
+        let rate = 3.0 * r0.peak_throughput;
+        let w = crate::serving::Workload::poisson(rate, 7).unwrap();
+        let r = simulate_workload(
+            &db,
+            &schedule,
+            ScenarioAxis::Queries,
+            &cfg,
+            &w,
+            600,
+        )
+        .unwrap();
+        assert_eq!(r.offered, 600);
+        assert_eq!(r.latencies.len() + r.dropped_at.len(), 600);
+        assert!(!r.dropped_at.is_empty(), "overload never shed");
+        let q_mean: f64 =
+            r.queued.iter().sum::<f64>() / r.queued.len() as f64;
+        assert!(q_mean > 0.0, "no queueing under 3x overload");
+        // latency = queued + service, both non-negative
+        for (&l, &q) in r.latencies.iter().zip(&r.queued) {
+            assert!(q >= 0.0 && l >= q, "latency {l} < queued {q}");
+        }
+        // a sub-capacity rate on a quiet pipeline barely queues and
+        // never sheds
+        let w = crate::serving::Workload::poisson(0.5 * r0.peak_throughput, 7)
+            .unwrap();
+        let r = simulate_workload(
+            &db,
+            &schedule,
+            ScenarioAxis::Queries,
+            &cfg,
+            &w,
+            600,
+        )
+        .unwrap();
+        assert!(r.dropped_at.is_empty(), "sub-capacity load shed");
+        let q_mean: f64 =
+            r.queued.iter().sum::<f64>() / r.queued.len() as f64;
+        let s_mean: f64 = r
+            .latencies
+            .iter()
+            .zip(&r.queued)
+            .map(|(&l, &q)| l - q)
+            .sum::<f64>()
+            / r.latencies.len() as f64;
+        assert!(q_mean < s_mean, "queued {q_mean} >= service {s_mean}");
+    }
+
+    #[test]
+    fn open_arrivals_are_jobs_and_seed_deterministic() {
+        let db = db();
+        let schedule = sched(50, 50, 500);
+        let cfgs: Vec<SimConfig> = [Policy::Odin { alpha: 2 }, Policy::Lls]
+            .into_iter()
+            .map(|p| SimConfig::new(4, p).with_queue_cap(64))
+            .collect();
+        let w = crate::serving::Workload::parse("poisson:40qps@11").unwrap();
+        let serial = simulate_policies_workload(
+            &db,
+            &schedule,
+            ScenarioAxis::Queries,
+            &cfgs,
+            &w,
+            500,
+            1,
+        )
+        .unwrap();
+        let parallel = simulate_policies_workload(
+            &db,
+            &schedule,
+            ScenarioAxis::Queries,
+            &cfgs,
+            &w,
+            500,
+            2,
+        )
+        .unwrap();
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.latencies, b.latencies);
+            assert_eq!(a.queued, b.queued);
+            assert_eq!(a.dropped_at, b.dropped_at);
+        }
+    }
+
+    #[test]
+    fn workload_query_count_mismatch_is_error() {
+        let db = db();
+        let schedule = sched(50, 50, 500);
+        let w = crate::serving::Workload::parse("closed:2").unwrap();
+        let e = simulate_workload(
+            &db,
+            &schedule,
+            ScenarioAxis::Queries,
+            &SimConfig::new(4, Policy::Static),
+            &w,
+            400,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("covers 500"), "{e:#}");
     }
 
     #[test]

@@ -12,9 +12,12 @@ pub mod slo;
 pub mod window;
 
 pub use engine::{
-    simulate, simulate_many, simulate_policies, Policy, RebalanceEvent, SimConfig,
-    SimResult,
+    simulate, simulate_many, simulate_policies, simulate_policies_workload,
+    simulate_workload, Policy, RebalanceEvent, SimConfig, SimResult,
 };
 pub use metrics::SimSummary;
 pub use slo::{slo_violations, SloReport};
-pub use window::{window_metrics, windows_json, WindowMetrics, DEFAULT_WINDOW};
+pub use window::{
+    dropped_in_window, window_metrics, windows_json, WindowMetrics,
+    DEFAULT_WINDOW,
+};

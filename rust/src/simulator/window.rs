@@ -23,8 +23,18 @@ pub struct WindowMetrics {
     /// Query span `[start, end)` of the window.
     pub start: usize,
     pub end: usize,
+    /// Mean/max end-to-end latency (queueing + service, seconds).
     pub lat_mean: f64,
     pub lat_max: f64,
+    /// Mean queueing delay (arrival → admission) in the window, in
+    /// nanoseconds. Zero under closed-loop driving — closed admission
+    /// *is* arrival, which is exactly why open-loop workloads exist.
+    pub queued_ns: f64,
+    /// Mean service time (admission → completion) in the window, ns.
+    /// `lat_mean ≈ (queued_ns + service_ns) / 1e9` per window.
+    pub service_ns: f64,
+    /// Arrivals shed in the window (bounded queue hit its cap).
+    pub dropped: usize,
     /// Mean sustained (configuration) throughput over the window — the
     /// Fig-6 quality metric.
     pub tput_mean: f64,
@@ -63,6 +73,11 @@ pub fn window_metrics(
         let lats = &r.latencies[start..end];
         let lat_mean = lats.iter().sum::<f64>() / lats.len() as f64;
         let lat_max = lats.iter().copied().fold(0.0f64, f64::max);
+        let queued_mean = r.queued[start..end].iter().sum::<f64>()
+            / (end - start) as f64;
+        let queued_ns = queued_mean * 1e9;
+        let service_ns = (lat_mean - queued_mean) * 1e9;
+        let dropped = dropped_in_window(&r.dropped_at, n, start, end);
         let tput_mean = r.config_throughput[start..end].iter().sum::<f64>()
             / (end - start) as f64;
         let wall_tput = wall[out.len()];
@@ -77,9 +92,11 @@ pub fn window_metrics(
             .iter()
             .filter(|&&t| t < target)
             .count();
-        let active: usize = (start..end)
-            .map(|q| schedule.at(q).iter().filter(|&&s| s != 0).count())
-            .sum();
+        // interference as the engine recorded it at each query's
+        // admission — identical to indexing the schedule for query-axis
+        // scenarios, and the only correct reading for wall-clock ones
+        // (whose schedule is indexed by time, not query)
+        let active: usize = r.active_eps[start..end].iter().sum();
         let interference_load =
             active as f64 / ((end - start) * schedule.num_eps) as f64;
         out.push(WindowMetrics {
@@ -88,6 +105,9 @@ pub fn window_metrics(
             end,
             lat_mean,
             lat_max,
+            queued_ns,
+            service_ns,
+            dropped,
             tput_mean,
             wall_tput,
             serial_queries,
@@ -98,6 +118,26 @@ pub fn window_metrics(
         start = end;
     }
     out
+}
+
+/// Count shed arrivals attributed to the completion-axis window
+/// `[start, end)`; drops recorded past the final completed query land in
+/// the last window. ONE implementation shared by the simulator fold
+/// above and the live harness's window fold, so the two emitters of the
+/// common window schema cannot drift on drop attribution.
+pub fn dropped_in_window(
+    dropped_at: &[usize],
+    n: usize,
+    start: usize,
+    end: usize,
+) -> usize {
+    dropped_at
+        .iter()
+        .filter(|&&at| {
+            let at = at.min(n.saturating_sub(1));
+            at >= start && at < end
+        })
+        .count()
 }
 
 /// Deterministic JSON array of per-window rows (stable key order via the
@@ -113,6 +153,9 @@ pub fn windows_json(windows: &[WindowMetrics]) -> Value {
                     ("end", Value::from(w.end)),
                     ("lat_mean", Value::from(w.lat_mean)),
                     ("lat_max", Value::from(w.lat_max)),
+                    ("queued_ns", Value::from(w.queued_ns)),
+                    ("service_ns", Value::from(w.service_ns)),
+                    ("dropped", Value::from(w.dropped)),
                     ("tput_mean", Value::from(w.tput_mean)),
                     ("wall_tput", Value::from(w.wall_tput)),
                     ("serial_queries", Value::from(w.serial_queries)),
@@ -196,5 +239,60 @@ mod tests {
         assert_eq!(arr[0].get("window").as_usize(), Some(0));
         assert_eq!(arr[0].get("start").as_usize(), Some(0));
         assert!(arr[0].get("lat_mean").as_f64().unwrap() > 0.0);
+        // the open-loop columns are always present; a closed-loop run
+        // reports zero queueing, no drops, and service == latency
+        assert_eq!(arr[0].get("queued_ns").as_f64(), Some(0.0));
+        assert_eq!(arr[0].get("dropped").as_usize(), Some(0));
+        let lat = arr[0].get("lat_mean").as_f64().unwrap();
+        let svc = arr[0].get("service_ns").as_f64().unwrap();
+        assert!((svc / 1e9 - lat).abs() < 1e-12 * lat.max(1.0));
+        assert_eq!(arr[0].keys().len(), 14);
+    }
+
+    #[test]
+    fn dropped_in_window_attributes_and_clamps() {
+        let d = [0usize, 5, 99, 150];
+        assert_eq!(dropped_in_window(&d, 100, 0, 50), 2);
+        // 99 plus the past-the-end 150 clamped into the final window
+        assert_eq!(dropped_in_window(&d, 100, 50, 100), 2);
+        assert_eq!(dropped_in_window(&[], 100, 0, 100), 0);
+    }
+
+    #[test]
+    fn open_loop_windows_split_queued_from_service_and_count_drops() {
+        use crate::serving::Workload;
+        use crate::simulator::engine::simulate_workload;
+        let db = synthesize(&models::vgg16(64), 1);
+        let schedule = builtin("burst").unwrap().compile();
+        let cfg = SimConfig::new(4, Policy::Odin { alpha: 2 })
+            .with_window(DEFAULT_WINDOW)
+            .with_queue_cap(8);
+        let probe = simulate(&db, &Schedule::none(4, 10), &SimConfig::new(4, Policy::Static));
+        let w = Workload::poisson(2.0 * probe.peak_throughput, 7).unwrap();
+        let r = simulate_workload(
+            &db,
+            &schedule,
+            crate::interference::dynamic::ScenarioAxis::Queries,
+            &cfg,
+            &w,
+            schedule.num_queries(),
+        )
+        .unwrap();
+        let ws = window_metrics(&r, &schedule, DEFAULT_WINDOW, 0.7);
+        assert!(
+            ws.iter().any(|w| w.queued_ns > 0.0),
+            "2x overload produced no queueing"
+        );
+        let dropped: usize = ws.iter().map(|w| w.dropped).sum();
+        assert_eq!(dropped, r.dropped_at.len());
+        assert!(dropped > 0, "2x overload with an 8-slot queue never shed");
+        for w in &ws {
+            assert!(w.queued_ns >= 0.0 && w.service_ns > 0.0);
+            let rebuilt = (w.queued_ns + w.service_ns) / 1e9;
+            assert!(
+                (rebuilt - w.lat_mean).abs() < 1e-9 * w.lat_mean.max(1.0),
+                "split does not rebuild lat_mean"
+            );
+        }
     }
 }

@@ -12,5 +12,5 @@ pub mod stats;
 pub mod threadpool;
 
 pub use rng::Rng;
-pub use stats::{percentile, Histogram, Summary, Welford};
+pub use stats::{percentile, Ewma, Histogram, Summary, Welford};
 pub use threadpool::ThreadPool;

@@ -146,6 +146,61 @@ impl Welford {
     }
 }
 
+/// Exponentially-weighted mean/variance — the decaying counterpart of
+/// [`Welford`]. Where Welford weights every sample equally forever, an
+/// EWMA forgets: a short burst of outliers inflates the estimate
+/// transiently and then decays away at rate `lambda` per sample. The
+/// stage-time monitor uses this so its noise estimate survives short
+/// interference bursts instead of being poisoned until the next reset.
+#[derive(Clone, Copy, Debug)]
+pub struct Ewma {
+    lambda: f64,
+    mean: f64,
+    var: f64,
+    n: u64,
+}
+
+impl Ewma {
+    /// `lambda` in (0, 1]: the weight of each new sample (1 = no memory).
+    pub fn new(lambda: f64) -> Ewma {
+        assert!(lambda > 0.0 && lambda <= 1.0, "lambda {lambda}");
+        Ewma { lambda, mean: 0.0, var: 0.0, n: 0 }
+    }
+
+    /// Standard EW update (West 1979): the variance recursion
+    /// `var ← (1−λ)(var + λ·d²)` uses the *pre-update* deviation `d`.
+    pub fn push(&mut self, x: f64) {
+        if self.n == 0 {
+            self.mean = x;
+        } else {
+            let d = x - self.mean;
+            self.mean += self.lambda * d;
+            self.var = (1.0 - self.lambda) * (self.var + self.lambda * d * d);
+        }
+        self.n += 1;
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.var
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -214,6 +269,29 @@ mod tests {
         let mut h = Histogram::new(0.0, 1.0, 16);
         h.add(0.5);
         assert_eq!(h.sparkline().chars().count(), 16);
+    }
+
+    #[test]
+    fn ewma_tracks_mean_and_decays_variance() {
+        let mut e = Ewma::new(0.2);
+        assert_eq!(e.var(), 0.0);
+        for _ in 0..50 {
+            e.push(1.0);
+        }
+        assert!((e.mean() - 1.0).abs() < 1e-12);
+        assert!(e.std() < 1e-12);
+        // one burst of outliers inflates the variance...
+        for x in [1.5, 0.5, 1.5] {
+            e.push(x);
+        }
+        let burst_std = e.std();
+        assert!(burst_std > 0.1, "burst did not register: {burst_std}");
+        // ...and quiet samples decay it back down
+        for _ in 0..40 {
+            e.push(1.0);
+        }
+        assert!(e.std() < burst_std * 0.05, "no decay: {} vs {burst_std}", e.std());
+        assert!((e.mean() - 1.0).abs() < 1e-3);
     }
 
     #[test]

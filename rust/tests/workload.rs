@@ -1,0 +1,269 @@
+//! Integration suite for the unified `Workload` API (ISSUE 4): arrival
+//! determinism, jobs-invariance of open-loop sweeps, bit-compatibility of
+//! the closed loop with the pre-Workload engine, and wall-clock scenario
+//! eras that do not move with the admission depth.
+
+use odin::database::synth::synthesize;
+use odin::database::TimingDb;
+use odin::experiments::dynamic::{
+    run_scenario, run_scenario_workload, scenario_json, DYN_POLICIES,
+};
+use odin::interference::dynamic::{builtin, DynamicScenario, ScenarioAxis};
+use odin::json::to_string_pretty;
+use odin::models;
+use odin::serving::Workload;
+use odin::simulator::{simulate_workload, Policy, SimConfig, SimResult};
+
+fn db() -> TimingDb {
+    synthesize(&models::build("vgg16", 64).unwrap(), 42)
+}
+
+#[test]
+fn poisson_and_trace_arrivals_are_seed_reproducible() {
+    // the same spec string always materializes the same timeline...
+    let a = Workload::parse("poisson:120qps@5").unwrap().arrivals(400).unwrap();
+    let b = Workload::parse("poisson:120qps@5").unwrap().arrivals(400).unwrap();
+    assert_eq!(a, b);
+    // ...and a different seed materializes a different one
+    let c = Workload::parse("poisson:120qps@6").unwrap().arrivals(400).unwrap();
+    assert_ne!(a, c);
+    // trace workloads are deterministic replay by construction
+    let t = Workload::trace(vec![0.25, 0.5]).unwrap();
+    assert_eq!(t.arrivals(4).unwrap(), t.arrivals(4).unwrap());
+}
+
+#[test]
+fn open_loop_scenario_sweep_is_byte_identical_across_jobs() {
+    // the CI contract, extended to open-loop runs: --jobs 1 and --jobs 3
+    // must produce identical scenario documents under a Poisson workload
+    let db = db();
+    let scenario = builtin("burst").unwrap().scaled(600).unwrap();
+    let workload = Workload::parse("poisson:30qps@9").unwrap();
+    let run = |jobs| {
+        let (schedule, results) = run_scenario_workload(
+            &db,
+            &scenario,
+            &DYN_POLICIES,
+            &workload,
+            600,
+            64,
+            jobs,
+        )
+        .unwrap();
+        to_string_pretty(&scenario_json(&scenario, &schedule, &DYN_POLICIES, &results))
+    };
+    assert_eq!(run(1), run(3), "open-loop sweep is not jobs-invariant");
+}
+
+#[test]
+fn closed_workload_scenario_sweep_matches_the_legacy_engine_byte_for_byte() {
+    // the PR-3 compatibility bar: a closed workload whose depth covers
+    // the pipeline reproduces the historical scenario document exactly —
+    // including the re-pinned window schema (queued_ns 0, dropped 0)
+    let db = db();
+    let scenario = builtin("burst").unwrap().scaled(600).unwrap();
+    let (legacy_schedule, legacy) =
+        run_scenario(&db, &scenario, &DYN_POLICIES, 2);
+    let workload = Workload::parse("closed:4").unwrap();
+    let (schedule, results) = run_scenario_workload(
+        &db,
+        &scenario,
+        &DYN_POLICIES,
+        &workload,
+        600,
+        256,
+        2,
+    )
+    .unwrap();
+    let a = to_string_pretty(&scenario_json(
+        &scenario,
+        &legacy_schedule,
+        &DYN_POLICIES,
+        &legacy,
+    ));
+    let b = to_string_pretty(&scenario_json(
+        &scenario,
+        &schedule,
+        &DYN_POLICIES,
+        &results,
+    ));
+    assert_eq!(a, b, "closed:4 drifted from the legacy closed loop");
+    for r in &results {
+        assert!(r.queued.iter().all(|&q| q == 0.0));
+        assert!(r.dropped_at.is_empty());
+    }
+}
+
+#[test]
+fn poisson_scenario_run_reports_nonzero_queueing_in_the_document() {
+    // the acceptance bar: an overloaded poisson run must surface
+    // queued_ns > 0 (separated from service_ns) in scenario window rows
+    let db = db();
+    let scenario = builtin("burst").unwrap().scaled(600).unwrap();
+    let probe = {
+        let w = Workload::parse("closed:4").unwrap();
+        simulate_workload(
+            &db,
+            &scenario.compile(),
+            ScenarioAxis::Queries,
+            &SimConfig::new(4, Policy::Static),
+            &w,
+            600,
+        )
+        .unwrap()
+        .peak_throughput
+    };
+    let workload = Workload::poisson(1.5 * probe, 3).unwrap();
+    let (schedule, results) = run_scenario_workload(
+        &db,
+        &scenario,
+        &DYN_POLICIES,
+        &workload,
+        600,
+        64,
+        2,
+    )
+    .unwrap();
+    let doc = scenario_json(&scenario, &schedule, &DYN_POLICIES, &results);
+    let mut saw_queued = false;
+    for p in doc.get("policies").as_arr().unwrap() {
+        for row in p.get("windows").as_arr().unwrap() {
+            let queued = row.get("queued_ns").as_f64().unwrap();
+            let service = row.get("service_ns").as_f64().unwrap();
+            assert!(queued >= 0.0 && service > 0.0);
+            saw_queued |= queued > 0.0;
+        }
+    }
+    assert!(saw_queued, "1.5x-peak poisson load reported zero queueing");
+}
+
+/// First stressed query of a run, as (arrival index, virtual start time).
+fn era_flip(r: &SimResult) -> (usize, f64) {
+    let idx = r
+        .stressed
+        .iter()
+        .position(|&s| s)
+        .expect("run never entered the stressor era");
+    (idx, r.start_times[idx])
+}
+
+#[test]
+fn wall_clock_scenario_eras_are_admission_depth_independent() {
+    // THE acceptance criterion: with phase boundaries in milliseconds,
+    // the stressor era begins at the same virtual *time* under depth 1
+    // and depth 4 — while its query *index* moves. A query-axis scenario
+    // shows the mirror image: fixed index, moving time.
+    let db = db();
+    let ms_scenario = DynamicScenario::from_json_str(
+        r#"{"name": "ms-era", "eps": 4, "unit": "ms",
+            "horizon_ms": 20000,
+            "phases": [{"kind": "task", "start": 2000, "end": 20000,
+                        "ep": 1, "scenario": 9}]}"#,
+    )
+    .unwrap();
+    let schedule = ms_scenario.compile();
+    let run_at = |depth: usize| {
+        let w = Workload::closed(depth).unwrap();
+        simulate_workload(
+            &db,
+            &schedule,
+            ScenarioAxis::Millis,
+            &SimConfig::new(4, Policy::Static),
+            &w,
+            400,
+        )
+        .unwrap()
+    };
+    let lock = run_at(1);
+    let deep = run_at(4);
+    let (idx_lock, t_lock) = era_flip(&lock);
+    let (idx_deep, t_deep) = era_flip(&deep);
+    // era boundaries are wall-clock facts: both runs cross 2000 ms at
+    // (nearly) the same virtual time, one query-period of slack each
+    assert!(
+        (t_lock - t_deep).abs() < 0.2,
+        "era start moved with depth: {t_lock:.3}s vs {t_deep:.3}s"
+    );
+    assert!(
+        (1.9..2.4).contains(&t_lock),
+        "era did not start near 2.0s: {t_lock:.3}s"
+    );
+    // the lock-step pipeline serves fewer queries per virtual second, so
+    // it reaches the era at a smaller query index
+    assert!(
+        idx_lock < idx_deep,
+        "depth decoupling missing: lock {idx_lock} !< deep {idx_deep}"
+    );
+
+    // mirror image on the query axis: the flip index is pinned by the
+    // schedule, so it cannot move with depth — but the flip time does
+    let q_scenario = DynamicScenario::from_json_str(
+        r#"{"name": "q-era", "eps": 4, "queries": 400,
+            "phases": [{"kind": "task", "start": 100, "end": 400,
+                        "ep": 1, "scenario": 9}]}"#,
+    )
+    .unwrap();
+    let q_schedule = q_scenario.compile();
+    let run_q = |depth: usize| {
+        let w = Workload::closed(depth).unwrap();
+        simulate_workload(
+            &db,
+            &q_schedule,
+            ScenarioAxis::Queries,
+            &SimConfig::new(4, Policy::Static),
+            &w,
+            400,
+        )
+        .unwrap()
+    };
+    let (qi_lock, qt_lock) = era_flip(&run_q(1));
+    let (qi_deep, qt_deep) = era_flip(&run_q(4));
+    assert_eq!(qi_lock, 100, "query-axis era index must be schedule-pinned");
+    assert_eq!(qi_lock, qi_deep);
+    assert!(
+        (qt_lock - qt_deep).abs() > 0.2,
+        "query-axis era time unexpectedly depth-invariant: \
+         {qt_lock:.3}s vs {qt_deep:.3}s"
+    );
+}
+
+#[test]
+fn openloop_json_artifact_is_jobs_invariant() {
+    // the satellite CI contract, exercised end to end through the public
+    // experiment runner: openloop.json at --jobs 1 == --jobs 4
+    use odin::experiments::ExpCtx;
+    let tmp = |name: &str| {
+        std::env::temp_dir()
+            .join(format!("odin_openloop_{}_{name}", std::process::id()))
+    };
+    let d1 = tmp("j1");
+    let d4 = tmp("j4");
+    let ctx = |dir: &std::path::Path, jobs| ExpCtx {
+        out_dir: Some(dir.to_path_buf()),
+        queries: 300,
+        jobs,
+        ..ExpCtx::default()
+    };
+    odin::experiments::run("openloop", &ctx(&d1, 1)).unwrap();
+    odin::experiments::run("openloop", &ctx(&d4, 4)).unwrap();
+    let a = std::fs::read(d1.join("openloop.json")).unwrap();
+    let b = std::fs::read(d4.join("openloop.json")).unwrap();
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "openloop.json differs between --jobs 1 and --jobs 4");
+    let doc = odin::json::parse(std::str::from_utf8(&a).unwrap()).unwrap();
+    let scenarios = doc.get("scenarios").as_arr().unwrap();
+    assert_eq!(scenarios.len(), 2);
+    // past saturation (rate_frac 1.2) at least one policy queues
+    let rates = scenarios[0].get("rates").as_arr().unwrap();
+    let hot = rates.last().unwrap();
+    assert_eq!(hot.get("rate_frac").as_f64(), Some(1.2));
+    let queued_somewhere = hot
+        .get("cells")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .any(|c| c.get("queued_mean").as_f64().unwrap_or(0.0) > 0.0);
+    assert!(queued_somewhere, "no cell queued past saturation");
+    let _ = std::fs::remove_dir_all(&d1);
+    let _ = std::fs::remove_dir_all(&d4);
+}
