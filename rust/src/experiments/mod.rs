@@ -21,6 +21,7 @@
 //! | ablation| alpha / detection-threshold sweeps (extension)        |
 //! | dynamic | time-phased scenarios under the online loop (extension)|
 //! | openloop| Poisson offered load: queueing, drops, SLO (extension)|
+//! | multitenant | per-tenant SLOs under the EDF queue (extension)   |
 
 mod ablation;
 pub mod dynamic;
@@ -30,6 +31,7 @@ mod fig3;
 mod fig4;
 mod fig9;
 mod grid;
+pub mod multitenant;
 pub mod openloop;
 mod summary;
 mod table1;
@@ -89,9 +91,10 @@ impl Output {
     }
 }
 
-pub const ALL_IDS: [&str; 14] = [
+pub const ALL_IDS: [&str; 15] = [
     "table1", "fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
     "fig9", "fig10", "summary", "ablation", "dynamic", "openloop",
+    "multitenant",
 ];
 
 /// Run one experiment (or `all`).
@@ -100,6 +103,7 @@ pub fn run(id: &str, ctx: &ExpCtx) -> Result<()> {
         "table1" => table1::run(ctx),
         "dynamic" => dynamic::run(ctx),
         "openloop" => openloop::run(ctx),
+        "multitenant" => multitenant::run(ctx),
         "fig1" => fig1::run(ctx),
         "fig3" => fig3::run(ctx),
         "fig4" => fig4::run(ctx),

@@ -1,0 +1,390 @@
+//! The multi-tenant SLO experiment: tenant-mix × scenario × policy under
+//! the SLO-aware queue.
+//!
+//! ODIN's opening claim is "inference as a service" — co-located tenants
+//! with different latency targets sharing one pipeline — but every other
+//! sweep serves a single anonymous stream. This sweep replays each
+//! builtin tenant set (rates pinned to fractions of the pipeline's
+//! interference-free peak) under dynamic scenarios, for ODIN / LLS /
+//! static, and reports the per-tenant ledger each cell produces:
+//! offered / completed / dropped / SLO violations, the queued-vs-service
+//! split, and each tenant's achieved completion share against its
+//! weight share (the fairness reference). Like every figure artifact,
+//! `multitenant.json` is byte-stable and `--jobs`-invariant.
+
+use crate::database::synth::synthesize;
+use crate::database::TimingDb;
+use crate::interference::dynamic::{DynamicScenario, ScenarioAxis};
+use crate::interference::Schedule;
+use crate::json::Value;
+use crate::models;
+use crate::serving::tenant::{self, tally, totals_json, TenantSet};
+use crate::simulator::window::{attach_tenant_windows, window_metrics, windows_json};
+use crate::simulator::{simulate_tenants_policies, MtSimResult, Policy, SimConfig};
+use crate::util::error::Result;
+
+use super::dynamic::{DYN_SLO_LEVEL, DYN_WINDOW};
+use super::{ExpCtx, Output};
+
+/// Scenarios of the sweep (subset of the builtins, like `openloop`).
+pub const MT_SCENARIOS: [&str; 2] = ["burst", "arrivals"];
+/// Builtin tenant mixes swept (the `mixed` set rides along in the CLI).
+pub const MT_SETS: [&str; 2] = ["tiers", "even"];
+/// Total offered load as fractions of the interference-free peak rate.
+pub const MT_RATE_FRACS: [f64; 2] = [0.8, 1.2];
+/// Policies per cell.
+pub const MT_POLICIES: [Policy; 3] =
+    [Policy::Odin { alpha: 2 }, Policy::Lls, Policy::Static];
+/// Bound of the SLO-aware arrival queue.
+pub const MT_QUEUE_CAP: usize = 64;
+/// The model the sweep runs on.
+pub const MT_MODEL: &str = "vgg16";
+
+/// Run `policies` against one scenario under one tenant set: identical
+/// schedule, identical merged arrival stream, SLO-aware queue bounded at
+/// `queue_cap`. Shared by this experiment and `odin simulate --tenants`.
+pub fn run_tenant_scenario(
+    db: &TimingDb,
+    scenario: &DynamicScenario,
+    tenants: &TenantSet,
+    policies: &[Policy],
+    queue_cap: usize,
+    queries: usize,
+    jobs: usize,
+) -> Result<(Schedule, Vec<MtSimResult>)> {
+    let schedule = scenario.compile();
+    let cfgs: Vec<SimConfig> = policies
+        .iter()
+        .map(|&p| {
+            SimConfig::new(scenario.num_eps, p)
+                .with_window(DYN_WINDOW)
+                .with_queue_cap(queue_cap)
+        })
+        .collect();
+    let results = simulate_tenants_policies(
+        db,
+        &schedule,
+        scenario.axis,
+        &cfgs,
+        tenants,
+        queries,
+        jobs,
+    )?;
+    Ok((schedule, results))
+}
+
+/// Byte-stable document for one (scenario, tenant set) run: per-policy
+/// per-tenant totals (the [`totals_json`] schema shared with
+/// `live_*.json`) plus per-window timelines whose rows carry the
+/// `tenants` array — the simulator half of the live-vs-sim schema
+/// contract.
+pub fn mt_scenario_json(
+    scenario: &DynamicScenario,
+    schedule: &Schedule,
+    tenants: &TenantSet,
+    policies: &[Policy],
+    results: &[MtSimResult],
+) -> Value {
+    assert_eq!(policies.len(), results.len());
+    let ids = tenants.ids();
+    let mut policy_vals = Vec::with_capacity(policies.len());
+    for (policy, r) in policies.iter().zip(results) {
+        let mut ws =
+            window_metrics(&r.result, schedule, DYN_WINDOW, DYN_SLO_LEVEL);
+        attach_tenant_windows(
+            &mut ws,
+            &ids,
+            &r.tenant,
+            &r.blown,
+            &r.result.queued,
+            &r.result.latencies,
+            &r.result.dropped_at,
+            &r.dropped_tenant,
+        );
+        let totals = tally(
+            tenants,
+            &r.tenant,
+            &r.blown,
+            &r.result.queued,
+            &r.result.latencies,
+            &r.dropped_tenant,
+        );
+        let blown_total = r.blown.iter().filter(|&&b| b).count();
+        let lat_mean = r.result.latencies.iter().sum::<f64>()
+            / r.result.latencies.len().max(1) as f64;
+        policy_vals.push(Value::obj(vec![
+            ("completed", Value::from(r.result.latencies.len())),
+            ("dropped", Value::from(r.result.dropped_at.len())),
+            ("lat_mean", Value::from(lat_mean)),
+            ("offered", Value::from(r.result.offered)),
+            ("policy", Value::from(policy.label())),
+            ("rebalances", Value::from(r.result.rebalances.len())),
+            ("slo_violations", Value::from(blown_total)),
+            ("tenants", totals_json(&totals)),
+            ("windows", windows_json(&ws)),
+        ]));
+    }
+    Value::obj(vec![
+        ("eps", Value::from(scenario.num_eps)),
+        ("name", Value::from(scenario.name.clone())),
+        ("policies", Value::arr(policy_vals)),
+        ("queries", Value::from(scenario.num_queries)),
+        (
+            "summary",
+            Value::obj(vec![(
+                "interference_load",
+                Value::from(schedule.interference_load()),
+            )]),
+        ),
+        ("tenant_set", Value::from(tenants.name.clone())),
+    ])
+}
+
+/// Compact per-cell JSON for the sweep artifact (totals only — the full
+/// window timelines live in the CLI's per-run documents).
+fn cell_json(policy: Policy, tenants: &TenantSet, r: &MtSimResult) -> Value {
+    let totals = tally(
+        tenants,
+        &r.tenant,
+        &r.blown,
+        &r.result.queued,
+        &r.result.latencies,
+        &r.dropped_tenant,
+    );
+    // the fairness check comes from the same shares() the emitted
+    // per-tenant columns use, so the summary cannot drift from them
+    let unfairness = tenant::unfairness(&totals);
+    let blown_total = r.blown.iter().filter(|&&b| b).count();
+    Value::obj(vec![
+        ("completed", Value::from(r.result.latencies.len())),
+        ("dropped", Value::from(r.result.dropped_at.len())),
+        ("offered", Value::from(r.result.offered)),
+        ("policy", Value::from(policy.label())),
+        ("rebalances", Value::from(r.result.rebalances.len())),
+        ("slo_violations", Value::from(blown_total)),
+        ("tenants", totals_json(&totals)),
+        ("unfairness", Value::from(unfairness)),
+    ])
+}
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let mut out = Output::new(ctx, "multitenant")?;
+    out.line("# multitenant — SLO-aware serving: tenant mix x scenario x policy");
+    out.line(format!(
+        "# EDF-within-priority admission, deadline-aware shedding, queue \
+         cap {MT_QUEUE_CAP};"
+    ));
+    out.line("# total offered rate pinned to fractions of the clean peak");
+    let spec = models::build(MT_MODEL, ctx.spatial).unwrap();
+    let db = synthesize(&spec, ctx.seed);
+    out.line(format!(
+        "{:<7} {:<9} {:>5} {:<9} {:<8} {:>7} {:>6} {:>6} {:>6} {:>9}",
+        "set", "scenario", "rate", "policy", "tenant", "offered", "done",
+        "drop", "viol", "queued_ms"
+    ));
+    let mut set_vals = Vec::with_capacity(MT_SETS.len());
+    for set_name in MT_SETS {
+        let base = tenant::builtin(set_name)?;
+        let mut scenario_vals = Vec::with_capacity(MT_SCENARIOS.len());
+        for name in MT_SCENARIOS {
+            let scenario = crate::interference::dynamic::builtin(name)?
+                .scaled(ctx.queries)?;
+            let queries = match scenario.axis {
+                ScenarioAxis::Queries => scenario.num_queries,
+                ScenarioAxis::Millis => ctx.queries,
+            };
+            let peak = {
+                let clean = vec![0usize; scenario.num_eps];
+                let (_, bottleneck) = crate::coordinator::optimal_config(
+                    &db,
+                    &clean,
+                    scenario.num_eps,
+                );
+                1.0 / bottleneck
+            };
+            let mut rate_vals = Vec::with_capacity(MT_RATE_FRACS.len());
+            for rate_frac in MT_RATE_FRACS {
+                let total_qps = rate_frac * peak;
+                let tenants = base.with_total_rate(total_qps)?;
+                let (_, results) = run_tenant_scenario(
+                    &db,
+                    &scenario,
+                    &tenants,
+                    &MT_POLICIES,
+                    MT_QUEUE_CAP,
+                    queries,
+                    ctx.jobs,
+                )?;
+                let mut cells = Vec::with_capacity(MT_POLICIES.len());
+                for (policy, r) in MT_POLICIES.iter().zip(&results) {
+                    let v = cell_json(*policy, &tenants, r);
+                    for t in v.get("tenants").as_arr().unwrap_or(&[]) {
+                        out.line(format!(
+                            "{:<7} {:<9} {:>5.2} {:<9} {:<8} {:>7} {:>6} \
+                             {:>6} {:>6} {:>9.2}",
+                            set_name,
+                            name,
+                            rate_frac,
+                            policy.label(),
+                            t.get("id").as_str().unwrap_or("?"),
+                            t.get("offered").as_usize().unwrap_or(0),
+                            t.get("completed").as_usize().unwrap_or(0),
+                            t.get("dropped").as_usize().unwrap_or(0),
+                            t.get("slo_violations").as_usize().unwrap_or(0),
+                            t.get("queued_ns").as_f64().unwrap_or(0.0) / 1e6,
+                        ));
+                    }
+                    cells.push(v);
+                }
+                rate_vals.push(Value::obj(vec![
+                    ("cells", Value::arr(cells)),
+                    ("rate_frac", Value::from(rate_frac)),
+                    ("total_qps", Value::from(total_qps)),
+                ]));
+            }
+            scenario_vals.push(Value::obj(vec![
+                ("name", Value::from(name)),
+                ("peak_qps", Value::from(peak)),
+                ("queries", Value::from(queries)),
+                ("rates", Value::arr(rate_vals)),
+            ]));
+        }
+        set_vals.push(Value::obj(vec![
+            ("name", Value::from(set_name)),
+            ("scenarios", Value::arr(scenario_vals)),
+            (
+                "tenants",
+                Value::arr(
+                    base.tenants
+                        .iter()
+                        .map(|t| Value::from(t.id.clone()))
+                        .collect(),
+                ),
+            ),
+        ]));
+    }
+    if let Some(dir) = &ctx.out_dir {
+        let doc = Value::obj(vec![
+            ("model", Value::from(MT_MODEL)),
+            ("queue_cap", Value::from(MT_QUEUE_CAP)),
+            ("sets", Value::arr(set_vals)),
+            ("slo_level", Value::from(DYN_SLO_LEVEL)),
+            ("window", Value::from(DYN_WINDOW)),
+        ]);
+        let path = dir.join("multitenant.json");
+        crate::json::write_file(&path, &doc)?;
+        println!("# wrote {}", path.display());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interference::dynamic::builtin;
+    use crate::json::to_string_pretty;
+
+    #[test]
+    fn mt_scenario_sweep_is_jobs_invariant_and_schema_stable() {
+        let spec = models::build(MT_MODEL, 64).unwrap();
+        let db = synthesize(&spec, 42);
+        let scenario = builtin("burst").unwrap().scaled(400).unwrap();
+        let peak = {
+            let (_, b) =
+                crate::coordinator::optimal_config(&db, &vec![0usize; 4], 4);
+            1.0 / b
+        };
+        let tenants =
+            tenant::builtin("tiers").unwrap().with_total_rate(1.2 * peak).unwrap();
+        let run = |jobs| {
+            let (schedule, results) = run_tenant_scenario(
+                &db,
+                &scenario,
+                &tenants,
+                &MT_POLICIES,
+                MT_QUEUE_CAP,
+                400,
+                jobs,
+            )
+            .unwrap();
+            to_string_pretty(&mt_scenario_json(
+                &scenario,
+                &schedule,
+                &tenants,
+                &MT_POLICIES,
+                &results,
+            ))
+        };
+        let a = run(1);
+        let b = run(3);
+        assert_eq!(a, b, "multi-tenant sweep is not jobs-invariant");
+        // schema: every window row carries the tenants array; totals use
+        // the shared 13-key schema
+        let doc = crate::json::parse(&a).unwrap();
+        assert_eq!(doc.get("tenant_set").as_str(), Some("tiers"));
+        for p in doc.get("policies").as_arr().unwrap() {
+            assert_eq!(p.get("tenants").as_arr().unwrap().len(), 2);
+            assert_eq!(p.get("tenants").idx(0).keys().len(), 13);
+            for row in p.get("windows").as_arr().unwrap() {
+                assert_eq!(row.keys().len(), 15);
+                let tr = row.get("tenants").as_arr().unwrap();
+                assert_eq!(tr.len(), 2);
+                assert_eq!(tr[0].keys().len(), 7);
+            }
+            // conservation: offered = completed + dropped, overall and
+            // per tenant
+            let offered = p.get("offered").as_usize().unwrap();
+            let completed = p.get("completed").as_usize().unwrap();
+            let dropped = p.get("dropped").as_usize().unwrap();
+            assert_eq!(offered, completed + dropped);
+            for t in p.get("tenants").as_arr().unwrap() {
+                assert_eq!(
+                    t.get("offered").as_usize().unwrap(),
+                    t.get("completed").as_usize().unwrap()
+                        + t.get("dropped").as_usize().unwrap()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tight_tenant_suffers_more_under_overload() {
+        // the tiers set at 1.3x peak: the 60ms gold tenant records SLO
+        // violations or sheds while 600ms bronze keeps a lower blow rate
+        let spec = models::build(MT_MODEL, 64).unwrap();
+        let db = synthesize(&spec, 42);
+        let scenario = builtin("burst").unwrap().scaled(600).unwrap();
+        let peak = {
+            let (_, b) =
+                crate::coordinator::optimal_config(&db, &vec![0usize; 4], 4);
+            1.0 / b
+        };
+        let tenants = tenant::builtin("tiers")
+            .unwrap()
+            .with_total_rate(1.3 * peak)
+            .unwrap();
+        let (_, results) = run_tenant_scenario(
+            &db,
+            &scenario,
+            &tenants,
+            &[Policy::Static],
+            32,
+            600,
+            1,
+        )
+        .unwrap();
+        let totals = tally(
+            &tenants,
+            &results[0].tenant,
+            &results[0].blown,
+            &results[0].result.queued,
+            &results[0].result.latencies,
+            &results[0].dropped_tenant,
+        );
+        let gold = &totals[0];
+        assert!(
+            gold.slo_violations + gold.dropped > 0,
+            "60ms tenant at 1.3x peak never suffered"
+        );
+    }
+}

@@ -13,6 +13,8 @@
 //! `--jobs`-invariant.
 
 use crate::database::synth::synthesize;
+use crate::database::TimingDb;
+use crate::interference::dynamic::{DynamicScenario, ScenarioAxis};
 use crate::json::Value;
 use crate::models;
 use crate::serving::Workload;
@@ -63,6 +65,55 @@ fn cell_json(rate_frac: f64, rate_qps: f64, policy: Policy, r: &SimResult) -> Va
     ])
 }
 
+/// How many queries one openloop cell runs: the scenario horizon for
+/// query-axis scenarios (the two are pinned there), and the context's
+/// query budget for wall-clock (`"unit": "ms"`) scenarios — whose
+/// horizon is *time*, not queries. This is the ROADMAP follow-up fix:
+/// the sweep used to pass `scenario.num_queries` unconditionally, which
+/// read an ms horizon as a query count and broke ms-axis cells.
+pub fn cell_queries(scenario: &DynamicScenario, ctx_queries: usize) -> usize {
+    match scenario.axis {
+        ScenarioAxis::Queries => scenario.num_queries,
+        ScenarioAxis::Millis => ctx_queries,
+    }
+}
+
+/// One rate row of a scenario sweep: `(rate_frac, rate_qps, per-policy
+/// results)`.
+pub type RateRow = (f64, f64, Vec<SimResult>);
+
+/// Run the rate sweep of one scenario: for each fraction of `peak`, a
+/// seeded Poisson workload replayed for every policy under the identical
+/// schedule. Axis-aware via [`cell_queries`], so wall-clock scenarios
+/// keep their era boundaries fixed in virtual time at every offered
+/// rate.
+pub fn sweep_scenario(
+    db: &TimingDb,
+    scenario: &DynamicScenario,
+    peak: f64,
+    seed: u64,
+    ctx_queries: usize,
+    jobs: usize,
+) -> Result<Vec<RateRow>> {
+    let queries = cell_queries(scenario, ctx_queries);
+    let mut out = Vec::with_capacity(OPENLOOP_RATES.len());
+    for rate_frac in OPENLOOP_RATES {
+        let rate_qps = rate_frac * peak;
+        let workload = Workload::poisson(rate_qps, seed)?;
+        let (_, results) = run_scenario_workload(
+            db,
+            scenario,
+            &OPENLOOP_POLICIES,
+            &workload,
+            queries,
+            OPENLOOP_QUEUE_CAP,
+            jobs,
+        )?;
+        out.push((rate_frac, rate_qps, results));
+    }
+    Ok(out)
+}
+
 pub fn run(ctx: &ExpCtx) -> Result<()> {
     let mut out = Output::new(ctx, "openloop")?;
     out.line("# openloop — Poisson offered load vs closed-loop-invisible queueing");
@@ -92,18 +143,10 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
             1.0 / bottleneck
         };
         let mut rate_vals = Vec::with_capacity(OPENLOOP_RATES.len());
-        for rate_frac in OPENLOOP_RATES {
-            let rate_qps = rate_frac * peak;
+        for (rate_frac, rate_qps, results) in
+            sweep_scenario(&db, &scenario, peak, ctx.seed, ctx.queries, ctx.jobs)?
+        {
             let workload = Workload::poisson(rate_qps, ctx.seed)?;
-            let (_, results) = run_scenario_workload(
-                &db,
-                &scenario,
-                &OPENLOOP_POLICIES,
-                &workload,
-                scenario.num_queries,
-                OPENLOOP_QUEUE_CAP,
-                ctx.jobs,
-            )?;
             let mut cells = Vec::with_capacity(OPENLOOP_POLICIES.len());
             for (policy, r) in OPENLOOP_POLICIES.iter().zip(&results) {
                 let v = cell_json(rate_frac, rate_qps, *policy, r);
@@ -131,7 +174,7 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
         scenario_vals.push(Value::obj(vec![
             ("name", Value::from(name)),
             ("peak_qps", Value::from(peak)),
-            ("queries", Value::from(scenario.num_queries)),
+            ("queries", Value::from(cell_queries(&scenario, ctx.queries))),
             ("rates", Value::arr(rate_vals)),
         ]));
     }
@@ -193,5 +236,55 @@ mod tests {
         let q_mean: f64 =
             st.queued.iter().sum::<f64>() / st.queued.len() as f64;
         assert!(q_mean > 0.0, "no queueing at 1.2x peak");
+    }
+
+    #[test]
+    fn ms_axis_cells_keep_era_boundaries_rate_independent() {
+        // the ROADMAP follow-up regression: a wall-clock scenario through
+        // the openloop cell path must start its stressor era at the same
+        // *virtual time* at every offered rate — the sweep used to pin
+        // the query axis, which made the ms horizon unusable as a cell
+        let spec = models::build(OPENLOOP_MODEL, 64).unwrap();
+        let db = synthesize(&spec, 42);
+        let scenario = DynamicScenario::from_json_str(
+            r#"{"name": "ms-cell", "eps": 4, "unit": "ms",
+                "horizon_ms": 20000,
+                "phases": [{"kind": "task", "start": 2000, "end": 20000,
+                            "ep": 1, "scenario": 9}]}"#,
+        )
+        .unwrap();
+        assert_eq!(cell_queries(&scenario, 400), 400, "ms horizon leaked");
+        let peak = {
+            let (_, b) =
+                crate::coordinator::optimal_config(&db, &vec![0usize; 4], 4);
+            1.0 / b
+        };
+        let rows =
+            sweep_scenario(&db, &scenario, peak, 42, 400, 2).unwrap();
+        assert_eq!(rows.len(), OPENLOOP_RATES.len());
+        let era_start = |r: &SimResult| {
+            let i = r
+                .stressed
+                .iter()
+                .position(|&s| s)
+                .expect("run never reached the 2s era");
+            r.start_times[i]
+        };
+        // static policy, slowest vs fastest rate: the era is a wall-clock
+        // fact, so both runs cross 2000 ms at (nearly) the same virtual
+        // time even though their arrival indexes differ
+        let slow = era_start(rows.first().unwrap().2.last().unwrap());
+        let fast = era_start(rows.last().unwrap().2.last().unwrap());
+        assert!(
+            (slow - fast).abs() < 0.3,
+            "era start moved with the rate: {slow:.3}s vs {fast:.3}s"
+        );
+        assert!(
+            (1.8..2.5).contains(&slow),
+            "era did not start near 2.0s: {slow:.3}s"
+        );
+        // and a query-axis builtin still pins the cell to its horizon
+        let q = builtin("burst").unwrap().scaled(300).unwrap();
+        assert_eq!(cell_queries(&q, 999), 300);
     }
 }

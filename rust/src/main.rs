@@ -5,7 +5,8 @@
 //!                --scenario <name|file> runs the online control loop
 //!                against a dynamic interference scenario (odin + lls /
 //!                oracle / static baselines, per-window JSON), driven
-//!                closed- or open-loop via --workload
+//!                closed- or open-loop via --workload, or multi-tenant
+//!                via --tenants (per-tenant SLOs, EDF queue)
 //!   experiment   regenerate paper tables/figures (table1, fig1..fig10,
 //!                summary, dynamic, openloop, or `all`)
 //!   bench-db     measure the per-layer timing database on this host
@@ -13,7 +14,9 @@
 //!   verify       compile artifacts and check gold numerics
 //!   serve        run the live pipeline server on N random queries; with
 //!                --scenario <name|file> replays a dynamic interference
-//!                scenario with real stressors and emits live_<name>.json
+//!                scenario with real stressors and emits live_<name>.json;
+//!                --tenants <name|file> serves a multi-tenant set through
+//!                the SLO-aware queue
 //!   models       list built-in model specs
 
 use odin::cli::{Args, CliError, Command};
@@ -25,6 +28,9 @@ use odin::experiments::dynamic::{
     run_scenario, run_scenario_workload, scenario_json, summary_line,
     DYN_SLO_LEVEL, DYN_WINDOW,
 };
+use odin::experiments::multitenant::{
+    mt_scenario_json, run_tenant_scenario,
+};
 use odin::experiments::{self, ExpCtx};
 use odin::interference::dynamic::{resolve, ScenarioAxis};
 use odin::interference::{RandomInterference, Schedule};
@@ -35,8 +41,8 @@ use odin::runtime::{
     SynthBackend, Tensor,
 };
 use odin::serving::{
-    live_json, HarnessOpts, PipelineServer, ScenarioDriver, ServeReport,
-    ServerOpts, Workload,
+    live_json, tenant, HarnessOpts, PipelineServer, ScenarioDriver,
+    ServeReport, ServerOpts, Workload,
 };
 use odin::simulator::{simulate, Policy, SimConfig, SimSummary};
 use odin::util::affinity;
@@ -70,7 +76,8 @@ fn usage() -> String {
      subcommands:\n\
        simulate     one simulation window; --scenario <name|file> runs the\n\
                     online loop against a dynamic interference scenario\n\
-       experiment   regenerate paper artifacts: table1 fig1 fig3..fig10 summary dynamic openloop all\n\
+       experiment   regenerate paper artifacts: table1 fig1 fig3..fig10\n\
+                    summary dynamic openloop multitenant all\n\
        bench-db     measure the per-layer timing database via PJRT\n\
        verify       compile artifacts + gold numerics check\n\
        serve        live pipeline server; --scenario <name|file> replays a\n\
@@ -146,6 +153,12 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
              poisson:<rate>qps[@seed] | trace:<file.json> (default: the \
              historical closed loop)",
         )
+        .opt(
+            "tenants",
+            "multi-tenant set (builtin name or JSON file): merge the \
+             tenants' workloads through the SLO-aware queue under \
+             --scenario (default scenario: burst)",
+        )
         .flag(
             "queue-cap",
             "256",
@@ -156,6 +169,9 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         .flag("out", "results", "output dir for scenario JSON ('' = none)")
         .switch("no-interference", "run a clean window");
     let args = cmd.parse(argv)?;
+    if !args.get("tenants").is_empty() {
+        return cmd_simulate_tenants(&args);
+    }
     if !args.get("scenario").is_empty() {
         return cmd_simulate_scenario(&args);
     }
@@ -337,9 +353,114 @@ fn cmd_simulate_scenario(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `odin simulate --tenants <name|file>`: multi-tenant SLO-aware serving
+/// in the simulator — the set's open-loop workloads merge into one
+/// deterministic labeled stream, admission is earliest-deadline-first
+/// within priority class, shedding is deadline-aware, and every policy
+/// (odin + lls/oracle/static) faces the identical stream under the
+/// --scenario interference timeline (default: burst). Emits
+/// `tenants_<set>_<scenario>.json` with per-window `tenants` rows
+/// schema-identical to the live path's.
+fn cmd_simulate_tenants(args: &Args) -> Result<()> {
+    let db = load_sim_db(args)?;
+    for flag in ["policy", "eps", "period", "duration", "workload"] {
+        if !args.was_given(flag) {
+            continue;
+        }
+        bail!(
+            "--{flag} cannot be combined with --tenants: the tenant set \
+             owns the workloads, the scenario sets the EPs, and the \
+             online loop always runs odin + lls/oracle/static under the \
+             identical stream"
+        );
+    }
+    if args.has("no-interference") {
+        bail!("--no-interference cannot be combined with --tenants");
+    }
+    let tenants = tenant::resolve(args.get("tenants"))?;
+    let mut scenario = if args.get("scenario").is_empty() {
+        odin::interference::dynamic::builtin("burst")?
+    } else {
+        resolve(args.get("scenario"))?
+    };
+    if args.was_given("queries") {
+        scenario = scenario.scaled(args.usize("queries")?)?;
+    }
+    let queries_run = match scenario.axis {
+        ScenarioAxis::Queries => scenario.num_queries,
+        ScenarioAxis::Millis => args.usize("queries")?,
+    };
+    let policies = [
+        Policy::Odin { alpha: args.usize("alpha")? },
+        Policy::Lls,
+        Policy::Oracle,
+        Policy::Static,
+    ];
+    let jobs = args.usize("jobs")?.max(1);
+    let queue_cap = args.usize("queue-cap")?.max(1);
+    let (schedule, results) = run_tenant_scenario(
+        &db,
+        &scenario,
+        &tenants,
+        &policies,
+        queue_cap,
+        queries_run,
+        jobs,
+    )?;
+    let doc_scenario =
+        mt_scenario_json(&scenario, &schedule, &tenants, &policies, &results);
+    for p in doc_scenario.get("policies").as_arr().unwrap_or(&[]) {
+        println!(
+            "{}/{}: completed {} of {} offered, dropped {}, slo \
+             violations {}, rebalances {}",
+            tenants.name,
+            p.get("policy").as_str().unwrap_or("?"),
+            p.get("completed").as_usize().unwrap_or(0),
+            p.get("offered").as_usize().unwrap_or(0),
+            p.get("dropped").as_usize().unwrap_or(0),
+            p.get("slo_violations").as_usize().unwrap_or(0),
+            p.get("rebalances").as_usize().unwrap_or(0),
+        );
+        for t in p.get("tenants").as_arr().unwrap_or(&[]) {
+            println!(
+                "  {:<8} offered {:>5}  completed {:>5}  dropped {:>4}  \
+                 viol {:>4}  queued {:>8.2}ms  share {:.2} (weight {:.2})",
+                t.get("id").as_str().unwrap_or("?"),
+                t.get("offered").as_usize().unwrap_or(0),
+                t.get("completed").as_usize().unwrap_or(0),
+                t.get("dropped").as_usize().unwrap_or(0),
+                t.get("slo_violations").as_usize().unwrap_or(0),
+                t.get("queued_ns").as_f64().unwrap_or(0.0) / 1e6,
+                t.get("share").as_f64().unwrap_or(0.0),
+                t.get("weight_share").as_f64().unwrap_or(0.0),
+            );
+        }
+    }
+    if !args.get("out").is_empty() {
+        let dir = std::path::Path::new(args.get("out"));
+        std::fs::create_dir_all(dir)?;
+        let doc = Value::obj(vec![
+            ("model", Value::from(args.get("model"))),
+            ("scenario", doc_scenario),
+            ("slo_level", Value::from(DYN_SLO_LEVEL)),
+            ("window", Value::from(DYN_WINDOW)),
+        ]);
+        let path = dir.join(format!(
+            "tenants_{}_{}.json",
+            tenants.name, scenario.name
+        ));
+        odin::json::write_file(&path, &doc)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
 fn cmd_experiment(argv: &[String]) -> Result<()> {
     let cmd = Command::new("experiment", "regenerate paper tables/figures")
-        .positional("id", "table1|fig1|fig3..fig10|summary|ablation|dynamic|openloop|all")
+        .positional(
+            "id",
+            "table1|fig1|fig3..fig10|summary|ablation|dynamic|openloop|multitenant|all",
+        )
         .flag("out", "results", "output directory ('' = stdout only)")
         .flag("queries", "4000", "queries per simulation window")
         .flag("seed", "42", "rng seed")
@@ -434,6 +555,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
              poisson:<rate>qps[@seed] | trace:<file.json> (default: \
              closed at --admission-depth)",
         )
+        .opt(
+            "tenants",
+            "multi-tenant set (builtin name or JSON file): replay the \
+             tenants' merged workloads live through the SLO-aware queue \
+             under --scenario (default scenario: burst)",
+        )
         .flag(
             "queue-cap",
             "256",
@@ -453,6 +580,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             "re-derive the detection threshold from noise in quiet windows",
         );
     let args = cmd.parse(argv)?;
+    if !args.get("tenants").is_empty() {
+        return cmd_serve_tenants(&args);
+    }
     if !args.get("scenario").is_empty() {
         return cmd_serve_scenario(&args);
     }
@@ -586,6 +716,100 @@ fn cmd_serve_scenario(args: &Args) -> Result<()> {
         run.stressor_launches,
         run.stressor_work,
         run.final_threshold,
+        run.final_config,
+    );
+    if !args.get("out").is_empty() {
+        let dir = std::path::Path::new(args.get("out"));
+        std::fs::create_dir_all(dir)?;
+        let doc = live_json(&driver, &run, args.get("model"), depth);
+        let path = dir.join(format!("live_{}.json", driver.scenario().name));
+        odin::json::write_file(&path, &doc)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+/// `odin serve --tenants <name|file>`: the live multi-tenant path — the
+/// tenant set's merged arrival stream replays on the wall clock through
+/// the server's SLO-aware queue (EDF within priority class, deadline-
+/// aware shedding), under the --scenario stressor timeline (default:
+/// burst), and `live_<scenario>.json` gains per-tenant totals plus the
+/// per-window `tenants` rows — schema-identical to the simulator's
+/// `odin simulate --tenants` document.
+fn cmd_serve_tenants(args: &Args) -> Result<()> {
+    if args.was_given("workload") {
+        bail!(
+            "--workload cannot be combined with --tenants: each tenant \
+             of the set owns its workload"
+        );
+    }
+    let tenants = tenant::resolve(args.get("tenants"))?;
+    let base = if args.get("scenario").is_empty() {
+        odin::interference::dynamic::builtin("burst")?
+    } else {
+        resolve(args.get("scenario"))?
+    };
+    let queries = args.usize("queries")?;
+    let eps = args.usize_opt("eps")?.unwrap_or(base.num_eps);
+    let scenario = base.adapted(queries, eps)?;
+    let spec = models::build(args.get("model"), args.usize("spatial")?)
+        .ok_or_else(|| err!("unknown model {}", args.get("model")))?;
+    let backend = SynthBackend::new(&spec, args.f64("query-ms")?);
+    let shape = backend.input_shape();
+    let db = synthesize(&spec, 7);
+    let (config, _) = optimal_config(&db, &vec![0usize; eps], eps);
+    let mut cores_per_ep = args.usize("cores-per-ep")?;
+    if cores_per_ep == 0 {
+        cores_per_ep = (affinity::num_cpus() / eps).max(1);
+    }
+    let depth = args.usize("admission-depth")?.max(1);
+    let opts = ServerOpts {
+        num_eps: eps,
+        cores_per_ep,
+        alpha: args.usize("alpha")?,
+        detect_threshold: args.f64("threshold")?,
+        admission_depth: depth,
+        queue_cap: args.usize("queue-cap")?.max(1),
+        ..ServerOpts::default()
+    };
+    let mut server =
+        PipelineServer::new(ExecHandle::synthetic(backend), config, opts);
+    let driver = ScenarioDriver::new(
+        scenario,
+        HarnessOpts {
+            auto_threshold: args.has("auto-threshold"),
+            cores_per_ep,
+            ..HarnessOpts::default()
+        },
+    );
+    let inputs: Vec<Tensor> = (0..queries)
+        .map(|i| Tensor::random(&shape, i as u64, 1.0))
+        .collect();
+    let run = driver.run_tenants(&mut server, inputs, &tenants)?;
+    run.report
+        .print(&format!("live/{}/{}", driver.scenario().name, tenants.name));
+    for t in &run.tenant_totals {
+        println!(
+            "  {:<8} offered {:>5}  completed {:>5}  dropped {:>4}  \
+             viol {:>4}  queued {:>8.2}ms  service {:>8.2}ms",
+            t.id,
+            t.offered,
+            t.completed,
+            t.dropped,
+            t.slo_violations,
+            t.queued_ns / 1e6,
+            t.service_ns / 1e6,
+        );
+    }
+    println!(
+        "workload {}  offered {}  dropped {}  rebalances {}  stressor \
+         launches {} (work {})  final config {}",
+        run.workload,
+        run.offered,
+        run.dropped,
+        run.rebalance_log.len(),
+        run.stressor_launches,
+        run.stressor_work,
         run.final_config,
     );
     if !args.get("out").is_empty() {

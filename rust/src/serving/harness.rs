@@ -42,8 +42,9 @@ use crate::runtime::Tensor;
 use crate::simulator::window::{windows_json, WindowMetrics};
 use crate::util::error::Result;
 
-use super::server::{PipelineServer, RebalanceLog};
+use super::server::{PipelineServer, RebalanceLog, TenantPush};
 use super::stats::{ServeReport, SERVE_WINDOW};
+use super::tenant::{tally, totals_json, TenantSet, TenantTotals};
 use super::workload::Workload;
 
 /// SLO level for live per-window violation counts, as a fraction of the
@@ -90,8 +91,11 @@ pub struct LiveRun {
     pub offered: usize,
     /// Arrivals shed at the bounded queue (open workloads only).
     pub dropped: usize,
-    /// The same per-window rows the simulator reports.
+    /// The same per-window rows the simulator reports (multi-tenant runs
+    /// additionally fill each window's `tenants` array).
     pub windows: Vec<WindowMetrics>,
+    /// Per-tenant run totals of a multi-tenant run; empty otherwise.
+    pub tenant_totals: Vec<TenantTotals>,
     pub report: ServeReport,
     pub rebalance_log: Vec<RebalanceLog>,
     pub final_config: String,
@@ -466,10 +470,248 @@ impl ScenarioDriver {
         Ok(LiveRun {
             report,
             windows,
+            tenant_totals: Vec::new(),
             wall,
             stressed,
             workload: workload.spec().to_string(),
             offered: if arrivals.is_some() { n } else { completions.len() },
+            dropped: dropped_at.len(),
+            completions,
+            rebalance_log,
+            final_config: server.config().to_string(),
+            stressor_work: rack.work_done,
+            stressor_launches: rack.launches,
+            thresholds,
+            final_threshold: server.detect_threshold(),
+            wall_seconds,
+        })
+    }
+
+    /// Serve `inputs` through `server` for a multi-tenant set: the
+    /// tenants' open-loop workloads merge into one deterministic labeled
+    /// arrival stream, each arrival enters the server's **SLO-aware**
+    /// queue with its tenant's absolute deadline and priority class
+    /// ([`PipelineServer::enqueue_tenant`]), admission picks earliest-
+    /// deadline-first within the highest waiting class, and entries whose
+    /// deadline blows while queued are shed
+    /// ([`PipelineServer::shed_blown`]) — deadline-aware shedding, not
+    /// enqueue-time rejection only. Per-tenant
+    /// offered/completed/dropped/slo_violations and the queued/service
+    /// split land in [`LiveRun::tenant_totals`] and in each window's
+    /// `tenants` array, schema-identical to the simulator's
+    /// (`simulate_tenants`) rows.
+    pub fn run_tenants(
+        &self,
+        server: &mut PipelineServer,
+        inputs: Vec<Tensor>,
+        tenants: &TenantSet,
+    ) -> Result<LiveRun> {
+        let n = inputs.len();
+        match self.scenario.axis {
+            ScenarioAxis::Queries => {
+                if n != self.schedule.num_queries() {
+                    bail!(
+                        "scenario {:?} schedules {} queries, got {n} inputs \
+                         (adapt the scenario with --queries)",
+                        self.scenario.name,
+                        self.schedule.num_queries()
+                    );
+                }
+            }
+            ScenarioAxis::Millis => {
+                if n == 0 {
+                    bail!(
+                        "scenario {:?}: wall-clock run needs at least one \
+                         input",
+                        self.scenario.name
+                    );
+                }
+            }
+        }
+        if server.config().num_stages() != self.scenario.num_eps {
+            bail!(
+                "scenario {:?} targets {} EPs but the server has {} stages",
+                self.scenario.name,
+                self.scenario.num_eps,
+                server.config().num_stages()
+            );
+        }
+        let arrivals = tenants.arrivals(n)?;
+        let deadline_s = tenants.deadlines_s();
+        let class = tenants.classes();
+        let depth = server.admission_depth();
+        let log_start = server.rebalance_log.len();
+        let done_start = server.queries_done();
+        let drop_start = server.dropped();
+        let mut rack =
+            StressorRack::new(self.scenario.num_eps, self.opts.cores_per_ep);
+        let mut completions: Vec<super::Completion> = Vec::with_capacity(n);
+        let mut wall = Vec::with_capacity(n);
+        let mut stressed = Vec::with_capacity(n);
+        let mut active_eps = Vec::with_capacity(n);
+        let mut dropped_at: Vec<usize> = Vec::new();
+        let mut dropped_tenant: Vec<usize> = Vec::new();
+        let mut thresholds = Vec::new();
+        let mut pending = inputs.into_iter();
+        let mut offered = 0usize;
+        let mut admitted = 0usize;
+        let t0 = Instant::now();
+        loop {
+            if offered >= n
+                && server.queue_len() == 0
+                && server.in_flight() == 0
+            {
+                break;
+            }
+            // offer every arrival due by now, stamped with its scheduled
+            // due time and its absolute SLO deadline
+            let now = t0.elapsed().as_secs_f64();
+            while offered < n && arrivals[offered].t <= now {
+                let a = arrivals[offered];
+                let x = pending.next().expect("inputs counted above");
+                let due = t0 + Duration::from_secs_f64(a.t);
+                let deadline =
+                    due + Duration::from_secs_f64(deadline_s[a.tenant]);
+                match server.enqueue_tenant(
+                    x,
+                    due,
+                    deadline,
+                    class[a.tenant],
+                    a.tenant,
+                    offered,
+                ) {
+                    TenantPush::Accepted => {}
+                    TenantPush::Evicted { tenant, .. } => {
+                        dropped_at.push(completions.len());
+                        dropped_tenant.push(tenant);
+                    }
+                    TenantPush::Shed => {
+                        dropped_at.push(completions.len());
+                        dropped_tenant.push(a.tenant);
+                    }
+                }
+                offered += 1;
+            }
+            // deadline-aware shedding: queued entries that can no longer
+            // meet their SLO free their slot before admission
+            for (tenant, _tag) in server.shed_blown() {
+                dropped_at.push(completions.len());
+                dropped_tenant.push(tenant);
+            }
+            if server.rebalance_due() && server.in_flight() == 0 {
+                server.rebalance_now()?;
+                continue;
+            }
+            while server.in_flight() < depth
+                && !server.rebalance_due()
+                && server.queue_len() > 0
+            {
+                // the SLO queue decides who goes next; its tag is the
+                // arrival index, which is what query-axis schedules key
+                // on (EDF reordering and sheds skip slots exactly as the
+                // simulator's tenant engine does)
+                let (tag, _tenant) =
+                    server.peek_admission().expect("queue non-empty");
+                let state = self.state(tag, t0.elapsed());
+                rack.sync(state);
+                stressed.push(state.iter().any(|&s| s != 0));
+                active_eps.push(state.iter().filter(|&&s| s != 0).count());
+                if self.opts.auto_threshold
+                    && admitted > 0
+                    && admitted % self.opts.window == 0
+                    && server.noise_samples() >= 2
+                {
+                    thresholds.push((admitted, server.autotune_threshold()));
+                }
+                server.admit_one()?;
+                admitted += 1;
+            }
+            if server.in_flight() > 0 {
+                let next_due = if offered < n {
+                    Some(arrivals[offered].t - t0.elapsed().as_secs_f64())
+                } else {
+                    None
+                };
+                match next_due {
+                    Some(gap) if gap <= 0.0 => continue,
+                    Some(gap) => {
+                        if let Some(c) = server.recv_completion_timeout(
+                            Duration::from_secs_f64(gap),
+                        )? {
+                            completions.push(c);
+                            wall.push(t0.elapsed().as_secs_f64());
+                        }
+                    }
+                    None => {
+                        completions.push(server.recv_completion()?);
+                        wall.push(t0.elapsed().as_secs_f64());
+                    }
+                }
+                continue;
+            }
+            if offered < n {
+                if self.scenario.axis == ScenarioAxis::Millis {
+                    rack.sync(self.state(admitted, t0.elapsed()));
+                }
+                let gap = arrivals[offered].t - t0.elapsed().as_secs_f64();
+                if gap > 0.0 {
+                    std::thread::sleep(Duration::from_secs_f64(gap.min(0.05)));
+                }
+            }
+        }
+        rack.stop_all();
+        let wall_seconds = t0.elapsed().as_secs_f64();
+        let rebalance_log: Vec<RebalanceLog> = server.rebalance_log
+            [log_start..]
+            .iter()
+            .map(|e| RebalanceLog {
+                at_query: e.at_query - done_start,
+                ..e.clone()
+            })
+            .collect();
+        let mut windows = self.live_windows(
+            &completions,
+            &wall,
+            &stressed,
+            &active_eps,
+            &dropped_at,
+            &rebalance_log,
+        );
+        // the tenant dimension: per-completion labels from the pipeline,
+        // deadline verdicts against each tenant's SLO, and the shared
+        // per-window attach (one implementation with the simulator)
+        let tenant_of: Vec<usize> =
+            completions.iter().map(|c| c.tenant).collect();
+        let blown: Vec<bool> = completions
+            .iter()
+            .map(|c| c.latency > deadline_s[c.tenant])
+            .collect();
+        let queued: Vec<f64> = completions.iter().map(|c| c.queued).collect();
+        let lats: Vec<f64> = completions.iter().map(|c| c.latency).collect();
+        crate::simulator::window::attach_tenant_windows(
+            &mut windows,
+            &tenants.ids(),
+            &tenant_of,
+            &blown,
+            &queued,
+            &lats,
+            &dropped_at,
+            &dropped_tenant,
+        );
+        let tenant_totals =
+            tally(tenants, &tenant_of, &blown, &queued, &lats, &dropped_tenant);
+        let report = ServeReport::of(&completions, wall_seconds);
+        // every server-side shed (enqueue eviction/rejection, blown-
+        // deadline sweep) must have been attributed to a tenant above
+        debug_assert_eq!(server.dropped() - drop_start, dropped_at.len());
+        Ok(LiveRun {
+            report,
+            windows,
+            tenant_totals,
+            wall,
+            stressed,
+            workload: format!("tenants:{}", tenants.name),
+            offered: n,
             dropped: dropped_at.len(),
             completions,
             rebalance_log,
@@ -576,6 +818,7 @@ impl ScenarioDriver {
                 rebalances: rebalance_count,
                 slo_violations,
                 interference_load,
+                tenants: Vec::new(),
             });
             start = end;
         }
@@ -617,7 +860,14 @@ pub fn live_json(
             })
             .collect(),
     );
-    Value::obj(vec![
+    let mut fields = Vec::new();
+    // the tenant dimension (SCHEMA BUMP): per-tenant run totals through
+    // the same emitter the simulator documents use; absent — and the
+    // document byte-identical to the pre-tenant schema — otherwise
+    if !run.tenant_totals.is_empty() {
+        fields.push(("tenants", totals_json(&run.tenant_totals)));
+    }
+    fields.extend(vec![
         ("admission_depth", Value::from(admission_depth)),
         ("auto_threshold", Value::from(driver.opts.auto_threshold)),
         ("dropped", Value::from(run.dropped)),
@@ -648,7 +898,8 @@ pub fn live_json(
         ("wall_seconds", Value::from(run.wall_seconds)),
         ("window", Value::from(driver.opts.window)),
         ("windows", windows_json(&run.windows)),
-    ])
+    ]);
+    Value::obj(fields)
 }
 
 #[cfg(test)]
@@ -868,6 +1119,126 @@ mod tests {
         let windows_dropped: usize =
             run.windows.iter().map(|w| w.dropped).sum();
         assert_eq!(windows_dropped, run.dropped);
+    }
+
+    #[test]
+    fn tenant_run_merges_streams_and_accounts_per_tenant() {
+        use crate::serving::tenant::{TenantSet, TenantSpec};
+        let (mut server, inputs) = tiny_server(2);
+        let driver = ScenarioDriver::new(
+            tiny_scenario(),
+            HarnessOpts { window: 5, cores_per_ep: 1, ..HarnessOpts::default() },
+        );
+        // two trace tenants arriving in a fast interleave; generous
+        // deadlines keep this test shed-free and deterministic
+        let tenants = TenantSet::new(
+            "pair",
+            vec![
+                TenantSpec {
+                    id: "x".into(),
+                    workload: Workload::trace(vec![0.002]).unwrap(),
+                    deadline_ms: 60_000.0,
+                    priority: 0,
+                    weight: 1.0,
+                },
+                TenantSpec {
+                    id: "y".into(),
+                    workload: Workload::trace(vec![0.004]).unwrap(),
+                    deadline_ms: 60_000.0,
+                    priority: 1,
+                    weight: 1.0,
+                },
+            ],
+        )
+        .unwrap();
+        let run = driver.run_tenants(&mut server, inputs, &tenants).unwrap();
+        assert_eq!(run.offered, 20);
+        assert_eq!(run.completions.len() + run.dropped, 20);
+        assert_eq!(run.dropped, 0, "60s deadlines in a 256-slot queue shed");
+        assert_eq!(run.workload, "tenants:pair");
+        // both tenants completed queries, and the totals conserve
+        assert_eq!(run.tenant_totals.len(), 2);
+        let arr = tenants.arrivals(20).unwrap();
+        for (k, t) in run.tenant_totals.iter().enumerate() {
+            let offered = arr.iter().filter(|a| a.tenant == k).count();
+            assert_eq!(t.offered, offered, "tenant {k}");
+            assert_eq!(t.offered, t.completed + t.dropped);
+            assert!(t.completed > 0, "tenant {k} starved");
+            assert_eq!(t.slo_violations, 0, "60s deadline blown");
+        }
+        // every window carries one row per tenant, conserving the span
+        for w in &run.windows {
+            assert_eq!(w.tenants.len(), 2);
+            let completed: usize =
+                w.tenants.iter().map(|t| t.completed).sum();
+            assert_eq!(completed, w.end - w.start);
+        }
+        let window_completed: usize = run
+            .windows
+            .iter()
+            .flat_map(|w| w.tenants.iter().map(|t| t.completed))
+            .sum();
+        assert_eq!(window_completed, run.completions.len());
+        // the document gains the tenants sections
+        let doc = live_json(&driver, &run, "vgg16", 2);
+        assert_eq!(doc.get("workload").as_str(), Some("tenants:pair"));
+        let totals = doc.get("tenants").as_arr().unwrap();
+        assert_eq!(totals.len(), 2);
+        assert_eq!(totals[0].get("id").as_str(), Some("x"));
+        assert_eq!(totals[0].keys().len(), 13);
+        let row = doc.get("windows").idx(0);
+        assert_eq!(row.keys().len(), 15, "window rows must gain tenants");
+        assert_eq!(row.get("tenants").idx(0).keys().len(), 7);
+    }
+
+    #[test]
+    fn tenant_run_sheds_blown_deadlines_not_fresh_ones() {
+        use crate::serving::tenant::{TenantSet, TenantSpec};
+        let (mut server, inputs) = tiny_server(2);
+        let driver = ScenarioDriver::new(
+            tiny_scenario(),
+            HarnessOpts { window: 5, cores_per_ep: 1, ..HarnessOpts::default() },
+        );
+        // a 0.2ms deadline is below the ~0.5ms synthetic service time, so
+        // every tight query either blows its SLO or sheds while queued;
+        // the 60s-deadline tenant must come through conserved
+        let tenants = TenantSet::new(
+            "split",
+            vec![
+                TenantSpec {
+                    id: "tight".into(),
+                    workload: Workload::trace(vec![0.001]).unwrap(),
+                    deadline_ms: 0.2,
+                    priority: 0,
+                    weight: 1.0,
+                },
+                TenantSpec {
+                    id: "loose".into(),
+                    workload: Workload::trace(vec![0.002]).unwrap(),
+                    deadline_ms: 60_000.0,
+                    priority: 1,
+                    weight: 1.0,
+                },
+            ],
+        )
+        .unwrap();
+        let run = driver.run_tenants(&mut server, inputs, &tenants).unwrap();
+        assert_eq!(run.completions.len() + run.dropped, 20);
+        let tight = &run.tenant_totals[0];
+        let loose = &run.tenant_totals[1];
+        assert!(
+            tight.dropped + tight.slo_violations > 0,
+            "sub-service deadline never suffered"
+        );
+        assert_eq!(loose.slo_violations, 0);
+        assert_eq!(loose.offered, loose.completed + loose.dropped);
+        // drops in windows match the run total
+        let window_drops: usize = run
+            .windows
+            .iter()
+            .flat_map(|w| w.tenants.iter().map(|t| t.dropped))
+            .sum();
+        assert_eq!(window_drops, run.dropped);
     }
 
     #[test]

@@ -11,10 +11,18 @@ pub mod harness;
 pub mod live_eval;
 pub mod server;
 pub mod stats;
+pub mod tenant;
 pub mod workload;
 
 pub use harness::{live_json, HarnessOpts, LiveRun, ScenarioDriver};
 pub use live_eval::LiveEval;
-pub use server::{Completion, PipelineServer, RebalanceLog, ServerOpts};
+pub use server::{
+    Admitted, Completion, PipelineServer, RebalanceLog, ServerOpts,
+    TenantPush,
+};
 pub use stats::ServeReport;
+pub use tenant::{
+    SloEntry, SloPush, SloQueue, TenantArrival, TenantSet, TenantSpec,
+    TenantTotals, TENANT_BUILTIN_NAMES,
+};
 pub use workload::{ArrivalProcess, RatePhase, Workload};

@@ -13,7 +13,6 @@
 //! and the paper's "EP" isolation is enforced by pinning on real
 //! hardware.
 
-use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -27,6 +26,7 @@ use crate::util::error::Result;
 use crate::{bail, err};
 
 use super::live_eval::LiveEval;
+use super::tenant::{SloPush, SloQueue};
 
 /// A query travelling the pipeline.
 struct QueryMsg {
@@ -39,6 +39,8 @@ struct QueryMsg {
     /// driving; == `admitted` under direct closed-loop admission).
     arrived: Instant,
     admitted: Instant,
+    /// Tenant of a multi-tenant query (0 otherwise).
+    tenant: usize,
     stage_times: Vec<f64>,
 }
 
@@ -54,10 +56,35 @@ pub struct Completion {
     pub queued: f64,
     /// Service time (admission → completion, seconds).
     pub service: f64,
+    /// Tenant of a multi-tenant query (0 for single-tenant serving).
+    pub tenant: usize,
     pub stage_times: Vec<f64>,
     pub output: Tensor,
     /// True when the query was a rebalancing probe (processed serially).
     pub serial: bool,
+}
+
+/// Outcome of offering one tenant arrival to the SLO-aware queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TenantPush {
+    /// Accepted; nothing was dropped.
+    Accepted,
+    /// Accepted after evicting a queued entry whose deadline was already
+    /// blown — the evicted entry's tenant and tag are reported so the
+    /// caller can attribute the shed.
+    Evicted { tenant: usize, tag: usize },
+    /// Queue full with no blown entry: the new arrival itself was shed.
+    Shed,
+}
+
+/// What [`PipelineServer::admit_one`] admitted (EDF order can differ
+/// from enqueue order, so the caller needs the picked entry's identity).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Admitted {
+    pub id: usize,
+    pub tenant: usize,
+    /// Caller-side label passed at enqueue (e.g. the arrival index).
+    pub tag: usize,
 }
 
 /// Coordinator-facing knobs.
@@ -125,9 +152,15 @@ pub struct PipelineServer {
     queries_done: usize,
     /// Queries admitted but not yet completed.
     in_flight: usize,
-    /// Arrived-but-not-admitted queries (open-loop driving), FIFO.
-    queue: VecDeque<(Tensor, Instant)>,
-    /// Arrivals shed because the queue was at `opts.queue_cap`.
+    /// Arrived-but-not-admitted queries: the SLO-aware queue (EDF within
+    /// priority class, deadline-aware shedding). Plain single-tenant
+    /// entries carry no deadline and class 0, for which the queue is
+    /// exactly the old bounded FIFO.
+    queue: SloQueue<(Tensor, Instant)>,
+    /// Clock anchor converting `Instant`s to the queue's f64 seconds.
+    epoch: Instant,
+    /// Arrivals shed because the queue was at `opts.queue_cap` (or their
+    /// deadline blew while queued).
     dropped: usize,
     /// Id assigned to the next admitted query.
     next_id: usize,
@@ -177,6 +210,7 @@ impl PipelineServer {
         assert!(opts.queue_cap >= 1, "queue_cap must be >= 1");
         let mut monitor = Monitor::new(opts.detect_threshold);
         monitor.set_baseline(f64::INFINITY); // blessed on first query
+        let queue = SloQueue::new(opts.queue_cap);
         PipelineServer {
             handle,
             opts,
@@ -189,7 +223,8 @@ impl PipelineServer {
             workers,
             queries_done: 0,
             in_flight: 0,
-            queue: VecDeque::new(),
+            queue,
+            epoch: Instant::now(),
             dropped: 0,
             next_id: 0,
             rebalance_due: false,
@@ -260,6 +295,12 @@ impl PipelineServer {
         self.dropped
     }
 
+    /// Seconds since the server's epoch — the queue's time axis.
+    fn rel(&self, t: Instant) -> f64 {
+        t.checked_duration_since(self.epoch)
+            .map_or(0.0, |d| d.as_secs_f64())
+    }
+
     /// Offer one arrival to the bounded queue (open-loop driving): the
     /// query is stamped with its arrival time and waits until
     /// [`poll_ready`](Self::poll_ready) moves it into the pipeline.
@@ -277,15 +318,86 @@ impl PipelineServer {
     /// queueing-under-load cost the open-loop split exists to measure.
     /// Pass the scheduled due time instead.
     pub fn enqueue_arrived(&mut self, tensor: Tensor, arrived: Instant) -> bool {
-        if self.queue.len() >= self.opts.queue_cap {
-            self.dropped += 1;
-            return false;
+        let shape = tensor.shape.clone();
+        let a = self.rel(arrived);
+        let now = self.rel(Instant::now());
+        // no deadline, class 0: exactly the historical bounded FIFO
+        match self.queue.push((tensor, arrived), a, None, 0, 0, 0, now) {
+            SloPush::Accepted => {
+                if self.input_shape.is_none() {
+                    self.input_shape = Some(shape);
+                }
+                true
+            }
+            // deadline-free entries are never evicted; a full queue sheds
+            // the new arrival, the pre-tenant behavior bit for bit
+            _ => {
+                self.dropped += 1;
+                false
+            }
         }
-        if self.input_shape.is_none() {
-            self.input_shape = Some(tensor.shape.clone());
+    }
+
+    /// Offer one multi-tenant arrival: stamped with its due time, its
+    /// absolute SLO `deadline`, its priority `class` (0 served first)
+    /// and a caller-side `tag` (e.g. the arrival index, carried through
+    /// EDF reordering for schedule lookups). When the queue is full, a
+    /// queued entry whose deadline is already blown is evicted in its
+    /// place — deadline-aware shedding — and reported; with no blown
+    /// entry the new arrival is shed.
+    pub fn enqueue_tenant(
+        &mut self,
+        tensor: Tensor,
+        arrived: Instant,
+        deadline: Instant,
+        class: usize,
+        tenant: usize,
+        tag: usize,
+    ) -> TenantPush {
+        let shape = tensor.shape.clone();
+        let a = self.rel(arrived);
+        let d = self.rel(deadline);
+        let now = self.rel(Instant::now());
+        let r = self
+            .queue
+            .push((tensor, arrived), a, Some(d), class, tenant, tag, now);
+        match r {
+            SloPush::Accepted => {
+                if self.input_shape.is_none() {
+                    self.input_shape = Some(shape);
+                }
+                TenantPush::Accepted
+            }
+            SloPush::AcceptedEvicting(e) => {
+                if self.input_shape.is_none() {
+                    self.input_shape = Some(shape);
+                }
+                self.dropped += 1;
+                TenantPush::Evicted { tenant: e.tenant, tag: e.tag }
+            }
+            SloPush::Shed => {
+                self.dropped += 1;
+                TenantPush::Shed
+            }
         }
-        self.queue.push_back((tensor, arrived));
-        true
+    }
+
+    /// Deadline-aware queue sweep: drop every queued entry whose SLO
+    /// deadline has already passed (serving it cannot meet the SLO, so
+    /// its slot goes to queries that still can). Returns the shed
+    /// entries' `(tenant, tag)` pairs; a no-op for deadline-free queues.
+    pub fn shed_blown(&mut self) -> Vec<(usize, usize)> {
+        let now = self.rel(Instant::now());
+        let shed = self.queue.shed_blown(now);
+        self.dropped += shed.len();
+        shed.into_iter().map(|e| (e.tenant, e.tag)).collect()
+    }
+
+    /// The `(tag, tenant)` of the entry the next
+    /// [`admit_one`](Self::admit_one) will pick (EDF within priority
+    /// class), without removing it.
+    pub fn peek_admission(&self) -> Option<(usize, usize)> {
+        self.queue.peek().map(|e| (e.tag, e.tenant))
     }
 
     /// Move queued arrivals into the pipeline while an admission slot is
@@ -302,12 +414,14 @@ impl PipelineServer {
         Ok(n)
     }
 
-    /// Admit exactly one queued arrival (the harness interleaves per-
+    /// Admit exactly one queued arrival — the SLO queue's pick: earliest
+    /// deadline within the highest waiting priority class, plain FIFO
+    /// when no entry carries a deadline. (The harness interleaves per-
     /// admission bookkeeping — stressor sync, window accounting — so it
     /// needs single-step admission; [`poll_ready`](Self::poll_ready) is
-    /// the batch convenience). Errors when the queue is empty, a slot is
+    /// the batch convenience.) Errors when the queue is empty, a slot is
     /// unavailable, or a rebalance is pending.
-    pub fn admit_one(&mut self) -> Result<usize> {
+    pub fn admit_one(&mut self) -> Result<Admitted> {
         if self.queue.is_empty() {
             bail!("admit_one with an empty arrival queue");
         }
@@ -317,8 +431,10 @@ impl PipelineServer {
         if self.rebalance_due {
             bail!("admit_one while a rebalance is pending");
         }
-        let (tensor, arrived) = self.queue.pop_front().expect("checked non-empty");
-        self.inject(tensor, Some(arrived))
+        let e = self.queue.pop().expect("checked non-empty");
+        let (tensor, arrived) = e.payload;
+        let id = self.inject(tensor, Some(arrived), e.tenant)?;
+        Ok(Admitted { id, tenant: e.tenant, tag: e.tag })
     }
 
     /// Admit one query into the pipeline directly (closed-loop driving:
@@ -336,13 +452,18 @@ impl PipelineServer {
         if self.input_shape.is_none() {
             self.input_shape = Some(tensor.shape.clone());
         }
-        self.inject(tensor, None)
+        self.inject(tensor, None, 0)
     }
 
     /// `arrived`: the enqueue timestamp under open-loop driving; None for
     /// direct admission, where arrival *is* admission (so the queueing
     /// split reports an exact zero, not clock jitter).
-    fn inject(&mut self, tensor: Tensor, arrived: Option<Instant>) -> Result<usize> {
+    fn inject(
+        &mut self,
+        tensor: Tensor,
+        arrived: Option<Instant>,
+        tenant: usize,
+    ) -> Result<usize> {
         let id = self.next_id;
         self.next_id += 1;
         let ranges = Arc::new(self.config.ranges());
@@ -354,6 +475,7 @@ impl PipelineServer {
                 ranges,
                 arrived: arrived.unwrap_or(admitted),
                 admitted,
+                tenant,
                 stage_times: Vec::new(),
             })
             .map_err(|_| err!("pipeline workers gone"))?;
@@ -425,6 +547,7 @@ impl PipelineServer {
             latency,
             queued,
             service,
+            tenant: msg.tenant,
             stage_times: msg.stage_times,
             output: msg.tensor,
             serial: false,
@@ -738,6 +861,75 @@ mod tests {
         // post-rebalance the monitor re-blesses from the next completion
         let done = s.serve(inputs(2)).unwrap();
         assert_eq!(done.len(), 2);
+    }
+
+    #[test]
+    fn tenant_admission_is_edf_within_priority_class() {
+        let mut s = server(2, 1, 10.0);
+        let t0 = Instant::now();
+        let far = t0 + std::time::Duration::from_secs(3600);
+        let mut xs = inputs(4).into_iter();
+        // enqueue order: low-prio tight, high-prio late, high-prio early,
+        // high-prio later-still — admission must pick by (class, deadline)
+        let d = |ms: u64| far + std::time::Duration::from_millis(ms);
+        assert_eq!(
+            s.enqueue_tenant(xs.next().unwrap(), t0, d(0), 1, 9, 100),
+            TenantPush::Accepted
+        );
+        s.enqueue_tenant(xs.next().unwrap(), t0, d(500), 0, 1, 101);
+        s.enqueue_tenant(xs.next().unwrap(), t0, d(100), 0, 2, 102);
+        s.enqueue_tenant(xs.next().unwrap(), t0, d(900), 0, 3, 103);
+        assert_eq!(s.queue_len(), 4);
+        assert_eq!(s.peek_admission(), Some((102, 2)));
+        let mut order = Vec::new();
+        for _ in 0..4 {
+            let a = s.admit_one().unwrap();
+            order.push((a.tag, a.tenant));
+            let c = s.recv_completion().unwrap();
+            assert_eq!(c.tenant, a.tenant, "tenant lost in the pipeline");
+        }
+        assert_eq!(order, vec![(102, 2), (101, 1), (103, 3), (100, 9)]);
+    }
+
+    #[test]
+    fn full_queue_evicts_blown_tenant_entries() {
+        let mut s = server(2, 1, 10.0); // queue_cap 4
+        let t0 = Instant::now();
+        let past = t0 - std::time::Duration::from_secs(1);
+        let mut xs = inputs(6).into_iter();
+        // two already-blown entries + two valid far-future ones
+        s.enqueue_tenant(xs.next().unwrap(), past, past, 0, 0, 0);
+        s.enqueue_tenant(xs.next().unwrap(), past, t0, 0, 1, 1);
+        let far = t0 + std::time::Duration::from_secs(3600);
+        s.enqueue_tenant(xs.next().unwrap(), t0, far, 0, 2, 2);
+        s.enqueue_tenant(xs.next().unwrap(), t0, far, 0, 3, 3);
+        // full: the most-expired blown entry gives way to the arrival
+        match s.enqueue_tenant(xs.next().unwrap(), t0, far, 0, 4, 4) {
+            TenantPush::Evicted { tenant, .. } => assert_eq!(tenant, 0),
+            other => panic!("expected eviction, got {other:?}"),
+        }
+        assert_eq!((s.queue_len(), s.dropped()), (4, 1));
+        // the sweep drops the remaining blown entry, nothing else
+        let shed = s.shed_blown();
+        assert_eq!(shed, vec![(1, 1)]);
+        assert_eq!((s.queue_len(), s.dropped()), (3, 2));
+        assert!(s.shed_blown().is_empty());
+        // full of valid entries: the arrival itself sheds (FIFO contract)
+        s.enqueue_tenant(xs.next().unwrap(), t0, far, 0, 5, 5);
+        let extra = Tensor::random(&[1, 8, 8, 3], 99, 1.0);
+        assert_eq!(
+            s.enqueue_tenant(extra, t0, far, 0, 6, 6),
+            TenantPush::Shed
+        );
+        assert_eq!(s.dropped(), 3);
+        // drain: the four remaining valid queries all complete
+        let mut done = 0;
+        while s.queue_len() > 0 || s.in_flight() > 0 {
+            s.poll_ready().unwrap();
+            s.recv_completion().unwrap();
+            done += 1;
+        }
+        assert_eq!(done, 4);
     }
 
     #[test]

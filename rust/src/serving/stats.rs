@@ -91,6 +91,7 @@ mod tests {
                 latency: 0.1,
                 queued: 0.0,
                 service: 0.1,
+                tenant: 0,
                 stage_times: vec![0.05, 0.05],
                 output: Tensor::zeros(&[1]),
                 serial: false,
@@ -100,6 +101,7 @@ mod tests {
                 latency: 0.3,
                 queued: 0.1,
                 service: 0.2,
+                tenant: 0,
                 stage_times: vec![0.1, 0.2],
                 output: Tensor::zeros(&[1]),
                 serial: true,
@@ -126,6 +128,7 @@ mod tests {
                 latency: if i < SERVE_WINDOW { 0.1 } else { 0.3 },
                 queued: 0.0,
                 service: if i < SERVE_WINDOW { 0.1 } else { 0.3 },
+                tenant: 0,
                 stage_times: vec![0.1],
                 output: Tensor::zeros(&[1]),
                 serial: false,

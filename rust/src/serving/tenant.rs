@@ -1,0 +1,999 @@
+//! Multi-tenant serving: per-tenant workloads, SLO deadlines, and the
+//! SLO-aware queue.
+//!
+//! The paper opens with "inference as a service": co-located tenants with
+//! *different* latency targets contending for one pipeline. A
+//! [`TenantSpec`] gives one tenant an id, an open-loop [`Workload`]
+//! (its own arrival process), an SLO deadline in milliseconds, a priority
+//! class and a fairness weight; a [`TenantSet`] merges the tenants'
+//! deterministic arrival timelines into one stream consumed by both the
+//! simulator (`simulator::engine::simulate_tenants`) and the live path
+//! (`ScenarioDriver::run_tenants`).
+//!
+//! The [`SloQueue`] replaces the single bounded FIFO of the PR-4 arrival
+//! queue: admission pops the entry with the **earliest deadline within
+//! the highest priority class** (EDF; priority 0 is served first; entries
+//! without a deadline order FIFO behind deadlined ones of their class),
+//! and shedding is **deadline-aware** — an entry whose deadline is
+//! already blown is dropped from the queue (at admission time, and
+//! preferentially evicted when a new arrival finds the queue full)
+//! instead of the queue only rejecting at enqueue. A queue holding only
+//! deadline-free class-0 entries degenerates to exactly the old bounded
+//! FIFO, which is what keeps the single-tenant path bit-compatible.
+//!
+//! Weights do not reorder the queue (priority and deadlines do); they are
+//! the *fairness reference*: reports compare each tenant's achieved
+//! completion share against `weight / Σ weights` so starvation is visible
+//! in the artifacts.
+
+use crate::json::{parse, Value};
+use crate::util::error::{Context, Result};
+use crate::{bail, err};
+
+use super::workload::Workload;
+
+/// Caps mirroring the scenario DSL's hostile-input discipline.
+pub const MAX_TENANTS: usize = 64;
+pub const MAX_DEADLINE_MS: f64 = 3_600_000.0; // one hour
+pub const MAX_PRIORITY: usize = 16;
+
+/// Builtin tenant sets, in catalogue order.
+pub const TENANT_BUILTIN_NAMES: [&str; 3] = ["tiers", "even", "mixed"];
+
+/// One tenant: an arrival process plus its service-level objective.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantSpec {
+    /// Path-safe id (lands in artifact rows).
+    pub id: String,
+    /// The tenant's own arrival process; must be open-loop — a closed
+    /// workload has no arrival timeline to merge.
+    pub workload: Workload,
+    /// SLO deadline: a query completing more than this many milliseconds
+    /// after its arrival violates the tenant's SLO.
+    pub deadline_ms: f64,
+    /// Priority class (0 = highest): admission never picks a lower class
+    /// while a higher one is waiting.
+    pub priority: usize,
+    /// Fairness weight: the tenant's intended share of completions is
+    /// `weight / Σ weights` (reported, not enforced by the queue).
+    pub weight: f64,
+}
+
+impl TenantSpec {
+    /// The deadline in seconds (the queue's native unit).
+    pub fn deadline_s(&self) -> f64 {
+        self.deadline_ms / 1e3
+    }
+}
+
+/// A validated set of tenants sharing one pipeline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantSet {
+    pub name: String,
+    pub tenants: Vec<TenantSpec>,
+}
+
+/// One merged arrival: time offset (seconds since run start) + the index
+/// of the tenant it belongs to.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TenantArrival {
+    pub t: f64,
+    pub tenant: usize,
+}
+
+fn path_safe(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'))
+}
+
+impl TenantSet {
+    pub fn new(name: impl Into<String>, tenants: Vec<TenantSpec>) -> Result<TenantSet> {
+        let s = TenantSet { name: name.into(), tenants };
+        s.validate()?;
+        Ok(s)
+    }
+
+    fn validate(&self) -> Result<()> {
+        let name = &self.name;
+        if !path_safe(name) {
+            bail!(
+                "tenant set name {name:?} must be a non-empty path-safe \
+                 token (ASCII letters, digits, '-', '_', '.')"
+            );
+        }
+        if self.tenants.is_empty() {
+            bail!("tenant set {name:?}: needs at least one tenant");
+        }
+        if self.tenants.len() > MAX_TENANTS {
+            bail!(
+                "tenant set {name:?}: {} tenants exceed the {MAX_TENANTS} limit",
+                self.tenants.len()
+            );
+        }
+        for (i, t) in self.tenants.iter().enumerate() {
+            let what = || format!("tenant set {name:?}: tenant {i}");
+            if !path_safe(&t.id) {
+                bail!(
+                    "{}: id {:?} must be a non-empty path-safe token",
+                    what(),
+                    t.id
+                );
+            }
+            if !t.workload.is_open() {
+                bail!(
+                    "{} ({:?}): workload {:?} is closed-loop — tenants \
+                     need an arrival timeline to merge (poisson:* or \
+                     trace:*)",
+                    what(),
+                    t.id,
+                    t.workload.spec()
+                );
+            }
+            if !t.deadline_ms.is_finite() || t.deadline_ms <= 0.0 {
+                bail!(
+                    "{} ({:?}): deadline_ms {} must be a positive number",
+                    what(),
+                    t.id,
+                    t.deadline_ms
+                );
+            }
+            if t.deadline_ms > MAX_DEADLINE_MS {
+                bail!(
+                    "{} ({:?}): deadline_ms {} exceeds the \
+                     {MAX_DEADLINE_MS:.0} limit",
+                    what(),
+                    t.id,
+                    t.deadline_ms
+                );
+            }
+            if t.priority > MAX_PRIORITY {
+                bail!(
+                    "{} ({:?}): priority {} exceeds the {MAX_PRIORITY} limit",
+                    what(),
+                    t.id,
+                    t.priority
+                );
+            }
+            if !t.weight.is_finite() || t.weight <= 0.0 {
+                bail!(
+                    "{} ({:?}): weight {} must be a positive number",
+                    what(),
+                    t.id,
+                    t.weight
+                );
+            }
+            for (j, other) in self.tenants[..i].iter().enumerate() {
+                if other.id == t.id {
+                    bail!(
+                        "tenant set {name:?}: tenants {j} and {i} share \
+                         the id {:?}",
+                        t.id
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    /// Per-tenant SLO deadlines in seconds, indexed by tenant.
+    pub fn deadlines_s(&self) -> Vec<f64> {
+        self.tenants.iter().map(|t| t.deadline_s()).collect()
+    }
+
+    /// Per-tenant priority classes, indexed by tenant.
+    pub fn classes(&self) -> Vec<usize> {
+        self.tenants.iter().map(|t| t.priority).collect()
+    }
+
+    /// Tenant ids, indexed by tenant.
+    pub fn ids(&self) -> Vec<String> {
+        self.tenants.iter().map(|t| t.id.clone()).collect()
+    }
+
+    /// The first `n` merged arrivals across every tenant, in time order
+    /// (ties broken by tenant index — fully deterministic: the same set
+    /// always yields the same labeled timeline, simulated or live).
+    pub fn arrivals(&self, n: usize) -> Result<Vec<TenantArrival>> {
+        let mut streams: Vec<Vec<f64>> = Vec::with_capacity(self.tenants.len());
+        for t in &self.tenants {
+            streams.push(t.workload.arrivals(n).with_context(|| {
+                format!("tenant {:?} of set {:?}", t.id, self.name)
+            })?);
+        }
+        let mut heads = vec![0usize; streams.len()];
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            let mut best: Option<(f64, usize)> = None;
+            for (k, s) in streams.iter().enumerate() {
+                if heads[k] >= s.len() {
+                    continue;
+                }
+                let t = s[heads[k]];
+                // strict < keeps the lowest tenant index on ties
+                if best.is_none_or(|(bt, _)| t < bt) {
+                    best = Some((t, k));
+                }
+            }
+            let Some((t, k)) = best else { break };
+            heads[k] += 1;
+            out.push(TenantArrival { t, tenant: k });
+        }
+        Ok(out)
+    }
+
+    /// Mean offered rate of the whole set (sum of tenant mean rates).
+    pub fn total_rate_qps(&self) -> f64 {
+        self.tenants
+            .iter()
+            .filter_map(|t| t.workload.mean_rate())
+            .sum()
+    }
+
+    /// Rescale every tenant's arrival rate so the set's total mean rate
+    /// equals `total_qps`, preserving the tenants' rate proportions —
+    /// how sweeps pin offered load to a fraction of the pipeline's peak.
+    pub fn with_total_rate(&self, total_qps: f64) -> Result<TenantSet> {
+        if !total_qps.is_finite() || total_qps <= 0.0 {
+            bail!(
+                "tenant set {:?}: total rate {total_qps} must be a \
+                 positive number",
+                self.name
+            );
+        }
+        let current = self.total_rate_qps();
+        if current <= 0.0 {
+            bail!(
+                "tenant set {:?}: cannot rescale a zero-rate set",
+                self.name
+            );
+        }
+        let factor = total_qps / current;
+        let tenants = self
+            .tenants
+            .iter()
+            .map(|t| {
+                Ok(TenantSpec {
+                    id: t.id.clone(),
+                    workload: t.workload.scaled_rate(factor).with_context(
+                        || format!("rescaling tenant {:?}", t.id),
+                    )?,
+                    deadline_ms: t.deadline_ms,
+                    priority: t.priority,
+                    weight: t.weight,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        TenantSet::new(self.name.clone(), tenants)
+    }
+
+    // -- JSON -----------------------------------------------------------
+
+    /// Parse a tenant-set document:
+    ///
+    /// ```json
+    /// {"name": "tiers",
+    ///  "tenants": [
+    ///   {"id": "gold", "workload": "poisson:80qps@11",
+    ///    "deadline_ms": 60, "priority": 0, "weight": 2},
+    ///   {"id": "bronze", "workload": "poisson:160qps@13",
+    ///    "deadline_ms": 600, "priority": 1}
+    ///  ]}
+    /// ```
+    ///
+    /// `workload` is any open-loop [`Workload::parse`] spec
+    /// (`poisson:<rate>qps[@seed]` or `trace:<file.json>`); `priority`
+    /// defaults to 0 and `weight` to 1.
+    pub fn from_json(v: &Value) -> Result<TenantSet> {
+        if v.as_obj().is_none() {
+            bail!("tenant set document must be a JSON object");
+        }
+        for k in v.as_obj().unwrap().keys() {
+            if !["name", "tenants"].contains(&k.as_str()) {
+                bail!(
+                    "tenant set: unknown field {k:?} (allowed: name, tenants)"
+                );
+            }
+        }
+        let name = match v.get("name") {
+            Value::Null => "custom".to_string(),
+            other => other
+                .as_str()
+                .ok_or_else(|| err!("field \"name\" must be a string"))?
+                .to_string(),
+        };
+        let arr = v
+            .get("tenants")
+            .as_arr()
+            .ok_or_else(|| err!("tenant set {name:?}: missing \"tenants\" array"))?;
+        let mut tenants = Vec::with_capacity(arr.len());
+        for (i, tv) in arr.iter().enumerate() {
+            let what = format!("tenant {i}");
+            if let Some(obj) = tv.as_obj() {
+                for k in obj.keys() {
+                    if !["deadline_ms", "id", "priority", "weight", "workload"]
+                        .contains(&k.as_str())
+                    {
+                        bail!(
+                            "{what}: unknown field {k:?} (allowed: \
+                             deadline_ms, id, priority, weight, workload)"
+                        );
+                    }
+                }
+            } else {
+                bail!("{what}: must be a JSON object");
+            }
+            let id = tv
+                .get("id")
+                .as_str()
+                .ok_or_else(|| err!("{what}: missing or non-string field \"id\""))?
+                .to_string();
+            let spec = tv
+                .get("workload")
+                .as_str()
+                .ok_or_else(|| {
+                    err!("{what}: missing or non-string field \"workload\"")
+                })?;
+            let workload = Workload::parse(spec)
+                .with_context(|| format!("{what} ({id:?})"))?;
+            let deadline_ms = tv
+                .get("deadline_ms")
+                .as_f64()
+                .ok_or_else(|| {
+                    err!("{what}: missing or non-number field \"deadline_ms\"")
+                })?;
+            let priority = match tv.get("priority") {
+                Value::Null => 0,
+                other => other.as_usize().ok_or_else(|| {
+                    err!("{what}: field \"priority\" must be a non-negative integer")
+                })?,
+            };
+            let weight = match tv.get("weight") {
+                Value::Null => 1.0,
+                other => other.as_f64().ok_or_else(|| {
+                    err!("{what}: field \"weight\" must be a number")
+                })?,
+            };
+            tenants.push(TenantSpec { id, workload, deadline_ms, priority, weight });
+        }
+        TenantSet::new(name, tenants)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<TenantSet> {
+        let v = parse(text).context("parsing tenant set json")?;
+        TenantSet::from_json(&v)
+    }
+
+    pub fn load(path: &str) -> Result<TenantSet> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading tenant set file {path:?}"))?;
+        TenantSet::from_json_str(&text)
+            .with_context(|| format!("loading tenant set file {path:?}"))
+    }
+}
+
+/// The builtin catalogue: a two-tier SLA (`tiers`), an equal pair
+/// (`even`), and a realtime-vs-batch mix (`mixed`). Rates are absolute;
+/// sweeps pin them to the pipeline with
+/// [`TenantSet::with_total_rate`].
+pub fn builtin(name: &str) -> Result<TenantSet> {
+    let spec = |id: &str, w: &str, deadline_ms: f64, priority: usize, weight: f64| {
+        Ok::<TenantSpec, crate::util::error::OdinError>(TenantSpec {
+            id: id.to_string(),
+            workload: Workload::parse(w)?,
+            deadline_ms,
+            priority,
+            weight,
+        })
+    };
+    match name {
+        // a gold tenant with a tight deadline and double weight over a
+        // best-effort bronze tenant offering twice the traffic
+        "tiers" => TenantSet::new(
+            "tiers",
+            vec![
+                spec("gold", "poisson:80qps@11", 60.0, 0, 2.0)?,
+                spec("bronze", "poisson:160qps@13", 600.0, 1, 1.0)?,
+            ],
+        ),
+        // two symmetric tenants: the fairness reference case
+        "even" => TenantSet::new(
+            "even",
+            vec![
+                spec("a", "poisson:120qps@17", 150.0, 0, 1.0)?,
+                spec("b", "poisson:120qps@19", 150.0, 0, 1.0)?,
+            ],
+        ),
+        // a latency-critical realtime tenant sharing with a spiky batch
+        // tenant whose rate quadruples halfway through its phase budget
+        "mixed" => {
+            let batch = TenantSpec {
+                id: "batch".to_string(),
+                workload: Workload::phased(
+                    vec![
+                        super::workload::RatePhase { queries: 200, rate_qps: 40.0 },
+                        super::workload::RatePhase { queries: 200, rate_qps: 240.0 },
+                    ],
+                    23,
+                )?,
+                deadline_ms: 1000.0,
+                priority: 1,
+                weight: 1.0,
+            };
+            TenantSet::new(
+                "mixed",
+                vec![spec("rt", "poisson:100qps@29", 50.0, 0, 1.0)?, batch],
+            )
+        }
+        other => bail!(
+            "unknown tenant set {other:?} (builtins: {})",
+            TENANT_BUILTIN_NAMES.join(", ")
+        ),
+    }
+}
+
+/// Resolve a CLI argument: builtin name or a tenant-set file (ambiguity
+/// rejected, same contract as scenario resolution).
+pub fn resolve(spec: &str) -> Result<TenantSet> {
+    let is_builtin = TENANT_BUILTIN_NAMES.contains(&spec);
+    let is_file = std::path::Path::new(spec).is_file();
+    match (is_builtin, is_file) {
+        (true, true) => Err(err!(
+            "tenant set {spec:?} is both a builtin name and an existing \
+             file; use ./{spec} to load the file"
+        )),
+        (true, false) => builtin(spec),
+        (false, true) => TenantSet::load(spec),
+        (false, false) => Err(err!(
+            "unknown tenant set {spec:?}: not a builtin ({}) and not a file",
+            TENANT_BUILTIN_NAMES.join(", ")
+        )),
+    }
+}
+
+// -- the SLO-aware queue ------------------------------------------------
+
+/// One queued entry. Times are f64 seconds on the caller's clock (the
+/// simulator's virtual clock, or seconds since a live anchor instant) so
+/// one implementation — and one test suite — serves both worlds.
+#[derive(Clone, Debug)]
+pub struct SloEntry<P> {
+    pub payload: P,
+    /// Arrival time (seconds).
+    pub arrival: f64,
+    /// Absolute SLO deadline; None = no deadline (plain FIFO entry).
+    pub deadline: Option<f64>,
+    /// Priority class, 0 served first.
+    pub class: usize,
+    pub tenant: usize,
+    /// Caller-side label (e.g. the arrival index) carried through the
+    /// queue so schedule lookups can follow EDF reordering.
+    pub tag: usize,
+    /// Enqueue order, unique — the total tie-break.
+    seq: usize,
+}
+
+/// Outcome of [`SloQueue::push`] on a bounded queue.
+#[derive(Debug)]
+pub enum SloPush<P> {
+    /// Accepted; nothing dropped.
+    Accepted,
+    /// Accepted after evicting a queued entry whose deadline was already
+    /// blown (deadline-aware shedding beats dropping the fresh arrival).
+    AcceptedEvicting(SloEntry<P>),
+    /// Queue full and no queued entry is blown: the new arrival is shed.
+    Shed,
+}
+
+/// Bounded priority/EDF queue with deadline-aware shedding. Pop order:
+/// lowest class first; within a class, earliest deadline first, with
+/// deadline-free entries last; all ties broken by enqueue order. With
+/// only deadline-free class-0 entries this is exactly a bounded FIFO.
+#[derive(Debug)]
+pub struct SloQueue<P> {
+    cap: usize,
+    seq: usize,
+    entries: Vec<SloEntry<P>>,
+}
+
+impl<P> SloQueue<P> {
+    pub fn new(cap: usize) -> SloQueue<P> {
+        assert!(cap >= 1, "queue cap must be >= 1");
+        SloQueue { cap, seq: 0, entries: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Pop ordering key; seq is unique so the order is total and the
+    /// selection deterministic.
+    fn key(e: &SloEntry<P>) -> (usize, f64, usize) {
+        (e.class, e.deadline.unwrap_or(f64::INFINITY), e.seq)
+    }
+
+    fn best_idx(&self) -> Option<usize> {
+        (0..self.entries.len()).min_by(|&a, &b| {
+            Self::key(&self.entries[a])
+                .partial_cmp(&Self::key(&self.entries[b]))
+                .expect("deadlines validated finite")
+        })
+    }
+
+    /// The entry the next [`pop`](Self::pop) would return.
+    pub fn peek(&self) -> Option<&SloEntry<P>> {
+        self.best_idx().map(|i| &self.entries[i])
+    }
+
+    /// Remove and return the highest-priority / earliest-deadline entry.
+    pub fn pop(&mut self) -> Option<SloEntry<P>> {
+        self.best_idx().map(|i| self.entries.swap_remove(i))
+    }
+
+    /// Offer one arrival at time `now`. When the queue is full, a queued
+    /// entry whose deadline has already passed is evicted in its place
+    /// (the most-expired first); with no blown entry the arrival itself
+    /// is shed.
+    #[allow(clippy::too_many_arguments)]
+    pub fn push(
+        &mut self,
+        payload: P,
+        arrival: f64,
+        deadline: Option<f64>,
+        class: usize,
+        tenant: usize,
+        tag: usize,
+        now: f64,
+    ) -> SloPush<P> {
+        let mut evicted = None;
+        if self.entries.len() >= self.cap {
+            let blown = (0..self.entries.len())
+                .filter(|&i| {
+                    self.entries[i].deadline.is_some_and(|d| d < now)
+                })
+                .min_by(|&a, &b| {
+                    // earliest deadline = most expired goes first
+                    self.entries[a]
+                        .deadline
+                        .partial_cmp(&self.entries[b].deadline)
+                        .expect("deadlines validated finite")
+                });
+            match blown {
+                Some(i) => evicted = Some(self.entries.swap_remove(i)),
+                None => return SloPush::Shed,
+            }
+        }
+        let seq = self.seq;
+        self.seq += 1;
+        self.entries.push(SloEntry {
+            payload,
+            arrival,
+            deadline,
+            class,
+            tenant,
+            tag,
+            seq,
+        });
+        match evicted {
+            Some(e) => SloPush::AcceptedEvicting(e),
+            None => SloPush::Accepted,
+        }
+    }
+
+    /// Drop every entry whose deadline has passed at `now` — serving them
+    /// can no longer meet their SLO, so capacity goes to queries that
+    /// still can. Returned in queue-arrival order (deterministic).
+    pub fn shed_blown(&mut self, now: f64) -> Vec<SloEntry<P>> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.entries.len() {
+            if self.entries[i].deadline.is_some_and(|d| d < now) {
+                out.push(self.entries.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        out.sort_by_key(|e| e.seq);
+        out
+    }
+}
+
+// -- per-tenant accounting ---------------------------------------------
+
+/// Run-level per-tenant totals, emitted identically by the simulator and
+/// the live path (one emitter: [`totals_json`]).
+#[derive(Clone, Debug)]
+pub struct TenantTotals {
+    pub id: String,
+    pub deadline_ms: f64,
+    pub priority: usize,
+    pub weight: f64,
+    pub workload: String,
+    /// Arrivals offered by this tenant's workload.
+    pub offered: usize,
+    pub completed: usize,
+    /// Arrivals shed (at the bound, by eviction, or deadline-blown).
+    pub dropped: usize,
+    /// Completions that finished past the tenant's deadline.
+    pub slo_violations: usize,
+    /// Mean queueing delay of the tenant's completions, ns.
+    pub queued_ns: f64,
+    /// Mean service time of the tenant's completions, ns.
+    pub service_ns: f64,
+}
+
+/// Fold per-completion records into per-tenant totals. `tenant`, `blown`,
+/// `queued` and `latencies` are parallel per-completion vectors;
+/// `dropped_tenant` labels each shed arrival. Conservation holds by
+/// construction: offered = completed + dropped per tenant (the engine
+/// and harness drain every arrival into one of the two).
+pub fn tally(
+    set: &TenantSet,
+    tenant: &[usize],
+    blown: &[bool],
+    queued: &[f64],
+    latencies: &[f64],
+    dropped_tenant: &[usize],
+) -> Vec<TenantTotals> {
+    set.tenants
+        .iter()
+        .enumerate()
+        .map(|(k, spec)| {
+            let completed = tenant.iter().filter(|&&t| t == k).count();
+            let dropped = dropped_tenant.iter().filter(|&&t| t == k).count();
+            let slo_violations = tenant
+                .iter()
+                .zip(blown)
+                .filter(|(&t, &b)| t == k && b)
+                .count();
+            let q_sum: f64 = tenant
+                .iter()
+                .zip(queued)
+                .filter(|(&t, _)| t == k)
+                .map(|(_, &q)| q)
+                .sum();
+            let l_sum: f64 = tenant
+                .iter()
+                .zip(latencies)
+                .filter(|(&t, _)| t == k)
+                .map(|(_, &l)| l)
+                .sum();
+            let denom = completed.max(1) as f64;
+            TenantTotals {
+                id: spec.id.clone(),
+                deadline_ms: spec.deadline_ms,
+                priority: spec.priority,
+                weight: spec.weight,
+                workload: spec.workload.spec().to_string(),
+                offered: completed + dropped,
+                completed,
+                dropped,
+                slo_violations,
+                queued_ns: q_sum / denom * 1e9,
+                service_ns: (l_sum - q_sum) / denom * 1e9,
+            }
+        })
+        .collect()
+}
+
+/// Each tenant's `(share, weight_share)`: achieved completion share vs
+/// the weight-implied fair share — ONE implementation behind both the
+/// emitted per-tenant columns and the `unfairness` summary, so the two
+/// cannot drift.
+pub fn shares(totals: &[TenantTotals]) -> Vec<(f64, f64)> {
+    let weight_sum: f64 = totals.iter().map(|t| t.weight).sum();
+    let completed_sum: usize = totals.iter().map(|t| t.completed).sum();
+    totals
+        .iter()
+        .map(|t| {
+            (
+                t.completed as f64 / completed_sum.max(1) as f64,
+                t.weight / weight_sum.max(1e-12),
+            )
+        })
+        .collect()
+}
+
+/// The fairness check: worst |share − weight_share| across tenants.
+pub fn unfairness(totals: &[TenantTotals]) -> f64 {
+    shares(totals)
+        .into_iter()
+        .map(|(s, w)| (s - w).abs())
+        .fold(0.0f64, f64::max)
+}
+
+/// Byte-stable JSON array of per-tenant totals (tenant order preserved).
+/// Shared by `scenario`/`multitenant` documents and `live_*.json` so the
+/// two worlds cannot drift on the per-tenant schema.
+pub fn totals_json(totals: &[TenantTotals]) -> Value {
+    let share_pairs = shares(totals);
+    Value::arr(
+        totals
+            .iter()
+            .zip(share_pairs)
+            .map(|(t, (share, weight_share))| {
+                Value::obj(vec![
+                    ("completed", Value::from(t.completed)),
+                    ("deadline_ms", Value::from(t.deadline_ms)),
+                    ("dropped", Value::from(t.dropped)),
+                    ("id", Value::from(t.id.clone())),
+                    ("offered", Value::from(t.offered)),
+                    ("priority", Value::from(t.priority)),
+                    ("queued_ns", Value::from(t.queued_ns)),
+                    ("service_ns", Value::from(t.service_ns)),
+                    ("share", Value::from(share)),
+                    ("slo_violations", Value::from(t.slo_violations)),
+                    ("weight", Value::from(t.weight)),
+                    ("weight_share", Value::from(weight_share)),
+                    ("workload", Value::from(t.workload.clone())),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain(e: &crate::util::error::OdinError) -> String {
+        format!("{e:#}")
+    }
+
+    #[test]
+    fn builtins_validate_and_merge() {
+        for name in TENANT_BUILTIN_NAMES {
+            let s = builtin(name).unwrap();
+            assert_eq!(s.name, name);
+            assert!(s.len() >= 2, "{name} is not multi-tenant");
+            let arr = s.arrivals(200).unwrap();
+            assert_eq!(arr.len(), 200);
+            assert!(
+                arr.windows(2).all(|p| p[0].t <= p[1].t),
+                "{name}: merged arrivals out of order"
+            );
+            // every tenant contributes to the merged stream
+            for k in 0..s.len() {
+                assert!(
+                    arr.iter().any(|a| a.tenant == k),
+                    "{name}: tenant {k} never arrives"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn merge_is_deterministic_and_tie_breaks_by_tenant() {
+        let s = builtin("even").unwrap();
+        assert_eq!(s.arrivals(500).unwrap(), s.arrivals(500).unwrap());
+        // identical trace workloads arrive at identical times: tenant 0
+        // must win every tie
+        let t = TenantSet::new(
+            "ties",
+            vec![
+                TenantSpec {
+                    id: "x".into(),
+                    workload: Workload::trace(vec![0.5]).unwrap(),
+                    deadline_ms: 100.0,
+                    priority: 0,
+                    weight: 1.0,
+                },
+                TenantSpec {
+                    id: "y".into(),
+                    workload: Workload::trace(vec![0.5]).unwrap(),
+                    deadline_ms: 100.0,
+                    priority: 0,
+                    weight: 1.0,
+                },
+            ],
+        )
+        .unwrap();
+        let arr = t.arrivals(6).unwrap();
+        for p in arr.chunks(2) {
+            assert_eq!((p[0].tenant, p[1].tenant), (0, 1), "{arr:?}");
+            assert_eq!(p[0].t, p[1].t);
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_sets_with_context() {
+        let ok = || TenantSpec {
+            id: "a".into(),
+            workload: Workload::parse("poisson:10qps").unwrap(),
+            deadline_ms: 50.0,
+            priority: 0,
+            weight: 1.0,
+        };
+        // closed workload
+        let mut t = ok();
+        t.workload = Workload::parse("closed:2").unwrap();
+        let e = TenantSet::new("s", vec![t]).unwrap_err();
+        assert!(chain(&e).contains("closed-loop"), "{e:#}");
+        // duplicate ids
+        let e = TenantSet::new("s", vec![ok(), ok()]).unwrap_err();
+        assert!(chain(&e).contains("share the id"), "{e:#}");
+        // bad deadline / weight / priority / name / empty
+        let mut t = ok();
+        t.deadline_ms = 0.0;
+        assert!(TenantSet::new("s", vec![t]).is_err());
+        let mut t = ok();
+        t.deadline_ms = MAX_DEADLINE_MS * 2.0;
+        assert!(TenantSet::new("s", vec![t]).is_err());
+        let mut t = ok();
+        t.weight = -1.0;
+        assert!(TenantSet::new("s", vec![t]).is_err());
+        let mut t = ok();
+        t.priority = MAX_PRIORITY + 1;
+        assert!(TenantSet::new("s", vec![t]).is_err());
+        assert!(TenantSet::new("bad name", vec![ok()]).is_err());
+        assert!(TenantSet::new("s", vec![]).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_and_errors() {
+        let s = TenantSet::from_json_str(
+            r#"{"name": "pair",
+                "tenants": [
+                  {"id": "tight", "workload": "poisson:50qps@7",
+                   "deadline_ms": 20, "priority": 0, "weight": 3},
+                  {"id": "loose", "workload": "poisson:25qps@9",
+                   "deadline_ms": 500}
+                ]}"#,
+        )
+        .unwrap();
+        assert_eq!(s.name, "pair");
+        assert_eq!(s.ids(), vec!["tight", "loose"]);
+        assert_eq!(s.tenants[1].priority, 0);
+        assert_eq!(s.tenants[1].weight, 1.0);
+        assert_eq!(s.classes(), vec![0, 0]);
+        assert!((s.deadlines_s()[0] - 0.02).abs() < 1e-12);
+        for (text, needle) in [
+            (r#"[1]"#, "must be a JSON object"),
+            (r#"{"tenantz": []}"#, "unknown field"),
+            (r#"{"name": "x"}"#, "missing \"tenants\""),
+            (r#"{"tenants": [{"id": "a"}]}"#, "workload"),
+            (
+                r#"{"tenants": [{"id": "a", "workload": "poisson:5qps"}]}"#,
+                "deadline_ms",
+            ),
+            (
+                r#"{"tenants": [{"id": "a", "workload": "nope:1",
+                    "deadline_ms": 10}]}"#,
+                "unknown workload kind",
+            ),
+            (
+                r#"{"tenants": [{"id": "a", "workload": "poisson:5qps",
+                    "deadline_ms": 10, "extra": 1}]}"#,
+                "unknown field",
+            ),
+        ] {
+            let e = TenantSet::from_json_str(text).unwrap_err();
+            assert!(chain(&e).contains(needle), "{text}: {e:#}");
+        }
+        let e = resolve("/nonexistent/odin/tenants.json").unwrap_err();
+        assert!(chain(&e).contains("not a builtin"), "{e:#}");
+        assert!(resolve("tiers").is_ok());
+    }
+
+    #[test]
+    fn with_total_rate_preserves_proportions() {
+        let s = builtin("tiers").unwrap();
+        let scaled = s.with_total_rate(60.0).unwrap();
+        assert!((scaled.total_rate_qps() - 60.0).abs() < 1e-9);
+        // gold:bronze stays 1:2
+        let r: Vec<f64> = scaled
+            .tenants
+            .iter()
+            .map(|t| t.workload.mean_rate().unwrap())
+            .collect();
+        assert!((r[1] / r[0] - 2.0).abs() < 1e-9, "{r:?}");
+        assert!(s.with_total_rate(0.0).is_err());
+        assert!(s.with_total_rate(f64::NAN).is_err());
+    }
+
+    #[test]
+    fn queue_pops_edf_within_priority_class() {
+        let mut q: SloQueue<&str> = SloQueue::new(16);
+        q.push("late-hi", 0.0, Some(9.0), 0, 0, 0, 0.0);
+        q.push("lo", 0.0, Some(1.0), 1, 1, 1, 0.0);
+        q.push("early-hi", 0.0, Some(3.0), 0, 0, 2, 0.0);
+        q.push("nodl-hi", 0.0, None, 0, 2, 3, 0.0);
+        // class 0 drains first by deadline, deadline-free last; class 1
+        // only after class 0 is empty — regardless of its tight deadline
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop())
+            .map(|e| e.payload)
+            .collect();
+        assert_eq!(order, vec!["early-hi", "late-hi", "nodl-hi", "lo"]);
+    }
+
+    #[test]
+    fn queue_without_deadlines_is_plain_fifo() {
+        let mut q: SloQueue<usize> = SloQueue::new(3);
+        for i in 0..3 {
+            assert!(matches!(
+                q.push(i, i as f64, None, 0, 0, i, i as f64),
+                SloPush::Accepted
+            ));
+        }
+        // full, nothing blown: the arrival is shed, exactly the old FIFO
+        assert!(matches!(q.push(9, 3.0, None, 0, 0, 9, 3.0), SloPush::Shed));
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop().unwrap().payload, 0);
+        assert_eq!(q.pop().unwrap().payload, 1);
+        assert_eq!(q.pop().unwrap().payload, 2);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn full_queue_evicts_blown_entries_before_shedding_arrivals() {
+        let mut q: SloQueue<&str> = SloQueue::new(2);
+        q.push("blown-worst", 0.0, Some(1.0), 0, 0, 0, 0.0);
+        q.push("blown-mild", 0.0, Some(2.0), 0, 1, 1, 0.0);
+        // at t=5 both deadlines are blown; the most-expired one goes first
+        match q.push("fresh", 5.0, Some(9.0), 0, 2, 2, 5.0) {
+            SloPush::AcceptedEvicting(e) => assert_eq!(e.payload, "blown-worst"),
+            other => panic!("expected eviction, got {other:?}"),
+        }
+        assert_eq!(q.len(), 2);
+        // still-valid entries are never evicted
+        let mut q: SloQueue<&str> = SloQueue::new(1);
+        q.push("valid", 0.0, Some(100.0), 0, 0, 0, 0.0);
+        assert!(matches!(
+            q.push("late", 1.0, Some(50.0), 0, 1, 1, 1.0),
+            SloPush::Shed
+        ));
+    }
+
+    #[test]
+    fn shed_blown_drops_exactly_the_expired() {
+        let mut q: SloQueue<usize> = SloQueue::new(8);
+        q.push(0, 0.0, Some(1.0), 0, 0, 0, 0.0);
+        q.push(1, 0.0, Some(5.0), 0, 1, 1, 0.0);
+        q.push(2, 0.0, None, 0, 2, 2, 0.0);
+        let shed = q.shed_blown(2.0);
+        assert_eq!(shed.len(), 1);
+        assert_eq!((shed[0].payload, shed[0].tenant), (0, 0));
+        assert_eq!(q.len(), 2);
+        assert!(q.shed_blown(2.0).is_empty(), "shed must be idempotent");
+        // deadline-free entries never expire
+        assert_eq!(q.shed_blown(1e12).len(), 1);
+        assert_eq!(q.pop().unwrap().payload, 2);
+    }
+
+    #[test]
+    fn tally_conserves_and_flags_violations() {
+        let set = builtin("even").unwrap();
+        let tenant = vec![0, 1, 0, 0];
+        let blown = vec![false, true, true, false];
+        let queued = vec![0.0, 0.1, 0.2, 0.0];
+        let lats = vec![0.1, 0.3, 0.4, 0.1];
+        let dropped = vec![1, 1, 0];
+        let t = tally(&set, &tenant, &blown, &queued, &lats, &dropped);
+        assert_eq!(t.len(), 2);
+        assert_eq!((t[0].completed, t[0].dropped, t[0].offered), (3, 1, 4));
+        assert_eq!((t[1].completed, t[1].dropped, t[1].offered), (1, 2, 3));
+        assert_eq!(t[0].slo_violations, 1);
+        assert_eq!(t[1].slo_violations, 1);
+        let v = totals_json(&t);
+        assert_eq!(v.idx(0).get("id").as_str(), Some("a"));
+        assert_eq!(v.idx(0).get("offered").as_usize(), Some(4));
+        assert_eq!(v.idx(0).get("weight_share").as_f64(), Some(0.5));
+        assert_eq!(v.idx(0).keys().len(), 13);
+    }
+}

@@ -245,6 +245,63 @@ impl Workload {
         Ok(out)
     }
 
+    /// Long-run mean offered rate (queries/second); `None` for closed
+    /// workloads, which have no arrival timeline. A zero-gap trace has an
+    /// unbounded rate and reports `None` too.
+    pub fn mean_rate(&self) -> Option<f64> {
+        match &self.process {
+            ArrivalProcess::Closed { .. } => None,
+            ArrivalProcess::Poisson { rate_qps, .. } => Some(*rate_qps),
+            ArrivalProcess::Trace { intervals } => {
+                let span: f64 = intervals.iter().sum();
+                (span > 0.0).then(|| intervals.len() as f64 / span)
+            }
+            ArrivalProcess::Phased { phases, .. } => {
+                let (q, t) = phases.iter().fold((0.0, 0.0), |(q, t), p| {
+                    (q + p.queries as f64, t + p.queries as f64 / p.rate_qps)
+                });
+                Some(q / t)
+            }
+        }
+    }
+
+    /// Scale the workload's offered rate by `factor` (> 0): Poisson and
+    /// phased rates multiply, trace gaps divide; seeds and phase budgets
+    /// are untouched so the *shape* of the process is preserved. Closed
+    /// workloads have no rate and error.
+    pub fn scaled_rate(&self, factor: f64) -> Result<Workload> {
+        if !factor.is_finite() || factor <= 0.0 {
+            bail!(
+                "workload {:?}: rate factor {factor} must be a positive \
+                 number",
+                self.spec
+            );
+        }
+        match &self.process {
+            ArrivalProcess::Closed { .. } => bail!(
+                "workload {:?} is closed-loop: it has no arrival rate to \
+                 scale",
+                self.spec
+            ),
+            ArrivalProcess::Poisson { rate_qps, seed } => {
+                Workload::poisson(rate_qps * factor, *seed)
+            }
+            ArrivalProcess::Trace { intervals } => Workload::trace(
+                intervals.iter().map(|d| d / factor).collect(),
+            ),
+            ArrivalProcess::Phased { phases, seed } => Workload::phased(
+                phases
+                    .iter()
+                    .map(|p| RatePhase {
+                        queries: p.queries,
+                        rate_qps: p.rate_qps * factor,
+                    })
+                    .collect(),
+                *seed,
+            ),
+        }
+    }
+
     // -- spec / JSON parsing --------------------------------------------
 
     /// Parse a CLI workload spec:
@@ -555,6 +612,38 @@ mod tests {
         let _ = std::fs::remove_file(&path);
         let e = Workload::parse("trace:/nonexistent/odin/w.json").unwrap_err();
         assert!(chain(&e).contains("workload file"), "{e:#}");
+    }
+
+    #[test]
+    fn mean_rate_and_scaled_rate_cover_every_process() {
+        let p = Workload::poisson(100.0, 1).unwrap();
+        assert_eq!(p.mean_rate(), Some(100.0));
+        let p2 = p.scaled_rate(0.5).unwrap();
+        assert_eq!(p2.mean_rate(), Some(50.0));
+        let t = Workload::trace(vec![0.1, 0.3]).unwrap();
+        assert!((t.mean_rate().unwrap() - 5.0).abs() < 1e-12);
+        let t2 = t.scaled_rate(2.0).unwrap();
+        assert!((t2.mean_rate().unwrap() - 10.0).abs() < 1e-12);
+        assert_eq!(t2.arrivals(2).unwrap(), vec![0.05, 0.2]);
+        let ph = Workload::phased(
+            vec![
+                RatePhase { queries: 100, rate_qps: 50.0 },
+                RatePhase { queries: 100, rate_qps: 200.0 },
+            ],
+            3,
+        )
+        .unwrap();
+        // 200 queries over 2 + 0.5 seconds = 80 qps
+        assert!((ph.mean_rate().unwrap() - 80.0).abs() < 1e-9);
+        let ph2 = ph.scaled_rate(2.0).unwrap();
+        assert!((ph2.mean_rate().unwrap() - 160.0).abs() < 1e-9);
+        // zero-gap traces have no finite rate; closed workloads have none
+        assert_eq!(Workload::trace(vec![0.0]).unwrap().mean_rate(), None);
+        let c = Workload::closed(2).unwrap();
+        assert_eq!(c.mean_rate(), None);
+        assert!(c.scaled_rate(2.0).is_err());
+        assert!(p.scaled_rate(0.0).is_err());
+        assert!(p.scaled_rate(f64::NAN).is_err());
     }
 
     #[test]

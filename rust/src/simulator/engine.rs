@@ -34,6 +34,7 @@ use crate::database::TimingDb;
 use crate::interference::dynamic::ScenarioAxis;
 use crate::interference::{EpScenarios, Schedule};
 use crate::pipeline::{stage_times_into, PipelineConfig};
+use crate::serving::tenant::{SloPush, SloQueue, TenantSet};
 use crate::serving::workload::{Workload, MAX_CLOSED_DEPTH};
 use crate::util::error::Result;
 use crate::util::ThreadPool;
@@ -571,6 +572,353 @@ pub fn simulate_policies_workload(
     }))
 }
 
+/// A multi-tenant simulation: the shared per-query record plus the
+/// tenant dimension. `result`'s per-completion vectors are indexed by
+/// completed query exactly like a single-tenant run; `tenant` and
+/// `blown` are parallel to them, and `dropped_tenant` is parallel to
+/// `result.dropped_at`. Conservation holds per tenant: every merged
+/// arrival either completes or is shed.
+#[derive(Clone, Debug)]
+pub struct MtSimResult {
+    pub result: SimResult,
+    /// Tenant of each completed query.
+    pub tenant: Vec<usize>,
+    /// True where the completion finished past its tenant's deadline.
+    pub blown: Vec<bool>,
+    /// Tenant of each shed arrival (parallel to `result.dropped_at`).
+    pub dropped_tenant: Vec<usize>,
+}
+
+/// Run `queries` merged arrivals from `tenants` through the pipeline,
+/// admission governed by the SLO-aware queue: earliest deadline first
+/// within the highest waiting priority class, deadline-blown entries
+/// shed from the queue (and preferentially evicted when an arrival finds
+/// it full) instead of only rejecting at enqueue. The queue is bounded
+/// by [`SimConfig::queue_cap`] (unbounded when `None`).
+///
+/// The online control loop (window-gated detection, serial rebalancing
+/// phases) runs exactly as in [`simulate_workload`]; rebalance events
+/// and window gating count on the completion axis. `axis` indexes the
+/// schedule by the admitted query's *arrival index* (queries axis) or by
+/// the virtual clock (wall-clock axis), so a shed arrival skips its
+/// schedule slot exactly as the live harness skips it.
+pub fn simulate_tenants(
+    db: &TimingDb,
+    schedule: &Schedule,
+    axis: ScenarioAxis,
+    cfg: &SimConfig,
+    tenants: &TenantSet,
+    queries: usize,
+) -> Result<MtSimResult> {
+    if axis == ScenarioAxis::Queries && queries != schedule.num_queries() {
+        bail!(
+            "query-axis schedule covers {} queries, asked to run {queries} \
+             (wall-clock scenarios decouple the two; query-axis ones pin \
+             them)",
+            schedule.num_queries()
+        );
+    }
+    if queries == 0 {
+        bail!("cannot simulate a 0-query run");
+    }
+    let arrivals = tenants.arrivals(queries)?;
+    let deadline_s = tenants.deadlines_s();
+    let class = tenants.classes();
+
+    let n = cfg.num_eps;
+    let clean = vec![0usize; n];
+    let (initial, clean_bottleneck) = optimal_config(db, &clean, n);
+    let peak_throughput = 1.0 / clean_bottleneck;
+
+    let mut controller =
+        OnlineController::new(cfg.policy.control(), cfg.detect_threshold);
+    let mut config = initial;
+    let mut times = Vec::with_capacity(n);
+    stage_times_into(&config, db, &clean, &mut times);
+    controller.bless(&times);
+    let clear: EpScenarios = vec![0usize; schedule.num_eps];
+
+    // the SLO-aware arrival queue; payload = arrival index (the tag
+    // doubles as the query-axis schedule slot)
+    let mut queue: SloQueue<()> =
+        SloQueue::new(cfg.queue_cap.unwrap_or(usize::MAX));
+    let mut next_arr = 0usize;
+
+    let mut stage_free = vec![0.0f64; n];
+    let mut completions: Vec<f64> = Vec::with_capacity(queries);
+    let mut clock = 0.0f64;
+
+    let mut latencies = Vec::with_capacity(queries);
+    let mut queued = Vec::with_capacity(queries);
+    let mut start_times = Vec::with_capacity(queries);
+    let mut stressed = Vec::with_capacity(queries);
+    let mut active_eps = Vec::with_capacity(queries);
+    let mut inst_throughput = Vec::with_capacity(queries);
+    let mut config_throughput = Vec::with_capacity(queries);
+    let mut serial: Vec<bool> = Vec::with_capacity(queries);
+    let mut rebalances = Vec::new();
+    let mut rebalance_time = 0.0f64;
+    let mut dropped_at: Vec<usize> = Vec::new();
+    let mut dropped_tenant: Vec<usize> = Vec::new();
+    let mut tenant_of: Vec<usize> = Vec::with_capacity(queries);
+    let mut blown: Vec<bool> = Vec::with_capacity(queries);
+    let mut last_sc: Vec<usize> = Vec::new();
+
+    loop {
+        if next_arr >= queries && queue.is_empty() {
+            break;
+        }
+        // --- admission instant estimate (the simulate_workload gate) --
+        let active = config.active_stages().max(1);
+        let gate = if completions.len() >= active {
+            completions[completions.len() - active]
+        } else {
+            0.0
+        };
+        let mut t_admit = clock.max(gate);
+        if queue.is_empty() && arrivals[next_arr].t > t_admit {
+            // pipeline idle: jump the virtual clock to the next arrival
+            t_admit = arrivals[next_arr].t;
+        }
+        // --- feed every arrival due by t_admit into the SLO queue -----
+        while next_arr < queries && arrivals[next_arr].t <= t_admit {
+            let a = arrivals[next_arr];
+            match queue.push(
+                (),
+                a.t,
+                Some(a.t + deadline_s[a.tenant]),
+                class[a.tenant],
+                a.tenant,
+                next_arr,
+                t_admit,
+            ) {
+                SloPush::Accepted => {}
+                SloPush::AcceptedEvicting(e) => {
+                    dropped_at.push(latencies.len());
+                    dropped_tenant.push(e.tenant);
+                }
+                SloPush::Shed => {
+                    dropped_at.push(latencies.len());
+                    dropped_tenant.push(a.tenant);
+                }
+            }
+            next_arr += 1;
+        }
+        // --- deadline-aware shedding: drop already-blown entries ------
+        for e in queue.shed_blown(t_admit) {
+            dropped_at.push(latencies.len());
+            dropped_tenant.push(e.tenant);
+        }
+        let Some(head) = queue.peek() else {
+            continue; // everything due was blown; re-enter to jump time
+        };
+        let (head_tag, head_arrival) = (head.tag, head.arrival);
+
+        let sc = state_at(schedule, &clear, axis, head_tag, t_admit);
+        if *sc != last_sc {
+            stage_times_into(&config, db, sc, &mut times);
+            last_sc.clone_from(sc);
+        }
+
+        // --- online-loop tick (same gating currency as the windows:
+        // completion counts) ------------------------------------------
+        if controller.is_active()
+            && cfg.window.is_none_or(|w| latencies.len() % w == 0)
+        {
+            if let Some(_trigger) = controller.observe(&times) {
+                let before = 1.0 / bottleneck(&times);
+                let result: RebalanceResult =
+                    controller.rebalance(&config, db, sc);
+                let remaining = (queries - next_arr) + queue.len();
+                let serial_queries = result.trials.min(remaining);
+                for _ in 0..serial_queries {
+                    let mut t_eval =
+                        stage_free.iter().copied().fold(clock, f64::max);
+                    // the drained pipeline may outwait the queue: feed
+                    // (or jump to) arrivals so each serial probe carries
+                    // a real query, exactly like the pipelined path
+                    if queue.is_empty() {
+                        if next_arr >= queries {
+                            break;
+                        }
+                        t_eval = t_eval.max(arrivals[next_arr].t);
+                    }
+                    while next_arr < queries && arrivals[next_arr].t <= t_eval
+                    {
+                        let a = arrivals[next_arr];
+                        match queue.push(
+                            (),
+                            a.t,
+                            Some(a.t + deadline_s[a.tenant]),
+                            class[a.tenant],
+                            a.tenant,
+                            next_arr,
+                            t_eval,
+                        ) {
+                            SloPush::Accepted => {}
+                            SloPush::AcceptedEvicting(e) => {
+                                dropped_at.push(latencies.len());
+                                dropped_tenant.push(e.tenant);
+                            }
+                            SloPush::Shed => {
+                                dropped_at.push(latencies.len());
+                                dropped_tenant.push(a.tenant);
+                            }
+                        }
+                        next_arr += 1;
+                    }
+                    let Some(e) = queue.pop() else { break };
+                    let sc_now =
+                        state_at(schedule, &clear, axis, e.tag, t_eval);
+                    stage_times_into(&config, db, sc_now, &mut times);
+                    let serial_latency: f64 = times.iter().sum();
+                    let start = stage_free
+                        .iter()
+                        .copied()
+                        .fold(clock, f64::max)
+                        .max(e.arrival);
+                    let finish = start + serial_latency;
+                    for f in stage_free.iter_mut() {
+                        *f = finish;
+                    }
+                    clock = finish;
+                    completions.push(finish);
+                    start_times.push(start);
+                    latencies.push(finish - e.arrival);
+                    queued.push(start - e.arrival);
+                    inst_throughput.push(1.0 / serial_latency);
+                    config_throughput.push(1.0 / bottleneck(&times));
+                    serial.push(true);
+                    let act = sc_now.iter().filter(|&&s| s != 0).count();
+                    stressed.push(act != 0);
+                    active_eps.push(act);
+                    tenant_of.push(e.tenant);
+                    blown.push(finish - e.arrival > deadline_s[e.tenant]);
+                    rebalance_time += serial_latency;
+                }
+                config = result.config;
+                stage_times_into(
+                    &config,
+                    db,
+                    state_at(
+                        schedule,
+                        &clear,
+                        axis,
+                        head_tag.min(queries - 1),
+                        clock,
+                    ),
+                    &mut times,
+                );
+                controller.bless(&times);
+                last_sc.clear();
+                rebalances.push(RebalanceEvent {
+                    query: latencies.len().min(queries - 1),
+                    trials: result.trials,
+                    throughput_before: before,
+                    throughput_after: result.throughput,
+                });
+                // the serial phase consumed queue entries; re-enter the
+                // loop to re-feed, re-shed and re-select the head
+                continue;
+            }
+        }
+
+        // --- pipelined processing of the selected entry ---------------
+        let e = queue.pop().expect("peeked entry still queued");
+        let admit = t_admit
+            .max(stage_free[0] - times[0])
+            .max(head_arrival)
+            .max(0.0);
+        let mut ready = admit;
+        for (i, &t) in times.iter().enumerate() {
+            if t == 0.0 {
+                continue;
+            }
+            let start = ready.max(stage_free[i]);
+            ready = start + t;
+            stage_free[i] = ready;
+        }
+        clock = admit;
+        completions.push(ready);
+        start_times.push(admit);
+        latencies.push(ready - e.arrival);
+        queued.push(admit - e.arrival);
+        inst_throughput.push(1.0 / bottleneck(&times));
+        config_throughput.push(1.0 / bottleneck(&times));
+        serial.push(false);
+        let act = sc.iter().filter(|&&s| s != 0).count();
+        stressed.push(act != 0);
+        active_eps.push(act);
+        tenant_of.push(e.tenant);
+        blown.push(ready - e.arrival > deadline_s[e.tenant]);
+    }
+
+    let total_time = completions.last().copied().unwrap_or(0.0);
+    Ok(MtSimResult {
+        result: SimResult {
+            latencies,
+            queued,
+            start_times,
+            stressed,
+            active_eps,
+            dropped_at,
+            offered: queries,
+            inst_throughput,
+            config_throughput,
+            serial,
+            rebalances,
+            rebalance_time,
+            total_time,
+            final_config: config,
+            peak_throughput,
+        },
+        tenant: tenant_of,
+        blown,
+        dropped_tenant,
+    })
+}
+
+/// [`simulate_tenants`] fanned over policies: every policy faces the
+/// identical schedule AND the identical merged arrival stream; results
+/// merge in input order, so downstream JSON is `--jobs`-invariant.
+pub fn simulate_tenants_policies(
+    db: &TimingDb,
+    schedule: &Schedule,
+    axis: ScenarioAxis,
+    cfgs: &[SimConfig],
+    tenants: &TenantSet,
+    queries: usize,
+    jobs: usize,
+) -> Result<Vec<MtSimResult>> {
+    let jobs = jobs.max(1).min(cfgs.len().max(1));
+    if jobs <= 1 {
+        return cfgs
+            .iter()
+            .map(|c| simulate_tenants(db, schedule, axis, c, tenants, queries))
+            .collect();
+    }
+    // surface shape errors (and tenant-set arrival errors) before the
+    // fan-out so the pooled runs cannot fail
+    if axis == ScenarioAxis::Queries && queries != schedule.num_queries() {
+        bail!(
+            "query-axis schedule covers {} queries, asked to run {queries}",
+            schedule.num_queries()
+        );
+    }
+    if queries == 0 {
+        bail!("cannot simulate a 0-query run");
+    }
+    tenants.arrivals(queries)?;
+    let db = Arc::new(db.clone());
+    let schedule = Arc::new(schedule.clone());
+    let tenants = tenants.clone();
+    let pool = ThreadPool::new(jobs);
+    Ok(pool.map(cfgs.to_vec(), move |c| {
+        simulate_tenants(&db, &schedule, axis, &c, &tenants, queries)
+            .expect("inputs validated before fan-out")
+    }))
+}
+
 /// Interference state lookup: by query index ([`ScenarioAxis::Queries`],
 /// the historical shim) or by the virtual clock in milliseconds
 /// ([`ScenarioAxis::Millis`]; one schedule slot = 1 ms, past-horizon
@@ -930,6 +1278,209 @@ mod tests {
             &SimConfig::new(4, Policy::Static),
             &w,
             400,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("covers 500"), "{e:#}");
+    }
+
+    fn two_tenants(
+        tight_ms: f64,
+        loose_ms: f64,
+        rate: f64,
+    ) -> crate::serving::tenant::TenantSet {
+        use crate::serving::tenant::{TenantSet, TenantSpec};
+        TenantSet::new(
+            "pair",
+            vec![
+                TenantSpec {
+                    id: "tight".into(),
+                    workload: crate::serving::Workload::poisson(rate, 5).unwrap(),
+                    deadline_ms: tight_ms,
+                    priority: 0,
+                    weight: 1.0,
+                },
+                TenantSpec {
+                    id: "loose".into(),
+                    workload: crate::serving::Workload::poisson(rate, 9).unwrap(),
+                    deadline_ms: loose_ms,
+                    priority: 1,
+                    weight: 1.0,
+                },
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn tenant_run_conserves_arrivals_per_tenant() {
+        let db = db();
+        let schedule = sched(50, 50, 800);
+        let cfg = SimConfig::new(4, Policy::Odin { alpha: 2 })
+            .with_window(100)
+            .with_queue_cap(16);
+        let probe = simulate(
+            &db,
+            &Schedule::none(4, 10),
+            &SimConfig::new(4, Policy::Static),
+        );
+        // 1.5x peak split across two tenants: contention without collapse
+        let ts = two_tenants(30.0, 5000.0, 0.75 * probe.peak_throughput);
+        let r = simulate_tenants(
+            &db,
+            &schedule,
+            ScenarioAxis::Queries,
+            &cfg,
+            &ts,
+            800,
+        )
+        .unwrap();
+        assert_eq!(r.result.offered, 800);
+        assert_eq!(
+            r.result.latencies.len() + r.result.dropped_at.len(),
+            800,
+            "every merged arrival must complete or be shed"
+        );
+        assert_eq!(r.tenant.len(), r.result.latencies.len());
+        assert_eq!(r.blown.len(), r.result.latencies.len());
+        assert_eq!(r.dropped_tenant.len(), r.result.dropped_at.len());
+        // per-tenant conservation against the merged stream
+        let arr = ts.arrivals(800).unwrap();
+        for k in 0..2 {
+            let offered = arr.iter().filter(|a| a.tenant == k).count();
+            let completed = r.tenant.iter().filter(|&&t| t == k).count();
+            let dropped =
+                r.dropped_tenant.iter().filter(|&&t| t == k).count();
+            assert_eq!(offered, completed + dropped, "tenant {k}");
+        }
+        for (&l, &q) in r.result.latencies.iter().zip(&r.result.queued) {
+            assert!(q >= 0.0 && l >= q, "latency {l} < queued {q}");
+        }
+    }
+
+    #[test]
+    fn tight_deadline_tenant_absorbs_the_violations() {
+        // under overload, the tight tenant's completions blow deadlines
+        // (or its arrivals shed) while a 100s-deadline tenant never does
+        let db = db();
+        let schedule = sched(100, 100, 1000);
+        let cfg = SimConfig::new(4, Policy::Static)
+            .with_window(100)
+            .with_queue_cap(32);
+        let probe = simulate(
+            &db,
+            &Schedule::none(4, 10),
+            &SimConfig::new(4, Policy::Static),
+        );
+        let ts = two_tenants(1.0, 100_000.0, 1.0 * probe.peak_throughput);
+        let r = simulate_tenants(
+            &db,
+            &schedule,
+            ScenarioAxis::Queries,
+            &cfg,
+            &ts,
+            1000,
+        )
+        .unwrap();
+        let tight_bad = r
+            .tenant
+            .iter()
+            .zip(&r.blown)
+            .filter(|(&t, &b)| t == 0 && b)
+            .count()
+            + r.dropped_tenant.iter().filter(|&&t| t == 0).count();
+        let loose_blown = r
+            .tenant
+            .iter()
+            .zip(&r.blown)
+            .filter(|(&t, &b)| t == 1 && b)
+            .count();
+        assert!(tight_bad > 0, "1ms deadline under 2x load never suffered");
+        assert_eq!(loose_blown, 0, "100s deadline blown");
+    }
+
+    #[test]
+    fn priority_zero_preempts_the_queue() {
+        // saturate the queue with both tenants; the high-priority tenant
+        // must see strictly less queueing than the low-priority one
+        let db = db();
+        let schedule = Schedule::none(4, 600);
+        let cfg = SimConfig::new(4, Policy::Static).with_queue_cap(64);
+        let probe = simulate(
+            &db,
+            &Schedule::none(4, 10),
+            &SimConfig::new(4, Policy::Static),
+        );
+        let ts = two_tenants(60_000.0, 60_000.0, 1.0 * probe.peak_throughput);
+        let r = simulate_tenants(
+            &db,
+            &schedule,
+            ScenarioAxis::Queries,
+            &cfg,
+            &ts,
+            600,
+        )
+        .unwrap();
+        let mean_q = |k: usize| {
+            let (s, c) = r
+                .tenant
+                .iter()
+                .zip(&r.result.queued)
+                .filter(|(&t, _)| t == k)
+                .fold((0.0, 0usize), |(s, c), (_, &q)| (s + q, c + 1));
+            s / c.max(1) as f64
+        };
+        assert!(
+            mean_q(0) < mean_q(1),
+            "priority 0 queued {} >= priority 1 queued {}",
+            mean_q(0),
+            mean_q(1)
+        );
+    }
+
+    #[test]
+    fn tenant_policies_fanout_is_jobs_invariant() {
+        let db = db();
+        let schedule = sched(50, 50, 500);
+        let cfgs: Vec<SimConfig> = [Policy::Odin { alpha: 2 }, Policy::Lls]
+            .into_iter()
+            .map(|p| SimConfig::new(4, p).with_window(100).with_queue_cap(32))
+            .collect();
+        let ts = two_tenants(50.0, 500.0, 30.0);
+        let serial = simulate_tenants_policies(
+            &db,
+            &schedule,
+            ScenarioAxis::Queries,
+            &cfgs,
+            &ts,
+            500,
+            1,
+        )
+        .unwrap();
+        let parallel = simulate_tenants_policies(
+            &db,
+            &schedule,
+            ScenarioAxis::Queries,
+            &cfgs,
+            &ts,
+            500,
+            2,
+        )
+        .unwrap();
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.result.latencies, b.result.latencies);
+            assert_eq!(a.tenant, b.tenant);
+            assert_eq!(a.blown, b.blown);
+            assert_eq!(a.dropped_tenant, b.dropped_tenant);
+        }
+        // shape errors surface before the fan-out
+        let e = simulate_tenants_policies(
+            &db,
+            &schedule,
+            ScenarioAxis::Queries,
+            &cfgs,
+            &ts,
+            400,
+            2,
         )
         .unwrap_err();
         assert!(format!("{e:#}").contains("covers 500"), "{e:#}");

@@ -13,11 +13,13 @@ pub mod window;
 
 pub use engine::{
     simulate, simulate_many, simulate_policies, simulate_policies_workload,
-    simulate_workload, Policy, RebalanceEvent, SimConfig, SimResult,
+    simulate_tenants, simulate_tenants_policies, simulate_workload,
+    MtSimResult, Policy, RebalanceEvent, SimConfig, SimResult,
 };
 pub use metrics::SimSummary;
 pub use slo::{slo_violations, SloReport};
 pub use window::{
-    dropped_in_window, window_metrics, windows_json, WindowMetrics,
+    attach_tenant_windows, dropped_in_window, tenant_rows_json,
+    window_metrics, windows_json, TenantWindow, WindowMetrics,
     DEFAULT_WINDOW,
 };

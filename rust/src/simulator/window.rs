@@ -48,6 +48,91 @@ pub struct WindowMetrics {
     pub slo_violations: usize,
     /// Fraction of (query, EP) slots under interference in the window.
     pub interference_load: f64,
+    /// Per-tenant rows of a multi-tenant run (one per tenant of the set,
+    /// zeros included). Empty — and absent from the JSON row, keeping
+    /// single-tenant artifacts byte-identical — for single-tenant runs.
+    pub tenants: Vec<TenantWindow>,
+}
+
+/// Per-window accounting of one tenant (SCHEMA BUMP: the `tenants` array
+/// of multi-tenant window rows). `offered` counts on the completion axis
+/// (completed + dropped attributed to the window), so window totals sum
+/// to the run totals.
+#[derive(Clone, Debug)]
+pub struct TenantWindow {
+    pub id: String,
+    pub offered: usize,
+    pub completed: usize,
+    pub dropped: usize,
+    /// Completions that finished past the tenant's SLO deadline.
+    pub slo_violations: usize,
+    /// Mean queueing delay of the tenant's completions in the window, ns.
+    pub queued_ns: f64,
+    /// Mean service time of the tenant's completions in the window, ns.
+    pub service_ns: f64,
+}
+
+/// Attach per-tenant rows to already-computed windows. The per-completion
+/// vectors (`tenant`, `blown`, `queued`, `latencies`) are parallel to the
+/// run's completions; `dropped_at`/`dropped_tenant` label each shed
+/// arrival with its completion-axis position and tenant. ONE
+/// implementation shared by the simulator and the live harness, so the
+/// two emitters of the per-tenant window schema cannot drift.
+#[allow(clippy::too_many_arguments)]
+pub fn attach_tenant_windows(
+    windows: &mut [WindowMetrics],
+    ids: &[String],
+    tenant: &[usize],
+    blown: &[bool],
+    queued: &[f64],
+    latencies: &[f64],
+    dropped_at: &[usize],
+    dropped_tenant: &[usize],
+) {
+    assert_eq!(tenant.len(), blown.len());
+    assert_eq!(dropped_at.len(), dropped_tenant.len());
+    let n = tenant.len();
+    // per-tenant drop positions, so each tenant's window attribution is
+    // literally dropped_in_window — the one shared clamping rule — and
+    // the sum over tenants always equals the window's aggregate count
+    let mut drops_of: Vec<Vec<usize>> = vec![Vec::new(); ids.len()];
+    for (&at, &t) in dropped_at.iter().zip(dropped_tenant) {
+        drops_of[t].push(at);
+    }
+    for w in windows.iter_mut() {
+        w.tenants = ids
+            .iter()
+            .enumerate()
+            .map(|(k, id)| {
+                let mut completed = 0usize;
+                let mut slo_violations = 0usize;
+                let mut q_sum = 0.0f64;
+                let mut l_sum = 0.0f64;
+                for i in w.start..w.end.min(n) {
+                    if tenant[i] != k {
+                        continue;
+                    }
+                    completed += 1;
+                    if blown[i] {
+                        slo_violations += 1;
+                    }
+                    q_sum += queued[i];
+                    l_sum += latencies[i];
+                }
+                let dropped = dropped_in_window(&drops_of[k], n, w.start, w.end);
+                let denom = completed.max(1) as f64;
+                TenantWindow {
+                    id: id.clone(),
+                    offered: completed + dropped,
+                    completed,
+                    dropped,
+                    slo_violations,
+                    queued_ns: q_sum / denom * 1e9,
+                    service_ns: (l_sum - q_sum) / denom * 1e9,
+                }
+            })
+            .collect();
+    }
 }
 
 /// Chop `r` into `window`-query chunks (the last may be short). `level`
@@ -114,6 +199,7 @@ pub fn window_metrics(
             rebalances,
             slo_violations,
             interference_load,
+            tenants: Vec::new(),
         });
         start = end;
     }
@@ -142,12 +228,15 @@ pub fn dropped_in_window(
 
 /// Deterministic JSON array of per-window rows (stable key order via the
 /// BTreeMap-backed emitter — byte-identical across `--jobs` values).
+/// Multi-tenant rows additionally carry a `tenants` array (the schema
+/// bump); single-tenant rows omit the key entirely so every pre-existing
+/// artifact stays byte-identical.
 pub fn windows_json(windows: &[WindowMetrics]) -> Value {
     Value::arr(
         windows
             .iter()
             .map(|w| {
-                Value::obj(vec![
+                let mut row = vec![
                     ("window", Value::from(w.index)),
                     ("start", Value::from(w.start)),
                     ("end", Value::from(w.end)),
@@ -162,6 +251,30 @@ pub fn windows_json(windows: &[WindowMetrics]) -> Value {
                     ("rebalances", Value::from(w.rebalances)),
                     ("slo_violations", Value::from(w.slo_violations)),
                     ("interference_load", Value::from(w.interference_load)),
+                ];
+                if !w.tenants.is_empty() {
+                    row.push(("tenants", tenant_rows_json(&w.tenants)));
+                }
+                Value::obj(row)
+            })
+            .collect(),
+    )
+}
+
+/// JSON rows of one window's `tenants` array (tenant order preserved).
+pub fn tenant_rows_json(tenants: &[TenantWindow]) -> Value {
+    Value::arr(
+        tenants
+            .iter()
+            .map(|t| {
+                Value::obj(vec![
+                    ("completed", Value::from(t.completed)),
+                    ("dropped", Value::from(t.dropped)),
+                    ("id", Value::from(t.id.clone())),
+                    ("offered", Value::from(t.offered)),
+                    ("queued_ns", Value::from(t.queued_ns)),
+                    ("service_ns", Value::from(t.service_ns)),
+                    ("slo_violations", Value::from(t.slo_violations)),
                 ])
             })
             .collect(),
@@ -247,6 +360,59 @@ mod tests {
         let svc = arr[0].get("service_ns").as_f64().unwrap();
         assert!((svc / 1e9 - lat).abs() < 1e-12 * lat.max(1.0));
         assert_eq!(arr[0].keys().len(), 14);
+    }
+
+    #[test]
+    fn attach_tenant_windows_partitions_and_conserves() {
+        let (r, schedule) = run(Policy::Static);
+        let mut ws = window_metrics(&r, &schedule, 500, 0.7);
+        let n = r.latencies.len();
+        let ids = vec!["a".to_string(), "b".to_string()];
+        // alternate tenants; tenant 1 blows every deadline
+        let tenant: Vec<usize> = (0..n).map(|i| i % 2).collect();
+        let blown: Vec<bool> = tenant.iter().map(|&t| t == 1).collect();
+        let dropped_at = vec![0usize, 600, n + 50];
+        let dropped_tenant = vec![0usize, 1, 1];
+        attach_tenant_windows(
+            &mut ws,
+            &ids,
+            &tenant,
+            &blown,
+            &r.queued,
+            &r.latencies,
+            &dropped_at,
+            &dropped_tenant,
+        );
+        for w in &ws {
+            assert_eq!(w.tenants.len(), 2);
+            let span = w.end - w.start;
+            assert_eq!(
+                w.tenants[0].completed + w.tenants[1].completed,
+                span
+            );
+            assert_eq!(w.tenants[0].slo_violations, 0);
+            assert_eq!(w.tenants[1].slo_violations, w.tenants[1].completed);
+            for t in &w.tenants {
+                assert_eq!(t.offered, t.completed + t.dropped);
+                assert!(t.queued_ns >= 0.0 && t.service_ns >= 0.0);
+            }
+        }
+        // drops: window 0 gets tenant a's, window 1 gets tenant b's, the
+        // past-the-end one clamps into the final window
+        assert_eq!(ws[0].tenants[0].dropped, 1);
+        assert_eq!(ws[1].tenants[1].dropped, 1);
+        assert_eq!(ws.last().unwrap().tenants[1].dropped, 1);
+        let total: usize = ws
+            .iter()
+            .flat_map(|w| w.tenants.iter().map(|t| t.dropped))
+            .sum();
+        assert_eq!(total, dropped_at.len());
+        // the JSON row gains the tenants key only when rows exist
+        let v = windows_json(&ws);
+        assert_eq!(v.idx(0).keys().len(), 15);
+        let row = v.idx(0).get("tenants").idx(0);
+        assert_eq!(row.keys().len(), 7);
+        assert_eq!(row.get("id").as_str(), Some("a"));
     }
 
     #[test]

@@ -16,9 +16,11 @@
 use std::path::{Path, PathBuf};
 
 use odin::experiments::dynamic::{DYN_POLICIES, DYN_WINDOW};
+use odin::experiments::multitenant::{MT_POLICIES, MT_RATE_FRACS, MT_SCENARIOS, MT_SETS};
 use odin::experiments::{run_grid, ExpCtx};
 use odin::interference::dynamic::{builtin, BUILTIN_NAMES};
 use odin::json::{to_string_pretty, Value};
+use odin::serving::tenant;
 
 fn tmp(name: &str) -> PathBuf {
     std::env::temp_dir().join(format!("odin_golden_{}_{name}", std::process::id()))
@@ -90,6 +92,105 @@ fn dynamic_skeleton_matches_committed_golden() {
         include_str!("golden/dynamic_skeleton.json"),
         "dynamic skeleton drifted from tests/golden/dynamic_skeleton.json"
     );
+}
+
+#[test]
+fn multitenant_skeleton_matches_committed_golden() {
+    // the multi-tenant sweep's contract with downstream plotting: set
+    // catalogue, policy labels, rate grid and tenant ids (ints/strings
+    // only — byte-exact across platforms and float quirks)
+    let items: Vec<Value> = MT_SETS
+        .iter()
+        .map(|set| {
+            let ts = tenant::builtin(set).unwrap();
+            Value::obj(vec![
+                ("name", Value::from(*set)),
+                (
+                    "policies",
+                    Value::arr(
+                        MT_POLICIES
+                            .iter()
+                            .map(|p| Value::from(p.label()))
+                            .collect(),
+                    ),
+                ),
+                (
+                    "rates",
+                    Value::arr(
+                        MT_RATE_FRACS
+                            .iter()
+                            .map(|f| Value::from(format!("{f}")))
+                            .collect(),
+                    ),
+                ),
+                (
+                    "scenarios",
+                    Value::arr(
+                        MT_SCENARIOS.iter().map(|s| Value::from(*s)).collect(),
+                    ),
+                ),
+                (
+                    "tenants",
+                    Value::arr(
+                        ts.tenants
+                            .iter()
+                            .map(|t| Value::from(t.id.clone()))
+                            .collect(),
+                    ),
+                ),
+            ])
+        })
+        .collect();
+    let got = to_string_pretty(&Value::arr(items));
+    assert_eq!(
+        got,
+        include_str!("golden/multitenant_skeleton.json"),
+        "multitenant skeleton drifted from tests/golden/multitenant_skeleton.json"
+    );
+}
+
+#[test]
+fn multitenant_json_file_is_jobs_invariant() {
+    let d1 = tmp("mt_j1");
+    let d4 = tmp("mt_j4");
+    odin::experiments::run("multitenant", &ctx_into(&d1, 400, 1)).unwrap();
+    odin::experiments::run("multitenant", &ctx_into(&d4, 400, 4)).unwrap();
+    let a = std::fs::read(d1.join("multitenant.json")).unwrap();
+    let b = std::fs::read(d4.join("multitenant.json")).unwrap();
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "multitenant.json differs between --jobs 1 and --jobs 4");
+    let at = std::fs::read(d1.join("multitenant.txt")).unwrap();
+    let bt = std::fs::read(d4.join("multitenant.txt")).unwrap();
+    assert_eq!(at, bt, "multitenant.txt differs between --jobs 1 and --jobs 4");
+    // the emitted document parses and covers every set × scenario × rate
+    // × policy cell, each with a full per-tenant ledger
+    let doc = odin::json::parse(std::str::from_utf8(&a).unwrap()).unwrap();
+    let sets = doc.get("sets").as_arr().unwrap();
+    assert_eq!(sets.len(), MT_SETS.len());
+    for (s, name) in sets.iter().zip(MT_SETS) {
+        assert_eq!(s.get("name").as_str(), Some(name));
+        let n_tenants = s.get("tenants").as_arr().unwrap().len();
+        let scenarios = s.get("scenarios").as_arr().unwrap();
+        assert_eq!(scenarios.len(), MT_SCENARIOS.len());
+        for sc in scenarios {
+            let rates = sc.get("rates").as_arr().unwrap();
+            assert_eq!(rates.len(), MT_RATE_FRACS.len());
+            for r in rates {
+                let cells = r.get("cells").as_arr().unwrap();
+                assert_eq!(cells.len(), MT_POLICIES.len());
+                for c in cells {
+                    let tenants = c.get("tenants").as_arr().unwrap();
+                    assert_eq!(tenants.len(), n_tenants);
+                    let offered = c.get("offered").as_usize().unwrap();
+                    let done = c.get("completed").as_usize().unwrap();
+                    let dropped = c.get("dropped").as_usize().unwrap();
+                    assert_eq!(offered, done + dropped, "conservation");
+                }
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&d1);
+    let _ = std::fs::remove_dir_all(&d4);
 }
 
 #[test]

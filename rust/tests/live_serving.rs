@@ -212,6 +212,139 @@ fn open_workload_live_run_queues_and_completes() {
 }
 
 #[test]
+fn two_tenant_live_run_splits_slo_pain_and_matches_sim_schema() {
+    let _g = lock();
+    // the acceptance bar: a tight + loose deadline pair through the live
+    // SLO-aware queue under burst's cpu-stressor eras. The 2ms tight
+    // deadline sits just above the quiet ~1.5ms service time, so an
+    // 8-thread stressor timesharing the stage cores (well beyond 30%
+    // inflation on any host) — or the queue backlog it causes — blows
+    // it; the loose tenant's 60s deadline never blows and its
+    // completions are conserved.
+    let queries = 200;
+    let (mut server, driver, inputs) = rig(queries, 2, 1.5);
+    let tenants = odin::serving::TenantSet::new(
+        "pair",
+        vec![
+            odin::serving::TenantSpec {
+                id: "tight".into(),
+                workload: odin::serving::Workload::trace(vec![0.005]).unwrap(),
+                deadline_ms: 2.0,
+                priority: 0,
+                weight: 1.0,
+            },
+            odin::serving::TenantSpec {
+                id: "loose".into(),
+                workload: odin::serving::Workload::trace(vec![0.009]).unwrap(),
+                deadline_ms: 60_000.0,
+                priority: 1,
+                weight: 1.0,
+            },
+        ],
+    )
+    .unwrap();
+    let run = driver.run_tenants(&mut server, inputs, &tenants).unwrap();
+
+    // (a) conservation: overall and per tenant, against the merged stream
+    assert_eq!(run.offered, queries);
+    assert_eq!(run.completions.len() + run.dropped, queries);
+    let arr = tenants.arrivals(queries).unwrap();
+    let tight = &run.tenant_totals[0];
+    let loose = &run.tenant_totals[1];
+    for (k, t) in [tight, loose].into_iter().enumerate() {
+        let offered = arr.iter().filter(|a| a.tenant == k).count();
+        assert_eq!(t.offered, offered, "tenant {k} offered drifted");
+        assert_eq!(t.offered, t.completed + t.dropped, "tenant {k}");
+    }
+
+    // (b) the stressor eras ran, and the SLO pain lands on the tight
+    // tenant: violations/drops rise there while the loose tenant keeps
+    // a clean SLO ledger and completes everything it wasn't shed
+    assert!(run.stressed.iter().any(|&s| s), "no stressed admissions");
+    assert!(run.stressor_work > 0);
+    assert!(
+        tight.slo_violations + tight.dropped > 0,
+        "tight tenant sailed through burst unscathed"
+    );
+    assert_eq!(loose.slo_violations, 0, "60s deadline blown");
+    assert!(
+        tight.slo_violations + tight.dropped
+            > loose.slo_violations + loose.dropped,
+        "pain not concentrated on the tight tenant: tight {}+{} vs \
+         loose {}+{}",
+        tight.slo_violations,
+        tight.dropped,
+        loose.slo_violations,
+        loose.dropped,
+    );
+
+    // (c) window rows carry the per-tenant schema, conserved across the
+    // run and byte-compatible with the simulator's tenant engine
+    let windows_completed: usize = run
+        .windows
+        .iter()
+        .flat_map(|w| w.tenants.iter().map(|t| t.completed))
+        .sum();
+    assert_eq!(windows_completed, run.completions.len());
+    let windows_dropped: usize = run
+        .windows
+        .iter()
+        .flat_map(|w| w.tenants.iter().map(|t| t.dropped))
+        .sum();
+    assert_eq!(windows_dropped, run.dropped);
+
+    // the live document's window key set — including the tenants rows
+    // and the totals — must equal the simulator document's exactly
+    let live_doc = live_json(&driver, &run, "vgg16", 2);
+    let db = synthesize(&models::build("vgg16", 8).unwrap(), 7);
+    let (schedule, results) =
+        odin::experiments::multitenant::run_tenant_scenario(
+            &db,
+            driver.scenario(),
+            &tenants,
+            &[Policy::Odin { alpha: 2 }],
+            256,
+            queries,
+            1,
+        )
+        .unwrap();
+    let sim_doc = odin::experiments::multitenant::mt_scenario_json(
+        driver.scenario(),
+        &schedule,
+        &tenants,
+        &[Policy::Odin { alpha: 2 }],
+        &results,
+    );
+    let sim_row = sim_doc.get("policies").idx(0).get("windows").idx(0);
+    let live_row = live_doc.get("windows").idx(0);
+    assert_eq!(
+        live_row.keys(),
+        sim_row.keys(),
+        "live vs sim window schema drifted"
+    );
+    assert_eq!(
+        live_row.get("tenants").idx(0).keys(),
+        sim_row.get("tenants").idx(0).keys(),
+        "live vs sim per-tenant window schema drifted"
+    );
+    assert_eq!(
+        live_doc.get("tenants").idx(0).keys(),
+        sim_doc
+            .get("policies")
+            .idx(0)
+            .get("tenants")
+            .idx(0)
+            .keys(),
+        "live vs sim per-tenant totals schema drifted"
+    );
+    // completion order under EDF is admission order (the pipeline is
+    // FIFO past admission), and ids are dense
+    for (i, c) in run.completions.iter().enumerate() {
+        assert_eq!(c.id, i, "pipeline reordered completions");
+    }
+}
+
+#[test]
 fn drop_leaks_no_stressor_or_worker_threads() {
     let _g = lock();
     let Some(before) = odin_threads() else {
