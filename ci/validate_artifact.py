@@ -1,0 +1,197 @@
+#!/usr/bin/env python3
+"""Shared CI validator for odin JSON artifacts.
+
+One script replaces the per-step inline validators that used to live in
+ci.yml: every smoke step runs
+
+    validate_artifact.py FILE KIND [key=value ...]
+
+and the KIND selects the expected key set plus the conservation rules.
+
+kinds
+  live-closed   live_<scenario>.json from a closed-loop `odin serve`
+  live-open     live_<scenario>.json from an open --workload replay
+  live-batch    live-open plus the batch former engaged (--batch)
+  live-tenants  live_<scenario>.json from `odin serve --tenants`
+  batching      the `odin experiment batching` sweep artifact
+
+expectations (key=value args, all optional unless noted)
+  name=N             doc["name"] must equal N
+  queries=N          doc["queries"] must equal N (live-closed)
+  offered=N          doc["offered"] == N and queries + dropped == N
+                     (required for the open/tenant kinds)
+  workload=W         doc["workload"] must equal W
+  workload_prefix=P  doc["workload"] must start with P
+  tenants=a,b        tenant ids, in order (live-tenants)
+"""
+
+import json
+import sys
+
+# The re-pinned per-window row schema shared byte-for-byte by the
+# simulator (`scenario_*.json`) and the live harness (`live_*.json`).
+# PR 6 bumped it 14 -> 16 keys: `batches` / `mean_batch`.
+WINDOW_KEYS = {
+    "window", "start", "end", "lat_mean", "lat_max",
+    "queued_ns", "service_ns", "dropped",
+    "tput_mean", "wall_tput", "serial_queries", "rebalances",
+    "slo_violations", "interference_load", "batches", "mean_batch",
+}
+
+# Per-window per-tenant ledger row (unchanged by the batching PR: the
+# multi-tenant path never batches).
+TENANT_ROW_KEYS = {
+    "completed", "dropped", "id", "offered",
+    "queued_ns", "service_ns", "slo_violations",
+}
+
+# Whole-run per-tenant totals.
+TENANT_TOTAL_KEYS = {
+    "completed", "deadline_ms", "dropped", "id", "offered", "priority",
+    "queued_ns", "service_ns", "share", "slo_violations", "weight",
+    "weight_share", "workload",
+}
+
+# One (scenario, rate, batch-policy) cell of batching.json.
+BATCH_CELL_KEYS = {
+    "batch", "batches", "deadline_s", "dropped", "lat_mean", "lat_p50",
+    "lat_p99", "mean_batch", "offered", "queued_mean", "rate_frac",
+    "rate_qps", "served", "tput_achieved", "win_p99_ok_frac", "windows",
+}
+
+MAX_BATCH = 8
+
+
+def fail(msg):
+    sys.exit(f"validate_artifact: FAIL: {msg}")
+
+
+def check_keys(obj, want, what):
+    got = set(obj)
+    if got != want:
+        missing = sorted(want - got)
+        extra = sorted(got - want)
+        fail(f"{what} schema drift: missing={missing} extra={extra}")
+
+
+def check_windows(rows, closed=False, tenants=False):
+    if not rows:
+        fail("no windows emitted")
+    want = WINDOW_KEYS | ({"tenants"} if tenants else set())
+    for row in rows:
+        check_keys(row, want, "window row")
+        if closed and row["queued_ns"] != 0.0:
+            fail("closed loop must not queue")
+        if row["queued_ns"] < 0.0 or row["service_ns"] <= 0.0:
+            fail(f"bad queued/service split in window {row['window']}")
+        if not 1.0 <= row["mean_batch"] <= float(MAX_BATCH):
+            fail(f"mean_batch {row['mean_batch']} out of [1, {MAX_BATCH}]")
+        if row["batches"] > row["end"] - row["start"]:
+            fail("more traversals than queries in a window")
+
+
+def check_live(doc, expect, kind):
+    if "name" in expect and doc["name"] != expect["name"]:
+        fail(f"name {doc['name']!r} != {expect['name']!r}")
+    if "workload" in expect and doc["workload"] != expect["workload"]:
+        fail(f"workload {doc['workload']!r} != {expect['workload']!r}")
+    if "workload_prefix" in expect and not doc["workload"].startswith(
+        expect["workload_prefix"]
+    ):
+        fail(f"workload {doc['workload']!r} !~ {expect['workload_prefix']!r}")
+    if kind == "live-closed":
+        if "queries" in expect and doc["queries"] != int(expect["queries"]):
+            fail(f"queries {doc['queries']} != {expect['queries']}")
+        if doc["dropped"] != 0:
+            fail("closed loop must not shed")
+        check_windows(doc["windows"], closed=True)
+        return
+    # open kinds conserve every arrival: offered = completed + shed
+    offered = int(expect["offered"])
+    if doc["offered"] != offered:
+        fail(f"offered {doc['offered']} != {offered}")
+    if doc["queries"] + doc["dropped"] != offered:
+        fail(
+            f"conservation: {doc['queries']} completed + "
+            f"{doc['dropped']} dropped != {offered} offered"
+        )
+    if kind == "live-tenants":
+        totals = doc["tenants"]
+        ids = [t["id"] for t in totals]
+        if "tenants" in expect and ids != expect["tenants"].split(","):
+            fail(f"tenant ids {ids} != {expect['tenants']}")
+        for t in totals:
+            check_keys(t, TENANT_TOTAL_KEYS, "tenant totals")
+            if t["offered"] != t["completed"] + t["dropped"]:
+                fail(f"tenant {t['id']} does not conserve arrivals")
+        if sum(t["offered"] for t in totals) != offered:
+            fail("per-tenant offered does not sum to the run's offered")
+        check_windows(doc["windows"], tenants=True)
+        for row in doc["windows"]:
+            if [t["id"] for t in row["tenants"]] != ids:
+                fail(f"window {row['window']} tenant order != totals")
+            for t in row["tenants"]:
+                check_keys(t, TENANT_ROW_KEYS, "tenant window row")
+                if t["offered"] != t["completed"] + t["dropped"]:
+                    fail(f"window tenant {t['id']} does not conserve")
+        return
+    check_windows(doc["windows"])
+    if kind == "live-batch" and doc["queries"] == 0:
+        fail("batched run completed nothing")
+
+
+def check_batching(doc):
+    check_keys(
+        doc,
+        {"model", "policy", "queue_cap", "scenarios", "slack_factor"},
+        "batching doc",
+    )
+    if not doc["scenarios"]:
+        fail("no scenarios in batching.json")
+    for sc in doc["scenarios"]:
+        check_keys(
+            sc,
+            {"deadline_s", "name", "peak_qps", "queries", "rates"},
+            "batching scenario",
+        )
+        for rate in sc["rates"]:
+            check_keys(
+                rate,
+                {"cells", "rate_frac", "rate_qps", "workload"},
+                "batching rate row",
+            )
+            specs = [c["batch"] for c in rate["cells"]]
+            if specs != ["off", "fixed:4", "deadline"]:
+                fail(f"cell policy order {specs}")
+            for cell in rate["cells"]:
+                check_keys(cell, BATCH_CELL_KEYS, "batching cell")
+                if cell["served"] + cell["dropped"] != cell["offered"]:
+                    fail(
+                        f"{sc['name']}@{cell['rate_frac']}x "
+                        f"{cell['batch']} does not conserve arrivals"
+                    )
+                if cell["batch"] == "off" and cell["mean_batch"] != 1.0:
+                    fail("batch:off must run one query per traversal")
+                check_windows(cell["windows"])
+
+
+def main():
+    if len(sys.argv) < 3:
+        fail(f"usage: {sys.argv[0]} FILE KIND [key=value ...]")
+    path, kind = sys.argv[1], sys.argv[2]
+    expect = dict(a.split("=", 1) for a in sys.argv[3:])
+    with open(path) as f:
+        doc = json.load(f)
+    if kind in ("live-closed", "live-open", "live-batch", "live-tenants"):
+        check_live(doc, expect, kind)
+        n = len(doc["windows"])
+    elif kind == "batching":
+        check_batching(doc)
+        n = sum(len(r["cells"]) for s in doc["scenarios"] for r in s["rates"])
+    else:
+        fail(f"unknown kind {kind!r}")
+    print(f"validate_artifact OK: {path} [{kind}] ({n} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+//! Batch-former micro-benchmarks: the per-admission `plan` cost (it sits
+//! on the hot admission path of both worlds), the batched cost model,
+//! and a full batched-vs-off simulated scenario so the throughput the
+//! deadline former buys back past saturation is visible in bench output.
+
+use odin::database::synth::synthesize;
+use odin::interference::dynamic::builtin;
+use odin::models;
+use odin::pipeline::{batched_serial_latency, batched_throughput};
+use odin::serving::{BatchFormer, BatchPolicy, Workload, MAX_BATCH};
+use odin::simulator::{simulate_policies_workload, Policy, SimConfig};
+use odin::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("micro_batch");
+
+    // the former itself: one plan() per admission opportunity
+    let former = BatchFormer::new(BatchPolicy::Deadline);
+    b.run("plan_deadline_1k", || {
+        for i in 0..1000usize {
+            let h = 0.01 * (i % 32) as f64;
+            black_box(former.plan(1 + i % 16, Some(h), Some(0.004)));
+        }
+    });
+
+    // the sublinear cost model across every admissible batch size
+    let stages = [0.002f64, 0.0035, 0.0015, 0.003];
+    b.run("batched_cost_model_1k", || {
+        for _ in 0..1000usize {
+            for n in 1..=MAX_BATCH {
+                black_box(batched_serial_latency(&stages, n));
+                black_box(batched_throughput(&stages, n));
+            }
+        }
+    });
+
+    // end to end: the burst scenario past saturation, off vs deadline
+    let db = synthesize(&models::vgg16(64), 42);
+    let scenario = builtin("burst").unwrap().scaled(400).unwrap();
+    let schedule = scenario.compile();
+    let workload = Workload::poisson(400.0, 42).unwrap();
+    for policy in [BatchPolicy::Off, BatchPolicy::Deadline] {
+        let cfgs = vec![SimConfig::new(scenario.num_eps, Policy::Static)
+            .with_window(50)
+            .with_queue_cap(64)
+            .with_batch(policy)];
+        b.run(&format!("sim_burst_400q_{}", policy.spec()), || {
+            black_box(
+                simulate_policies_workload(
+                    &db,
+                    &schedule,
+                    scenario.axis,
+                    &cfgs,
+                    &workload,
+                    400,
+                    1,
+                )
+                .unwrap(),
+            );
+        });
+        let r = &simulate_policies_workload(
+            &db,
+            &schedule,
+            scenario.axis,
+            &cfgs,
+            &workload,
+            400,
+            1,
+        )
+        .unwrap()[0];
+        b.report_metric(
+            &format!("tput_{}", policy.spec()),
+            "q_per_s",
+            r.achieved_throughput(),
+        );
+    }
+    b.finish();
+}

@@ -22,8 +22,10 @@
 //! | dynamic | time-phased scenarios under the online loop (extension)|
 //! | openloop| Poisson offered load: queueing, drops, SLO (extension)|
 //! | multitenant | per-tenant SLOs under the EDF queue (extension)   |
+//! | batching| deadline-aware batch forming vs offered load (extension)|
 
 mod ablation;
+pub mod batching;
 pub mod dynamic;
 mod fig1;
 mod fig10;
@@ -91,10 +93,10 @@ impl Output {
     }
 }
 
-pub const ALL_IDS: [&str; 15] = [
+pub const ALL_IDS: [&str; 16] = [
     "table1", "fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
     "fig9", "fig10", "summary", "ablation", "dynamic", "openloop",
-    "multitenant",
+    "multitenant", "batching",
 ];
 
 /// Run one experiment (or `all`).
@@ -104,6 +106,7 @@ pub fn run(id: &str, ctx: &ExpCtx) -> Result<()> {
         "dynamic" => dynamic::run(ctx),
         "openloop" => openloop::run(ctx),
         "multitenant" => multitenant::run(ctx),
+        "batching" => batching::run(ctx),
         "fig1" => fig1::run(ctx),
         "fig3" => fig3::run(ctx),
         "fig4" => fig4::run(ctx),

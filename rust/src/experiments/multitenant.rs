@@ -326,7 +326,7 @@ mod tests {
             assert_eq!(p.get("tenants").as_arr().unwrap().len(), 2);
             assert_eq!(p.get("tenants").idx(0).keys().len(), 13);
             for row in p.get("windows").as_arr().unwrap() {
-                assert_eq!(row.keys().len(), 15);
+                assert_eq!(row.keys().len(), 17);
                 let tr = row.get("tenants").as_arr().unwrap();
                 assert_eq!(tr.len(), 2);
                 assert_eq!(tr[0].keys().len(), 7);

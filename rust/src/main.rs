@@ -41,10 +41,12 @@ use odin::runtime::{
     SynthBackend, Tensor,
 };
 use odin::serving::{
-    live_json, tenant, HarnessOpts, PipelineServer, ScenarioDriver,
-    ServeReport, ServerOpts, Workload,
+    live_json, tenant, BatchPolicy, HarnessOpts, PipelineServer,
+    ScenarioDriver, ServeReport, ServerOpts, Workload, BATCH_SLACK_FACTOR,
 };
-use odin::simulator::{simulate, Policy, SimConfig, SimSummary};
+use odin::simulator::{
+    simulate, simulate_policies_workload, Policy, SimConfig, SimSummary,
+};
 use odin::util::affinity;
 use odin::util::error::{OdinError, Result};
 use odin::{bail, err};
@@ -77,7 +79,7 @@ fn usage() -> String {
        simulate     one simulation window; --scenario <name|file> runs the\n\
                     online loop against a dynamic interference scenario\n\
        experiment   regenerate paper artifacts: table1 fig1 fig3..fig10\n\
-                    summary dynamic openloop multitenant all\n\
+                    summary dynamic openloop multitenant batching all\n\
        bench-db     measure the per-layer timing database via PJRT\n\
        verify       compile artifacts + gold numerics check\n\
        serve        live pipeline server; --scenario <name|file> replays a\n\
@@ -165,6 +167,12 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
             "arrival-queue bound for open workloads (arrivals past it \
              are shed)",
         )
+        .flag(
+            "batch",
+            "off",
+            "batch former for open workloads in scenario mode: off | \
+             fixed:<n> | deadline",
+        )
         .flag("jobs", "1", "worker threads for the scenario policy sweep")
         .flag("out", "results", "output dir for scenario JSON ('' = none)")
         .switch("no-interference", "run a clean window");
@@ -177,7 +185,7 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
     }
     // the policy-sweep flags only exist in scenario mode; reject them
     // here rather than silently ignoring them
-    for flag in ["jobs", "out", "workload", "queue-cap"] {
+    for flag in ["jobs", "out", "workload", "queue-cap", "batch"] {
         if args.was_given(flag) {
             bail!("--{flag} only applies to `simulate --scenario <name|file>`");
         }
@@ -278,6 +286,15 @@ fn cmd_simulate_scenario(args: &Args) -> Result<()> {
     // clamp like the serve path: a 0 cap must not trip the SimConfig
     // assert into a panic (and the shed report prints what actually ran)
     let queue_cap = args.usize("queue-cap")?.max(1);
+    let batch = BatchPolicy::parse(args.get("batch"))?;
+    if !batch.is_off() && !workload.as_ref().is_some_and(|w| w.is_open()) {
+        bail!(
+            "--batch {} requires an open --workload (poisson:* or \
+             trace:*): closed admission has no arrival queue to batch \
+             from",
+            batch.spec()
+        );
+    }
     // no --workload on a query-axis scenario = the historical engine
     // path, bit-for-bit; everything else goes through the Workload API
     let (schedule, results) = match &workload {
@@ -291,15 +308,38 @@ fn cmd_simulate_scenario(args: &Args) -> Result<()> {
                     odin::serving::workload::MAX_CLOSED_DEPTH,
                 )?,
             };
-            run_scenario_workload(
-                &db,
-                &scenario,
-                &policies,
-                &w,
-                queries_run,
-                queue_cap,
-                jobs,
-            )?
+            if batch.is_off() {
+                run_scenario_workload(
+                    &db,
+                    &scenario,
+                    &policies,
+                    &w,
+                    queries_run,
+                    queue_cap,
+                    jobs,
+                )?
+            } else {
+                let schedule = scenario.compile();
+                let cfgs: Vec<SimConfig> = policies
+                    .iter()
+                    .map(|&p| {
+                        SimConfig::new(scenario.num_eps, p)
+                            .with_window(DYN_WINDOW)
+                            .with_queue_cap(queue_cap)
+                            .with_batch(batch)
+                    })
+                    .collect();
+                let results = simulate_policies_workload(
+                    &db,
+                    &schedule,
+                    scenario.axis,
+                    &cfgs,
+                    &w,
+                    queries_run,
+                    jobs,
+                )?;
+                (schedule, results)
+            }
         }
     };
     for (policy, r) in policies.iter().zip(&results) {
@@ -331,7 +371,7 @@ fn cmd_simulate_scenario(args: &Args) -> Result<()> {
     if !args.get("out").is_empty() {
         let dir = std::path::Path::new(args.get("out"));
         std::fs::create_dir_all(dir)?;
-        let doc = Value::obj(vec![
+        let mut top = vec![
             ("model", Value::from(args.get("model"))),
             ("scenario", doc_scenario),
             ("slo_level", Value::from(DYN_SLO_LEVEL)),
@@ -345,7 +385,13 @@ fn cmd_simulate_scenario(args: &Args) -> Result<()> {
                         .unwrap_or_else(|| "closed".to_string()),
                 ),
             ),
-        ]);
+        ];
+        // conditional like the tenants bump: batch-off documents keep
+        // their historical top-level key set byte-for-byte
+        if !batch.is_off() {
+            top.push(("batch", Value::from(batch.spec())));
+        }
+        let doc = Value::obj(top);
         let path = dir.join(format!("scenario_{}.json", scenario.name));
         odin::json::write_file(&path, &doc)?;
         println!("wrote {}", path.display());
@@ -363,15 +409,16 @@ fn cmd_simulate_scenario(args: &Args) -> Result<()> {
 /// schema-identical to the live path's.
 fn cmd_simulate_tenants(args: &Args) -> Result<()> {
     let db = load_sim_db(args)?;
-    for flag in ["policy", "eps", "period", "duration", "workload"] {
+    for flag in ["policy", "eps", "period", "duration", "workload", "batch"] {
         if !args.was_given(flag) {
             continue;
         }
         bail!(
             "--{flag} cannot be combined with --tenants: the tenant set \
-             owns the workloads, the scenario sets the EPs, and the \
-             online loop always runs odin + lls/oracle/static under the \
-             identical stream"
+             owns the workloads, the scenario sets the EPs, the online \
+             loop always runs odin + lls/oracle/static under the \
+             identical stream, and the SLO queue interleaves tenants \
+             with distinct deadlines (no batching)"
         );
     }
     if args.has("no-interference") {
@@ -459,7 +506,7 @@ fn cmd_experiment(argv: &[String]) -> Result<()> {
     let cmd = Command::new("experiment", "regenerate paper tables/figures")
         .positional(
             "id",
-            "table1|fig1|fig3..fig10|summary|ablation|dynamic|openloop|multitenant|all",
+            "table1|fig1|fig3..fig10|summary|ablation|dynamic|openloop|multitenant|batching|all",
         )
         .flag("out", "results", "output directory ('' = stdout only)")
         .flag("queries", "4000", "queries per simulation window")
@@ -567,6 +614,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             "arrival-queue bound for open workloads (arrivals past it \
              are shed)",
         )
+        .flag(
+            "batch",
+            "off",
+            "batch former for open workloads in scenario mode: off | \
+             fixed:<n> | deadline",
+        )
         .flag("query-ms", "2", "synthetic per-query work budget, ms")
         .flag("spatial", "16", "model input resolution (scenario mode)")
         .flag(
@@ -598,6 +651,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         "spatial",
         "workload",
         "queue-cap",
+        "batch",
     ] {
         if args.was_given(flag) || args.has(flag) {
             bail!("--{flag} only applies to `serve --scenario <name|file>`");
@@ -671,6 +725,15 @@ fn cmd_serve_scenario(args: &Args) -> Result<()> {
              (poisson:* or trace:*): closed loops never queue"
         );
     }
+    let batch = BatchPolicy::parse(args.get("batch"))?;
+    if !batch.is_off() && !workload.is_open() {
+        bail!(
+            "--batch {} requires an open --workload (poisson:* or \
+             trace:*): closed admission has no arrival queue to batch \
+             from",
+            batch.spec()
+        );
+    }
     let spec = models::build(args.get("model"), args.usize("spatial")?)
         .ok_or_else(|| err!("unknown model {}", args.get("model")))?;
     let backend = SynthBackend::new(&spec, args.f64("query-ms")?);
@@ -696,6 +759,15 @@ fn cmd_serve_scenario(args: &Args) -> Result<()> {
         HarnessOpts {
             auto_threshold: args.has("auto-threshold"),
             cores_per_ep,
+            batch,
+            // uniform per-query slack: the same 8x headroom factor the
+            // simulator grants over the clean serial latency, scaled to
+            // the synthetic per-query work budget
+            batch_slack_s: if batch.is_off() {
+                0.0
+            } else {
+                BATCH_SLACK_FACTOR * args.f64("query-ms")? / 1e3
+            },
             ..HarnessOpts::default()
         },
     );
@@ -741,6 +813,13 @@ fn cmd_serve_tenants(args: &Args) -> Result<()> {
         bail!(
             "--workload cannot be combined with --tenants: each tenant \
              of the set owns its workload"
+        );
+    }
+    if args.was_given("batch") {
+        bail!(
+            "--batch cannot be combined with --tenants: the SLO queue \
+             interleaves tenants with distinct deadlines, so a batch \
+             former has no single deadline to size against"
         );
     }
     let tenants = tenant::resolve(args.get("tenants"))?;

@@ -93,6 +93,39 @@ pub fn throughput(stage_times: &[f64]) -> f64 {
     1.0 / bottleneck
 }
 
+/// Marginal cost of each extra query in a batch, as a fraction of the
+/// single-query cost. A batch of `b` queries traverses a stage in
+/// `t × batch_factor(b)` — FLOP-sublinear because weight loads, kernel
+/// launch and cache-resident activations amortize across the batch, so
+/// each member past the first only pays the `γ` marginal fraction.
+pub const BATCH_GAMMA: f64 = 0.25;
+
+/// `batch_factor(b) = 1 + γ·(b − 1)`: total slowdown of a `b`-query
+/// batched traversal relative to a single query. Exactly `1.0` at
+/// `b = 1` (and `b = 0`), so unbatched admission through the batched
+/// code path is bit-identical to the historical one-at-a-time path.
+pub fn batch_factor(batch: usize) -> f64 {
+    1.0 + BATCH_GAMMA * (batch.max(1) - 1) as f64
+}
+
+/// Batched stage time: `t × batch_factor(b)`.
+pub fn batched_time(t_single: f64, batch: usize) -> f64 {
+    t_single * batch_factor(batch)
+}
+
+/// Serial (sum-of-stages) latency of one `b`-query batched traversal.
+pub fn batched_serial_latency(stage_times: &[f64], batch: usize) -> f64 {
+    stage_times.iter().sum::<f64>() * batch_factor(batch)
+}
+
+/// Sustained throughput of `b`-query batches: `b / (bottleneck ×
+/// batch_factor(b))` — strictly increasing in `b` because the factor is
+/// sublinear, which is the entire economic case for batching.
+pub fn batched_throughput(stage_times: &[f64], batch: usize) -> f64 {
+    batch.max(1) as f64 / (stage_times.iter().copied().fold(0.0f64, f64::max)
+        * batch_factor(batch))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -163,6 +196,50 @@ mod tests {
         let cm = CostModel::new(&db, &sc);
         // latency (sum) >= 1/throughput (max)
         assert!(cm.latency(&cfg) >= 1.0 / cm.throughput(&cfg) - 1e-12);
+    }
+
+    #[test]
+    fn batch_factor_is_exactly_one_for_singletons() {
+        // bit-compat contract: the batched path at b=1 must multiply by
+        // the literal 1.0 (t × 1.0 == t bitwise)
+        assert_eq!(batch_factor(0), 1.0);
+        assert_eq!(batch_factor(1), 1.0);
+        assert_eq!(batched_time(0.125, 1), 0.125);
+    }
+
+    #[test]
+    fn batch_factor_grows_linearly_with_gamma() {
+        assert!((batch_factor(2) - (1.0 + BATCH_GAMMA)).abs() < 1e-15);
+        assert!((batch_factor(5) - (1.0 + 4.0 * BATCH_GAMMA)).abs() < 1e-15);
+        for b in 1..8 {
+            assert!(batch_factor(b + 1) > batch_factor(b));
+        }
+    }
+
+    #[test]
+    fn per_query_cost_is_sublinear_in_batch_size() {
+        // factor(b)/b strictly decreases: each extra member is cheaper
+        // per query, so batched throughput strictly increases
+        let ts = vec![0.2, 0.5, 0.1];
+        for b in 1..8 {
+            let per_q = batch_factor(b) / b as f64;
+            let per_q_next = batch_factor(b + 1) / (b + 1) as f64;
+            assert!(per_q_next < per_q, "b={b}");
+            assert!(
+                batched_throughput(&ts, b + 1) > batched_throughput(&ts, b)
+            );
+        }
+        assert!((batched_throughput(&ts, 1) - throughput(&ts)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn batched_serial_latency_scales_the_sum() {
+        let ts = vec![0.2, 0.5, 0.1];
+        assert_eq!(batched_serial_latency(&ts, 1), 0.8);
+        assert!(
+            (batched_serial_latency(&ts, 4) - 0.8 * batch_factor(4)).abs()
+                < 1e-15
+        );
     }
 
     #[test]

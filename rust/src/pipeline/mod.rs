@@ -12,7 +12,10 @@
 
 mod cost;
 
-pub use cost::{stage_times, stage_times_into, throughput, CostModel};
+pub use cost::{
+    batch_factor, batched_serial_latency, batched_throughput, batched_time,
+    stage_times, stage_times_into, throughput, CostModel, BATCH_GAMMA,
+};
 
 /// Layer-counts-per-stage pipeline configuration.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]

@@ -68,6 +68,31 @@ impl ExecHandle {
             HandleInner::Synth(b) => b.run_range(start, end, input),
         }
     }
+
+    /// Execute a unit range for a `batch`-query batch. Only the
+    /// synthetic backend executes batched (scaling its busy-work by the
+    /// sublinear cost factor); the PJRT service path has no batched
+    /// kernel, so it accepts `batch == 1` only — the CLI flag audits
+    /// keep `--batch` off the artifact mode, this is the backstop.
+    pub fn run_range_batched(
+        &self,
+        start: usize,
+        end: usize,
+        input: Tensor,
+        batch: usize,
+    ) -> Result<(Tensor, f64)> {
+        match &self.inner {
+            HandleInner::Synth(b) => b.run_range_batched(start, end, input, batch),
+            HandleInner::Service(_) if batch <= 1 => {
+                self.run_range(start, end, input)
+            }
+            HandleInner::Service(_) => Err(err!(
+                "batched execution (batch={batch}) requires the \
+                 synthetic backend; the PJRT service runs one query \
+                 at a time"
+            )),
+        }
+    }
 }
 
 /// The service thread wrapper.

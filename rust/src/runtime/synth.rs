@@ -105,6 +105,21 @@ impl SynthBackend {
         end: usize,
         input: Tensor,
     ) -> Result<(Tensor, f64)> {
+        self.run_range_batched(start, end, input, 1)
+    }
+
+    /// Batched variant: each unit's busy-work scales by the
+    /// FLOP-sublinear `batch_factor(batch)` from `pipeline::cost`, so a
+    /// `b`-query batch burns genuinely more (but sublinearly more) CPU
+    /// on the worker's pinned cores. `batch == 1` is the exact
+    /// historical path (`factor == 1.0` ⇒ identical iteration counts).
+    pub fn run_range_batched(
+        &self,
+        start: usize,
+        end: usize,
+        input: Tensor,
+        batch: usize,
+    ) -> Result<(Tensor, f64)> {
         if start >= end || end > self.iters.len() {
             bail!(
                 "{}: bad unit range {start}..{end} ({} units)",
@@ -112,9 +127,10 @@ impl SynthBackend {
                 self.iters.len()
             );
         }
+        let factor = crate::pipeline::batch_factor(batch);
         let t0 = Instant::now();
         for &n in &self.iters[start..end] {
-            std::hint::black_box(busy(n));
+            std::hint::black_box(busy((n as f64 * factor) as u64));
         }
         Ok((input, t0.elapsed().as_secs_f64()))
     }
@@ -157,6 +173,30 @@ mod tests {
         let (out, dt) = b.run_range(0, b.num_units(), x).unwrap();
         assert!(dt > 0.0);
         assert_eq!(out.data, want);
+    }
+
+    #[test]
+    fn batched_run_burns_more_time_sublinearly() {
+        let b = backend();
+        let x = || Tensor::random(&b.input_shape(), 1, 1.0);
+        let time = |batch: usize| {
+            // median of 3 to damp scheduler noise
+            let mut ts: Vec<f64> = (0..3)
+                .map(|_| {
+                    b.run_range_batched(0, b.num_units(), x(), batch)
+                        .unwrap()
+                        .1
+                })
+                .collect();
+            ts.sort_by(|a, c| a.partial_cmp(c).unwrap());
+            ts[1]
+        };
+        let t1 = time(1);
+        let t8 = time(8);
+        // factor(8) = 2.75: the batched traversal costs more than one
+        // query but far less than eight
+        assert!(t8 > t1 * 1.5, "t1={t1} t8={t8}");
+        assert!(t8 < t1 * 8.0, "t1={t1} t8={t8}");
     }
 
     #[test]

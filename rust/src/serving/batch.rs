@@ -1,0 +1,200 @@
+//! Deadline-aware batch sizing on the open-loop path (ISSUE 6): the
+//! InferLine-style batch former.
+//!
+//! Arrivals queue (in the engine's virtual arrival buffer, or the live
+//! server's [`SloQueue`](super::tenant::SloQueue)); at each admission
+//! opportunity the former decides how many queued queries ride the next
+//! pipeline traversal. Under the `deadline` policy it grows the batch
+//! while the earliest queued member's deadline still clears the
+//! predicted batched service time under the FLOP-sublinear cost model
+//! (`pipeline::cost::batch_factor`); `fixed:<n>` admits up to `n`
+//! opportunistically (never waiting for stragglers); `off` is the
+//! historical one-at-a-time path, bit-for-bit.
+//!
+//! The former only *sizes* batches — it never sheds. A query whose
+//! deadline cannot be met even alone is still admitted as a singleton;
+//! shedding stays the queue's job (bounded capacity, deadline sweeps).
+
+use crate::pipeline::{batch_factor, batched_serial_latency};
+use crate::util::error::Result;
+use crate::{bail, err};
+
+/// Hard ceiling on the batch size any policy may form. Past 8 the
+/// sublinear factor's marginal throughput gain flattens while head-of-
+/// line latency keeps growing linearly — the knee the sweep measures.
+pub const MAX_BATCH: usize = 8;
+
+/// Deadline slack granted to every open-loop arrival, as a multiple of
+/// the clean serial (sum-of-stages) latency of the initial pipeline
+/// configuration: `deadline = arrival + BATCH_SLACK_FACTOR × serial`.
+/// 8× leaves room for a full MAX_BATCH traversal (factor 2.75) plus
+/// queueing, while still rejecting pathological backlogs.
+pub const BATCH_SLACK_FACTOR: f64 = 8.0;
+
+/// How admission sizes batches. Parsed from the CLI `--batch` flag.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BatchPolicy {
+    /// One query per traversal — the historical PR-5 admission path,
+    /// bit-compatible by construction (`batch_factor(1) == 1.0`).
+    #[default]
+    Off,
+    /// Up to `n` queued queries per traversal, opportunistically: admit
+    /// whatever is queued right now, never wait for the batch to fill.
+    Fixed(usize),
+    /// Grow the batch while the earliest member's deadline still clears
+    /// the predicted batched service time.
+    Deadline,
+}
+
+impl BatchPolicy {
+    /// Parse the CLI grammar: `off | fixed:<n> | deadline`.
+    pub fn parse(spec: &str) -> Result<BatchPolicy> {
+        match spec {
+            "off" => Ok(BatchPolicy::Off),
+            "deadline" => Ok(BatchPolicy::Deadline),
+            other => {
+                let n = other
+                    .strip_prefix("fixed:")
+                    .ok_or_else(|| {
+                        err!(
+                            "unknown batch policy {other:?} \
+                             (off | fixed:<n> | deadline)"
+                        )
+                    })?
+                    .parse::<usize>()
+                    .map_err(|e| err!("bad fixed batch size: {e}"))?;
+                if n == 0 || n > MAX_BATCH {
+                    bail!("fixed batch size must be in 1..={MAX_BATCH}");
+                }
+                Ok(BatchPolicy::Fixed(n))
+            }
+        }
+    }
+
+    /// The canonical spec string (round-trips through [`parse`]).
+    pub fn spec(&self) -> String {
+        match self {
+            BatchPolicy::Off => "off".to_string(),
+            BatchPolicy::Fixed(n) => format!("fixed:{n}"),
+            BatchPolicy::Deadline => "deadline".to_string(),
+        }
+    }
+
+    pub fn is_off(&self) -> bool {
+        matches!(self, BatchPolicy::Off)
+    }
+}
+
+/// The batch former: pure sizing logic shared verbatim by the simulator
+/// (virtual clock) and the live server (wall clock), so the two worlds
+/// cannot drift on what a batch is.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchFormer {
+    policy: BatchPolicy,
+}
+
+impl BatchFormer {
+    pub fn new(policy: BatchPolicy) -> BatchFormer {
+        BatchFormer { policy }
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Size the next batch. `available` is the number of queries queued
+    /// at this admission opportunity (>= 1: the head exists), `headroom`
+    /// the earliest queued member's remaining deadline slack (deadline −
+    /// now; `None` when unknown), `serial` the predicted unbatched
+    /// serial service time. Returns a size in `1..=min(available,
+    /// MAX_BATCH)`; the head is always admitted, even past its deadline
+    /// — the former sizes, the queue sheds.
+    pub fn plan(
+        &self,
+        available: usize,
+        headroom: Option<f64>,
+        serial: Option<f64>,
+    ) -> usize {
+        let cap = available.min(MAX_BATCH).max(1);
+        match self.policy {
+            BatchPolicy::Off => 1,
+            BatchPolicy::Fixed(n) => n.min(cap).max(1),
+            BatchPolicy::Deadline => {
+                let (Some(h), Some(s)) = (headroom, serial) else {
+                    return 1; // nothing to predict against: stay safe
+                };
+                if !h.is_finite() || !(s.is_finite() && s > 0.0) {
+                    return 1;
+                }
+                let mut b = 1;
+                while b < cap && h >= s * batch_factor(b + 1) {
+                    b += 1;
+                }
+                b
+            }
+        }
+    }
+
+    /// Predicted completion time of a `b`-query batch admitted now.
+    pub fn predicted_service(&self, stage_times: &[f64], b: usize) -> f64 {
+        batched_serial_latency(stage_times, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips() {
+        for spec in ["off", "fixed:1", "fixed:4", "fixed:8", "deadline"] {
+            assert_eq!(BatchPolicy::parse(spec).unwrap().spec(), spec);
+        }
+        assert!(BatchPolicy::parse("fixed:0").is_err());
+        assert!(BatchPolicy::parse("fixed:9").is_err());
+        assert!(BatchPolicy::parse("fixed:x").is_err());
+        assert!(BatchPolicy::parse("adaptive").is_err());
+        assert!(BatchPolicy::Off.is_off());
+        assert!(!BatchPolicy::Deadline.is_off());
+        assert_eq!(BatchPolicy::default(), BatchPolicy::Off);
+    }
+
+    #[test]
+    fn off_always_singletons() {
+        let f = BatchFormer::new(BatchPolicy::Off);
+        assert_eq!(f.plan(1, None, None), 1);
+        assert_eq!(f.plan(100, Some(1e9), Some(1e-3)), 1);
+    }
+
+    #[test]
+    fn fixed_is_opportunistic_never_waiting() {
+        let f = BatchFormer::new(BatchPolicy::Fixed(4));
+        assert_eq!(f.plan(1, None, None), 1, "must not wait for stragglers");
+        assert_eq!(f.plan(2, None, None), 2);
+        assert_eq!(f.plan(4, None, None), 4);
+        assert_eq!(f.plan(99, None, None), 4, "fixed bound holds");
+    }
+
+    #[test]
+    fn deadline_grows_while_headroom_clears_batched_service() {
+        let f = BatchFormer::new(BatchPolicy::Deadline);
+        let s = 1.0; // serial service time
+        // headroom exactly at factor(4) = 1.75 admits 4, not 5
+        assert_eq!(f.plan(8, Some(batch_factor(4) * s), Some(s)), 4);
+        // huge headroom saturates at MAX_BATCH even with a deep queue
+        assert_eq!(f.plan(100, Some(1e9), Some(s)), MAX_BATCH);
+        // the head is admitted even with blown headroom: size >= 1
+        assert_eq!(f.plan(8, Some(-5.0), Some(s)), 1);
+        // unknown headroom or service: conservative singleton
+        assert_eq!(f.plan(8, None, Some(s)), 1);
+        assert_eq!(f.plan(8, Some(2.0), None), 1);
+        assert_eq!(f.plan(8, Some(f64::INFINITY), Some(s)), 1);
+    }
+
+    #[test]
+    fn plan_is_bounded_by_availability() {
+        let f = BatchFormer::new(BatchPolicy::Deadline);
+        assert_eq!(f.plan(2, Some(1e9), Some(1.0)), 2);
+        assert_eq!(f.plan(1, Some(1e9), Some(1.0)), 1);
+    }
+}

@@ -42,6 +42,7 @@ use crate::runtime::Tensor;
 use crate::simulator::window::{windows_json, WindowMetrics};
 use crate::util::error::Result;
 
+use super::batch::{BatchFormer, BatchPolicy};
 use super::server::{PipelineServer, RebalanceLog, TenantPush};
 use super::stats::{ServeReport, SERVE_WINDOW};
 use super::tenant::{tally, totals_json, TenantSet, TenantTotals};
@@ -64,6 +65,14 @@ pub struct HarnessOpts {
     /// EP width used for stressor placement; must match the server's
     /// `cores_per_ep` so aggressor and victim contend on the same cores.
     pub cores_per_ep: usize,
+    /// Batch-forming policy on the open-loop path (`off` = the
+    /// historical one-query-per-traversal admission, bit for bit).
+    pub batch: BatchPolicy,
+    /// Deadline slack (seconds past arrival) stamped on every open-loop
+    /// arrival when batching is on — the headroom the deadline-aware
+    /// former spends. Uniform across arrivals, so EDF order inside the
+    /// SLO queue stays FIFO. Ignored when `batch` is off.
+    pub batch_slack_s: f64,
 }
 
 impl Default for HarnessOpts {
@@ -73,6 +82,8 @@ impl Default for HarnessOpts {
             slo_level: LIVE_SLO_LEVEL,
             auto_threshold: false,
             cores_per_ep: 8,
+            batch: BatchPolicy::Off,
+            batch_slack_s: 0.0,
         }
     }
 }
@@ -186,6 +197,12 @@ impl ScenarioDriver {
             "SLO level {}",
             opts.slo_level
         );
+        assert!(
+            opts.batch.is_off()
+                || (opts.batch_slack_s > 0.0 && opts.batch_slack_s.is_finite()),
+            "batching needs a positive deadline slack, got {}",
+            opts.batch_slack_s
+        );
         let schedule = scenario.compile();
         let clear = vec![0usize; scenario.num_eps];
         ScenarioDriver { scenario, schedule, clear, opts }
@@ -288,6 +305,15 @@ impl ScenarioDriver {
         } else {
             None
         };
+        if !self.opts.batch.is_off() && arrivals.is_none() {
+            bail!(
+                "batching ({}) requires an open workload: closed admission \
+                 has no arrival queue to batch from",
+                self.opts.batch.spec()
+            );
+        }
+        let former =
+            (!self.opts.batch.is_off()).then(|| BatchFormer::new(self.opts.batch));
         let depth = workload
             .closed_depth()
             .unwrap_or(server.admission_depth())
@@ -323,6 +349,7 @@ impl ScenarioDriver {
                     offered >= n
                         && server.queue_len() == 0
                         && server.in_flight() == 0
+                        && !server.has_pending_completion()
                 }
             };
             if done {
@@ -337,7 +364,29 @@ impl ScenarioDriver {
                 while offered < n && offs[offered] <= now {
                     let x = pending.next().expect("inputs counted above");
                     let due = t0 + Duration::from_secs_f64(offs[offered]);
-                    if server.enqueue_arrived(x, due) {
+                    if former.is_some() {
+                        // batching stamps every arrival with a uniform
+                        // deadline slack — the headroom the former spends
+                        // — so EDF inside the SLO queue stays FIFO and
+                        // `queued_idx` keeps tracking admission order
+                        let deadline = due
+                            + Duration::from_secs_f64(self.opts.batch_slack_s);
+                        match server
+                            .enqueue_tenant(x, due, deadline, 0, 0, offered)
+                        {
+                            TenantPush::Accepted => {
+                                queued_idx.push_back(offered);
+                            }
+                            TenantPush::Evicted { tag, .. } => {
+                                queued_idx.retain(|&i| i != tag);
+                                dropped_at.push(completions.len());
+                                queued_idx.push_back(offered);
+                            }
+                            TenantPush::Shed => {
+                                dropped_at.push(completions.len());
+                            }
+                        }
+                    } else if server.enqueue_arrived(x, due) {
                         queued_idx.push_back(offered);
                     } else {
                         dropped_at.push(completions.len());
@@ -382,10 +431,33 @@ impl ScenarioDriver {
                     thresholds.push((admitted, server.autotune_threshold()));
                 }
                 match &arrivals {
-                    Some(_) => {
-                        server.admit_one()?;
-                        queued_idx.pop_front();
-                    }
+                    Some(_) => match &former {
+                        Some(f) => {
+                            // the former sizes this traversal against the
+                            // head entry's live deadline headroom and the
+                            // wall-clock EWMA serial-service estimate
+                            let plan = f.plan(
+                                server.queue_len(),
+                                server.head_headroom(),
+                                server.service_estimate(),
+                            );
+                            let batch = server.admit_batch(plan)?.len();
+                            for _ in 0..batch {
+                                queued_idx.pop_front();
+                            }
+                            // members past the head share its admission
+                            // state: one traversal, one stressor era
+                            for _ in 1..batch {
+                                stressed.push(*stressed.last().unwrap());
+                                active_eps.push(*active_eps.last().unwrap());
+                            }
+                            admitted += batch - 1;
+                        }
+                        None => {
+                            server.admit_one()?;
+                            queued_idx.pop_front();
+                        }
+                    },
                     None => {
                         server.admit(
                             pending.next().expect("inputs counted above"),
@@ -394,11 +466,12 @@ impl ScenarioDriver {
                 }
                 admitted += 1;
             }
-            if server.in_flight() > 0 {
+            if server.in_flight() > 0 || server.has_pending_completion() {
                 // with arrivals still pending, wait for a completion only
                 // until the next one is due — an unbounded recv would park
                 // the driver past due arrivals (late shedding, and idle
-                // admission slots silently billed as queueing)
+                // admission slots silently billed as queueing); buffered
+                // batch-peer completions return instantly from either recv
                 let next_due = match &arrivals {
                     Some(offs) if offered < n => {
                         Some(offs[offered] - t0.elapsed().as_secs_f64())
@@ -506,6 +579,13 @@ impl ScenarioDriver {
         inputs: Vec<Tensor>,
         tenants: &TenantSet,
     ) -> Result<LiveRun> {
+        if !self.opts.batch.is_off() {
+            bail!(
+                "batching ({}) on the multi-tenant path is not supported: \
+                 the SLO queue interleaves tenants with distinct deadlines",
+                self.opts.batch.spec()
+            );
+        }
         let n = inputs.len();
         match self.scenario.axis {
             ScenarioAxis::Queries => {
@@ -746,8 +826,11 @@ impl ScenarioDriver {
         let tput: Vec<f64> = completions
             .iter()
             .map(|c| {
-                let b = c.stage_times.iter().copied().fold(0.0f64, f64::max);
-                1.0 / b.max(1e-12)
+                // a b-query batch delivers b completions per traversal:
+                // sustained throughput scales by b (b == 1 is the exact
+                // historical value)
+                let t = c.stage_times.iter().copied().fold(0.0f64, f64::max);
+                c.batch as f64 / t.max(1e-12)
             })
             .collect();
         // quiet-phase peak; a fully-stressed run falls back to the best
@@ -803,6 +886,14 @@ impl ScenarioDriver {
             let active: usize = active_eps[start..end].iter().sum();
             let interference_load = active as f64
                 / ((end - start) * self.scenario.num_eps) as f64;
+            // same traversal accounting as the simulator: each completion
+            // contributes 1/b of the batch it rode in
+            let traversals: f64 = completions[start..end]
+                .iter()
+                .map(|c| 1.0 / c.batch as f64)
+                .sum();
+            let batches = traversals.round() as usize;
+            let mean_batch = (end - start) as f64 / traversals;
             out.push(WindowMetrics {
                 index: out.len(),
                 start,
@@ -818,6 +909,8 @@ impl ScenarioDriver {
                 rebalances: rebalance_count,
                 slo_violations,
                 interference_load,
+                batches,
+                mean_batch,
                 tenants: Vec::new(),
             });
             start = end;
@@ -1011,10 +1104,12 @@ mod tests {
             "rebalances",
             "slo_violations",
             "interference_load",
+            "batches",
+            "mean_batch",
         ] {
             assert!(!row.get(key).is_null(), "missing window key {key}");
         }
-        assert_eq!(row.keys().len(), 14);
+        assert_eq!(row.keys().len(), 16);
         // closed-loop run: zero queueing, nothing offered beyond served
         assert_eq!(doc.get("workload").as_str(), Some("closed:2"));
         assert_eq!(doc.get("dropped").as_usize(), Some(0));
@@ -1122,6 +1217,87 @@ mod tests {
     }
 
     #[test]
+    fn batched_open_run_conserves_and_reports_batches() {
+        use crate::serving::BatchPolicy;
+        let (mut server, inputs) = tiny_server(2);
+        let driver = ScenarioDriver::new(
+            tiny_scenario(),
+            HarnessOpts {
+                window: 5,
+                cores_per_ep: 1,
+                batch: BatchPolicy::Deadline,
+                batch_slack_s: 5.0, // generous: headroom is never the cap
+                ..HarnessOpts::default()
+            },
+        );
+        // a stampede trace: all 20 arrivals due at once, so the former
+        // has a full queue to batch from behind the depth-2 window
+        let workload = Workload::trace(vec![1e-4]).unwrap();
+        let run = driver.run_workload(&mut server, inputs, &workload).unwrap();
+        assert_eq!(run.completions.len() + run.dropped, 20);
+        assert_eq!(run.dropped, 0, "a 256-slot queue must hold 20 queries");
+        assert!(
+            run.completions.iter().any(|c| c.batch > 1),
+            "a stampede under deadline batching never formed a batch"
+        );
+        assert!(run
+            .completions
+            .iter()
+            .all(|c| (1..=crate::serving::MAX_BATCH).contains(&c.batch)));
+        // completion order is arrival order: uniform slack keeps the SLO
+        // queue FIFO, and batch peers drain head-first
+        for (i, c) in run.completions.iter().enumerate() {
+            assert_eq!(c.id, i);
+        }
+        // windows count traversals, not queries
+        let traversals: usize = run.windows.iter().map(|w| w.batches).sum();
+        assert!(traversals < 20, "batches never folded traversals");
+        assert!(run.windows.iter().any(|w| w.mean_batch > 1.0));
+        // document sanity: batched rows flow through the shared emitter
+        let doc = live_json(&driver, &run, "vgg16", 2);
+        assert_eq!(doc.get("queries").as_usize(), Some(20));
+        assert!(
+            doc.get("windows").idx(0).get("mean_batch").as_f64().unwrap()
+                >= 1.0
+        );
+    }
+
+    #[test]
+    fn batching_rejects_closed_and_tenant_runs() {
+        use crate::serving::tenant::{TenantSet, TenantSpec};
+        use crate::serving::BatchPolicy;
+        let driver = ScenarioDriver::new(
+            tiny_scenario(),
+            HarnessOpts {
+                window: 5,
+                cores_per_ep: 1,
+                batch: BatchPolicy::Fixed(4),
+                batch_slack_s: 5.0,
+                ..HarnessOpts::default()
+            },
+        );
+        let (mut server, inputs) = tiny_server(2);
+        let e = driver.run(&mut server, inputs).unwrap_err();
+        assert!(format!("{e:#}").contains("open workload"), "{e:#}");
+        let (mut server, inputs) = tiny_server(2);
+        let tenants = TenantSet::new(
+            "solo",
+            vec![TenantSpec {
+                id: "x".into(),
+                workload: Workload::trace(vec![0.002]).unwrap(),
+                deadline_ms: 60_000.0,
+                priority: 0,
+                weight: 1.0,
+            }],
+        )
+        .unwrap();
+        let e = driver
+            .run_tenants(&mut server, inputs, &tenants)
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("multi-tenant"), "{e:#}");
+    }
+
+    #[test]
     fn tenant_run_merges_streams_and_accounts_per_tenant() {
         use crate::serving::tenant::{TenantSet, TenantSpec};
         let (mut server, inputs) = tiny_server(2);
@@ -1187,7 +1363,7 @@ mod tests {
         assert_eq!(totals[0].get("id").as_str(), Some("x"));
         assert_eq!(totals[0].keys().len(), 13);
         let row = doc.get("windows").idx(0);
-        assert_eq!(row.keys().len(), 15, "window rows must gain tenants");
+        assert_eq!(row.keys().len(), 17, "window rows must gain tenants");
         assert_eq!(row.get("tenants").idx(0).keys().len(), 7);
     }
 

@@ -7,6 +7,7 @@
 //! harness that replays dynamic interference timelines with real
 //! stressors.
 
+pub mod batch;
 pub mod harness;
 pub mod live_eval;
 pub mod server;
@@ -14,6 +15,7 @@ pub mod stats;
 pub mod tenant;
 pub mod workload;
 
+pub use batch::{BatchFormer, BatchPolicy, BATCH_SLACK_FACTOR, MAX_BATCH};
 pub use harness::{live_json, HarnessOpts, LiveRun, ScenarioDriver};
 pub use live_eval::LiveEval;
 pub use server::{

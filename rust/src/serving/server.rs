@@ -28,7 +28,7 @@ use crate::{bail, err};
 use super::live_eval::LiveEval;
 use super::tenant::{SloPush, SloQueue};
 
-/// A query travelling the pipeline.
+/// A query travelling the pipeline (the head of its batch).
 struct QueryMsg {
     id: usize,
     tensor: Tensor,
@@ -42,6 +42,12 @@ struct QueryMsg {
     /// Tenant of a multi-tenant query (0 otherwise).
     tenant: usize,
     stage_times: Vec<f64>,
+    /// `(id, arrived, tensor)` of the batch members riding behind the
+    /// head query — empty for the historical singleton traversal. Stage
+    /// workers scale their busy-work by the sublinear batched cost of
+    /// `1 + peers.len()` queries; tensors pass through (the synthetic
+    /// path models time, not numerics).
+    peers: Vec<(usize, Instant, Tensor)>,
 }
 
 /// A completed query.
@@ -62,6 +68,9 @@ pub struct Completion {
     pub output: Tensor,
     /// True when the query was a rebalancing probe (processed serially).
     pub serial: bool,
+    /// Size of the batch this query rode the pipeline in (1 = the
+    /// historical one-query-per-traversal path).
+    pub batch: usize,
 }
 
 /// Outcome of offering one tenant arrival to the SLO-aware queue.
@@ -170,6 +179,14 @@ pub struct PipelineServer {
     /// Shape of served queries (captured from the first one; probes
     /// during rebalancing reuse it).
     input_shape: Option<Vec<usize>>,
+    /// Completions fanned out of a multi-query batch, drained by the
+    /// recv flavors before the channel is consulted. Always empty when
+    /// every admission is a singleton.
+    ready: std::collections::VecDeque<Completion>,
+    /// EWMA of per-traversal service time normalized to one query
+    /// (`service / batch_factor(b)`) — the batch former's serial
+    /// service prediction on the wall clock.
+    service_ewma: Option<f64>,
 }
 
 impl PipelineServer {
@@ -229,6 +246,8 @@ impl PipelineServer {
             next_id: 0,
             rebalance_due: false,
             input_shape: None,
+            ready: std::collections::VecDeque::new(),
+            service_ewma: None,
         }
     }
 
@@ -288,6 +307,28 @@ impl PipelineServer {
     /// Arrived-but-not-admitted queries waiting in the bounded queue.
     pub fn queue_len(&self) -> usize {
         self.queue.len()
+    }
+
+    /// True while completions fanned out of a multi-query batch are
+    /// still waiting to be returned by a recv (never under singleton
+    /// admission). Drivers must drain these before declaring done.
+    pub fn has_pending_completion(&self) -> bool {
+        !self.ready.is_empty()
+    }
+
+    /// EWMA estimate of the single-query serial service time (seconds),
+    /// with the sublinear batch factor normalized out of batched
+    /// traversals; `None` before the first completion.
+    pub fn service_estimate(&self) -> Option<f64> {
+        self.service_ewma
+    }
+
+    /// Remaining deadline slack (seconds, possibly negative) of the
+    /// entry the next admission will pick; `None` when the queue is
+    /// empty or the head carries no deadline.
+    pub fn head_headroom(&self) -> Option<f64> {
+        let d = self.queue.peek()?.deadline?;
+        Some(d - self.rel(Instant::now()))
     }
 
     /// Arrivals shed so far because the queue was full.
@@ -437,6 +478,62 @@ impl PipelineServer {
         Ok(Admitted { id, tenant: e.tenant, tag: e.tag })
     }
 
+    /// Admit up to `max` queued arrivals as **one** batched pipeline
+    /// traversal, in the SLO queue's order. The batch occupies a single
+    /// admission slot, burns the sublinear batched cost on the stage
+    /// workers, and completes as one [`Completion`] per member (head
+    /// first — FIFO order is preserved when every entry shares one
+    /// deadline class). `admit_batch(1)` is exactly
+    /// [`admit_one`](Self::admit_one).
+    pub fn admit_batch(&mut self, max: usize) -> Result<Vec<Admitted>> {
+        if max == 0 {
+            bail!("admit_batch of zero queries");
+        }
+        if max == 1 {
+            return Ok(vec![self.admit_one()?]);
+        }
+        if self.queue.is_empty() {
+            bail!("admit_batch with an empty arrival queue");
+        }
+        if self.in_flight >= self.opts.admission_depth {
+            bail!("admit_batch with no free admission slot");
+        }
+        if self.rebalance_due {
+            bail!("admit_batch while a rebalance is pending");
+        }
+        let head = self.queue.pop().expect("checked non-empty");
+        let (tensor, head_arrived) = head.payload;
+        let mut admitted = vec![Admitted {
+            id: self.next_id,
+            tenant: head.tenant,
+            tag: head.tag,
+        }];
+        let mut peers: Vec<(usize, Instant, Tensor)> = Vec::new();
+        while admitted.len() < max {
+            let Some(e) = self.queue.pop() else { break };
+            let (x, a) = e.payload;
+            let id = self.next_id + 1 + peers.len();
+            peers.push((id, a, x));
+            admitted.push(Admitted { id, tenant: e.tenant, tag: e.tag });
+        }
+        self.next_id += admitted.len();
+        let ranges = Arc::new(self.config.ranges());
+        self.injector
+            .send(QueryMsg {
+                id: admitted[0].id,
+                tensor,
+                ranges,
+                arrived: head_arrived,
+                admitted: Instant::now(),
+                tenant: head.tenant,
+                stage_times: Vec::new(),
+                peers,
+            })
+            .map_err(|_| err!("pipeline workers gone"))?;
+        self.in_flight += 1;
+        Ok(admitted)
+    }
+
     /// Admit one query into the pipeline directly (closed-loop driving:
     /// arrival == admission, zero queueing). Non-blocking; returns its
     /// id. Rejects mixing with a non-empty arrival queue — that would
@@ -477,6 +574,7 @@ impl PipelineServer {
                 admitted,
                 tenant,
                 stage_times: Vec::new(),
+                peers: Vec::new(),
             })
             .map_err(|_| err!("pipeline workers gone"))?;
         self.in_flight += 1;
@@ -486,6 +584,9 @@ impl PipelineServer {
     /// Block for the next completion (admission order) and feed the
     /// monitor. May set [`rebalance_due`](Self::rebalance_due).
     pub fn recv_completion(&mut self) -> Result<Completion> {
+        if let Some(c) = self.ready.pop_front() {
+            return Ok(c);
+        }
         if self.in_flight == 0 {
             // the channel stays open (we hold the injector), so a recv
             // here would block forever instead of erroring
@@ -508,6 +609,9 @@ impl PipelineServer {
         timeout: std::time::Duration,
     ) -> Result<Option<Completion>> {
         use std::sync::mpsc::RecvTimeoutError;
+        if let Some(c) = self.ready.pop_front() {
+            return Ok(Some(c));
+        }
         if self.in_flight == 0 {
             bail!("recv_completion with no query in flight");
         }
@@ -520,19 +624,34 @@ impl PipelineServer {
         }
     }
 
-    /// Book one received completion: latency split, monitor feed,
-    /// trigger confirmation — the shared tail of both recv flavors.
+    /// Book one received traversal: latency split, monitor feed, trigger
+    /// confirmation — the shared tail of both recv flavors. A batched
+    /// traversal fans its peers into `ready` (drained before the channel
+    /// by the next recvs) and returns the head's [`Completion`].
     fn complete(&mut self, msg: QueryMsg) -> Completion {
         self.in_flight -= 1;
+        let batch = 1 + msg.peers.len();
+        let factor = crate::pipeline::batch_factor(batch);
         let service = msg.admitted.elapsed().as_secs_f64();
         // exact duration, not two racing elapsed() reads: direct
         // admission (arrived == admitted) reports a hard 0.0
         let queued = (msg.admitted - msg.arrived).as_secs_f64();
         let latency = queued + service;
-        // an INFINITY baseline (startup / just rebalanced) blesses this
-        // observation instead of judging it — see Monitor::observe
-        let trigger = self.monitor.observe(&msg.stage_times);
-        self.queries_done += 1;
+        // the monitor's baseline is a *single-query* stage profile, so
+        // normalize batched observations by the sublinear cost factor —
+        // otherwise every batch reads as interference. batch == 1 keeps
+        // the historical vector untouched (factor is exactly 1.0).
+        let trigger = if batch > 1 {
+            let normed: Vec<f64> =
+                msg.stage_times.iter().map(|t| t / factor).collect();
+            self.monitor.observe(&normed)
+        } else {
+            // an INFINITY baseline (startup / just rebalanced) blesses
+            // this observation instead of judging it — see
+            // Monitor::observe
+            self.monitor.observe(&msg.stage_times)
+        };
+        self.queries_done += batch;
         if trigger.is_some() {
             self.pending_triggers += 1;
         } else {
@@ -541,6 +660,27 @@ impl PipelineServer {
         if self.pending_triggers >= self.opts.confirm_triggers {
             self.pending_triggers = 0;
             self.rebalance_due = true;
+        }
+        let normed_service = service / factor;
+        self.service_ewma = Some(match self.service_ewma {
+            Some(prev) => 0.8 * prev + 0.2 * normed_service,
+            None => normed_service,
+        });
+        // peers share the traversal's admission and service; only their
+        // arrival (hence queueing) differs
+        for (id, arrived, tensor) in msg.peers {
+            let q = (msg.admitted - arrived).as_secs_f64();
+            self.ready.push_back(Completion {
+                id,
+                latency: q + service,
+                queued: q,
+                service,
+                tenant: msg.tenant,
+                stage_times: msg.stage_times.clone(),
+                output: tensor,
+                serial: false,
+                batch,
+            });
         }
         Completion {
             id: msg.id,
@@ -551,6 +691,7 @@ impl PipelineServer {
             stage_times: msg.stage_times,
             output: msg.tensor,
             serial: false,
+            batch,
         }
     }
 
@@ -635,10 +776,11 @@ fn stage_worker(
     affinity::pin_current_thread(&cores);
     while let Ok(mut msg) = rx.recv() {
         let (start, end) = msg.ranges[s];
+        let batch = 1 + msg.peers.len();
         if start == end {
             msg.stage_times.push(0.0);
         } else {
-            match handle.run_range(start, end, msg.tensor) {
+            match handle.run_range_batched(start, end, msg.tensor, batch) {
                 Ok((out, dt)) => {
                     msg.tensor = out;
                     msg.stage_times.push(dt);
@@ -930,6 +1072,71 @@ mod tests {
             done += 1;
         }
         assert_eq!(done, 4);
+    }
+
+    #[test]
+    fn admit_batch_fans_out_one_completion_per_member() {
+        let mut s = server(2, 1, 10.0);
+        for x in inputs(3) {
+            assert!(s.enqueue(x));
+        }
+        let admitted = s.admit_batch(3).unwrap();
+        assert_eq!(admitted.len(), 3);
+        let ids: Vec<usize> = admitted.iter().map(|a| a.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+        // one traversal, one admission slot
+        assert_eq!((s.in_flight(), s.queue_len()), (1, 0));
+        let head = s.recv_completion().unwrap();
+        assert_eq!((head.id, head.batch), (0, 3));
+        assert!(s.has_pending_completion());
+        assert_eq!(s.in_flight(), 0);
+        // peers drain from the fan-out buffer, FIFO, same service
+        let c1 = s.recv_completion().unwrap();
+        let c2 = s.recv_completion().unwrap();
+        assert_eq!((c1.id, c1.batch), (1, 3));
+        assert_eq!((c2.id, c2.batch), (2, 3));
+        assert_eq!(c1.service, head.service);
+        assert_eq!(c1.stage_times, head.stage_times);
+        assert!(!s.has_pending_completion());
+        assert_eq!(s.queries_done(), 3);
+        assert!(s.service_estimate().unwrap() > 0.0);
+        // buffer empty + nothing in flight: recv errors, not blocks
+        assert!(s.recv_completion().is_err());
+    }
+
+    #[test]
+    fn admit_batch_of_one_is_admit_one() {
+        let mut s = server(2, 1, 10.0);
+        for x in inputs(2) {
+            s.enqueue(x);
+        }
+        let a = s.admit_batch(1).unwrap();
+        assert_eq!(a.len(), 1);
+        let c = s.recv_completion().unwrap();
+        assert_eq!((c.id, c.batch), (0, 1));
+        assert!(!s.has_pending_completion());
+        // max larger than the queue admits what is there
+        let a = s.admit_batch(8).unwrap();
+        assert_eq!(a.len(), 1);
+        let c = s.recv_completion().unwrap();
+        assert_eq!((c.id, c.batch), (1, 1));
+    }
+
+    #[test]
+    fn head_headroom_reads_the_next_admission_deadline() {
+        let mut s = server(2, 1, 10.0);
+        assert_eq!(s.head_headroom(), None);
+        let mut xs = inputs(2).into_iter();
+        // deadline-free entries report no headroom
+        s.enqueue(xs.next().unwrap());
+        assert_eq!(s.head_headroom(), None);
+        s.admit_one().unwrap();
+        s.recv_completion().unwrap();
+        let t0 = Instant::now();
+        let far = t0 + std::time::Duration::from_secs(3600);
+        s.enqueue_tenant(xs.next().unwrap(), t0, far, 0, 0, 0);
+        let h = s.head_headroom().unwrap();
+        assert!(h > 3590.0 && h <= 3600.0, "headroom {h}");
     }
 
     #[test]

@@ -33,7 +33,10 @@ use crate::coordinator::{
 use crate::database::TimingDb;
 use crate::interference::dynamic::ScenarioAxis;
 use crate::interference::{EpScenarios, Schedule};
-use crate::pipeline::{stage_times_into, PipelineConfig};
+use crate::pipeline::{batch_factor, stage_times_into, PipelineConfig};
+use crate::serving::batch::{
+    BatchFormer, BatchPolicy, BATCH_SLACK_FACTOR, MAX_BATCH,
+};
 use crate::serving::tenant::{SloPush, SloQueue, TenantSet};
 use crate::serving::workload::{Workload, MAX_CLOSED_DEPTH};
 use crate::util::error::Result;
@@ -90,6 +93,10 @@ pub struct SimConfig {
     /// [`SimResult::dropped_at`]), never served. None = unbounded.
     /// Ignored by closed workloads — they never queue.
     pub queue_cap: Option<usize>,
+    /// Batch sizing at admission (open workloads only; closed admission
+    /// has no queue to batch from). [`BatchPolicy::Off`] — the default —
+    /// is bit-identical to the historical one-at-a-time path.
+    pub batch: BatchPolicy,
 }
 
 impl SimConfig {
@@ -100,6 +107,7 @@ impl SimConfig {
             detect_threshold: 0.05,
             window: None,
             queue_cap: None,
+            batch: BatchPolicy::Off,
         }
     }
 
@@ -114,6 +122,12 @@ impl SimConfig {
     pub fn with_queue_cap(mut self, cap: usize) -> SimConfig {
         assert!(cap > 0, "queue_cap must be >= 1");
         self.queue_cap = Some(cap);
+        self
+    }
+
+    /// Size admission batches under an open workload (see `batch`).
+    pub fn with_batch(mut self, batch: BatchPolicy) -> SimConfig {
+        self.batch = batch;
         self
     }
 }
@@ -165,6 +179,9 @@ pub struct SimResult {
     pub config_throughput: Vec<f64>,
     /// True for queries processed serially inside a rebalancing phase.
     pub serial: Vec<bool>,
+    /// Size of the batch each completed query rode (1 everywhere when
+    /// batching is off; serial rebalancing probes are always 1).
+    pub batch: Vec<usize>,
     pub rebalances: Vec<RebalanceEvent>,
     /// Wall-clock spent inside rebalancing phases (seconds).
     pub rebalance_time: f64,
@@ -252,6 +269,13 @@ pub fn simulate_workload(
     if queries == 0 {
         bail!("cannot simulate a 0-query run");
     }
+    if !cfg.batch.is_off() && !workload.is_open() {
+        bail!(
+            "batching ({}) requires an open workload: closed admission \
+             has no arrival queue to batch from",
+            cfg.batch.spec()
+        );
+    }
     let arrivals: Option<Vec<f64>> = if workload.is_open() {
         Some(workload.arrivals(queries)?)
     } else {
@@ -272,13 +296,21 @@ pub fn simulate_workload(
     stage_times_into(&config, db, &clean, &mut times);
     controller.bless(&times);
 
+    // batching: every open-loop arrival gets a uniform deadline of
+    // BATCH_SLACK_FACTOR × the clean serial latency of the initial
+    // config; the former grows batches while the earliest member's
+    // headroom against that deadline clears the predicted batched
+    // service time
+    let batch_slack = BATCH_SLACK_FACTOR * times.iter().sum::<f64>();
+    let former = (!cfg.batch.is_off()).then(|| BatchFormer::new(cfg.batch));
+
     // interference lookup: by query index (shim) or by the virtual clock
     // in milliseconds (wall-clock scenarios; past-horizon = quiet)
     let clear: EpScenarios = vec![0usize; schedule.num_eps];
 
     // pipeline state: when each stage becomes free, and completion time
-    // of the query admitted `min(depth, active)` slots ago (admission
-    // token)
+    // of each pipeline *traversal* (one batch, or one serial probe),
+    // admission-gated `min(depth, active)` traversals deep
     let mut stage_free = vec![0.0f64; n];
     let mut completions: Vec<f64> = Vec::with_capacity(queries);
     let mut clock = 0.0f64; // admission clock
@@ -294,6 +326,12 @@ pub fn simulate_workload(
     let mut rebalances = Vec::new();
     let mut rebalance_time = 0.0f64;
     let mut dropped_at: Vec<usize> = Vec::new();
+    let mut batch: Vec<usize> = Vec::with_capacity(queries);
+    let mut batch_members: Vec<usize> = Vec::with_capacity(MAX_BATCH);
+    // set when a multi-query batch jumps q past a window boundary, so
+    // the next controller tick is not silently skipped; never set under
+    // Off/Fixed(1) (batches there are always size 1) — bit-compat holds
+    let mut window_skipped = false;
     // admission times of every served query, non-decreasing — the queue
     // occupancy probe for the shed check
     let mut admit_times: Vec<f64> = Vec::with_capacity(queries);
@@ -341,8 +379,13 @@ pub fn simulate_workload(
 
         // --- online-loop tick: detect, then rebalance ---------------
         // the controller samples stage times once per observation window
-        // (cfg.window); between boundaries it runs open-loop
-        if controller.is_active() && cfg.window.is_none_or(|w| q % w == 0) {
+        // (cfg.window); between boundaries it runs open-loop. A batch
+        // that jumped q over a boundary arms `window_skipped` so the
+        // tick fires at the next opportunity instead of never.
+        if controller.is_active()
+            && (cfg.window.is_none_or(|w| q % w == 0) || window_skipped)
+        {
+            window_skipped = false;
             if let Some(_trigger) = controller.observe(&times) {
                 let before = 1.0 / bottleneck(&times);
                 let result: RebalanceResult =
@@ -388,6 +431,7 @@ pub fn simulate_workload(
                     inst_throughput.push(1.0 / serial_latency);
                     config_throughput.push(1.0 / bottleneck(&times));
                     serial.push(true);
+                    batch.push(1);
                     let act = sc_now.iter().filter(|&&s| s != 0).count();
                     stressed.push(act != 0);
                     active_eps.push(act);
@@ -420,9 +464,9 @@ pub fn simulate_workload(
             }
         }
 
-        // --- pipelined processing of query q ------------------------
-        // admission: at most `min(depth, active)` queries in flight, and
-        // never before the query arrives (open-loop)
+        // --- pipelined processing of query q (and its batch) --------
+        // admission: at most `min(depth, active)` *traversals* in
+        // flight, and never before the head query arrives (open-loop)
         let active = config.active_stages().max(1);
         let slots = depth.min(active);
         let gate = if completions.len() >= slots {
@@ -435,36 +479,90 @@ pub fn simulate_workload(
             Some(a) => admit.max(a),
             None => admit,
         };
-        let mut ready = admit; // when the query's data is available
+
+        // batch sizing: how many already-arrived queries ride with q.
+        // Off (or a closed workload) plans 1 and the collection loop
+        // below never runs — the historical path, bit-for-bit.
+        let plan = match (&former, arr) {
+            (Some(f), Some(a)) => {
+                let arrs = arrivals.as_ref().expect("open workload");
+                let mut avail = 1usize;
+                while q + avail < queries
+                    && avail < MAX_BATCH
+                    && arrs[q + avail] <= admit
+                {
+                    avail += 1;
+                }
+                let headroom = a + batch_slack - admit;
+                f.plan(avail, Some(headroom), Some(times.iter().sum()))
+            }
+            _ => 1,
+        };
+        let q0 = q;
+        batch_members.clear();
+        batch_members.push(q);
+        admit_times.push(admit);
+        q += 1;
+        while batch_members.len() < plan && q < queries {
+            let a_j = arrivals.as_ref().expect("batching is open-loop")[q];
+            if a_j > admit {
+                break; // not yet arrived: never wait for stragglers
+            }
+            if let Some(cap) = cfg.queue_cap {
+                let waiting = admit_times.len()
+                    - admit_times.partition_point(|&t| t <= a_j);
+                if waiting >= cap {
+                    dropped_at.push(latencies.len());
+                    q += 1;
+                    continue;
+                }
+            }
+            admit_times.push(admit);
+            batch_members.push(q);
+            q += 1;
+        }
+        let members = batch_members.len();
+        let factor = batch_factor(members);
+
+        let mut ready = admit; // when the batch's data is available
         for (i, &t) in times.iter().enumerate() {
             if t == 0.0 {
                 continue; // empty stage: forwards instantly
             }
             let start = ready.max(stage_free[i]);
-            ready = start + t;
+            ready = start + t * factor;
             stage_free[i] = ready;
         }
         clock = admit;
-        completions.push(ready);
-        admit_times.push(admit);
-        start_times.push(admit);
-        match arr {
-            Some(a) => {
-                latencies.push(ready - a);
-                queued.push(admit - a);
+        completions.push(ready); // one traversal, whatever it carried
+        let bneck = bottleneck(&times);
+        let act = sc.iter().filter(|&&s| s != 0).count();
+        for &j in &batch_members {
+            start_times.push(admit);
+            match arrivals.as_ref() {
+                Some(arrs) => {
+                    latencies.push(ready - arrs[j]);
+                    queued.push(admit - arrs[j]);
+                }
+                None => {
+                    latencies.push(ready - admit);
+                    queued.push(0.0);
+                }
             }
-            None => {
-                latencies.push(ready - admit);
-                queued.push(0.0);
+            inst_throughput.push(members as f64 / (bneck * factor));
+            config_throughput.push(1.0 / bneck);
+            serial.push(false);
+            stressed.push(act != 0);
+            active_eps.push(act);
+            batch.push(members);
+        }
+        if let Some(w) = cfg.window {
+            // q jumped past loop heads q0+1..q: if one was a window
+            // boundary, arm the tick so the controller still samples
+            if ((q0 + 1)..q).any(|j| j % w == 0) {
+                window_skipped = true;
             }
         }
-        inst_throughput.push(1.0 / bottleneck(&times));
-        config_throughput.push(1.0 / bottleneck(&times));
-        serial.push(false);
-        let act = sc.iter().filter(|&&s| s != 0).count();
-        stressed.push(act != 0);
-        active_eps.push(act);
-        q += 1;
     }
 
     let total_time = completions.last().copied().unwrap_or(0.0);
@@ -479,6 +577,7 @@ pub fn simulate_workload(
         inst_throughput,
         config_throughput,
         serial,
+        batch,
         rebalances,
         rebalance_time,
         total_time,
@@ -562,6 +661,15 @@ pub fn simulate_policies_workload(
     if queries == 0 {
         bail!("cannot simulate a 0-query run");
     }
+    if !workload.is_open() {
+        if let Some(c) = cfgs.iter().find(|c| !c.batch.is_off()) {
+            bail!(
+                "batching ({}) requires an open workload: closed admission \
+                 has no arrival queue to batch from",
+                c.batch.spec()
+            );
+        }
+    }
     let db = Arc::new(db.clone());
     let schedule = Arc::new(schedule.clone());
     let workload = workload.clone();
@@ -620,6 +728,13 @@ pub fn simulate_tenants(
     }
     if queries == 0 {
         bail!("cannot simulate a 0-query run");
+    }
+    if !cfg.batch.is_off() {
+        bail!(
+            "batching ({}) on the multi-tenant path is not supported: the \
+             SLO queue interleaves tenants with distinct deadlines",
+            cfg.batch.spec()
+        );
     }
     let arrivals = tenants.arrivals(queries)?;
     let deadline_s = tenants.deadlines_s();
@@ -854,6 +969,7 @@ pub fn simulate_tenants(
     }
 
     let total_time = completions.last().copied().unwrap_or(0.0);
+    let batch = vec![1usize; latencies.len()];
     Ok(MtSimResult {
         result: SimResult {
             latencies,
@@ -866,6 +982,7 @@ pub fn simulate_tenants(
             inst_throughput,
             config_throughput,
             serial,
+            batch,
             rebalances,
             rebalance_time,
             total_time,
@@ -909,6 +1026,13 @@ pub fn simulate_tenants_policies(
         bail!("cannot simulate a 0-query run");
     }
     tenants.arrivals(queries)?;
+    if let Some(c) = cfgs.iter().find(|c| !c.batch.is_off()) {
+        bail!(
+            "batching ({}) on the multi-tenant path is not supported: the \
+             SLO queue interleaves tenants with distinct deadlines",
+            c.batch.spec()
+        );
+    }
     let db = Arc::new(db.clone());
     let schedule = Arc::new(schedule.clone());
     let tenants = tenants.clone();
@@ -1564,6 +1688,196 @@ mod tests {
         let many = simulate_many(&db, &runs, 8);
         let one = simulate(&db, &runs[0].0, &runs[0].1);
         assert_eq!(many[0].latencies, one.latencies);
+    }
+
+    #[test]
+    fn batch_off_is_bit_identical_to_fixed_one() {
+        // the bit-compat contract: a size-1 batch multiplies every stage
+        // time by batch_factor(1) == 1.0, so Fixed(1) — which exercises
+        // the whole batched code path — must reproduce Off to the bit
+        let db = db();
+        let schedule = sched(50, 50, 900);
+        let probe = simulate(
+            &db,
+            &Schedule::none(4, 10),
+            &SimConfig::new(4, Policy::Static),
+        );
+        let w = crate::serving::Workload::poisson(
+            1.1 * probe.peak_throughput,
+            13,
+        )
+        .unwrap();
+        let base = SimConfig::new(4, Policy::Odin { alpha: 2 })
+            .with_window(100)
+            .with_queue_cap(32);
+        let run = |batch| {
+            simulate_workload(
+                &db,
+                &schedule,
+                ScenarioAxis::Queries,
+                &base.clone().with_batch(batch),
+                &w,
+                900,
+            )
+            .unwrap()
+        };
+        let off = run(BatchPolicy::Off);
+        let one = run(BatchPolicy::Fixed(1));
+        assert_eq!(off.latencies, one.latencies);
+        assert_eq!(off.queued, one.queued);
+        assert_eq!(off.start_times, one.start_times);
+        assert_eq!(off.inst_throughput, one.inst_throughput);
+        assert_eq!(off.dropped_at, one.dropped_at);
+        assert_eq!(off.total_time, one.total_time);
+        assert_eq!(off.rebalances.len(), one.rebalances.len());
+        assert!(off.batch.iter().all(|&b| b == 1));
+        assert!(one.batch.iter().all(|&b| b == 1));
+        assert_eq!(off.batch.len(), off.latencies.len());
+    }
+
+    #[test]
+    fn deadline_batching_recovers_throughput_under_overload() {
+        // offered load at 2x capacity: one-at-a-time admission saturates
+        // at peak and sheds; deadline batching (factor(8) = 2.75 for 8
+        // queries) lifts capacity enough to sustain the offered rate
+        let db = db();
+        let schedule = Schedule::none(4, 800);
+        let probe = simulate(
+            &db,
+            &Schedule::none(4, 10),
+            &SimConfig::new(4, Policy::Static),
+        );
+        let w = crate::serving::Workload::poisson(
+            2.0 * probe.peak_throughput,
+            7,
+        )
+        .unwrap();
+        let base = SimConfig::new(4, Policy::Static).with_queue_cap(64);
+        let run = |batch| {
+            simulate_workload(
+                &db,
+                &schedule,
+                ScenarioAxis::Queries,
+                &base.clone().with_batch(batch),
+                &w,
+                800,
+            )
+            .unwrap()
+        };
+        let off = run(BatchPolicy::Off);
+        let dl = run(BatchPolicy::Deadline);
+        // conservation holds in both worlds
+        assert_eq!(off.latencies.len() + off.dropped_at.len(), 800);
+        assert_eq!(dl.latencies.len() + dl.dropped_at.len(), 800);
+        assert!(dl.batch.iter().any(|&b| b > 1), "deadline never batched");
+        assert!(dl.batch.iter().all(|&b| (1..=MAX_BATCH).contains(&b)));
+        assert_eq!(dl.batch.len(), dl.latencies.len());
+        assert!(
+            dl.achieved_throughput() > 1.3 * off.achieved_throughput(),
+            "deadline {} !>> off {}",
+            dl.achieved_throughput(),
+            off.achieved_throughput()
+        );
+        assert!(dl.dropped_at.len() < off.dropped_at.len());
+        // fixed:4 is capped at 4 members
+        let f4 = run(BatchPolicy::Fixed(4));
+        assert!(f4.batch.iter().all(|&b| b <= 4));
+        assert!(f4.batch.iter().any(|&b| b > 1));
+    }
+
+    #[test]
+    fn batched_runs_are_jobs_invariant() {
+        let db = db();
+        let schedule = sched(50, 50, 600);
+        let cfgs: Vec<SimConfig> =
+            [BatchPolicy::Off, BatchPolicy::Fixed(4), BatchPolicy::Deadline]
+                .into_iter()
+                .map(|b| {
+                    SimConfig::new(4, Policy::Odin { alpha: 2 })
+                        .with_window(100)
+                        .with_queue_cap(64)
+                        .with_batch(b)
+                })
+                .collect();
+        let w = crate::serving::Workload::parse("poisson:60qps@11").unwrap();
+        let serial = simulate_policies_workload(
+            &db,
+            &schedule,
+            ScenarioAxis::Queries,
+            &cfgs,
+            &w,
+            600,
+            1,
+        )
+        .unwrap();
+        let parallel = simulate_policies_workload(
+            &db,
+            &schedule,
+            ScenarioAxis::Queries,
+            &cfgs,
+            &w,
+            600,
+            3,
+        )
+        .unwrap();
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.latencies, b.latencies);
+            assert_eq!(a.batch, b.batch);
+            assert_eq!(a.dropped_at, b.dropped_at);
+        }
+    }
+
+    #[test]
+    fn batching_rejects_closed_and_tenant_paths() {
+        let db = db();
+        let schedule = sched(50, 50, 500);
+        let cfg = SimConfig::new(4, Policy::Static)
+            .with_batch(BatchPolicy::Deadline);
+        let w = crate::serving::Workload::parse("closed:4").unwrap();
+        let e = simulate_workload(
+            &db,
+            &schedule,
+            ScenarioAxis::Queries,
+            &cfg,
+            &w,
+            500,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("open workload"), "{e:#}");
+        // the pre-fan-out validation catches it too (jobs > 1)
+        let e = simulate_policies_workload(
+            &db,
+            &schedule,
+            ScenarioAxis::Queries,
+            &[cfg.clone(), cfg.clone()],
+            &w,
+            500,
+            2,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("open workload"), "{e:#}");
+        let ts = two_tenants(50.0, 500.0, 30.0);
+        let e = simulate_tenants(
+            &db,
+            &schedule,
+            ScenarioAxis::Queries,
+            &cfg,
+            &ts,
+            500,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("multi-tenant"), "{e:#}");
+        let e = simulate_tenants_policies(
+            &db,
+            &schedule,
+            ScenarioAxis::Queries,
+            &[cfg.clone(), cfg],
+            &ts,
+            500,
+            2,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("multi-tenant"), "{e:#}");
     }
 
     #[test]

@@ -48,6 +48,14 @@ pub struct WindowMetrics {
     pub slo_violations: usize,
     /// Fraction of (query, EP) slots under interference in the window.
     pub interference_load: f64,
+    /// Pipeline traversals that served the window's queries (SCHEMA
+    /// BUMP): a b-query batch counts once, so `batches == end - start`
+    /// exactly when every query rode alone. Fractional boundary batches
+    /// round to the nearest whole traversal.
+    pub batches: usize,
+    /// Mean batch size of the window's queries, weighted per traversal
+    /// (`(end - start) / traversals`); 1.0 on the unbatched path.
+    pub mean_batch: f64,
     /// Per-tenant rows of a multi-tenant run (one per tenant of the set,
     /// zeros included). Empty — and absent from the JSON row, keeping
     /// single-tenant artifacts byte-identical — for single-tenant runs.
@@ -184,6 +192,13 @@ pub fn window_metrics(
         let active: usize = r.active_eps[start..end].iter().sum();
         let interference_load =
             active as f64 / ((end - start) * schedule.num_eps) as f64;
+        // each query contributes 1/b of its traversal, so the sum counts
+        // whole traversals (exact integers when batches do not straddle
+        // a window boundary; rounding absorbs the straddle)
+        let traversals: f64 =
+            r.batch[start..end].iter().map(|&b| 1.0 / b as f64).sum();
+        let batches = traversals.round() as usize;
+        let mean_batch = (end - start) as f64 / traversals;
         out.push(WindowMetrics {
             index: out.len(),
             start,
@@ -199,6 +214,8 @@ pub fn window_metrics(
             rebalances,
             slo_violations,
             interference_load,
+            batches,
+            mean_batch,
             tenants: Vec::new(),
         });
         start = end;
@@ -251,6 +268,8 @@ pub fn windows_json(windows: &[WindowMetrics]) -> Value {
                     ("rebalances", Value::from(w.rebalances)),
                     ("slo_violations", Value::from(w.slo_violations)),
                     ("interference_load", Value::from(w.interference_load)),
+                    ("batches", Value::from(w.batches)),
+                    ("mean_batch", Value::from(w.mean_batch)),
                 ];
                 if !w.tenants.is_empty() {
                     row.push(("tenants", tenant_rows_json(&w.tenants)));
@@ -359,7 +378,13 @@ mod tests {
         let lat = arr[0].get("lat_mean").as_f64().unwrap();
         let svc = arr[0].get("service_ns").as_f64().unwrap();
         assert!((svc / 1e9 - lat).abs() < 1e-12 * lat.max(1.0));
-        assert_eq!(arr[0].keys().len(), 14);
+        // an unbatched run reports one traversal per query
+        assert_eq!(
+            arr[0].get("batches").as_usize(),
+            arr[0].get("end").as_usize()
+        );
+        assert_eq!(arr[0].get("mean_batch").as_f64(), Some(1.0));
+        assert_eq!(arr[0].keys().len(), 16);
     }
 
     #[test]
@@ -409,10 +434,48 @@ mod tests {
         assert_eq!(total, dropped_at.len());
         // the JSON row gains the tenants key only when rows exist
         let v = windows_json(&ws);
-        assert_eq!(v.idx(0).keys().len(), 15);
+        assert_eq!(v.idx(0).keys().len(), 17);
         let row = v.idx(0).get("tenants").idx(0);
         assert_eq!(row.keys().len(), 7);
         assert_eq!(row.get("id").as_str(), Some("a"));
+    }
+
+    #[test]
+    fn batched_windows_count_traversals_not_queries() {
+        use crate::serving::{BatchPolicy, Workload};
+        use crate::simulator::engine::simulate_workload;
+        let db = synthesize(&models::vgg16(64), 1);
+        let schedule = Schedule::none(4, 800);
+        let probe = simulate(
+            &db,
+            &Schedule::none(4, 10),
+            &SimConfig::new(4, Policy::Static),
+        );
+        let w = Workload::poisson(2.0 * probe.peak_throughput, 7).unwrap();
+        let cfg = SimConfig::new(4, Policy::Static)
+            .with_window(DEFAULT_WINDOW)
+            .with_queue_cap(64)
+            .with_batch(BatchPolicy::Deadline);
+        let r = simulate_workload(
+            &db,
+            &schedule,
+            crate::interference::dynamic::ScenarioAxis::Queries,
+            &cfg,
+            &w,
+            800,
+        )
+        .unwrap();
+        let ws = window_metrics(&r, &schedule, DEFAULT_WINDOW, 0.7);
+        let traversals: usize = ws.iter().map(|w| w.batches).sum();
+        assert!(
+            traversals < r.latencies.len(),
+            "2x overload never formed a batch"
+        );
+        assert!(ws.iter().any(|w| w.mean_batch > 1.0));
+        for w in &ws {
+            assert!(w.batches >= 1 && w.batches <= w.end - w.start);
+            assert!(w.mean_batch >= 1.0 - 1e-9);
+        }
     }
 
     #[test]

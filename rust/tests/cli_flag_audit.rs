@@ -1,0 +1,103 @@
+//! Mode-exclusive CLI flag audits (ISSUE 6 satellite): the `--batch`
+//! flag only exists in open-workload scenario mode, and every other mode
+//! must reject it fast — exactly like the other scenario-only flags —
+//! instead of silently ignoring it. Exercises the shipped binary
+//! (cargo's `CARGO_BIN_EXE_<name>` points integration tests at it).
+
+use std::process::Command;
+
+fn odin(args: &[&str]) -> (bool, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_odin"))
+        .args(args)
+        .output()
+        .expect("failed to spawn the odin binary");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[test]
+fn plain_simulate_rejects_batch() {
+    let (ok, err) = odin(&["simulate", "--batch", "deadline"]);
+    assert!(!ok, "plain-mode simulate must reject --batch");
+    assert!(err.contains("--batch"), "stderr: {err}");
+}
+
+#[test]
+fn simulate_tenants_rejects_batch() {
+    let (ok, err) =
+        odin(&["simulate", "--tenants", "tiers", "--batch", "deadline"]);
+    assert!(!ok, "tenant-mode simulate must reject --batch");
+    assert!(err.contains("--batch"), "stderr: {err}");
+}
+
+#[test]
+fn scenario_simulate_rejects_batch_without_open_workload() {
+    let (ok, err) =
+        odin(&["simulate", "--scenario", "burst", "--batch", "deadline"]);
+    assert!(!ok, "batching needs an open workload");
+    assert!(err.contains("open"), "stderr: {err}");
+    // closed workloads are just as queue-less as no workload at all
+    let (ok, err) = odin(&[
+        "simulate",
+        "--scenario",
+        "burst",
+        "--workload",
+        "closed:4",
+        "--batch",
+        "fixed:2",
+    ]);
+    assert!(!ok);
+    assert!(err.contains("open"), "stderr: {err}");
+}
+
+#[test]
+fn plain_serve_rejects_batch() {
+    let (ok, err) = odin(&["serve", "--batch", "deadline"]);
+    assert!(!ok, "artifact-mode serve must reject --batch");
+    assert!(err.contains("--batch"), "stderr: {err}");
+}
+
+#[test]
+fn serve_tenants_rejects_batch() {
+    let (ok, err) =
+        odin(&["serve", "--tenants", "tiers", "--batch", "deadline"]);
+    assert!(!ok, "tenant-mode serve must reject --batch");
+    assert!(err.contains("--batch"), "stderr: {err}");
+}
+
+#[test]
+fn bad_batch_specs_fail_fast() {
+    for spec in ["fixed:0", "fixed:9", "adaptive"] {
+        let (ok, err) = odin(&[
+            "simulate",
+            "--scenario",
+            "burst",
+            "--workload",
+            "poisson:100qps",
+            "--batch",
+            spec,
+        ]);
+        assert!(!ok, "{spec} must be rejected");
+        assert!(err.contains("batch"), "stderr: {err}");
+    }
+}
+
+#[test]
+fn scenario_simulate_accepts_batch_on_open_workloads() {
+    let (ok, err) = odin(&[
+        "simulate",
+        "--scenario",
+        "burst",
+        "--queries",
+        "200",
+        "--workload",
+        "poisson:200qps",
+        "--batch",
+        "fixed:2",
+        "--out",
+        "",
+    ]);
+    assert!(ok, "open-workload batched simulate must run: {err}");
+}

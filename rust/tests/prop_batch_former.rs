@@ -1,0 +1,120 @@
+//! Property tests for the deadline-aware batch former (ISSUE 6
+//! satellite), driven by the crate's own seeded xoshiro PRNG + property
+//! harness like `prop_tenant_queue.rs` — no external test dependencies.
+//!
+//! Invariants under test:
+//!  * safety — any batch the former sizes past a singleton keeps the
+//!    earliest member's deadline clear of the predicted batched service
+//!    time under the sublinear cost model (singletons are the explicit
+//!    exemption: the head is always admitted, shedding is the queue's
+//!    job);
+//!  * monotonicity — the planned size never shrinks as deadline headroom
+//!    or queue depth grows;
+//!  * bit-compatibility — `off` always sizes 1, and the b=1 cost model
+//!    reproduces the unbatched serial latency exactly, so the batched
+//!    path at b=1 is the historical admission bit for bit.
+
+use odin::pipeline::{batch_factor, batched_serial_latency};
+use odin::serving::{BatchFormer, BatchPolicy, MAX_BATCH};
+use odin::util::proptest::Property;
+use odin::util::Rng;
+
+#[test]
+fn prop_admitted_batch_never_blows_the_earliest_deadline() {
+    let p = Property::new(|r: &mut Rng| {
+        let available = r.range(1, 64);
+        let headroom = r.uniform(-1.0, 12.0);
+        let serial = r.uniform(1e-6, 2.0);
+        (available, headroom, serial)
+    });
+    p.check(0xBA_7C_01, 300, |&(available, headroom, serial)| {
+        let f = BatchFormer::new(BatchPolicy::Deadline);
+        let b = f.plan(available, Some(headroom), Some(serial));
+        if b < 1 || b > available.min(MAX_BATCH) {
+            return false;
+        }
+        // past a singleton, the earliest deadline clears the predicted
+        // batched service time: headroom >= serial * factor(b)
+        b == 1 || headroom >= serial * batch_factor(b)
+    });
+}
+
+#[test]
+fn prop_batch_size_is_monotone_in_headroom_and_depth() {
+    let p = Property::new(|r: &mut Rng| {
+        let available = r.range(1, 64);
+        let extra_avail = r.range(0, 64);
+        let h1 = r.uniform(-1.0, 12.0);
+        let dh = r.uniform(0.0, 12.0);
+        let serial = r.uniform(1e-6, 2.0);
+        (available, extra_avail, h1, dh, serial)
+    });
+    p.check(0xBA_7C_02, 300, |&(avail, extra, h1, dh, serial)| {
+        let f = BatchFormer::new(BatchPolicy::Deadline);
+        let base = f.plan(avail, Some(h1), Some(serial));
+        // more slack on the same queue never shrinks the batch
+        if f.plan(avail, Some(h1 + dh), Some(serial)) < base {
+            return false;
+        }
+        // a deeper queue with the same slack never shrinks it either
+        f.plan(avail + extra, Some(h1), Some(serial)) >= base
+    });
+}
+
+#[test]
+fn prop_every_policy_stays_within_availability_and_cap() {
+    let p = Property::new(|r: &mut Rng| {
+        let available = r.range(1, 128);
+        let fixed = r.range(1, MAX_BATCH);
+        let headroom = r.uniform(-2.0, 50.0);
+        let serial = r.uniform(1e-6, 2.0);
+        (available, fixed, headroom, serial)
+    });
+    p.check(0xBA_7C_03, 300, |&(available, fixed, headroom, serial)| {
+        for policy in [
+            BatchPolicy::Off,
+            BatchPolicy::Fixed(fixed),
+            BatchPolicy::Deadline,
+        ] {
+            let b = BatchFormer::new(policy)
+                .plan(available, Some(headroom), Some(serial));
+            if b < 1 || b > available.min(MAX_BATCH) {
+                return false;
+            }
+            if let BatchPolicy::Fixed(n) = policy {
+                if b > n {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_off_is_bit_compatible_with_serial_admission() {
+    let p = Property::new(|r: &mut Rng| {
+        let available = r.range(1, 128);
+        let headroom = r.uniform(-5.0, 100.0);
+        let serial = r.uniform(1e-6, 2.0);
+        let stages: Vec<f64> = (0..r.range(1, 8))
+            .map(|_| r.uniform(1e-6, 0.5))
+            .collect();
+        (available, headroom, serial, stages)
+    });
+    p.check(0xBA_7C_04, 300, |(available, headroom, serial, stages)| {
+        let f = BatchFormer::new(BatchPolicy::Off);
+        // off sizes 1 whatever the queue and slack look like
+        if f.plan(*available, Some(*headroom), Some(*serial)) != 1 {
+            return false;
+        }
+        if f.plan(*available, None, None) != 1 {
+            return false;
+        }
+        // and b=1 under the cost model is *exactly* the unbatched serial
+        // latency (factor(1) == 1.0 is an identity, not an approximation)
+        let serial_sum: f64 = stages.iter().sum();
+        batch_factor(1) == 1.0
+            && batched_serial_latency(stages, 1) == serial_sum
+    });
+}
