@@ -14,6 +14,8 @@ kinds
   live-batch    live-open plus the batch former engaged (--batch)
   live-tenants  live_<scenario>.json from `odin serve --tenants`
   batching      the `odin experiment batching` sweep artifact
+  multitenant   the `odin experiment multitenant` sweep artifact
+                (including the fairness-enforcement section)
 
 expectations (key=value args, all optional unless noted)
   name=N             doc["name"] must equal N
@@ -58,6 +60,16 @@ BATCH_CELL_KEYS = {
     "lat_p99", "mean_batch", "offered", "queued_mean", "rate_frac",
     "rate_qps", "served", "tput_achieved", "win_p99_ok_frac", "windows",
 }
+
+# One (set, scenario, rate, policy) cell of multitenant.json; cells of
+# the fairness-enforcement section add the "fairness" axis label.
+MT_CELL_KEYS = {
+    "completed", "dropped", "offered", "policy", "rebalances",
+    "slo_violations", "tenants", "unfairness",
+}
+
+# The fairness axis, in cell order.
+MT_FAIRNESS_MODES = ["reported", "wfq", "wfq+caps"]
 
 MAX_BATCH = 8
 
@@ -175,6 +187,80 @@ def check_batching(doc):
                 check_windows(cell["windows"])
 
 
+def check_mt_cell(cell, what, fairness=None):
+    want = MT_CELL_KEYS | ({"fairness"} if fairness else set())
+    check_keys(cell, want, what)
+    if fairness and cell["fairness"] != fairness:
+        fail(f"{what} fairness label {cell['fairness']!r} != {fairness!r}")
+    if cell["completed"] + cell["dropped"] != cell["offered"]:
+        fail(f"{what} does not conserve arrivals")
+    if not 0.0 <= cell["unfairness"] <= 1.0:
+        fail(f"{what} unfairness {cell['unfairness']} out of [0, 1]")
+    for t in cell["tenants"]:
+        check_keys(t, TENANT_TOTAL_KEYS, f"{what} tenant totals")
+        if t["offered"] != t["completed"] + t["dropped"]:
+            fail(f"{what} tenant {t['id']} does not conserve arrivals")
+    if sum(t["offered"] for t in cell["tenants"]) != cell["offered"]:
+        fail(f"{what} per-tenant offered does not sum to the cell's")
+
+
+def check_multitenant(doc):
+    check_keys(
+        doc,
+        {"fairness", "model", "queue_cap", "sets", "slo_level", "window"},
+        "multitenant doc",
+    )
+    if not doc["sets"]:
+        fail("no tenant sets in multitenant.json")
+    for s in doc["sets"]:
+        check_keys(s, {"name", "scenarios", "tenants"}, "multitenant set")
+        n_tenants = len(s["tenants"])
+        for sc in s["scenarios"]:
+            check_keys(
+                sc,
+                {"name", "peak_qps", "queries", "rates"},
+                "multitenant scenario",
+            )
+            for rate in sc["rates"]:
+                check_keys(
+                    rate,
+                    {"cells", "rate_frac", "total_qps"},
+                    "multitenant rate row",
+                )
+                for cell in rate["cells"]:
+                    what = (
+                        f"{s['name']}/{sc['name']}@{rate['rate_frac']}x "
+                        f"{cell.get('policy', '?')}"
+                    )
+                    check_mt_cell(cell, what)
+                    if len(cell["tenants"]) != n_tenants:
+                        fail(f"{what} tenant count != the set's")
+    # the fairness-enforcement section: one fixed (set, scenario, rate)
+    # cell swept over the fairness axis, with the enforcement guarantee
+    # itself — wfq+caps must report strictly lower unfairness than the
+    # reported-only baseline
+    f = doc["fairness"]
+    check_keys(
+        f,
+        {
+            "cells", "peak_qps", "queries", "rate_frac", "scenario",
+            "tenant_set", "total_qps",
+        },
+        "fairness section",
+    )
+    if len(f["cells"]) != len(MT_FAIRNESS_MODES):
+        fail(f"fairness axis has {len(f['cells'])} cells, want 3")
+    by_mode = {}
+    for cell, mode in zip(f["cells"], MT_FAIRNESS_MODES):
+        check_mt_cell(cell, f"fairness cell {mode}", fairness=mode)
+        by_mode[mode] = cell["unfairness"]
+    if by_mode["wfq+caps"] >= by_mode["reported"]:
+        fail(
+            f"enforcement regression: wfq+caps unfairness "
+            f"{by_mode['wfq+caps']} >= reported {by_mode['reported']}"
+        )
+
+
 def main():
     if len(sys.argv) < 3:
         fail(f"usage: {sys.argv[0]} FILE KIND [key=value ...]")
@@ -188,6 +274,14 @@ def main():
     elif kind == "batching":
         check_batching(doc)
         n = sum(len(r["cells"]) for s in doc["scenarios"] for r in s["rates"])
+    elif kind == "multitenant":
+        check_multitenant(doc)
+        n = sum(
+            len(r["cells"])
+            for s in doc["sets"]
+            for sc in s["scenarios"]
+            for r in sc["rates"]
+        ) + len(doc["fairness"]["cells"])
     else:
         fail(f"unknown kind {kind!r}")
     print(f"validate_artifact OK: {path} [{kind}] ({n} rows)")

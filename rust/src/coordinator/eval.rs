@@ -43,6 +43,46 @@ impl StageEval for DbEval<'_> {
     }
 }
 
+/// Deadline-pressure wrapper: scales each stage time by
+/// `1 + pressure * (t_i / Σt)`, amplifying the bottleneck's dominance in
+/// proportion to how urgent the queued tenant mix is
+/// ([`SloQueue::pressure`](crate::serving::SloQueue::pressure)). The
+/// scaling is strictly monotone in `t_i`, so the argmax stage — and the
+/// paper's "affected stage" — is unchanged; what shifts are ODIN's
+/// side-sum comparisons, which under pressure prefer moves that shrink
+/// the SLO-weighted bottleneck over marginal plateau shuffles. Zero
+/// pressure is the identity, bit for bit.
+pub struct PressureEval<'a> {
+    inner: &'a mut dyn StageEval,
+    pressure: f64,
+}
+
+impl<'a> PressureEval<'a> {
+    pub fn new(inner: &'a mut dyn StageEval, pressure: f64) -> PressureEval<'a> {
+        PressureEval { inner, pressure: pressure.max(0.0) }
+    }
+}
+
+impl StageEval for PressureEval<'_> {
+    fn stage_times(&mut self, config: &PipelineConfig, out: &mut Vec<f64>) {
+        self.inner.stage_times(config, out);
+        if self.pressure <= 0.0 {
+            return;
+        }
+        let total: f64 = out.iter().sum();
+        if total <= 0.0 {
+            return;
+        }
+        for t in out.iter_mut() {
+            *t *= 1.0 + self.pressure * (*t / total);
+        }
+    }
+
+    fn probes(&self) -> usize {
+        self.inner.probes()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -61,5 +101,45 @@ mod tests {
         eval.stage_times(&cfg, &mut out);
         assert_eq!(eval.probes(), 2);
         assert_eq!(out.len(), 4);
+    }
+
+    #[test]
+    fn pressure_eval_amplifies_but_preserves_argmax() {
+        let db = synthesize(&models::vgg16(64), 1);
+        let sc = vec![0usize, 9, 0, 0];
+        let cost = CostModel::new(&db, &sc);
+        let cfg = PipelineConfig::even(16, 4);
+        let mut plain = DbEval::new(&cost);
+        let mut base = Vec::new();
+        plain.stage_times(&cfg, &mut base);
+        // zero pressure is the identity (the bit-compat anchor)
+        let mut inner = DbEval::new(&cost);
+        let mut zero = PressureEval::new(&mut inner, 0.0);
+        let mut out = Vec::new();
+        zero.stage_times(&cfg, &mut out);
+        assert_eq!(out, base);
+        assert_eq!(zero.probes(), 1, "probe accounting passes through");
+        // positive pressure inflates every stage, the bottleneck most,
+        // without moving the argmax
+        let mut inner = DbEval::new(&cost);
+        let mut hot = PressureEval::new(&mut inner, 4.0);
+        let mut out = Vec::new();
+        hot.stage_times(&cfg, &mut out);
+        let argmax = |v: &[f64]| {
+            (0..v.len())
+                .max_by(|&a, &b| v[a].partial_cmp(&v[b]).unwrap())
+                .unwrap()
+        };
+        assert_eq!(argmax(&base), argmax(&out));
+        let b = argmax(&base);
+        for (i, (&o, &t)) in out.iter().zip(&base).enumerate() {
+            assert!(o >= t, "stage {i} shrank under pressure");
+            if i != b {
+                assert!(
+                    o / t < out[b] / base[b] + 1e-12,
+                    "bottleneck must inflate at least as much as stage {i}"
+                );
+            }
+        }
     }
 }

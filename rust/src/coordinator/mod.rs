@@ -16,7 +16,7 @@ pub mod monitor;
 pub mod odin;
 pub mod online;
 
-pub use eval::{DbEval, StageEval};
+pub use eval::{DbEval, PressureEval, StageEval};
 pub use exhaustive::{brute_force_optimal, optimal_config};
 pub use lls::Lls;
 pub use monitor::{Monitor, Trigger};

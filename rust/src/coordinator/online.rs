@@ -12,6 +12,7 @@ use crate::database::TimingDb;
 use crate::interference::EpScenarios;
 use crate::pipeline::{CostModel, PipelineConfig};
 
+use super::eval::{DbEval, PressureEval};
 use super::exhaustive::optimal_config;
 use super::lls::Lls;
 use super::monitor::{Monitor, Trigger};
@@ -83,6 +84,41 @@ impl OnlineController {
                 trials: 0,
                 throughput: cost.throughput(current),
             },
+        }
+    }
+
+    /// One rebalancing episode with the SLO queue's deadline pressure
+    /// folded into stage-time evaluation: search policies (ODIN, LLS)
+    /// see stage times inflated by [`PressureEval`], so their move
+    /// decisions optimize the SLO-weighted bottleneck of the queued
+    /// tenant mix rather than the aggregate one. `pressure <= 0` — and
+    /// the oracle/static policies, which don't search — delegate to
+    /// [`rebalance`](Self::rebalance) exactly.
+    pub fn rebalance_pressured(
+        &self,
+        current: &PipelineConfig,
+        db: &TimingDb,
+        sc: &EpScenarios,
+        pressure: f64,
+    ) -> RebalanceResult {
+        if pressure <= 0.0 {
+            return self.rebalance(current, db, sc);
+        }
+        let cost = CostModel::new(db, sc);
+        match &self.policy {
+            ControlPolicy::Odin(o) => {
+                let mut db_eval = DbEval::new(&cost);
+                let mut eval = PressureEval::new(&mut db_eval, pressure);
+                o.rebalance_with(current, &mut eval)
+            }
+            ControlPolicy::Lls(l) => {
+                let mut db_eval = DbEval::new(&cost);
+                let mut eval = PressureEval::new(&mut db_eval, pressure);
+                l.rebalance_with(current, &mut eval)
+            }
+            ControlPolicy::Oracle | ControlPolicy::Static => {
+                self.rebalance(current, db, sc)
+            }
         }
     }
 

@@ -18,7 +18,7 @@ use crate::interference::dynamic::{DynamicScenario, ScenarioAxis};
 use crate::interference::Schedule;
 use crate::json::Value;
 use crate::models;
-use crate::serving::tenant::{self, tally, totals_json, TenantSet};
+use crate::serving::tenant::{self, tally, totals_json, Fairness, TenantSet};
 use crate::simulator::window::{attach_tenant_windows, window_metrics, windows_json};
 use crate::simulator::{simulate_tenants_policies, MtSimResult, Policy, SimConfig};
 use crate::util::error::Result;
@@ -39,16 +39,32 @@ pub const MT_POLICIES: [Policy; 3] =
 pub const MT_QUEUE_CAP: usize = 64;
 /// The model the sweep runs on.
 pub const MT_MODEL: &str = "vgg16";
+/// Fairness axis of the enforcement section: the same cell under the
+/// report-only queue, WFQ/DRR admission, and WFQ plus occupancy caps.
+pub const MT_FAIRNESS: [Fairness; 3] =
+    [Fairness::Reported, Fairness::Wfq, Fairness::WfqCaps];
+/// The enforcement section's fixed cell: the `mixed` set (steady
+/// double-weight interactive tenant vs a spiky batch tenant in one SLA
+/// class) on `burst` at 1.2x peak under ODIN — the regime where
+/// report-only admission degenerates to arrival order and the burst
+/// crowds the interactive tenant out.
+pub const MT_FAIRNESS_SET: &str = "mixed";
+pub const MT_FAIRNESS_SCENARIO: &str = "burst";
+pub const MT_FAIRNESS_RATE_FRAC: f64 = 1.2;
+pub const MT_FAIRNESS_POLICY: Policy = Policy::Odin { alpha: 2 };
 
 /// Run `policies` against one scenario under one tenant set: identical
 /// schedule, identical merged arrival stream, SLO-aware queue bounded at
-/// `queue_cap`. Shared by this experiment and `odin simulate --tenants`.
+/// `queue_cap` holding tenants to their weights per `fairness`
+/// ([`Fairness::Reported`] = the historical report-only queue, bit for
+/// bit). Shared by this experiment and `odin simulate --tenants`.
 pub fn run_tenant_scenario(
     db: &TimingDb,
     scenario: &DynamicScenario,
     tenants: &TenantSet,
     policies: &[Policy],
     queue_cap: usize,
+    fairness: Fairness,
     queries: usize,
     jobs: usize,
 ) -> Result<(Schedule, Vec<MtSimResult>)> {
@@ -59,6 +75,7 @@ pub fn run_tenant_scenario(
             SimConfig::new(scenario.num_eps, p)
                 .with_window(DYN_WINDOW)
                 .with_queue_cap(queue_cap)
+                .with_fairness(fairness)
         })
         .collect();
     let results = simulate_tenants_policies(
@@ -140,9 +157,13 @@ pub fn mt_scenario_json(
     ])
 }
 
-/// Compact per-cell JSON for the sweep artifact (totals only — the full
+/// The shared key/value pairs of one sweep cell (totals only — the full
 /// window timelines live in the CLI's per-run documents).
-fn cell_json(policy: Policy, tenants: &TenantSet, r: &MtSimResult) -> Value {
+fn cell_pairs(
+    policy: Policy,
+    tenants: &TenantSet,
+    r: &MtSimResult,
+) -> Vec<(&'static str, Value)> {
     let totals = tally(
         tenants,
         &r.tenant,
@@ -155,7 +176,7 @@ fn cell_json(policy: Policy, tenants: &TenantSet, r: &MtSimResult) -> Value {
     // per-tenant columns use, so the summary cannot drift from them
     let unfairness = tenant::unfairness(&totals);
     let blown_total = r.blown.iter().filter(|&&b| b).count();
-    Value::obj(vec![
+    vec![
         ("completed", Value::from(r.result.latencies.len())),
         ("dropped", Value::from(r.result.dropped_at.len())),
         ("offered", Value::from(r.result.offered)),
@@ -164,7 +185,26 @@ fn cell_json(policy: Policy, tenants: &TenantSet, r: &MtSimResult) -> Value {
         ("slo_violations", Value::from(blown_total)),
         ("tenants", totals_json(&totals)),
         ("unfairness", Value::from(unfairness)),
-    ])
+    ]
+}
+
+/// Compact per-cell JSON for the sweep artifact — the historical 8-key
+/// schema, untouched by the fairness section.
+fn cell_json(policy: Policy, tenants: &TenantSet, r: &MtSimResult) -> Value {
+    Value::obj(cell_pairs(policy, tenants, r))
+}
+
+/// A fairness-section cell: the same 8 columns plus the `fairness` axis
+/// label (keys stay alphabetical for the byte-stable writer).
+fn fairness_cell_json(
+    fairness: Fairness,
+    policy: Policy,
+    tenants: &TenantSet,
+    r: &MtSimResult,
+) -> Value {
+    let mut pairs = cell_pairs(policy, tenants, r);
+    pairs.insert(2, ("fairness", Value::from(fairness.spec())));
+    Value::obj(pairs)
 }
 
 pub fn run(ctx: &ExpCtx) -> Result<()> {
@@ -212,6 +252,7 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
                     &tenants,
                     &MT_POLICIES,
                     MT_QUEUE_CAP,
+                    Fairness::Reported,
                     queries,
                     ctx.jobs,
                 )?;
@@ -263,8 +304,74 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
             ),
         ]));
     }
+    // the enforcement section: one fixed cell swept over the fairness
+    // axis — report-only vs WFQ/DRR vs WFQ + occupancy caps, identical
+    // stream, identical schedule
+    let fairness_val = {
+        let scenario = crate::interference::dynamic::builtin(
+            MT_FAIRNESS_SCENARIO,
+        )?
+        .scaled(ctx.queries)?;
+        let queries = match scenario.axis {
+            ScenarioAxis::Queries => scenario.num_queries,
+            ScenarioAxis::Millis => ctx.queries,
+        };
+        let peak = {
+            let clean = vec![0usize; scenario.num_eps];
+            let (_, bottleneck) = crate::coordinator::optimal_config(
+                &db,
+                &clean,
+                scenario.num_eps,
+            );
+            1.0 / bottleneck
+        };
+        let total_qps = MT_FAIRNESS_RATE_FRAC * peak;
+        let tenants = tenant::builtin(MT_FAIRNESS_SET)?
+            .with_total_rate(total_qps)?;
+        let mut cells = Vec::with_capacity(MT_FAIRNESS.len());
+        for fairness in MT_FAIRNESS {
+            let (_, results) = run_tenant_scenario(
+                &db,
+                &scenario,
+                &tenants,
+                &[MT_FAIRNESS_POLICY],
+                MT_QUEUE_CAP,
+                fairness,
+                queries,
+                ctx.jobs,
+            )?;
+            let v = fairness_cell_json(
+                fairness,
+                MT_FAIRNESS_POLICY,
+                &tenants,
+                &results[0],
+            );
+            out.line(format!(
+                "# fairness {:<8} {}@{:.1}x {}: unfairness {:.4}, \
+                 completed {}, dropped {}",
+                fairness.spec(),
+                MT_FAIRNESS_SCENARIO,
+                MT_FAIRNESS_RATE_FRAC,
+                MT_FAIRNESS_SET,
+                v.get("unfairness").as_f64().unwrap_or(-1.0),
+                v.get("completed").as_usize().unwrap_or(0),
+                v.get("dropped").as_usize().unwrap_or(0),
+            ));
+            cells.push(v);
+        }
+        Value::obj(vec![
+            ("cells", Value::arr(cells)),
+            ("peak_qps", Value::from(peak)),
+            ("queries", Value::from(queries)),
+            ("rate_frac", Value::from(MT_FAIRNESS_RATE_FRAC)),
+            ("scenario", Value::from(MT_FAIRNESS_SCENARIO)),
+            ("tenant_set", Value::from(MT_FAIRNESS_SET)),
+            ("total_qps", Value::from(total_qps)),
+        ])
+    };
     if let Some(dir) = &ctx.out_dir {
         let doc = Value::obj(vec![
+            ("fairness", fairness_val),
             ("model", Value::from(MT_MODEL)),
             ("queue_cap", Value::from(MT_QUEUE_CAP)),
             ("sets", Value::arr(set_vals)),
@@ -303,6 +410,7 @@ mod tests {
                 &tenants,
                 &MT_POLICIES,
                 MT_QUEUE_CAP,
+                Fairness::Reported,
                 400,
                 jobs,
             )
@@ -348,6 +456,67 @@ mod tests {
     }
 
     #[test]
+    fn enforced_fairness_lowers_unfairness_on_the_mixed_burst() {
+        // the artifact's acceptance cell: the `mixed` set on `burst` at
+        // 1.2x peak under ODIN. Report-only admission degenerates to
+        // arrival order (one class, equal deadline offsets), so the
+        // batch tenant's sustained 6x burst crowds the double-weight
+        // interactive tenant down to its arrival share; WFQ + caps must
+        // hold it near its weight share instead — strictly lower
+        // unfairness, with the per-tenant ledger conserved in both.
+        let spec = models::build(MT_MODEL, 64).unwrap();
+        let db = synthesize(&spec, 42);
+        let scenario = builtin(MT_FAIRNESS_SCENARIO)
+            .unwrap()
+            .scaled(600)
+            .unwrap();
+        let peak = {
+            let (_, b) =
+                crate::coordinator::optimal_config(&db, &vec![0usize; 4], 4);
+            1.0 / b
+        };
+        let tenants = tenant::builtin(MT_FAIRNESS_SET)
+            .unwrap()
+            .with_total_rate(MT_FAIRNESS_RATE_FRAC * peak)
+            .unwrap();
+        let unfairness_of = |fairness: Fairness| {
+            let (_, results) = run_tenant_scenario(
+                &db,
+                &scenario,
+                &tenants,
+                &[MT_FAIRNESS_POLICY],
+                MT_QUEUE_CAP,
+                fairness,
+                600,
+                1,
+            )
+            .unwrap();
+            let r = &results[0];
+            assert_eq!(
+                r.result.offered,
+                r.result.latencies.len() + r.result.dropped_at.len(),
+                "{fairness:?}: ledger must conserve offered arrivals"
+            );
+            let totals = tally(
+                &tenants,
+                &r.tenant,
+                &r.blown,
+                &r.result.queued,
+                &r.result.latencies,
+                &r.dropped_tenant,
+            );
+            tenant::unfairness(&totals)
+        };
+        let reported = unfairness_of(Fairness::Reported);
+        let capped = unfairness_of(Fairness::WfqCaps);
+        assert!(
+            capped < reported,
+            "wfq+caps must beat report-only on the acceptance cell: \
+             got {capped:.4} vs {reported:.4}"
+        );
+    }
+
+    #[test]
     fn tight_tenant_suffers_more_under_overload() {
         // the tiers set at 1.3x peak: the 60ms gold tenant records SLO
         // violations or sheds while 600ms bronze keeps a lower blow rate
@@ -369,6 +538,7 @@ mod tests {
             &tenants,
             &[Policy::Static],
             32,
+            Fairness::Reported,
             600,
             1,
         )

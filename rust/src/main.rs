@@ -41,7 +41,7 @@ use odin::runtime::{
     SynthBackend, Tensor,
 };
 use odin::serving::{
-    live_json, tenant, BatchPolicy, HarnessOpts, PipelineServer,
+    live_json, tenant, BatchPolicy, Fairness, HarnessOpts, PipelineServer,
     ScenarioDriver, ServeReport, ServerOpts, Workload, BATCH_SLACK_FACTOR,
 };
 use odin::simulator::{
@@ -173,6 +173,12 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
             "batch former for open workloads in scenario mode: off | \
              fixed:<n> | deadline",
         )
+        .flag(
+            "fairness",
+            "reported",
+            "tenant fairness enforcement for --tenants: reported | wfq | \
+             wfq+caps",
+        )
         .flag("jobs", "1", "worker threads for the scenario policy sweep")
         .flag("out", "results", "output dir for scenario JSON ('' = none)")
         .switch("no-interference", "run a clean window");
@@ -185,6 +191,12 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
     }
     // the policy-sweep flags only exist in scenario mode; reject them
     // here rather than silently ignoring them
+    if args.was_given("fairness") {
+        bail!(
+            "--fairness requires --tenants: fairness enforcement is a \
+             property of the multi-tenant SLO queue"
+        );
+    }
     for flag in ["jobs", "out", "workload", "queue-cap", "batch"] {
         if args.was_given(flag) {
             bail!("--{flag} only applies to `simulate --scenario <name|file>`");
@@ -254,6 +266,12 @@ fn cmd_simulate_scenario(args: &Args) -> Result<()> {
     }
     if args.has("no-interference") {
         bail!("--no-interference cannot be combined with --scenario");
+    }
+    if args.was_given("fairness") {
+        bail!(
+            "--fairness requires --tenants: fairness enforcement is a \
+             property of the multi-tenant SLO queue"
+        );
     }
     let mut scenario = resolve(args.get("scenario"))?;
     if args.was_given("queries") {
@@ -445,12 +463,14 @@ fn cmd_simulate_tenants(args: &Args) -> Result<()> {
     ];
     let jobs = args.usize("jobs")?.max(1);
     let queue_cap = args.usize("queue-cap")?.max(1);
+    let fairness = Fairness::parse(args.get("fairness"))?;
     let (schedule, results) = run_tenant_scenario(
         &db,
         &scenario,
         &tenants,
         &policies,
         queue_cap,
+        fairness,
         queries_run,
         jobs,
     )?;
@@ -486,12 +506,18 @@ fn cmd_simulate_tenants(args: &Args) -> Result<()> {
     if !args.get("out").is_empty() {
         let dir = std::path::Path::new(args.get("out"));
         std::fs::create_dir_all(dir)?;
-        let doc = Value::obj(vec![
+        let mut top = vec![
             ("model", Value::from(args.get("model"))),
             ("scenario", doc_scenario),
             ("slo_level", Value::from(DYN_SLO_LEVEL)),
             ("window", Value::from(DYN_WINDOW)),
-        ]);
+        ];
+        // conditional like the batch bump: reported-mode documents keep
+        // their historical top-level key set byte-for-byte
+        if fairness.enforced() {
+            top.insert(0, ("fairness", Value::from(fairness.spec())));
+        }
+        let doc = Value::obj(top);
         let path = dir.join(format!(
             "tenants_{}_{}.json",
             tenants.name, scenario.name
@@ -620,6 +646,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             "batch former for open workloads in scenario mode: off | \
              fixed:<n> | deadline",
         )
+        .flag(
+            "fairness",
+            "reported",
+            "tenant fairness enforcement for --tenants: reported | wfq | \
+             wfq+caps",
+        )
         .flag("query-ms", "2", "synthetic per-query work budget, ms")
         .flag("spatial", "16", "model input resolution (scenario mode)")
         .flag(
@@ -643,6 +675,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     // (audited against the full flag set: every flag that only scenario
     // mode reads — including the new workload surface — must fail fast
     // here, with was_given for value flags and has for switches)
+    if args.was_given("fairness") {
+        bail!(
+            "--fairness requires --tenants: fairness enforcement is a \
+             property of the multi-tenant SLO queue"
+        );
+    }
     for flag in [
         "out",
         "auto-threshold",
@@ -693,6 +731,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
 /// emit `live_<name>.json` whose per-window rows share the simulator's
 /// exact window schema (diff it against `scenario_<name>.json`).
 fn cmd_serve_scenario(args: &Args) -> Result<()> {
+    if args.was_given("fairness") {
+        bail!(
+            "--fairness requires --tenants: fairness enforcement is a \
+             property of the multi-tenant SLO queue"
+        );
+    }
     let base = resolve(args.get("scenario"))?;
     let queries = args.usize("queries")?;
     let eps = args.usize_opt("eps")?.unwrap_or(base.num_eps);
@@ -842,6 +886,7 @@ fn cmd_serve_tenants(args: &Args) -> Result<()> {
         cores_per_ep = (affinity::num_cpus() / eps).max(1);
     }
     let depth = args.usize("admission-depth")?.max(1);
+    let fairness = Fairness::parse(args.get("fairness"))?;
     let opts = ServerOpts {
         num_eps: eps,
         cores_per_ep,
@@ -849,6 +894,7 @@ fn cmd_serve_tenants(args: &Args) -> Result<()> {
         detect_threshold: args.f64("threshold")?,
         admission_depth: depth,
         queue_cap: args.usize("queue-cap")?.max(1),
+        fairness,
         ..ServerOpts::default()
     };
     let mut server =

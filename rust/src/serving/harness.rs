@@ -619,6 +619,9 @@ impl ScenarioDriver {
         let arrivals = tenants.arrivals(n)?;
         let deadline_s = tenants.deadlines_s();
         let class = tenants.classes();
+        // install the fairness policy (opts.fairness) before the first
+        // arrival; Reported leaves the queue exactly as before
+        server.configure_tenants(tenants);
         let depth = server.admission_depth();
         let log_start = server.rebalance_log.len();
         let done_start = server.queries_done();
@@ -1034,6 +1037,7 @@ mod tests {
                 confirm_triggers: 1,
                 admission_depth: 2,
                 queue_cap: 256,
+                fairness: crate::serving::Fairness::Reported,
             },
         );
         let inputs =
@@ -1196,6 +1200,7 @@ mod tests {
                 confirm_triggers: 1,
                 admission_depth: 1,
                 queue_cap: 4,
+                fairness: crate::serving::Fairness::Reported,
             },
         );
         let driver = ScenarioDriver::new(
@@ -1447,6 +1452,7 @@ mod tests {
                     confirm_triggers: 1,
                     admission_depth: depth,
                     queue_cap: 64,
+                    fairness: crate::serving::Fairness::Reported,
                 },
             );
             let driver = ScenarioDriver::new(

@@ -24,7 +24,7 @@ pub use server::{
 };
 pub use stats::ServeReport;
 pub use tenant::{
-    SloEntry, SloPush, SloQueue, TenantArrival, TenantSet, TenantSpec,
-    TenantTotals, TENANT_BUILTIN_NAMES,
+    Fairness, SloEntry, SloPush, SloQueue, TenantArrival, TenantSet,
+    TenantSpec, TenantTotals, TENANT_BUILTIN_NAMES,
 };
 pub use workload::{ArrivalProcess, RatePhase, Workload};

@@ -18,7 +18,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::coordinator::{Monitor, Odin, RebalanceResult};
+use crate::coordinator::{Monitor, Odin, PressureEval, RebalanceResult};
 use crate::pipeline::PipelineConfig;
 use crate::runtime::{ExecHandle, Tensor};
 use crate::util::affinity;
@@ -26,7 +26,7 @@ use crate::util::error::Result;
 use crate::{bail, err};
 
 use super::live_eval::LiveEval;
-use super::tenant::{SloPush, SloQueue};
+use super::tenant::{Fairness, SloPush, SloQueue, TenantSet};
 
 /// A query travelling the pipeline (the head of its batch).
 struct QueryMsg {
@@ -121,6 +121,11 @@ pub struct ServerOpts {
     /// Only open-loop driving queues; closed-loop admission bypasses the
     /// queue entirely.
     pub queue_cap: usize,
+    /// How hard the arrival queue holds tenants to their weights
+    /// (enforced only after [`PipelineServer::configure_tenants`]
+    /// installs the tenant set; [`Fairness::Reported`] is the
+    /// historical EDF-only behavior, bit for bit).
+    pub fairness: Fairness,
 }
 
 impl Default for ServerOpts {
@@ -133,6 +138,7 @@ impl Default for ServerOpts {
             confirm_triggers: 2,
             admission_depth: 1,
             queue_cap: 256,
+            fairness: Fairness::Reported,
         }
     }
 }
@@ -377,6 +383,24 @@ impl PipelineServer {
                 false
             }
         }
+    }
+
+    /// Install a tenant set's fairness policy (`opts.fairness`) on the
+    /// arrival queue: under WFQ modes admission serves tenants in
+    /// deficit-round-robin order with weight-proportional quanta and —
+    /// with caps — bounds each tenant's queue occupancy to its
+    /// [`queue_share`](super::tenant::TenantSpec::queue_share). Call
+    /// before the first [`enqueue_tenant`](Self::enqueue_tenant);
+    /// [`Fairness::Reported`] is a no-op.
+    pub fn configure_tenants(&mut self, tenants: &TenantSet) {
+        self.queue.configure_fairness(self.opts.fairness, tenants);
+    }
+
+    /// Deadline pressure of the queued tenant mix right now (0 when the
+    /// queue is deadline-free or fairness is not enforced) — the signal
+    /// [`rebalance_now`](Self::rebalance_now) folds into live probes.
+    pub fn queue_pressure(&self) -> f64 {
+        self.queue.pressure(self.rel(Instant::now()))
     }
 
     /// Offer one multi-tenant arrival: stamped with its due time, its
@@ -743,7 +767,17 @@ impl PipelineServer {
         let mut eval = LiveEval::new(self.handle.clone(), probe_input);
         let odin = Odin::new(self.opts.alpha);
         let old = self.config.clone();
-        let result: RebalanceResult = odin.rebalance_with(&self.config, &mut eval);
+        // fold the queued tenant mix's deadline pressure into probe
+        // times so the search optimizes the SLO-weighted bottleneck;
+        // zero pressure (always true without enforced fairness) is the
+        // historical path, bit for bit
+        let pressure = self.queue.pressure(self.rel(Instant::now()));
+        let result: RebalanceResult = if pressure > 0.0 {
+            let mut pressured = PressureEval::new(&mut eval, pressure);
+            odin.rebalance_with(&self.config, &mut pressured)
+        } else {
+            odin.rebalance_with(&self.config, &mut eval)
+        };
         crate::log_info!(
             "rebalance at query {}: {} -> {} ({} trials)",
             self.queries_done,
@@ -832,6 +866,7 @@ mod tests {
                 confirm_triggers: 1,
                 admission_depth: depth,
                 queue_cap: 4,
+                fairness: Fairness::Reported,
             },
         )
     }

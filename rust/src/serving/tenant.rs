@@ -55,8 +55,13 @@ pub struct TenantSpec {
     /// while a higher one is waiting.
     pub priority: usize,
     /// Fairness weight: the tenant's intended share of completions is
-    /// `weight / Σ weights` (reported, not enforced by the queue).
+    /// `weight / Σ weights` — always reported; enforced by the queue when
+    /// a [`Fairness`] mode beyond [`Fairness::Reported`] is installed.
     pub weight: f64,
+    /// Fraction of the queue bound this tenant may occupy under
+    /// [`Fairness::WfqCaps`]; `None` defaults to the tenant's weight
+    /// share (`weight / Σ weights`). Must lie in `(0, 1]`.
+    pub queue_share: Option<f64>,
 }
 
 impl TenantSpec {
@@ -163,6 +168,15 @@ impl TenantSet {
                     t.weight
                 );
             }
+            if let Some(q) = t.queue_share {
+                if !q.is_finite() || q <= 0.0 || q > 1.0 {
+                    bail!(
+                        "{} ({:?}): queue_share {q} must lie in (0, 1]",
+                        what(),
+                        t.id
+                    );
+                }
+            }
             for (j, other) in self.tenants[..i].iter().enumerate() {
                 if other.id == t.id {
                     bail!(
@@ -197,6 +211,22 @@ impl TenantSet {
     /// Tenant ids, indexed by tenant.
     pub fn ids(&self) -> Vec<String> {
         self.tenants.iter().map(|t| t.id.clone()).collect()
+    }
+
+    /// Fairness weights, indexed by tenant.
+    pub fn weights(&self) -> Vec<f64> {
+        self.tenants.iter().map(|t| t.weight).collect()
+    }
+
+    /// Resolved per-tenant queue shares: the explicit `queue_share` where
+    /// given, the weight share (`weight / Σ weights`) otherwise. Always
+    /// positive; validation pins explicit shares to `(0, 1]`.
+    pub fn queue_shares(&self) -> Vec<f64> {
+        let wsum: f64 = self.tenants.iter().map(|t| t.weight).sum();
+        self.tenants
+            .iter()
+            .map(|t| t.queue_share.unwrap_or(t.weight / wsum.max(1e-12)))
+            .collect()
     }
 
     /// The first `n` merged arrivals across every tenant, in time order
@@ -249,6 +279,21 @@ impl TenantSet {
                 self.name
             );
         }
+        // A tenant without a mean rate (a zero-span trace) would silently
+        // drop out of the total and then fail — or worse, scale the rest
+        // around a hole. Name the offender up front instead.
+        for t in &self.tenants {
+            if t.workload.mean_rate().is_none() {
+                bail!(
+                    "tenant set {:?}: tenant {:?} has workload {:?} with \
+                     no mean rate — rescaling needs every tenant on a \
+                     rate-bearing workload",
+                    self.name,
+                    t.id,
+                    t.workload.spec()
+                );
+            }
+        }
         let current = self.total_rate_qps();
         if current <= 0.0 {
             bail!(
@@ -269,6 +314,7 @@ impl TenantSet {
                     deadline_ms: t.deadline_ms,
                     priority: t.priority,
                     weight: t.weight,
+                    queue_share: t.queue_share,
                 })
             })
             .collect::<Result<Vec<_>>>()?;
@@ -291,7 +337,10 @@ impl TenantSet {
     ///
     /// `workload` is any open-loop [`Workload::parse`] spec
     /// (`poisson:<rate>qps[@seed]` or `trace:<file.json>`); `priority`
-    /// defaults to 0 and `weight` to 1.
+    /// defaults to 0 and `weight` to 1. The optional `queue_share`
+    /// (a fraction in `(0, 1]`) caps the tenant's slice of the queue
+    /// bound under `--fairness wfq+caps`; it defaults to the tenant's
+    /// weight share.
     pub fn from_json(v: &Value) -> Result<TenantSet> {
         if v.as_obj().is_none() {
             bail!("tenant set document must be a JSON object");
@@ -319,12 +368,20 @@ impl TenantSet {
             let what = format!("tenant {i}");
             if let Some(obj) = tv.as_obj() {
                 for k in obj.keys() {
-                    if !["deadline_ms", "id", "priority", "weight", "workload"]
-                        .contains(&k.as_str())
+                    if ![
+                        "deadline_ms",
+                        "id",
+                        "priority",
+                        "queue_share",
+                        "weight",
+                        "workload",
+                    ]
+                    .contains(&k.as_str())
                     {
                         bail!(
                             "{what}: unknown field {k:?} (allowed: \
-                             deadline_ms, id, priority, weight, workload)"
+                             deadline_ms, id, priority, queue_share, \
+                             weight, workload)"
                         );
                     }
                 }
@@ -362,7 +419,20 @@ impl TenantSet {
                     err!("{what}: field \"weight\" must be a number")
                 })?,
             };
-            tenants.push(TenantSpec { id, workload, deadline_ms, priority, weight });
+            let queue_share = match tv.get("queue_share") {
+                Value::Null => None,
+                other => Some(other.as_f64().ok_or_else(|| {
+                    err!("{what}: field \"queue_share\" must be a number")
+                })?),
+            };
+            tenants.push(TenantSpec {
+                id,
+                workload,
+                deadline_ms,
+                priority,
+                weight,
+                queue_share,
+            });
         }
         TenantSet::new(name, tenants)
     }
@@ -392,6 +462,7 @@ pub fn builtin(name: &str) -> Result<TenantSet> {
             deadline_ms,
             priority,
             weight,
+            queue_share: None,
         })
     };
     match name {
@@ -412,25 +483,31 @@ pub fn builtin(name: &str) -> Result<TenantSet> {
                 spec("b", "poisson:120qps@19", 150.0, 0, 1.0)?,
             ],
         ),
-        // a latency-critical realtime tenant sharing with a spiky batch
-        // tenant whose rate quadruples halfway through its phase budget
+        // a double-weight steady interactive tenant sharing one SLA class
+        // with a spiky batch tenant whose rate sextuples after a short
+        // warmup and stays hot to the horizon. Equal deadline offsets
+        // make reported-mode admission (global EDF) degenerate to
+        // arrival order, so the burst crowds `rt` down to its arrival
+        // share; WFQ/DRR holds it at its weight share instead — the
+        // enforcement stress case.
         "mixed" => {
             let batch = TenantSpec {
                 id: "batch".to_string(),
                 workload: Workload::phased(
                     vec![
-                        super::workload::RatePhase { queries: 200, rate_qps: 40.0 },
-                        super::workload::RatePhase { queries: 200, rate_qps: 240.0 },
+                        super::workload::RatePhase { queries: 40, rate_qps: 40.0 },
+                        super::workload::RatePhase { queries: 360, rate_qps: 240.0 },
                     ],
                     23,
                 )?,
-                deadline_ms: 1000.0,
-                priority: 1,
+                deadline_ms: 300.0,
+                priority: 0,
                 weight: 1.0,
+                queue_share: None,
             };
             TenantSet::new(
                 "mixed",
-                vec![spec("rt", "poisson:100qps@29", 50.0, 0, 1.0)?, batch],
+                vec![spec("rt", "poisson:100qps@29", 300.0, 0, 2.0)?, batch],
             )
         }
         other => bail!(
@@ -456,6 +533,57 @@ pub fn resolve(spec: &str) -> Result<TenantSet> {
             "unknown tenant set {spec:?}: not a builtin ({}) and not a file",
             TENANT_BUILTIN_NAMES.join(", ")
         )),
+    }
+}
+
+// -- fairness modes -----------------------------------------------------
+
+/// How hard the queue holds tenants to their weights.
+///
+/// * [`Reported`](Fairness::Reported) — PR-5 behavior, the default:
+///   global EDF within the highest priority class; weights only feed the
+///   `unfairness` report. Every pre-existing artifact is produced in this
+///   mode, bit for bit.
+/// * [`Wfq`](Fairness::Wfq) — weighted fair queueing: admission serves
+///   tenants in deficit-round-robin order with weight-proportional
+///   quanta *within* the highest priority class, EDF within each
+///   tenant's own backlog.
+/// * [`WfqCaps`](Fairness::WfqCaps) — WFQ plus per-tenant occupancy
+///   caps ([`TenantSpec::queue_share`] of the queue bound): a bursting
+///   tenant sheds its *own* overflow instead of evicting everyone else.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Fairness {
+    #[default]
+    Reported,
+    Wfq,
+    WfqCaps,
+}
+
+impl Fairness {
+    /// Parse a CLI/JSON spec: `reported | wfq | wfq+caps`.
+    pub fn parse(spec: &str) -> Result<Fairness> {
+        match spec {
+            "reported" => Ok(Fairness::Reported),
+            "wfq" => Ok(Fairness::Wfq),
+            "wfq+caps" => Ok(Fairness::WfqCaps),
+            other => Err(err!(
+                "unknown fairness mode {other:?} (reported | wfq | wfq+caps)"
+            )),
+        }
+    }
+
+    /// The canonical spec string, inverse of [`parse`](Self::parse).
+    pub fn spec(&self) -> &'static str {
+        match self {
+            Fairness::Reported => "reported",
+            Fairness::Wfq => "wfq",
+            Fairness::WfqCaps => "wfq+caps",
+        }
+    }
+
+    /// Whether the queue actively enforces weights in this mode.
+    pub fn enforced(&self) -> bool {
+        !matches!(self, Fairness::Reported)
     }
 }
 
@@ -493,21 +621,91 @@ pub enum SloPush<P> {
     Shed,
 }
 
-/// Bounded priority/EDF queue with deadline-aware shedding. Pop order:
-/// lowest class first; within a class, earliest deadline first, with
-/// deadline-free entries last; all ties broken by enqueue order. With
-/// only deadline-free class-0 entries this is exactly a bounded FIFO.
+/// Installed fairness state: weights, quanta and caps indexed by tenant,
+/// plus the DRR scan position. Entries whose tenant index falls outside
+/// the configured set degrade to weight 1 / quantum 1 / no cap.
+#[derive(Debug)]
+struct FairState {
+    mode: Fairness,
+    weights: Vec<f64>,
+    /// DRR credit per visit, `weight / min weight` — always >= 1, so a
+    /// visited backlogged tenant serves at least one entry (no idle
+    /// scans) and long-run service stays weight-proportional.
+    quanta: Vec<f64>,
+    /// Occupancy bound per tenant under [`Fairness::WfqCaps`].
+    caps: Vec<usize>,
+    /// Live occupancy per tenant (all classes).
+    counts: Vec<usize>,
+    deficit: Vec<f64>,
+    /// Tenant index the DRR scan starts from.
+    cursor: usize,
+}
+
+/// Bounded priority/EDF queue with deadline-aware shedding. Default pop
+/// order: lowest class first; within a class, earliest deadline first,
+/// with deadline-free entries last; all ties broken by enqueue order.
+/// With only deadline-free class-0 entries this is exactly a bounded
+/// FIFO. Installing an enforcing [`Fairness`] mode (via
+/// [`configure_fairness`](Self::configure_fairness)) replaces the
+/// within-class order by deficit round robin across tenants, EDF within
+/// each tenant's backlog.
 #[derive(Debug)]
 pub struct SloQueue<P> {
     cap: usize,
     seq: usize,
     entries: Vec<SloEntry<P>>,
+    fair: Option<FairState>,
 }
 
 impl<P> SloQueue<P> {
     pub fn new(cap: usize) -> SloQueue<P> {
         assert!(cap >= 1, "queue cap must be >= 1");
-        SloQueue { cap, seq: 0, entries: Vec::new() }
+        SloQueue { cap, seq: 0, entries: Vec::new(), fair: None }
+    }
+
+    /// Install (or clear) a fairness mode for the given tenant set.
+    /// [`Fairness::Reported`] clears every enforcement structure, so the
+    /// queue is indistinguishable from a freshly built one — the
+    /// bit-compatibility anchor for all pre-existing artifacts.
+    pub fn configure_fairness(&mut self, mode: Fairness, set: &TenantSet) {
+        if !mode.enforced() {
+            self.fair = None;
+            return;
+        }
+        let weights = set.weights();
+        let wmin = weights.iter().cloned().fold(f64::INFINITY, f64::min);
+        let quanta: Vec<f64> =
+            weights.iter().map(|w| w / wmin.max(1e-12)).collect();
+        let caps: Vec<usize> = set
+            .queue_shares()
+            .iter()
+            .map(|s| ((s * self.cap as f64).floor() as usize).max(1))
+            .collect();
+        let n = weights.len();
+        self.fair = Some(FairState {
+            mode,
+            weights,
+            quanta,
+            caps,
+            counts: vec![0; n],
+            deficit: vec![0.0; n],
+            cursor: 0,
+        });
+        // entries may already be queued (live reconfiguration): rebuild
+        // the occupancy ledger from them
+        if let Some(f) = &mut self.fair {
+            for e in &self.entries {
+                if e.tenant >= f.counts.len() {
+                    f.counts.resize(e.tenant + 1, 0);
+                }
+                f.counts[e.tenant] += 1;
+            }
+        }
+    }
+
+    /// The installed fairness mode ([`Fairness::Reported`] when none).
+    pub fn fairness(&self) -> Fairness {
+        self.fair.as_ref().map_or(Fairness::Reported, |f| f.mode)
     }
 
     pub fn len(&self) -> usize {
@@ -528,12 +726,55 @@ impl<P> SloQueue<P> {
         (e.class, e.deadline.unwrap_or(f64::INFINITY), e.seq)
     }
 
+    /// EDF key within one class / one tenant's backlog.
+    fn edf_key(e: &SloEntry<P>) -> (f64, usize) {
+        (e.deadline.unwrap_or(f64::INFINITY), e.seq)
+    }
+
     fn best_idx(&self) -> Option<usize> {
-        (0..self.entries.len()).min_by(|&a, &b| {
-            Self::key(&self.entries[a])
-                .partial_cmp(&Self::key(&self.entries[b]))
-                .expect("deadlines validated finite")
-        })
+        match &self.fair {
+            Some(f) => self.drr_idx(f),
+            None => (0..self.entries.len()).min_by(|&a, &b| {
+                Self::key(&self.entries[a])
+                    .partial_cmp(&Self::key(&self.entries[b]))
+                    .expect("deadlines validated finite")
+            }),
+        }
+    }
+
+    /// DRR selection, side-effect free: the next entry is the EDF-min of
+    /// the first tenant — scanning cyclically from the cursor — with
+    /// backlog in the top waiting class. Credit/debit/cursor bookkeeping
+    /// lives in [`pop`](Self::pop), so `peek` always agrees with the
+    /// next `pop`.
+    fn drr_idx(&self, f: &FairState) -> Option<usize> {
+        let top = self.entries.iter().map(|e| e.class).min()?;
+        let n = f.counts.len().max(1);
+        for step in 0..n {
+            let u = (f.cursor + step) % n;
+            let best = (0..self.entries.len())
+                .filter(|&i| {
+                    self.entries[i].tenant == u && self.entries[i].class == top
+                })
+                .min_by(|&a, &b| {
+                    Self::edf_key(&self.entries[a])
+                        .partial_cmp(&Self::edf_key(&self.entries[b]))
+                        .expect("deadlines validated finite")
+                });
+            if best.is_some() {
+                return best;
+            }
+        }
+        // top-class entries labeled with tenants outside the configured
+        // set (defensive — both worlds configure from the set that
+        // labels the arrivals): plain EDF over them
+        (0..self.entries.len())
+            .filter(|&i| self.entries[i].class == top)
+            .min_by(|&a, &b| {
+                Self::edf_key(&self.entries[a])
+                    .partial_cmp(&Self::edf_key(&self.entries[b]))
+                    .expect("deadlines validated finite")
+            })
     }
 
     /// The entry the next [`pop`](Self::pop) would return.
@@ -541,15 +782,46 @@ impl<P> SloQueue<P> {
         self.best_idx().map(|i| &self.entries[i])
     }
 
-    /// Remove and return the highest-priority / earliest-deadline entry.
+    /// Remove and return the next entry: highest-priority /
+    /// earliest-deadline by default, DRR-within-class when an enforcing
+    /// fairness mode is installed. A serve debits one unit of the
+    /// tenant's deficit (crediting its weight-proportional quantum on a
+    /// fresh visit); the cursor advances once the quantum is spent or
+    /// the tenant's backlog empties, so long-run service per tenant is
+    /// proportional to its weight.
     pub fn pop(&mut self) -> Option<SloEntry<P>> {
-        self.best_idx().map(|i| self.entries.swap_remove(i))
+        let i = self.best_idx()?;
+        let e = self.entries.swap_remove(i);
+        if let Some(f) = &mut self.fair {
+            let u = e.tenant;
+            f.ensure(u);
+            f.counts[u] -= 1;
+            let n = f.counts.len().max(1);
+            if f.deficit[u] < 1.0 {
+                f.deficit[u] += f.quanta[u];
+            }
+            f.deficit[u] -= 1.0;
+            if f.counts[u] == 0 {
+                // no banking while idle: an absent tenant re-enters the
+                // round with a fresh quantum, not accumulated credit
+                f.deficit[u] = 0.0;
+                f.cursor = (u + 1) % n;
+            } else if f.deficit[u] < 1.0 {
+                f.cursor = (u + 1) % n;
+            } else {
+                f.cursor = u;
+            }
+        }
+        Some(e)
     }
 
     /// Offer one arrival at time `now`. When the queue is full, a queued
     /// entry whose deadline has already passed is evicted in its place
     /// (the most-expired first); with no blown entry the arrival itself
-    /// is shed.
+    /// is shed. Under [`Fairness::WfqCaps`] a tenant at its occupancy
+    /// cap resolves the overflow *within its own backlog first*: its
+    /// most-expired blown entry is evicted, else the arrival is shed —
+    /// other tenants' entries are never touched by its burst.
     #[allow(clippy::too_many_arguments)]
     pub fn push(
         &mut self,
@@ -562,7 +834,32 @@ impl<P> SloQueue<P> {
         now: f64,
     ) -> SloPush<P> {
         let mut evicted = None;
-        if self.entries.len() >= self.cap {
+        if let Some(f) = &mut self.fair {
+            f.ensure(tenant);
+            if f.mode == Fairness::WfqCaps && f.counts[tenant] >= f.caps[tenant]
+            {
+                let blown = (0..self.entries.len())
+                    .filter(|&i| {
+                        self.entries[i].tenant == tenant
+                            && self.entries[i].deadline.is_some_and(|d| d < now)
+                    })
+                    .min_by(|&a, &b| {
+                        self.entries[a]
+                            .deadline
+                            .partial_cmp(&self.entries[b].deadline)
+                            .expect("deadlines validated finite")
+                    });
+                match blown {
+                    Some(i) => {
+                        let e = self.entries.swap_remove(i);
+                        f.note_removed(e.tenant);
+                        evicted = Some(e);
+                    }
+                    None => return SloPush::Shed,
+                }
+            }
+        }
+        if evicted.is_none() && self.entries.len() >= self.cap {
             let blown = (0..self.entries.len())
                 .filter(|&i| {
                     self.entries[i].deadline.is_some_and(|d| d < now)
@@ -575,7 +872,13 @@ impl<P> SloQueue<P> {
                         .expect("deadlines validated finite")
                 });
             match blown {
-                Some(i) => evicted = Some(self.entries.swap_remove(i)),
+                Some(i) => {
+                    let e = self.entries.swap_remove(i);
+                    if let Some(f) = &mut self.fair {
+                        f.note_removed(e.tenant);
+                    }
+                    evicted = Some(e);
+                }
                 None => return SloPush::Shed,
             }
         }
@@ -590,6 +893,9 @@ impl<P> SloQueue<P> {
             tag,
             seq,
         });
+        if let Some(f) = &mut self.fair {
+            f.counts[tenant] += 1;
+        }
         match evicted {
             Some(e) => SloPush::AcceptedEvicting(e),
             None => SloPush::Accepted,
@@ -609,8 +915,64 @@ impl<P> SloQueue<P> {
                 i += 1;
             }
         }
+        if let Some(f) = &mut self.fair {
+            for e in &out {
+                f.note_removed(e.tenant);
+            }
+        }
         out.sort_by_key(|e| e.seq);
         out
+    }
+
+    /// Deadline pressure of the queued tenant mix at `now`: the
+    /// weight-normalized urgency `Σ w_t / (1 + headroom_s)` over queued
+    /// deadlined entries — each entry counts close to its tenant's
+    /// weight when its deadline is imminent, fading as headroom grows.
+    /// 0 with no fairness installed (the default control loop must stay
+    /// bit-identical) or an empty queue; grows with backlog depth and
+    /// with deadlines closing in. Fed into the controller so ODIN
+    /// optimizes the SLO-weighted bottleneck.
+    pub fn pressure(&self, now: f64) -> f64 {
+        let Some(f) = &self.fair else { return 0.0 };
+        let wsum: f64 = f.weights.iter().sum();
+        if wsum <= 0.0 {
+            return 0.0;
+        }
+        self.entries
+            .iter()
+            .filter_map(|e| {
+                let d = e.deadline?;
+                let w = f.weights.get(e.tenant).copied().unwrap_or(1.0);
+                Some(w / (1.0 + (d - now).max(0.0)))
+            })
+            .sum::<f64>()
+            / wsum
+    }
+}
+
+impl FairState {
+    /// Grow every per-tenant vector to cover `tenant` (defensive: both
+    /// worlds label arrivals from the same set they configure with, so
+    /// this is a no-op in practice).
+    fn ensure(&mut self, tenant: usize) {
+        if tenant >= self.counts.len() {
+            self.counts.resize(tenant + 1, 0);
+            self.deficit.resize(tenant + 1, 0.0);
+            self.quanta.resize(tenant + 1, 1.0);
+            self.weights.resize(tenant + 1, 1.0);
+            self.caps.resize(tenant + 1, usize::MAX);
+        }
+    }
+
+    /// Ledger update for a removal that is *not* a DRR serve (eviction
+    /// or blown-deadline shed): occupancy drops, and an emptied tenant
+    /// forfeits any banked deficit.
+    fn note_removed(&mut self, tenant: usize) {
+        self.ensure(tenant);
+        self.counts[tenant] = self.counts[tenant].saturating_sub(1);
+        if self.counts[tenant] == 0 {
+            self.deficit[tenant] = 0.0;
+        }
     }
 }
 
@@ -793,6 +1155,7 @@ mod tests {
                     deadline_ms: 100.0,
                     priority: 0,
                     weight: 1.0,
+                    queue_share: None,
                 },
                 TenantSpec {
                     id: "y".into(),
@@ -800,6 +1163,7 @@ mod tests {
                     deadline_ms: 100.0,
                     priority: 0,
                     weight: 1.0,
+                    queue_share: None,
                 },
             ],
         )
@@ -819,6 +1183,7 @@ mod tests {
             deadline_ms: 50.0,
             priority: 0,
             weight: 1.0,
+            queue_share: None,
         };
         // closed workload
         let mut t = ok();
@@ -843,6 +1208,16 @@ mod tests {
         assert!(TenantSet::new("s", vec![t]).is_err());
         assert!(TenantSet::new("bad name", vec![ok()]).is_err());
         assert!(TenantSet::new("s", vec![]).is_err());
+        // queue_share out of (0, 1]
+        for bad in [0.0, -0.5, 1.5, f64::NAN] {
+            let mut t = ok();
+            t.queue_share = Some(bad);
+            let e = TenantSet::new("s", vec![t]).unwrap_err();
+            assert!(chain(&e).contains("queue_share"), "{bad}: {e:#}");
+        }
+        let mut t = ok();
+        t.queue_share = Some(1.0);
+        assert!(TenantSet::new("s", vec![t]).is_ok());
     }
 
     #[test]
@@ -905,6 +1280,38 @@ mod tests {
         assert!((r[1] / r[0] - 2.0).abs() < 1e-9, "{r:?}");
         assert!(s.with_total_rate(0.0).is_err());
         assert!(s.with_total_rate(f64::NAN).is_err());
+    }
+
+    #[test]
+    fn with_total_rate_names_the_rateless_tenant() {
+        // a single-arrival trace is open-loop (so it validates) but has
+        // no mean rate; rescaling must fail naming it, not skip it
+        let s = TenantSet::new(
+            "m",
+            vec![
+                TenantSpec {
+                    id: "steady".into(),
+                    workload: Workload::parse("poisson:10qps").unwrap(),
+                    deadline_ms: 50.0,
+                    priority: 0,
+                    weight: 1.0,
+                    queue_share: None,
+                },
+                TenantSpec {
+                    id: "replay".into(),
+                    workload: Workload::trace(vec![0.5]).unwrap(),
+                    deadline_ms: 50.0,
+                    priority: 0,
+                    weight: 1.0,
+                    queue_share: None,
+                },
+            ],
+        )
+        .unwrap();
+        let e = s.with_total_rate(40.0).unwrap_err();
+        let msg = chain(&e);
+        assert!(msg.contains("replay"), "{e:#}");
+        assert!(msg.contains("no mean rate"), "{e:#}");
     }
 
     #[test]
@@ -995,5 +1402,204 @@ mod tests {
         assert_eq!(v.idx(0).get("offered").as_usize(), Some(4));
         assert_eq!(v.idx(0).get("weight_share").as_f64(), Some(0.5));
         assert_eq!(v.idx(0).keys().len(), 13);
+    }
+
+    #[test]
+    fn fairness_specs_roundtrip_and_reject_unknown() {
+        for mode in [Fairness::Reported, Fairness::Wfq, Fairness::WfqCaps] {
+            assert_eq!(Fairness::parse(mode.spec()).unwrap(), mode);
+        }
+        assert_eq!(Fairness::default(), Fairness::Reported);
+        assert!(!Fairness::Reported.enforced());
+        assert!(Fairness::Wfq.enforced());
+        assert!(Fairness::WfqCaps.enforced());
+        let e = Fairness::parse("drr").unwrap_err();
+        assert!(format!("{e:#}").contains("wfq+caps"), "{e:#}");
+    }
+
+    #[test]
+    fn queue_shares_default_to_weight_shares() {
+        let s = builtin("tiers").unwrap(); // weights 2:1
+        let shares = s.queue_shares();
+        assert!((shares[0] - 2.0 / 3.0).abs() < 1e-12);
+        assert!((shares[1] - 1.0 / 3.0).abs() < 1e-12);
+        let j = TenantSet::from_json_str(
+            r#"{"tenants": [
+                 {"id": "a", "workload": "poisson:5qps", "deadline_ms": 10,
+                  "queue_share": 0.25},
+                 {"id": "b", "workload": "poisson:5qps", "deadline_ms": 10}
+               ]}"#,
+        )
+        .unwrap();
+        assert_eq!(j.tenants[0].queue_share, Some(0.25));
+        assert!((j.queue_shares()[0] - 0.25).abs() < 1e-12);
+        assert!((j.queue_shares()[1] - 0.5).abs() < 1e-12);
+        let e = TenantSet::from_json_str(
+            r#"{"tenants": [
+                 {"id": "a", "workload": "poisson:5qps", "deadline_ms": 10,
+                  "queue_share": 2.0}
+               ]}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("queue_share"), "{e:#}");
+    }
+
+    /// A fairness-configured queue over a synthetic 2-tenant set (weights
+    /// `w0:w1`, both class 0, 1s deadline offset).
+    fn fair_queue(
+        mode: Fairness,
+        w0: f64,
+        w1: f64,
+        cap: usize,
+    ) -> SloQueue<usize> {
+        let spec = |id: &str, weight: f64| TenantSpec {
+            id: id.into(),
+            workload: Workload::parse("poisson:10qps").unwrap(),
+            deadline_ms: 1000.0,
+            priority: 0,
+            weight,
+            queue_share: None,
+        };
+        let set =
+            TenantSet::new("pair", vec![spec("a", w0), spec("b", w1)]).unwrap();
+        let mut q = SloQueue::new(cap);
+        q.configure_fairness(mode, &set);
+        q
+    }
+
+    #[test]
+    fn wfq_serves_weight_proportional_within_class() {
+        // tenant 0 has weight 2, tenant 1 weight 1: a saturated backlog
+        // must drain 2:1 in DRR order — a,a,b,a,a,b,... — even though
+        // global EDF would strictly interleave by deadline
+        let mut q = fair_queue(Fairness::Wfq, 2.0, 1.0, 64);
+        for i in 0..12 {
+            let tenant = i % 2; // alternating arrivals, same deadlines
+            assert!(matches!(
+                q.push(i, i as f64, Some(i as f64 + 1.0), 0, tenant, i, i as f64),
+                SloPush::Accepted
+            ));
+        }
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop())
+            .map(|e| e.tenant)
+            .collect();
+        assert_eq!(order, vec![0, 0, 1, 0, 0, 1, 0, 0, 1, 0, 0, 1], "{order:?}");
+    }
+
+    #[test]
+    fn wfq_pops_edf_within_a_tenant_backlog() {
+        let mut q = fair_queue(Fairness::Wfq, 1.0, 1.0, 64);
+        // tenant 0's later-arrived entry has the earlier deadline
+        q.push(0, 0.0, Some(9.0), 0, 0, 0, 0.0);
+        q.push(1, 0.1, Some(3.0), 0, 0, 1, 0.1);
+        q.push(2, 0.2, Some(1.0), 0, 1, 2, 0.2);
+        let a = q.pop().unwrap();
+        assert_eq!((a.tenant, a.payload), (0, 1), "EDF inside the backlog");
+        let b = q.pop().unwrap();
+        assert_eq!(b.tenant, 1, "round advances to the other tenant");
+        assert_eq!(q.pop().unwrap().payload, 0);
+    }
+
+    #[test]
+    fn wfq_respects_priority_classes() {
+        let mut q = fair_queue(Fairness::Wfq, 1.0, 1.0, 64);
+        q.push(0, 0.0, Some(1.0), 1, 0, 0, 0.0); // low class, early deadline
+        q.push(1, 0.0, Some(9.0), 0, 1, 1, 0.0); // high class
+        assert_eq!(q.pop().unwrap().payload, 1, "class 0 first, always");
+        assert_eq!(q.pop().unwrap().payload, 0);
+    }
+
+    #[test]
+    fn caps_make_a_burst_shed_its_own_overflow() {
+        // cap 8, equal weights: each tenant owns 4 slots. Tenant 1
+        // bursts 10 arrivals with live deadlines: 4 admitted, 6 shed —
+        // and tenant 0's entries are untouched.
+        let mut q = fair_queue(Fairness::WfqCaps, 1.0, 1.0, 8);
+        for i in 0..3 {
+            assert!(matches!(
+                q.push(i, 0.0, Some(100.0), 0, 0, i, 0.0),
+                SloPush::Accepted
+            ));
+        }
+        let mut shed = 0;
+        for i in 0..10 {
+            match q.push(100 + i, 0.0, Some(100.0), 0, 1, 10 + i, 0.0) {
+                SloPush::Accepted => {}
+                SloPush::Shed => shed += 1,
+                SloPush::AcceptedEvicting(e) => {
+                    panic!("evicted live entry of tenant {}", e.tenant)
+                }
+            }
+        }
+        assert_eq!(shed, 6);
+        assert_eq!(q.len(), 7);
+        let mut tenants: Vec<usize> = Vec::new();
+        while let Some(e) = q.pop() {
+            tenants.push(e.tenant);
+        }
+        assert_eq!(tenants.iter().filter(|&&t| t == 0).count(), 3);
+        assert_eq!(tenants.iter().filter(|&&t| t == 1).count(), 4);
+    }
+
+    #[test]
+    fn caps_evict_the_tenants_own_blown_entries_first() {
+        let mut q = fair_queue(Fairness::WfqCaps, 1.0, 1.0, 4);
+        // tenant 1 fills its 2 slots; one entry blows its deadline
+        q.push(0, 0.0, Some(1.0), 0, 1, 0, 0.0);
+        q.push(1, 0.0, Some(100.0), 0, 1, 1, 0.0);
+        // at t=5 the burst continues: the blown own entry is evicted
+        match q.push(2, 5.0, Some(100.0), 0, 1, 2, 5.0) {
+            SloPush::AcceptedEvicting(e) => {
+                assert_eq!((e.tenant, e.payload), (1, 0))
+            }
+            other => panic!("expected own-eviction, got {other:?}"),
+        }
+        // no blown entry left: the next overflow arrival is shed even
+        // though the queue itself still has free slots
+        assert!(matches!(
+            q.push(3, 5.0, Some(100.0), 0, 1, 3, 5.0),
+            SloPush::Shed
+        ));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn reported_mode_configuration_is_inert() {
+        let mut q: SloQueue<&str> = SloQueue::new(16);
+        q.configure_fairness(Fairness::Reported, &builtin("even").unwrap());
+        assert_eq!(q.fairness(), Fairness::Reported);
+        assert_eq!(q.pressure(0.0), 0.0);
+        // same order as the unconfigured EDF test
+        q.push("late-hi", 0.0, Some(9.0), 0, 0, 0, 0.0);
+        q.push("lo", 0.0, Some(1.0), 1, 1, 1, 0.0);
+        q.push("early-hi", 0.0, Some(3.0), 0, 0, 2, 0.0);
+        q.push("nodl-hi", 0.0, None, 0, 2, 3, 0.0);
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop())
+            .map(|e| e.payload)
+            .collect();
+        assert_eq!(order, vec!["early-hi", "late-hi", "nodl-hi", "lo"]);
+    }
+
+    #[test]
+    fn pressure_tracks_urgency_and_weights() {
+        let mut q = fair_queue(Fairness::Wfq, 3.0, 1.0, 64);
+        assert_eq!(q.pressure(0.0), 0.0, "empty queue has no pressure");
+        // one imminent entry of the heavy tenant: w/(1+0)/Σw = 3/4
+        q.push(0, 0.0, Some(0.0), 0, 0, 0, 0.0);
+        assert!((q.pressure(0.0) - 0.75).abs() < 1e-12);
+        // a far-future light entry adds ~nothing
+        q.push(1, 0.0, Some(1e6), 0, 1, 1, 0.0);
+        let p = q.pressure(0.0);
+        assert!(p > 0.75 && p < 0.750001, "{p}");
+        // pressure grows as deadlines close in
+        assert!(q.pressure(1e6) > p);
+        // deadline-free entries contribute nothing
+        let mut q2 = fair_queue(Fairness::Wfq, 1.0, 1.0, 64);
+        q2.push(0, 0.0, None, 0, 0, 0, 0.0);
+        assert_eq!(q2.pressure(0.0), 0.0);
+        // an unconfigured queue reports zero regardless of contents
+        let mut q3: SloQueue<usize> = SloQueue::new(8);
+        q3.push(0, 0.0, Some(0.0), 0, 0, 0, 0.0);
+        assert_eq!(q3.pressure(0.0), 0.0);
     }
 }

@@ -37,7 +37,7 @@ use crate::pipeline::{batch_factor, stage_times_into, PipelineConfig};
 use crate::serving::batch::{
     BatchFormer, BatchPolicy, BATCH_SLACK_FACTOR, MAX_BATCH,
 };
-use crate::serving::tenant::{SloPush, SloQueue, TenantSet};
+use crate::serving::tenant::{Fairness, SloPush, SloQueue, TenantSet};
 use crate::serving::workload::{Workload, MAX_CLOSED_DEPTH};
 use crate::util::error::Result;
 use crate::util::ThreadPool;
@@ -97,6 +97,10 @@ pub struct SimConfig {
     /// has no queue to batch from). [`BatchPolicy::Off`] — the default —
     /// is bit-identical to the historical one-at-a-time path.
     pub batch: BatchPolicy,
+    /// Fairness enforcement of the multi-tenant queue
+    /// ([`simulate_tenants`] only). [`Fairness::Reported`] — the default
+    /// — is bit-identical to the PR-5 EDF path.
+    pub fairness: Fairness,
 }
 
 impl SimConfig {
@@ -108,6 +112,7 @@ impl SimConfig {
             window: None,
             queue_cap: None,
             batch: BatchPolicy::Off,
+            fairness: Fairness::Reported,
         }
     }
 
@@ -128,6 +133,12 @@ impl SimConfig {
     /// Size admission batches under an open workload (see `batch`).
     pub fn with_batch(mut self, batch: BatchPolicy) -> SimConfig {
         self.batch = batch;
+        self
+    }
+
+    /// Enforce tenant fairness in the multi-tenant queue (see `fairness`).
+    pub fn with_fairness(mut self, fairness: Fairness) -> SimConfig {
+        self.fairness = fairness;
         self
     }
 }
@@ -754,9 +765,12 @@ pub fn simulate_tenants(
     let clear: EpScenarios = vec![0usize; schedule.num_eps];
 
     // the SLO-aware arrival queue; payload = arrival index (the tag
-    // doubles as the query-axis schedule slot)
+    // doubles as the query-axis schedule slot). An enforcing fairness
+    // mode installs DRR admission + occupancy caps; Reported leaves the
+    // queue exactly as PR 5 built it.
     let mut queue: SloQueue<()> =
         SloQueue::new(cfg.queue_cap.unwrap_or(usize::MAX));
+    queue.configure_fairness(cfg.fairness, tenants);
     let mut next_arr = 0usize;
 
     let mut stage_free = vec![0.0f64; n];
@@ -842,8 +856,16 @@ pub fn simulate_tenants(
         {
             if let Some(_trigger) = controller.observe(&times) {
                 let before = 1.0 / bottleneck(&times);
-                let result: RebalanceResult =
-                    controller.rebalance(&config, db, sc);
+                // the queue's deadline pressure (0 under Reported
+                // fairness — the rebalance is then byte-for-byte the
+                // historical one) steers the search toward the
+                // SLO-weighted bottleneck of the queued tenant mix
+                let result: RebalanceResult = controller.rebalance_pressured(
+                    &config,
+                    db,
+                    sc,
+                    queue.pressure(t_admit),
+                );
                 let remaining = (queries - next_arr) + queue.len();
                 let serial_queries = result.trials.min(remaining);
                 for _ in 0..serial_queries {

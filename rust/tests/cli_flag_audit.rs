@@ -1,8 +1,9 @@
 //! Mode-exclusive CLI flag audits (ISSUE 6 satellite): the `--batch`
-//! flag only exists in open-workload scenario mode, and every other mode
-//! must reject it fast — exactly like the other scenario-only flags —
-//! instead of silently ignoring it. Exercises the shipped binary
-//! (cargo's `CARGO_BIN_EXE_<name>` points integration tests at it).
+//! flag only exists in open-workload scenario mode and `--fairness`
+//! only in `--tenants` mode; every other mode must reject them fast —
+//! exactly like the other scenario-only flags — instead of silently
+//! ignoring them. Exercises the shipped binary (cargo's
+//! `CARGO_BIN_EXE_<name>` points integration tests at it).
 
 use std::process::Command;
 
@@ -82,6 +83,72 @@ fn bad_batch_specs_fail_fast() {
         assert!(!ok, "{spec} must be rejected");
         assert!(err.contains("batch"), "stderr: {err}");
     }
+}
+
+#[test]
+fn plain_simulate_rejects_fairness() {
+    let (ok, err) = odin(&["simulate", "--fairness", "wfq"]);
+    assert!(!ok, "plain-mode simulate must reject --fairness");
+    assert!(err.contains("--fairness"), "stderr: {err}");
+    assert!(err.contains("--tenants"), "stderr: {err}");
+}
+
+#[test]
+fn scenario_simulate_rejects_fairness_without_tenants() {
+    let (ok, err) =
+        odin(&["simulate", "--scenario", "burst", "--fairness", "wfq"]);
+    assert!(!ok, "scenario-mode simulate must reject --fairness");
+    assert!(err.contains("--tenants"), "stderr: {err}");
+}
+
+#[test]
+fn plain_serve_rejects_fairness() {
+    let (ok, err) = odin(&["serve", "--fairness", "wfq+caps"]);
+    assert!(!ok, "artifact-mode serve must reject --fairness");
+    assert!(err.contains("--fairness"), "stderr: {err}");
+}
+
+#[test]
+fn scenario_serve_rejects_fairness_without_tenants() {
+    let (ok, err) =
+        odin(&["serve", "--scenario", "burst", "--fairness", "wfq"]);
+    assert!(!ok, "scenario-mode serve must reject --fairness");
+    assert!(err.contains("--tenants"), "stderr: {err}");
+}
+
+#[test]
+fn bad_fairness_specs_fail_fast() {
+    for spec in ["drr", "wfq-caps", "caps", ""] {
+        let (ok, err) = odin(&[
+            "simulate",
+            "--tenants",
+            "tiers",
+            "--queries",
+            "50",
+            "--out",
+            "",
+            "--fairness",
+            spec,
+        ]);
+        assert!(!ok, "fairness spec {spec:?} must be rejected");
+        assert!(err.contains("fairness"), "stderr: {err}");
+    }
+}
+
+#[test]
+fn simulate_tenants_accepts_enforced_fairness() {
+    let (ok, err) = odin(&[
+        "simulate",
+        "--tenants",
+        "even",
+        "--queries",
+        "120",
+        "--fairness",
+        "wfq+caps",
+        "--out",
+        "",
+    ]);
+    assert!(ok, "tenant-mode simulate must accept --fairness: {err}");
 }
 
 #[test]

@@ -189,6 +189,22 @@ fn multitenant_json_file_is_jobs_invariant() {
             }
         }
     }
+    // the enforcement section: one fixed cell swept over the fairness
+    // axis — the historical cell schema plus the axis label
+    let f = doc.get("fairness");
+    assert_eq!(f.get("tenant_set").as_str(), Some("mixed"));
+    assert_eq!(f.get("scenario").as_str(), Some("burst"));
+    let fcells = f.get("cells").as_arr().unwrap();
+    assert_eq!(fcells.len(), 3);
+    for (c, mode) in fcells.iter().zip(["reported", "wfq", "wfq+caps"]) {
+        assert_eq!(c.get("fairness").as_str(), Some(mode));
+        assert_eq!(c.get("tenants").as_arr().unwrap().len(), 2);
+        let offered = c.get("offered").as_usize().unwrap();
+        let done = c.get("completed").as_usize().unwrap();
+        let dropped = c.get("dropped").as_usize().unwrap();
+        assert_eq!(offered, done + dropped, "fairness cell conservation");
+        assert!(c.get("unfairness").as_f64().unwrap() >= 0.0);
+    }
     let _ = std::fs::remove_dir_all(&d1);
     let _ = std::fs::remove_dir_all(&d4);
 }

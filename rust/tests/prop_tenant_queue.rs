@@ -11,9 +11,34 @@
 //!    shared deadline offset, EDF degenerates to exact FIFO, so every
 //!    tenant drains in arrival order.
 
-use odin::serving::tenant::{SloPush, SloQueue};
+use odin::serving::tenant::{
+    Fairness, SloPush, SloQueue, TenantSet, TenantSpec,
+};
+use odin::serving::Workload;
 use odin::util::proptest::Property;
 use odin::util::Rng;
+
+/// A one-class tenant set for fairness-mode properties (workloads are
+/// irrelevant here — only weights and the shared class matter to the
+/// queue).
+fn fair_set(weights: &[f64]) -> TenantSet {
+    TenantSet::new(
+        "prop",
+        weights
+            .iter()
+            .enumerate()
+            .map(|(i, &w)| TenantSpec {
+                id: format!("t{i}"),
+                workload: Workload::parse("poisson:10qps@1").unwrap(),
+                deadline_ms: 1000.0,
+                priority: 0,
+                weight: w,
+                queue_share: None,
+            })
+            .collect(),
+    )
+    .unwrap()
+}
 
 /// Reference entry mirroring the queue's ordering key.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -201,5 +226,192 @@ fn prop_equal_weights_equal_class_never_starve() {
         // FIFO: the served sequence is exactly the arrival sequence, so
         // per-tenant completion counts match per-tenant offered counts
         served == arrival_order
+    });
+}
+
+#[test]
+fn prop_drr_caps_conserve_and_bound_occupancy() {
+    // under wfq+caps, per-tenant conservation holds through arbitrary
+    // push / pop / sweep interleavings AND no tenant's queue occupancy
+    // ever exceeds its weight-share cap of the bound
+    const TENANTS: usize = 3;
+    let p = Property::new(|r: &mut Rng| {
+        let ops = r.range(10, 200);
+        let cap = r.range(2, 12);
+        (ops, cap, r.next_u64())
+    });
+    p.check(0xD2_2C_A9, 150, |&(ops, cap, seed)| {
+        let mut rng = Rng::new(seed);
+        let weights: Vec<f64> =
+            (0..TENANTS).map(|_| 1.0 + rng.below(3) as f64).collect();
+        let set = fair_set(&weights);
+        let wsum: f64 = weights.iter().sum();
+        let caps: Vec<usize> = weights
+            .iter()
+            .map(|w| (((w / wsum) * cap as f64) as usize).max(1))
+            .collect();
+        let mut q: SloQueue<usize> = SloQueue::new(cap);
+        q.configure_fairness(Fairness::WfqCaps, &set);
+        let mut offered = [0usize; TENANTS];
+        let mut completed = [0usize; TENANTS];
+        let mut dropped = [0usize; TENANTS];
+        let mut now = 0.0f64;
+        for op in 0..ops {
+            now += rng.uniform(0.0, 2.0);
+            match rng.below(4) {
+                0 | 1 => {
+                    let tenant = rng.below(TENANTS);
+                    let deadline = now + rng.uniform(-1.0, 8.0);
+                    offered[tenant] += 1;
+                    match q.push(
+                        op,
+                        now,
+                        Some(deadline),
+                        0,
+                        tenant,
+                        op,
+                        now,
+                    ) {
+                        SloPush::Accepted => {}
+                        SloPush::AcceptedEvicting(e) => dropped[e.tenant] += 1,
+                        SloPush::Shed => dropped[tenant] += 1,
+                    }
+                }
+                2 => {
+                    if let Some(e) = q.pop() {
+                        completed[e.tenant] += 1;
+                    }
+                }
+                _ => {
+                    for e in q.shed_blown(now) {
+                        dropped[e.tenant] += 1;
+                    }
+                }
+            }
+            // the cap invariant, checked against an external mirror
+            for t in 0..TENANTS {
+                let in_queue = offered[t] - completed[t] - dropped[t];
+                if in_queue > caps[t] {
+                    return false;
+                }
+            }
+        }
+        let mut queued = [0usize; TENANTS];
+        while let Some(e) = q.pop() {
+            queued[e.tenant] += 1;
+        }
+        (0..TENANTS)
+            .all(|t| offered[t] == completed[t] + dropped[t] + queued[t])
+    });
+}
+
+#[test]
+fn prop_drr_serves_weight_proportional_shares() {
+    // with every tenant continuously backlogged in one class, DRR hands
+    // each tenant its weight-proportional share of pops, to within one
+    // quantum of drift
+    const TENANTS: usize = 3;
+    let p = Property::new(|r: &mut Rng| {
+        let pops = r.range(20, 120);
+        (pops, r.next_u64())
+    });
+    p.check(0xD2_5A_4E, 150, |&(pops, seed)| {
+        let mut rng = Rng::new(seed);
+        let weights: Vec<f64> =
+            (0..TENANTS).map(|_| 1.0 + rng.below(4) as f64).collect();
+        let set = fair_set(&weights);
+        let mut q: SloQueue<usize> = SloQueue::new(TENANTS * pops + 1);
+        q.configure_fairness(Fairness::Wfq, &set);
+        // pre-fill `pops` entries per tenant so every tenant stays
+        // backlogged through the whole measurement window
+        let mut seq = 0usize;
+        for i in 0..pops {
+            for t in 0..TENANTS {
+                let at = (i * TENANTS + t) as f64;
+                if !matches!(
+                    q.push(seq, at, Some(at + 1000.0), 0, t, seq, at),
+                    SloPush::Accepted
+                ) {
+                    return false;
+                }
+                seq += 1;
+            }
+        }
+        let mut served = [0usize; TENANTS];
+        for _ in 0..pops {
+            match q.pop() {
+                Some(e) => served[e.tenant] += 1,
+                None => return false,
+            }
+        }
+        let wsum: f64 = weights.iter().sum();
+        let wmin = weights.iter().cloned().fold(f64::INFINITY, f64::min);
+        (0..TENANTS).all(|t| {
+            let expect = pops as f64 * weights[t] / wsum;
+            let quantum = weights[t] / wmin;
+            (served[t] as f64 - expect).abs() <= quantum + 1.0
+        })
+    });
+}
+
+#[test]
+fn prop_equal_weight_wfq_matches_reported_edf_exactly() {
+    // the bit-compat anchor: strict round-robin arrivals, one class, a
+    // shared deadline offset and equal weights make DRR's cursor track
+    // the FIFO head tenant exactly, so a WFQ queue and a report-only
+    // queue driven in lockstep pop identical sequences
+    const TENANTS: usize = 3;
+    let p = Property::new(|r: &mut Rng| {
+        let pushes = r.range(5, 90);
+        (pushes, r.next_u64())
+    });
+    p.check(0xB1_7C_04, 150, |&(pushes, seed)| {
+        let mut rng = Rng::new(seed);
+        let set = fair_set(&[1.0; TENANTS]);
+        let mut wfq: SloQueue<usize> = SloQueue::new(pushes + 1);
+        wfq.configure_fairness(Fairness::Wfq, &set);
+        let mut edf: SloQueue<usize> = SloQueue::new(pushes + 1);
+        edf.configure_fairness(Fairness::Reported, &set);
+        let mut pushed = 0usize;
+        let mut t = 0.0f64;
+        while pushed < pushes {
+            if rng.chance(0.6) {
+                t += rng.uniform(0.001, 1.0);
+                let tenant = pushed % TENANTS; // strict round-robin
+                for q in [&mut wfq, &mut edf] {
+                    if !matches!(
+                        q.push(
+                            pushed,
+                            t,
+                            Some(t + 100.0),
+                            0,
+                            tenant,
+                            pushed,
+                            t,
+                        ),
+                        SloPush::Accepted
+                    ) {
+                        return false;
+                    }
+                }
+                pushed += 1;
+            } else {
+                let a = wfq.pop().map(|e| (e.tenant, e.tag, e.payload));
+                let b = edf.pop().map(|e| (e.tenant, e.tag, e.payload));
+                if a != b {
+                    return false;
+                }
+            }
+        }
+        loop {
+            let a = wfq.pop().map(|e| (e.tenant, e.tag, e.payload));
+            let b = edf.pop().map(|e| (e.tenant, e.tag, e.payload));
+            if a != b {
+                return false;
+            }
+            if a.is_none() {
+                return true;
+            }
+        }
     });
 }
