@@ -16,6 +16,9 @@ kinds
   batching      the `odin experiment batching` sweep artifact
   multitenant   the `odin experiment multitenant` sweep artifact
                 (including the fairness-enforcement section)
+  fleet         the `odin experiment fleet` sweep artifact (also the
+                single-cell `odin simulate --fleet` document)
+  fleet-live    fleet_live_<scenario>.json from `odin serve --fleet`
 
 expectations (key=value args, all optional unless noted)
   name=N             doc["name"] must equal N
@@ -71,6 +74,23 @@ MT_CELL_KEYS = {
 # The fairness axis, in cell order.
 MT_FAIRNESS_MODES = ["reported", "wfq", "wfq+caps"]
 
+# One replica's ledger row — identical in fleet.json cells, the
+# single-cell simulate --fleet document, and fleet_live_<scenario>.json.
+FLEET_REPLICA_KEYS = {"completed", "dropped", "id", "rebalances", "routed"}
+
+# One (scenario, fleet-spec) cell of fleet.json.
+FLEET_CELL_KEYS = {
+    "achieved_qps", "completed", "dropped", "fleet", "load", "offered",
+    "peak_qps", "peak_replicas", "queued", "replicas", "scale_events",
+    "scenario", "windows",
+}
+
+FLEET_LIVE_KEYS = {
+    "completed", "dropped", "eps", "fleet", "model", "name", "offered",
+    "policy", "replicas", "slo_level", "stressor_launches", "stressor_work",
+    "wall_seconds", "window", "windows", "workload",
+}
+
 MAX_BATCH = 8
 
 
@@ -86,10 +106,14 @@ def check_keys(obj, want, what):
         fail(f"{what} schema drift: missing={missing} extra={extra}")
 
 
-def check_windows(rows, closed=False, tenants=False):
+def check_windows(rows, closed=False, tenants=False, replica=False):
     if not rows:
         fail("no windows emitted")
-    want = WINDOW_KEYS | ({"tenants"} if tenants else set())
+    want = (
+        WINDOW_KEYS
+        | ({"tenants"} if tenants else set())
+        | ({"replica"} if replica else set())
+    )
     for row in rows:
         check_keys(row, want, "window row")
         if closed and row["queued_ns"] != 0.0:
@@ -261,6 +285,109 @@ def check_multitenant(doc):
         )
 
 
+def check_fleet_replicas(rows, what, completed, dropped, routed):
+    """Per-replica ledger rows: exact key set, per-replica conservation
+    (routed >= completed + dropped; the remainder is still queued or was
+    shed before routing settled), and the fleet-level sums."""
+    if not rows:
+        fail(f"{what} has no replica rows")
+    for i, r in enumerate(rows):
+        check_keys(r, FLEET_REPLICA_KEYS, f"{what} replica row")
+        if r["id"] != i:
+            fail(f"{what} replica ids out of order: {r['id']} at {i}")
+        if r["completed"] + r["dropped"] > r["routed"]:
+            fail(f"{what} replica {i} completed+dropped exceeds routed")
+    for key, want in (
+        ("completed", completed), ("dropped", dropped), ("routed", routed),
+    ):
+        got = sum(r[key] for r in rows)
+        if got != want:
+            fail(f"{what} replica {key} sums to {got}, want {want}")
+
+
+def check_fleet_cell(cell, what):
+    check_keys(cell, FLEET_CELL_KEYS, what)
+    # every arrival is routed, and ends completed, shed, or still queued
+    # at cut-off — summed across the whole fleet
+    if cell["completed"] + cell["dropped"] + cell["queued"] != cell["offered"]:
+        fail(
+            f"{what} conservation: {cell['completed']} completed + "
+            f"{cell['dropped']} dropped + {cell['queued']} queued != "
+            f"{cell['offered']} offered"
+        )
+    check_fleet_replicas(
+        cell["replicas"], what,
+        cell["completed"], cell["dropped"], cell["offered"],
+    )
+    if not 1 <= cell["peak_replicas"] <= len(cell["replicas"]):
+        fail(f"{what} peak_replicas {cell['peak_replicas']} out of range")
+    for e in cell["scale_events"]:
+        check_keys(e, {"at_arrival", "from", "t", "to"}, f"{what} scale event")
+        if e["from"] == e["to"]:
+            fail(f"{what} no-op scale event at arrival {e['at_arrival']}")
+    if cell["scale_events"] and len(cell["replicas"]) < 2:
+        fail(f"{what} scaled but never grew past one replica")
+    # per-replica window rows carry the replica column (and tenant rows
+    # when the cell ran a tenant-set load)
+    rows = cell["windows"]
+    check_windows(rows, tenants=rows and "tenants" in rows[0], replica=True)
+    ids = {r["id"] for r in cell["replicas"]}
+    for row in rows:
+        if row["replica"] not in ids:
+            fail(f"{what} window names unknown replica {row['replica']}")
+
+
+def check_fleet(doc):
+    """fleet.json from the experiment, or the single-cell document that
+    `odin simulate --fleet` writes (same cell schema, one `cell` key)."""
+    if "cells" in doc:
+        check_keys(
+            doc,
+            {
+                "cells", "model", "peak_qps", "queue_cap", "rate_frac",
+                "slo_level", "window",
+            },
+            "fleet doc",
+        )
+        cells = doc["cells"]
+        if not cells:
+            fail("no cells in fleet.json")
+    else:
+        check_keys(
+            doc,
+            {"cell", "model", "queue_cap", "slo_level", "window"},
+            "fleet simulate doc",
+        )
+        cells = [doc["cell"]]
+    for cell in cells:
+        check_fleet_cell(cell, f"{cell['scenario']}/{cell['fleet']}")
+    return len(cells)
+
+
+def check_fleet_live(doc, expect):
+    check_keys(doc, FLEET_LIVE_KEYS, "fleet live doc")
+    if "name" in expect and doc["name"] != expect["name"]:
+        fail(f"name {doc['name']!r} != {expect['name']!r}")
+    if "workload_prefix" in expect and not doc["workload"].startswith(
+        expect["workload_prefix"]
+    ):
+        fail(f"workload {doc['workload']!r} !~ {expect['workload_prefix']!r}")
+    if "offered" in expect and doc["offered"] != int(expect["offered"]):
+        fail(f"offered {doc['offered']} != {expect['offered']}")
+    # the live loop drains every queue before exiting, so conservation
+    # has no queued remainder
+    if doc["completed"] + doc["dropped"] != doc["offered"]:
+        fail(
+            f"conservation: {doc['completed']} completed + "
+            f"{doc['dropped']} dropped != {doc['offered']} offered"
+        )
+    check_fleet_replicas(
+        doc["replicas"], "fleet live",
+        doc["completed"], doc["dropped"], doc["offered"],
+    )
+    check_windows(doc["windows"], replica=True)
+
+
 def main():
     if len(sys.argv) < 3:
         fail(f"usage: {sys.argv[0]} FILE KIND [key=value ...]")
@@ -282,6 +409,11 @@ def main():
             for sc in s["scenarios"]
             for r in sc["rates"]
         ) + len(doc["fairness"]["cells"])
+    elif kind == "fleet":
+        n = check_fleet(doc)
+    elif kind == "fleet-live":
+        check_fleet_live(doc, expect)
+        n = len(doc["replicas"])
     else:
         fail(f"unknown kind {kind!r}")
     print(f"validate_artifact OK: {path} [{kind}] ({n} rows)")

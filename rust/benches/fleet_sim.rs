@@ -1,0 +1,67 @@
+//! Fleet-simulator micro-benchmarks: one overloaded storm cell at
+//! increasing replica counts (how the router + per-replica event loops
+//! scale with fleet width), plus a jobs-invariance metric over the
+//! fanned sweep so the byte-stability contract is visible in bench
+//! output.
+
+use odin::coordinator::optimal_config;
+use odin::database::synth::synthesize;
+use odin::experiments::fleet::{
+    fleet_cell, FLEET_POLICY, FLEET_QUEUE_CAP, FLEET_RATE_FRAC,
+};
+use odin::interference::dynamic::builtin;
+use odin::models;
+use odin::serving::{FleetConfig, Workload};
+use odin::simulator::{simulate_fleet_runs, FleetLoad, FleetRun};
+use odin::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("fleet_sim");
+    let db = synthesize(&models::vgg16(64), 42);
+    let scenario = builtin("storm").unwrap();
+    // one replica's interference-free peak prices the offered rate,
+    // exactly as the fleet experiment does
+    let (_, bottleneck) = optimal_config(&db, &vec![0usize; 4], 4);
+    let peak = 1.0 / bottleneck;
+    let cell = |spec: &str| -> FleetRun {
+        fleet_cell(
+            &scenario,
+            FleetConfig::parse(spec).unwrap(),
+            FleetLoad::Open(
+                Workload::poisson(FLEET_RATE_FRAC * peak, 42).unwrap(),
+            ),
+            FLEET_POLICY,
+            FLEET_QUEUE_CAP,
+            600,
+            42,
+        )
+        .unwrap()
+    };
+    let specs = ["1x4:jsq", "2x4:p2c", "4x4:p2c"];
+    let runs: Vec<FleetRun> = specs.iter().map(|s| cell(s)).collect();
+    for (spec, run) in specs.iter().zip(&runs) {
+        b.run(&format!("storm_600q_{}", spec.replace(':', "_")), || {
+            black_box(
+                simulate_fleet_runs(&db, std::slice::from_ref(run), 1)
+                    .unwrap(),
+            );
+        });
+    }
+    // the --jobs contract: the fanned sweep must match the serial one
+    let serial = simulate_fleet_runs(&db, &runs, 1).unwrap();
+    let parallel = simulate_fleet_runs(&db, &runs, 4).unwrap();
+    let identical = serial.iter().zip(&parallel).all(|(a, c)| {
+        a.routed == c.routed
+            && a.replicas.len() == c.replicas.len()
+            && a.replicas
+                .iter()
+                .zip(&c.replicas)
+                .all(|(x, y)| x.result.latencies == y.result.latencies)
+    });
+    b.report_metric(
+        "determinism",
+        "jobs_invariant",
+        if identical { 1.0 } else { 0.0 },
+    );
+    b.finish();
+}

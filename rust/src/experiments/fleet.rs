@@ -1,0 +1,377 @@
+//! The fleet experiment: replica count × router policy under dynamic
+//! interference, plus an autoscaling cell.
+//!
+//! ODIN's control loop fixes one pipeline; this sweep measures the
+//! provisioning layer stacked on top (ROADMAP item 3, InferLine's other
+//! half). Every cell drives the same 2× single-replica-peak Poisson
+//! stream at a fleet — the overload regime where one replica must shed
+//! roughly half the offered load and scale-out has to show up directly
+//! in completed throughput. The autoscale cell phases the load
+//! (3× peak, then 0.2×) and records the outer loop's scale-out /
+//! scale-in episodes. `fleet.json` is byte-stable and `--jobs`-invariant
+//! like every other artifact.
+
+use crate::database::synth::synthesize;
+use crate::interference::dynamic::DynamicScenario;
+use crate::json::Value;
+use crate::models;
+use crate::serving::fleet::FleetConfig;
+use crate::serving::workload::{RatePhase, Workload};
+use crate::simulator::fleet::{
+    fleet_windows, simulate_fleet_runs, FleetLoad, FleetRun, FleetSimResult,
+};
+use crate::simulator::window::windows_json;
+use crate::simulator::{Policy, SimConfig};
+use crate::util::error::Result;
+
+use super::dynamic::{DYN_SLO_LEVEL, DYN_WINDOW};
+use super::{ExpCtx, Output};
+
+/// Scenarios of the sweep: the steady dual-burst and the
+/// everything-at-once storm (adapted to each fleet's whole EP pool, so
+/// stressors sit on the low-numbered shards and routing has somewhere
+/// to flee to).
+pub const FLEET_SCENARIOS: [&str; 2] = ["burst", "storm"];
+/// Fleet shapes × router policies per scenario. `1x4:jsq` is the
+/// single-replica baseline every scale-out claim is measured against.
+pub const FLEET_SPECS: [&str; 4] = ["1x4:jsq", "2x4:jsq", "2x4:p2c", "4x4:p2c"];
+/// Offered rate as a multiple of ONE replica's interference-free peak —
+/// 2× keeps a single replica firmly overloaded.
+pub const FLEET_RATE_FRAC: f64 = 2.0;
+/// The autoscaling cell: start at one replica, scale between 1 and 3.
+pub const FLEET_AUTO_SPEC: &str = "1x4:jsq:auto1..3";
+/// The autoscale cell's phased load: hot at 3× peak, then cool at 0.2×.
+pub const FLEET_AUTO_HOT_FRAC: f64 = 3.0;
+pub const FLEET_AUTO_COOL_FRAC: f64 = 0.2;
+/// Per-replica bound of the SLO arrival queue (the autoscaler's
+/// occupancy denominator).
+pub const FLEET_QUEUE_CAP: usize = 64;
+/// Per-replica control policy.
+pub const FLEET_POLICY: Policy = Policy::Odin { alpha: 2 };
+/// The model the sweep runs on.
+pub const FLEET_MODEL: &str = "vgg16";
+
+/// Build one sweep cell as a self-contained [`FleetRun`]: scenario
+/// adapted to the fleet's whole EP pool, per-replica ODIN config at
+/// [`DYN_WINDOW`] / `queue_cap`. Shared by this experiment and the
+/// `odin simulate --fleet` CLI path.
+pub fn fleet_cell(
+    scenario: &DynamicScenario,
+    fleet: FleetConfig,
+    load: FleetLoad,
+    policy: Policy,
+    queue_cap: usize,
+    queries: usize,
+    seed: u64,
+) -> Result<FleetRun> {
+    let adapted = scenario.adapted(queries, fleet.total_eps())?;
+    let cfg = SimConfig::new(fleet.eps_per_replica, policy)
+        .with_window(DYN_WINDOW)
+        .with_queue_cap(queue_cap);
+    Ok(FleetRun {
+        schedule: adapted.compile(),
+        axis: adapted.axis,
+        cfg,
+        fleet,
+        load,
+        queries,
+        seed,
+    })
+}
+
+/// Byte-stable document for one fleet cell: fleet-level ledger
+/// (`offered = completed + dropped + queued`, summed across replicas),
+/// per-replica totals, the routing split, autoscale episodes, and the
+/// concatenated per-replica window timeline (rows carry the `replica`
+/// column; tenant rows attach for tenant-driven loads).
+pub fn fleet_cell_json(
+    scenario_name: &str,
+    run: &FleetRun,
+    r: &FleetSimResult,
+) -> Value {
+    let ids = run.load.tenant_ids();
+    let ws = fleet_windows(r, run.fleet.eps_per_replica, DYN_WINDOW, DYN_SLO_LEVEL, &ids);
+    let replicas: Vec<Value> = r
+        .replicas
+        .iter()
+        .enumerate()
+        .map(|(id, mt)| {
+            Value::obj(vec![
+                ("completed", Value::from(mt.result.latencies.len())),
+                ("dropped", Value::from(mt.result.dropped_at.len())),
+                ("id", Value::from(id)),
+                ("rebalances", Value::from(mt.result.rebalances.len())),
+                ("routed", Value::from(r.routed[id])),
+            ])
+        })
+        .collect();
+    let scale_events: Vec<Value> = r
+        .scale_events
+        .iter()
+        .map(|e| {
+            Value::obj(vec![
+                ("at_arrival", Value::from(e.at_arrival)),
+                ("from", Value::from(e.from)),
+                ("t", Value::from(e.t)),
+                ("to", Value::from(e.to)),
+            ])
+        })
+        .collect();
+    Value::obj(vec![
+        ("achieved_qps", Value::from(r.achieved_throughput())),
+        ("completed", Value::from(r.completed())),
+        ("dropped", Value::from(r.dropped())),
+        ("fleet", Value::from(run.fleet.spec())),
+        ("load", Value::from(run.load.spec())),
+        ("offered", Value::from(r.offered)),
+        ("peak_qps", Value::from(r.peak_throughput)),
+        ("peak_replicas", Value::from(r.peak_replicas())),
+        ("queued", Value::from(r.queued_end)),
+        ("replicas", Value::arr(replicas)),
+        ("scale_events", Value::arr(scale_events)),
+        ("scenario", Value::from(scenario_name)),
+        ("windows", windows_json(&ws)),
+    ])
+}
+
+/// The autoscale cell's phased workload over `queries` arrivals:
+/// the first half hot, the second half cool (fractions of `peak_qps`).
+pub fn autoscale_load(peak_qps: f64, queries: usize, seed: u64) -> Result<Workload> {
+    let hot = queries / 2;
+    Workload::phased(
+        vec![
+            RatePhase { queries: hot, rate_qps: FLEET_AUTO_HOT_FRAC * peak_qps },
+            RatePhase {
+                queries: queries - hot,
+                rate_qps: FLEET_AUTO_COOL_FRAC * peak_qps,
+            },
+        ],
+        seed,
+    )
+}
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let mut out = Output::new(ctx, "fleet")?;
+    out.line("# fleet — replicas x router under overload, plus autoscaling");
+    out.line(format!(
+        "# offered rate {FLEET_RATE_FRAC}x one replica's clean peak; \
+         queue cap {FLEET_QUEUE_CAP}/replica; policy {}",
+        FLEET_POLICY.label()
+    ));
+    let spec = models::build(FLEET_MODEL, ctx.spatial).unwrap();
+    let db = synthesize(&spec, ctx.seed);
+    // one replica's interference-free peak (all specs share 4-EP
+    // replicas, so one probe prices every cell)
+    let peak = {
+        let k = FleetConfig::parse(FLEET_SPECS[0])?.eps_per_replica;
+        let (_, bottleneck) =
+            crate::coordinator::optimal_config(&db, &vec![0usize; k], k);
+        1.0 / bottleneck
+    };
+
+    // build every cell up front, fan out jobs-invariantly, emit in order
+    let mut runs: Vec<FleetRun> = Vec::new();
+    let mut labels: Vec<String> = Vec::new();
+    for name in FLEET_SCENARIOS {
+        let scenario = crate::interference::dynamic::builtin(name)?;
+        for fs in FLEET_SPECS {
+            let fleet = FleetConfig::parse(fs)?;
+            let load = FleetLoad::Open(Workload::poisson(
+                FLEET_RATE_FRAC * peak,
+                ctx.seed,
+            )?);
+            runs.push(fleet_cell(
+                &scenario,
+                fleet,
+                load,
+                FLEET_POLICY,
+                FLEET_QUEUE_CAP,
+                ctx.queries,
+                ctx.seed,
+            )?);
+            labels.push(name.to_string());
+        }
+    }
+    // the autoscale cell rides the storm with the phased load
+    {
+        let scenario = crate::interference::dynamic::builtin("storm")?;
+        let fleet = FleetConfig::parse(FLEET_AUTO_SPEC)?;
+        let load =
+            FleetLoad::Open(autoscale_load(peak, ctx.queries, ctx.seed)?);
+        runs.push(fleet_cell(
+            &scenario,
+            fleet,
+            load,
+            FLEET_POLICY,
+            FLEET_QUEUE_CAP,
+            ctx.queries,
+            ctx.seed,
+        )?);
+        labels.push("storm".to_string());
+    }
+    let results = simulate_fleet_runs(&db, &runs, ctx.jobs)?;
+
+    out.line(format!(
+        "{:<9} {:<16} {:>7} {:>6} {:>6} {:>6} {:>8} {:>5} {:>6}",
+        "scenario", "fleet", "offered", "done", "drop", "queued", "qps",
+        "peak", "scale"
+    ));
+    let mut cells = Vec::with_capacity(runs.len());
+    for ((run, label), r) in runs.iter().zip(&labels).zip(&results) {
+        out.line(format!(
+            "{:<9} {:<16} {:>7} {:>6} {:>6} {:>6} {:>8.2} {:>5} {:>6}",
+            label,
+            run.fleet.spec(),
+            r.offered,
+            r.completed(),
+            r.dropped(),
+            r.queued_end,
+            r.achieved_throughput(),
+            r.peak_replicas(),
+            r.scale_events.len(),
+        ));
+        cells.push(fleet_cell_json(label, run, r));
+    }
+    // the headline claims, stated next to the data that backs them
+    let base = &results[0]; // burst 1x4
+    let scaled = &results[2]; // burst 2x4:p2c
+    out.line(format!(
+        "# scale-out: 2x4:p2c completed {} vs 1x4's {} on burst \
+         ({}x the offered load of one replica's peak)",
+        scaled.completed(),
+        base.completed(),
+        FLEET_RATE_FRAC,
+    ));
+    let auto = results.last().unwrap();
+    let ups = auto.scale_events.iter().filter(|e| e.to > e.from).count();
+    let downs = auto.scale_events.iter().filter(|e| e.to < e.from).count();
+    out.line(format!(
+        "# autoscale: {ups} scale-out / {downs} scale-in episodes, \
+         peak {} replicas",
+        auto.peak_replicas()
+    ));
+
+    if let Some(dir) = &ctx.out_dir {
+        let doc = Value::obj(vec![
+            ("cells", Value::arr(cells)),
+            ("model", Value::from(FLEET_MODEL)),
+            ("peak_qps", Value::from(peak)),
+            ("queue_cap", Value::from(FLEET_QUEUE_CAP)),
+            ("rate_frac", Value::from(FLEET_RATE_FRAC)),
+            ("slo_level", Value::from(DYN_SLO_LEVEL)),
+            ("window", Value::from(DYN_WINDOW)),
+        ]);
+        let path = dir.join("fleet.json");
+        crate::json::write_file(&path, &doc)?;
+        println!("# wrote {}", path.display());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interference::dynamic::builtin;
+    use crate::json::to_string_pretty;
+
+    fn small_ctx_cells(jobs: usize) -> Vec<String> {
+        let spec = models::build(FLEET_MODEL, 64).unwrap();
+        let db = synthesize(&spec, 42);
+        let peak = {
+            let (_, b) =
+                crate::coordinator::optimal_config(&db, &vec![0usize; 4], 4);
+            1.0 / b
+        };
+        let queries = 600;
+        let mut runs = Vec::new();
+        for fs in ["1x4:jsq", "2x4:p2c"] {
+            runs.push(
+                fleet_cell(
+                    &builtin("storm").unwrap(),
+                    FleetConfig::parse(fs).unwrap(),
+                    FleetLoad::Open(
+                        Workload::poisson(FLEET_RATE_FRAC * peak, 42).unwrap(),
+                    ),
+                    FLEET_POLICY,
+                    FLEET_QUEUE_CAP,
+                    queries,
+                    42,
+                )
+                .unwrap(),
+            );
+        }
+        runs.push(
+            fleet_cell(
+                &builtin("storm").unwrap(),
+                FleetConfig::parse(FLEET_AUTO_SPEC).unwrap(),
+                FleetLoad::Open(autoscale_load(peak, queries, 42).unwrap()),
+                FLEET_POLICY,
+                FLEET_QUEUE_CAP,
+                queries,
+                42,
+            )
+            .unwrap(),
+        );
+        let results = simulate_fleet_runs(&db, &runs, jobs).unwrap();
+        runs.iter()
+            .zip(&results)
+            .map(|(run, r)| to_string_pretty(&fleet_cell_json("storm", run, r)))
+            .collect()
+    }
+
+    #[test]
+    fn fleet_cells_are_jobs_invariant_and_schema_stable() {
+        let a = small_ctx_cells(1);
+        let b = small_ctx_cells(2);
+        assert_eq!(a, b, "fleet cells are not jobs-invariant");
+        for cell in &a {
+            let doc = crate::json::parse(cell).unwrap();
+            // fleet-level conservation across replicas
+            let offered = doc.get("offered").as_usize().unwrap();
+            let completed = doc.get("completed").as_usize().unwrap();
+            let dropped = doc.get("dropped").as_usize().unwrap();
+            let queued = doc.get("queued").as_usize().unwrap();
+            assert_eq!(offered, completed + dropped + queued);
+            // per-replica rows: fixed 5-key schema, sums match the fleet
+            let mut sum_c = 0;
+            let mut sum_r = 0;
+            for rep in doc.get("replicas").as_arr().unwrap() {
+                assert_eq!(
+                    rep.keys(),
+                    vec!["completed", "dropped", "id", "rebalances", "routed"]
+                );
+                sum_c += rep.get("completed").as_usize().unwrap();
+                sum_r += rep.get("routed").as_usize().unwrap();
+            }
+            assert_eq!(sum_c, completed);
+            assert_eq!(sum_r, offered);
+            // every window row carries the replica column
+            for row in doc.get("windows").as_arr().unwrap() {
+                assert!(row.get("replica").as_usize().is_some());
+            }
+        }
+        // the autoscale cell actually scaled out under the hot phase
+        let auto = crate::json::parse(&a[2]).unwrap();
+        assert!(
+            !auto.get("scale_events").as_arr().unwrap().is_empty(),
+            "autoscale cell recorded no scale events"
+        );
+        assert!(auto.get("peak_replicas").as_usize().unwrap() > 1);
+    }
+
+    #[test]
+    fn scale_out_cell_beats_the_single_replica_baseline() {
+        let cells = small_ctx_cells(1);
+        let one = crate::json::parse(&cells[0]).unwrap();
+        let two = crate::json::parse(&cells[1]).unwrap();
+        assert!(
+            two.get("completed").as_usize().unwrap()
+                > one.get("completed").as_usize().unwrap(),
+            "2x4:p2c did not complete more than 1x4 under storm overload"
+        );
+        assert!(
+            two.get("achieved_qps").as_f64().unwrap()
+                > one.get("achieved_qps").as_f64().unwrap()
+        );
+    }
+}

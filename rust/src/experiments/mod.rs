@@ -23,6 +23,7 @@
 //! | openloop| Poisson offered load: queueing, drops, SLO (extension)|
 //! | multitenant | per-tenant SLOs under the EDF queue (extension)   |
 //! | batching| deadline-aware batch forming vs offered load (extension)|
+//! | fleet   | replicas x router + autoscaling under overload (extension)|
 
 mod ablation;
 pub mod batching;
@@ -30,6 +31,7 @@ pub mod dynamic;
 mod fig1;
 mod fig10;
 mod fig3;
+pub mod fleet;
 mod fig4;
 mod fig9;
 mod grid;
@@ -93,10 +95,10 @@ impl Output {
     }
 }
 
-pub const ALL_IDS: [&str; 16] = [
+pub const ALL_IDS: [&str; 17] = [
     "table1", "fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
     "fig9", "fig10", "summary", "ablation", "dynamic", "openloop",
-    "multitenant", "batching",
+    "multitenant", "batching", "fleet",
 ];
 
 /// Run one experiment (or `all`).
@@ -107,6 +109,7 @@ pub fn run(id: &str, ctx: &ExpCtx) -> Result<()> {
         "openloop" => openloop::run(ctx),
         "multitenant" => multitenant::run(ctx),
         "batching" => batching::run(ctx),
+        "fleet" => fleet::run(ctx),
         "fig1" => fig1::run(ctx),
         "fig3" => fig3::run(ctx),
         "fig4" => fig4::run(ctx),

@@ -38,7 +38,11 @@ pub const DEFAULT_QUERIES: usize = 2000;
 ///
 /// [`OdinError`]: crate::util::error::OdinError
 pub const MAX_QUERIES: usize = 1_000_000;
-pub const MAX_EPS: usize = 256;
+/// Wide enough for a fleet-scale schedule (hundreds of replicas ×
+/// [`MAX_REPLICA_EPS`](crate::serving::MAX_REPLICA_EPS) EPs each);
+/// `MAX_SLOTS` still bounds the materialized footprint, so a wide
+/// scenario must trade query horizon for width.
+pub const MAX_EPS: usize = 8192;
 pub const MAX_SLOTS: usize = 16_000_000;
 
 /// Builtin scenario names, in catalogue order (stable: golden tests and

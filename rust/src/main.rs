@@ -5,10 +5,11 @@
 //!                --scenario <name|file> runs the online control loop
 //!                against a dynamic interference scenario (odin + lls /
 //!                oracle / static baselines, per-window JSON), driven
-//!                closed- or open-loop via --workload, or multi-tenant
-//!                via --tenants (per-tenant SLOs, EDF queue)
+//!                closed- or open-loop via --workload, multi-tenant
+//!                via --tenants (per-tenant SLOs, EDF queue), or
+//!                multi-replica via --fleet <spec> (router + autoscaler)
 //!   experiment   regenerate paper tables/figures (table1, fig1..fig10,
-//!                summary, dynamic, openloop, or `all`)
+//!                summary, dynamic, openloop, fleet, or `all`)
 //!   bench-db     measure the per-layer timing database on this host
 //!                through the PJRT runtime, under real stressors
 //!   verify       compile artifacts and check gold numerics
@@ -16,7 +17,8 @@
 //!                --scenario <name|file> replays a dynamic interference
 //!                scenario with real stressors and emits live_<name>.json;
 //!                --tenants <name|file> serves a multi-tenant set through
-//!                the SLO-aware queue
+//!                the SLO-aware queue; --fleet <spec> routes an open
+//!                workload across real replicas on disjoint EP groups
 //!   models       list built-in model specs
 
 use odin::cli::{Args, CliError, Command};
@@ -27,6 +29,9 @@ use odin::database::TimingDb;
 use odin::experiments::dynamic::{
     run_scenario, run_scenario_workload, scenario_json, summary_line,
     DYN_SLO_LEVEL, DYN_WINDOW,
+};
+use odin::experiments::fleet::{
+    fleet_cell, fleet_cell_json, FLEET_RATE_FRAC,
 };
 use odin::experiments::multitenant::{
     mt_scenario_json, run_tenant_scenario,
@@ -41,11 +46,13 @@ use odin::runtime::{
     SynthBackend, Tensor,
 };
 use odin::serving::{
-    live_json, tenant, BatchPolicy, Fairness, HarnessOpts, PipelineServer,
-    ScenarioDriver, ServeReport, ServerOpts, Workload, BATCH_SLACK_FACTOR,
+    fleet_live_json, live_json, tenant, BatchPolicy, Fairness, FleetConfig,
+    HarnessOpts, PipelineServer, Router, ScenarioDriver, ServeReport,
+    ServerOpts, Workload, BATCH_SLACK_FACTOR,
 };
 use odin::simulator::{
-    simulate, simulate_policies_workload, Policy, SimConfig, SimSummary,
+    simulate, simulate_fleet_runs, simulate_policies_workload, FleetLoad,
+    Policy, SimConfig, SimSummary,
 };
 use odin::util::affinity;
 use odin::util::error::{OdinError, Result};
@@ -77,9 +84,10 @@ fn usage() -> String {
     "odin — ODIN inference-pipeline coordinator (paper reproduction)\n\n\
      subcommands:\n\
        simulate     one simulation window; --scenario <name|file> runs the\n\
-                    online loop against a dynamic interference scenario\n\
+                    online loop against a dynamic interference scenario;\n\
+                    --fleet <spec> routes over multiple pipeline replicas\n\
        experiment   regenerate paper artifacts: table1 fig1 fig3..fig10\n\
-                    summary dynamic openloop multitenant batching all\n\
+                    summary dynamic openloop multitenant batching fleet all\n\
        bench-db     measure the per-layer timing database via PJRT\n\
        verify       compile artifacts + gold numerics check\n\
        serve        live pipeline server; --scenario <name|file> replays a\n\
@@ -161,6 +169,13 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
              tenants' workloads through the SLO-aware queue under \
              --scenario (default scenario: burst)",
         )
+        .opt(
+            "fleet",
+            "fleet spec RxK[:router][:autoMIN..MAX] (e.g. 2x4:p2c): \
+             route an open workload over R pipeline replicas of K EPs \
+             each under --scenario (default: storm); router = jsq | p2c \
+             | sticky",
+        )
         .flag(
             "queue-cap",
             "256",
@@ -183,6 +198,9 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         .flag("out", "results", "output dir for scenario JSON ('' = none)")
         .switch("no-interference", "run a clean window");
     let args = cmd.parse(argv)?;
+    if !args.get("fleet").is_empty() {
+        return cmd_simulate_fleet(&args);
+    }
     if !args.get("tenants").is_empty() {
         return cmd_simulate_tenants(&args);
     }
@@ -528,11 +546,115 @@ fn cmd_simulate_tenants(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `odin simulate --fleet <spec>`: one fleet cell in the simulator — R
+/// pipeline replicas over disjoint EP groups, a front-end router (JSQ /
+/// power-of-two-choices / tenant-sticky) balancing an open arrival
+/// stream on queue depth + pressure, per-replica online controllers, and
+/// (with `:autoMIN..MAX`) the slow autoscaling outer loop. The scenario
+/// (default: storm) is adapted to the fleet's whole EP pool. Emits
+/// `fleet_<scenario>.json`, byte-identical for every `--jobs` value.
+fn cmd_simulate_fleet(args: &Args) -> Result<()> {
+    for flag in ["eps", "period", "duration", "batch"] {
+        if !args.was_given(flag) {
+            continue;
+        }
+        bail!(
+            "--{flag} cannot be combined with --fleet: the fleet spec \
+             sets replicas x EPs, and per-replica batching is not \
+             supported on the fleet path"
+        );
+    }
+    if args.has("no-interference") {
+        bail!("--no-interference cannot be combined with --fleet");
+    }
+    let fairness = Fairness::parse(args.get("fairness"))?;
+    if fairness.enforced() {
+        bail!(
+            "--fairness is not supported with --fleet: per-replica \
+             queues run the reported (EDF-only) mode"
+        );
+    }
+    let fleet = FleetConfig::parse(args.get("fleet"))?;
+    let db = load_sim_db(args)?;
+    let scenario = if args.get("scenario").is_empty() {
+        odin::interference::dynamic::builtin("storm")?
+    } else {
+        resolve(args.get("scenario"))?
+    };
+    let policy = parse_policy(args)?;
+    let queue_cap = args.usize("queue-cap")?.max(1);
+    let queries = args.usize("queries")?;
+    let seed = args.u64("seed")?;
+    let load = if !args.get("tenants").is_empty() {
+        FleetLoad::Tenants(tenant::resolve(args.get("tenants"))?)
+    } else if args.was_given("workload") {
+        FleetLoad::Open(Workload::parse(args.get("workload"))?)
+    } else {
+        // default stream: 2x one replica's interference-free peak, the
+        // same overload regime the fleet experiment sweeps
+        let k = fleet.eps_per_replica;
+        let (_, bottleneck) = optimal_config(&db, &vec![0usize; k], k);
+        FleetLoad::Open(Workload::poisson(FLEET_RATE_FRAC / bottleneck, seed)?)
+    };
+    let run =
+        fleet_cell(&scenario, fleet, load, policy, queue_cap, queries, seed)?;
+    let results = simulate_fleet_runs(
+        &db,
+        std::slice::from_ref(&run),
+        args.usize("jobs")?.max(1),
+    )?;
+    let r = &results[0];
+    println!(
+        "{}/{}: offered {}  completed {}  dropped {}  queued {}  \
+         achieved {:.2} q/s  peak replicas {}  scale events {}",
+        scenario.name,
+        run.fleet.spec(),
+        r.offered,
+        r.completed(),
+        r.dropped(),
+        r.queued_end,
+        r.achieved_throughput(),
+        r.peak_replicas(),
+        r.scale_events.len(),
+    );
+    for (id, mt) in r.replicas.iter().enumerate() {
+        println!(
+            "  replica {id}: routed {:>6}  completed {:>6}  dropped \
+             {:>5}  rebalances {:>3}",
+            r.routed[id],
+            mt.result.latencies.len(),
+            mt.result.dropped_at.len(),
+            mt.result.rebalances.len(),
+        );
+    }
+    for e in &r.scale_events {
+        println!(
+            "  scale {} -> {} at arrival {} (t {:.2}s)",
+            e.from, e.to, e.at_arrival, e.t
+        );
+    }
+    if !args.get("out").is_empty() {
+        let dir = std::path::Path::new(args.get("out"));
+        std::fs::create_dir_all(dir)?;
+        let doc = Value::obj(vec![
+            ("cell", fleet_cell_json(&scenario.name, &run, r)),
+            ("model", Value::from(args.get("model"))),
+            ("queue_cap", Value::from(queue_cap)),
+            ("slo_level", Value::from(DYN_SLO_LEVEL)),
+            ("window", Value::from(DYN_WINDOW)),
+        ]);
+        let path = dir.join(format!("fleet_{}.json", scenario.name));
+        odin::json::write_file(&path, &doc)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
 fn cmd_experiment(argv: &[String]) -> Result<()> {
     let cmd = Command::new("experiment", "regenerate paper tables/figures")
         .positional(
             "id",
-            "table1|fig1|fig3..fig10|summary|ablation|dynamic|openloop|multitenant|batching|all",
+            "table1|fig1|fig3..fig10|summary|ablation|dynamic|openloop|multitenant|batching|fleet|all",
         )
         .flag("out", "results", "output directory ('' = stdout only)")
         .flag("queries", "4000", "queries per simulation window")
@@ -634,6 +756,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
              tenants' merged workloads live through the SLO-aware queue \
              under --scenario (default scenario: burst)",
         )
+        .opt(
+            "fleet",
+            "fleet spec RxK[:router] (e.g. 2x4:p2c, R <= 4): serve an \
+             open --workload live across R real pipeline replicas on \
+             disjoint EP core groups under --scenario (default: burst)",
+        )
         .flag(
             "queue-cap",
             "256",
@@ -665,6 +793,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             "re-derive the detection threshold from noise in quiet windows",
         );
     let args = cmd.parse(argv)?;
+    if !args.get("fleet").is_empty() {
+        return cmd_serve_fleet(&args);
+    }
     if !args.get("tenants").is_empty() {
         return cmd_serve_tenants(&args);
     }
@@ -942,6 +1073,145 @@ fn cmd_serve_tenants(args: &Args) -> Result<()> {
         std::fs::create_dir_all(dir)?;
         let doc = live_json(&driver, &run, args.get("model"), depth);
         let path = dir.join(format!("live_{}.json", driver.scenario().name));
+        odin::json::write_file(&path, &doc)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+/// `odin serve --fleet <spec>`: live fleet serving — R real
+/// [`PipelineServer`] replicas, each with its own stage workers pinned to
+/// a disjoint EP core group (`ep_offset = r * k`), its own bounded queue
+/// and online controller, behind one front-end router balancing an open
+/// arrival stream on instantaneous depth + queue pressure, with one
+/// fleet-wide stressor rack replaying the --scenario timeline. Emits
+/// `fleet_live_<scenario>.json`, whose per-replica rows and
+/// replica-stamped windows share the fleet simulator's schema.
+fn cmd_serve_fleet(args: &Args) -> Result<()> {
+    if !args.get("tenants").is_empty() {
+        bail!(
+            "--tenants cannot be combined with --fleet on the live path: \
+             the fleet router drives a single open workload"
+        );
+    }
+    if args.was_given("fairness") {
+        bail!(
+            "--fairness requires --tenants: fairness enforcement is a \
+             property of the multi-tenant SLO queue"
+        );
+    }
+    if args.was_given("batch") {
+        bail!("--batch is not supported on the fleet path");
+    }
+    if args.was_given("eps") {
+        bail!("--eps cannot be combined with --fleet: the fleet spec \
+               sets replicas x EPs");
+    }
+    let fleet = FleetConfig::parse(args.get("fleet"))?;
+    if fleet.autoscale.is_some() {
+        bail!(
+            "autoscaling (:autoMIN..MAX) is simulator-only; the live \
+             fleet serves a fixed replica count"
+        );
+    }
+    if fleet.replicas > 4 {
+        bail!(
+            "live fleet supports at most 4 replicas (got {}): each one \
+             spawns real stage workers on its own EP core group",
+            fleet.replicas
+        );
+    }
+    let workload = if args.was_given("workload") {
+        Workload::parse(args.get("workload"))?
+    } else {
+        bail!(
+            "serve --fleet needs an open --workload (e.g. \
+             poisson:200qps): routing balances an arrival timeline"
+        );
+    };
+    let base = if args.get("scenario").is_empty() {
+        odin::interference::dynamic::builtin("burst")?
+    } else {
+        resolve(args.get("scenario"))?
+    };
+    let queries = args.usize("queries")?;
+    let k = fleet.eps_per_replica;
+    let total_eps = fleet.total_eps();
+    let scenario = base.adapted(queries, total_eps)?;
+    let spec = models::build(args.get("model"), args.usize("spatial")?)
+        .ok_or_else(|| err!("unknown model {}", args.get("model")))?;
+    let db = synthesize(&spec, 7);
+    let (config, _) = optimal_config(&db, &vec![0usize; k], k);
+    let mut cores_per_ep = args.usize("cores-per-ep")?;
+    if cores_per_ep == 0 {
+        cores_per_ep = (affinity::num_cpus() / total_eps).max(1);
+    }
+    let depth = args.usize("admission-depth")?.max(1);
+    let mut servers: Vec<PipelineServer> = (0..fleet.replicas)
+        .map(|r| {
+            let backend = SynthBackend::new(&spec, args.f64("query-ms")?);
+            PipelineServer::new(
+                ExecHandle::synthetic(backend),
+                config.clone(),
+                ServerOpts {
+                    num_eps: k,
+                    cores_per_ep,
+                    alpha: args.usize("alpha")?,
+                    detect_threshold: args.f64("threshold")?,
+                    admission_depth: depth,
+                    queue_cap: args.usize("queue-cap")?.max(1),
+                    ep_offset: r * k,
+                    ..ServerOpts::default()
+                },
+            )
+        })
+        .collect();
+    let shape = SynthBackend::new(&spec, args.f64("query-ms")?).input_shape();
+    let driver = ScenarioDriver::new(
+        scenario,
+        HarnessOpts {
+            auto_threshold: args.has("auto-threshold"),
+            cores_per_ep,
+            ..HarnessOpts::default()
+        },
+    );
+    let mut router = Router::new(fleet.router, 42);
+    let inputs: Vec<Tensor> = (0..queries)
+        .map(|i| Tensor::random(&shape, i as u64, 1.0))
+        .collect();
+    let run = driver.run_fleet(&mut servers, inputs, &workload, &mut router)?;
+    println!(
+        "live/{}/{}: workload {}  offered {}  completed {}  dropped {}  \
+         stressor launches {} (work {})  wall {:.2}s",
+        driver.scenario().name,
+        fleet.spec(),
+        run.workload,
+        run.offered,
+        run.completed(),
+        run.dropped(),
+        run.stressor_launches,
+        run.stressor_work,
+        run.wall_seconds,
+    );
+    for rep in &run.replicas {
+        println!(
+            "  replica {}: routed {:>5}  completed {:>5}  dropped {:>4}  \
+             rebalances {:>3}  final config {}",
+            rep.id,
+            rep.routed,
+            rep.completed,
+            rep.dropped,
+            rep.rebalances,
+            rep.final_config,
+        );
+    }
+    if !args.get("out").is_empty() {
+        let dir = std::path::Path::new(args.get("out"));
+        std::fs::create_dir_all(dir)?;
+        let doc =
+            fleet_live_json(&driver, &run, args.get("model"), &fleet.spec());
+        let path = dir
+            .join(format!("fleet_live_{}.json", driver.scenario().name));
         odin::json::write_file(&path, &doc)?;
         println!("wrote {}", path.display());
     }

@@ -1,0 +1,547 @@
+//! Fleet serving: N pipeline replicas over disjoint EP groups, a
+//! pressure-aware front-end router, and a slow autoscaling outer loop.
+//!
+//! ODIN's control loop rebalances stages *within* one pipeline; a fleet
+//! is the provisioning half that InferLine pairs with per-pipeline
+//! control (PAPERS.md): many replicas, a router that spreads arrivals by
+//! replica queue state, and an outer loop that scales the replica count
+//! from window metrics. This module holds the serving-side primitives —
+//! [`FleetConfig`] (the spec grammar), [`Router`] (join-shortest-queue /
+//! power-of-two-choices / tenant-sticky over replica queue depth and
+//! [`SloQueue::pressure`](super::SloQueue::pressure)), and
+//! [`Autoscaler`] — shared verbatim by the simulator
+//! (`simulator::fleet`) and the live `odin serve --fleet` path, so the
+//! routing decisions under test are the routing decisions in production.
+
+use std::fmt;
+
+use crate::bail;
+use crate::util::error::Result;
+use crate::util::Rng;
+
+/// Hard bound on the replica count — with [`MAX_REPLICA_EPS`] EPs each
+/// this spans thousands of virtual EPs, the fleet-scale simulator target.
+pub const MAX_REPLICAS: usize = 512;
+
+/// Hard bound on EPs per replica (one replica = one ODIN pipeline; the
+/// paper's pipelines are small, and stage search is exponential-ish in
+/// stages).
+pub const MAX_REPLICA_EPS: usize = 16;
+
+// -- router policies ----------------------------------------------------
+
+/// How the front-end spreads arrivals over replicas.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// Join-shortest-queue: scan every replica, pick the least loaded.
+    Jsq,
+    /// Power-of-two-choices: sample two distinct replicas (seeded,
+    /// deterministic), send to the less loaded — near-JSQ balance at
+    /// O(1) probe cost (the classic Mitzenmacher result).
+    P2c,
+    /// Tenant-sticky: a tenant keeps hitting the replica it was first
+    /// assigned (JSQ at assignment time) until that replica is scaled
+    /// away, preserving per-replica cache/session locality.
+    Sticky,
+}
+
+impl RouterPolicy {
+    pub fn parse(s: &str) -> Result<RouterPolicy> {
+        match s {
+            "jsq" => Ok(RouterPolicy::Jsq),
+            "p2c" => Ok(RouterPolicy::P2c),
+            "sticky" => Ok(RouterPolicy::Sticky),
+            _ => bail!(
+                "unknown router policy {s:?} (expected jsq | p2c | sticky)"
+            ),
+        }
+    }
+
+    pub fn spec(&self) -> &'static str {
+        match self {
+            RouterPolicy::Jsq => "jsq",
+            RouterPolicy::P2c => "p2c",
+            RouterPolicy::Sticky => "sticky",
+        }
+    }
+}
+
+/// Replica load as the router sees it: queue depth first (the strong
+/// signal), then the SLO queue's deadline pressure (breaks depth ties
+/// toward the replica whose queued work has more headroom), then the
+/// replica id (the deterministic last word).
+fn better(a: usize, b: usize, depths: &[usize], pressures: &[f64]) -> usize {
+    match depths[a].cmp(&depths[b]) {
+        std::cmp::Ordering::Less => a,
+        std::cmp::Ordering::Greater => b,
+        std::cmp::Ordering::Equal => {
+            if pressures[b] < pressures[a] {
+                b
+            } else {
+                a.min(b) // equal or NaN-free tie: lowest id wins
+            }
+        }
+    }
+}
+
+fn jsq_pick(depths: &[usize], pressures: &[f64]) -> usize {
+    let mut best = 0usize;
+    for r in 1..depths.len() {
+        best = better(best, r, depths, pressures);
+    }
+    best
+}
+
+/// The front-end router. Deterministic on (seed, call sequence), so a
+/// fleet simulation is byte-stable across `--jobs` values and a live
+/// replay reproduces the simulated routing exactly.
+#[derive(Debug)]
+pub struct Router {
+    policy: RouterPolicy,
+    rng: Rng,
+    /// Tenant → replica assignment ([`RouterPolicy::Sticky`] only).
+    sticky: Vec<Option<usize>>,
+    /// The two replicas the last P2C route sampled (ids ascending);
+    /// `None` until the first P2C route over ≥ 2 replicas.
+    last_pair: Option<(usize, usize)>,
+}
+
+impl Router {
+    pub fn new(policy: RouterPolicy, seed: u64) -> Router {
+        Router {
+            policy,
+            rng: Rng::new(seed ^ ROUTER_STREAM),
+            sticky: Vec::new(),
+            last_pair: None,
+        }
+    }
+
+    pub fn policy(&self) -> RouterPolicy {
+        self.policy
+    }
+
+    /// Route one arrival. `depths[r]` / `pressures[r]` describe active
+    /// replica `r`'s queue; the slices cover exactly the active replicas
+    /// (scaled-away replicas are simply absent), and the choice is an
+    /// index into them. Panics on an empty fleet.
+    pub fn route(
+        &mut self,
+        depths: &[usize],
+        pressures: &[f64],
+        tenant: usize,
+    ) -> usize {
+        assert!(!depths.is_empty(), "routing over an empty fleet");
+        assert_eq!(depths.len(), pressures.len());
+        let n = depths.len();
+        match self.policy {
+            RouterPolicy::Jsq => jsq_pick(depths, pressures),
+            RouterPolicy::P2c => {
+                if n == 1 {
+                    self.last_pair = None;
+                    return 0;
+                }
+                let i = self.rng.below(n);
+                let j = (i + 1 + self.rng.below(n - 1)) % n;
+                let pair = (i.min(j), i.max(j));
+                self.last_pair = Some(pair);
+                better(pair.0, pair.1, depths, pressures)
+            }
+            RouterPolicy::Sticky => {
+                if let Some(Some(r)) = self.sticky.get(tenant) {
+                    if *r < n {
+                        return *r;
+                    }
+                }
+                let r = jsq_pick(depths, pressures);
+                if self.sticky.len() <= tenant {
+                    self.sticky.resize(tenant + 1, None);
+                }
+                self.sticky[tenant] = Some(r);
+                r
+            }
+        }
+    }
+
+    /// The two replicas the last P2C route sampled (ascending ids).
+    pub fn last_pair(&self) -> Option<(usize, usize)> {
+        self.last_pair
+    }
+
+    /// Current sticky assignment of `tenant`, if any.
+    pub fn sticky_of(&self, tenant: usize) -> Option<usize> {
+        self.sticky.get(tenant).copied().flatten()
+    }
+
+    /// Forget every sticky assignment to `replica` (it was scaled away
+    /// or drained); its tenants re-assign by JSQ on their next arrival.
+    pub fn release(&mut self, replica: usize) {
+        for s in self.sticky.iter_mut() {
+            if *s == Some(replica) {
+                *s = None;
+            }
+        }
+    }
+}
+
+/// Domain separation of the router's PRNG stream: a fleet router never
+/// shares a sequence with another consumer of the same user seed.
+const ROUTER_STREAM: u64 = 0xF1EE_7000_0000_0001;
+
+// -- autoscaling --------------------------------------------------------
+
+/// Knobs of the slow outer loop. Occupancy is the fleet-level queue fill
+/// fraction: total waiting arrivals / (active replicas × per-replica
+/// queue cap) — a dimensionless signal that works for any cap.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AutoscaleConfig {
+    /// Never fewer active replicas than this.
+    pub min: usize,
+    /// Never more active replicas than this (bounded by the EP pool).
+    pub max: usize,
+    /// Scale out when occupancy exceeds this over an observation window.
+    pub up_occupancy: f64,
+    /// Scale in when occupancy falls below this over a window.
+    pub down_occupancy: f64,
+    /// Windows to hold after any decision before deciding again (the
+    /// "slow" in slow outer loop — lets the fleet re-equilibrate).
+    pub cooldown: usize,
+}
+
+impl AutoscaleConfig {
+    /// The default knobs over a `[min, max]` replica range.
+    pub fn range(min: usize, max: usize) -> Result<AutoscaleConfig> {
+        if min < 1 || min > max || max > MAX_REPLICAS {
+            bail!(
+                "autoscale range {min}..{max} invalid (need \
+                 1 <= min <= max <= {MAX_REPLICAS})"
+            );
+        }
+        Ok(AutoscaleConfig {
+            min,
+            max,
+            up_occupancy: 0.5,
+            down_occupancy: 0.05,
+            cooldown: 2,
+        })
+    }
+}
+
+/// One outer-loop verdict.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// Activate one more replica over the next free EP group.
+    Up,
+    /// Drain and release the highest-indexed active replica.
+    Down,
+    Hold,
+}
+
+/// The slow outer loop: hysteresis (two thresholds) plus a cooldown so
+/// one hot window cannot flap the fleet. Shared by the simulator and the
+/// live path; callers feed it one occupancy sample per observation
+/// window and apply the verdict.
+#[derive(Debug)]
+pub struct Autoscaler {
+    cfg: AutoscaleConfig,
+    hold: usize,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscaleConfig) -> Autoscaler {
+        Autoscaler { cfg, hold: 0 }
+    }
+
+    pub fn config(&self) -> &AutoscaleConfig {
+        &self.cfg
+    }
+
+    /// One tick of the outer loop. `active` is the current replica
+    /// count; `occupancy` the fleet queue fill fraction of the window
+    /// just closed.
+    pub fn decide(&mut self, active: usize, occupancy: f64) -> ScaleDecision {
+        if self.hold > 0 {
+            self.hold -= 1;
+            return ScaleDecision::Hold;
+        }
+        if occupancy > self.cfg.up_occupancy && active < self.cfg.max {
+            self.hold = self.cfg.cooldown;
+            ScaleDecision::Up
+        } else if occupancy < self.cfg.down_occupancy && active > self.cfg.min
+        {
+            self.hold = self.cfg.cooldown;
+            ScaleDecision::Down
+        } else {
+            ScaleDecision::Hold
+        }
+    }
+}
+
+// -- fleet spec ---------------------------------------------------------
+
+/// A fleet: `replicas` initially-active pipeline replicas, each over a
+/// disjoint group of `eps_per_replica` EPs carved from a pool of
+/// `max_replicas() × eps_per_replica` EPs, a router policy, and an
+/// optional autoscale range.
+///
+/// Spec grammar (the `--fleet` flag):
+///
+/// ```text
+/// <replicas>x<eps>[:<router>][:auto<min>..<max>]
+/// ```
+///
+/// * `2x4` — two replicas of four EPs each, JSQ routing, no autoscaling.
+/// * `4x8:p2c` — four replicas of eight EPs, power-of-two-choices.
+/// * `1x4:jsq:auto1..3` — start at one replica, scale between 1 and 3.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetConfig {
+    /// Initially active replicas.
+    pub replicas: usize,
+    /// EPs per replica (disjoint groups; replica r owns EPs
+    /// `r*eps_per_replica .. (r+1)*eps_per_replica` of the pool).
+    pub eps_per_replica: usize,
+    pub router: RouterPolicy,
+    pub autoscale: Option<AutoscaleConfig>,
+}
+
+impl FleetConfig {
+    pub fn new(replicas: usize, eps_per_replica: usize) -> Result<FleetConfig> {
+        let f = FleetConfig {
+            replicas,
+            eps_per_replica,
+            router: RouterPolicy::Jsq,
+            autoscale: None,
+        };
+        f.validate()?;
+        Ok(f)
+    }
+
+    /// Parse the `--fleet` spec grammar (see the type docs).
+    pub fn parse(spec: &str) -> Result<FleetConfig> {
+        let mut parts = spec.split(':');
+        let shape = parts.next().unwrap_or("");
+        let Some((r, e)) = shape.split_once('x') else {
+            bail!(
+                "fleet spec {spec:?}: expected <replicas>x<eps>\
+                 [:<router>][:auto<min>..<max>], e.g. 2x4:p2c"
+            );
+        };
+        let replicas: usize = r
+            .parse()
+            .ok()
+            .filter(|&n| n > 0)
+            .ok_or_else(|| {
+                crate::err!("fleet spec {spec:?}: bad replica count {r:?}")
+            })?;
+        let eps_per_replica: usize = e
+            .parse()
+            .ok()
+            .filter(|&n| n > 0)
+            .ok_or_else(|| {
+                crate::err!("fleet spec {spec:?}: bad EP count {e:?}")
+            })?;
+        let mut f = FleetConfig {
+            replicas,
+            eps_per_replica,
+            router: RouterPolicy::Jsq,
+            autoscale: None,
+        };
+        for part in parts {
+            if let Some(range) = part.strip_prefix("auto") {
+                let Some((lo, hi)) = range.split_once("..") else {
+                    bail!(
+                        "fleet spec {spec:?}: autoscale wants \
+                         auto<min>..<max>, got {part:?}"
+                    );
+                };
+                let (Ok(lo), Ok(hi)) =
+                    (lo.parse::<usize>(), hi.parse::<usize>())
+                else {
+                    bail!("fleet spec {spec:?}: bad autoscale range {part:?}");
+                };
+                f.autoscale = Some(AutoscaleConfig::range(lo, hi)?);
+            } else {
+                f.router = RouterPolicy::parse(part)?;
+            }
+        }
+        f.validate()?;
+        Ok(f)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.replicas < 1 || self.max_replicas() > MAX_REPLICAS {
+            bail!(
+                "fleet {}: replica count out of range (1..={MAX_REPLICAS} \
+                 including the autoscale max)",
+                self.spec()
+            );
+        }
+        if self.eps_per_replica < 1 || self.eps_per_replica > MAX_REPLICA_EPS
+        {
+            bail!(
+                "fleet {}: EPs per replica out of range \
+                 (1..={MAX_REPLICA_EPS})",
+                self.spec()
+            );
+        }
+        if let Some(a) = &self.autoscale {
+            if self.replicas < a.min || self.replicas > a.max {
+                bail!(
+                    "fleet {}: initial replicas {} outside autoscale \
+                     range {}..{}",
+                    self.spec(),
+                    self.replicas,
+                    a.min,
+                    a.max
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// The canonical spec string (round-trips through [`parse`]).
+    ///
+    /// [`parse`]: Self::parse
+    pub fn spec(&self) -> String {
+        let mut s = format!(
+            "{}x{}:{}",
+            self.replicas,
+            self.eps_per_replica,
+            self.router.spec()
+        );
+        if let Some(a) = &self.autoscale {
+            s.push_str(&format!(":auto{}..{}", a.min, a.max));
+        }
+        s
+    }
+
+    /// Upper bound of active replicas (the autoscale max, or the fixed
+    /// count) — the EP pool is sized for this many.
+    pub fn max_replicas(&self) -> usize {
+        self.autoscale.as_ref().map_or(self.replicas, |a| a.max)
+    }
+
+    /// Size of the EP pool backing the fleet.
+    pub fn total_eps(&self) -> usize {
+        self.max_replicas() * self.eps_per_replica
+    }
+}
+
+impl fmt::Display for FleetConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.spec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_round_trips() {
+        for s in ["2x4:jsq", "4x8:p2c", "1x4:jsq:auto1..3", "3x2:sticky"] {
+            let f = FleetConfig::parse(s).unwrap();
+            assert_eq!(f.spec(), s, "round trip of {s}");
+            assert_eq!(FleetConfig::parse(&f.spec()).unwrap(), f);
+        }
+        // router defaults to jsq; the canonical spec spells it out
+        let f = FleetConfig::parse("2x4").unwrap();
+        assert_eq!(f.router, RouterPolicy::Jsq);
+        assert_eq!(f.spec(), "2x4:jsq");
+        assert_eq!(f.total_eps(), 8);
+        let f = FleetConfig::parse("1x4:auto1..3").unwrap();
+        assert_eq!(f.max_replicas(), 3);
+        assert_eq!(f.total_eps(), 12);
+    }
+
+    #[test]
+    fn bad_specs_reject_with_context() {
+        for s in [
+            "",
+            "x4",
+            "2x",
+            "0x4",
+            "2x0",
+            "2x4:zip",
+            "2x4:auto3..1",
+            "4x4:auto1..2", // initial outside range
+            "2x99",         // eps per replica over the bound
+            "9999x4",       // replica bound
+            "2x4:auto1..9999",
+        ] {
+            assert!(FleetConfig::parse(s).is_err(), "{s:?} parsed");
+        }
+    }
+
+    #[test]
+    fn jsq_picks_least_loaded_and_breaks_ties_low() {
+        let mut r = Router::new(RouterPolicy::Jsq, 7);
+        let p = [0.0, 0.0, 0.0, 0.0];
+        assert_eq!(r.route(&[3, 1, 2, 5], &p, 0), 1);
+        // depth tie: lowest id
+        assert_eq!(r.route(&[2, 1, 1, 5], &p, 0), 1);
+        // depth tie broken by lower pressure
+        assert_eq!(r.route(&[1, 1, 1, 1], &[0.4, 0.1, 0.2, 0.4], 0), 1);
+    }
+
+    #[test]
+    fn p2c_samples_two_and_takes_the_emptier() {
+        let mut r = Router::new(RouterPolicy::P2c, 11);
+        let depths = [4usize, 0, 7, 2, 9];
+        let p = [0.0; 5];
+        for _ in 0..200 {
+            let pick = r.route(&depths, &p, 0);
+            let (a, b) = r.last_pair().expect("n > 1 always samples");
+            assert!(a < b && b < depths.len());
+            assert!(pick == a || pick == b);
+            assert!(depths[pick] <= depths[a].min(depths[b]));
+        }
+        // single replica: no sampling, only one answer
+        assert_eq!(r.route(&[3], &[0.0], 0), 0);
+        assert_eq!(r.last_pair(), None);
+    }
+
+    #[test]
+    fn sticky_holds_until_scaled_away() {
+        let mut r = Router::new(RouterPolicy::Sticky, 3);
+        let p = [0.0; 3];
+        let first = r.route(&[5, 0, 2], &p, 7);
+        assert_eq!(first, 1);
+        // same tenant keeps its replica even when others empty out
+        assert_eq!(r.route(&[0, 9, 0], &p, 7), 1);
+        assert_eq!(r.sticky_of(7), Some(1));
+        // another tenant lands elsewhere by JSQ
+        assert_eq!(r.route(&[0, 9, 2], &p, 8), 0);
+        // replica 1 scaled away (fleet shrank to 1): tenant 7 re-assigns
+        assert_eq!(r.route(&[4], &[0.0], 7), 0);
+        assert_eq!(r.sticky_of(7), Some(0));
+        // release() forgets assignments explicitly
+        r.release(0);
+        assert_eq!(r.sticky_of(7), None);
+    }
+
+    #[test]
+    fn autoscaler_hysteresis_and_cooldown() {
+        let cfg = AutoscaleConfig::range(1, 3).unwrap();
+        let mut a = Autoscaler::new(cfg);
+        assert_eq!(a.decide(1, 0.9), ScaleDecision::Up);
+        // cooldown: the next two windows hold no matter the signal
+        assert_eq!(a.decide(2, 0.9), ScaleDecision::Hold);
+        assert_eq!(a.decide(2, 0.9), ScaleDecision::Hold);
+        assert_eq!(a.decide(2, 0.9), ScaleDecision::Up);
+        // at max: hot windows hold
+        for _ in 0..3 {
+            a.decide(3, 0.9);
+        }
+        assert_eq!(a.decide(3, 0.9), ScaleDecision::Hold);
+        // quiet windows scale back down to min, never below
+        assert_eq!(a.decide(3, 0.0), ScaleDecision::Down);
+        a.decide(2, 0.0);
+        a.decide(2, 0.0);
+        assert_eq!(a.decide(2, 0.0), ScaleDecision::Down);
+        a.decide(1, 0.0);
+        a.decide(1, 0.0);
+        assert_eq!(a.decide(1, 0.0), ScaleDecision::Hold);
+        // mid-band occupancy holds (hysteresis gap)
+        assert_eq!(a.decide(2, 0.2), ScaleDecision::Hold);
+    }
+}

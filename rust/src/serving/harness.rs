@@ -43,6 +43,7 @@ use crate::simulator::window::{windows_json, WindowMetrics};
 use crate::util::error::Result;
 
 use super::batch::{BatchFormer, BatchPolicy};
+use super::fleet::Router;
 use super::server::{PipelineServer, RebalanceLog, TenantPush};
 use super::stats::{ServeReport, SERVE_WINDOW};
 use super::tenant::{tally, totals_json, TenantSet, TenantTotals};
@@ -825,6 +826,37 @@ impl ScenarioDriver {
         dropped_at: &[usize],
         rebalances: &[RebalanceLog],
     ) -> Vec<WindowMetrics> {
+        fold_live_windows(
+            self.opts.window,
+            self.opts.slo_level,
+            self.scenario.num_eps,
+            completions,
+            wall,
+            stressed,
+            active_eps,
+            dropped_at,
+            rebalances,
+        )
+    }
+}
+
+/// The per-window fold behind [`ScenarioDriver::live_windows`], split out
+/// so the fleet path can fold each replica's record against its *own* EP
+/// width (`num_eps` = stages per replica) instead of the scenario's full
+/// pool.
+#[allow(clippy::too_many_arguments)]
+fn fold_live_windows(
+    window: usize,
+    slo_level: f64,
+    num_eps: usize,
+    completions: &[super::Completion],
+    wall: &[f64],
+    stressed: &[bool],
+    active_eps: &[usize],
+    dropped_at: &[usize],
+    rebalances: &[RebalanceLog],
+) -> Vec<WindowMetrics> {
+    {
         let n = completions.len();
         let tput: Vec<f64> = completions
             .iter()
@@ -849,11 +881,11 @@ impl ScenarioDriver {
             } else {
                 0.0
             });
-        let target = self.opts.slo_level * peak;
+        let target = slo_level * peak;
         let mut out = Vec::new();
         let mut start = 0usize;
         while start < n {
-            let end = (start + self.opts.window).min(n);
+            let end = (start + window).min(n);
             let lats: Vec<f64> =
                 completions[start..end].iter().map(|c| c.latency).collect();
             let lat_mean = lats.iter().sum::<f64>() / lats.len() as f64;
@@ -888,7 +920,7 @@ impl ScenarioDriver {
             // ones (where the schedule is indexed by time, not query)
             let active: usize = active_eps[start..end].iter().sum();
             let interference_load = active as f64
-                / ((end - start) * self.scenario.num_eps) as f64;
+                / ((end - start) * num_eps) as f64;
             // same traversal accounting as the simulator: each completion
             // contributes 1/b of the batch it rode in
             let traversals: f64 = completions[start..end]
@@ -915,6 +947,7 @@ impl ScenarioDriver {
                 batches,
                 mean_batch,
                 tenants: Vec::new(),
+                replica: None,
             });
             start = end;
         }
@@ -998,6 +1031,297 @@ pub fn live_json(
     Value::obj(fields)
 }
 
+/// One replica's share of a live fleet run.
+pub struct FleetReplicaRun {
+    pub id: usize,
+    /// Arrivals the router sent to this replica (completed + dropped).
+    pub routed: usize,
+    pub completed: usize,
+    /// Arrivals shed at this replica's bounded queue.
+    pub dropped: usize,
+    pub rebalances: usize,
+    pub final_config: String,
+}
+
+/// Everything a live fleet replay produced: per-replica ledgers plus the
+/// concatenated per-replica window rows (each stamped with its `replica`
+/// column, exactly like the fleet simulator's).
+pub struct FleetLiveRun {
+    pub replicas: Vec<FleetReplicaRun>,
+    pub windows: Vec<WindowMetrics>,
+    pub offered: usize,
+    pub workload: String,
+    pub stressor_work: u64,
+    pub stressor_launches: usize,
+    pub wall_seconds: f64,
+}
+
+impl FleetLiveRun {
+    pub fn completed(&self) -> usize {
+        self.replicas.iter().map(|r| r.completed).sum()
+    }
+
+    pub fn dropped(&self) -> usize {
+        self.replicas.iter().map(|r| r.dropped).sum()
+    }
+}
+
+impl ScenarioDriver {
+    /// Replay an open workload across a fleet of replicas: every due
+    /// arrival is routed by `router` over the replicas' instantaneous
+    /// depth (queue + in flight) and queue pressure, then flows through
+    /// that replica's own bounded queue, admission window, and online
+    /// controller. The scenario's EP pool spans the whole fleet —
+    /// `servers.len() * stages_per_replica` must equal the scenario's EP
+    /// count, with replica `r` owning the contiguous EP group starting at
+    /// `r * stages_per_replica` (give each server the matching
+    /// [`ServerOpts::ep_offset`](super::ServerOpts) so stage pinning and
+    /// stressor placement agree) — and one shared [`StressorRack`] keeps
+    /// the fleet-wide interference timeline in sync at every admission.
+    ///
+    /// Closed workloads don't route (there is no arrival timeline to
+    /// balance) and batching is not supported on the fleet path.
+    pub fn run_fleet(
+        &self,
+        servers: &mut [PipelineServer],
+        inputs: Vec<Tensor>,
+        workload: &Workload,
+        router: &mut Router,
+    ) -> Result<FleetLiveRun> {
+        if !workload.is_open() {
+            bail!(
+                "fleet routing needs an open workload (poisson/trace/\
+                 phased), got {}",
+                workload.spec()
+            );
+        }
+        if !self.opts.batch.is_off() {
+            bail!(
+                "batching ({}) on the fleet path is not supported",
+                self.opts.batch.spec()
+            );
+        }
+        if servers.is_empty() {
+            bail!("fleet run needs at least one replica");
+        }
+        let k = servers[0].config().num_stages();
+        if servers.iter().any(|s| s.config().num_stages() != k) {
+            bail!("fleet replicas must all have the same stage count");
+        }
+        if servers.len() * k != self.scenario.num_eps {
+            bail!(
+                "scenario {:?} targets {} EPs but the fleet has {} \
+                 replicas x {} stages = {}",
+                self.scenario.name,
+                self.scenario.num_eps,
+                servers.len(),
+                k,
+                servers.len() * k
+            );
+        }
+        let n = inputs.len();
+        if self.scenario.axis == ScenarioAxis::Queries
+            && n != self.schedule.num_queries()
+        {
+            bail!(
+                "scenario {:?} schedules {} queries, got {n} inputs \
+                 (adapt the scenario with --queries)",
+                self.scenario.name,
+                self.schedule.num_queries()
+            );
+        }
+        let arrivals = workload.arrivals(n)?;
+        let r_count = servers.len();
+        let log_start: Vec<usize> =
+            servers.iter().map(|s| s.rebalance_log.len()).collect();
+        let done_start: Vec<usize> =
+            servers.iter().map(|s| s.queries_done()).collect();
+        let mut rack =
+            StressorRack::new(self.scenario.num_eps, self.opts.cores_per_ep);
+        let mut completions: Vec<Vec<super::Completion>> =
+            (0..r_count).map(|_| Vec::new()).collect();
+        let mut wall: Vec<Vec<f64>> = vec![Vec::new(); r_count];
+        let mut stressed: Vec<Vec<bool>> = vec![Vec::new(); r_count];
+        let mut active_eps: Vec<Vec<usize>> = vec![Vec::new(); r_count];
+        let mut dropped_at: Vec<Vec<usize>> = vec![Vec::new(); r_count];
+        let mut routed = vec![0usize; r_count];
+        let mut depths = vec![0usize; r_count];
+        let mut pressures = vec![0.0f64; r_count];
+        let mut pending = inputs.into_iter();
+        let mut offered = 0usize;
+        let mut admitted = 0usize;
+        let t0 = Instant::now();
+        loop {
+            let idle = servers.iter().all(|s| {
+                s.queue_len() == 0
+                    && s.in_flight() == 0
+                    && !s.has_pending_completion()
+            });
+            if offered >= n && idle {
+                break;
+            }
+            // route every due arrival on the replicas' instantaneous
+            // state — depth first, queue pressure as the tiebreak signal
+            let now = t0.elapsed().as_secs_f64();
+            while offered < n && arrivals[offered] <= now {
+                let x = pending.next().expect("inputs counted above");
+                for (r, s) in servers.iter().enumerate() {
+                    depths[r] = s.queue_len() + s.in_flight();
+                    pressures[r] = s.queue_pressure();
+                }
+                let r = router.route(&depths, &pressures, 0);
+                routed[r] += 1;
+                let due = t0 + Duration::from_secs_f64(arrivals[offered]);
+                if !servers[r].enqueue_arrived(x, due) {
+                    dropped_at[r].push(completions[r].len());
+                }
+                offered += 1;
+            }
+            let mut progressed = false;
+            for (r, server) in servers.iter_mut().enumerate() {
+                if server.rebalance_due() && server.in_flight() == 0 {
+                    server.rebalance_now()?;
+                    progressed = true;
+                    continue;
+                }
+                while server.in_flight() < server.admission_depth()
+                    && !server.rebalance_due()
+                    && server.queue_len() > 0
+                {
+                    // the schedule is fleet-global: sync all EPs by the
+                    // fleet-wide admission index (or elapsed time), then
+                    // record this replica's slice of the state
+                    let state = self.state(admitted, t0.elapsed());
+                    rack.sync(state);
+                    let mine = &state[r * k..(r + 1) * k];
+                    stressed[r].push(mine.iter().any(|&s| s != 0));
+                    active_eps[r]
+                        .push(mine.iter().filter(|&&s| s != 0).count());
+                    server.admit_one()?;
+                    admitted += 1;
+                    progressed = true;
+                }
+            }
+            // drain whatever is ready; short timeouts keep the router
+            // responsive to the arrival timeline
+            for (r, server) in servers.iter_mut().enumerate() {
+                while server.in_flight() > 0 || server.has_pending_completion()
+                {
+                    match server
+                        .recv_completion_timeout(Duration::from_millis(1))?
+                    {
+                        Some(c) => {
+                            completions[r].push(c);
+                            wall[r].push(t0.elapsed().as_secs_f64());
+                            progressed = true;
+                        }
+                        None => break,
+                    }
+                }
+            }
+            if !progressed && offered < n {
+                let gap = arrivals[offered] - t0.elapsed().as_secs_f64();
+                if gap > 0.0 {
+                    std::thread::sleep(Duration::from_secs_f64(gap.min(0.05)));
+                }
+            }
+        }
+        rack.stop_all();
+        let wall_seconds = t0.elapsed().as_secs_f64();
+        let mut replicas = Vec::with_capacity(r_count);
+        let mut windows = Vec::new();
+        for r in 0..r_count {
+            let rebalance_log: Vec<RebalanceLog> = servers[r].rebalance_log
+                [log_start[r]..]
+                .iter()
+                .map(|e| RebalanceLog {
+                    at_query: e.at_query - done_start[r],
+                    ..e.clone()
+                })
+                .collect();
+            if !completions[r].is_empty() {
+                let mut ws = fold_live_windows(
+                    self.opts.window,
+                    self.opts.slo_level,
+                    k,
+                    &completions[r],
+                    &wall[r],
+                    &stressed[r],
+                    &active_eps[r],
+                    &dropped_at[r],
+                    &rebalance_log,
+                );
+                for w in &mut ws {
+                    w.replica = Some(r);
+                }
+                windows.extend(ws);
+            }
+            replicas.push(FleetReplicaRun {
+                id: r,
+                routed: routed[r],
+                completed: completions[r].len(),
+                dropped: dropped_at[r].len(),
+                rebalances: rebalance_log.len(),
+                final_config: servers[r].config().to_string(),
+            });
+        }
+        Ok(FleetLiveRun {
+            replicas,
+            windows,
+            offered: n,
+            workload: workload.spec().to_string(),
+            stressor_work: rack.work_done,
+            stressor_launches: rack.launches,
+            wall_seconds,
+        })
+    }
+}
+
+/// The `fleet_live_<scenario>.json` document. Its `replicas` rows carry
+/// the same key set as the fleet simulator's (`fleet.json` cells) and its
+/// `windows` array flows through the shared [`windows_json`] emitter, so
+/// live and simulated fleet timelines diff directly.
+pub fn fleet_live_json(
+    driver: &ScenarioDriver,
+    run: &FleetLiveRun,
+    model: &str,
+    fleet: &str,
+) -> Value {
+    let scenario = driver.scenario();
+    let replicas = Value::arr(
+        run.replicas
+            .iter()
+            .map(|r| {
+                Value::obj(vec![
+                    ("completed", Value::from(r.completed)),
+                    ("dropped", Value::from(r.dropped)),
+                    ("id", Value::from(r.id)),
+                    ("rebalances", Value::from(r.rebalances)),
+                    ("routed", Value::from(r.routed)),
+                ])
+            })
+            .collect(),
+    );
+    Value::obj(vec![
+        ("completed", Value::from(run.completed())),
+        ("dropped", Value::from(run.dropped())),
+        ("eps", Value::from(scenario.num_eps)),
+        ("fleet", Value::from(fleet)),
+        ("model", Value::from(model)),
+        ("name", Value::from(scenario.name.clone())),
+        ("offered", Value::from(run.offered)),
+        ("policy", Value::from("odin_live")),
+        ("replicas", replicas),
+        ("slo_level", Value::from(driver.opts.slo_level)),
+        ("stressor_launches", Value::from(run.stressor_launches)),
+        ("stressor_work", Value::from(run.stressor_work as f64)),
+        ("wall_seconds", Value::from(run.wall_seconds)),
+        ("window", Value::from(driver.opts.window)),
+        ("windows", windows_json(&run.windows)),
+        ("workload", Value::from(run.workload.clone())),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1038,6 +1362,7 @@ mod tests {
                 admission_depth: 2,
                 queue_cap: 256,
                 fairness: crate::serving::Fairness::Reported,
+                ep_offset: 0,
             },
         );
         let inputs =
@@ -1201,6 +1526,7 @@ mod tests {
                 admission_depth: 1,
                 queue_cap: 4,
                 fairness: crate::serving::Fairness::Reported,
+                ep_offset: 0,
             },
         );
         let driver = ScenarioDriver::new(
@@ -1453,6 +1779,7 @@ mod tests {
                     admission_depth: depth,
                     queue_cap: 64,
                     fairness: crate::serving::Fairness::Reported,
+                    ep_offset: 0,
                 },
             );
             let driver = ScenarioDriver::new(

@@ -8,6 +8,7 @@
 //! stressors.
 
 pub mod batch;
+pub mod fleet;
 pub mod harness;
 pub mod live_eval;
 pub mod server;
@@ -16,7 +17,14 @@ pub mod tenant;
 pub mod workload;
 
 pub use batch::{BatchFormer, BatchPolicy, BATCH_SLACK_FACTOR, MAX_BATCH};
-pub use harness::{live_json, HarnessOpts, LiveRun, ScenarioDriver};
+pub use fleet::{
+    AutoscaleConfig, Autoscaler, FleetConfig, Router, RouterPolicy,
+    ScaleDecision, MAX_REPLICAS, MAX_REPLICA_EPS,
+};
+pub use harness::{
+    fleet_live_json, live_json, FleetLiveRun, FleetReplicaRun, HarnessOpts,
+    LiveRun, ScenarioDriver,
+};
 pub use live_eval::LiveEval;
 pub use server::{
     Admitted, Completion, PipelineServer, RebalanceLog, ServerOpts,

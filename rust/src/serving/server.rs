@@ -126,6 +126,12 @@ pub struct ServerOpts {
     /// installs the tenant set; [`Fairness::Reported`] is the
     /// historical EDF-only behavior, bit for bit).
     pub fairness: Fairness,
+    /// Global EP index of this server's stage 0: stage `s` pins to
+    /// `affinity::ep_cores(ep_offset + s, cores_per_ep)`. Fleet serving
+    /// gives replica `r` of a `k`-stage pipeline `ep_offset = r * k` so
+    /// replicas occupy disjoint core groups; the default 0 is the
+    /// historical single-replica pinning, bit for bit.
+    pub ep_offset: usize,
 }
 
 impl Default for ServerOpts {
@@ -139,6 +145,7 @@ impl Default for ServerOpts {
             admission_depth: 1,
             queue_cap: 256,
             fairness: Fairness::Reported,
+            ep_offset: 0,
         }
     }
 }
@@ -220,7 +227,7 @@ impl PipelineServer {
         for (s, rx) in rxs.into_iter().enumerate() {
             let next = senders[s + 1].clone();
             let handle = handle.clone();
-            let cores = affinity::ep_cores(s, opts.cores_per_ep);
+            let cores = affinity::ep_cores(opts.ep_offset + s, opts.cores_per_ep);
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("odin-stage-{s}"))
@@ -867,6 +874,7 @@ mod tests {
                 admission_depth: depth,
                 queue_cap: 4,
                 fairness: Fairness::Reported,
+                ep_offset: 0,
             },
         )
     }

@@ -676,11 +676,7 @@ impl<P> SloQueue<P> {
         let wmin = weights.iter().cloned().fold(f64::INFINITY, f64::min);
         let quanta: Vec<f64> =
             weights.iter().map(|w| w / wmin.max(1e-12)).collect();
-        let caps: Vec<usize> = set
-            .queue_shares()
-            .iter()
-            .map(|s| ((s * self.cap as f64).floor() as usize).max(1))
-            .collect();
+        let caps = fair_caps(&set.queue_shares(), self.cap);
         let n = weights.len();
         self.fair = Some(FairState {
             mode,
@@ -692,15 +688,24 @@ impl<P> SloQueue<P> {
             cursor: 0,
         });
         // entries may already be queued (live reconfiguration): rebuild
-        // the occupancy ledger from them
+        // the occupancy ledger from them. A queued entry whose tenant
+        // index falls outside the new set must grow *every* per-tenant
+        // ledger (not just counts): a later DRR pop reads quanta/deficit
+        // and a cap check reads caps at that index, so a counts-only
+        // resize leaves them short and panics out of bounds.
         if let Some(f) = &mut self.fair {
             for e in &self.entries {
-                if e.tenant >= f.counts.len() {
-                    f.counts.resize(e.tenant + 1, 0);
-                }
+                f.ensure(e.tenant);
                 f.counts[e.tenant] += 1;
             }
         }
+    }
+
+    /// Installed per-tenant occupancy caps, indexed by tenant; `None`
+    /// when no enforcing fairness mode is installed. Σ caps ≤ the queue
+    /// bound always holds (largest-remainder normalization).
+    pub fn tenant_caps(&self) -> Option<&[usize]> {
+        self.fair.as_ref().map(|f| f.caps.as_slice())
     }
 
     /// The installed fairness mode ([`Fairness::Reported`] when none).
@@ -948,6 +953,51 @@ impl<P> SloQueue<P> {
             .sum::<f64>()
             / wsum
     }
+}
+
+/// Per-tenant occupancy bounds under [`Fairness::WfqCaps`]. Each tenant
+/// nominally gets `max(1, ⌊share × cap⌋)` slots — the historical rule,
+/// kept verbatim whenever those floors fit inside the queue bound (every
+/// pre-existing artifact is in this regime, bit for bit). With a small
+/// cap and many tenants the per-tenant `max(1, ..)` floors oversubscribe
+/// the bound, and an oversubscribed cap isolates nothing: the caps are
+/// then re-derived by largest-remainder apportionment of the `cap` slots
+/// over the normalized shares (floor of each quota, leftover slots to
+/// the largest fractional parts, ties to the lower tenant index), so
+/// Σ caps ≤ cap always holds. With more tenants than slots some caps are
+/// legitimately 0 — that tenant's arrivals always shed, which is the
+/// honest reading of "no slot is reserved for you".
+fn fair_caps(shares: &[f64], cap: usize) -> Vec<usize> {
+    let naive: Vec<usize> = shares
+        .iter()
+        .map(|s| ((s * cap as f64).floor() as usize).max(1))
+        .collect();
+    if naive.iter().sum::<usize>() <= cap {
+        return naive;
+    }
+    let total: f64 = shares.iter().sum::<f64>().max(1e-12);
+    let quotas: Vec<f64> =
+        shares.iter().map(|s| s / total * cap as f64).collect();
+    let mut caps: Vec<usize> =
+        quotas.iter().map(|q| q.floor() as usize).collect();
+    let mut left = cap - caps.iter().sum::<usize>().min(cap);
+    // hand the leftover slots to the largest fractional parts
+    let mut order: Vec<usize> = (0..shares.len()).collect();
+    order.sort_by(|&a, &b| {
+        let fa = quotas[a] - quotas[a].floor();
+        let fb = quotas[b] - quotas[b].floor();
+        fb.partial_cmp(&fa)
+            .expect("shares validated finite")
+            .then(a.cmp(&b))
+    });
+    for i in order {
+        if left == 0 {
+            break;
+        }
+        caps[i] += 1;
+        left -= 1;
+    }
+    caps
 }
 
 impl FairState {
@@ -1601,5 +1651,72 @@ mod tests {
         let mut q3: SloQueue<usize> = SloQueue::new(8);
         q3.push(0, 0.0, Some(0.0), 0, 0, 0, 0.0);
         assert_eq!(q3.pressure(0.0), 0.0);
+    }
+
+    /// Regression: live reconfiguration to a *smaller* tenant set while
+    /// higher-indexed tenants still have queued entries used to resize
+    /// only `counts`, so the next DRR pop (quanta/deficit) or cap check
+    /// (caps) indexed out of bounds and panicked.
+    #[test]
+    fn reconfigure_to_smaller_set_keeps_ledgers_coherent() {
+        let one = TenantSet::new(
+            "solo",
+            vec![TenantSpec {
+                id: "only".into(),
+                workload: Workload::parse("poisson:10qps").unwrap(),
+                deadline_ms: 1000.0,
+                priority: 0,
+                weight: 1.0,
+                queue_share: None,
+            }],
+        )
+        .unwrap();
+        let mut q = fair_queue(Fairness::WfqCaps, 1.0, 1.0, 16);
+        q.push(0, 0.0, Some(100.0), 0, 0, 0, 0.0);
+        q.push(1, 0.0, Some(100.0), 0, 1, 1, 0.0);
+        q.push(2, 0.0, Some(100.0), 0, 1, 2, 0.0);
+        // shrink the configured set below the queued tenant indices
+        q.configure_fairness(Fairness::WfqCaps, &one);
+        // cap check path: a fresh arrival for the out-of-range tenant
+        assert!(matches!(
+            q.push(3, 0.0, Some(100.0), 0, 1, 3, 0.0),
+            SloPush::Accepted
+        ));
+        // DRR pop path: drain everything
+        let mut popped = 0;
+        while q.pop().is_some() {
+            popped += 1;
+        }
+        assert_eq!(popped, 4);
+    }
+
+    #[test]
+    fn fair_caps_keep_the_naive_floors_when_they_fit() {
+        // tiers regime (2:1 over cap 64): the historical floors, exactly
+        assert_eq!(fair_caps(&[2.0 / 3.0, 1.0 / 3.0], 64), vec![42, 21]);
+        assert_eq!(fair_caps(&[0.5, 0.5], 8), vec![4, 4]);
+    }
+
+    #[test]
+    fn fair_caps_normalize_when_the_floors_oversubscribe() {
+        // 5 equal tenants over a cap of 3: naive max(1, ..) floors sum to
+        // 5 > 3; largest-remainder hands out exactly the 3 slots, ties to
+        // the lower index
+        let caps = fair_caps(&[0.2; 5], 3);
+        assert_eq!(caps.iter().sum::<usize>(), 3);
+        assert_eq!(caps, vec![1, 1, 1, 0, 0]);
+        // skewed shares: the heavy tenant keeps its proportional slice
+        let caps = fair_caps(&[0.7, 0.1, 0.1, 0.1], 4);
+        assert_eq!(caps.iter().sum::<usize>(), 4);
+        assert_eq!(caps[0], 3, "{caps:?}");
+    }
+
+    #[test]
+    fn configured_caps_are_visible_and_bounded() {
+        let mut q = fair_queue(Fairness::WfqCaps, 1.0, 1.0, 8);
+        let caps = q.tenant_caps().unwrap().to_vec();
+        assert_eq!(caps, vec![4, 4]);
+        q.configure_fairness(Fairness::Reported, &builtin("even").unwrap());
+        assert!(q.tenant_caps().is_none());
     }
 }

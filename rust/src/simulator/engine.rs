@@ -1069,7 +1069,7 @@ pub fn simulate_tenants_policies(
 /// the historical shim) or by the virtual clock in milliseconds
 /// ([`ScenarioAxis::Millis`]; one schedule slot = 1 ms, past-horizon
 /// time is interference-free).
-fn state_at<'a>(
+pub(crate) fn state_at<'a>(
     schedule: &'a Schedule,
     clear: &'a EpScenarios,
     axis: ScenarioAxis,
@@ -1089,7 +1089,7 @@ fn state_at<'a>(
     }
 }
 
-fn bottleneck(times: &[f64]) -> f64 {
+pub(crate) fn bottleneck(times: &[f64]) -> f64 {
     times.iter().copied().fold(0.0f64, f64::max)
 }
 
@@ -1444,6 +1444,7 @@ mod tests {
                     deadline_ms: tight_ms,
                     priority: 0,
                     weight: 1.0,
+                    queue_share: None,
                 },
                 TenantSpec {
                     id: "loose".into(),
@@ -1451,6 +1452,7 @@ mod tests {
                     deadline_ms: loose_ms,
                     priority: 1,
                     weight: 1.0,
+                    queue_share: None,
                 },
             ],
         )

@@ -1,0 +1,1081 @@
+//! Fleet simulation: N replica pipelines over disjoint EP groups behind
+//! the front-end [`Router`], each replica running its own ODIN control
+//! loop, with an optional [`Autoscaler`] outer loop.
+//!
+//! The fleet-wide interference [`Schedule`] spans the whole EP pool
+//! (`fleet.total_eps()` columns — thousands of virtual EPs at the top of
+//! the range); replica `r` sees only its slice
+//! `r*k .. (r+1)*k` of every state vector, so stressors land on specific
+//! *shards* and the router's job is to steer load around them. Arrivals
+//! are processed strictly in arrival order: every replica is advanced to
+//! the arrival instant (admitting and completing whatever its pipeline
+//! could have started by then), the router reads the resulting queue
+//! depths and deadline pressures, and the arrival joins exactly one
+//! replica's [`SloQueue`]. The whole run is deterministic on its inputs
+//! — including the seeded P2C sampler — so fleet experiments stay
+//! byte-stable and `--jobs`-invariant.
+
+use std::sync::Arc;
+
+use crate::bail;
+use crate::coordinator::{optimal_config, OnlineController, RebalanceResult};
+use crate::database::TimingDb;
+use crate::interference::dynamic::ScenarioAxis;
+use crate::interference::{EpScenarios, Schedule};
+use crate::pipeline::{stage_times_into, PipelineConfig};
+use crate::serving::fleet::{Autoscaler, FleetConfig, Router, ScaleDecision};
+use crate::serving::tenant::{SloPush, SloQueue, TenantArrival, TenantSet};
+use crate::serving::workload::Workload;
+use crate::util::error::Result;
+use crate::util::ThreadPool;
+
+use super::engine::{
+    bottleneck, state_at, MtSimResult, RebalanceEvent, SimConfig, SimResult,
+};
+use super::window::{
+    attach_tenant_windows, window_metrics_eps, WindowMetrics, DEFAULT_WINDOW,
+};
+
+/// What drives a fleet run.
+#[derive(Clone, Debug)]
+pub enum FleetLoad {
+    /// One open-loop arrival stream (no deadlines), routed per arrival.
+    Open(Workload),
+    /// Merged multi-tenant arrivals: per-tenant deadlines, classes and
+    /// (under an enforcing fairness mode) per-replica DRR admission.
+    Tenants(TenantSet),
+}
+
+impl FleetLoad {
+    /// The merged arrival timeline (time-sorted `TenantArrival`s; open
+    /// loads are tenant 0 throughout).
+    pub fn arrivals(&self, n: usize) -> Result<Vec<TenantArrival>> {
+        match self {
+            FleetLoad::Open(w) => {
+                if !w.is_open() {
+                    bail!(
+                        "fleet routing needs an open workload ({:?} is \
+                         closed-loop: no arrival instants to route on)",
+                        w.spec()
+                    );
+                }
+                Ok(w.arrivals(n)?
+                    .into_iter()
+                    .map(|t| TenantArrival { t, tenant: 0 })
+                    .collect())
+            }
+            FleetLoad::Tenants(ts) => ts.arrivals(n),
+        }
+    }
+
+    /// Tenant ids (empty for an open load — no per-tenant rows).
+    pub fn tenant_ids(&self) -> Vec<String> {
+        match self {
+            FleetLoad::Open(_) => Vec::new(),
+            FleetLoad::Tenants(ts) => ts.ids(),
+        }
+    }
+
+    pub fn spec(&self) -> String {
+        match self {
+            FleetLoad::Open(w) => w.spec().to_string(),
+            FleetLoad::Tenants(ts) => ts.name.clone(),
+        }
+    }
+}
+
+/// One autoscaling episode: the fleet went `from` → `to` active replicas
+/// at arrival `at_arrival` (virtual time `t`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScaleEvent {
+    pub at_arrival: usize,
+    pub t: f64,
+    pub from: usize,
+    pub to: usize,
+}
+
+/// A fleet run: one [`MtSimResult`] per replica (indexed by replica id;
+/// replicas activated later start with empty histories, scaled-away
+/// replicas keep theirs) plus the fleet-level routing and scaling log.
+#[derive(Clone, Debug)]
+pub struct FleetSimResult {
+    pub replicas: Vec<MtSimResult>,
+    /// Arrivals routed to each replica (parallel to `replicas`).
+    pub routed: Vec<usize>,
+    pub scale_events: Vec<ScaleEvent>,
+    /// Merged arrivals offered to the fleet.
+    pub offered: usize,
+    /// Fleet wall-clock: the latest completion across replicas.
+    pub total_time: f64,
+    /// Interference-free peak throughput of ONE replica (the scale-out
+    /// reference line: N clean replicas sustain ≈ N× this).
+    pub peak_throughput: f64,
+    /// Arrivals still queued when the run ended (always 0 in the
+    /// simulator — the final drain empties every replica — but the
+    /// conservation law `offered = completed + dropped + queued` is
+    /// checked with this term so the live path can share the schema).
+    pub queued_end: usize,
+}
+
+impl FleetSimResult {
+    /// Completions summed across replicas.
+    pub fn completed(&self) -> usize {
+        self.replicas.iter().map(|r| r.result.latencies.len()).sum()
+    }
+
+    /// Shed arrivals summed across replicas.
+    pub fn dropped(&self) -> usize {
+        self.replicas.iter().map(|r| r.result.dropped_at.len()).sum()
+    }
+
+    /// Fleet throughput: completed queries / fleet wall-clock.
+    pub fn achieved_throughput(&self) -> f64 {
+        if self.total_time <= 0.0 {
+            0.0
+        } else {
+            self.completed() as f64 / self.total_time
+        }
+    }
+
+    /// Peak concurrently-active replica count over the run (the pool
+    /// only ever grows, so its size is the high-water mark).
+    pub fn peak_replicas(&self) -> usize {
+        self.replicas.len().max(1)
+    }
+}
+
+/// Everything a replica needs from the fleet context, borrowed once.
+struct FleetCtx<'a> {
+    db: &'a TimingDb,
+    schedule: &'a Schedule,
+    clear: EpScenarios,
+    axis: ScenarioAxis,
+    cfg: &'a SimConfig,
+    /// EPs per replica (the slice width).
+    k: usize,
+    /// Per-tenant deadline seconds; empty for an open load (no
+    /// deadlines, nothing ever counted blown).
+    deadline_s: Vec<f64>,
+    /// Per-tenant priority class; empty = class 0 for everything.
+    class: Vec<usize>,
+}
+
+/// One replica pipeline mid-flight: the `simulate_tenants` event loop's
+/// state, minus the arrival feed (the fleet loop pushes arrivals in).
+struct Replica {
+    id: usize,
+    queue: SloQueue<()>,
+    config: PipelineConfig,
+    controller: OnlineController,
+    times: Vec<f64>,
+    last_sc: Vec<usize>,
+    sc_buf: Vec<usize>,
+    stage_free: Vec<f64>,
+    completions: Vec<f64>,
+    clock: f64,
+    latencies: Vec<f64>,
+    queued: Vec<f64>,
+    start_times: Vec<f64>,
+    stressed: Vec<bool>,
+    active_eps: Vec<usize>,
+    inst_throughput: Vec<f64>,
+    config_throughput: Vec<f64>,
+    serial: Vec<bool>,
+    rebalances: Vec<RebalanceEvent>,
+    rebalance_time: f64,
+    dropped_at: Vec<usize>,
+    dropped_tenant: Vec<usize>,
+    tenant_of: Vec<usize>,
+    blown: Vec<bool>,
+    routed: usize,
+    peak_throughput: f64,
+}
+
+impl Replica {
+    fn new(id: usize, ctx: &FleetCtx, tenants: Option<&TenantSet>) -> Replica {
+        let clean = vec![0usize; ctx.k];
+        let (config, clean_bottleneck) =
+            optimal_config(ctx.db, &clean, ctx.k);
+        let mut controller = OnlineController::new(
+            ctx.cfg.policy.control(),
+            ctx.cfg.detect_threshold,
+        );
+        let mut times = Vec::with_capacity(ctx.k);
+        stage_times_into(&config, ctx.db, &clean, &mut times);
+        controller.bless(&times);
+        let mut queue =
+            SloQueue::new(ctx.cfg.queue_cap.unwrap_or(usize::MAX));
+        if let Some(ts) = tenants {
+            queue.configure_fairness(ctx.cfg.fairness, ts);
+        }
+        Replica {
+            id,
+            queue,
+            config,
+            controller,
+            times,
+            last_sc: Vec::new(),
+            sc_buf: Vec::new(),
+            stage_free: vec![0.0; ctx.k],
+            completions: Vec::new(),
+            clock: 0.0,
+            latencies: Vec::new(),
+            queued: Vec::new(),
+            start_times: Vec::new(),
+            stressed: Vec::new(),
+            active_eps: Vec::new(),
+            inst_throughput: Vec::new(),
+            config_throughput: Vec::new(),
+            serial: Vec::new(),
+            rebalances: Vec::new(),
+            rebalance_time: 0.0,
+            dropped_at: Vec::new(),
+            dropped_tenant: Vec::new(),
+            tenant_of: Vec::new(),
+            blown: Vec::new(),
+            routed: 0,
+            peak_throughput: 1.0 / clean_bottleneck,
+        }
+    }
+
+    /// Refresh `sc_buf` with this replica's slice of the fleet state at
+    /// (tag, t).
+    fn slice_state(&mut self, ctx: &FleetCtx, tag: usize, t: f64) {
+        let sc = state_at(ctx.schedule, &ctx.clear, ctx.axis, tag, t);
+        self.sc_buf.clear();
+        self.sc_buf
+            .extend_from_slice(&sc[self.id * ctx.k..(self.id + 1) * ctx.k]);
+    }
+
+    fn shed(&mut self, tenant: usize) {
+        self.dropped_at.push(self.latencies.len());
+        self.dropped_tenant.push(tenant);
+    }
+
+    /// Route one arrival into this replica's queue (at its own arrival
+    /// instant — the queue's `now`).
+    fn push_arrival(&mut self, t: f64, tenant: usize, tag: usize, ctx: &FleetCtx) {
+        self.routed += 1;
+        let deadline = ctx.deadline_s.get(tenant).map(|d| t + d);
+        let class = ctx.class.get(tenant).copied().unwrap_or(0);
+        match self.queue.push((), t, deadline, class, tenant, tag, t) {
+            SloPush::Accepted => {}
+            SloPush::AcceptedEvicting(e) => self.shed(e.tenant),
+            SloPush::Shed => self.shed(tenant),
+        }
+    }
+
+    /// Record one completion (shared by the serial and pipelined paths;
+    /// `self.times` must hold the stage times the query ran under and
+    /// `self.sc_buf` the state it sampled).
+    fn record(
+        &mut self,
+        ctx: &FleetCtx,
+        arrival: f64,
+        tenant: usize,
+        start: f64,
+        finish: f64,
+        inst: f64,
+        was_serial: bool,
+    ) {
+        self.start_times.push(start);
+        self.latencies.push(finish - arrival);
+        self.queued.push(start - arrival);
+        self.inst_throughput.push(inst);
+        self.config_throughput.push(1.0 / bottleneck(&self.times));
+        self.serial.push(was_serial);
+        let act = self.sc_buf.iter().filter(|&&s| s != 0).count();
+        self.stressed.push(act != 0);
+        self.active_eps.push(act);
+        self.tenant_of.push(tenant);
+        self.blown.push(
+            ctx.deadline_s
+                .get(tenant)
+                .is_some_and(|d| finish - arrival > *d),
+        );
+    }
+
+    /// Admit and complete every queued entry whose admission instant is
+    /// ≤ `t_stop` — the lazy-advance that lets the fleet loop interleave
+    /// replicas without a global event heap. `f64::INFINITY` drains.
+    fn advance_to(&mut self, t_stop: f64, ctx: &FleetCtx) {
+        loop {
+            if self.queue.is_empty() {
+                return;
+            }
+            let active = self.config.active_stages().max(1);
+            let gate = if self.completions.len() >= active {
+                self.completions[self.completions.len() - active]
+            } else {
+                0.0
+            };
+            let t0 = self.clock.max(gate);
+            if t0 > t_stop {
+                return; // the pipeline cannot admit before the stop
+            }
+            for e in self.queue.shed_blown(t0) {
+                self.shed(e.tenant);
+            }
+            let Some(head) = self.queue.peek() else {
+                continue; // everything due was blown; queue re-checked
+            };
+            let (head_tag, head_arrival) = (head.tag, head.arrival);
+            let t_admit = t0.max(head_arrival);
+            if t_admit > t_stop {
+                return;
+            }
+            self.slice_state(ctx, head_tag, t_admit);
+            if self.sc_buf != self.last_sc {
+                stage_times_into(
+                    &self.config,
+                    ctx.db,
+                    &self.sc_buf,
+                    &mut self.times,
+                );
+                self.last_sc.clone_from(&self.sc_buf);
+            }
+
+            // window-gated controller tick, per replica, on its own
+            // completion axis (exactly the simulate_tenants gating)
+            if self.controller.is_active()
+                && ctx.cfg.window.is_none_or(|w| self.latencies.len() % w == 0)
+            {
+                if let Some(_trigger) = self.controller.observe(&self.times) {
+                    let before = 1.0 / bottleneck(&self.times);
+                    let result: RebalanceResult =
+                        self.controller.rebalance_pressured(
+                            &self.config,
+                            ctx.db,
+                            &self.sc_buf,
+                            self.queue.pressure(t_admit),
+                        );
+                    let serial_queries = result.trials.min(self.queue.len());
+                    for _ in 0..serial_queries {
+                        let Some(e) = self.queue.pop() else { break };
+                        let t_eval = self
+                            .stage_free
+                            .iter()
+                            .copied()
+                            .fold(self.clock, f64::max)
+                            .max(e.arrival);
+                        self.slice_state(ctx, e.tag, t_eval);
+                        stage_times_into(
+                            &self.config,
+                            ctx.db,
+                            &self.sc_buf,
+                            &mut self.times,
+                        );
+                        let serial_latency: f64 = self.times.iter().sum();
+                        let finish = t_eval + serial_latency;
+                        for f in self.stage_free.iter_mut() {
+                            *f = finish;
+                        }
+                        self.clock = finish;
+                        self.completions.push(finish);
+                        self.record(
+                            ctx,
+                            e.arrival,
+                            e.tenant,
+                            t_eval,
+                            finish,
+                            1.0 / serial_latency,
+                            true,
+                        );
+                        self.rebalance_time += serial_latency;
+                    }
+                    self.config = result.config;
+                    self.slice_state(ctx, head_tag, self.clock);
+                    stage_times_into(
+                        &self.config,
+                        ctx.db,
+                        &self.sc_buf,
+                        &mut self.times,
+                    );
+                    self.controller.bless(&self.times);
+                    self.last_sc.clear();
+                    self.rebalances.push(RebalanceEvent {
+                        // completion-axis position; clamped into the
+                        // final window when the run is sealed
+                        query: self.latencies.len(),
+                        trials: result.trials,
+                        throughput_before: before,
+                        throughput_after: result.throughput,
+                    });
+                    continue; // re-feed, re-shed, re-select the head
+                }
+            }
+
+            // pipelined processing of the selected entry
+            let e = self.queue.pop().expect("peeked entry still queued");
+            let admit = t_admit
+                .max(self.stage_free[0] - self.times[0])
+                .max(0.0);
+            let mut ready = admit;
+            for (i, &t) in self.times.iter().enumerate() {
+                if t == 0.0 {
+                    continue;
+                }
+                let start = ready.max(self.stage_free[i]);
+                ready = start + t;
+                self.stage_free[i] = ready;
+            }
+            self.clock = admit;
+            self.completions.push(ready);
+            let inst = 1.0 / bottleneck(&self.times);
+            self.record(ctx, e.arrival, e.tenant, admit, ready, inst, false);
+        }
+    }
+
+    /// Seal the replica's history into an [`MtSimResult`].
+    fn finish(mut self) -> MtSimResult {
+        let total_time = self.completions.last().copied().unwrap_or(0.0);
+        let n = self.latencies.len();
+        for ev in self.rebalances.iter_mut() {
+            ev.query = ev.query.min(n.saturating_sub(1));
+        }
+        let batch = vec![1usize; n];
+        MtSimResult {
+            result: SimResult {
+                latencies: self.latencies,
+                queued: self.queued,
+                start_times: self.start_times,
+                stressed: self.stressed,
+                active_eps: self.active_eps,
+                dropped_at: self.dropped_at,
+                offered: self.routed,
+                inst_throughput: self.inst_throughput,
+                config_throughput: self.config_throughput,
+                serial: self.serial,
+                batch,
+                rebalances: self.rebalances,
+                rebalance_time: self.rebalance_time,
+                total_time,
+                final_config: self.config,
+                peak_throughput: self.peak_throughput,
+            },
+            tenant: self.tenant_of,
+            blown: self.blown,
+            dropped_tenant: self.dropped_tenant,
+        }
+    }
+}
+
+fn validate_fleet(
+    schedule: &Schedule,
+    axis: ScenarioAxis,
+    cfg: &SimConfig,
+    fleet: &FleetConfig,
+    load: &FleetLoad,
+    queries: usize,
+) -> Result<()> {
+    if queries == 0 {
+        bail!("cannot simulate a 0-query fleet run");
+    }
+    if axis == ScenarioAxis::Queries && queries != schedule.num_queries() {
+        bail!(
+            "query-axis schedule covers {} queries, asked to run {queries}",
+            schedule.num_queries()
+        );
+    }
+    if schedule.num_eps != fleet.total_eps() {
+        bail!(
+            "fleet {} needs a schedule over its whole {}-EP pool, got {} \
+             EPs (adapt the scenario with the fleet's total before \
+             compiling)",
+            fleet.spec(),
+            fleet.total_eps(),
+            schedule.num_eps
+        );
+    }
+    if cfg.num_eps != fleet.eps_per_replica {
+        bail!(
+            "sim config is sized for {}-EP pipelines but fleet {} shards \
+             {} EPs per replica",
+            cfg.num_eps,
+            fleet.spec(),
+            fleet.eps_per_replica
+        );
+    }
+    if !cfg.batch.is_off() {
+        bail!(
+            "batching ({}) on the fleet path is not supported (batch \
+             admission composes per replica; route first, then batch)",
+            cfg.batch.spec()
+        );
+    }
+    if fleet.autoscale.is_some() && cfg.queue_cap.is_none() {
+        bail!(
+            "fleet {} autoscaling needs a bounded queue: the outer loop's \
+             occupancy signal is waiting / (replicas × queue cap)",
+            fleet.spec()
+        );
+    }
+    if cfg.fairness.enforced() && matches!(load, FleetLoad::Open(_)) {
+        bail!(
+            "fairness {} needs a tenant set: an open single-stream load \
+             has no tenants to enforce between",
+            cfg.fairness.spec()
+        );
+    }
+    Ok(())
+}
+
+/// Run `queries` merged arrivals through a replica fleet.
+///
+/// `schedule` must span the fleet's whole EP pool
+/// ([`FleetConfig::total_eps`]); `cfg` describes each replica's pipeline
+/// (`cfg.num_eps` must equal the fleet's per-replica EP count; policy,
+/// detection threshold, observation window, queue cap and fairness apply
+/// per replica). `seed` feeds the router's P2C sampler only — JSQ and
+/// sticky routing never consult it.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_fleet(
+    db: &TimingDb,
+    schedule: &Schedule,
+    axis: ScenarioAxis,
+    cfg: &SimConfig,
+    fleet: &FleetConfig,
+    load: &FleetLoad,
+    queries: usize,
+    seed: u64,
+) -> Result<FleetSimResult> {
+    validate_fleet(schedule, axis, cfg, fleet, load, queries)?;
+    let arrivals = load.arrivals(queries)?;
+    let tenants = match load {
+        FleetLoad::Tenants(ts) => Some(ts),
+        FleetLoad::Open(_) => None,
+    };
+    let (deadline_s, class) = match tenants {
+        Some(ts) => (ts.deadlines_s(), ts.classes()),
+        None => (Vec::new(), Vec::new()),
+    };
+    let ctx = FleetCtx {
+        db,
+        schedule,
+        clear: vec![0usize; schedule.num_eps],
+        axis,
+        cfg,
+        k: fleet.eps_per_replica,
+        deadline_s,
+        class,
+    };
+
+    let mut replicas: Vec<Replica> = (0..fleet.replicas)
+        .map(|i| Replica::new(i, &ctx, tenants))
+        .collect();
+    let mut active = fleet.replicas;
+    let mut router = Router::new(fleet.router, seed);
+    let mut scaler = fleet.autoscale.map(Autoscaler::new);
+    let mut scale_events: Vec<ScaleEvent> = Vec::new();
+    // the outer loop ticks on the arrival axis, once per observation
+    // window — deterministic for any jobs/replica interleaving
+    let outer_window = cfg.window.unwrap_or(DEFAULT_WINDOW);
+
+    let mut depths: Vec<usize> = Vec::with_capacity(fleet.max_replicas());
+    let mut pressures: Vec<f64> = Vec::with_capacity(fleet.max_replicas());
+    for (i, a) in arrivals.iter().enumerate() {
+        // bring every replica (draining ones included) up to the arrival
+        // instant, so depths reflect what each queue holds *now*
+        for r in replicas.iter_mut() {
+            r.advance_to(a.t, &ctx);
+        }
+        // slow outer loop: scale from the window's occupancy
+        if let Some(s) = &mut scaler {
+            if i > 0 && i % outer_window == 0 {
+                let cap = cfg.queue_cap.expect("validated: autoscale needs a cap");
+                let waiting: usize =
+                    replicas[..active].iter().map(|r| r.queue.len()).sum();
+                let occupancy = waiting as f64 / (active * cap) as f64;
+                match s.decide(active, occupancy) {
+                    ScaleDecision::Up => {
+                        if active == replicas.len() {
+                            // carve the next disjoint EP group
+                            replicas.push(Replica::new(active, &ctx, tenants));
+                        }
+                        scale_events.push(ScaleEvent {
+                            at_arrival: i,
+                            t: a.t,
+                            from: active,
+                            to: active + 1,
+                        });
+                        active += 1;
+                    }
+                    ScaleDecision::Down => {
+                        // the highest replica leaves the routing set and
+                        // drains; sticky tenants re-assign on next touch
+                        active -= 1;
+                        router.release(active);
+                        scale_events.push(ScaleEvent {
+                            at_arrival: i,
+                            t: a.t,
+                            from: active + 1,
+                            to: active,
+                        });
+                    }
+                    ScaleDecision::Hold => {}
+                }
+            }
+        }
+        depths.clear();
+        pressures.clear();
+        for r in &replicas[..active] {
+            depths.push(r.queue.len());
+            pressures.push(r.queue.pressure(a.t));
+        }
+        let pick = router.route(&depths, &pressures, a.tenant);
+        replicas[pick].push_arrival(a.t, a.tenant, i, &ctx);
+    }
+    // final drain: every replica runs its queue dry
+    for r in replicas.iter_mut() {
+        r.advance_to(f64::INFINITY, &ctx);
+    }
+
+    let peak_throughput =
+        replicas.first().map_or(0.0, |r| r.peak_throughput);
+    let queued_end: usize = replicas.iter().map(|r| r.queue.len()).sum();
+    let routed: Vec<usize> = replicas.iter().map(|r| r.routed).collect();
+    let sealed: Vec<MtSimResult> =
+        replicas.into_iter().map(Replica::finish).collect();
+    let total_time = sealed
+        .iter()
+        .map(|r| r.result.total_time)
+        .fold(0.0f64, f64::max);
+    Ok(FleetSimResult {
+        replicas: sealed,
+        routed,
+        scale_events,
+        offered: queries,
+        total_time,
+        peak_throughput,
+        queued_end,
+    })
+}
+
+/// Per-replica window rows of a fleet run, each stamped with its
+/// `replica` id, concatenated in replica order (the `window` index
+/// restarts per replica; `(replica, window)` is the row key). Tenant
+/// rows attach when `ids` is non-empty, reusing the one shared
+/// implementation.
+pub fn fleet_windows(
+    fr: &FleetSimResult,
+    eps_per_replica: usize,
+    window: usize,
+    level: f64,
+    ids: &[String],
+) -> Vec<WindowMetrics> {
+    let mut out = Vec::new();
+    for (id, mt) in fr.replicas.iter().enumerate() {
+        if mt.result.latencies.is_empty() {
+            continue; // a replica that never served (late activation)
+        }
+        let mut ws =
+            window_metrics_eps(&mt.result, eps_per_replica, window, level);
+        if !ids.is_empty() {
+            attach_tenant_windows(
+                &mut ws,
+                ids,
+                &mt.tenant,
+                &mt.blown,
+                &mt.result.queued,
+                &mt.result.latencies,
+                &mt.result.dropped_at,
+                &mt.dropped_tenant,
+            );
+        }
+        for w in ws.iter_mut() {
+            w.replica = Some(id);
+        }
+        out.extend(ws);
+    }
+    out
+}
+
+/// One cell of a fleet sweep, self-contained so cells fan out over a
+/// thread pool without sharing mutable state.
+#[derive(Clone, Debug)]
+pub struct FleetRun {
+    pub schedule: Schedule,
+    pub axis: ScenarioAxis,
+    pub cfg: SimConfig,
+    pub fleet: FleetConfig,
+    pub load: FleetLoad,
+    pub queries: usize,
+    pub seed: u64,
+}
+
+/// [`simulate_fleet`] fanned over independent runs; results merge in
+/// input order, so downstream JSON is `--jobs`-invariant byte-for-byte.
+pub fn simulate_fleet_runs(
+    db: &TimingDb,
+    runs: &[FleetRun],
+    jobs: usize,
+) -> Result<Vec<FleetSimResult>> {
+    let jobs = jobs.max(1).min(runs.len().max(1));
+    if jobs <= 1 {
+        return runs
+            .iter()
+            .map(|r| {
+                simulate_fleet(
+                    db, &r.schedule, r.axis, &r.cfg, &r.fleet, &r.load,
+                    r.queries, r.seed,
+                )
+            })
+            .collect();
+    }
+    // surface every shape/arrival error before fanning out, so the
+    // pooled runs cannot fail
+    for r in runs {
+        validate_fleet(
+            &r.schedule,
+            r.axis,
+            &r.cfg,
+            &r.fleet,
+            &r.load,
+            r.queries,
+        )?;
+        r.load.arrivals(r.queries)?;
+    }
+    let db = Arc::new(db.clone());
+    let pool = ThreadPool::new(jobs);
+    Ok(pool.map(runs.to_vec(), move |r| {
+        simulate_fleet(
+            &db, &r.schedule, r.axis, &r.cfg, &r.fleet, &r.load, r.queries,
+            r.seed,
+        )
+        .expect("inputs validated before fan-out")
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::database::synth::synthesize;
+    use crate::interference::dynamic::builtin;
+    use crate::models;
+    use crate::simulator::engine::{simulate, Policy};
+
+    fn db() -> TimingDb {
+        synthesize(&models::vgg16(64), 1)
+    }
+
+    /// Clean single-pipeline peak over 4 EPs (the probe every engine
+    /// test uses).
+    fn probe_peak(db: &TimingDb) -> f64 {
+        simulate(
+            db,
+            &Schedule::none(4, 10),
+            &SimConfig::new(4, Policy::Static),
+        )
+        .peak_throughput
+    }
+
+    /// Storm schedule adapted to a fleet's EP pool.
+    fn storm_for(fleet: &FleetConfig, queries: usize) -> Schedule {
+        builtin("storm")
+            .unwrap()
+            .adapted(queries, fleet.total_eps())
+            .unwrap()
+            .compile()
+    }
+
+    fn cfg(queue_cap: usize) -> SimConfig {
+        SimConfig::new(4, Policy::Odin { alpha: 2 })
+            .with_window(DEFAULT_WINDOW)
+            .with_queue_cap(queue_cap)
+    }
+
+    #[test]
+    fn fleet_conserves_arrivals_across_replicas() {
+        let db = db();
+        let fleet = FleetConfig::parse("2x4:jsq").unwrap();
+        let queries = 2000;
+        let schedule = storm_for(&fleet, queries);
+        let rate = 1.5 * probe_peak(&db);
+        let load = FleetLoad::Open(Workload::poisson(rate, 7).unwrap());
+        let r = simulate_fleet(
+            &db,
+            &schedule,
+            ScenarioAxis::Queries,
+            &cfg(64),
+            &fleet,
+            &load,
+            queries,
+            42,
+        )
+        .unwrap();
+        assert_eq!(r.offered, queries);
+        assert_eq!(r.routed.iter().sum::<usize>(), queries);
+        assert_eq!(r.queued_end, 0, "drain left work queued");
+        assert_eq!(r.completed() + r.dropped(), queries);
+        // per replica: routed = completed + dropped
+        for (i, mt) in r.replicas.iter().enumerate() {
+            assert_eq!(
+                mt.result.latencies.len() + mt.result.dropped_at.len(),
+                r.routed[i],
+                "replica {i} leaks arrivals"
+            );
+        }
+        // both replicas actually served under JSQ at 1.5x peak
+        assert!(r.routed.iter().all(|&n| n > 0), "{:?}", r.routed);
+        assert!(r.total_time > 0.0 && r.peak_throughput > 0.0);
+        // per-replica window rows carry the replica column
+        let ws = fleet_windows(&r, 4, DEFAULT_WINDOW, 0.7, &[]);
+        assert!(!ws.is_empty());
+        assert!(ws.iter().all(|w| w.replica.is_some()));
+        let from_rows: usize = ws
+            .iter()
+            .map(|w| (w.end - w.start) )
+            .sum();
+        assert_eq!(from_rows, r.completed());
+    }
+
+    #[test]
+    fn scale_out_beats_one_replica_under_storm_overload() {
+        let db = db();
+        let queries = 2000;
+        let rate = 2.0 * probe_peak(&db);
+        let mut results = Vec::new();
+        for spec in ["1x4:jsq", "2x4:p2c"] {
+            let fleet = FleetConfig::parse(spec).unwrap();
+            let schedule = storm_for(&fleet, queries);
+            let load =
+                FleetLoad::Open(Workload::poisson(rate, 7).unwrap());
+            results.push(
+                simulate_fleet(
+                    &db,
+                    &schedule,
+                    ScenarioAxis::Queries,
+                    &cfg(64),
+                    &fleet,
+                    &load,
+                    queries,
+                    42,
+                )
+                .unwrap(),
+            );
+        }
+        let (one, two) = (&results[0], &results[1]);
+        assert!(
+            two.completed() > one.completed(),
+            "2 replicas completed {} <= 1 replica's {}",
+            two.completed(),
+            one.completed()
+        );
+        assert!(
+            two.achieved_throughput() > one.achieved_throughput(),
+            "scale-out did not raise fleet throughput"
+        );
+    }
+
+    #[test]
+    fn fleet_runs_are_deterministic_and_jobs_invariant() {
+        let db = db();
+        let queries = 1000;
+        let mut runs = Vec::new();
+        for spec in ["2x4:p2c", "2x4:jsq"] {
+            let fleet = FleetConfig::parse(spec).unwrap();
+            let schedule = builtin("burst")
+                .unwrap()
+                .adapted(queries, fleet.total_eps())
+                .unwrap()
+                .compile();
+            runs.push(FleetRun {
+                schedule,
+                axis: ScenarioAxis::Queries,
+                cfg: cfg(64),
+                fleet,
+                load: FleetLoad::Open(
+                    Workload::poisson(1.5 * probe_peak(&db), 3).unwrap(),
+                ),
+                queries,
+                seed: 9,
+            });
+        }
+        let serial = simulate_fleet_runs(&db, &runs, 1).unwrap();
+        let pooled = simulate_fleet_runs(&db, &runs, 2).unwrap();
+        for (a, b) in serial.iter().zip(&pooled) {
+            assert_eq!(a.routed, b.routed);
+            assert_eq!(a.completed(), b.completed());
+            for (ra, rb) in a.replicas.iter().zip(&b.replicas) {
+                assert_eq!(ra.result.latencies, rb.result.latencies);
+                assert_eq!(ra.result.dropped_at, rb.result.dropped_at);
+            }
+        }
+    }
+
+    #[test]
+    fn autoscaler_scales_up_under_load_then_back_down() {
+        let db = db();
+        let fleet = FleetConfig::parse("1x4:jsq:auto1..3").unwrap();
+        let queries = 3000;
+        let peak = probe_peak(&db);
+        // hot phase at 3x one replica's peak, then a long cool phase
+        let load = FleetLoad::Open(
+            Workload::phased(
+                vec![
+                    crate::serving::RatePhase {
+                        queries: 1500,
+                        rate_qps: 3.0 * peak,
+                    },
+                    crate::serving::RatePhase {
+                        queries: 1500,
+                        rate_qps: 0.2 * peak,
+                    },
+                ],
+                5,
+            )
+            .unwrap(),
+        );
+        let schedule = storm_for(&fleet, queries);
+        let r = simulate_fleet(
+            &db,
+            &schedule,
+            ScenarioAxis::Queries,
+            &cfg(32),
+            &fleet,
+            &load,
+            queries,
+            42,
+        )
+        .unwrap();
+        let ups: Vec<_> =
+            r.scale_events.iter().filter(|e| e.to > e.from).collect();
+        let downs: Vec<_> =
+            r.scale_events.iter().filter(|e| e.to < e.from).collect();
+        assert!(!ups.is_empty(), "overload never scaled out: {:?}", r.scale_events);
+        assert!(!downs.is_empty(), "cool phase never scaled in: {:?}", r.scale_events);
+        assert!(
+            ups[0].at_arrival < downs[downs.len() - 1].at_arrival,
+            "scale-down should follow scale-up"
+        );
+        // the fleet grew beyond one replica and work landed there
+        assert!(r.replicas.len() > 1);
+        assert!(r.routed[1] > 0, "second replica never routed to");
+        assert_eq!(r.completed() + r.dropped(), queries);
+    }
+
+    #[test]
+    fn sticky_routing_pins_each_tenant_to_one_replica() {
+        let db = db();
+        let fleet = FleetConfig::parse("2x4:sticky").unwrap();
+        let queries = 1200;
+        let schedule = builtin("burst")
+            .unwrap()
+            .adapted(queries, fleet.total_eps())
+            .unwrap()
+            .compile();
+        let tenants = crate::serving::tenant::resolve("even").unwrap();
+        let load = FleetLoad::Tenants(tenants.clone());
+        let r = simulate_fleet(
+            &db,
+            &schedule,
+            ScenarioAxis::Queries,
+            &cfg(64),
+            &fleet,
+            &load,
+            queries,
+            42,
+        )
+        .unwrap();
+        // no scaling here: each tenant's completions live on one replica
+        for t in 0..tenants.len() {
+            let on: Vec<usize> = r
+                .replicas
+                .iter()
+                .enumerate()
+                .filter(|(_, mt)| mt.tenant.iter().any(|&x| x == t))
+                .map(|(i, _)| i)
+                .collect();
+            assert!(on.len() <= 1, "tenant {t} served on replicas {on:?}");
+        }
+        // tenant window rows attach under the replica column
+        let ws = fleet_windows(&r, 4, DEFAULT_WINDOW, 0.7, &tenants.ids());
+        assert!(ws.iter().all(|w| w.replica.is_some()
+            && w.tenants.len() == tenants.len()));
+    }
+
+    #[test]
+    fn thousands_of_virtual_eps_simulate_and_conserve() {
+        let db = db();
+        // 256 replicas x 4 EPs = 1024 virtual EPs
+        let fleet = FleetConfig::parse("256x4:p2c").unwrap();
+        let queries = 2000;
+        let schedule = storm_for(&fleet, queries);
+        assert_eq!(schedule.num_eps, 1024);
+        let load = FleetLoad::Open(
+            Workload::poisson(64.0 * probe_peak(&db), 11).unwrap(),
+        );
+        let r = simulate_fleet(
+            &db,
+            &schedule,
+            ScenarioAxis::Queries,
+            &cfg(16),
+            &fleet,
+            &load,
+            queries,
+            42,
+        )
+        .unwrap();
+        assert_eq!(r.completed() + r.dropped(), queries);
+        // the load actually spread: many replicas served
+        let serving = r.routed.iter().filter(|&&n| n > 0).count();
+        assert!(serving > 32, "only {serving} of 256 replicas served");
+    }
+
+    #[test]
+    fn fleet_shape_errors_surface_before_running() {
+        let db = db();
+        let fleet = FleetConfig::parse("2x4:jsq").unwrap();
+        let queries = 500;
+        let good = storm_for(&fleet, queries);
+        let open = FleetLoad::Open(Workload::poisson(50.0, 1).unwrap());
+        // schedule not sized for the pool
+        let narrow = builtin("storm")
+            .unwrap()
+            .adapted(queries, 4)
+            .unwrap()
+            .compile();
+        let e = simulate_fleet(
+            &db, &narrow, ScenarioAxis::Queries, &cfg(64), &fleet, &open,
+            queries, 0,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("EP pool"), "{e:#}");
+        // closed workloads cannot be routed
+        let closed = FleetLoad::Open(Workload::closed(4).unwrap());
+        let e = simulate_fleet(
+            &db, &good, ScenarioAxis::Queries, &cfg(64), &fleet, &closed,
+            queries, 0,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("open workload"), "{e:#}");
+        // autoscale without a bounded queue
+        let auto = FleetConfig::parse("2x4:jsq:auto2..3").unwrap();
+        let sched_a = storm_for(&auto, queries);
+        let e = simulate_fleet(
+            &db,
+            &sched_a,
+            ScenarioAxis::Queries,
+            &SimConfig::new(4, Policy::Static),
+            &auto,
+            &open,
+            queries,
+            0,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("bounded queue"), "{e:#}");
+        // per-replica pipeline width must match the sim config
+        let e = simulate_fleet(
+            &db,
+            &good,
+            ScenarioAxis::Queries,
+            &SimConfig::new(8, Policy::Static).with_queue_cap(64),
+            &fleet,
+            &open,
+            queries,
+            0,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("per replica"), "{e:#}");
+    }
+}

@@ -7,6 +7,7 @@
 //! while the schedule perturbs EPs. This module is that system.
 
 pub mod engine;
+pub mod fleet;
 pub mod metrics;
 pub mod slo;
 pub mod window;
@@ -16,10 +17,14 @@ pub use engine::{
     simulate_tenants, simulate_tenants_policies, simulate_workload,
     MtSimResult, Policy, RebalanceEvent, SimConfig, SimResult,
 };
+pub use fleet::{
+    fleet_windows, simulate_fleet, simulate_fleet_runs, FleetLoad, FleetRun,
+    FleetSimResult, ScaleEvent,
+};
 pub use metrics::SimSummary;
 pub use slo::{slo_violations, SloReport};
 pub use window::{
     attach_tenant_windows, dropped_in_window, tenant_rows_json,
-    window_metrics, windows_json, TenantWindow, WindowMetrics,
-    DEFAULT_WINDOW,
+    window_metrics, window_metrics_eps, windows_json, TenantWindow,
+    WindowMetrics, DEFAULT_WINDOW,
 };

@@ -60,6 +60,10 @@ pub struct WindowMetrics {
     /// zeros included). Empty — and absent from the JSON row, keeping
     /// single-tenant artifacts byte-identical — for single-tenant runs.
     pub tenants: Vec<TenantWindow>,
+    /// Replica that produced this window (SCHEMA BUMP: fleet runs only).
+    /// `None` — and absent from the JSON row, keeping every pre-fleet
+    /// artifact byte-identical — outside the fleet path.
+    pub replica: Option<usize>,
 }
 
 /// Per-window accounting of one tenant (SCHEMA BUMP: the `tenants` array
@@ -151,6 +155,20 @@ pub fn window_metrics(
     window: usize,
     level: f64,
 ) -> Vec<WindowMetrics> {
+    window_metrics_eps(r, schedule.num_eps, window, level)
+}
+
+/// [`window_metrics`] over an explicit EP count instead of a
+/// [`Schedule`] — the fleet path chops a *replica's* run against its own
+/// EP-group width, which no fleet-wide schedule object carries. The
+/// schedule-taking wrapper above delegates here, so there is exactly one
+/// implementation of the window fold.
+pub fn window_metrics_eps(
+    r: &SimResult,
+    num_eps: usize,
+    window: usize,
+    level: f64,
+) -> Vec<WindowMetrics> {
     assert!(window >= 1, "window must be >= 1");
     assert!(level > 0.0 && level <= 1.0, "SLO level {level}");
     let n = r.latencies.len();
@@ -191,7 +209,7 @@ pub fn window_metrics(
         // (whose schedule is indexed by time, not query)
         let active: usize = r.active_eps[start..end].iter().sum();
         let interference_load =
-            active as f64 / ((end - start) * schedule.num_eps) as f64;
+            active as f64 / ((end - start) * num_eps) as f64;
         // each query contributes 1/b of its traversal, so the sum counts
         // whole traversals (exact integers when batches do not straddle
         // a window boundary; rounding absorbs the straddle)
@@ -217,6 +235,7 @@ pub fn window_metrics(
             batches,
             mean_batch,
             tenants: Vec::new(),
+            replica: None,
         });
         start = end;
     }
@@ -273,6 +292,9 @@ pub fn windows_json(windows: &[WindowMetrics]) -> Value {
                 ];
                 if !w.tenants.is_empty() {
                     row.push(("tenants", tenant_rows_json(&w.tenants)));
+                }
+                if let Some(r) = w.replica {
+                    row.push(("replica", Value::from(r)));
                 }
                 Value::obj(row)
             })
@@ -438,6 +460,26 @@ mod tests {
         let row = v.idx(0).get("tenants").idx(0);
         assert_eq!(row.keys().len(), 7);
         assert_eq!(row.get("id").as_str(), Some("a"));
+    }
+
+    #[test]
+    fn replica_column_only_appears_when_set() {
+        let (r, schedule) = run(Policy::Lls);
+        let mut ws = window_metrics(&r, &schedule, 500, 0.7);
+        // the default path never sets it: rows keep the 16-key schema
+        assert_eq!(windows_json(&ws).idx(0).keys().len(), 16);
+        for w in ws.iter_mut() {
+            w.replica = Some(3);
+        }
+        let v = windows_json(&ws);
+        for i in 0..ws.len() {
+            assert_eq!(v.idx(i).keys().len(), 17);
+            assert_eq!(v.idx(i).get("replica").as_usize(), Some(3));
+        }
+        // the eps-taking fold is the same fold
+        let alt = window_metrics_eps(&r, schedule.num_eps, 500, 0.7);
+        assert_eq!(alt.len(), ws.len());
+        assert_eq!(alt[0].interference_load, ws[0].interference_load);
     }
 
     #[test]

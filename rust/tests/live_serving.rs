@@ -72,6 +72,7 @@ fn rig(
         confirm_triggers: 1,
         admission_depth: 2,
         queue_cap: 256,
+        ..ServerOpts::default()
     };
     let server =
         PipelineServer::new(ExecHandle::synthetic(backend), config, opts);
@@ -392,6 +393,7 @@ fn auto_threshold_rederives_at_window_boundaries() {
         confirm_triggers: 1,
         admission_depth: 1,
         queue_cap: 256,
+        ..ServerOpts::default()
     };
     let mut server =
         PipelineServer::new(ExecHandle::synthetic(backend), config, opts);

@@ -1,0 +1,169 @@
+//! Property tests for the fleet front-end router (ISSUE 8 satellite),
+//! driven by the crate's own seeded PRNG + property harness like
+//! `prop_tenant_queue.rs` — no external test dependencies.
+//!
+//! Invariants under test:
+//!  * power-of-two-choices never picks the fuller of its two sampled
+//!    replicas (depth first, queue pressure on depth ties, lowest id on
+//!    full ties);
+//!  * JSQ is deterministic — ties always break to the lowest replica id,
+//!    independent of the router's seed;
+//!  * the sticky policy pins each tenant to one replica until that
+//!    replica is released (drained) or scaled away.
+
+use odin::serving::{Router, RouterPolicy};
+use odin::util::proptest::Property;
+use odin::util::Rng;
+
+/// True when replica `a` loses to replica `b` under the router's
+/// ordering: deeper queue first, higher pressure on depth ties, higher
+/// id on full ties.
+fn worse(a: usize, b: usize, depths: &[usize], pressures: &[f64]) -> bool {
+    depths[a] > depths[b]
+        || (depths[a] == depths[b] && pressures[a] > pressures[b])
+        || (depths[a] == depths[b] && pressures[a] == pressures[b] && a > b)
+}
+
+/// The JSQ reference pick: lowest (depth, pressure, id).
+fn ref_jsq(depths: &[usize], pressures: &[f64]) -> usize {
+    let mut best = 0;
+    for i in 1..depths.len() {
+        if worse(best, i, depths, pressures) {
+            best = i;
+        }
+    }
+    best
+}
+
+fn random_state(rng: &mut Rng, n: usize) -> (Vec<usize>, Vec<f64>) {
+    // coarse grids make depth and pressure ties likely, so the
+    // tie-break arms are genuinely exercised
+    let depths: Vec<usize> = (0..n).map(|_| rng.below(4)).collect();
+    let pressures: Vec<f64> =
+        (0..n).map(|_| rng.below(3) as f64 * 0.5).collect();
+    (depths, pressures)
+}
+
+#[test]
+fn prop_p2c_never_picks_the_fuller_sampled_replica() {
+    let p = Property::new(|r: &mut Rng| {
+        let n = r.range(2, 16);
+        let routes = r.range(1, 40);
+        (n, routes, r.next_u64())
+    });
+    p.check(0x92C_0F1, 150, |&(n, routes, seed)| {
+        let mut rng = Rng::new(seed);
+        let mut router = Router::new(RouterPolicy::P2c, seed ^ 0xA5A5);
+        for _ in 0..routes {
+            let (depths, pressures) = random_state(&mut rng, n);
+            let pick = router.route(&depths, &pressures, 0);
+            let (i, j) = match router.last_pair() {
+                Some(pair) => pair,
+                // n >= 2 here, so P2C must always record its sample
+                None => return false,
+            };
+            if i == j || j >= n || pick != i && pick != j {
+                return false;
+            }
+            let other = if pick == i { j } else { i };
+            if worse(pick, other, &depths, &pressures) {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_jsq_ties_break_to_the_lowest_replica_id() {
+    let p = Property::new(|r: &mut Rng| {
+        let n = r.range(1, 16);
+        let routes = r.range(1, 40);
+        (n, routes, r.next_u64())
+    });
+    p.check(0x75_01_D5, 150, |&(n, routes, seed)| {
+        let mut rng = Rng::new(seed);
+        // two routers with unrelated seeds: JSQ must not consult the rng
+        let mut a = Router::new(RouterPolicy::Jsq, seed);
+        let mut b = Router::new(RouterPolicy::Jsq, !seed);
+        for _ in 0..routes {
+            let (depths, pressures) = random_state(&mut rng, n);
+            let want = ref_jsq(&depths, &pressures);
+            if a.route(&depths, &pressures, 0) != want
+                || b.route(&depths, &pressures, 0) != want
+            {
+                return false;
+            }
+            // the reference pick is minimal: no replica beats it
+            if (0..n).any(|r| worse(want, r, &depths, &pressures) && r != want)
+            {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_sticky_pins_each_tenant_until_released_or_scaled_away() {
+    const TENANTS: usize = 4;
+    let p = Property::new(|r: &mut Rng| {
+        let n = r.range(2, 8);
+        let ops = r.range(10, 120);
+        (n, ops, r.next_u64())
+    });
+    p.check(0x571C_4B, 150, |&(n, ops, seed)| {
+        let mut rng = Rng::new(seed);
+        let mut router = Router::new(RouterPolicy::Sticky, seed ^ 0x3C3C);
+        // external mirror of the assignment the router must honor
+        let mut pinned: [Option<usize>; TENANTS] = [None; TENANTS];
+        let mut active = n;
+        for _ in 0..ops {
+            match rng.below(6) {
+                // release a replica: its tenants must re-assign
+                0 => {
+                    let r = rng.below(n);
+                    router.release(r);
+                    for p in pinned.iter_mut() {
+                        if *p == Some(r) {
+                            *p = None;
+                        }
+                    }
+                }
+                // scale the active prefix up or down (pool size n)
+                1 => {
+                    active = 1 + rng.below(n);
+                }
+                // route one arrival of a random tenant
+                _ => {
+                    let tenant = rng.below(TENANTS);
+                    let (depths, pressures) = random_state(&mut rng, active);
+                    let pick = router.route(&depths, &pressures, tenant);
+                    if pick >= active {
+                        return false;
+                    }
+                    match pinned[tenant] {
+                        // a valid pin must be honored verbatim
+                        Some(r) if r < active => {
+                            if pick != r {
+                                return false;
+                            }
+                        }
+                        // no pin (or pin scaled away): the router
+                        // re-assigns by JSQ and the pin moves with it
+                        _ => {
+                            if pick != ref_jsq(&depths, &pressures) {
+                                return false;
+                            }
+                            pinned[tenant] = Some(pick);
+                        }
+                    }
+                    if router.sticky_of(tenant) != Some(pick) {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    });
+}

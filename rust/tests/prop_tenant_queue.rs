@@ -306,6 +306,43 @@ fn prop_drr_caps_conserve_and_bound_occupancy() {
 }
 
 #[test]
+fn prop_caps_never_oversubscribe_the_queue_bound() {
+    // the ISSUE-8 bound: whatever the weights, explicit queue shares,
+    // tenant count or queue cap, the installed per-tenant occupancy caps
+    // must sum to at most the global bound — otherwise caps silently
+    // stop isolating (the historical max(1, ⌊share×cap⌋) floors broke
+    // this with a small cap and many tenants)
+    let p = Property::new(|r: &mut Rng| {
+        let tenants = r.range(1, 16);
+        let cap = r.range(1, 24);
+        (tenants, cap, r.next_u64())
+    });
+    p.check(0x5C_A9_5B, 150, |&(tenants, cap, seed)| {
+        let mut rng = Rng::new(seed);
+        let specs: Vec<TenantSpec> = (0..tenants)
+            .map(|i| TenantSpec {
+                id: format!("t{i}"),
+                workload: Workload::parse("poisson:10qps@1").unwrap(),
+                deadline_ms: 1000.0,
+                priority: 0,
+                weight: 1.0 + rng.below(5) as f64,
+                // a third of tenants pin an explicit share — explicit
+                // shares may legally sum past 1.0 across the set
+                queue_share: rng
+                    .chance(0.33)
+                    .then(|| rng.uniform(0.05, 1.0)),
+            })
+            .collect();
+        let set = TenantSet::new("prop", specs).unwrap();
+        let mut q: SloQueue<usize> = SloQueue::new(cap);
+        q.configure_fairness(Fairness::WfqCaps, &set);
+        let caps = q.tenant_caps().expect("caps installed");
+        caps.iter().sum::<usize>() <= cap
+            && caps.iter().all(|&c| c <= cap)
+    });
+}
+
+#[test]
 fn prop_drr_serves_weight_proportional_shares() {
     // with every tenant continuously backlogged in one class, DRR hands
     // each tenant its weight-proportional share of pops, to within one
