@@ -19,6 +19,8 @@ kinds
   fleet         the `odin experiment fleet` sweep artifact (also the
                 single-cell `odin simulate --fleet` document)
   fleet-live    fleet_live_<scenario>.json from `odin serve --fleet`
+  predictive    the `odin experiment predictive` sweep artifact
+                (forecast-driven control + the degrade ladder)
 
 expectations (key=value args, all optional unless noted)
   name=N             doc["name"] must equal N
@@ -115,7 +117,13 @@ def check_windows(rows, closed=False, tenants=False, replica=False):
         | ({"replica"} if replica else set())
     )
     for row in rows:
-        check_keys(row, want, "window row")
+        # `accuracy` is the PR-9 schema bump: present only on windows of
+        # degrade-ladder runs (same optional-column pattern as `tenants`
+        # and `replica`), so it is accepted everywhere but never required
+        check_keys(row, want | {"accuracy"} if "accuracy" in row else want,
+                   "window row")
+        if "accuracy" in row and not 0.0 < row["accuracy"] <= 1.0:
+            fail(f"window accuracy {row['accuracy']} out of (0, 1]")
         if closed and row["queued_ns"] != 0.0:
             fail("closed loop must not queue")
         if row["queued_ns"] < 0.0 or row["service_ns"] <= 0.0:
@@ -388,6 +396,87 @@ def check_fleet_live(doc, expect):
     check_windows(doc["windows"], replica=True)
 
 
+# One policy cell of predictive.json; the degrade cell alone adds
+# "accuracy_mean" (its windows likewise carry the optional column).
+PRED_CELL_KEYS = {
+    "completed", "dropped", "lat_mean", "offered", "policy", "rebalances",
+    "serial_queries", "slo_violations", "tput_mean", "windows",
+}
+
+# Cell labels, in emission order (two cells share the odin_pred policy,
+# so the document keys cells by these labels).
+PRED_CELL_ORDER = ["odin_a2", "odin_pred", "odin_pred+degrade", "lls"]
+
+
+def check_predictive(doc):
+    check_keys(
+        doc,
+        {"model", "queue_cap", "rate_frac", "scenarios", "slo_level", "window"},
+        "predictive doc",
+    )
+    if not doc["scenarios"]:
+        fail("no scenarios in predictive.json")
+    n = 0
+    for sc in doc["scenarios"]:
+        check_keys(
+            sc,
+            {"cells", "eps", "name", "peak_qps", "queries", "summary"},
+            "predictive scenario",
+        )
+        labels = [c["policy"] for c in sc["cells"]]
+        if labels != PRED_CELL_ORDER:
+            fail(f"{sc['name']} cell order {labels} != {PRED_CELL_ORDER}")
+        for cell in sc["cells"]:
+            what = f"{sc['name']}/{cell['policy']}"
+            degrade = cell["policy"] == "odin_pred+degrade"
+            want = PRED_CELL_KEYS | ({"accuracy_mean"} if degrade else set())
+            check_keys(cell, want, what)
+            # arrivals past the cut-off may still be queued, never minted
+            if cell["completed"] + cell["dropped"] > cell["offered"]:
+                fail(f"{what} mints queries out of thin air")
+            if degrade and not 0.0 < cell["accuracy_mean"] <= 1.0:
+                fail(f"{what} accuracy_mean {cell['accuracy_mean']}")
+            check_windows(cell["windows"])
+            n += 1
+        s = sc["summary"]
+        check_keys(
+            s,
+            {
+                "degrade_accuracy_mean", "degrade_completed",
+                "proactive_beats_reactive", "proactive_slo_violations",
+                "reactive_completed", "reactive_slo_violations",
+            },
+            "predictive summary",
+        )
+        # the tentpole guarantees: under flashcrowd the forecast-driven
+        # policy strictly cuts SLO violations vs the reactive loop, and
+        # the degrade ladder sustains >= reactive completions at bounded
+        # accuracy loss (the ladder only mixes the 1.0/0.85 proxies)
+        if sc["name"] == "flashcrowd" and not (
+            s["proactive_slo_violations"] < s["reactive_slo_violations"]
+        ):
+            fail(
+                f"proactive regression under flashcrowd: "
+                f"{s['proactive_slo_violations']} violating queries !< "
+                f"reactive {s['reactive_slo_violations']}"
+            )
+        if s["proactive_beats_reactive"] != (
+            s["proactive_slo_violations"] < s["reactive_slo_violations"]
+        ):
+            fail(f"{sc['name']} summary flag contradicts its own counts")
+        if s["degrade_completed"] < s["reactive_completed"]:
+            fail(
+                f"{sc['name']} degrade completed {s['degrade_completed']} < "
+                f"reactive {s['reactive_completed']}"
+            )
+        if not 0.8 <= s["degrade_accuracy_mean"] <= 1.0:
+            fail(
+                f"{sc['name']} degrade accuracy "
+                f"{s['degrade_accuracy_mean']} out of [0.8, 1]"
+            )
+    return n
+
+
 def main():
     if len(sys.argv) < 3:
         fail(f"usage: {sys.argv[0]} FILE KIND [key=value ...]")
@@ -414,6 +503,8 @@ def main():
     elif kind == "fleet-live":
         check_fleet_live(doc, expect)
         n = len(doc["replicas"])
+    elif kind == "predictive":
+        n = check_predictive(doc)
     else:
         fail(f"unknown kind {kind!r}")
     print(f"validate_artifact OK: {path} [{kind}] ({n} rows)")

@@ -1,0 +1,46 @@
+//! Bench for the predictive-control subsystem (ISSUE 9): raw forecast
+//! cost (push + bottleneck forecast per observation, the price every
+//! live completion pays when `--proactive` is armed) and the
+//! proactive-vs-reactive simulation cell under the flashcrowd scenario.
+
+use odin::coordinator::{quantize_signature, LatencyPredictor, PRED_HORIZON};
+use odin::database::synth::synthesize;
+use odin::interference::dynamic::builtin;
+use odin::models;
+use odin::simulator::{simulate, Policy, SimConfig};
+use odin::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("predictor");
+
+    // forecast cost: one push + one bottleneck forecast, 8 stages, with
+    // a signature quantization per observation (the live path's shape)
+    let reference = vec![0.01f64; 8];
+    let mut times = vec![0.01f64; 8];
+    let mut pred = LatencyPredictor::new();
+    let mut k = 0u64;
+    b.run("push_forecast_8stage", || {
+        // drift one stage so signatures churn across a few buckets
+        times[3] = 0.01 * (1.0 + (k % 7) as f64 * 0.25);
+        k += 1;
+        let sig = quantize_signature(&times, &reference);
+        pred.push(&sig, &times);
+        black_box(pred.forecast_bottleneck(PRED_HORIZON));
+    });
+
+    // proactive vs reactive: the full simulation cell the predictive
+    // experiment runs per scenario (closed-loop keeps the bench short)
+    let db = synthesize(&models::build("vgg16", 64).unwrap(), 42);
+    let scenario = builtin("flashcrowd").unwrap();
+    let schedule = scenario.compile();
+    for (case, policy) in [
+        ("sim_flashcrowd_reactive", Policy::Odin { alpha: 2 }),
+        ("sim_flashcrowd_proactive", Policy::OdinPred { alpha: 2 }),
+    ] {
+        let cfg = SimConfig::new(scenario.num_eps, policy);
+        b.run(case, || {
+            black_box(simulate(&db, &schedule, &cfg));
+        });
+    }
+    b.finish();
+}

@@ -8,6 +8,8 @@
 //! * [`monitor`] — the stage-time watcher that triggers rebalancing.
 //! * [`online`] — the closed monitor→detect→rebalance loop driving both
 //!   the simulator and the live serving path.
+//! * [`predict`] — the per-stage service-time forecaster + proactive gate
+//!   that rebalances *before* the deadline blows (ROADMAP item 4).
 
 pub mod eval;
 pub mod exhaustive;
@@ -15,6 +17,7 @@ pub mod lls;
 pub mod monitor;
 pub mod odin;
 pub mod online;
+pub mod predict;
 
 pub use eval::{DbEval, PressureEval, StageEval};
 pub use exhaustive::{brute_force_optimal, optimal_config};
@@ -22,6 +25,10 @@ pub use lls::Lls;
 pub use monitor::{Monitor, Trigger};
 pub use odin::{Odin, MAX_TRIALS};
 pub use online::{ControlPolicy, OnlineController};
+pub use predict::{
+    quantize_signature, LatencyPredictor, ProactivePolicy, StageForecast,
+    PRED_HORIZON,
+};
 
 use crate::pipeline::{CostModel, PipelineConfig};
 

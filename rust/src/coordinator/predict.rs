@@ -1,0 +1,338 @@
+//! Per-stage service-time forecasting for proactive control (ROADMAP
+//! item 4, "ML Inference Scheduling with Predictable Latency" in
+//! PAPERS.md).
+//!
+//! The reactive loop in [`super::online`] waits for a blown observation
+//! window before it rebalances, so every interference era costs at least
+//! one window of SLO violations. [`LatencyPredictor`] closes that gap: it
+//! keeps an EWMA-plus-slope forecast of every stage's service time *keyed
+//! on the observed interference signature*, so the first observation of a
+//! returning (or freshly started) era already yields a usable forecast.
+//! [`ProactivePolicy`] turns the forecast into a fire/hold decision the
+//! host consults *between* window boundaries — rebalancing before the
+//! deadline blows instead of after.
+//!
+//! Forecast recurrence, per (signature, stage):
+//!
+//! ```text
+//! mean_0   = x_0                       (first push: exact)
+//! mean_k   = mean_{k-1} + λ·(x_k − mean_{k-1})
+//! slope_k  = (1−μ)·slope_{k-1} + μ·(mean_k − mean_{k-1})
+//! forecast(h) = max(0, mean + slope·h)
+//! ```
+//!
+//! Three properties the `prop_predictor` suite pins: a constant history
+//! forecasts *exactly* itself at every horizon (first-push init makes the
+//! identity exact, not asymptotic); the forecast is monotone in the
+//! history's slope (both recurrences are linear with non-negative
+//! coefficients); and the clamp keeps it finite and non-negative for any
+//! finite input stream.
+
+use std::collections::BTreeMap;
+
+/// EWMA gain for the level term. High enough that a two-window trend is
+/// already visible, low enough to ride out single-window noise.
+pub const PRED_LAMBDA: f64 = 0.4;
+
+/// EWMA gain for the slope term (smoothed mean deltas).
+pub const PRED_MU: f64 = 0.5;
+
+/// Default look-ahead, in observation windows.
+pub const PRED_HORIZON: f64 = 1.0;
+
+/// One stage's forecast state: EWMA level + EWMA slope over the pushes
+/// seen for one interference signature.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageForecast {
+    mean: f64,
+    slope: f64,
+    n: u64,
+}
+
+impl StageForecast {
+    /// Fold one observed service time into the forecast. The first push
+    /// initializes the level exactly (no zero-start bias), so a constant
+    /// history forecasts itself from the very first sample.
+    pub fn push(&mut self, x: f64) {
+        if self.n == 0 {
+            self.mean = x;
+        } else {
+            let prev = self.mean;
+            self.mean = prev + PRED_LAMBDA * (x - prev);
+            self.slope =
+                (1.0 - PRED_MU) * self.slope + PRED_MU * (self.mean - prev);
+        }
+        self.n += 1;
+    }
+
+    /// Predicted service time `horizon` windows ahead, clamped to be
+    /// non-negative. Returns `None` until the first push.
+    pub fn forecast(&self, horizon: f64) -> Option<f64> {
+        if self.n == 0 {
+            return None;
+        }
+        Some((self.mean + self.slope * horizon).max(0.0))
+    }
+
+    /// Samples folded in so far.
+    pub fn samples(&self) -> u64 {
+        self.n
+    }
+
+    /// Current smoothed trend (service-time delta per window).
+    pub fn trend(&self) -> f64 {
+        self.slope
+    }
+}
+
+/// Per-stage service-time forecaster keyed on the interference signature.
+///
+/// The simulator keys on the scenario vector itself; the live path keys
+/// on a quantized relative-change profile ([`quantize_signature`]). Either
+/// way, per-signature state means a *returning* era forecasts from its own
+/// history instead of polluting (or being polluted by) the quiet state.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyPredictor {
+    states: BTreeMap<Vec<usize>, Vec<StageForecast>>,
+    current: Vec<usize>,
+    pushes: u64,
+}
+
+impl LatencyPredictor {
+    pub fn new() -> LatencyPredictor {
+        LatencyPredictor::default()
+    }
+
+    /// Fold one observation of per-stage service times under signature
+    /// `sig`. Also makes `sig` the current signature every subsequent
+    /// [`forecast`](Self::forecast) call reads.
+    pub fn push(&mut self, sig: &[usize], stage_times: &[f64]) {
+        if self.current != sig {
+            self.current.clear();
+            self.current.extend_from_slice(sig);
+        }
+        let stages = self
+            .states
+            .entry(self.current.clone())
+            .or_insert_with(|| vec![StageForecast::default(); stage_times.len()]);
+        if stages.len() != stage_times.len() {
+            // stage count changed (repartition): restart this signature
+            *stages = vec![StageForecast::default(); stage_times.len()];
+        }
+        for (s, &x) in stages.iter_mut().zip(stage_times) {
+            s.push(x);
+        }
+        self.pushes += 1;
+    }
+
+    /// Predicted service time of `stage`, `horizon` windows ahead, under
+    /// the current signature. `None` before any push for this signature.
+    pub fn forecast(&self, stage: usize, horizon: f64) -> Option<f64> {
+        self.states
+            .get(&self.current)?
+            .get(stage)?
+            .forecast(horizon)
+    }
+
+    /// Predicted bottleneck (max stage service time) `horizon` windows
+    /// ahead under the current signature.
+    pub fn forecast_bottleneck(&self, horizon: f64) -> Option<f64> {
+        let stages = self.states.get(&self.current)?;
+        stages
+            .iter()
+            .filter_map(|s| s.forecast(horizon))
+            .fold(None, |m, t| Some(m.map_or(t, |m: f64| m.max(t))))
+    }
+
+    /// The signature the forecasts currently read.
+    pub fn signature(&self) -> &[usize] {
+        &self.current
+    }
+
+    /// Total observations folded in (all signatures).
+    pub fn observations(&self) -> u64 {
+        self.pushes
+    }
+
+    /// Distinct signatures seen so far.
+    pub fn signatures(&self) -> usize {
+        self.states.len()
+    }
+}
+
+/// Quantize a stage-time profile into an interference signature for hosts
+/// that cannot see the scenario vector (the live path): each stage's
+/// ratio to its reference is bucketed in steps of 25% relative change,
+/// saturating at 8 (≥ 3× the reference). Small jitter lands in bucket 4
+/// (ratio ≈ 1), so signatures are stable between genuine shifts.
+pub fn quantize_signature(stage_times: &[f64], reference: &[f64]) -> Vec<usize> {
+    stage_times
+        .iter()
+        .zip(reference)
+        .map(|(&t, &r)| {
+            if r <= 0.0 {
+                return 4;
+            }
+            ((t / r) * 4.0).round().clamp(0.0, 8.0) as usize
+        })
+        .collect()
+}
+
+/// Forecast-driven fire/hold gate for proactive rebalancing.
+///
+/// Fires when the predicted bottleneck `horizon` windows ahead exceeds
+/// `limit` (the bottleneck at which the throughput SLO blows:
+/// `1 / (slo_level × reference_tput)`), at most once per contiguous
+/// same-signature era — the era gate is what keeps the proactive path
+/// from thrashing on a persistent era the rebalancer cannot fully fix.
+#[derive(Clone, Debug)]
+pub struct ProactivePolicy {
+    limit: f64,
+    horizon: f64,
+    last_sig: Vec<usize>,
+    acted_this_era: bool,
+}
+
+impl ProactivePolicy {
+    /// `limit` is the largest acceptable predicted bottleneck in seconds;
+    /// `horizon` the look-ahead in observation windows.
+    pub fn new(limit: f64, horizon: f64) -> ProactivePolicy {
+        ProactivePolicy { limit, horizon, last_sig: Vec::new(), acted_this_era: false }
+    }
+
+    /// Gate from the throughput-SLO side: fire when predicted throughput
+    /// would drop below `level × reference`.
+    pub fn for_slo(reference_tput: f64, level: f64) -> ProactivePolicy {
+        ProactivePolicy::new(1.0 / (level * reference_tput), PRED_HORIZON)
+    }
+
+    /// Consult the predictor: true means the host should rebalance *now*,
+    /// ahead of the violation. Tracks era boundaries internally — call it
+    /// every observation, then [`acted`](Self::acted) after rebalancing.
+    pub fn should_act(&mut self, pred: &LatencyPredictor) -> bool {
+        if self.last_sig != pred.signature() {
+            self.last_sig.clear();
+            self.last_sig.extend_from_slice(pred.signature());
+            self.acted_this_era = false;
+        }
+        if self.acted_this_era {
+            return false;
+        }
+        match pred.forecast_bottleneck(self.horizon) {
+            Some(b) => b > self.limit,
+            None => false,
+        }
+    }
+
+    /// Record that the host rebalanced in the current era; the gate stays
+    /// closed until the signature changes again.
+    pub fn acted(&mut self) {
+        self.acted_this_era = true;
+    }
+
+    /// The bottleneck limit the gate fires against.
+    pub fn limit(&self) -> f64 {
+        self.limit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_history_forecasts_itself_exactly() {
+        let mut f = StageForecast::default();
+        for _ in 0..10 {
+            f.push(0.25);
+        }
+        for h in [0.0, 1.0, 5.0] {
+            assert_eq!(f.forecast(h), Some(0.25));
+        }
+    }
+
+    #[test]
+    fn rising_history_forecasts_above_the_level() {
+        let mut f = StageForecast::default();
+        for k in 0..20 {
+            f.push(1.0 + 0.1 * k as f64);
+        }
+        let now = f.forecast(0.0).unwrap();
+        let ahead = f.forecast(2.0).unwrap();
+        assert!(ahead > now, "slope must look ahead: {ahead} <= {now}");
+        assert!(f.trend() > 0.0);
+    }
+
+    #[test]
+    fn forecast_is_none_before_any_push() {
+        let f = StageForecast::default();
+        assert_eq!(f.forecast(1.0), None);
+        let p = LatencyPredictor::new();
+        assert_eq!(p.forecast(0, 1.0), None);
+        assert_eq!(p.forecast_bottleneck(1.0), None);
+    }
+
+    #[test]
+    fn signatures_keep_separate_state() {
+        let mut p = LatencyPredictor::new();
+        let quiet = vec![0usize, 0];
+        let noisy = vec![9usize, 0];
+        for _ in 0..5 {
+            p.push(&quiet, &[0.1, 0.2]);
+        }
+        p.push(&noisy, &[0.9, 0.2]);
+        // the noisy era's very first push already forecasts the noisy
+        // bottleneck exactly — no bleed from the quiet history
+        assert_eq!(p.forecast_bottleneck(1.0), Some(0.9));
+        p.push(&quiet, &[0.1, 0.2]);
+        assert_eq!(p.forecast_bottleneck(1.0), Some(0.2));
+        assert_eq!(p.signatures(), 2);
+        assert_eq!(p.observations(), 7);
+    }
+
+    #[test]
+    fn stage_count_change_restarts_the_signature() {
+        let mut p = LatencyPredictor::new();
+        let sig = vec![0usize];
+        p.push(&sig, &[0.5, 0.5]);
+        p.push(&sig, &[0.3, 0.3, 0.3]);
+        assert_eq!(p.forecast_bottleneck(0.0), Some(0.3));
+    }
+
+    #[test]
+    fn quantized_signature_is_stable_under_jitter() {
+        let reference = [0.1, 0.2];
+        let a = quantize_signature(&[0.101, 0.199], &reference);
+        let b = quantize_signature(&[0.099, 0.204], &reference);
+        assert_eq!(a, b);
+        let hot = quantize_signature(&[0.35, 0.2], &reference);
+        assert_ne!(a, hot);
+        assert_eq!(hot[1], a[1]);
+    }
+
+    #[test]
+    fn proactive_gate_fires_once_per_era() {
+        let mut p = LatencyPredictor::new();
+        let mut gate = ProactivePolicy::new(0.5, 1.0);
+        let quiet = vec![0usize];
+        let hot = vec![9usize];
+        p.push(&quiet, &[0.1]);
+        assert!(!gate.should_act(&p), "quiet era must not fire");
+        p.push(&hot, &[0.9]);
+        assert!(gate.should_act(&p), "hot era must fire immediately");
+        gate.acted();
+        p.push(&hot, &[0.9]);
+        assert!(!gate.should_act(&p), "era gate must hold after acting");
+        p.push(&quiet, &[0.1]);
+        assert!(!gate.should_act(&p));
+        p.push(&hot, &[0.9]);
+        assert!(gate.should_act(&p), "returning era re-arms the gate");
+    }
+
+    #[test]
+    fn slo_constructor_matches_the_violation_boundary() {
+        // level 0.7 of a 10 qps reference: fire past 1/7 s bottleneck
+        let gate = ProactivePolicy::for_slo(10.0, 0.7);
+        assert!((gate.limit() - 1.0 / 7.0).abs() < 1e-12);
+    }
+}

@@ -24,6 +24,7 @@
 //! | multitenant | per-tenant SLOs under the EDF queue (extension)   |
 //! | batching| deadline-aware batch forming vs offered load (extension)|
 //! | fleet   | replicas x router + autoscaling under overload (extension)|
+//! | predictive | forecast-driven control + degrade ladder (extension) |
 
 mod ablation;
 pub mod batching;
@@ -37,6 +38,7 @@ mod fig9;
 mod grid;
 pub mod multitenant;
 pub mod openloop;
+pub mod predictive;
 mod summary;
 mod table1;
 
@@ -95,10 +97,10 @@ impl Output {
     }
 }
 
-pub const ALL_IDS: [&str; 17] = [
+pub const ALL_IDS: [&str; 18] = [
     "table1", "fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
     "fig9", "fig10", "summary", "ablation", "dynamic", "openloop",
-    "multitenant", "batching", "fleet",
+    "multitenant", "batching", "fleet", "predictive",
 ];
 
 /// Run one experiment (or `all`).
@@ -110,6 +112,7 @@ pub fn run(id: &str, ctx: &ExpCtx) -> Result<()> {
         "multitenant" => multitenant::run(ctx),
         "batching" => batching::run(ctx),
         "fleet" => fleet::run(ctx),
+        "predictive" => predictive::run(ctx),
         "fig1" => fig1::run(ctx),
         "fig3" => fig3::run(ctx),
         "fig4" => fig4::run(ctx),

@@ -50,6 +50,12 @@ pub const MAX_SLOTS: usize = 16_000_000;
 pub const BUILTIN_NAMES: [&str; 5] =
     ["burst", "ramp", "arrivals", "migrate", "storm"];
 
+/// Predictive-control scenario families (ROADMAP item 4), catalogued
+/// separately so the `dynamic` experiment's `BUILTIN_NAMES` sweep — and
+/// its golden `dynamic.json` bytes — stay untouched. [`builtin`] and
+/// [`resolve`] accept both lists.
+pub const EXTENDED_NAMES: [&str; 3] = ["diurnal", "flashcrowd", "correlated"];
+
 /// The unit of a scenario's time axis.
 ///
 /// Historically every phase boundary was a **query index** — which makes
@@ -543,17 +549,21 @@ impl DynamicScenario {
         queries: usize,
         num_eps: usize,
     ) -> Result<DynamicScenario> {
-        let rescale_time = self.axis == ScenarioAxis::Queries;
-        let horizon = if rescale_time { queries } else { self.num_queries };
-        if horizon == self.num_queries && num_eps == self.num_eps {
-            return Ok(self.clone());
-        }
+        // degenerate targets are rejected *before* the identity
+        // early-return: on the ms axis the horizon never tracks
+        // `queries`, so `adapted(0, self.num_eps)` used to slip through
+        // the identity check and hand a zero-query run to the host
         if queries == 0 || num_eps == 0 {
             bail!(
                 "cannot adapt scenario {:?} to {queries} queries / \
                  {num_eps} EPs",
                 self.name
             );
+        }
+        let rescale_time = self.axis == ScenarioAxis::Queries;
+        let horizon = if rescale_time { queries } else { self.num_queries };
+        if horizon == self.num_queries && num_eps == self.num_eps {
+            return Ok(self.clone());
         }
         // round-half-up rational scaling; u128 guards against overflow at
         // the MAX_QUERIES end of the range. A Millis axis scales by 1/1
@@ -881,9 +891,57 @@ pub fn builtin(name: &str) -> Result<DynamicScenario> {
             ],
             Vec::new(),
         ),
+        // -- predictive-control families (EXTENDED_NAMES) ---------------
+        // diurnal: a sine-like swell sampled into ramp steps — EP 1
+        // climbs while EP 2 recedes, then they swap for the second
+        // half-cycle, so the aggregate load oscillates smoothly and the
+        // *trend* (the slope a forecaster can see) is never zero for long
+        "diurnal" => DynamicScenario::new(
+            "diurnal",
+            eps,
+            q,
+            vec![
+                Phase::Ramp { start: 0, end: 1000, ep: 1, levels: vec![7, 8, 9] },
+                Phase::Ramp { start: 1000, end: 2000, ep: 1, levels: vec![9, 8, 7] },
+                Phase::Ramp { start: 0, end: 1000, ep: 2, levels: vec![12, 11, 10] },
+                Phase::Ramp { start: 1000, end: 2000, ep: 2, levels: vec![10, 11, 12] },
+            ],
+            Vec::new(),
+        ),
+        // flashcrowd: a long quiet prelude, then a sudden two-EP spike
+        // landing mid-observation-window (starts offset from the
+        // 100-query window grid) — the scenario a reactive controller is
+        // guaranteed to eat a part-window of violations on
+        "flashcrowd" => DynamicScenario::new(
+            "flashcrowd",
+            eps,
+            q,
+            vec![
+                Phase::Burst { start: 250, period: 600, duration: 120, ep: 1, scenario: 3 },
+                Phase::Task { start: 710, end: 1350, ep: 0, scenario: 9 },
+                Phase::Task { start: 730, end: 1330, ep: 2, scenario: 12 },
+            ],
+            Vec::new(),
+        ),
+        // correlated: synchronized bursts on three EPs at once (tenant
+        // demand spiking in lock-step), same windows, different stressor
+        // intensities — no single-EP fix helps, the whole pipeline must
+        // rebalance at every era edge
+        "correlated" => DynamicScenario::new(
+            "correlated",
+            eps,
+            q,
+            vec![
+                Phase::Burst { start: 150, period: 500, duration: 180, ep: 0, scenario: 6 },
+                Phase::Burst { start: 150, period: 500, duration: 180, ep: 1, scenario: 9 },
+                Phase::Burst { start: 150, period: 500, duration: 180, ep: 3, scenario: 12 },
+            ],
+            Vec::new(),
+        ),
         other => bail!(
-            "unknown scenario {other:?} (builtins: {})",
-            BUILTIN_NAMES.join(", ")
+            "unknown scenario {other:?} (builtins: {}; extended: {})",
+            BUILTIN_NAMES.join(", "),
+            EXTENDED_NAMES.join(", ")
         ),
     }
 }
@@ -892,7 +950,8 @@ pub fn builtin(name: &str) -> Result<DynamicScenario> {
 /// A spec matching both (a file literally named like a builtin) is
 /// ambiguous and rejected — prefix the file with `./` to load it.
 pub fn resolve(spec: &str) -> Result<DynamicScenario> {
-    let is_builtin = BUILTIN_NAMES.contains(&spec);
+    let is_builtin =
+        BUILTIN_NAMES.contains(&spec) || EXTENDED_NAMES.contains(&spec);
     let is_file = std::path::Path::new(spec).is_file();
     match (is_builtin, is_file) {
         (true, true) => Err(err!(
@@ -902,8 +961,9 @@ pub fn resolve(spec: &str) -> Result<DynamicScenario> {
         (true, false) => builtin(spec),
         (false, true) => DynamicScenario::load(spec),
         (false, false) => Err(err!(
-            "unknown scenario {spec:?}: not a builtin ({}) and not a file",
-            BUILTIN_NAMES.join(", ")
+            "unknown scenario {spec:?}: not a builtin ({}, {}) and not a file",
+            BUILTIN_NAMES.join(", "),
+            EXTENDED_NAMES.join(", ")
         )),
     }
 }
@@ -955,8 +1015,38 @@ mod tests {
     fn unknown_builtin_is_error_with_names() {
         let e = builtin("nope").unwrap_err();
         assert!(chain(&e).contains("burst"), "{e:#}");
+        assert!(chain(&e).contains("flashcrowd"), "{e:#}");
         let e = resolve("also-nope").unwrap_err();
         assert!(chain(&e).contains("not a builtin"), "{e:#}");
+    }
+
+    #[test]
+    fn extended_builtins_compile_scale_and_resolve() {
+        // the predictive-control families live outside BUILTIN_NAMES (the
+        // dynamic experiment's golden sweep order must not grow) but get
+        // the same guarantees: they compile, induce interference, change
+        // state, scale to any reasonable horizon, and resolve by name
+        for name in EXTENDED_NAMES {
+            let s = builtin(name).unwrap();
+            assert_eq!(s.name, name);
+            let sched = s.compile();
+            assert!(
+                sched.interference_load() > 0.0,
+                "{name} induces no interference"
+            );
+            assert!(!sched.change_points.is_empty(), "{name}");
+            for q in [50, 123, 2000, 10_000] {
+                let sc = s
+                    .scaled(q)
+                    .unwrap_or_else(|e| panic!("{name} scaled to {q}: {e:#}"));
+                assert!(
+                    sc.compile().interference_load() > 0.0,
+                    "{name}@{q} lost all interference"
+                );
+            }
+            assert_eq!(resolve(name).unwrap().name, name);
+        }
+        assert!(!BUILTIN_NAMES.iter().any(|n| EXTENDED_NAMES.contains(n)));
     }
 
     #[test]

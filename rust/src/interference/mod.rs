@@ -7,7 +7,9 @@ pub mod generator;
 pub mod scenarios;
 pub mod schedule;
 
-pub use dynamic::{DynamicScenario, Phase, TraceEvent, BUILTIN_NAMES};
+pub use dynamic::{
+    DynamicScenario, Phase, TraceEvent, BUILTIN_NAMES, EXTENDED_NAMES,
+};
 pub use generator::{placement_cores, Stressor};
 pub use scenarios::{catalogue, Placement, Scenario, StressKind, NUM_SCENARIOS};
 pub use schedule::{EpScenarios, RandomInterference, Schedule};

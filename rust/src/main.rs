@@ -9,7 +9,7 @@
 //!                via --tenants (per-tenant SLOs, EDF queue), or
 //!                multi-replica via --fleet <spec> (router + autoscaler)
 //!   experiment   regenerate paper tables/figures (table1, fig1..fig10,
-//!                summary, dynamic, openloop, fleet, or `all`)
+//!                summary, dynamic, openloop, fleet, predictive, or `all`)
 //!   bench-db     measure the per-layer timing database on this host
 //!                through the PJRT runtime, under real stressors
 //!   verify       compile artifacts and check gold numerics
@@ -46,9 +46,9 @@ use odin::runtime::{
     SynthBackend, Tensor,
 };
 use odin::serving::{
-    fleet_live_json, live_json, tenant, BatchPolicy, Fairness, FleetConfig,
-    HarnessOpts, PipelineServer, Router, ScenarioDriver, ServeReport,
-    ServerOpts, Workload, BATCH_SLACK_FACTOR,
+    fleet_live_json, harness::LIVE_SLO_LEVEL, live_json, tenant, BatchPolicy,
+    Fairness, FleetConfig, HarnessOpts, LiveDegrade, PipelineServer, Router,
+    ScenarioDriver, ServeReport, ServerOpts, Workload, BATCH_SLACK_FACTOR,
 };
 use odin::simulator::{
     simulate, simulate_fleet_runs, simulate_policies_workload, FleetLoad,
@@ -87,7 +87,8 @@ fn usage() -> String {
                     online loop against a dynamic interference scenario;\n\
                     --fleet <spec> routes over multiple pipeline replicas\n\
        experiment   regenerate paper artifacts: table1 fig1 fig3..fig10\n\
-                    summary dynamic openloop multitenant batching fleet all\n\
+                    summary dynamic openloop multitenant batching fleet\n\
+                    predictive all\n\
        bench-db     measure the per-layer timing database via PJRT\n\
        verify       compile artifacts + gold numerics check\n\
        serve        live pipeline server; --scenario <name|file> replays a\n\
@@ -133,10 +134,13 @@ fn load_sim_db(args: &Args) -> Result<TimingDb> {
 fn parse_policy(args: &Args) -> Result<Policy> {
     Ok(match args.get("policy") {
         "odin" => Policy::Odin { alpha: args.usize("alpha")? },
+        "odin_pred" => Policy::OdinPred { alpha: args.usize("alpha")? },
         "lls" => Policy::Lls,
         "oracle" => Policy::Oracle,
         "static" => Policy::Static,
-        other => bail!("unknown policy {other:?} (odin|lls|oracle|static)"),
+        other => bail!(
+            "unknown policy {other:?} (odin|odin_pred|lls|oracle|static)"
+        ),
     })
 }
 
@@ -145,7 +149,7 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         .flag("model", "vgg16", "vgg16 | resnet50 | resnet152")
         .flag("eps", "4", "number of execution places")
         .flag("queries", "4000", "queries in the window")
-        .flag("policy", "odin", "odin | lls | oracle | static")
+        .flag("policy", "odin", "odin | odin_pred | lls | oracle | static")
         .flag("alpha", "10", "ODIN exploration budget")
         .flag("period", "10", "interference frequency period (queries)")
         .flag("duration", "10", "interference duration (queries)")
@@ -654,7 +658,7 @@ fn cmd_experiment(argv: &[String]) -> Result<()> {
     let cmd = Command::new("experiment", "regenerate paper tables/figures")
         .positional(
             "id",
-            "table1|fig1|fig3..fig10|summary|ablation|dynamic|openloop|multitenant|batching|fleet|all",
+            "table1|fig1|fig3..fig10|summary|ablation|dynamic|openloop|multitenant|batching|fleet|predictive|all",
         )
         .flag("out", "results", "output directory ('' = stdout only)")
         .flag("queries", "4000", "queries per simulation window")
@@ -791,6 +795,18 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .switch(
             "auto-threshold",
             "re-derive the detection threshold from noise in quiet windows",
+        )
+        .switch(
+            "proactive",
+            "forecast-driven control in scenario mode: rebalance when the \
+             predicted bottleneck would blow the SLO, before the monitor \
+             confirms",
+        )
+        .switch(
+            "degrade",
+            "accuracy-degradation ladder in scenario mode (implies \
+             --proactive): fall back to the thin model variant under \
+             sustained predicted overload instead of shedding",
         );
     let args = cmd.parse(argv)?;
     if !args.get("fleet").is_empty() {
@@ -821,6 +837,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         "workload",
         "queue-cap",
         "batch",
+        "proactive",
+        "degrade",
     ] {
         if args.was_given(flag) || args.has(flag) {
             bail!("--{flag} only applies to `serve --scenario <name|file>`");
@@ -919,6 +937,28 @@ fn cmd_serve_scenario(args: &Args) -> Result<()> {
     if cores_per_ep == 0 {
         cores_per_ep = (affinity::num_cpus() / eps).max(1);
     }
+    // --proactive limit: the live SLO target on the bottleneck stage.
+    // Clean peak throughput ≈ eps / query budget (busy-work splits
+    // across stages by FLOPs), and a window violates the SLO when
+    // sustained throughput < level × peak — i.e. when the bottleneck
+    // stage exceeds 1 / (level × peak).
+    let proactive = (args.has("proactive") || args.has("degrade")).then(
+        || args.f64("query-ms").unwrap_or(2.0) / 1e3 / eps as f64
+            / LIVE_SLO_LEVEL,
+    );
+    let degrade = if args.has("degrade") {
+        let name = args.get("model");
+        let thin = models::thin_variant_of(name).ok_or_else(|| {
+            err!("--degrade: model {name} has no thin variant")
+        })?;
+        Some(LiveDegrade {
+            thin_scale: 1.0 / models::THIN_FLOP_DIV as f64,
+            full_accuracy: models::accuracy_proxy(name).unwrap_or(1.0),
+            thin_accuracy: models::accuracy_proxy(thin).unwrap_or(0.85),
+        })
+    } else {
+        None
+    };
     let opts = ServerOpts {
         num_eps: eps,
         cores_per_ep,
@@ -926,6 +966,8 @@ fn cmd_serve_scenario(args: &Args) -> Result<()> {
         detect_threshold: args.f64("threshold")?,
         admission_depth: depth,
         queue_cap: args.usize("queue-cap")?.max(1),
+        proactive,
+        degrade,
         ..ServerOpts::default()
     };
     let mut server = PipelineServer::new(ExecHandle::synthetic(backend), config, opts);
@@ -995,6 +1037,12 @@ fn cmd_serve_tenants(args: &Args) -> Result<()> {
             "--batch cannot be combined with --tenants: the SLO queue \
              interleaves tenants with distinct deadlines, so a batch \
              former has no single deadline to size against"
+        );
+    }
+    if args.has("proactive") || args.has("degrade") {
+        bail!(
+            "--proactive/--degrade are single-pipeline controls: the \
+             multi-tenant queue has no per-tenant forecaster"
         );
     }
     let tenants = tenant::resolve(args.get("tenants"))?;
@@ -1102,6 +1150,12 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
     }
     if args.was_given("batch") {
         bail!("--batch is not supported on the fleet path");
+    }
+    if args.has("proactive") || args.has("degrade") {
+        bail!(
+            "--proactive/--degrade are single-pipeline controls: fleet \
+             replicas run the reactive loop"
+        );
     }
     if args.was_given("eps") {
         bail!("--eps cannot be combined with --fleet: the fleet spec \

@@ -8,8 +8,8 @@
 mod resnet;
 mod vgg;
 
-pub use resnet::{resnet152, resnet50};
-pub use vgg::vgg16;
+pub use resnet::{resnet152, resnet50, resnet_thin};
+pub use vgg::{vgg16, vgg_thin};
 
 /// What a unit computes; drives the synthetic DB's interference
 /// sensitivity model (conv is compute-heavy, dense is memory-heavy, …).
@@ -98,11 +98,59 @@ pub fn build(name: &str, spatial: usize) -> Option<ModelSpec> {
         "vgg16" => Some(vgg16(spatial)),
         "resnet50" => Some(resnet50(spatial)),
         "resnet152" => Some(resnet152(spatial)),
+        "vgg_thin" => Some(vgg_thin(spatial)),
+        "resnet_thin" => Some(resnet_thin(spatial)),
         _ => None,
     }
 }
 
-pub const MODEL_NAMES: [&str; 3] = ["vgg16", "resnet50", "resnet152"];
+pub const MODEL_NAMES: [&str; 5] =
+    ["vgg16", "resnet50", "resnet152", "vgg_thin", "resnet_thin"];
+
+/// FLOP reduction of a thin variant relative to its full model (half the
+/// channel width of every unit: MACs scale with cin×cout, so ÷4).
+pub const THIN_FLOP_DIV: u64 = 4;
+/// Weight/activation volume reduction of a thin variant (÷2: one side of
+/// each tensor keeps its extent — inputs, classes — the other halves).
+pub const THIN_ELEM_DIV: u64 = 2;
+
+/// Derive the thin (half-width) variant of a model spec: identical unit
+/// *structure* — same count, names, kinds, order — so a pipeline
+/// configuration partitioning the full model transfers 1:1 to the thin
+/// one mid-run, with every unit proportionally cheaper.
+pub(crate) fn thin_variant(mut spec: ModelSpec, name: &str) -> ModelSpec {
+    spec.name = name.to_string();
+    for u in &mut spec.units {
+        u.flops = (u.flops / THIN_FLOP_DIV).max(1);
+        u.param_elems = (u.param_elems / THIN_ELEM_DIV).max(1);
+        u.act_elems = (u.act_elems / THIN_ELEM_DIV).max(1);
+    }
+    spec
+}
+
+/// The degrade ladder's quality proxy: fraction of the full model's
+/// accuracy a variant retains (full models are the 1.0 reference; the
+/// half-width variants follow the ~85% retention reported for
+/// width-halved CNNs in "Dynamic Network Adaptation at Inference",
+/// PAPERS.md). `None` for unknown model names.
+pub fn accuracy_proxy(name: &str) -> Option<f64> {
+    match name {
+        "vgg16" | "resnet50" | "resnet152" => Some(1.0),
+        "vgg_thin" | "resnet_thin" => Some(0.85),
+        _ => None,
+    }
+}
+
+/// The cheaper variant the degrade ladder may fall back to, if any.
+/// `resnet152` has no thin counterpart: its 52-unit partition has no
+/// structurally-identical half-width twin in the catalogue.
+pub fn thin_variant_of(name: &str) -> Option<&'static str> {
+    match name {
+        "vgg16" => Some("vgg_thin"),
+        "resnet50" => Some("resnet_thin"),
+        _ => None,
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -123,6 +171,28 @@ mod tests {
             assert!(build(name, 32).is_some());
         }
         assert!(build("alexnet", 32).is_none());
+    }
+
+    #[test]
+    fn degrade_catalogue_is_consistent() {
+        // every model has an accuracy proxy; every thin fallback exists,
+        // keeps the unit count (configs transfer 1:1 mid-run), is
+        // strictly cheaper, and trades away at most 20% accuracy
+        for name in MODEL_NAMES {
+            let proxy = accuracy_proxy(name).unwrap();
+            assert!((0.0..=1.0).contains(&proxy), "{name}: {proxy}");
+            if let Some(thin) = thin_variant_of(name) {
+                let full = build(name, 64).unwrap();
+                let t = build(thin, 64).unwrap();
+                assert_eq!(t.num_units(), full.num_units(), "{name}->{thin}");
+                assert!(t.total_flops() < full.total_flops());
+                assert!(accuracy_proxy(thin).unwrap() >= 0.8);
+                assert!(accuracy_proxy(thin).unwrap() < proxy);
+            }
+        }
+        assert_eq!(thin_variant_of("vgg16"), Some("vgg_thin"));
+        assert_eq!(thin_variant_of("resnet152"), None);
+        assert_eq!(accuracy_proxy("alexnet"), None);
     }
 
     #[test]

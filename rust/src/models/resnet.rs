@@ -70,6 +70,14 @@ pub fn resnet152(spatial: usize) -> ModelSpec {
     build("resnet152", [3, 8, 36, 3], spatial)
 }
 
+/// Half-width ResNet-50: the degrade ladder's cheaper variant — same
+/// 18-unit structure, every unit ~4× fewer FLOPs (see
+/// [`super::thin_variant`]). ResNet-152 gets no thin twin: the ladder
+/// only swaps between structurally identical partitions.
+pub fn resnet_thin(spatial: usize) -> ModelSpec {
+    super::thin_variant(resnet50(spatial), "resnet_thin")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -78,6 +86,19 @@ mod tests {
     fn block_counts() {
         assert_eq!(resnet50(32).units.len(), 1 + 16 + 1);
         assert_eq!(resnet152(32).units.len(), 1 + 50 + 1);
+        assert_eq!(resnet_thin(32).units.len(), 1 + 16 + 1);
+    }
+
+    #[test]
+    fn thin_variant_mirrors_resnet50() {
+        let full = resnet50(64);
+        let thin = resnet_thin(64);
+        assert_eq!(thin.name, "resnet_thin");
+        for (f, t) in full.units.iter().zip(&thin.units) {
+            assert_eq!(f.name, t.name);
+            assert_eq!(t.flops, (f.flops / 4).max(1));
+            assert_eq!(t.param_elems, (f.param_elems / 2).max(1));
+        }
     }
 
     #[test]

@@ -58,9 +58,29 @@ pub fn vgg16_custom(spatial: usize, num_classes: u64, fc_dim: u64) -> ModelSpec 
     ModelSpec { name: "vgg16".to_string(), spatial, units }
 }
 
+/// Half-width VGG16: the degrade ladder's cheaper variant — same 16-unit
+/// structure, every unit ~4× fewer FLOPs (see [`super::thin_variant`]).
+pub fn vgg_thin(spatial: usize) -> ModelSpec {
+    super::thin_variant(vgg16(spatial), "vgg_thin")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn thin_variant_keeps_structure_and_quarters_flops() {
+        let full = vgg16(64);
+        let thin = vgg_thin(64);
+        assert_eq!(thin.name, "vgg_thin");
+        assert_eq!(thin.num_units(), full.num_units());
+        for (f, t) in full.units.iter().zip(&thin.units) {
+            assert_eq!(f.name, t.name);
+            assert_eq!(f.kind, t.kind);
+            assert_eq!(t.flops, (f.flops / 4).max(1));
+        }
+        assert!(thin.total_flops() * 3 < full.total_flops());
+    }
 
     #[test]
     fn pool_units_halve_spatial() {

@@ -69,6 +69,32 @@ impl ExecHandle {
         }
     }
 
+    /// Scale the synthetic backend's busy-work budgets — the degrade
+    /// ladder's variant switch (thin FLOP ratio down, 1.0 back up).
+    /// Errors on the PJRT service path, which compiles one model and
+    /// has no variant to switch to.
+    pub fn set_work_scale(&self, scale: f64) -> Result<()> {
+        match &self.inner {
+            HandleInner::Synth(b) => {
+                b.set_work_scale(scale);
+                Ok(())
+            }
+            HandleInner::Service(_) => Err(err!(
+                "work-scale switching requires the synthetic backend; \
+                 the PJRT service serves one compiled model"
+            )),
+        }
+    }
+
+    /// The synthetic backend's active busy-work multiplier (`None` on
+    /// the PJRT service path).
+    pub fn work_scale(&self) -> Option<f64> {
+        match &self.inner {
+            HandleInner::Synth(b) => Some(b.work_scale()),
+            HandleInner::Service(_) => None,
+        }
+    }
+
     /// Execute a unit range for a `batch`-query batch. Only the
     /// synthetic backend executes batched (scaling its busy-work by the
     /// sublinear cost factor); the PJRT service path has no batched

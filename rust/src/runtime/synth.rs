@@ -13,6 +13,7 @@
 //! Tensors pass through unchanged — the synthetic path models *time*, not
 //! numerics (the PJRT path owns numerics; `odin verify` covers it).
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::OnceLock;
 use std::time::Instant;
 
@@ -65,6 +66,13 @@ pub struct SynthBackend {
     model: String,
     spatial: usize,
     iters: Vec<u64>,
+    /// Busy-work multiplier of the *active model variant* (f64 bits):
+    /// the degrade ladder drops it to the thin variant's FLOP ratio and
+    /// restores it on upgrade, without rebuilding the backend the stage
+    /// workers already share. Exactly 1.0 by default — multiplying every
+    /// budget by 1.0 reproduces the historical iteration counts bit for
+    /// bit.
+    scale: AtomicU64,
 }
 
 impl SynthBackend {
@@ -80,7 +88,27 @@ impl SynthBackend {
                 ((total_iters * u.flops as u128 / total_flops) as u64).max(1)
             })
             .collect();
-        SynthBackend { model: spec.name.clone(), spatial: spec.spatial, iters }
+        SynthBackend {
+            model: spec.name.clone(),
+            spatial: spec.spatial,
+            iters,
+            scale: AtomicU64::new(1.0f64.to_bits()),
+        }
+    }
+
+    /// Scale every unit's busy-work budget (degrade ladder: the thin
+    /// variant's FLOP ratio on the way down, 1.0 on the way back up).
+    pub fn set_work_scale(&self, scale: f64) {
+        assert!(
+            scale.is_finite() && scale > 0.0,
+            "work scale must be positive and finite, got {scale}"
+        );
+        self.scale.store(scale.to_bits(), Ordering::Relaxed);
+    }
+
+    /// The active busy-work multiplier (1.0 = the full model).
+    pub fn work_scale(&self) -> f64 {
+        f64::from_bits(self.scale.load(Ordering::Relaxed))
     }
 
     pub fn model_name(&self) -> &str {
@@ -127,7 +155,8 @@ impl SynthBackend {
                 self.iters.len()
             );
         }
-        let factor = crate::pipeline::batch_factor(batch);
+        let factor =
+            crate::pipeline::batch_factor(batch) * self.work_scale();
         let t0 = Instant::now();
         for &n in &self.iters[start..end] {
             std::hint::black_box(busy((n as f64 * factor) as u64));
@@ -197,6 +226,26 @@ mod tests {
         // query but far less than eight
         assert!(t8 > t1 * 1.5, "t1={t1} t8={t8}");
         assert!(t8 < t1 * 8.0, "t1={t1} t8={t8}");
+    }
+
+    #[test]
+    fn work_scale_defaults_to_identity_and_cuts_busy_time() {
+        let b = backend();
+        assert_eq!(b.work_scale(), 1.0);
+        let x = || Tensor::random(&b.input_shape(), 1, 1.0);
+        let time = |scale: f64| {
+            b.set_work_scale(scale);
+            let mut ts: Vec<f64> = (0..3)
+                .map(|_| b.run_range(0, b.num_units(), x()).unwrap().1)
+                .collect();
+            ts.sort_by(|a, c| a.partial_cmp(c).unwrap());
+            ts[1]
+        };
+        let full = time(1.0);
+        let thin = time(0.25);
+        assert!(thin < full * 0.8, "full={full} thin={thin}");
+        b.set_work_scale(1.0);
+        assert_eq!(b.work_scale(), 1.0);
     }
 
     #[test]

@@ -1,0 +1,203 @@
+//! The accuracy-degradation ladder: graceful degradation by model-variant
+//! fallback (ROADMAP item 4; "Dynamic Network Adaptation at Inference",
+//! PAPERS.md).
+//!
+//! When the forecaster predicts *sustained* overload that rebalancing
+//! cannot fix, shedding is not the only lever: the pipeline can switch to
+//! the thin (half-width) variant of its model — identical unit structure,
+//! ~[`crate::models::THIN_FLOP_DIV`]× cheaper per unit, so the active
+//! [`crate::pipeline::PipelineConfig`] transfers 1:1 mid-run — and keep
+//! completing queries at a reduced accuracy proxy. Once the *full* model's
+//! hypothetical service times clear the SLO limit again (with margin, for
+//! several consecutive observations) the ladder climbs back. Hysteresis on
+//! both edges keeps it from flapping at the boundary.
+//!
+//! The ladder itself is host-agnostic: the simulator ticks it at
+//! controller sampling points with forecasts from the scenario-keyed
+//! predictor; the live server ticks it per completed window with the
+//! quantized-signature predictor. Both hosts apply the returned
+//! [`Switch`] by swapping the timing source (simulator) or scaling the
+//! synthetic busy-work (live backend).
+
+/// Consecutive overloaded observations before degrading: the first
+/// overload observation triggers a proactive *rebalance*; only overload
+/// that survives it reaches the ladder.
+pub const DEGRADE_AFTER: usize = 2;
+
+/// Consecutive clean full-model observations before upgrading back.
+pub const UPGRADE_AFTER: usize = 3;
+
+/// Upgrade headroom: the full model's hypothetical bottleneck must be at
+/// most this fraction of the limit before the ladder climbs back, so a
+/// marginal recovery does not bounce straight back into overload.
+pub const UPGRADE_MARGIN: f64 = 0.9;
+
+/// A ladder decision the host must apply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Switch {
+    /// Switch to the thin variant (degrade accuracy, reclaim throughput).
+    Down,
+    /// Restore the full model.
+    Up,
+}
+
+/// Two-rung accuracy ladder with hysteresis on both edges.
+#[derive(Clone, Debug)]
+pub struct DegradeLadder {
+    limit: f64,
+    down_after: usize,
+    up_after: usize,
+    margin: f64,
+    degraded: bool,
+    over_streak: usize,
+    clean_streak: usize,
+}
+
+impl DegradeLadder {
+    /// `limit` is the largest acceptable bottleneck in seconds — the same
+    /// SLO-derived limit the proactive gate fires against
+    /// ([`crate::coordinator::ProactivePolicy::limit`]).
+    pub fn new(limit: f64) -> DegradeLadder {
+        DegradeLadder {
+            limit,
+            down_after: DEGRADE_AFTER,
+            up_after: UPGRADE_AFTER,
+            margin: UPGRADE_MARGIN,
+            degraded: false,
+            over_streak: 0,
+            clean_streak: 0,
+        }
+    }
+
+    /// Tune the hysteresis (tests; hosts use the defaults).
+    pub fn with_hysteresis(
+        mut self,
+        down_after: usize,
+        up_after: usize,
+        margin: f64,
+    ) -> DegradeLadder {
+        assert!(down_after >= 1 && up_after >= 1, "streaks must be >= 1");
+        assert!(
+            margin > 0.0 && margin <= 1.0,
+            "margin must be in (0, 1], got {margin}"
+        );
+        self.down_after = down_after;
+        self.up_after = up_after;
+        self.margin = margin;
+        self
+    }
+
+    /// Fold one observation. `predicted` is the forecast bottleneck under
+    /// the *active* variant (`None` = no forecast yet, counts as calm);
+    /// `full_hypothetical` is the bottleneck the full model would see
+    /// right now — only consulted while degraded, pass `None` when not
+    /// computed. Returns the switch the host must apply, if any.
+    pub fn tick(
+        &mut self,
+        predicted: Option<f64>,
+        full_hypothetical: Option<f64>,
+    ) -> Option<Switch> {
+        if self.degraded {
+            let full_ok = full_hypothetical
+                .is_some_and(|b| b <= self.limit * self.margin);
+            if full_ok {
+                self.clean_streak += 1;
+                if self.clean_streak >= self.up_after {
+                    self.degraded = false;
+                    self.clean_streak = 0;
+                    self.over_streak = 0;
+                    return Some(Switch::Up);
+                }
+            } else {
+                self.clean_streak = 0;
+            }
+        } else {
+            let over = predicted.is_some_and(|b| b > self.limit);
+            if over {
+                self.over_streak += 1;
+                if self.over_streak >= self.down_after {
+                    self.degraded = true;
+                    self.over_streak = 0;
+                    self.clean_streak = 0;
+                    return Some(Switch::Down);
+                }
+            } else {
+                self.over_streak = 0;
+            }
+        }
+        None
+    }
+
+    /// Whether the thin variant is currently active.
+    pub fn degraded(&self) -> bool {
+        self.degraded
+    }
+
+    /// The bottleneck limit the ladder guards.
+    pub fn limit(&self) -> f64 {
+        self.limit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degrades_only_after_a_sustained_streak() {
+        let mut l = DegradeLadder::new(1.0);
+        assert_eq!(l.tick(Some(2.0), None), None, "first overload holds");
+        assert_eq!(l.tick(Some(2.0), None), Some(Switch::Down));
+        assert!(l.degraded());
+    }
+
+    #[test]
+    fn interrupted_overload_resets_the_streak() {
+        let mut l = DegradeLadder::new(1.0);
+        assert_eq!(l.tick(Some(2.0), None), None);
+        assert_eq!(l.tick(Some(0.5), None), None, "calm resets");
+        assert_eq!(l.tick(Some(2.0), None), None, "streak restarted");
+        assert_eq!(l.tick(Some(2.0), None), Some(Switch::Down));
+    }
+
+    #[test]
+    fn no_forecast_counts_as_calm() {
+        let mut l = DegradeLadder::new(1.0).with_hysteresis(1, 1, 0.9);
+        assert_eq!(l.tick(None, None), None);
+        assert!(!l.degraded());
+    }
+
+    #[test]
+    fn upgrade_needs_margin_and_hysteresis() {
+        let mut l = DegradeLadder::new(1.0).with_hysteresis(1, 3, 0.9);
+        assert_eq!(l.tick(Some(2.0), None), Some(Switch::Down));
+        // 0.95 clears the limit but not the 0.9 margin: stay degraded
+        for _ in 0..10 {
+            assert_eq!(l.tick(Some(0.2), Some(0.95)), None);
+        }
+        // three consecutive clean full-model observations climb back
+        assert_eq!(l.tick(Some(0.2), Some(0.5)), None);
+        assert_eq!(l.tick(Some(0.2), Some(0.5)), None);
+        assert_eq!(l.tick(Some(0.2), Some(0.5)), Some(Switch::Up));
+        assert!(!l.degraded());
+        // a broken clean streak starts over
+        let mut l = DegradeLadder::new(1.0).with_hysteresis(1, 2, 0.9);
+        l.tick(Some(2.0), None);
+        assert_eq!(l.tick(Some(0.2), Some(0.5)), None);
+        assert_eq!(l.tick(Some(0.2), Some(0.95)), None, "streak broken");
+        assert_eq!(l.tick(Some(0.2), Some(0.5)), None);
+        assert_eq!(l.tick(Some(0.2), Some(0.5)), Some(Switch::Up));
+    }
+
+    #[test]
+    fn missing_full_hypothetical_never_upgrades() {
+        let mut l = DegradeLadder::new(1.0);
+        l.tick(Some(2.0), None);
+        l.tick(Some(2.0), None);
+        assert!(l.degraded());
+        for _ in 0..10 {
+            assert_eq!(l.tick(Some(0.1), None), None);
+        }
+        assert!(l.degraded());
+    }
+}

@@ -67,15 +67,29 @@ impl RouterPolicy {
 }
 
 /// Replica load as the router sees it: queue depth first (the strong
-/// signal), then the SLO queue's deadline pressure (breaks depth ties
-/// toward the replica whose queued work has more headroom), then the
-/// replica id (the deterministic last word).
-fn better(a: usize, b: usize, depths: &[usize], pressures: &[f64]) -> usize {
+/// signal), then the hottest single tenant's deadline pressure (two
+/// equally-deep replicas are told apart by the one tenant about to blow
+/// its SLO — the aggregate averages that spike away), then the
+/// aggregate deadline pressure, then the replica id (the deterministic
+/// last word). Callers without per-tenant visibility alias `peaks` to
+/// `pressures`, which collapses the chain to the historical
+/// depth → pressure → id order bit for bit.
+fn better(
+    a: usize,
+    b: usize,
+    depths: &[usize],
+    peaks: &[f64],
+    pressures: &[f64],
+) -> usize {
     match depths[a].cmp(&depths[b]) {
         std::cmp::Ordering::Less => a,
         std::cmp::Ordering::Greater => b,
         std::cmp::Ordering::Equal => {
-            if pressures[b] < pressures[a] {
+            if peaks[b] < peaks[a] {
+                b
+            } else if peaks[a] < peaks[b] {
+                a
+            } else if pressures[b] < pressures[a] {
                 b
             } else {
                 a.min(b) // equal or NaN-free tie: lowest id wins
@@ -84,10 +98,10 @@ fn better(a: usize, b: usize, depths: &[usize], pressures: &[f64]) -> usize {
     }
 }
 
-fn jsq_pick(depths: &[usize], pressures: &[f64]) -> usize {
+fn jsq_pick(depths: &[usize], peaks: &[f64], pressures: &[f64]) -> usize {
     let mut best = 0usize;
     for r in 1..depths.len() {
-        best = better(best, r, depths, pressures);
+        best = better(best, r, depths, peaks, pressures);
     }
     best
 }
@@ -120,21 +134,41 @@ impl Router {
         self.policy
     }
 
-    /// Route one arrival. `depths[r]` / `pressures[r]` describe active
-    /// replica `r`'s queue; the slices cover exactly the active replicas
-    /// (scaled-away replicas are simply absent), and the choice is an
-    /// index into them. Panics on an empty fleet.
+    /// Route one arrival without per-tenant visibility: the historical
+    /// entry point, delegating to
+    /// [`route_tenant_aware`](Self::route_tenant_aware) with the
+    /// per-tenant peaks aliased to the aggregate pressures — the
+    /// tie-break chain then degenerates to the original
+    /// depth → pressure → id order, bit for bit.
     pub fn route(
         &mut self,
         depths: &[usize],
         pressures: &[f64],
         tenant: usize,
     ) -> usize {
+        self.route_tenant_aware(depths, pressures, pressures, tenant)
+    }
+
+    /// Route one arrival. `depths[r]` / `peaks[r]` / `pressures[r]`
+    /// describe active replica `r`'s queue (depth, max single-tenant
+    /// deadline pressure, aggregate deadline pressure — see
+    /// [`SloQueue::max_tenant_pressure`](super::SloQueue::max_tenant_pressure));
+    /// the slices cover exactly the active replicas (scaled-away
+    /// replicas are simply absent), and the choice is an index into
+    /// them. Panics on an empty fleet.
+    pub fn route_tenant_aware(
+        &mut self,
+        depths: &[usize],
+        peaks: &[f64],
+        pressures: &[f64],
+        tenant: usize,
+    ) -> usize {
         assert!(!depths.is_empty(), "routing over an empty fleet");
+        assert_eq!(depths.len(), peaks.len());
         assert_eq!(depths.len(), pressures.len());
         let n = depths.len();
         match self.policy {
-            RouterPolicy::Jsq => jsq_pick(depths, pressures),
+            RouterPolicy::Jsq => jsq_pick(depths, peaks, pressures),
             RouterPolicy::P2c => {
                 if n == 1 {
                     self.last_pair = None;
@@ -144,7 +178,7 @@ impl Router {
                 let j = (i + 1 + self.rng.below(n - 1)) % n;
                 let pair = (i.min(j), i.max(j));
                 self.last_pair = Some(pair);
-                better(pair.0, pair.1, depths, pressures)
+                better(pair.0, pair.1, depths, peaks, pressures)
             }
             RouterPolicy::Sticky => {
                 if let Some(Some(r)) = self.sticky.get(tenant) {
@@ -152,7 +186,7 @@ impl Router {
                         return *r;
                     }
                 }
-                let r = jsq_pick(depths, pressures);
+                let r = jsq_pick(depths, peaks, pressures);
                 if self.sticky.len() <= tenant {
                     self.sticky.resize(tenant + 1, None);
                 }

@@ -929,6 +929,16 @@ fn fold_live_windows(
                 .sum();
             let batches = traversals.round() as usize;
             let mean_batch = (end - start) as f64 / traversals;
+            // mean accuracy proxy of the variants that served the window
+            // — completions carry one only when the degrade ladder is
+            // armed, so reactive runs keep the column (and the JSON key)
+            // absent
+            let acc: Vec<f64> = completions[start..end]
+                .iter()
+                .filter_map(|c| c.accuracy)
+                .collect();
+            let accuracy = (!acc.is_empty())
+                .then(|| acc.iter().sum::<f64>() / acc.len() as f64);
             out.push(WindowMetrics {
                 index: out.len(),
                 start,
@@ -948,6 +958,7 @@ fn fold_live_windows(
                 mean_batch,
                 tenants: Vec::new(),
                 replica: None,
+                accuracy,
             });
             start = end;
         }
@@ -1363,6 +1374,8 @@ mod tests {
                 queue_cap: 256,
                 fairness: crate::serving::Fairness::Reported,
                 ep_offset: 0,
+                proactive: None,
+                degrade: None,
             },
         );
         let inputs =
@@ -1527,6 +1540,8 @@ mod tests {
                 queue_cap: 4,
                 fairness: crate::serving::Fairness::Reported,
                 ep_offset: 0,
+                proactive: None,
+                degrade: None,
             },
         );
         let driver = ScenarioDriver::new(
@@ -1780,6 +1795,8 @@ mod tests {
                     queue_cap: 64,
                     fairness: crate::serving::Fairness::Reported,
                     ep_offset: 0,
+                    proactive: None,
+                    degrade: None,
                 },
             );
             let driver = ScenarioDriver::new(

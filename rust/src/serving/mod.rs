@@ -3,11 +3,13 @@
 //! interference detection, live ODIN rebalancing (probe queries processed
 //! serially, exactly as the paper charges exploration overhead), a
 //! unified [`Workload`] arrival API (closed-loop windows, open-loop
-//! Poisson/trace arrivals) shared with the simulator, and a scenario
-//! harness that replays dynamic interference timelines with real
-//! stressors.
+//! Poisson/trace arrivals) shared with the simulator, an
+//! accuracy-degradation ladder for graceful overload handling, and a
+//! scenario harness that replays dynamic interference timelines with
+//! real stressors.
 
 pub mod batch;
+pub mod degrade;
 pub mod fleet;
 pub mod harness;
 pub mod live_eval;
@@ -17,6 +19,9 @@ pub mod tenant;
 pub mod workload;
 
 pub use batch::{BatchFormer, BatchPolicy, BATCH_SLACK_FACTOR, MAX_BATCH};
+pub use degrade::{
+    DegradeLadder, Switch, DEGRADE_AFTER, UPGRADE_AFTER, UPGRADE_MARGIN,
+};
 pub use fleet::{
     AutoscaleConfig, Autoscaler, FleetConfig, Router, RouterPolicy,
     ScaleDecision, MAX_REPLICAS, MAX_REPLICA_EPS,
@@ -27,8 +32,8 @@ pub use harness::{
 };
 pub use live_eval::LiveEval;
 pub use server::{
-    Admitted, Completion, PipelineServer, RebalanceLog, ServerOpts,
-    TenantPush,
+    Admitted, Completion, LiveDegrade, PipelineServer, RebalanceLog,
+    ServerOpts, TenantPush,
 };
 pub use stats::ServeReport;
 pub use tenant::{

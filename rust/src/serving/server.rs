@@ -18,13 +18,17 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::coordinator::{Monitor, Odin, PressureEval, RebalanceResult};
+use crate::coordinator::{
+    quantize_signature, LatencyPredictor, Monitor, Odin, PressureEval,
+    ProactivePolicy, RebalanceResult, PRED_HORIZON,
+};
 use crate::pipeline::PipelineConfig;
 use crate::runtime::{ExecHandle, Tensor};
 use crate::util::affinity;
 use crate::util::error::Result;
 use crate::{bail, err};
 
+use super::degrade::{DegradeLadder, Switch};
 use super::live_eval::LiveEval;
 use super::tenant::{Fairness, SloPush, SloQueue, TenantSet};
 
@@ -71,6 +75,11 @@ pub struct Completion {
     /// Size of the batch this query rode the pipeline in (1 = the
     /// historical one-query-per-traversal path).
     pub batch: usize,
+    /// Accuracy proxy of the model variant that served this query —
+    /// `Some` only when the degrade ladder is armed
+    /// ([`ServerOpts::degrade`]); `None` everywhere else, so existing
+    /// consumers and artifacts are untouched.
+    pub accuracy: Option<f64>,
 }
 
 /// Outcome of offering one tenant arrival to the SLO-aware queue.
@@ -132,6 +141,33 @@ pub struct ServerOpts {
     /// replicas occupy disjoint core groups; the default 0 is the
     /// historical single-replica pinning, bit for bit.
     pub ep_offset: usize,
+    /// Forecast-driven proactive control: `Some(limit)` arms a
+    /// per-signature [`LatencyPredictor`] fed from completions and
+    /// schedules a rebalance as soon as the one-horizon-ahead bottleneck
+    /// forecast exceeds `limit` (seconds) — before the reactive monitor
+    /// confirms its trigger streak. `None` (the default) leaves the
+    /// reactive path bit for bit unchanged.
+    pub proactive: Option<f64>,
+    /// Accuracy-degradation ladder (requires `proactive`): under
+    /// sustained predicted overload the server scales the synthetic
+    /// backend down to the thin variant's busy-work instead of shedding,
+    /// and upgrades back with hysteresis once the forecast clears.
+    /// `None` (the default) serves the full model unconditionally.
+    pub degrade: Option<LiveDegrade>,
+}
+
+/// Live half of the accuracy-degradation ladder: how much cheaper the
+/// thin variant runs and what accuracy each variant trades for it.
+#[derive(Clone, Copy, Debug)]
+pub struct LiveDegrade {
+    /// Busy-work multiplier of the thin variant (its FLOP ratio —
+    /// `1 / THIN_FLOP_DIV` for the built-in thin models). Must be in
+    /// (0, 1).
+    pub thin_scale: f64,
+    /// Accuracy proxy of the full model (reported per completion).
+    pub full_accuracy: f64,
+    /// Accuracy proxy of the thin variant.
+    pub thin_accuracy: f64,
 }
 
 impl Default for ServerOpts {
@@ -146,6 +182,8 @@ impl Default for ServerOpts {
             queue_cap: 256,
             fairness: Fairness::Reported,
             ep_offset: 0,
+            proactive: None,
+            degrade: None,
         }
     }
 }
@@ -200,6 +238,22 @@ pub struct PipelineServer {
     /// (`service / batch_factor(b)`) — the batch former's serial
     /// service prediction on the wall clock.
     service_ewma: Option<f64>,
+    /// Per-signature service-time forecaster, fed each completion's
+    /// (batch-normalized) stage profile. Armed by `opts.proactive`;
+    /// `None` keeps every reactive code path structurally untouched.
+    predictor: Option<LatencyPredictor>,
+    /// Era-gated trip wire over the forecast (fires at most once per
+    /// contiguous interference signature).
+    gate: Option<ProactivePolicy>,
+    /// Accuracy-degradation ladder (armed by `opts.degrade`).
+    ladder: Option<DegradeLadder>,
+    /// Reference stage profile the signature quantizer compares against:
+    /// the first completion after each bless (startup, rebalance, or
+    /// variant switch). `None` until that completion lands.
+    sig_reference: Option<Vec<f64>>,
+    /// Accuracy proxy of the active model variant (`Some` only while the
+    /// degrade ladder is armed) — stamped onto each [`Completion`].
+    accuracy_now: Option<f64>,
 }
 
 impl PipelineServer {
@@ -238,6 +292,31 @@ impl PipelineServer {
         drop(senders); // workers + injector hold the live clones
         assert!(opts.admission_depth >= 1, "admission_depth must be >= 1");
         assert!(opts.queue_cap >= 1, "queue_cap must be >= 1");
+        if let Some(limit) = opts.proactive {
+            assert!(
+                limit.is_finite() && limit > 0.0,
+                "proactive limit must be positive and finite, got {limit}"
+            );
+        }
+        if let Some(d) = opts.degrade {
+            assert!(
+                opts.proactive.is_some(),
+                "the degrade ladder requires proactive control \
+                 (ServerOpts::proactive)"
+            );
+            assert!(
+                d.thin_scale > 0.0 && d.thin_scale < 1.0,
+                "thin_scale must be in (0, 1), got {}",
+                d.thin_scale
+            );
+        }
+        let predictor = opts.proactive.map(|_| LatencyPredictor::new());
+        let gate =
+            opts.proactive.map(|limit| ProactivePolicy::new(limit, PRED_HORIZON));
+        let ladder = opts
+            .degrade
+            .map(|_| DegradeLadder::new(opts.proactive.unwrap()));
+        let accuracy_now = opts.degrade.map(|d| d.full_accuracy);
         let mut monitor = Monitor::new(opts.detect_threshold);
         monitor.set_baseline(f64::INFINITY); // blessed on first query
         let queue = SloQueue::new(opts.queue_cap);
@@ -261,6 +340,11 @@ impl PipelineServer {
             input_shape: None,
             ready: std::collections::VecDeque::new(),
             service_ewma: None,
+            predictor,
+            gate,
+            ladder,
+            sig_reference: None,
+            accuracy_now,
         }
     }
 
@@ -347,6 +431,24 @@ impl PipelineServer {
     /// Arrivals shed so far because the queue was full.
     pub fn dropped(&self) -> usize {
         self.dropped
+    }
+
+    /// True while the degrade ladder is serving the thin variant (always
+    /// false when [`ServerOpts::degrade`] is unset).
+    pub fn degraded(&self) -> bool {
+        self.ladder.as_ref().is_some_and(|l| l.degraded())
+    }
+
+    /// Accuracy proxy of the active model variant (`None` when the
+    /// degrade ladder is unarmed).
+    pub fn active_accuracy(&self) -> Option<f64> {
+        self.accuracy_now
+    }
+
+    /// Completions the forecaster has absorbed since its last restart
+    /// (0 when proactive control is unarmed).
+    pub fn forecast_observations(&self) -> u64 {
+        self.predictor.as_ref().map_or(0, |p| p.observations())
     }
 
     /// Seconds since the server's epoch — the queue's time axis.
@@ -692,6 +794,72 @@ impl PipelineServer {
             self.pending_triggers = 0;
             self.rebalance_due = true;
         }
+        if let Some(p) = self.predictor.as_mut() {
+            // feed the forecaster the same batch-normalized profile the
+            // monitor judges; the first completion after a bless becomes
+            // the quantizer's reference (≈ the blessed baseline)
+            let normed: Vec<f64> = if batch > 1 {
+                msg.stage_times.iter().map(|t| t / factor).collect()
+            } else {
+                msg.stage_times.clone()
+            };
+            let reference =
+                self.sig_reference.get_or_insert_with(|| normed.clone());
+            let sig = quantize_signature(&normed, reference);
+            p.push(&sig, &normed);
+            if let Some(g) = self.gate.as_mut() {
+                if !self.rebalance_due && g.should_act(p) {
+                    // the forecast blew the limit before the reactive
+                    // streak confirmed: drain and rebalance now
+                    self.pending_triggers = 0;
+                    self.rebalance_due = true;
+                }
+            }
+        }
+        // stamp the variant that actually served this traversal — the
+        // ladder below may switch for *future* queries
+        let served_accuracy = self.accuracy_now;
+        if let (Some(l), Some(d)) = (self.ladder.as_mut(), self.opts.degrade)
+        {
+            let predicted = self
+                .predictor
+                .as_ref()
+                .and_then(|p| p.forecast_bottleneck(PRED_HORIZON));
+            // the thin variant scales every stage's busy-work uniformly,
+            // so the full model's hypothetical bottleneck is the
+            // forecast divided back by the thin scale
+            let full_hypo = if l.degraded() {
+                predicted.map(|b| b / d.thin_scale)
+            } else {
+                None
+            };
+            if let Some(step) = l.tick(predicted, full_hypo) {
+                let (scale, acc) = match step {
+                    Switch::Down => (d.thin_scale, d.thin_accuracy),
+                    Switch::Up => (1.0, d.full_accuracy),
+                };
+                match self.handle.set_work_scale(scale) {
+                    Ok(()) => {
+                        crate::log_info!(
+                            "degrade ladder at query {}: {:?} (scale {scale})",
+                            self.queries_done,
+                            step
+                        );
+                        self.accuracy_now = Some(acc);
+                        // stage times change scale under the new variant:
+                        // re-bless the monitor and restart the forecaster
+                        self.monitor.set_baseline(f64::INFINITY);
+                        self.sig_reference = None;
+                        if let Some(p) = self.predictor.as_mut() {
+                            *p = LatencyPredictor::new();
+                        }
+                    }
+                    Err(e) => {
+                        crate::log_error!("degrade switch failed: {e:#}")
+                    }
+                }
+            }
+        }
         let normed_service = service / factor;
         self.service_ewma = Some(match self.service_ewma {
             Some(prev) => 0.8 * prev + 0.2 * normed_service,
@@ -711,6 +879,7 @@ impl PipelineServer {
                 output: tensor,
                 serial: false,
                 batch,
+                accuracy: served_accuracy,
             });
         }
         Completion {
@@ -723,6 +892,7 @@ impl PipelineServer {
             output: msg.tensor,
             serial: false,
             batch,
+            accuracy: served_accuracy,
         }
     }
 
@@ -803,6 +973,16 @@ impl PipelineServer {
         // stage workers produce (probe threads are not pinned to EP
         // cores, so probe times would bias the reference)
         self.monitor.set_baseline(f64::INFINITY);
+        // the proactive gate stays closed for the rest of this
+        // interference era; the forecaster restarts because its history
+        // measured the configuration we just replaced
+        if let Some(g) = self.gate.as_mut() {
+            g.acted();
+        }
+        if let Some(p) = self.predictor.as_mut() {
+            *p = LatencyPredictor::new();
+        }
+        self.sig_reference = None;
         Ok(self.rebalance_log.last().unwrap())
     }
 }
@@ -857,7 +1037,13 @@ mod tests {
     use crate::models;
     use crate::runtime::SynthBackend;
 
-    fn server(eps: usize, depth: usize, threshold: f64) -> PipelineServer {
+    fn server_with(
+        eps: usize,
+        depth: usize,
+        threshold: f64,
+        proactive: Option<f64>,
+        degrade: Option<LiveDegrade>,
+    ) -> PipelineServer {
         let spec = models::build("vgg16", 8).unwrap();
         let backend = SynthBackend::new(&spec, 0.5);
         let db = synthesize(&spec, 7);
@@ -875,8 +1061,14 @@ mod tests {
                 queue_cap: 4,
                 fairness: Fairness::Reported,
                 ep_offset: 0,
+                proactive,
+                degrade,
             },
         )
+    }
+
+    fn server(eps: usize, depth: usize, threshold: f64) -> PipelineServer {
+        server_with(eps, depth, threshold, None, None)
     }
 
     fn inputs(n: usize) -> Vec<Tensor> {
@@ -1190,5 +1382,63 @@ mod tests {
             assert_eq!(done.len(), 10, "depth {depth}");
             assert!(done.iter().all(|c| c.latency > 0.0));
         }
+    }
+
+    #[test]
+    fn reactive_serving_reports_no_accuracy() {
+        let mut s = server(2, 1, 10.0);
+        let done = s.serve(inputs(3)).unwrap();
+        assert!(done.iter().all(|c| c.accuracy.is_none()));
+        assert!(!s.degraded());
+        assert_eq!(s.active_accuracy(), None);
+        assert_eq!(s.forecast_observations(), 0);
+    }
+
+    #[test]
+    fn proactive_forecast_rebalances_once_per_era() {
+        // reactive threshold 10 = the monitor never trips; a vanishing
+        // proactive limit means the very first forecast blows it
+        let mut s = server_with(2, 1, 10.0, Some(1e-9), None);
+        let done = s.serve(inputs(8)).unwrap();
+        assert_eq!(done.len(), 8);
+        // the gate fires once per signature era (acted() latches until
+        // the signature moves; timing jitter can open a fresh era, so
+        // allow a small handful — but far fewer than one per query)
+        let fired = s.rebalance_log.len();
+        assert!((1..=4).contains(&fired), "proactive fired {fired} times");
+        assert!(s.forecast_observations() >= 1);
+        assert!(done.iter().all(|c| c.accuracy.is_none()));
+    }
+
+    #[test]
+    fn degrade_ladder_switches_the_live_backend_down() {
+        let deg = LiveDegrade {
+            thin_scale: 0.25,
+            full_accuracy: 1.0,
+            thin_accuracy: 0.85,
+        };
+        let mut s = server_with(2, 1, 10.0, Some(1e-9), Some(deg));
+        assert_eq!(s.active_accuracy(), Some(1.0));
+        let done = s.serve(inputs(10)).unwrap();
+        // a 1e-9 limit keeps the forecast permanently over: after the
+        // one proactive rebalance fails to help, the ladder walks down
+        // (and the tiny limit means it never walks back up)
+        assert!(s.degraded(), "sustained overload must degrade");
+        assert_eq!(s.active_accuracy(), Some(0.85));
+        assert_eq!(s.handle.work_scale(), Some(0.25));
+        assert_eq!(done[0].accuracy, Some(1.0), "starts on the full model");
+        assert_eq!(done.last().unwrap().accuracy, Some(0.85));
+        assert!(done.iter().all(|c| c.accuracy.is_some()));
+    }
+
+    #[test]
+    #[should_panic(expected = "requires proactive control")]
+    fn degrade_without_proactive_is_rejected() {
+        let deg = LiveDegrade {
+            thin_scale: 0.25,
+            full_accuracy: 1.0,
+            thin_accuracy: 0.85,
+        };
+        server_with(2, 1, 10.0, None, Some(deg));
     }
 }

@@ -95,6 +95,8 @@ mod tests {
                 stage_times: vec![0.05, 0.05],
                 output: Tensor::zeros(&[1]),
                 serial: false,
+                batch: 1,
+                accuracy: None,
             },
             Completion {
                 id: 1,
@@ -105,6 +107,8 @@ mod tests {
                 stage_times: vec![0.1, 0.2],
                 output: Tensor::zeros(&[1]),
                 serial: true,
+                batch: 1,
+                accuracy: None,
             },
         ];
         let r = ServeReport::of(&comps, 0.5);
@@ -132,6 +136,8 @@ mod tests {
                 stage_times: vec![0.1],
                 output: Tensor::zeros(&[1]),
                 serial: false,
+                batch: 1,
+                accuracy: None,
             })
             .collect();
         let r = ServeReport::of(&comps, 1.0);

@@ -953,6 +953,32 @@ impl<P> SloQueue<P> {
             .sum::<f64>()
             / wsum
     }
+
+    /// The *max per-tenant* slice of [`pressure`](Self::pressure) at
+    /// `now`: the single hottest tenant's urgency sum, under the same
+    /// weight normalization (so the two signals are comparable). The
+    /// fleet router tie-breaks on this before the aggregate — two
+    /// replicas with the same total deadline pressure are told apart by
+    /// the one tenant about to blow its SLO, which the aggregate
+    /// averages away. Zero in exactly the cases `pressure` is zero (no
+    /// enforced fairness, empty queue, undeadlined entries).
+    pub fn max_tenant_pressure(&self, now: f64) -> f64 {
+        let Some(f) = &self.fair else { return 0.0 };
+        let wsum: f64 = f.weights.iter().sum();
+        if wsum <= 0.0 {
+            return 0.0;
+        }
+        let mut per = vec![0.0f64; f.weights.len()];
+        for e in &self.entries {
+            let Some(d) = e.deadline else { continue };
+            let w = f.weights.get(e.tenant).copied().unwrap_or(1.0);
+            if e.tenant >= per.len() {
+                per.resize(e.tenant + 1, 0.0);
+            }
+            per[e.tenant] += w / (1.0 + (d - now).max(0.0));
+        }
+        per.iter().cloned().fold(0.0, f64::max) / wsum
+    }
 }
 
 /// Per-tenant occupancy bounds under [`Fairness::WfqCaps`]. Each tenant

@@ -28,7 +28,8 @@ use std::sync::Arc;
 
 use crate::bail;
 use crate::coordinator::{
-    optimal_config, ControlPolicy, Lls, Odin, OnlineController, RebalanceResult,
+    optimal_config, ControlPolicy, LatencyPredictor, Lls, Odin,
+    OnlineController, ProactivePolicy, RebalanceResult, PRED_HORIZON,
 };
 use crate::database::TimingDb;
 use crate::interference::dynamic::ScenarioAxis;
@@ -37,6 +38,7 @@ use crate::pipeline::{batch_factor, stage_times_into, PipelineConfig};
 use crate::serving::batch::{
     BatchFormer, BatchPolicy, BATCH_SLACK_FACTOR, MAX_BATCH,
 };
+use crate::serving::degrade::{DegradeLadder, Switch};
 use crate::serving::tenant::{Fairness, SloPush, SloQueue, TenantSet};
 use crate::serving::workload::{Workload, MAX_CLOSED_DEPTH};
 use crate::util::error::Result;
@@ -47,6 +49,13 @@ use crate::util::ThreadPool;
 pub enum Policy {
     /// The paper's Algorithm 1 with exploration budget α.
     Odin { alpha: usize },
+    /// [`Policy::Odin`]'s rebalancing brain driven *proactively*: the
+    /// online loop additionally feeds a per-signature
+    /// [`LatencyPredictor`] and rebalances as soon as the forecast
+    /// bottleneck would blow the throughput SLO
+    /// ([`SimConfig::slo_level`] × peak) — before the violation lands,
+    /// instead of waiting for a blown observation window.
+    OdinPred { alpha: usize },
     /// Least-loaded scheduling baseline.
     Lls,
     /// Exhaustive-search oracle applied at every change (zero-cost trials
@@ -60,6 +69,7 @@ impl Policy {
     pub fn label(&self) -> String {
         match self {
             Policy::Odin { alpha } => format!("odin_a{alpha}"),
+            Policy::OdinPred { .. } => "odin_pred".to_string(),
             Policy::Lls => "lls".to_string(),
             Policy::Oracle => "oracle".to_string(),
             Policy::Static => "static".to_string(),
@@ -69,7 +79,9 @@ impl Policy {
     /// The coordinator-side brain implementing this policy.
     pub fn control(self) -> ControlPolicy {
         match self {
-            Policy::Odin { alpha } => ControlPolicy::Odin(Odin::new(alpha)),
+            Policy::Odin { alpha } | Policy::OdinPred { alpha } => {
+                ControlPolicy::Odin(Odin::new(alpha))
+            }
             Policy::Lls => ControlPolicy::Lls(Lls::new()),
             Policy::Oracle => ControlPolicy::Oracle,
             Policy::Static => ControlPolicy::Static,
@@ -101,6 +113,29 @@ pub struct SimConfig {
     /// ([`simulate_tenants`] only). [`Fairness::Reported`] — the default
     /// — is bit-identical to the PR-5 EDF path.
     pub fairness: Fairness,
+    /// Throughput-SLO level the proactive gate guards
+    /// ([`Policy::OdinPred`] only): the predictor fires when the
+    /// forecast throughput would drop below `slo_level × peak`.
+    /// Ignored by reactive policies.
+    pub slo_level: f64,
+    /// Accuracy-degradation ladder ([`Policy::OdinPred`] only): under
+    /// sustained predicted overload the run swaps to the thin-variant
+    /// timing database instead of shedding, and upgrades back with
+    /// hysteresis. `None` — the default — never switches and records no
+    /// accuracy column.
+    pub degrade: Option<DegradeSpec>,
+}
+
+/// The degrade ladder's simulator-side inputs: the thin variant's timing
+/// database (same unit count as the run's primary database, so the
+/// active pipeline configuration transfers 1:1 mid-run) plus the
+/// accuracy proxies recorded per completed query
+/// ([`crate::models::accuracy_proxy`]).
+#[derive(Clone, Debug)]
+pub struct DegradeSpec {
+    pub thin_db: TimingDb,
+    pub full_accuracy: f64,
+    pub thin_accuracy: f64,
 }
 
 impl SimConfig {
@@ -113,6 +148,8 @@ impl SimConfig {
             queue_cap: None,
             batch: BatchPolicy::Off,
             fairness: Fairness::Reported,
+            slo_level: 0.7,
+            degrade: None,
         }
     }
 
@@ -139,6 +176,22 @@ impl SimConfig {
     /// Enforce tenant fairness in the multi-tenant queue (see `fairness`).
     pub fn with_fairness(mut self, fairness: Fairness) -> SimConfig {
         self.fairness = fairness;
+        self
+    }
+
+    /// SLO level the proactive gate guards (see `slo_level`).
+    pub fn with_slo_level(mut self, level: f64) -> SimConfig {
+        assert!(
+            level > 0.0 && level < 1.0,
+            "slo level must be in (0, 1), got {level}"
+        );
+        self.slo_level = level;
+        self
+    }
+
+    /// Arm the accuracy-degradation ladder (see `degrade`).
+    pub fn with_degrade(mut self, spec: DegradeSpec) -> SimConfig {
+        self.degrade = Some(spec);
         self
     }
 }
@@ -193,6 +246,11 @@ pub struct SimResult {
     /// Size of the batch each completed query rode (1 everywhere when
     /// batching is off; serial rebalancing probes are always 1).
     pub batch: Vec<usize>,
+    /// Accuracy proxy of the model variant each query was served by —
+    /// populated only when the degrade ladder is armed
+    /// ([`SimConfig::degrade`]), empty otherwise. Feeds the optional
+    /// `accuracy` window column.
+    pub accuracy: Vec<f64>,
     pub rebalances: Vec<RebalanceEvent>,
     /// Wall-clock spent inside rebalancing phases (seconds).
     pub rebalance_time: f64,
@@ -287,6 +345,7 @@ pub fn simulate_workload(
             cfg.batch.spec()
         );
     }
+    validate_degrade(db, cfg)?;
     let arrivals: Option<Vec<f64>> = if workload.is_open() {
         Some(workload.arrivals(queries)?)
     } else {
@@ -306,6 +365,24 @@ pub fn simulate_workload(
     let mut times = Vec::with_capacity(n);
     stage_times_into(&config, db, &clean, &mut times);
     controller.bless(&times);
+
+    // predictive control (OdinPred only; all None for reactive policies,
+    // which then never touch any of this and stay bit-identical): the
+    // scenario-vector-keyed forecaster, the SLO-derived fire/hold gate,
+    // and — when armed — the degrade ladder guarding the same limit.
+    // `cur_db` is the timing source of the *active* variant.
+    let proactive = matches!(cfg.policy, Policy::OdinPred { .. });
+    let mut pred = proactive.then(LatencyPredictor::new);
+    let mut gate =
+        proactive.then(|| ProactivePolicy::for_slo(peak_throughput, cfg.slo_level));
+    let mut ladder = cfg
+        .degrade
+        .as_ref()
+        .map(|_| DegradeLadder::new(1.0 / (cfg.slo_level * peak_throughput)));
+    let mut cur_db: &TimingDb = db;
+    let mut acc_now = cfg.degrade.as_ref().map(|d| d.full_accuracy);
+    let mut accuracy: Vec<f64> = Vec::new();
+    let mut full_times: Vec<f64> = Vec::new();
 
     // batching: every open-loop arrival gets a uniform deadline of
     // BATCH_SLACK_FACTOR × the clean serial latency of the initial
@@ -384,23 +461,40 @@ pub fn simulate_workload(
         };
         let mut sc = state_at(schedule, &clear, axis, q, t_est);
         if *sc != last_sc {
-            stage_times_into(&config, db, sc, &mut times);
+            stage_times_into(&config, cur_db, sc, &mut times);
             last_sc.clone_from(sc);
         }
+
+        // predictive gate: fold the current observation into the
+        // forecaster and ask whether the forecast bottleneck blows the
+        // SLO-implied limit. Always false for reactive policies (pred
+        // and gate are None), so the tick below is untouched for them.
+        let fire_pro = match (pred.as_mut(), gate.as_mut()) {
+            (Some(p), Some(g)) => {
+                p.push(sc, &times);
+                g.should_act(p)
+            }
+            _ => false,
+        };
 
         // --- online-loop tick: detect, then rebalance ---------------
         // the controller samples stage times once per observation window
         // (cfg.window); between boundaries it runs open-loop. A batch
         // that jumped q over a boundary arms `window_skipped` so the
-        // tick fires at the next opportunity instead of never.
+        // tick fires at the next opportunity instead of never — and a
+        // proactive fire forces a tick *between* boundaries, which is
+        // the whole point of forecasting.
         if controller.is_active()
-            && (cfg.window.is_none_or(|w| q % w == 0) || window_skipped)
+            && (cfg.window.is_none_or(|w| q % w == 0)
+                || window_skipped
+                || fire_pro)
         {
             window_skipped = false;
-            if let Some(_trigger) = controller.observe(&times) {
+            let reactive = controller.observe(&times).is_some();
+            if reactive || fire_pro {
                 let before = 1.0 / bottleneck(&times);
                 let result: RebalanceResult =
-                    controller.rebalance(&config, db, sc);
+                    controller.rebalance(&config, cur_db, sc);
                 // serial processing of `trials` queries (capped by the
                 // remaining query budget)
                 let serial_queries = result.trials.min(queries - q);
@@ -412,7 +506,7 @@ pub fn simulate_workload(
                         .fold(clock, f64::max)
                         .max(arr_s.unwrap_or(0.0));
                     let sc_now = state_at(schedule, &clear, axis, q, t_eval);
-                    stage_times_into(&config, db, sc_now, &mut times);
+                    stage_times_into(&config, cur_db, sc_now, &mut times);
                     let serial_latency: f64 = times.iter().sum();
                     // pipeline drains: serial query runs alone (but never
                     // before it arrives)
@@ -443,6 +537,9 @@ pub fn simulate_workload(
                     config_throughput.push(1.0 / bottleneck(&times));
                     serial.push(true);
                     batch.push(1);
+                    if let Some(a) = acc_now {
+                        accuracy.push(a);
+                    }
                     let act = sc_now.iter().filter(|&&s| s != 0).count();
                     stressed.push(act != 0);
                     active_eps.push(act);
@@ -452,7 +549,7 @@ pub fn simulate_workload(
                 config = result.config;
                 stage_times_into(
                     &config,
-                    db,
+                    cur_db,
                     state_at(schedule, &clear, axis, q.min(queries - 1), clock),
                     &mut times,
                 );
@@ -464,14 +561,51 @@ pub fn simulate_workload(
                     throughput_before: before,
                     throughput_after: result.throughput,
                 });
+                if let Some(g) = gate.as_mut() {
+                    g.acted(); // era gate: one proactive fire per era
+                }
                 if q >= queries {
                     break;
                 }
                 // q advanced through the serial phase: refresh the state
                 // the post-rebalance query actually runs under
                 sc = state_at(schedule, &clear, axis, q, clock);
-                stage_times_into(&config, db, sc, &mut times);
+                stage_times_into(&config, cur_db, sc, &mut times);
                 last_sc.clone_from(sc);
+            }
+
+            // degrade ladder: overload the rebalance above could not fix
+            // (the forecast still blows the limit at the next tick)
+            // switches the run to the thin variant instead of shedding;
+            // the ladder climbs back once the *full* model's
+            // hypothetical bottleneck clears the limit with margin
+            if let (Some(deg), Some(l), Some(p)) =
+                (cfg.degrade.as_ref(), ladder.as_mut(), pred.as_mut())
+            {
+                let predicted = p.forecast_bottleneck(PRED_HORIZON);
+                let full_hypo = l.degraded().then(|| {
+                    stage_times_into(&config, db, sc, &mut full_times);
+                    bottleneck(&full_times)
+                });
+                if let Some(step) = l.tick(predicted, full_hypo) {
+                    match step {
+                        Switch::Down => {
+                            cur_db = &deg.thin_db;
+                            acc_now = Some(deg.thin_accuracy);
+                        }
+                        Switch::Up => {
+                            cur_db = db;
+                            acc_now = Some(deg.full_accuracy);
+                        }
+                    }
+                    // the variant changed under the controller's feet:
+                    // recompute, re-baseline, and restart the forecaster
+                    // (its history measured the other variant)
+                    stage_times_into(&config, cur_db, sc, &mut times);
+                    controller.bless(&times);
+                    last_sc.clear();
+                    *p = LatencyPredictor::new();
+                }
             }
         }
 
@@ -566,6 +700,9 @@ pub fn simulate_workload(
             stressed.push(act != 0);
             active_eps.push(act);
             batch.push(members);
+            if let Some(a) = acc_now {
+                accuracy.push(a);
+            }
         }
         if let Some(w) = cfg.window {
             // q jumped past loop heads q0+1..q: if one was a window
@@ -589,12 +726,37 @@ pub fn simulate_workload(
         config_throughput,
         serial,
         batch,
+        accuracy,
         rebalances,
         rebalance_time,
         total_time,
         final_config: config,
         peak_throughput,
     })
+}
+
+/// Shared validation of [`SimConfig::degrade`]: the ladder only makes
+/// sense under the predictive policy (nothing else consults the
+/// forecaster), and the thin database must cover the same units so the
+/// active configuration transfers 1:1 at a switch.
+fn validate_degrade(db: &TimingDb, cfg: &SimConfig) -> Result<()> {
+    let Some(deg) = &cfg.degrade else { return Ok(()) };
+    if !matches!(cfg.policy, Policy::OdinPred { .. }) {
+        bail!(
+            "the degrade ladder requires the predictive policy \
+             (odin_pred), got {}",
+            cfg.policy.label()
+        );
+    }
+    if deg.thin_db.num_units() != db.num_units() {
+        bail!(
+            "degrade thin database covers {} units, the primary covers \
+             {} — pipeline configurations cannot transfer between them",
+            deg.thin_db.num_units(),
+            db.num_units()
+        );
+    }
+    Ok(())
 }
 
 /// Run many independent simulation windows against one database, fanning
@@ -681,6 +843,9 @@ pub fn simulate_policies_workload(
             );
         }
     }
+    for c in cfgs {
+        validate_degrade(db, c)?;
+    }
     let db = Arc::new(db.clone());
     let schedule = Arc::new(schedule.clone());
     let workload = workload.clone();
@@ -745,6 +910,13 @@ pub fn simulate_tenants(
             "batching ({}) on the multi-tenant path is not supported: the \
              SLO queue interleaves tenants with distinct deadlines",
             cfg.batch.spec()
+        );
+    }
+    if matches!(cfg.policy, Policy::OdinPred { .. }) || cfg.degrade.is_some()
+    {
+        bail!(
+            "the predictive policy / degrade ladder is single-pipeline \
+             only: the multi-tenant queue has no per-tenant forecaster"
         );
     }
     let arrivals = tenants.arrivals(queries)?;
@@ -1005,6 +1177,7 @@ pub fn simulate_tenants(
             config_throughput,
             serial,
             batch,
+            accuracy: Vec::new(),
             rebalances,
             rebalance_time,
             total_time,
@@ -1053,6 +1226,14 @@ pub fn simulate_tenants_policies(
             "batching ({}) on the multi-tenant path is not supported: the \
              SLO queue interleaves tenants with distinct deadlines",
             c.batch.spec()
+        );
+    }
+    if cfgs.iter().any(|c| {
+        matches!(c.policy, Policy::OdinPred { .. }) || c.degrade.is_some()
+    }) {
+        bail!(
+            "the predictive policy / degrade ladder is single-pipeline \
+             only: the multi-tenant queue has no per-tenant forecaster"
         );
     }
     let db = Arc::new(db.clone());
@@ -1899,6 +2080,179 @@ mod tests {
             &ts,
             500,
             2,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("multi-tenant"), "{e:#}");
+    }
+
+    #[test]
+    fn predictive_policy_fires_ahead_of_the_reactive_window() {
+        // one era starting at q=150, observation window 100: the reactive
+        // loop cannot see it before the q=200 boundary, the predictive
+        // loop fires on the era's first observed query
+        let db = db();
+        let schedule = Schedule::from_events(4, 1000, &[(150, 2, 9, 600)]);
+        let n = 4;
+        let (cfg0, clean_b) = optimal_config(&db, &vec![0usize; n], n);
+        let mut hot_times = Vec::new();
+        let mut sc = vec![0usize; n];
+        sc[2] = 9;
+        stage_times_into(&cfg0, &db, &sc, &mut hot_times);
+        let hot_b = bottleneck(&hot_times);
+        assert!(hot_b > clean_b, "scenario 9 must slow the bottleneck");
+        // place the SLO limit strictly between the clean and the stressed
+        // bottleneck, so the gate must fire on the era and only the era
+        let level = (clean_b / hot_b).sqrt();
+        let reactive = simulate(
+            &db,
+            &schedule,
+            &SimConfig::new(4, Policy::Odin { alpha: 5 }).with_window(100),
+        );
+        let pred = simulate(
+            &db,
+            &schedule,
+            &SimConfig::new(4, Policy::OdinPred { alpha: 5 })
+                .with_window(100)
+                .with_slo_level(level),
+        );
+        let first = |r: &SimResult| r.rebalances.first().unwrap().query;
+        assert!(!reactive.rebalances.is_empty());
+        assert!(!pred.rebalances.is_empty());
+        assert!(
+            first(&pred) < first(&reactive),
+            "proactive first rebalance at q={} not ahead of reactive q={}",
+            first(&pred),
+            first(&reactive)
+        );
+        assert!(pred.accuracy.is_empty(), "no degrade, no accuracy column");
+    }
+
+    #[test]
+    fn predictive_matches_reactive_on_a_quiet_schedule() {
+        // no interference: the forecast never crosses the limit, so the
+        // predictive run must be bit-identical to the reactive one
+        let db = db();
+        let schedule = Schedule::none(4, 500);
+        let od = simulate(
+            &db,
+            &schedule,
+            &SimConfig::new(4, Policy::Odin { alpha: 5 }).with_window(50),
+        );
+        let pr = simulate(
+            &db,
+            &schedule,
+            &SimConfig::new(4, Policy::OdinPred { alpha: 5 }).with_window(50),
+        );
+        assert_eq!(od.latencies, pr.latencies);
+        assert_eq!(od.inst_throughput, pr.inst_throughput);
+        assert_eq!(od.total_time, pr.total_time);
+        assert!(pr.rebalances.is_empty());
+        assert!(pr.accuracy.is_empty());
+    }
+
+    #[test]
+    fn degrade_ladder_switches_down_and_back_and_records_accuracy() {
+        // stress every EP with the heaviest scenario for the middle of
+        // the run: rebalancing cannot dodge it, so the ladder must drop
+        // to the thin variant, then climb back once the era ends
+        let db = db();
+        let thin_db = synthesize(&models::vgg_thin(64), 1);
+        let total = |s: usize| {
+            (0..db.num_units()).map(|u| db.time(u, s)).sum::<f64>()
+        };
+        let s_worst = (1..=db.num_scenarios())
+            .max_by(|&a, &b| total(a).partial_cmp(&total(b)).unwrap())
+            .unwrap();
+        let n = 4;
+        let (_, clean_b) = optimal_config(&db, &vec![0usize; n], n);
+        let (_, hot_b) = optimal_config(&db, &vec![s_worst; n], n);
+        assert!(
+            hot_b > 1.3 * clean_b,
+            "all-EP stress must overwhelm rebalancing: {hot_b} vs {clean_b}"
+        );
+        // limit between what rebalancing can achieve under stress and the
+        // clean bottleneck (with upgrade-margin headroom)
+        let level = (0.5 * (1.0 + clean_b / hot_b)).min(0.8);
+        let events: Vec<(usize, usize, usize, usize)> =
+            (0..n).map(|ep| (200, ep, s_worst, 1200)).collect();
+        let schedule = Schedule::from_events(4, 2000, &events);
+        let r = simulate(
+            &db,
+            &schedule,
+            &SimConfig::new(4, Policy::OdinPred { alpha: 5 })
+                .with_window(50)
+                .with_slo_level(level)
+                .with_degrade(DegradeSpec {
+                    thin_db,
+                    full_accuracy: 1.0,
+                    thin_accuracy: 0.85,
+                }),
+        );
+        assert_eq!(r.accuracy.len(), r.latencies.len());
+        assert_eq!(r.accuracy[0], 1.0, "run starts on the full model");
+        assert!(
+            r.accuracy.iter().any(|&a| a == 0.85),
+            "sustained overload never degraded"
+        );
+        assert_eq!(
+            r.accuracy.last(),
+            Some(&1.0),
+            "quiet tail must upgrade back to the full model"
+        );
+        assert!(!r.rebalances.is_empty());
+        // mean accuracy stays above the ladder's floor
+        let mean = r.accuracy.iter().sum::<f64>() / r.accuracy.len() as f64;
+        assert!(mean >= 0.8, "mean accuracy {mean}");
+    }
+
+    #[test]
+    fn degrade_and_predictive_misuse_is_rejected() {
+        let db = db();
+        let schedule = sched(50, 50, 500);
+        let w = crate::serving::Workload::parse("closed:4").unwrap();
+        let spec = DegradeSpec {
+            thin_db: synthesize(&models::vgg_thin(64), 1),
+            full_accuracy: 1.0,
+            thin_accuracy: 0.85,
+        };
+        // degrade without the predictive policy
+        let cfg = SimConfig::new(4, Policy::Odin { alpha: 2 })
+            .with_degrade(spec.clone());
+        let e = simulate_workload(
+            &db,
+            &schedule,
+            ScenarioAxis::Queries,
+            &cfg,
+            &w,
+            500,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("odin_pred"), "{e:#}");
+        // thin database over a different unit set
+        let cfg = SimConfig::new(4, Policy::OdinPred { alpha: 2 })
+            .with_degrade(DegradeSpec {
+                thin_db: synthesize(&models::resnet50(64), 1),
+                ..spec
+            });
+        let e = simulate_workload(
+            &db,
+            &schedule,
+            ScenarioAxis::Queries,
+            &cfg,
+            &w,
+            500,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("cannot transfer"), "{e:#}");
+        // predictive control on the multi-tenant path
+        let ts = two_tenants(50.0, 500.0, 30.0);
+        let e = simulate_tenants(
+            &db,
+            &schedule,
+            ScenarioAxis::Queries,
+            &SimConfig::new(4, Policy::OdinPred { alpha: 2 }),
+            &ts,
+            500,
         )
         .unwrap_err();
         assert!(format!("{e:#}").contains("multi-tenant"), "{e:#}");

@@ -30,7 +30,8 @@ use crate::util::error::Result;
 use crate::util::ThreadPool;
 
 use super::engine::{
-    bottleneck, state_at, MtSimResult, RebalanceEvent, SimConfig, SimResult,
+    bottleneck, state_at, MtSimResult, Policy, RebalanceEvent, SimConfig,
+    SimResult,
 };
 use super::window::{
     attach_tenant_windows, window_metrics_eps, WindowMetrics, DEFAULT_WINDOW,
@@ -447,6 +448,7 @@ impl Replica {
                 config_throughput: self.config_throughput,
                 serial: self.serial,
                 batch,
+                accuracy: Vec::new(),
                 rebalances: self.rebalances,
                 rebalance_time: self.rebalance_time,
                 total_time,
@@ -501,6 +503,13 @@ fn validate_fleet(
             "batching ({}) on the fleet path is not supported (batch \
              admission composes per replica; route first, then batch)",
             cfg.batch.spec()
+        );
+    }
+    if matches!(cfg.policy, Policy::OdinPred { .. }) || cfg.degrade.is_some()
+    {
+        bail!(
+            "the predictive policy / degrade ladder is single-pipeline \
+             only: fleet replicas run the reactive loop"
         );
     }
     if fleet.autoscale.is_some() && cfg.queue_cap.is_none() {
@@ -572,6 +581,7 @@ pub fn simulate_fleet(
     let outer_window = cfg.window.unwrap_or(DEFAULT_WINDOW);
 
     let mut depths: Vec<usize> = Vec::with_capacity(fleet.max_replicas());
+    let mut peaks: Vec<f64> = Vec::with_capacity(fleet.max_replicas());
     let mut pressures: Vec<f64> = Vec::with_capacity(fleet.max_replicas());
     for (i, a) in arrivals.iter().enumerate() {
         // bring every replica (draining ones included) up to the arrival
@@ -617,12 +627,15 @@ pub fn simulate_fleet(
             }
         }
         depths.clear();
+        peaks.clear();
         pressures.clear();
         for r in &replicas[..active] {
             depths.push(r.queue.len());
+            peaks.push(r.queue.max_tenant_pressure(a.t));
             pressures.push(r.queue.pressure(a.t));
         }
-        let pick = router.route(&depths, &pressures, a.tenant);
+        let pick =
+            router.route_tenant_aware(&depths, &peaks, &pressures, a.tenant);
         replicas[pick].push_arrival(a.t, a.tenant, i, &ctx);
     }
     // final drain: every replica runs its queue dry

@@ -15,7 +15,7 @@ pub mod window;
 pub use engine::{
     simulate, simulate_many, simulate_policies, simulate_policies_workload,
     simulate_tenants, simulate_tenants_policies, simulate_workload,
-    MtSimResult, Policy, RebalanceEvent, SimConfig, SimResult,
+    DegradeSpec, MtSimResult, Policy, RebalanceEvent, SimConfig, SimResult,
 };
 pub use fleet::{
     fleet_windows, simulate_fleet, simulate_fleet_runs, FleetLoad, FleetRun,

@@ -64,6 +64,11 @@ pub struct WindowMetrics {
     /// `None` — and absent from the JSON row, keeping every pre-fleet
     /// artifact byte-identical — outside the fleet path.
     pub replica: Option<usize>,
+    /// Mean accuracy proxy of the window's queries (SCHEMA BUMP: degrade
+    /// runs only — 1.0 while the full model serves, the variant's proxy
+    /// while degraded). `None` — and absent from the JSON row, keeping
+    /// every pre-degrade artifact byte-identical — outside degrade runs.
+    pub accuracy: Option<f64>,
 }
 
 /// Per-window accounting of one tenant (SCHEMA BUMP: the `tenants` array
@@ -217,6 +222,16 @@ pub fn window_metrics_eps(
             r.batch[start..end].iter().map(|&b| 1.0 / b as f64).sum();
         let batches = traversals.round() as usize;
         let mean_batch = (end - start) as f64 / traversals;
+        // the accuracy ledger exists only on degrade runs; everywhere
+        // else the column stays None and the JSON key absent
+        let accuracy = if r.accuracy.is_empty() {
+            None
+        } else {
+            Some(
+                r.accuracy[start..end].iter().sum::<f64>()
+                    / (end - start) as f64,
+            )
+        };
         out.push(WindowMetrics {
             index: out.len(),
             start,
@@ -236,6 +251,7 @@ pub fn window_metrics_eps(
             mean_batch,
             tenants: Vec::new(),
             replica: None,
+            accuracy,
         });
         start = end;
     }
@@ -295,6 +311,9 @@ pub fn windows_json(windows: &[WindowMetrics]) -> Value {
                 }
                 if let Some(r) = w.replica {
                     row.push(("replica", Value::from(r)));
+                }
+                if let Some(a) = w.accuracy {
+                    row.push(("accuracy", Value::from(a)));
                 }
                 Value::obj(row)
             })
@@ -480,6 +499,24 @@ mod tests {
         let alt = window_metrics_eps(&r, schedule.num_eps, 500, 0.7);
         assert_eq!(alt.len(), ws.len());
         assert_eq!(alt[0].interference_load, ws[0].interference_load);
+    }
+
+    #[test]
+    fn accuracy_column_only_appears_when_set() {
+        let (r, schedule) = run(Policy::Lls);
+        let mut ws = window_metrics(&r, &schedule, 500, 0.7);
+        // non-degrade runs keep the 16-key schema — bit-compat with every
+        // pre-degrade artifact
+        assert!(ws.iter().all(|w| w.accuracy.is_none()));
+        assert_eq!(windows_json(&ws).idx(0).keys().len(), 16);
+        for w in ws.iter_mut() {
+            w.accuracy = Some(0.85);
+        }
+        let v = windows_json(&ws);
+        for i in 0..ws.len() {
+            assert_eq!(v.idx(i).keys().len(), 17);
+            assert_eq!(v.idx(i).get("accuracy").as_f64(), Some(0.85));
+        }
     }
 
     #[test]

@@ -1,0 +1,96 @@
+//! Property tests for the per-stage latency forecaster (ISSUE 9
+//! satellite), driven by the crate's own seeded xoshiro PRNG + property
+//! harness like `prop_batch_former.rs` — no external test dependencies.
+//!
+//! Invariants under test:
+//!  * identity — a constant service-time history forecasts *exactly*
+//!    itself at every horizon (the first push initializes the level, so
+//!    the identity is exact, not asymptotic);
+//!  * monotonicity — between two histories sharing a start point, the
+//!    steeper one never forecasts below the shallower at the same
+//!    horizon (both recurrences are linear with non-negative gains);
+//!  * sanity — the forecast is never NaN, never negative, and never
+//!    infinite under arbitrary finite random window streams, across
+//!    arbitrary signature interleavings.
+
+use odin::coordinator::{LatencyPredictor, StageForecast};
+use odin::util::proptest::Property;
+use odin::util::Rng;
+
+#[test]
+fn prop_constant_history_is_a_fixed_point_at_every_horizon() {
+    let p = Property::new(|r: &mut Rng| {
+        let level = r.uniform(1e-9, 5.0);
+        let pushes = r.range(1, 60);
+        let horizon = r.uniform(0.0, 16.0);
+        (level, pushes, horizon)
+    });
+    p.check(0x9D1C_01, 300, |&(level, pushes, horizon)| {
+        let mut f = StageForecast::default();
+        for _ in 0..pushes {
+            f.push(level);
+        }
+        // exact: the slope never leaves 0 and the level never moves
+        f.forecast(horizon) == Some(level) && f.trend() == 0.0
+    });
+}
+
+#[test]
+fn prop_forecast_is_monotone_in_the_observed_slope() {
+    let p = Property::new(|r: &mut Rng| {
+        let start = r.uniform(0.0, 2.0);
+        let slope = r.uniform(0.0, 0.5);
+        let steeper = slope + r.uniform(0.0, 0.5);
+        let pushes = r.range(2, 40);
+        let horizon = r.uniform(0.0, 8.0);
+        (start, slope, steeper, pushes, horizon)
+    });
+    p.check(0x9D1C_02, 300, |&(start, slope, steeper, pushes, horizon)| {
+        let ramp = |m: f64| {
+            let mut f = StageForecast::default();
+            for k in 0..pushes {
+                f.push(start + m * k as f64);
+            }
+            f.forecast(horizon).unwrap()
+        };
+        // both recurrences are linear in the inputs with non-negative
+        // coefficients, so a pointwise-steeper ramp forecasts >= at
+        // every horizon (ties when the increments coincide)
+        ramp(steeper) >= ramp(slope) - 1e-12
+    });
+}
+
+#[test]
+fn prop_forecast_is_finite_and_non_negative_on_random_streams() {
+    let p = Property::new(|r: &mut Rng| {
+        let pushes = r.range(1, 80);
+        let stages = r.range(1, 6);
+        let horizon = r.uniform(0.0, 10.0);
+        (pushes, stages, horizon, r.next_u64())
+    });
+    p.check(0x9D1C_03, 300, |&(pushes, stages, horizon, seed)| {
+        let mut rng = Rng::new(seed);
+        let mut pred = LatencyPredictor::new();
+        for _ in 0..pushes {
+            // arbitrary finite observations (including sharp drops to 0)
+            // under an arbitrary signature interleaving
+            let sig: Vec<usize> = (0..stages).map(|_| rng.below(3)).collect();
+            let times: Vec<f64> =
+                (0..stages).map(|_| rng.uniform(0.0, 4.0)).collect();
+            pred.push(&sig, &times);
+            for stage in 0..stages {
+                let Some(t) = pred.forecast(stage, horizon) else {
+                    return false; // current signature was just pushed
+                };
+                if !t.is_finite() || t < 0.0 {
+                    return false;
+                }
+            }
+            match pred.forecast_bottleneck(horizon) {
+                Some(b) if b.is_finite() && b >= 0.0 => {}
+                _ => return false,
+            }
+        }
+        pred.observations() == pushes as u64
+    });
+}

@@ -9,7 +9,10 @@
 //!  * JSQ is deterministic — ties always break to the lowest replica id,
 //!    independent of the router's seed;
 //!  * the sticky policy pins each tenant to one replica until that
-//!    replica is released (drained) or scaled away.
+//!    replica is released (drained) or scaled away;
+//!  * tenant-aware routing (ISSUE 9 satellite) tie-breaks depth ties on
+//!    the max per-tenant pressure *before* the aggregate, and collapses
+//!    bit-for-bit to the historical order when peaks alias pressures.
 
 use odin::serving::{Router, RouterPolicy};
 use odin::util::proptest::Property;
@@ -96,6 +99,63 @@ fn prop_jsq_ties_break_to_the_lowest_replica_id() {
             }
             // the reference pick is minimal: no replica beats it
             if (0..n).any(|r| worse(want, r, &depths, &pressures) && r != want)
+            {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+/// The tenant-aware JSQ reference: lowest (depth, peak, pressure, id).
+fn ref_jsq_tenant_aware(
+    depths: &[usize],
+    peaks: &[f64],
+    pressures: &[f64],
+) -> usize {
+    let mut best = 0;
+    for i in 1..depths.len() {
+        let key = |r: usize| (depths[r], peaks[r], pressures[r], r);
+        if key(i) < key(best) {
+            best = i;
+        }
+    }
+    best
+}
+
+#[test]
+fn prop_tenant_aware_tiebreak_peaks_before_aggregate() {
+    let p = Property::new(|r: &mut Rng| {
+        let n = r.range(1, 16);
+        let routes = r.range(1, 40);
+        (n, routes, r.next_u64())
+    });
+    p.check(0x9E4C_11, 150, |&(n, routes, seed)| {
+        let mut rng = Rng::new(seed);
+        let mut router = Router::new(RouterPolicy::Jsq, seed ^ 0x1717);
+        // the aliased form must reproduce route() on the same state
+        let mut legacy = Router::new(RouterPolicy::Jsq, seed ^ 0x1717);
+        for _ in 0..routes {
+            let (depths, pressures) = random_state(&mut rng, n);
+            let peaks: Vec<f64> =
+                (0..n).map(|_| rng.below(3) as f64 * 0.5).collect();
+            let pick =
+                router.route_tenant_aware(&depths, &peaks, &pressures, 0);
+            if pick != ref_jsq_tenant_aware(&depths, &peaks, &pressures) {
+                return false;
+            }
+            // a depth tie with distinct peaks must ignore the aggregate:
+            // the cooler hot tenant wins even when its aggregate is worse
+            for r in 0..n {
+                if r != pick
+                    && depths[r] == depths[pick]
+                    && peaks[r] < peaks[pick]
+                {
+                    return false;
+                }
+            }
+            if legacy.route_tenant_aware(&depths, &pressures, &pressures, 0)
+                != ref_jsq(&depths, &pressures)
             {
                 return false;
             }

@@ -159,3 +159,32 @@ fn scenario_ids_and_eps_validated_through_json() {
     .unwrap_err();
     assert!(rendered(&e).contains("start"), "{e:#}");
 }
+
+#[test]
+fn degenerate_adapt_targets_error_on_both_axes() {
+    // ISSUE 9 regression: on the ms axis the horizon never tracks
+    // `queries`, so `adapted(0, eps)` / `adapted(q, 0)` used to slip
+    // through the identity early-return and hand the host a zero-sized
+    // run (or an EP remap by modulo 0, a panic). Both must be contextful
+    // errors on every axis.
+    let ms = DynamicScenario::from_json_str(
+        r#"{"name": "ms-burst", "eps": 2, "unit": "ms",
+            "horizon_ms": 5000,
+            "phases": [{"kind": "task", "start": 1000, "end": 3000,
+                        "ep": 1, "scenario": 3}]}"#,
+    )
+    .unwrap();
+    for (queries, eps) in [(0, 2), (50, 0), (0, 0)] {
+        let e = ms.adapted(queries, eps).unwrap_err();
+        assert!(rendered(&e).contains("cannot adapt"), "{e:#}");
+        assert!(rendered(&e).contains("ms-burst"), "{e:#}");
+    }
+    // the valid ms-axis identity still holds after the guard
+    assert_eq!(ms.adapted(50, 2).unwrap(), ms);
+    // query-axis scenarios hit the same guard
+    let q = resolve(BUILTIN_NAMES[0]).unwrap();
+    assert!(rendered(&q.adapted(0, q.num_eps).unwrap_err())
+        .contains("cannot adapt"));
+    assert!(rendered(&q.adapted(100, 0).unwrap_err())
+        .contains("cannot adapt"));
+}
