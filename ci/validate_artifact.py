@@ -21,6 +21,10 @@ kinds
   fleet-live    fleet_live_<scenario>.json from `odin serve --fleet`
   predictive    the `odin experiment predictive` sweep artifact
                 (forecast-driven control + the degrade ladder)
+  bench         a BENCH_<pr>.json perf-trajectory artifact (from
+                `odin bench` or an offline estimate): per-suite
+                {case, iters, mean_ns, p50_ns, p99_ns[, qps]} rows plus
+                baseline-vs-refactored pairs with derived speedups
 
 expectations (key=value args, all optional unless noted)
   name=N             doc["name"] must equal N
@@ -477,6 +481,60 @@ def check_predictive(doc):
     return n
 
 
+# One measured bench case; qps rides only on cases that declare a
+# per-iteration simulated query count.
+BENCH_ROW_KEYS = {"case", "iters", "mean_ns", "p50_ns", "p99_ns"}
+
+# One baseline-vs-refactored measurement.
+BENCH_PAIR_KEYS = {"after_ns", "baseline_ns", "path", "speedup"}
+
+
+def check_bench(doc):
+    check_keys(
+        doc,
+        {"estimated", "kind", "note", "pairs", "pr", "schema", "suites"},
+        "bench doc",
+    )
+    if doc["kind"] != "bench":
+        fail(f"kind {doc['kind']!r} != 'bench'")
+    if doc["schema"] != 1:
+        fail(f"unknown bench schema {doc['schema']}")
+    if not isinstance(doc["pr"], int) or doc["pr"] < 1:
+        fail(f"bad pr stamp {doc['pr']!r}")
+    if not isinstance(doc["estimated"], bool):
+        fail("estimated must be a bool")
+    if not doc["suites"]:
+        fail("no suites in bench doc")
+    n = 0
+    for name, suite in doc["suites"].items():
+        check_keys(suite, {"rows"}, f"bench suite {name}")
+        if not suite["rows"]:
+            fail(f"bench suite {name} has no rows")
+        for r in suite["rows"]:
+            want = BENCH_ROW_KEYS | ({"qps"} if "qps" in r else set())
+            check_keys(r, want, f"bench row {name}/{r.get('case', '?')}")
+            what = f"{name}/{r['case']}"
+            if r["iters"] < 1:
+                fail(f"{what} took no samples")
+            if not (0.0 < r["mean_ns"] and 0.0 < r["p50_ns"] <= r["p99_ns"]):
+                fail(f"{what} has non-positive or inverted timings")
+            if "qps" in r and not r["qps"] > 0.0:
+                fail(f"{what} qps {r['qps']} must be positive")
+            n += 1
+    for p in doc["pairs"]:
+        check_keys(p, BENCH_PAIR_KEYS, "bench pair")
+        if p["baseline_ns"] <= 0.0 or p["after_ns"] <= 0.0:
+            fail(f"pair {p['path']} has non-positive timings")
+        want = p["baseline_ns"] / p["after_ns"]
+        if abs(p["speedup"] - want) > 0.01 * want:
+            fail(
+                f"pair {p['path']} speedup {p['speedup']} != "
+                f"baseline/after = {want:.3f}"
+            )
+        n += 1
+    return n
+
+
 def main():
     if len(sys.argv) < 3:
         fail(f"usage: {sys.argv[0]} FILE KIND [key=value ...]")
@@ -505,6 +563,8 @@ def main():
         n = len(doc["replicas"])
     elif kind == "predictive":
         n = check_predictive(doc)
+    elif kind == "bench":
+        n = check_bench(doc)
     else:
         fail(f"unknown kind {kind!r}")
     print(f"validate_artifact OK: {path} [{kind}] ({n} rows)")

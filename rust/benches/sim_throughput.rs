@@ -1,0 +1,29 @@
+//! End-to-end simulated-throughput bench: queries/sec through the whole
+//! engine on the fig5 grid plus one large `4x4:p2c` storm fleet cell,
+//! then the baseline-vs-refactored micro pairs.
+//!
+//! Shares its measurement code with `odin bench` (which also writes the
+//! `BENCH_<pr>.json` trajectory artifact); set `ODIN_BENCH_SHORT=1` for
+//! the CI smoke scale.
+
+use odin::experiments::perf::{
+    run_refactor_pairs, run_sim_throughput, PerfScale,
+};
+use odin::util::bench::Bench;
+
+fn main() {
+    let scale = PerfScale::from_env();
+    let mut b = Bench::new("sim_throughput");
+    run_sim_throughput(&mut b, scale).expect("builtin scenario resolves");
+    let pairs = run_refactor_pairs(&mut b);
+    for p in &pairs {
+        println!(
+            "pair {}  baseline={:.0}ns  after={:.0}ns  speedup={:.2}x",
+            p.path,
+            p.baseline_ns,
+            p.after_ns,
+            p.baseline_ns / p.after_ns,
+        );
+    }
+    b.finish();
+}

@@ -127,7 +127,7 @@ mod tests {
         hot.stage_times(&cfg, &mut out);
         let argmax = |v: &[f64]| {
             (0..v.len())
-                .max_by(|&a, &b| v[a].partial_cmp(&v[b]).unwrap())
+                .max_by(|&a, &b| v[a].total_cmp(&v[b]))
                 .unwrap()
         };
         assert_eq!(argmax(&base), argmax(&out));

@@ -85,13 +85,13 @@ impl Lls {
             // most utilized stage that still has a layer to give
             let Some(src) = (0..c.num_stages())
                 .filter(|&s| c.counts()[s] > 0)
-                .max_by(|&a, &b| util[a].partial_cmp(&util[b]).unwrap())
+                .max_by(|&a, &b| util[a].total_cmp(&util[b]))
             else {
                 break;
             };
             let Some(dst) = (0..c.num_stages())
                 .filter(|&s| s != src)
-                .min_by(|&a, &b| util[a].partial_cmp(&util[b]).unwrap())
+                .min_by(|&a, &b| util[a].total_cmp(&util[b]))
             else {
                 break;
             };

@@ -97,7 +97,7 @@ fn sample(
     for _ in 0..opts.reps.max(1) {
         xs.push(timer.time_unit(u)?);
     }
-    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs.sort_by(f64::total_cmp);
     Ok(if keep_min { xs[0] } else { xs[xs.len() / 2] })
 }
 

@@ -38,6 +38,7 @@ mod fig9;
 mod grid;
 pub mod multitenant;
 pub mod openloop;
+pub mod perf;
 pub mod predictive;
 mod summary;
 mod table1;

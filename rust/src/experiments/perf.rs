@@ -1,0 +1,351 @@
+//! The performance flywheel's measurement suite.
+//!
+//! One function ([`run_sim_throughput`]) measures end-to-end simulated
+//! queries/sec on the fig5 grid plus one large fleet cell, and one
+//! ([`run_refactor_pairs`]) measures baseline-vs-refactored micro pairs
+//! for the hot paths this repo has rewritten. Both are shared verbatim
+//! by the `cargo bench` target (`benches/sim_throughput.rs`) and the
+//! in-process `odin bench` subcommand, so the printed lines and the
+//! `BENCH_<n>.json` trajectory artifact always come from identical
+//! measurement code.
+//!
+//! The artifact schema (`ci/validate_artifact.py bench`):
+//!
+//! ```json
+//! {
+//!   "kind": "bench", "pr": 10, "schema": 1,
+//!   "estimated": false, "note": "...",
+//!   "suites": {"<suite>": {"rows": [{case, iters, mean_ns, p50_ns,
+//!                                    p99_ns[, qps]}]}},
+//!   "pairs": [{path, baseline_ns, after_ns, speedup}]
+//! }
+//! ```
+//!
+//! Trajectory convention: each PR that claims a perf delta appends its
+//! own `BENCH_<pr>.json` next to the goldens — append-only, so the
+//! files form a machine-readable perf history of the repo.
+
+use crate::coordinator::optimal_config;
+use crate::database::synth::synthesize;
+use crate::interference::dynamic::builtin;
+use crate::interference::{RandomInterference, Schedule};
+use crate::json::Value;
+use crate::models;
+use crate::serving::{FleetConfig, Workload};
+use crate::simulator::{
+    simulate, simulate_fleet_runs, FleetLoad, Policy, SimConfig,
+};
+use crate::util::bench::{black_box, Bench, BenchRow};
+use crate::util::error::Result;
+
+use super::fleet::{fleet_cell, FLEET_RATE_FRAC};
+
+/// The PR number stamped into the artifact this crate version emits.
+pub const BENCH_PR: usize = 10;
+
+/// Scale of the suite: `full` produces trajectory numbers, `short` is
+/// the CI smoke (same cases, small horizons).
+#[derive(Clone, Copy, Debug)]
+pub struct PerfScale {
+    /// Queries per fig5-grid simulation window (paper: 4000).
+    pub grid_queries: usize,
+    /// Arrivals offered to the fleet cell (trajectory: 100_000).
+    pub fleet_queries: usize,
+}
+
+impl PerfScale {
+    pub fn full() -> PerfScale {
+        PerfScale { grid_queries: 4000, fleet_queries: 100_000 }
+    }
+
+    pub fn short() -> PerfScale {
+        PerfScale { grid_queries: 200, fleet_queries: 2_000 }
+    }
+
+    /// `short()` when `ODIN_BENCH_SHORT` is set (and not "0"), else
+    /// `full()` — how CI runs the same binaries in smoke mode.
+    pub fn from_env() -> PerfScale {
+        match std::env::var("ODIN_BENCH_SHORT") {
+            Ok(v) if v != "0" => PerfScale::short(),
+            _ => PerfScale::full(),
+        }
+    }
+}
+
+/// One baseline-vs-refactored measurement (speedup derived on emission).
+#[derive(Clone, Debug)]
+pub struct PairRow {
+    /// The refactored code path, as a module path.
+    pub path: String,
+    pub baseline_ns: f64,
+    pub after_ns: f64,
+}
+
+/// End-to-end simulated-queries/sec suite: the fig5 grid (vgg16, the
+/// 3×3 period×duration cells under ODIN α=10, plus the α=2 and LLS
+/// policies at the central cell) and one storm-scenario `4x4:p2c` fleet
+/// cell. Every case declares its query count so the rows carry `qps`.
+pub fn run_sim_throughput(b: &mut Bench, scale: PerfScale) -> Result<()> {
+    let db = synthesize(&models::vgg16(64), 42);
+    let grid = |period: usize, duration: usize| {
+        Schedule::random(
+            4,
+            scale.grid_queries,
+            RandomInterference { period, duration, seed: 42, p_active: 1.0 },
+        )
+    };
+    for &period in &[2usize, 10, 100] {
+        for &duration in &[2usize, 10, 100] {
+            let schedule = grid(period, duration);
+            let cfg = SimConfig::new(4, Policy::Odin { alpha: 10 });
+            b.run_queries(
+                &format!("vgg16/odin_a10/p{period}d{duration}"),
+                scale.grid_queries,
+                || {
+                    black_box(simulate(&db, &schedule, &cfg));
+                },
+            );
+        }
+    }
+    for policy in [Policy::Odin { alpha: 2 }, Policy::Lls] {
+        let schedule = grid(10, 10);
+        let cfg = SimConfig::new(4, policy);
+        b.run_queries(
+            &format!("vgg16/{}/p10d10", policy.label()),
+            scale.grid_queries,
+            || {
+                black_box(simulate(&db, &schedule, &cfg));
+            },
+        );
+    }
+
+    // the large fleet cell: 4 replicas x 4 EPs, p2c router, storm
+    // scenario, offered 2x one replica's clean peak
+    let scenario = builtin("storm")?;
+    let fleet = FleetConfig::parse("4x4:p2c")?;
+    let k = fleet.eps_per_replica;
+    let (_, bneck) = optimal_config(&db, &vec![0usize; k], k);
+    let load =
+        FleetLoad::Open(Workload::poisson(FLEET_RATE_FRAC / bneck, 42)?);
+    let run = fleet_cell(
+        &scenario,
+        fleet,
+        load,
+        Policy::Odin { alpha: 10 },
+        256,
+        scale.fleet_queries,
+        42,
+    )?;
+    b.run_queries("fleet/4x4_p2c/storm", scale.fleet_queries, || {
+        black_box(
+            simulate_fleet_runs(&db, std::slice::from_ref(&run), 1)
+                .expect("validated fleet run"),
+        );
+    });
+    Ok(())
+}
+
+/// Micro pairs for this repo's refactored hot paths, measured live:
+///
+/// * `serving::tenant::SloQueue::pop` — the old O(entries) linear-scan
+///   selection (reproduced inline as the baseline) vs the indexed queue.
+/// * `simulator::engine` stage-time cache — the old per-query
+///   content-compare + clone of the EP-state vector vs the integer
+///   run-index key ([`Schedule::run_of`]).
+pub fn run_refactor_pairs(b: &mut Bench) -> Vec<PairRow> {
+    let mut pairs = Vec::new();
+
+    // --- SloQueue pop: linear scan vs indexed --------------------------
+    const QN: usize = 512;
+    let entry = |i: usize| -> (usize, f64, usize) {
+        // two priority classes, scrambled deadlines, unique seqs
+        (i % 2, ((i * 7919) % QN) as f64, i)
+    };
+    b.run("slo_queue_pop/linear_scan", || {
+        let mut entries: Vec<(usize, f64, usize)> =
+            (0..QN).map(entry).collect();
+        let mut next = QN;
+        for _ in 0..QN {
+            let best = entries
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            black_box(entries.swap_remove(best));
+            entries.push(entry(next));
+            next += 1;
+        }
+        black_box(entries.len());
+    });
+    b.run("slo_queue_pop/indexed", || {
+        use crate::serving::tenant::SloQueue;
+        let mut q: SloQueue<usize> = SloQueue::new(usize::MAX);
+        for i in 0..QN {
+            let (class, dl, seq) = entry(i);
+            q.push(i, 0.0, Some(dl), class, i % 4, seq, 0.0);
+        }
+        let mut next = QN;
+        for _ in 0..QN {
+            black_box(q.pop());
+            let (class, dl, seq) = entry(next);
+            q.push(next, 0.0, Some(dl), class, next % 4, seq, 0.0);
+            next += 1;
+        }
+        black_box(q.len());
+    });
+    push_pair(b, &mut pairs, "serving::tenant::SloQueue::pop",
+              "slo_queue_pop/linear_scan", "slo_queue_pop/indexed");
+
+    // --- engine stage-time cache: content compare vs run index ---------
+    let schedule = Schedule::random(
+        4,
+        4000,
+        RandomInterference { period: 10, duration: 10, seed: 42, p_active: 1.0 },
+    );
+    b.run("state_cache/content_compare", || {
+        let mut last: Vec<usize> = Vec::new();
+        let mut recomputes = 0usize;
+        for q in 0..4000 {
+            let sc = schedule.at(q);
+            if *sc != last {
+                recomputes += 1;
+                last.clone_from(sc);
+            }
+        }
+        black_box(recomputes);
+    });
+    b.run("state_cache/run_index", || {
+        let mut last: Option<usize> = None;
+        let mut recomputes = 0usize;
+        for q in 0..4000 {
+            let run = schedule.run_of(q);
+            if last != Some(run) {
+                recomputes += 1;
+                last = Some(run);
+            }
+        }
+        black_box(recomputes);
+    });
+    push_pair(b, &mut pairs, "simulator::engine::stage_time_cache",
+              "state_cache/content_compare", "state_cache/run_index");
+
+    pairs
+}
+
+/// Record a pair from two already-measured cases (skipped silently if a
+/// bench filter excluded either side).
+fn push_pair(
+    b: &Bench,
+    pairs: &mut Vec<PairRow>,
+    path: &str,
+    baseline_case: &str,
+    after_case: &str,
+) {
+    let mean = |case: &str| {
+        b.rows().iter().find(|r| r.case == case).map(|r| r.mean_ns)
+    };
+    if let (Some(baseline_ns), Some(after_ns)) =
+        (mean(baseline_case), mean(after_case))
+    {
+        pairs.push(PairRow { path: path.to_string(), baseline_ns, after_ns });
+    }
+}
+
+/// Assemble the full `BENCH_<pr>.json` document from measured suites
+/// and pairs. `estimated` marks numbers not measured by this exact
+/// binary on this host (e.g. committed from an offline environment).
+pub fn bench_doc(
+    estimated: bool,
+    note: &str,
+    suites: &[(&str, &[BenchRow])],
+    pairs: &[PairRow],
+) -> Value {
+    Value::obj(vec![
+        ("kind", Value::from("bench")),
+        ("pr", Value::from(BENCH_PR)),
+        ("schema", Value::from(1usize)),
+        ("estimated", Value::from(estimated)),
+        ("note", Value::from(note)),
+        (
+            "suites",
+            Value::obj(
+                suites
+                    .iter()
+                    .map(|(name, rows)| {
+                        (*name, crate::util::bench::rows_json(rows))
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "pairs",
+            Value::arr(
+                pairs
+                    .iter()
+                    .map(|p| {
+                        Value::obj(vec![
+                            ("path", Value::from(p.path.as_str())),
+                            ("baseline_ns", Value::from(p.baseline_ns)),
+                            ("after_ns", Value::from(p.after_ns)),
+                            (
+                                "speedup",
+                                Value::from(p.baseline_ns / p.after_ns),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::to_string_pretty;
+
+    #[test]
+    fn bench_doc_has_the_validator_schema() {
+        let rows = vec![BenchRow {
+            case: "x/y".into(),
+            iters: 3,
+            mean_ns: 10.0,
+            p50_ns: 9.0,
+            p99_ns: 12.0,
+            qps: Some(1e6),
+        }];
+        let pairs = vec![PairRow {
+            path: "a::b".into(),
+            baseline_ns: 100.0,
+            after_ns: 25.0,
+        }];
+        let doc = bench_doc(true, "test", &[("suite_a", &rows[..])], &pairs);
+        assert_eq!(doc.get("kind").as_str(), Some("bench"));
+        assert_eq!(doc.get("pr").as_usize(), Some(BENCH_PR));
+        assert_eq!(doc.get("schema").as_usize(), Some(1));
+        let row = &doc.get("suites").get("suite_a").get("rows").as_arr().unwrap()[0];
+        assert_eq!(row.get("case").as_str(), Some("x/y"));
+        assert_eq!(row.get("qps").as_f64(), Some(1e6));
+        let pair = &doc.get("pairs").as_arr().unwrap()[0];
+        assert_eq!(pair.get("speedup").as_f64(), Some(4.0));
+        // emits without panicking, and round-trips the kind marker
+        assert!(to_string_pretty(&doc).contains("\"kind\": \"bench\""));
+    }
+
+    #[test]
+    fn refactor_pairs_measure_both_sides() {
+        // tiny budget via the suite's own machinery is too slow for a
+        // unit test; drive push_pair directly
+        let mut b =
+            crate::util::bench::Bench::with_filter("pairs_test", None);
+        let mut pairs = Vec::new();
+        push_pair(&b, &mut pairs, "p", "missing/a", "missing/b");
+        assert!(pairs.is_empty(), "absent cases must not invent a pair");
+        b.run_queries("c/base", 1, || {});
+        b.run_queries("c/after", 1, || {});
+        push_pair(&b, &mut pairs, "p", "c/base", "c/after");
+        assert_eq!(pairs.len(), 1);
+        assert!(pairs[0].baseline_ns > 0.0);
+    }
+}

@@ -125,6 +125,18 @@ impl Schedule {
         &self.states[q.min(self.states.len() - 1)]
     }
 
+    /// Index of the constant-state *run* containing `slot`: the number
+    /// of change points at or before it. Every constructor records
+    /// exactly the slots where the EP-state vector changes, so two slots
+    /// with equal run index always carry an identical state vector (and
+    /// clamping past the end, like [`at`](Self::at), stays in the last
+    /// run — no change point lies beyond the horizon). The engine caches
+    /// stage times keyed on this integer instead of content-comparing
+    /// the O(num_eps) state vector every query.
+    pub fn run_of(&self, slot: usize) -> usize {
+        self.change_points.partition_point(|&c| c <= slot)
+    }
+
     /// Fraction of (query, EP) slots that have interference — a sanity
     /// metric printed by experiment runners.
     pub fn interference_load(&self) -> f64 {
@@ -220,6 +232,31 @@ mod tests {
             if cp > 0 {
                 assert_ne!(s.at(cp), s.at(cp - 1), "cp={cp}");
             }
+        }
+    }
+
+    /// The invariant the engine's stage-time cache rests on: equal run
+    /// index ⟺ identical state vector for every slot pair, across all
+    /// three constructors (and past the clamped horizon).
+    #[test]
+    fn run_of_partitions_slots_into_constant_state_runs() {
+        let schedules = [
+            Schedule::none(4, 50),
+            Schedule::random(4, 600, params(10, 5)),
+            Schedule::from_events(4, 40, &[(5, 2, 7, 10), (20, 0, 3, 40)]),
+        ];
+        for s in &schedules {
+            let horizon = s.num_queries();
+            for q in 1..horizon + 10 {
+                let same_run = s.run_of(q) == s.run_of(q - 1);
+                assert_eq!(
+                    same_run,
+                    s.at(q) == s.at(q - 1),
+                    "slot {q}: run index and state content disagree"
+                );
+            }
+            // clamping: the tail shares the last slot's run
+            assert_eq!(s.run_of(horizon + 1000), s.run_of(horizon - 1));
         }
     }
 

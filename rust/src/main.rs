@@ -10,6 +10,9 @@
 //!                multi-replica via --fleet <spec> (router + autoscaler)
 //!   experiment   regenerate paper tables/figures (table1, fig1..fig10,
 //!                summary, dynamic, openloop, fleet, predictive, or `all`)
+//!   bench        run the in-process perf suite (simulated-throughput
+//!                grid + fleet cell + baseline-vs-refactored pairs) and
+//!                write the BENCH_<pr>.json trajectory artifact
 //!   bench-db     measure the per-layer timing database on this host
 //!                through the PJRT runtime, under real stressors
 //!   verify       compile artifacts and check gold numerics
@@ -35,6 +38,9 @@ use odin::experiments::fleet::{
 };
 use odin::experiments::multitenant::{
     mt_scenario_json, run_tenant_scenario,
+};
+use odin::experiments::perf::{
+    bench_doc, run_refactor_pairs, run_sim_throughput, PerfScale, BENCH_PR,
 };
 use odin::experiments::{self, ExpCtx};
 use odin::interference::dynamic::{resolve, ScenarioAxis};
@@ -89,6 +95,9 @@ fn usage() -> String {
        experiment   regenerate paper artifacts: table1 fig1 fig3..fig10\n\
                     summary dynamic openloop multitenant batching fleet\n\
                     predictive all\n\
+       bench        run the in-process perf suite (sim throughput grid +\n\
+                    fleet cell + refactor pairs) and write the\n\
+                    BENCH_<pr>.json trajectory artifact\n\
        bench-db     measure the per-layer timing database via PJRT\n\
        verify       compile artifacts + gold numerics check\n\
        serve        live pipeline server; --scenario <name|file> replays a\n\
@@ -107,6 +116,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
     match sub.as_str() {
         "simulate" => cmd_simulate(rest),
         "experiment" => cmd_experiment(rest),
+        "bench" => cmd_bench(rest),
         "bench-db" => cmd_bench_db(rest),
         "verify" => cmd_verify(rest),
         "serve" => cmd_serve(rest),
@@ -677,6 +687,60 @@ fn cmd_experiment(argv: &[String]) -> Result<()> {
         jobs: args.usize("jobs")?.max(1),
     };
     experiments::run(id, &ctx)
+}
+
+/// `odin bench`: run the shared perf suite (`experiments::perf`)
+/// in-process — no cargo needed at runtime — and write the
+/// machine-readable `BENCH_<pr>.json` trajectory artifact: the
+/// sim-throughput rows (fig5 grid + the 4x4:p2c storm fleet cell, each
+/// with simulated qps) plus the baseline-vs-refactored micro pairs.
+fn cmd_bench(argv: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "bench",
+        "run the perf suite, write the bench trajectory artifact",
+    )
+    .flag("out", "results", "output dir for BENCH_<pr>.json ('' = none)")
+    .opt("filter", "only run cases whose name contains this substring")
+    .switch("short", "CI smoke scale (equivalent to ODIN_BENCH_SHORT=1)");
+    let args = cmd.parse(argv)?;
+    let scale = if args.has("short") {
+        PerfScale::short()
+    } else {
+        PerfScale::from_env()
+    };
+    let filter = (!args.get("filter").is_empty())
+        .then(|| args.get("filter").to_string())
+        .or_else(|| std::env::var("ODIN_BENCH_FILTER").ok());
+    let mut b = odin::util::bench::Bench::with_filter(
+        "sim_throughput",
+        filter.clone(),
+    );
+    run_sim_throughput(&mut b, scale)?;
+    let mut pb = odin::util::bench::Bench::with_filter("pairs", filter);
+    let pairs = run_refactor_pairs(&mut pb);
+    for p in &pairs {
+        println!(
+            "pair {}  baseline={:.0}ns  after={:.0}ns  speedup={:.2}x",
+            p.path,
+            p.baseline_ns,
+            p.after_ns,
+            p.baseline_ns / p.after_ns,
+        );
+    }
+    if !args.get("out").is_empty() {
+        let dir = std::path::Path::new(args.get("out"));
+        std::fs::create_dir_all(dir)?;
+        let doc = bench_doc(
+            false,
+            "measured in-process by `odin bench` on this host",
+            &[("sim_throughput", b.rows()), ("pairs", pb.rows())],
+            &pairs,
+        );
+        let path = dir.join(format!("BENCH_{BENCH_PR}.json"));
+        odin::json::write_file(&path, &doc)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
 }
 
 fn cmd_bench_db(argv: &[String]) -> Result<()> {

@@ -217,7 +217,7 @@ mod tests {
                         .1
                 })
                 .collect();
-            ts.sort_by(|a, c| a.partial_cmp(c).unwrap());
+            ts.sort_by(f64::total_cmp);
             ts[1]
         };
         let t1 = time(1);
@@ -238,7 +238,7 @@ mod tests {
             let mut ts: Vec<f64> = (0..3)
                 .map(|_| b.run_range(0, b.num_units(), x()).unwrap().1)
                 .collect();
-            ts.sort_by(|a, c| a.partial_cmp(c).unwrap());
+            ts.sort_by(f64::total_cmp);
             ts[1]
         };
         let full = time(1.0);

@@ -1628,13 +1628,11 @@ mod tests {
         let (mut server, inputs) = tiny_server(2);
         let tenants = TenantSet::new(
             "solo",
-            vec![TenantSpec {
-                id: "x".into(),
-                workload: Workload::trace(vec![0.002]).unwrap(),
-                deadline_ms: 60_000.0,
-                priority: 0,
-                weight: 1.0,
-            }],
+            vec![TenantSpec::new(
+                "x",
+                Workload::trace(vec![0.002]).unwrap(),
+                60_000.0,
+            )],
         )
         .unwrap();
         let e = driver
@@ -1656,20 +1654,17 @@ mod tests {
         let tenants = TenantSet::new(
             "pair",
             vec![
-                TenantSpec {
-                    id: "x".into(),
-                    workload: Workload::trace(vec![0.002]).unwrap(),
-                    deadline_ms: 60_000.0,
-                    priority: 0,
-                    weight: 1.0,
-                },
-                TenantSpec {
-                    id: "y".into(),
-                    workload: Workload::trace(vec![0.004]).unwrap(),
-                    deadline_ms: 60_000.0,
-                    priority: 1,
-                    weight: 1.0,
-                },
+                TenantSpec::new(
+                    "x",
+                    Workload::trace(vec![0.002]).unwrap(),
+                    60_000.0,
+                ),
+                TenantSpec::new(
+                    "y",
+                    Workload::trace(vec![0.004]).unwrap(),
+                    60_000.0,
+                )
+                .with_priority(1),
             ],
         )
         .unwrap();
@@ -1727,20 +1722,17 @@ mod tests {
         let tenants = TenantSet::new(
             "split",
             vec![
-                TenantSpec {
-                    id: "tight".into(),
-                    workload: Workload::trace(vec![0.001]).unwrap(),
-                    deadline_ms: 0.2,
-                    priority: 0,
-                    weight: 1.0,
-                },
-                TenantSpec {
-                    id: "loose".into(),
-                    workload: Workload::trace(vec![0.002]).unwrap(),
-                    deadline_ms: 60_000.0,
-                    priority: 1,
-                    weight: 1.0,
-                },
+                TenantSpec::new(
+                    "tight",
+                    Workload::trace(vec![0.001]).unwrap(),
+                    0.2,
+                ),
+                TenantSpec::new(
+                    "loose",
+                    Workload::trace(vec![0.002]).unwrap(),
+                    60_000.0,
+                )
+                .with_priority(1),
             ],
         )
         .unwrap();

@@ -82,6 +82,53 @@ pub struct Completion {
     pub accuracy: Option<f64>,
 }
 
+impl Completion {
+    /// Scaffold constructor for tests and examples: a plain pipelined
+    /// completion with `latency == service` (no queueing), tenant 0, a
+    /// unit output tensor, and defaults everywhere else. Chain the
+    /// builders below to override individual fields.
+    pub fn sample(id: usize, latency: f64) -> Completion {
+        Completion {
+            id,
+            latency,
+            queued: 0.0,
+            service: latency,
+            tenant: 0,
+            stage_times: Vec::new(),
+            output: Tensor::zeros(&[1]),
+            serial: false,
+            batch: 1,
+            accuracy: None,
+        }
+    }
+
+    /// Set the queueing delay, keeping `latency = queued + service`
+    /// (service absorbs the remainder of the end-to-end latency).
+    pub fn queued(mut self, queued: f64) -> Completion {
+        self.queued = queued;
+        self.service = self.latency - queued;
+        self
+    }
+
+    /// Mark this completion as a serial rebalancing probe.
+    pub fn serial(mut self) -> Completion {
+        self.serial = true;
+        self
+    }
+
+    /// Set the per-stage service times.
+    pub fn stages(mut self, stage_times: Vec<f64>) -> Completion {
+        self.stage_times = stage_times;
+        self
+    }
+
+    /// Set the owning tenant.
+    pub fn tenant(mut self, tenant: usize) -> Completion {
+        self.tenant = tenant;
+        self
+    }
+}
+
 /// Outcome of offering one tenant arrival to the SLO-aware queue.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TenantPush {

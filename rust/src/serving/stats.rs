@@ -81,35 +81,15 @@ impl ServeReport {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::Tensor;
 
     #[test]
     fn report_aggregates() {
         let comps = vec![
-            Completion {
-                id: 0,
-                latency: 0.1,
-                queued: 0.0,
-                service: 0.1,
-                tenant: 0,
-                stage_times: vec![0.05, 0.05],
-                output: Tensor::zeros(&[1]),
-                serial: false,
-                batch: 1,
-                accuracy: None,
-            },
-            Completion {
-                id: 1,
-                latency: 0.3,
-                queued: 0.1,
-                service: 0.2,
-                tenant: 0,
-                stage_times: vec![0.1, 0.2],
-                output: Tensor::zeros(&[1]),
-                serial: true,
-                batch: 1,
-                accuracy: None,
-            },
+            Completion::sample(0, 0.1).stages(vec![0.05, 0.05]),
+            Completion::sample(1, 0.3)
+                .queued(0.1)
+                .serial()
+                .stages(vec![0.1, 0.2]),
         ];
         let r = ServeReport::of(&comps, 0.5);
         assert_eq!(r.queries, 2);
@@ -127,17 +107,9 @@ mod tests {
     #[test]
     fn window_latency_tracks_chunks() {
         let comps: Vec<Completion> = (0..SERVE_WINDOW * 2)
-            .map(|i| Completion {
-                id: i,
-                latency: if i < SERVE_WINDOW { 0.1 } else { 0.3 },
-                queued: 0.0,
-                service: if i < SERVE_WINDOW { 0.1 } else { 0.3 },
-                tenant: 0,
-                stage_times: vec![0.1],
-                output: Tensor::zeros(&[1]),
-                serial: false,
-                batch: 1,
-                accuracy: None,
+            .map(|i| {
+                let lat = if i < SERVE_WINDOW { 0.1 } else { 0.3 };
+                Completion::sample(i, lat).stages(vec![0.1])
             })
             .collect();
         let r = ServeReport::of(&comps, 1.0);

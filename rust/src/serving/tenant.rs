@@ -26,6 +26,10 @@
 //! completion share against `weight / Σ weights` so starvation is visible
 //! in the artifacts.
 
+use std::cmp::Ordering;
+use std::collections::BTreeSet;
+use std::ops::Bound;
+
 use crate::json::{parse, Value};
 use crate::util::error::{Context, Result};
 use crate::{bail, err};
@@ -65,6 +69,45 @@ pub struct TenantSpec {
 }
 
 impl TenantSpec {
+    /// A tenant with the neutral defaults every schema bump so far has
+    /// reached for: priority 0, weight 1, no explicit queue share.
+    /// Construction sites (tests above all — two PRs running, struct
+    /// literals in tests broke on every new field) chain the `with_*`
+    /// builders for the fields they actually exercise, so adding a field
+    /// with a neutral default never touches them again.
+    pub fn new(
+        id: impl Into<String>,
+        workload: Workload,
+        deadline_ms: f64,
+    ) -> TenantSpec {
+        TenantSpec {
+            id: id.into(),
+            workload,
+            deadline_ms,
+            priority: 0,
+            weight: 1.0,
+            queue_share: None,
+        }
+    }
+
+    /// Priority class (0 = highest).
+    pub fn with_priority(mut self, priority: usize) -> TenantSpec {
+        self.priority = priority;
+        self
+    }
+
+    /// Fairness weight.
+    pub fn with_weight(mut self, weight: f64) -> TenantSpec {
+        self.weight = weight;
+        self
+    }
+
+    /// Explicit queue-occupancy share under [`Fairness::WfqCaps`].
+    pub fn with_queue_share(mut self, share: f64) -> TenantSpec {
+        self.queue_share = Some(share);
+        self
+    }
+
     /// The deadline in seconds (the queue's native unit).
     pub fn deadline_s(&self) -> f64 {
         self.deadline_ms / 1e3
@@ -456,14 +499,11 @@ impl TenantSet {
 /// [`TenantSet::with_total_rate`].
 pub fn builtin(name: &str) -> Result<TenantSet> {
     let spec = |id: &str, w: &str, deadline_ms: f64, priority: usize, weight: f64| {
-        Ok::<TenantSpec, crate::util::error::OdinError>(TenantSpec {
-            id: id.to_string(),
-            workload: Workload::parse(w)?,
-            deadline_ms,
-            priority,
-            weight,
-            queue_share: None,
-        })
+        Ok::<TenantSpec, crate::util::error::OdinError>(
+            TenantSpec::new(id, Workload::parse(w)?, deadline_ms)
+                .with_priority(priority)
+                .with_weight(weight),
+        )
     };
     match name {
         // a gold tenant with a tight deadline and double weight over a
@@ -491,20 +531,17 @@ pub fn builtin(name: &str) -> Result<TenantSet> {
         // share; WFQ/DRR holds it at its weight share instead — the
         // enforcement stress case.
         "mixed" => {
-            let batch = TenantSpec {
-                id: "batch".to_string(),
-                workload: Workload::phased(
+            let batch = TenantSpec::new(
+                "batch",
+                Workload::phased(
                     vec![
                         super::workload::RatePhase { queries: 40, rate_qps: 40.0 },
                         super::workload::RatePhase { queries: 360, rate_qps: 240.0 },
                     ],
                     23,
                 )?,
-                deadline_ms: 300.0,
-                priority: 0,
-                weight: 1.0,
-                queue_share: None,
-            };
+                300.0,
+            );
             TenantSet::new(
                 "mixed",
                 vec![spec("rt", "poisson:100qps@29", 300.0, 0, 2.0)?, batch],
@@ -589,6 +626,34 @@ impl Fairness {
 
 // -- the SLO-aware queue ------------------------------------------------
 
+/// Totally ordered f64 for index keys: `Ord` via [`f64::total_cmp`], so a
+/// NaN deadline (should validation ever be bypassed) sorts deterministically
+/// after `+inf` instead of panicking a `partial_cmp().expect(..)` on the
+/// hot path. `None` deadlines are stored as `+inf` (FIFO behind every
+/// deadlined entry of the class), exactly the historical sort key.
+#[derive(Clone, Copy, Debug)]
+struct Tot(f64);
+
+impl PartialEq for Tot {
+    fn eq(&self, other: &Tot) -> bool {
+        self.0.total_cmp(&other.0) == Ordering::Equal
+    }
+}
+
+impl Eq for Tot {}
+
+impl PartialOrd for Tot {
+    fn partial_cmp(&self, other: &Tot) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Tot {
+    fn cmp(&self, other: &Tot) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
 /// One queued entry. Times are f64 seconds on the caller's clock (the
 /// simulator's virtual clock, or seconds since a live anchor instant) so
 /// one implementation — and one test suite — serves both worlds.
@@ -649,18 +714,49 @@ struct FairState {
 /// [`configure_fairness`](Self::configure_fairness)) replaces the
 /// within-class order by deficit round robin across tenants, EDF within
 /// each tenant's backlog.
+///
+/// Storage is a plain `Vec` mutated exactly as the historical
+/// implementation did (push at the tail, `swap_remove` on removal) — the
+/// iteration order of [`pressure`](Self::pressure) and the shed scan, and
+/// therefore every float accumulation feeding the golden artifacts, is
+/// bit-for-bit unchanged. Selection, however, no longer scans: four
+/// ordered indexes keyed on the historical pop keys
+/// (`(class, deadline, seq)` globally, `(class, tenant, deadline, seq)`
+/// per tenant, and deadline-only views for blown-entry eviction) make
+/// `peek`/`pop`/`push` O(log n) per operation instead of
+/// O(tenants × entries). Each index tuple carries the entry's current
+/// `Vec` position as its (never-compared — `seq` is unique) last element,
+/// so a hit resolves to storage without a side map.
 #[derive(Debug)]
 pub struct SloQueue<P> {
     cap: usize,
     seq: usize,
     entries: Vec<SloEntry<P>>,
     fair: Option<FairState>,
+    /// Global pop order: `(class, deadline|+inf, seq, pos)`.
+    by_key: BTreeSet<(usize, Tot, usize, usize)>,
+    /// Per-tenant EDF within a class: `(class, tenant, deadline|+inf,
+    /// seq, pos)` — DRR reads one range per visited tenant.
+    by_tenant: BTreeSet<(usize, usize, Tot, usize, usize)>,
+    /// Deadlined entries only, most expired first: `(deadline, seq, pos)`.
+    by_deadline: BTreeSet<(Tot, usize, usize)>,
+    /// Deadlined entries only, per tenant: `(tenant, deadline, seq, pos)`.
+    by_tenant_deadline: BTreeSet<(usize, Tot, usize, usize)>,
 }
 
 impl<P> SloQueue<P> {
     pub fn new(cap: usize) -> SloQueue<P> {
         assert!(cap >= 1, "queue cap must be >= 1");
-        SloQueue { cap, seq: 0, entries: Vec::new(), fair: None }
+        SloQueue {
+            cap,
+            seq: 0,
+            entries: Vec::new(),
+            fair: None,
+            by_key: BTreeSet::new(),
+            by_tenant: BTreeSet::new(),
+            by_deadline: BTreeSet::new(),
+            by_tenant_deadline: BTreeSet::new(),
+        }
     }
 
     /// Install (or clear) a fairness mode for the given tenant set.
@@ -725,61 +821,92 @@ impl<P> SloQueue<P> {
         self.cap
     }
 
-    /// Pop ordering key; seq is unique so the order is total and the
-    /// selection deterministic.
-    fn key(e: &SloEntry<P>) -> (usize, f64, usize) {
-        (e.class, e.deadline.unwrap_or(f64::INFINITY), e.seq)
+    /// Register the entry at `pos` in every index it belongs to.
+    fn idx_insert(&mut self, pos: usize) {
+        let e = &self.entries[pos];
+        let d = Tot(e.deadline.unwrap_or(f64::INFINITY));
+        self.by_key.insert((e.class, d, e.seq, pos));
+        self.by_tenant.insert((e.class, e.tenant, d, e.seq, pos));
+        if let Some(dl) = e.deadline {
+            self.by_deadline.insert((Tot(dl), e.seq, pos));
+            self.by_tenant_deadline.insert((e.tenant, Tot(dl), e.seq, pos));
+        }
     }
 
-    /// EDF key within one class / one tenant's backlog.
-    fn edf_key(e: &SloEntry<P>) -> (f64, usize) {
-        (e.deadline.unwrap_or(f64::INFINITY), e.seq)
+    /// Drop the entry at `pos` from every index.
+    fn idx_remove(&mut self, pos: usize) {
+        let e = &self.entries[pos];
+        let d = Tot(e.deadline.unwrap_or(f64::INFINITY));
+        self.by_key.remove(&(e.class, d, e.seq, pos));
+        self.by_tenant.remove(&(e.class, e.tenant, d, e.seq, pos));
+        if let Some(dl) = e.deadline {
+            self.by_deadline.remove(&(Tot(dl), e.seq, pos));
+            self.by_tenant_deadline.remove(&(e.tenant, Tot(dl), e.seq, pos));
+        }
+    }
+
+    /// `Vec::swap_remove` with the indexes kept in sync: the removed
+    /// entry leaves every index, and the tail entry that slid into `pos`
+    /// is re-keyed there. The storage mutation is byte-for-byte the
+    /// historical one.
+    fn swap_remove_indexed(&mut self, pos: usize) -> SloEntry<P> {
+        self.idx_remove(pos);
+        let last = self.entries.len() - 1;
+        if pos != last {
+            self.idx_remove(last);
+        }
+        let e = self.entries.swap_remove(pos);
+        if pos < self.entries.len() {
+            self.idx_insert(pos);
+        }
+        e
     }
 
     fn best_idx(&self) -> Option<usize> {
         match &self.fair {
             Some(f) => self.drr_idx(f),
-            None => (0..self.entries.len()).min_by(|&a, &b| {
-                Self::key(&self.entries[a])
-                    .partial_cmp(&Self::key(&self.entries[b]))
-                    .expect("deadlines validated finite")
-            }),
+            // min (class, deadline|+inf, seq) — seq is unique, so the
+            // index head IS the historical linear-scan winner.
+            None => self.by_key.first().map(|&(.., pos)| pos),
         }
+    }
+
+    /// EDF-min position among tenant `u`'s class-`top` backlog: the head
+    /// of one `by_tenant` range. Bounds span every deadline value a
+    /// validated entry can carry (`-inf ..= +inf`-as-`None`); the
+    /// exclusive upper bound steps to the next tenant, which compares
+    /// after any deadline.
+    fn tenant_best(&self, top: usize, u: usize) -> Option<usize> {
+        self.by_tenant
+            .range((
+                Bound::Included((top, u, Tot(f64::NEG_INFINITY), 0, 0)),
+                Bound::Excluded((top, u + 1, Tot(f64::NEG_INFINITY), 0, 0)),
+            ))
+            .next()
+            .map(|&(.., pos)| pos)
     }
 
     /// DRR selection, side-effect free: the next entry is the EDF-min of
     /// the first tenant — scanning cyclically from the cursor — with
     /// backlog in the top waiting class. Credit/debit/cursor bookkeeping
     /// lives in [`pop`](Self::pop), so `peek` always agrees with the
-    /// next `pop`.
+    /// next `pop`. One O(log n) range probe per visited tenant; empty
+    /// tenants cost one probe each, so a full rotation is
+    /// O(tenants × log n) worst case — independent of queue depth.
     fn drr_idx(&self, f: &FairState) -> Option<usize> {
-        let top = self.entries.iter().map(|e| e.class).min()?;
+        let &(top, .., head) = self.by_key.first()?;
         let n = f.counts.len().max(1);
         for step in 0..n {
             let u = (f.cursor + step) % n;
-            let best = (0..self.entries.len())
-                .filter(|&i| {
-                    self.entries[i].tenant == u && self.entries[i].class == top
-                })
-                .min_by(|&a, &b| {
-                    Self::edf_key(&self.entries[a])
-                        .partial_cmp(&Self::edf_key(&self.entries[b]))
-                        .expect("deadlines validated finite")
-                });
-            if best.is_some() {
-                return best;
+            if let Some(pos) = self.tenant_best(top, u) {
+                return Some(pos);
             }
         }
         // top-class entries labeled with tenants outside the configured
         // set (defensive — both worlds configure from the set that
-        // labels the arrivals): plain EDF over them
-        (0..self.entries.len())
-            .filter(|&i| self.entries[i].class == top)
-            .min_by(|&a, &b| {
-                Self::edf_key(&self.entries[a])
-                    .partial_cmp(&Self::edf_key(&self.entries[b]))
-                    .expect("deadlines validated finite")
-            })
+        // labels the arrivals): plain EDF over them, which is exactly
+        // the global index head (top is the minimum queued class).
+        Some(head)
     }
 
     /// The entry the next [`pop`](Self::pop) would return.
@@ -796,7 +923,7 @@ impl<P> SloQueue<P> {
     /// proportional to its weight.
     pub fn pop(&mut self) -> Option<SloEntry<P>> {
         let i = self.best_idx()?;
-        let e = self.entries.swap_remove(i);
+        let e = self.swap_remove_indexed(i);
         if let Some(f) = &mut self.fair {
             let u = e.tenant;
             f.ensure(u);
@@ -822,11 +949,14 @@ impl<P> SloQueue<P> {
 
     /// Offer one arrival at time `now`. When the queue is full, a queued
     /// entry whose deadline has already passed is evicted in its place
-    /// (the most-expired first); with no blown entry the arrival itself
-    /// is shed. Under [`Fairness::WfqCaps`] a tenant at its occupancy
-    /// cap resolves the overflow *within its own backlog first*: its
-    /// most-expired blown entry is evicted, else the arrival is shed —
-    /// other tenants' entries are never touched by its burst.
+    /// (the most-expired first, enqueue order breaking exact-deadline
+    /// ties); with no blown entry the arrival itself is shed. Under
+    /// [`Fairness::WfqCaps`] a tenant at its occupancy cap resolves the
+    /// overflow *within its own backlog first*: its most-expired blown
+    /// entry is evicted, else the arrival is shed — other tenants'
+    /// entries are never touched by its burst. Both eviction candidates
+    /// come from the deadline indexes (one ordered-set head read each),
+    /// so a push never scans the backlog.
     #[allow(clippy::too_many_arguments)]
     pub fn push(
         &mut self,
@@ -839,46 +969,53 @@ impl<P> SloQueue<P> {
         now: f64,
     ) -> SloPush<P> {
         let mut evicted = None;
-        if let Some(f) = &mut self.fair {
-            f.ensure(tenant);
-            if f.mode == Fairness::WfqCaps && f.counts[tenant] >= f.caps[tenant]
-            {
-                let blown = (0..self.entries.len())
-                    .filter(|&i| {
-                        self.entries[i].tenant == tenant
-                            && self.entries[i].deadline.is_some_and(|d| d < now)
-                    })
-                    .min_by(|&a, &b| {
-                        self.entries[a]
-                            .deadline
-                            .partial_cmp(&self.entries[b].deadline)
-                            .expect("deadlines validated finite")
-                    });
-                match blown {
-                    Some(i) => {
-                        let e = self.entries.swap_remove(i);
+        let at_cap = match &mut self.fair {
+            Some(f) => {
+                f.ensure(tenant);
+                f.mode == Fairness::WfqCaps
+                    && f.counts[tenant] >= f.caps[tenant]
+            }
+            None => false,
+        };
+        if at_cap {
+            // head of the tenant's deadline range = its most-expired
+            // entry; a head at/after `now` means nothing of this
+            // tenant's is blown
+            let blown = self
+                .by_tenant_deadline
+                .range((
+                    Bound::Included((tenant, Tot(f64::NEG_INFINITY), 0, 0)),
+                    Bound::Excluded((
+                        tenant + 1,
+                        Tot(f64::NEG_INFINITY),
+                        0,
+                        0,
+                    )),
+                ))
+                .next()
+                .filter(|&&(_, d, _, _)| d.0 < now)
+                .map(|&(.., pos)| pos);
+            match blown {
+                Some(i) => {
+                    let e = self.swap_remove_indexed(i);
+                    if let Some(f) = &mut self.fair {
                         f.note_removed(e.tenant);
-                        evicted = Some(e);
                     }
-                    None => return SloPush::Shed,
+                    evicted = Some(e);
                 }
+                None => return SloPush::Shed,
             }
         }
         if evicted.is_none() && self.entries.len() >= self.cap {
-            let blown = (0..self.entries.len())
-                .filter(|&i| {
-                    self.entries[i].deadline.is_some_and(|d| d < now)
-                })
-                .min_by(|&a, &b| {
-                    // earliest deadline = most expired goes first
-                    self.entries[a]
-                        .deadline
-                        .partial_cmp(&self.entries[b].deadline)
-                        .expect("deadlines validated finite")
-                });
+            // earliest deadline = most expired goes first
+            let blown = self
+                .by_deadline
+                .first()
+                .filter(|&&(d, _, _)| d.0 < now)
+                .map(|&(.., pos)| pos);
             match blown {
                 Some(i) => {
-                    let e = self.entries.swap_remove(i);
+                    let e = self.swap_remove_indexed(i);
                     if let Some(f) = &mut self.fair {
                         f.note_removed(e.tenant);
                     }
@@ -898,6 +1035,7 @@ impl<P> SloQueue<P> {
             tag,
             seq,
         });
+        self.idx_insert(self.entries.len() - 1);
         if let Some(f) = &mut self.fair {
             f.counts[tenant] += 1;
         }
@@ -910,12 +1048,24 @@ impl<P> SloQueue<P> {
     /// Drop every entry whose deadline has passed at `now` — serving them
     /// can no longer meet their SLO, so capacity goes to queries that
     /// still can. Returned in queue-arrival order (deterministic).
+    ///
+    /// The common case (nothing blown — most admission rounds) is one
+    /// read of the deadline index's head instead of a full scan; only
+    /// when at least one deadline has actually passed does the historical
+    /// compacting sweep run, removing in the exact storage order the old
+    /// implementation did so the surviving `Vec` arrangement (and every
+    /// downstream float accumulation) stays byte-identical.
     pub fn shed_blown(&mut self, now: f64) -> Vec<SloEntry<P>> {
+        let any_blown =
+            self.by_deadline.first().is_some_and(|&(d, _, _)| d.0 < now);
+        if !any_blown {
+            return Vec::new();
+        }
         let mut out = Vec::new();
         let mut i = 0;
         while i < self.entries.len() {
             if self.entries[i].deadline.is_some_and(|d| d < now) {
-                out.push(self.entries.swap_remove(i));
+                out.push(self.swap_remove_indexed(i));
             } else {
                 i += 1;
             }
@@ -936,7 +1086,11 @@ impl<P> SloQueue<P> {
     /// 0 with no fairness installed (the default control loop must stay
     /// bit-identical) or an empty queue; grows with backlog depth and
     /// with deadlines closing in. Fed into the controller so ODIN
-    /// optimizes the SLO-weighted bottleneck.
+    /// optimizes the SLO-weighted bottleneck. Evaluated once per control
+    /// window (not per queue op) and inherently a function of `now`, so
+    /// it walks storage directly — in the exact `Vec` order the old
+    /// implementation summed in, keeping the accumulated float (and the
+    /// golden artifacts downstream) bit-identical.
     pub fn pressure(&self, now: f64) -> f64 {
         let Some(f) = &self.fair else { return 0.0 };
         let wsum: f64 = f.weights.iter().sum();
@@ -1012,9 +1166,9 @@ fn fair_caps(shares: &[f64], cap: usize) -> Vec<usize> {
     order.sort_by(|&a, &b| {
         let fa = quotas[a] - quotas[a].floor();
         let fb = quotas[b] - quotas[b].floor();
-        fb.partial_cmp(&fa)
-            .expect("shares validated finite")
-            .then(a.cmp(&b))
+        // total_cmp: a hostile NaN share degrades to a deterministic
+        // order instead of panicking the partial_cmp expect
+        fb.total_cmp(&fa).then(a.cmp(&b))
     });
     for i in order {
         if left == 0 {
@@ -1225,22 +1379,8 @@ mod tests {
         let t = TenantSet::new(
             "ties",
             vec![
-                TenantSpec {
-                    id: "x".into(),
-                    workload: Workload::trace(vec![0.5]).unwrap(),
-                    deadline_ms: 100.0,
-                    priority: 0,
-                    weight: 1.0,
-                    queue_share: None,
-                },
-                TenantSpec {
-                    id: "y".into(),
-                    workload: Workload::trace(vec![0.5]).unwrap(),
-                    deadline_ms: 100.0,
-                    priority: 0,
-                    weight: 1.0,
-                    queue_share: None,
-                },
+                TenantSpec::new("x", Workload::trace(vec![0.5]).unwrap(), 100.0),
+                TenantSpec::new("y", Workload::trace(vec![0.5]).unwrap(), 100.0),
             ],
         )
         .unwrap();
@@ -1253,13 +1393,12 @@ mod tests {
 
     #[test]
     fn validation_rejects_bad_sets_with_context() {
-        let ok = || TenantSpec {
-            id: "a".into(),
-            workload: Workload::parse("poisson:10qps").unwrap(),
-            deadline_ms: 50.0,
-            priority: 0,
-            weight: 1.0,
-            queue_share: None,
+        let ok = || {
+            TenantSpec::new(
+                "a",
+                Workload::parse("poisson:10qps").unwrap(),
+                50.0,
+            )
         };
         // closed workload
         let mut t = ok();
@@ -1365,22 +1504,16 @@ mod tests {
         let s = TenantSet::new(
             "m",
             vec![
-                TenantSpec {
-                    id: "steady".into(),
-                    workload: Workload::parse("poisson:10qps").unwrap(),
-                    deadline_ms: 50.0,
-                    priority: 0,
-                    weight: 1.0,
-                    queue_share: None,
-                },
-                TenantSpec {
-                    id: "replay".into(),
-                    workload: Workload::trace(vec![0.5]).unwrap(),
-                    deadline_ms: 50.0,
-                    priority: 0,
-                    weight: 1.0,
-                    queue_share: None,
-                },
+                TenantSpec::new(
+                    "steady",
+                    Workload::parse("poisson:10qps").unwrap(),
+                    50.0,
+                ),
+                TenantSpec::new(
+                    "replay",
+                    Workload::trace(vec![0.5]).unwrap(),
+                    50.0,
+                ),
             ],
         )
         .unwrap();
@@ -1528,13 +1661,9 @@ mod tests {
         w1: f64,
         cap: usize,
     ) -> SloQueue<usize> {
-        let spec = |id: &str, weight: f64| TenantSpec {
-            id: id.into(),
-            workload: Workload::parse("poisson:10qps").unwrap(),
-            deadline_ms: 1000.0,
-            priority: 0,
-            weight,
-            queue_share: None,
+        let spec = |id: &str, weight: f64| {
+            TenantSpec::new(id, Workload::parse("poisson:10qps").unwrap(), 1000.0)
+                .with_weight(weight)
         };
         let set =
             TenantSet::new("pair", vec![spec("a", w0), spec("b", w1)]).unwrap();
@@ -1687,14 +1816,11 @@ mod tests {
     fn reconfigure_to_smaller_set_keeps_ledgers_coherent() {
         let one = TenantSet::new(
             "solo",
-            vec![TenantSpec {
-                id: "only".into(),
-                workload: Workload::parse("poisson:10qps").unwrap(),
-                deadline_ms: 1000.0,
-                priority: 0,
-                weight: 1.0,
-                queue_share: None,
-            }],
+            vec![TenantSpec::new(
+                "only",
+                Workload::parse("poisson:10qps").unwrap(),
+                1000.0,
+            )],
         )
         .unwrap();
         let mut q = fair_queue(Fairness::WfqCaps, 1.0, 1.0, 16);

@@ -44,6 +44,8 @@ use crate::serving::workload::{Workload, MAX_CLOSED_DEPTH};
 use crate::util::error::Result;
 use crate::util::ThreadPool;
 
+use super::qlog::QueryLog;
+
 /// Which rebalancing policy drives the run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Policy {
@@ -381,7 +383,6 @@ pub fn simulate_workload(
         .map(|_| DegradeLadder::new(1.0 / (cfg.slo_level * peak_throughput)));
     let mut cur_db: &TimingDb = db;
     let mut acc_now = cfg.degrade.as_ref().map(|d| d.full_accuracy);
-    let mut accuracy: Vec<f64> = Vec::new();
     let mut full_times: Vec<f64> = Vec::new();
 
     // batching: every open-loop arrival gets a uniform deadline of
@@ -403,18 +404,12 @@ pub fn simulate_workload(
     let mut completions: Vec<f64> = Vec::with_capacity(queries);
     let mut clock = 0.0f64; // admission clock
 
-    let mut latencies = Vec::with_capacity(queries);
-    let mut queued = Vec::with_capacity(queries);
-    let mut start_times = Vec::with_capacity(queries);
-    let mut stressed = Vec::with_capacity(queries);
-    let mut active_eps = Vec::with_capacity(queries);
-    let mut inst_throughput = Vec::with_capacity(queries);
-    let mut config_throughput = Vec::with_capacity(queries);
-    let mut serial: Vec<bool> = Vec::with_capacity(queries);
+    // per-query accounting: one preallocated flat record store instead
+    // of ~10 parallel Vecs (split back into SimResult columns at the end)
+    let mut log = QueryLog::with_capacity(queries);
     let mut rebalances = Vec::new();
     let mut rebalance_time = 0.0f64;
     let mut dropped_at: Vec<usize> = Vec::new();
-    let mut batch: Vec<usize> = Vec::with_capacity(queries);
     let mut batch_members: Vec<usize> = Vec::with_capacity(MAX_BATCH);
     // set when a multi-query batch jumps q past a window boundary, so
     // the next controller tick is not silently skipped; never set under
@@ -427,8 +422,10 @@ pub fn simulate_workload(
     let mut q = 0usize;
     // perf: stage times only change when the scenario vector or the
     // config changes; between schedule change points the recompute is
-    // skipped (EXPERIMENTS.md §Perf L3 iteration 1)
-    let mut last_sc: Vec<usize> = Vec::new();
+    // skipped. The cache key is the schedule's integer run index
+    // ([`run_at`]) — `None` forces a recompute after config/variant
+    // switches (EXPERIMENTS.md §Perf L3 iteration 1).
+    let mut last_run: Option<usize> = None;
     while q < queries {
         let arr = arrivals.as_ref().map(|a| a[q]);
         // --- bounded queue: shed on arrival when full (open-loop) ----
@@ -437,7 +434,7 @@ pub fn simulate_workload(
             let waiting =
                 admit_times.len() - admit_times.partition_point(|&t| t <= a);
             if waiting >= cap {
-                dropped_at.push(latencies.len());
+                dropped_at.push(log.len());
                 q += 1;
                 continue;
             }
@@ -460,9 +457,10 @@ pub fn simulate_workload(
             clock.max(gate).max(arr.unwrap_or(0.0))
         };
         let mut sc = state_at(schedule, &clear, axis, q, t_est);
-        if *sc != last_sc {
+        let run = run_at(schedule, axis, q, t_est);
+        if last_run != Some(run) {
             stage_times_into(&config, cur_db, sc, &mut times);
-            last_sc.clone_from(sc);
+            last_run = Some(run);
         }
 
         // predictive gate: fold the current observation into the
@@ -522,27 +520,24 @@ pub fn simulate_workload(
                     clock = finish;
                     completions.push(finish);
                     admit_times.push(start);
-                    start_times.push(start);
-                    match arr_s {
-                        Some(a) => {
-                            latencies.push(finish - a);
-                            queued.push(start - a);
-                        }
-                        None => {
-                            latencies.push(serial_latency);
-                            queued.push(0.0);
-                        }
-                    }
-                    inst_throughput.push(1.0 / serial_latency);
-                    config_throughput.push(1.0 / bottleneck(&times));
-                    serial.push(true);
-                    batch.push(1);
-                    if let Some(a) = acc_now {
-                        accuracy.push(a);
-                    }
+                    let (lat, qd) = match arr_s {
+                        Some(a) => (finish - a, start - a),
+                        None => (serial_latency, 0.0),
+                    };
                     let act = sc_now.iter().filter(|&&s| s != 0).count();
-                    stressed.push(act != 0);
-                    active_eps.push(act);
+                    log.push(
+                        lat,
+                        qd,
+                        start,
+                        1.0 / serial_latency,
+                        1.0 / bottleneck(&times),
+                        act,
+                        1,
+                        true,
+                        acc_now,
+                        0,
+                        false,
+                    );
                     rebalance_time += serial_latency;
                     q += 1;
                 }
@@ -554,7 +549,7 @@ pub fn simulate_workload(
                     &mut times,
                 );
                 controller.bless(&times);
-                last_sc.clear(); // config changed: invalidate the cache
+                last_run = None; // config changed: invalidate the cache
                 rebalances.push(RebalanceEvent {
                     query: q.min(queries - 1),
                     trials: result.trials,
@@ -571,7 +566,7 @@ pub fn simulate_workload(
                 // the post-rebalance query actually runs under
                 sc = state_at(schedule, &clear, axis, q, clock);
                 stage_times_into(&config, cur_db, sc, &mut times);
-                last_sc.clone_from(sc);
+                last_run = Some(run_at(schedule, axis, q, clock));
             }
 
             // degrade ladder: overload the rebalance above could not fix
@@ -603,7 +598,7 @@ pub fn simulate_workload(
                     // (its history measured the other variant)
                     stage_times_into(&config, cur_db, sc, &mut times);
                     controller.bless(&times);
-                    last_sc.clear();
+                    last_run = None;
                     *p = LatencyPredictor::new();
                 }
             }
@@ -657,7 +652,7 @@ pub fn simulate_workload(
                 let waiting = admit_times.len()
                     - admit_times.partition_point(|&t| t <= a_j);
                 if waiting >= cap {
-                    dropped_at.push(latencies.len());
+                    dropped_at.push(log.len());
                     q += 1;
                     continue;
                 }
@@ -683,26 +678,23 @@ pub fn simulate_workload(
         let bneck = bottleneck(&times);
         let act = sc.iter().filter(|&&s| s != 0).count();
         for &j in &batch_members {
-            start_times.push(admit);
-            match arrivals.as_ref() {
-                Some(arrs) => {
-                    latencies.push(ready - arrs[j]);
-                    queued.push(admit - arrs[j]);
-                }
-                None => {
-                    latencies.push(ready - admit);
-                    queued.push(0.0);
-                }
-            }
-            inst_throughput.push(members as f64 / (bneck * factor));
-            config_throughput.push(1.0 / bneck);
-            serial.push(false);
-            stressed.push(act != 0);
-            active_eps.push(act);
-            batch.push(members);
-            if let Some(a) = acc_now {
-                accuracy.push(a);
-            }
+            let (lat, qd) = match arrivals.as_ref() {
+                Some(arrs) => (ready - arrs[j], admit - arrs[j]),
+                None => (ready - admit, 0.0),
+            };
+            log.push(
+                lat,
+                qd,
+                admit,
+                members as f64 / (bneck * factor),
+                1.0 / bneck,
+                act,
+                members,
+                false,
+                acc_now,
+                0,
+                false,
+            );
         }
         if let Some(w) = cfg.window {
             // q jumped past loop heads q0+1..q: if one was a window
@@ -714,19 +706,20 @@ pub fn simulate_workload(
     }
 
     let total_time = completions.last().copied().unwrap_or(0.0);
+    let cols = log.finish();
     Ok(SimResult {
-        latencies,
-        queued,
-        start_times,
-        stressed,
-        active_eps,
+        latencies: cols.latencies,
+        queued: cols.queued,
+        start_times: cols.start_times,
+        stressed: cols.stressed,
+        active_eps: cols.active_eps,
         dropped_at,
         offered: queries,
-        inst_throughput,
-        config_throughput,
-        serial,
-        batch,
-        accuracy,
+        inst_throughput: cols.inst_throughput,
+        config_throughput: cols.config_throughput,
+        serial: cols.serial,
+        batch: cols.batch,
+        accuracy: cols.accuracy,
         rebalances,
         rebalance_time,
         total_time,
@@ -949,21 +942,14 @@ pub fn simulate_tenants(
     let mut completions: Vec<f64> = Vec::with_capacity(queries);
     let mut clock = 0.0f64;
 
-    let mut latencies = Vec::with_capacity(queries);
-    let mut queued = Vec::with_capacity(queries);
-    let mut start_times = Vec::with_capacity(queries);
-    let mut stressed = Vec::with_capacity(queries);
-    let mut active_eps = Vec::with_capacity(queries);
-    let mut inst_throughput = Vec::with_capacity(queries);
-    let mut config_throughput = Vec::with_capacity(queries);
-    let mut serial: Vec<bool> = Vec::with_capacity(queries);
+    // flat per-query store (tenant/blown ride in the same record); the
+    // run-index cache key mirrors simulate_workload's
+    let mut log = QueryLog::with_capacity(queries);
     let mut rebalances = Vec::new();
     let mut rebalance_time = 0.0f64;
     let mut dropped_at: Vec<usize> = Vec::new();
     let mut dropped_tenant: Vec<usize> = Vec::new();
-    let mut tenant_of: Vec<usize> = Vec::with_capacity(queries);
-    let mut blown: Vec<bool> = Vec::with_capacity(queries);
-    let mut last_sc: Vec<usize> = Vec::new();
+    let mut last_run: Option<usize> = None;
 
     loop {
         if next_arr >= queries && queue.is_empty() {
@@ -995,11 +981,11 @@ pub fn simulate_tenants(
             ) {
                 SloPush::Accepted => {}
                 SloPush::AcceptedEvicting(e) => {
-                    dropped_at.push(latencies.len());
+                    dropped_at.push(log.len());
                     dropped_tenant.push(e.tenant);
                 }
                 SloPush::Shed => {
-                    dropped_at.push(latencies.len());
+                    dropped_at.push(log.len());
                     dropped_tenant.push(a.tenant);
                 }
             }
@@ -1007,7 +993,7 @@ pub fn simulate_tenants(
         }
         // --- deadline-aware shedding: drop already-blown entries ------
         for e in queue.shed_blown(t_admit) {
-            dropped_at.push(latencies.len());
+            dropped_at.push(log.len());
             dropped_tenant.push(e.tenant);
         }
         let Some(head) = queue.peek() else {
@@ -1016,15 +1002,16 @@ pub fn simulate_tenants(
         let (head_tag, head_arrival) = (head.tag, head.arrival);
 
         let sc = state_at(schedule, &clear, axis, head_tag, t_admit);
-        if *sc != last_sc {
+        let run = run_at(schedule, axis, head_tag, t_admit);
+        if last_run != Some(run) {
             stage_times_into(&config, db, sc, &mut times);
-            last_sc.clone_from(sc);
+            last_run = Some(run);
         }
 
         // --- online-loop tick (same gating currency as the windows:
         // completion counts) ------------------------------------------
         if controller.is_active()
-            && cfg.window.is_none_or(|w| latencies.len() % w == 0)
+            && cfg.window.is_none_or(|w| log.len() % w == 0)
         {
             if let Some(_trigger) = controller.observe(&times) {
                 let before = 1.0 / bottleneck(&times);
@@ -1066,11 +1053,11 @@ pub fn simulate_tenants(
                         ) {
                             SloPush::Accepted => {}
                             SloPush::AcceptedEvicting(e) => {
-                                dropped_at.push(latencies.len());
+                                dropped_at.push(log.len());
                                 dropped_tenant.push(e.tenant);
                             }
                             SloPush::Shed => {
-                                dropped_at.push(latencies.len());
+                                dropped_at.push(log.len());
                                 dropped_tenant.push(a.tenant);
                             }
                         }
@@ -1092,17 +1079,20 @@ pub fn simulate_tenants(
                     }
                     clock = finish;
                     completions.push(finish);
-                    start_times.push(start);
-                    latencies.push(finish - e.arrival);
-                    queued.push(start - e.arrival);
-                    inst_throughput.push(1.0 / serial_latency);
-                    config_throughput.push(1.0 / bottleneck(&times));
-                    serial.push(true);
                     let act = sc_now.iter().filter(|&&s| s != 0).count();
-                    stressed.push(act != 0);
-                    active_eps.push(act);
-                    tenant_of.push(e.tenant);
-                    blown.push(finish - e.arrival > deadline_s[e.tenant]);
+                    log.push(
+                        finish - e.arrival,
+                        start - e.arrival,
+                        start,
+                        1.0 / serial_latency,
+                        1.0 / bottleneck(&times),
+                        act,
+                        1,
+                        true,
+                        None,
+                        e.tenant,
+                        finish - e.arrival > deadline_s[e.tenant],
+                    );
                     rebalance_time += serial_latency;
                 }
                 config = result.config;
@@ -1119,9 +1109,9 @@ pub fn simulate_tenants(
                     &mut times,
                 );
                 controller.bless(&times);
-                last_sc.clear();
+                last_run = None;
                 rebalances.push(RebalanceEvent {
-                    query: latencies.len().min(queries - 1),
+                    query: log.len().min(queries - 1),
                     trials: result.trials,
                     throughput_before: before,
                     throughput_after: result.throughput,
@@ -1149,43 +1139,46 @@ pub fn simulate_tenants(
         }
         clock = admit;
         completions.push(ready);
-        start_times.push(admit);
-        latencies.push(ready - e.arrival);
-        queued.push(admit - e.arrival);
-        inst_throughput.push(1.0 / bottleneck(&times));
-        config_throughput.push(1.0 / bottleneck(&times));
-        serial.push(false);
         let act = sc.iter().filter(|&&s| s != 0).count();
-        stressed.push(act != 0);
-        active_eps.push(act);
-        tenant_of.push(e.tenant);
-        blown.push(ready - e.arrival > deadline_s[e.tenant]);
+        log.push(
+            ready - e.arrival,
+            admit - e.arrival,
+            admit,
+            1.0 / bottleneck(&times),
+            1.0 / bottleneck(&times),
+            act,
+            1,
+            false,
+            None,
+            e.tenant,
+            ready - e.arrival > deadline_s[e.tenant],
+        );
     }
 
     let total_time = completions.last().copied().unwrap_or(0.0);
-    let batch = vec![1usize; latencies.len()];
+    let cols = log.finish();
     Ok(MtSimResult {
         result: SimResult {
-            latencies,
-            queued,
-            start_times,
-            stressed,
-            active_eps,
+            latencies: cols.latencies,
+            queued: cols.queued,
+            start_times: cols.start_times,
+            stressed: cols.stressed,
+            active_eps: cols.active_eps,
             dropped_at,
             offered: queries,
-            inst_throughput,
-            config_throughput,
-            serial,
-            batch,
-            accuracy: Vec::new(),
+            inst_throughput: cols.inst_throughput,
+            config_throughput: cols.config_throughput,
+            serial: cols.serial,
+            batch: cols.batch,
+            accuracy: cols.accuracy,
             rebalances,
             rebalance_time,
             total_time,
             final_config: config,
             peak_throughput,
         },
-        tenant: tenant_of,
-        blown,
+        tenant: cols.tenant,
+        blown: cols.blown,
         dropped_tenant,
     })
 }
@@ -1265,6 +1258,32 @@ pub(crate) fn state_at<'a>(
                 schedule.at(ms)
             } else {
                 clear
+            }
+        }
+    }
+}
+
+/// Integer cache key for the state [`state_at`] would return for the
+/// same `(axis, q, t)`: the schedule's constant-state run index, or
+/// `usize::MAX` for the past-horizon Millis case (where `state_at`
+/// returns the all-clear vector, which no in-horizon run is guaranteed
+/// to equal). Equal keys ⟹ identical state content, so the engine can
+/// skip the O(num_eps) stage-time recompute on an integer compare
+/// instead of content-comparing the vector every query.
+pub(crate) fn run_at(
+    schedule: &Schedule,
+    axis: ScenarioAxis,
+    q: usize,
+    t: f64,
+) -> usize {
+    match axis {
+        ScenarioAxis::Queries => schedule.run_of(q),
+        ScenarioAxis::Millis => {
+            let ms = (t.max(0.0) * 1000.0) as usize;
+            if ms < schedule.num_queries() {
+                schedule.run_of(ms)
+            } else {
+                usize::MAX
             }
         }
     }
@@ -1619,22 +1638,17 @@ mod tests {
         TenantSet::new(
             "pair",
             vec![
-                TenantSpec {
-                    id: "tight".into(),
-                    workload: crate::serving::Workload::poisson(rate, 5).unwrap(),
-                    deadline_ms: tight_ms,
-                    priority: 0,
-                    weight: 1.0,
-                    queue_share: None,
-                },
-                TenantSpec {
-                    id: "loose".into(),
-                    workload: crate::serving::Workload::poisson(rate, 9).unwrap(),
-                    deadline_ms: loose_ms,
-                    priority: 1,
-                    weight: 1.0,
-                    queue_share: None,
-                },
+                TenantSpec::new(
+                    "tight",
+                    crate::serving::Workload::poisson(rate, 5).unwrap(),
+                    tight_ms,
+                ),
+                TenantSpec::new(
+                    "loose",
+                    crate::serving::Workload::poisson(rate, 9).unwrap(),
+                    loose_ms,
+                )
+                .with_priority(1),
             ],
         )
         .unwrap()
@@ -2161,7 +2175,7 @@ mod tests {
             (0..db.num_units()).map(|u| db.time(u, s)).sum::<f64>()
         };
         let s_worst = (1..=db.num_scenarios())
-            .max_by(|&a, &b| total(a).partial_cmp(&total(b)).unwrap())
+            .max_by(|&a, &b| total(a).total_cmp(&total(b)))
             .unwrap();
         let n = 4;
         let (_, clean_b) = optimal_config(&db, &vec![0usize; n], n);

@@ -9,6 +9,7 @@
 pub mod engine;
 pub mod fleet;
 pub mod metrics;
+pub mod qlog;
 pub mod slo;
 pub mod window;
 

@@ -1,0 +1,184 @@
+//! Flat per-query accounting for the simulation engine.
+//!
+//! The engine used to grow ~15 parallel `Vec`s per completed query — ten
+//! pushes (ten length checks, ten possibly-reallocating tails on ten
+//! cache lines) for every record. [`QueryLog`] packs the whole record
+//! into one preallocated flat `Vec` of POD rows — one push per query,
+//! one allocation per run — and splits back into the historical
+//! column vectors once, at the end of the run ([`QueryLog::finish`]).
+//! The public [`SimResult`](super::engine::SimResult) schema (and every
+//! value in it) is unchanged: this is a storage-layout change only.
+//!
+//! Booleans ride in a flag byte and the narrow counts in `u32`s
+//! (`active_eps` ≤ the EP count, `batch` ≤ the batch bound, `tenant` ≤
+//! the 64-tenant cap), so a row is 48 bytes instead of the ~80 the
+//! scattered columns cost.
+
+/// One completed query, packed.
+#[derive(Clone, Copy, Debug)]
+struct QueryRec {
+    latency: f64,
+    queued: f64,
+    start: f64,
+    inst_tp: f64,
+    config_tp: f64,
+    active_eps: u32,
+    batch: u32,
+    tenant: u32,
+    flags: u8,
+}
+
+const FLAG_SERIAL: u8 = 1;
+const FLAG_BLOWN: u8 = 2;
+
+/// Preallocated flat store of per-query records; see the module docs.
+#[derive(Clone, Debug, Default)]
+pub struct QueryLog {
+    recs: Vec<QueryRec>,
+    /// Accuracy proxies, recorded only while the degrade ladder is armed
+    /// (callers pass `Some` per query then, `None` otherwise) — mirrors
+    /// the historical sometimes-empty `accuracy` column exactly.
+    accuracy: Vec<f64>,
+}
+
+/// The historical per-query column vectors, rebuilt once per run by
+/// [`QueryLog::finish`]. Field names match [`SimResult`]'s
+/// (`tenant`/`blown` feed the multi-tenant wrapper and are dropped by
+/// single-tenant callers).
+///
+/// [`SimResult`]: super::engine::SimResult
+#[derive(Clone, Debug, Default)]
+pub struct LogColumns {
+    pub latencies: Vec<f64>,
+    pub queued: Vec<f64>,
+    pub start_times: Vec<f64>,
+    pub stressed: Vec<bool>,
+    pub active_eps: Vec<usize>,
+    pub inst_throughput: Vec<f64>,
+    pub config_throughput: Vec<f64>,
+    pub serial: Vec<bool>,
+    pub batch: Vec<usize>,
+    pub accuracy: Vec<f64>,
+    pub tenant: Vec<usize>,
+    pub blown: Vec<bool>,
+}
+
+impl QueryLog {
+    pub fn with_capacity(n: usize) -> QueryLog {
+        QueryLog { recs: Vec::with_capacity(n), accuracy: Vec::new() }
+    }
+
+    /// Completed queries so far (the engine's drop/window bookkeeping
+    /// counts completions).
+    pub fn len(&self) -> usize {
+        self.recs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.recs.is_empty()
+    }
+
+    /// Record one completed query. `accuracy` is `Some` exactly when the
+    /// degrade ladder is armed; single-tenant callers pass `tenant = 0`,
+    /// `blown = false` (the columns are dropped unread).
+    #[allow(clippy::too_many_arguments)]
+    pub fn push(
+        &mut self,
+        latency: f64,
+        queued: f64,
+        start: f64,
+        inst_tp: f64,
+        config_tp: f64,
+        active_eps: usize,
+        batch: usize,
+        serial: bool,
+        accuracy: Option<f64>,
+        tenant: usize,
+        blown: bool,
+    ) {
+        let flags = (serial as u8) * FLAG_SERIAL + (blown as u8) * FLAG_BLOWN;
+        self.recs.push(QueryRec {
+            latency,
+            queued,
+            start,
+            inst_tp,
+            config_tp,
+            active_eps: active_eps as u32,
+            batch: batch as u32,
+            tenant: tenant as u32,
+            flags,
+        });
+        if let Some(a) = accuracy {
+            self.accuracy.push(a);
+        }
+    }
+
+    /// Split into the historical column vectors (each sized exactly
+    /// once). `stressed` is derived as `active_eps != 0`, which is the
+    /// rule every engine call site applied when pushing the two columns
+    /// separately.
+    pub fn finish(self) -> LogColumns {
+        let n = self.recs.len();
+        let mut c = LogColumns {
+            latencies: Vec::with_capacity(n),
+            queued: Vec::with_capacity(n),
+            start_times: Vec::with_capacity(n),
+            stressed: Vec::with_capacity(n),
+            active_eps: Vec::with_capacity(n),
+            inst_throughput: Vec::with_capacity(n),
+            config_throughput: Vec::with_capacity(n),
+            serial: Vec::with_capacity(n),
+            batch: Vec::with_capacity(n),
+            accuracy: self.accuracy,
+            tenant: Vec::with_capacity(n),
+            blown: Vec::with_capacity(n),
+        };
+        for r in &self.recs {
+            c.latencies.push(r.latency);
+            c.queued.push(r.queued);
+            c.start_times.push(r.start);
+            c.stressed.push(r.active_eps != 0);
+            c.active_eps.push(r.active_eps as usize);
+            c.inst_throughput.push(r.inst_tp);
+            c.config_throughput.push(r.config_tp);
+            c.serial.push(r.flags & FLAG_SERIAL != 0);
+            c.batch.push(r.batch as usize);
+            c.tenant.push(r.tenant as usize);
+            c.blown.push(r.flags & FLAG_BLOWN != 0);
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrips_columns_in_push_order() {
+        let mut log = QueryLog::with_capacity(3);
+        log.push(1.5, 0.5, 10.0, 2.0, 4.0, 0, 1, false, None, 0, false);
+        log.push(2.5, 0.0, 11.0, 1.0, 3.0, 2, 4, true, Some(0.85), 3, true);
+        assert_eq!(log.len(), 2);
+        let c = log.finish();
+        assert_eq!(c.latencies, vec![1.5, 2.5]);
+        assert_eq!(c.queued, vec![0.5, 0.0]);
+        assert_eq!(c.start_times, vec![10.0, 11.0]);
+        assert_eq!(c.stressed, vec![false, true]);
+        assert_eq!(c.active_eps, vec![0, 2]);
+        assert_eq!(c.inst_throughput, vec![2.0, 1.0]);
+        assert_eq!(c.config_throughput, vec![4.0, 3.0]);
+        assert_eq!(c.serial, vec![false, true]);
+        assert_eq!(c.batch, vec![1, 4]);
+        assert_eq!(c.accuracy, vec![0.85]);
+        assert_eq!(c.tenant, vec![0, 3]);
+        assert_eq!(c.blown, vec![false, true]);
+    }
+
+    #[test]
+    fn accuracy_column_stays_empty_when_never_armed() {
+        let mut log = QueryLog::with_capacity(1);
+        log.push(1.0, 0.0, 0.0, 1.0, 1.0, 1, 1, false, None, 0, false);
+        assert!(log.finish().accuracy.is_empty());
+    }
+}

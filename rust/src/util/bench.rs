@@ -16,6 +16,8 @@
 
 use std::time::{Duration, Instant};
 
+use crate::json::Value;
+
 use super::stats::Summary;
 
 /// Target wall-clock spent measuring each case (after warmup).
@@ -23,9 +25,25 @@ const TARGET_MEASURE: Duration = Duration::from_millis(600);
 const TARGET_WARMUP: Duration = Duration::from_millis(120);
 const MAX_SAMPLES: usize = 10_000;
 
+/// One measured case, machine-readable — the row shape behind the
+/// `BENCH_<n>.json` trajectory artifacts (see [`rows_json`]).
+#[derive(Clone, Debug)]
+pub struct BenchRow {
+    pub case: String,
+    /// Timed samples taken.
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    /// Simulated queries per wall-clock second — only for cases that
+    /// declare a per-iteration query count ([`Bench::run_queries`]).
+    pub qps: Option<f64>,
+}
+
 pub struct Bench {
     suite: String,
     results: Vec<(String, Summary)>,
+    rows: Vec<BenchRow>,
     /// Filter from ODIN_BENCH_FILTER / argv: only run matching cases.
     filter: Option<String>,
 }
@@ -44,13 +62,38 @@ impl Bench {
             .skip(1)
             .find(|a| !a.starts_with('-'))
             .or_else(|| std::env::var("ODIN_BENCH_FILTER").ok());
+        Bench::with_filter(suite, filter)
+    }
+
+    /// [`new`](Self::new) with an explicit case filter instead of the
+    /// argv sniff — for in-process callers (`odin bench`) whose argv is
+    /// CLI flags, not bench filters.
+    pub fn with_filter(suite: &str, filter: Option<String>) -> Bench {
         println!("suite {suite}");
-        Bench { suite: suite.to_string(), results: Vec::new(), filter }
+        Bench {
+            suite: suite.to_string(),
+            results: Vec::new(),
+            rows: Vec::new(),
+            filter,
+        }
     }
 
     /// Measure a closure: warm up, then sample until the time budget or
     /// MAX_SAMPLES. The closure should perform one logical iteration.
-    pub fn run<F: FnMut()>(&mut self, case: &str, mut f: F) {
+    pub fn run<F: FnMut()>(&mut self, case: &str, f: F) {
+        self.run_queries(case, 0, f);
+    }
+
+    /// [`run`](Self::run), declaring that one iteration simulates
+    /// `queries` queries — the row additionally reports end-to-end
+    /// simulated queries/sec (`queries / mean`). `queries == 0` omits
+    /// the rate (plain wall-time case).
+    pub fn run_queries<F: FnMut()>(
+        &mut self,
+        case: &str,
+        queries: usize,
+        mut f: F,
+    ) {
         if let Some(ref flt) = self.filter {
             if !case.contains(flt.as_str()) && !self.suite.contains(flt.as_str()) {
                 return;
@@ -72,16 +115,46 @@ impl Bench {
             samples.push(t0.elapsed().as_secs_f64() * 1e9);
         }
         let s = Summary::of(&samples);
-        println!(
-            "bench {}/{}  iters={}  mean={}  p50={}  p99={}",
-            self.suite,
-            case,
-            s.n,
-            fmt_ns(s.mean),
-            fmt_ns(s.p50),
-            fmt_ns(s.p99),
-        );
+        let qps = (queries > 0).then(|| queries as f64 / (s.mean / 1e9));
+        match qps {
+            Some(rate) => println!(
+                "bench {}/{}  iters={}  mean={}  p50={}  p99={}  qps={rate:.0}",
+                self.suite,
+                case,
+                s.n,
+                fmt_ns(s.mean),
+                fmt_ns(s.p50),
+                fmt_ns(s.p99),
+            ),
+            None => println!(
+                "bench {}/{}  iters={}  mean={}  p50={}  p99={}",
+                self.suite,
+                case,
+                s.n,
+                fmt_ns(s.mean),
+                fmt_ns(s.p50),
+                fmt_ns(s.p99),
+            ),
+        }
+        self.rows.push(BenchRow {
+            case: case.to_string(),
+            iters: s.n,
+            mean_ns: s.mean,
+            p50_ns: s.p50,
+            p99_ns: s.p99,
+            qps,
+        });
         self.results.push((case.to_string(), s));
+    }
+
+    /// Machine-readable rows measured so far (one per completed case).
+    pub fn rows(&self) -> &[BenchRow] {
+        &self.rows
+    }
+
+    /// This suite's rows as a JSON document fragment: `{rows: [...]}`.
+    pub fn to_json(&self) -> Value {
+        rows_json(&self.rows)
     }
 
     /// Report a pre-measured scalar (for experiment-shaped benches where
@@ -98,6 +171,32 @@ impl Bench {
         );
         self.results
     }
+}
+
+/// JSON for a suite's measured rows: `{rows: [{case, iters, mean_ns,
+/// p50_ns, p99_ns[, qps]}]}` — the per-suite fragment of the
+/// `BENCH_<n>.json` trajectory schema (`ci/validate_artifact.py bench`).
+pub fn rows_json(rows: &[BenchRow]) -> Value {
+    Value::obj(vec![(
+        "rows",
+        Value::arr(
+            rows.iter()
+                .map(|r| {
+                    let mut fields = vec![
+                        ("case", Value::from(r.case.as_str())),
+                        ("iters", Value::from(r.iters)),
+                        ("mean_ns", Value::from(r.mean_ns)),
+                        ("p50_ns", Value::from(r.p50_ns)),
+                        ("p99_ns", Value::from(r.p99_ns)),
+                    ];
+                    if let Some(q) = r.qps {
+                        fields.push(("qps", Value::from(q)));
+                    }
+                    Value::obj(fields)
+                })
+                .collect(),
+        ),
+    )])
 }
 
 /// Human-scale duration formatting (ns → µs → ms → s).

@@ -25,7 +25,10 @@ impl Summary {
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
             / n as f64;
         let mut sorted = xs.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp, not partial_cmp().unwrap(): one NaN observation must
+        // not panic the live stats path mid-run. NaN sorts after +inf, so
+        // it lands in max/p99 where it is visible instead of fatal.
+        sorted.sort_by(f64::total_cmp);
         Summary {
             n,
             mean,
@@ -53,10 +56,12 @@ pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
     sorted[lo] + (sorted[hi] - sorted[lo]) * frac
 }
 
-/// Percentile of an unsorted slice (copies + sorts).
+/// Percentile of an unsorted slice (copies + sorts). NaN-tolerant: sorts
+/// by [`f64::total_cmp`], so a poisoned sample degrades the estimate
+/// (NaN sorts last) instead of panicking.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(f64::total_cmp);
     percentile_sorted(&sorted, q)
 }
 
@@ -244,6 +249,22 @@ mod tests {
     fn percentile_unsorted_input() {
         let xs = [5.0, 1.0, 3.0];
         assert!((percentile(&xs, 50.0) - 3.0).abs() < 1e-12);
+    }
+
+    /// Regression (ISSUE 10): a single NaN latency observation used to
+    /// panic `partial_cmp().unwrap()` inside the sort — fatal for the
+    /// live window path, which summarizes whatever the backend reports.
+    /// With total_cmp the summary completes; NaN sorts last, so the
+    /// finite order statistics stay meaningful.
+    #[test]
+    fn summary_survives_nan_sample() {
+        let s = Summary::of(&[1.0, f64::NAN, 3.0, 2.0]);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.min, 1.0);
+        assert!(s.max.is_nan(), "NaN must sort last, into max");
+        // p50 interpolates within the finite prefix of the sorted order
+        assert!((s.p50 - 2.5).abs() < 1e-12);
+        assert!(percentile(&[f64::NAN, 5.0], 0.0) == 5.0);
     }
 
     #[test]

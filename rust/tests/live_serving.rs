@@ -227,20 +227,17 @@ fn two_tenant_live_run_splits_slo_pain_and_matches_sim_schema() {
     let tenants = odin::serving::TenantSet::new(
         "pair",
         vec![
-            odin::serving::TenantSpec {
-                id: "tight".into(),
-                workload: odin::serving::Workload::trace(vec![0.005]).unwrap(),
-                deadline_ms: 2.0,
-                priority: 0,
-                weight: 1.0,
-            },
-            odin::serving::TenantSpec {
-                id: "loose".into(),
-                workload: odin::serving::Workload::trace(vec![0.009]).unwrap(),
-                deadline_ms: 60_000.0,
-                priority: 1,
-                weight: 1.0,
-            },
+            odin::serving::TenantSpec::new(
+                "tight",
+                odin::serving::Workload::trace(vec![0.005]).unwrap(),
+                2.0,
+            ),
+            odin::serving::TenantSpec::new(
+                "loose",
+                odin::serving::Workload::trace(vec![0.009]).unwrap(),
+                60_000.0,
+            )
+            .with_priority(1),
         ],
     )
     .unwrap();
